@@ -1,0 +1,153 @@
+//! END-TO-END DRIVER: streaming keyword spotting through the full system.
+//!
+//! This is the repository's end-to-end validation (DESIGN.md): a real
+//! small workload — a continuous synthetic-audio stream built from the
+//! exported test utterances — driven through the streaming coordinator
+//! backed by engine replicas running the AOT-compiled Pallas/JAX artifact
+//! (PJRT) and the cycle-level chip simulator side by side. Reports
+//! accuracy, host latency/throughput, and the chip-side cycle/energy
+//! numbers at the paper's operating points.
+//!
+//! Run: `cargo run --release --example kws_streaming -- [--minutes 1]
+//!       [--engine golden|sim|xla] [--workers 2] [--model kws_mfcc]`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use chameleon::coordinator::server::EngineFactory;
+use chameleon::coordinator::{AudioWindower, Coordinator, CoordinatorConfig, Engine};
+use chameleon::expt;
+use chameleon::runtime::{Runtime, XlaModel};
+use chameleon::sim::{ArrayMode, OperatingPoint};
+use chameleon::util::args::Args;
+use chameleon::util::bench::{fmt_dur, fmt_power, Table};
+use chameleon::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let model_name = args.get_or("model", "kws_mfcc").to_string();
+    let engine_kind = args.get_or("engine", "xla").to_string();
+    let workers = args.get_usize("workers", 2)?;
+    let n_windows = args.get_usize("windows", 120)?;
+
+    let dir = expt::require_artifacts()?;
+    let model = Arc::new(expt::load_model(&model_name)?);
+    let pool = Arc::new(expt::load_pool(&model_name)?);
+    println!("end-to-end streaming KWS");
+    println!("  model : {}", model.describe());
+    println!("  engine: {engine_kind} x{workers} workers");
+
+    // Coordinator with the chosen engine replicas.
+    let factories: Vec<EngineFactory> = (0..workers)
+        .map(|_| {
+            let m = model.clone();
+            let kind = engine_kind.clone();
+            let dir = dir.clone();
+            Box::new(move || -> anyhow::Result<Engine> {
+                Ok(match kind.as_str() {
+                    "golden" => Engine::golden(m),
+                    "sim" => Engine::sim(m, ArrayMode::M4x4),
+                    _ => {
+                        let rt = Runtime::cpu()?;
+                        let xm = XlaModel::load(&rt, &dir, &m)?;
+                        std::mem::forget(rt);
+                        Engine::xla(m, xm)
+                    }
+                })
+            }) as EngineFactory
+        })
+        .collect();
+    let coord = Coordinator::start(factories, CoordinatorConfig { workers, queue_depth: 64 })?;
+
+    // Build a continuous stream: random utterances back to back, window =
+    // one model input, hop = window (the chip classifies 1/s windows).
+    let mut windower = AudioWindower::new(pool.seq_len, pool.seq_len, pool.in_channels);
+    let mut rng = Rng::new(11);
+    let t0 = Instant::now();
+    let mut served = 0usize;
+    let mut correct = 0usize;
+    let mut labels = Vec::new();
+    let mut host_latencies = Vec::new();
+    while served < n_windows {
+        // "microphone" produces one utterance worth of samples
+        let class = rng.below(pool.classes as u64) as usize;
+        let idx = rng.below(pool.samples_per_class as u64) as usize;
+        labels.push(class);
+        for window in windower.push(pool.sample(class, idx)) {
+            let t = Instant::now();
+            let r = coord.classify(window)?;
+            host_latencies.push(t.elapsed());
+            let truth = labels[served];
+            correct += usize::from(r.predicted == Some(truth));
+            served += 1;
+            if served >= n_windows {
+                break;
+            }
+        }
+    }
+    let wall = t0.elapsed();
+    let snap = coord.metrics().snapshot();
+
+    // Chip-side numbers from the simulator at the paper's operating point.
+    let sim_engine = Engine::sim(model.clone(), ArrayMode::M4x4);
+    let chip = sim_engine.forward(pool.sample(0, 0))?;
+    let trace = chip.trace.unwrap();
+    let op = if model_name == "kws_raw" {
+        OperatingPoint::kws_raw()
+    } else {
+        OperatingPoint::kws_low_power()
+    };
+
+    let mut t = Table::new("end-to-end streaming KWS results", &["metric", "value"]);
+    t.rowv(vec!["windows served".into(), served.to_string()]);
+    t.rowv(vec![
+        "accuracy".into(),
+        format!("{:.1}% ({} / {})", 100.0 * correct as f64 / served as f64, correct, served),
+    ]);
+    t.rowv(vec![
+        "host throughput".into(),
+        format!("{:.1} windows/s", served as f64 / wall.as_secs_f64()),
+    ]);
+    t.rowv(vec![
+        "host latency mean/p99".into(),
+        format!("{:.1} / {:.1} us", snap.mean_latency_us, snap.p99_latency_us),
+    ]);
+    t.rowv(vec![
+        "chip cycles / window".into(),
+        trace.total_cycles().to_string(),
+    ]);
+    t.rowv(vec![
+        "chip real-time clock".into(),
+        format!("{:.1} kHz (1 window/s)", trace.total_cycles() as f64 / 1e3),
+    ]);
+    t.rowv(vec![
+        "chip real-time power (model)".into(),
+        format!(
+            "{} @ {:.2} V ({}) — paper: 3.1 uW MFCC / 59.4 uW raw",
+            fmt_power(op.power().total()),
+            op.voltage,
+            if op.mode == ArrayMode::M4x4 { "4x4" } else { "16x16" },
+        ),
+    ]);
+    t.rowv(vec![
+        "chip energy / window".into(),
+        chameleon::util::bench::fmt_energy(op.energy(trace.total_cycles())),
+    ]);
+    t.rowv(vec![
+        "act-mem high water".into(),
+        format!("{} B (budget 2048 B)", trace.act_mem_high_water),
+    ]);
+    t.print();
+
+    println!(
+        "\nhost mean latency {} over {} requests ({} errors, {} rejected)",
+        fmt_dur(wall / served as u32),
+        snap.completed,
+        snap.errors,
+        snap.rejected
+    );
+    coord.shutdown();
+    assert!(correct * 3 > served, "accuracy collapsed");
+    println!("END-TO-END OK: stream -> windower -> coordinator -> {engine_kind} engine -> prediction");
+    Ok(())
+}

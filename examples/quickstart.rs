@@ -1,0 +1,56 @@
+//! Quickstart: load the AOT artifacts, classify one spoken keyword on all
+//! three engines (golden / cycle-sim / PJRT-executed Pallas graph) and
+//! show they agree bit-exactly.
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (requires `make artifacts` to have been run once.)
+
+use std::sync::Arc;
+
+use chameleon::coordinator::Engine;
+use chameleon::expt;
+use chameleon::golden;
+use chameleon::runtime::{Runtime, XlaModel};
+use chameleon::sim::ArrayMode;
+
+fn main() -> anyhow::Result<()> {
+    let dir = expt::require_artifacts()?;
+    let model = Arc::new(expt::load_model("kws_mfcc")?);
+    let pool = expt::load_pool("kws_mfcc")?;
+    println!("model: {}", model.describe());
+
+    // One test utterance of the keyword "yes" (class 0).
+    let class = 0usize;
+    let x = pool.sample(class, 3).to_vec();
+    let names = pool.class_names.as_ref().unwrap();
+
+    let rt = Runtime::cpu()?;
+    let engines = vec![
+        Engine::golden(model.clone()),
+        Engine::sim(model.clone(), ArrayMode::M4x4),
+        Engine::xla(model.clone(), XlaModel::load(&rt, &dir, &model)?),
+    ];
+
+    let mut last_logits: Option<Vec<i32>> = None;
+    for e in &engines {
+        let fwd = e.forward(&x)?;
+        let logits = fwd.logits.expect("kws model has a head");
+        let pred = golden::argmax(&logits);
+        print!("engine {:<7} -> predicted {:?}", e.name(), names[pred]);
+        if let Some(t) = fwd.trace {
+            print!(
+                "  ({} cycles, {} MACs, {} B act mem)",
+                t.total_cycles(),
+                t.total_macs(),
+                t.act_mem_high_water
+            );
+        }
+        println!();
+        if let Some(prev) = &last_logits {
+            assert_eq!(prev, &logits, "engines must agree bit-exactly");
+        }
+        last_logits = Some(logits);
+    }
+    println!("\ntrue class: {:?} — all three engines agree bit-exactly", names[class]);
+    Ok(())
+}

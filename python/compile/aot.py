@@ -1,0 +1,191 @@
+"""AOT compile path: lower the integer (Pallas-backed) TCN graphs to HLO
+text and export the quantized-model interchange + test vectors for rust.
+
+HLO *text* (NOT ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+XLA (xla_extension 0.5.1) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, per model in the zoo:
+
+    artifacts/<name>.hlo.txt       -- u4 input [T, Cin] -> (embedding,) or
+                                      (embedding, logits) integer graph
+    artifacts/<name>.model.json    -- quantized weights + shift schedule
+    artifacts/<name>.vectors.json  -- bit-exact test vectors for rust
+    artifacts/manifest.json        -- inventory + quick eval metrics
+
+Python runs ONCE; the rust binary is self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datasets as D
+from . import io_json
+from . import model as M
+from . import protonet as P
+from . import train as T
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # CRITICAL: default printing elides large constants as a literal
+    # "{...}", which the xla_extension 0.5.1 text parser silently turns
+    # into garbage weights. Print them in full.
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # New-style metadata attributes (source_end_line etc.) are rejected by
+    # the 0.5.1 parser; strip metadata entirely.
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+def lower_model(qm: M.QuantizedModel, use_pallas: bool = True) -> str:
+    """Lower the bit-exact integer forward to HLO text.
+
+    The Pallas kernels (interpret=True) lower into the same HLO module, so
+    the artifact the rust runtime executes is the L1 kernel inside the L2
+    graph — no python on the request path.
+    """
+    cfg = qm.cfg
+
+    def fn(x_q):
+        emb = M.int_forward(qm, x_q, use_pallas=use_pallas, with_head=False)
+        if qm.head is not None:
+            from .kernels import ref as kref
+
+            logits = kref.fc_ref(emb, jnp.asarray(qm.head.codes), jnp.asarray(qm.head.bias))
+            return emb, logits
+        return (emb,)
+
+    spec = jax.ShapeDtypeStruct((cfg.seq_len, cfg.in_channels), jnp.int32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def make_vectors(qm: M.QuantizedModel, inputs, with_layer_sums: bool = True):
+    """Bit-exact test vectors pinning python and rust to the same numbers."""
+    cases = []
+    for xq in inputs:
+        emb = np.asarray(M.int_forward(qm, xq, with_head=False))
+        case = {
+            "input": np.asarray(xq).reshape(-1).tolist(),
+            "input_shape": list(np.asarray(xq).shape),
+            "embedding": emb.tolist(),
+        }
+        if qm.head is not None:
+            from .kernels import ref as kref
+
+            logits = kref.fc_ref(
+                jnp.asarray(emb), jnp.asarray(qm.head.codes), jnp.asarray(qm.head.bias)
+            )
+            case["logits"] = np.asarray(logits).tolist()
+        if with_layer_sums:
+            case["layer_sums"] = layer_output_sums(qm, xq)
+        cases.append(case)
+        with_layer_sums = False  # layer sums only for the first case
+    return cases
+
+
+def layer_output_sums(qm: M.QuantizedModel, xq):
+    """Per-layer output checksums (sum of all activations) for debugging."""
+    from .kernels import ref as kref
+
+    sums = []
+    h = jnp.asarray(xq, jnp.int32)
+    for bi in range(qm.cfg.n_blocks):
+        l1, l2 = qm.layers[2 * bi], qm.layers[2 * bi + 1]
+        blk_in = h
+        h = kref.dilated_conv_ref(h, jnp.asarray(l1.codes), jnp.asarray(l1.bias), l1.out_shift, dilation=l1.dilation)
+        sums.append(int(jnp.sum(h)))
+        res = blk_in
+        if l2.res_codes is not None:
+            res = kref.dilated_conv_ref(blk_in, jnp.asarray(l2.res_codes), jnp.asarray(l2.res_bias), l2.res_out_shift, dilation=1)
+        rs = l2.res_shift or 0
+        if rs < 0:
+            res, rs = jnp.right_shift(jnp.asarray(res, jnp.int32), -rs), 0
+        h = kref.dilated_conv_ref(h, jnp.asarray(l2.codes), jnp.asarray(l2.bias), l2.out_shift, dilation=l2.dilation, residual=res, res_shift=rs)
+        sums.append(int(jnp.sum(h)))
+    return sums
+
+
+def build_one(name: str, out_dir: str, use_pallas: bool = True, verbose=True):
+    cfg = M.MODEL_ZOO[name]
+    params, qcfg, log = T.ensure_checkpoint(name, verbose=verbose)
+    qm = M.quantize_model(params, qcfg, cfg)
+
+    # Pallas/oracle parity check on one input before anything is written.
+    if name == "omniglot_fsl":
+        ds = T.omniglot_dataset()
+        sample_inputs = [M.quantize_input(ds.sample(c, 0), qm) for c in (0, 301)]
+    else:
+        ds = D.SyntheticSpeechCommands()
+        view = "mfcc" if name == "kws_mfcc" else "raw"
+        sample_inputs = [M.quantize_input(ds.sample(c, 0, view), qm) for c in (0, 11)]
+    ref_emb = np.asarray(M.int_forward(qm, sample_inputs[0], with_head=False))
+    pal_emb = np.asarray(M.int_forward(qm, sample_inputs[0], use_pallas=True, with_head=False))
+    assert (ref_emb == pal_emb).all(), f"pallas/oracle mismatch for {name}"
+
+    t0 = time.time()
+    hlo = lower_model(qm, use_pallas=use_pallas)
+    if verbose:
+        print(f"[aot] {name}: lowered to HLO in {time.time()-t0:.1f}s ({len(hlo)} chars)")
+    with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+        f.write(hlo)
+    io_json.save_quantized_model(os.path.join(out_dir, f"{name}.model.json"), qm)
+    io_json.save_vectors(
+        os.path.join(out_dir, f"{name}.vectors.json"), make_vectors(qm, sample_inputs)
+    )
+    entry = {
+        "name": name,
+        "hlo": f"{name}.hlo.txt",
+        "model": f"{name}.model.json",
+        "vectors": f"{name}.vectors.json",
+        "params": cfg.param_count(),
+        "receptive_field": cfg.receptive_field,
+        "seq_len": cfg.seq_len,
+        "in_channels": cfg.in_channels,
+        "embed_dim": cfg.embed_dim,
+        "n_classes": cfg.n_classes,
+    }
+    if log is not None:
+        entry["train_log"] = {"steps": log.steps, "losses": log.losses, "accs": log.accs}
+    return entry
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--models", nargs="*", default=list(M.MODEL_ZOO))
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower the oracle graph instead of the Pallas kernels")
+    args = ap.parse_args()
+    out_dir = args.out if os.path.isabs(args.out) else os.path.abspath(args.out)
+    os.makedirs(out_dir, exist_ok=True)
+    # Merge with any existing manifest so partial rebuilds keep other models.
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    existing = {}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            existing = {m["name"]: m for m in json.load(f).get("models", [])}
+    for name in args.models:
+        existing[name] = build_one(name, out_dir, use_pallas=not args.no_pallas)
+    manifest = {"models": [existing[k] for k in sorted(existing)]}
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {len(manifest['models'])} models to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

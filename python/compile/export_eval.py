@@ -1,0 +1,111 @@
+"""Export quantized evaluation datasets for the rust benches/examples.
+
+The rust side has no python at run time, so the synthetic evaluation pools
+(meta-test Omniglot classes, KWS test utterances) are exported once as u4
+sequences, hex-packed (one hex digit per u4 activation, row-major [T][C])
+to keep the JSON compact.
+
+Outputs:
+    artifacts/eval_omniglot.json  -- meta-TEST classes only (disjoint from
+                                     the meta-training pool, Vinyals-style)
+    artifacts/eval_kws_mfcc.json  -- 12-class test split, MFCC view
+    artifacts/eval_kws_raw.json   -- 12-class test split, raw view
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from . import datasets as D
+from . import train as T
+
+HEX = np.asarray(list("0123456789abcdef"))
+
+# Meta-test classes: disjoint from train.OMNIGLOT_TRAIN_CLASSES (0..300).
+EVAL_OMNIGLOT_FIRST = 300
+EVAL_OMNIGLOT_COUNT = 260  # supports 250-way CL + query margin
+
+
+def pack_u4(seq_q: np.ndarray) -> str:
+    """u4 int array -> hex string, row-major."""
+    flat = np.asarray(seq_q, np.int32).reshape(-1)
+    assert ((flat >= 0) & (flat <= 15)).all()
+    return "".join(HEX[flat])
+
+
+def model_in_shift(artifacts: str, name: str) -> int:
+    with open(os.path.join(artifacts, f"{name}.model.json")) as f:
+        return int(json.load(f)["in_shift"])
+
+
+def quant_u4(x: np.ndarray, shift: int) -> np.ndarray:
+    q = np.round(np.asarray(x, np.float64) / (2.0**shift))
+    return np.clip(q, 0, 15).astype(np.int32)
+
+
+def export_omniglot(artifacts: str, samples_per_class: int = 20):
+    shift = model_in_shift(artifacts, "omniglot_fsl")
+    n_total = EVAL_OMNIGLOT_FIRST + EVAL_OMNIGLOT_COUNT
+    ds = D.SyntheticOmniglot(n_total)
+    data = []
+    for c in range(EVAL_OMNIGLOT_FIRST, n_total):
+        for s in range(samples_per_class):
+            data.append(pack_u4(quant_u4(ds.sample(c, s), shift)))
+    blob = {
+        "name": "omniglot_eval",
+        "seq_len": 784,
+        "in_channels": 1,
+        "classes": EVAL_OMNIGLOT_COUNT,
+        "samples_per_class": samples_per_class,
+        "in_shift": shift,
+        "first_class_id": EVAL_OMNIGLOT_FIRST,
+        "data": data,
+    }
+    path = os.path.join(artifacts, "eval_omniglot.json")
+    with open(path, "w") as f:
+        json.dump(blob, f)
+    print(f"[export] {path}: {len(data)} sequences")
+
+
+def export_kws(artifacts: str, view: str, samples_per_class: int = 20, base: int = 1000):
+    name = f"kws_{view}"
+    shift = model_in_shift(artifacts, name)
+    ds = D.SyntheticSpeechCommands()
+    cfg = ds.cfg
+    data = []
+    for c in range(D.N_CLASSES):
+        for s in range(samples_per_class):
+            x = ds.sample(c, base + s, view)
+            data.append(pack_u4(quant_u4(x, shift)))
+    blob = {
+        "name": f"{name}_eval",
+        "seq_len": cfg.n_frames if view == "mfcc" else cfg.n_samples,
+        "in_channels": cfg.n_mfcc if view == "mfcc" else 1,
+        "classes": D.N_CLASSES,
+        "class_names": D.CLASSES,
+        "samples_per_class": samples_per_class,
+        "in_shift": shift,
+        "data": data,
+    }
+    path = os.path.join(artifacts, f"eval_{name}.json")
+    with open(path, "w") as f:
+        json.dump(blob, f)
+    print(f"[export] {path}: {len(data)} sequences")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    out = args.out if os.path.isabs(args.out) else os.path.abspath(args.out)
+    export_omniglot(out)
+    export_kws(out, "mfcc")
+    export_kws(out, "raw")
+
+
+if __name__ == "__main__":
+    main()

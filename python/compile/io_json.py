@@ -1,0 +1,118 @@
+"""JSON (de)serialisation for checkpoints and the rust interchange format.
+
+The rust side has no serde in this environment, so the interchange format is
+deliberately plain JSON with flat integer arrays + explicit shapes; the
+hand-rolled parser in ``rust/src/util/json.rs`` reads exactly this.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import jax
+import numpy as np
+
+from . import model as M
+
+
+# ---------------------------------------------------------------------------
+# Float checkpoints (python-only)
+# ---------------------------------------------------------------------------
+
+def _tree_to_jsonable(tree):
+    if isinstance(tree, dict):
+        return {k: _tree_to_jsonable(v) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return [_tree_to_jsonable(v) for v in tree]
+    arr = np.asarray(tree)
+    return {"__nd__": arr.tolist(), "shape": list(arr.shape)}
+
+
+def _tree_from_jsonable(obj):
+    if isinstance(obj, dict) and "__nd__" in obj:
+        return np.asarray(obj["__nd__"], np.float32).reshape(obj["shape"])
+    if isinstance(obj, dict):
+        return {k: _tree_from_jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_tree_from_jsonable(v) for v in obj]
+    return obj
+
+
+def save_checkpoint(path, params, qcfg=None, log=None):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    blob = {"params": _tree_to_jsonable(jax.tree_util.tree_map(np.asarray, params))}
+    if qcfg is not None:
+        blob["qcfg"] = qcfg
+    if log is not None:
+        blob["log"] = {"steps": log.steps, "losses": log.losses, "accs": log.accs}
+    with open(path, "w") as f:
+        json.dump(blob, f)
+
+
+def load_checkpoint(path):
+    with open(path) as f:
+        blob = json.load(f)
+    params = jax.tree_util.tree_map(
+        lambda a: np.asarray(a), _tree_from_jsonable(blob["params"])
+    )
+    return params, blob.get("qcfg"), blob.get("log")
+
+
+# ---------------------------------------------------------------------------
+# Quantized-model interchange (read by rust/src/model)
+# ---------------------------------------------------------------------------
+
+def _qlayer_json(l: M.QLayer):
+    d = {
+        "codes": np.asarray(l.codes).reshape(-1).tolist(),
+        "codes_shape": list(np.asarray(l.codes).shape),
+        "bias": np.asarray(l.bias).reshape(-1).tolist(),
+        "out_shift": int(l.out_shift),
+        "dilation": int(l.dilation),
+        "relu": bool(l.relu),
+        "res_shift": None if l.res_shift is None else int(l.res_shift),
+    }
+    if l.res_codes is not None:
+        d["res_codes"] = np.asarray(l.res_codes).reshape(-1).tolist()
+        d["res_codes_shape"] = list(np.asarray(l.res_codes).shape)
+        d["res_bias"] = np.asarray(l.res_bias).reshape(-1).tolist()
+        d["res_out_shift"] = int(l.res_out_shift)
+    else:
+        d["res_codes"] = None
+        d["res_codes_shape"] = None
+        d["res_bias"] = None
+        d["res_out_shift"] = None
+    return d
+
+
+def save_quantized_model(path, qm: M.QuantizedModel):
+    cfg = qm.cfg
+    blob = {
+        "name": cfg.name,
+        "in_channels": cfg.in_channels,
+        "seq_len": cfg.seq_len,
+        "channels": list(cfg.channels),
+        "kernel_size": cfg.kernel_size,
+        "embed_dim": cfg.embed_dim,
+        "n_classes": cfg.n_classes,
+        "receptive_field": cfg.receptive_field,
+        "param_count": cfg.param_count(),
+        "in_shift": int(qm.in_shift),
+        "embed_shift": int(qm.embed_shift),
+        "act_shifts": [int(s) for s in qm.act_shifts],
+        "layers": [_qlayer_json(l) for l in qm.layers],
+        "embed": _qlayer_json(qm.embed),
+        "head": None if qm.head is None else _qlayer_json(qm.head),
+    }
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(blob, f)
+
+
+def save_vectors(path, cases):
+    """Test vectors: list of dicts with flat int lists (+ shapes)."""
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump({"cases": cases}, f)

@@ -1,0 +1,130 @@
+"""L1 Pallas kernel: dilated causal conv1d layer with fused OPE.
+
+One TCN layer of the chip: the address-generator's dilated tap gather is
+expressed as a strided load schedule (im2col outside the kernel — XLA fuses
+the gather into the surrounding graph), and the hot loop is the shift-add
+matmul with the output-PE (bias add, residual add, arithmetic right shift,
+ReLU, u4 clamp) fused into the final K-slab grid step.
+
+VMEM per grid step (tile_t=16, tile_n=16, int32 interpret): three 1-KiB
+blocks plus a 1-KiB residual block — the Pallas analogue of the chip's
+single dual-port activation register file.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import quantlib as ql
+from .log2_matmul import K_SLAB, _decode, _pad_to
+
+
+def _conv_kernel(a_ref, c_ref, b_ref, r_ref, o_ref, *, n_k, out_shift, relu, res_shift, has_res):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...].astype(jnp.int32)
+    w = _decode(c_ref[...].astype(jnp.int32))
+    part = jax.lax.dot_general(
+        a, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    acc = jnp.clip(o_ref[...] + part, ql.ACC_MIN, ql.ACC_MAX)
+
+    @pl.when(k == n_k - 1)
+    def _finalize():
+        bias = jnp.clip(b_ref[...].astype(jnp.int32), ql.BIAS_MIN, ql.BIAS_MAX)
+        total = acc + bias[None, :]
+        if has_res:
+            total = total + (r_ref[...].astype(jnp.int32) << res_shift)
+        total = jnp.clip(total, ql.ACC_MIN, ql.ACC_MAX)
+        if relu:
+            # rounding shift: add half an LSB before the arithmetic shift
+            rbias = (1 << (out_shift - 1)) if out_shift > 0 else 0
+            y = jnp.right_shift(total + rbias, out_shift)
+            y = jnp.clip(y, 0, ql.ACT_MAX)
+        else:
+            y = total
+        o_ref[...] = y
+
+    @pl.when(k != n_k - 1)
+    def _store():
+        o_ref[...] = acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kernel_size", "dilation", "out_shift", "relu", "res_shift", "tile_t", "tile_n"),
+)
+def dilated_conv(
+    x,
+    codes,
+    bias,
+    out_shift,
+    kernel_size,
+    dilation=1,
+    relu=True,
+    residual=None,
+    res_shift=0,
+    tile_t=16,
+    tile_n=16,
+):
+    """Dilated causal conv1d, bit-exact vs ``ref.dilated_conv_ref``.
+
+    ``x`` int32 [T, Cin] u4; ``codes`` int32 [K, Cin, Cout] s4 log2;
+    ``bias`` int32 [Cout]. Returns int32 [T, Cout] (u4 if ``relu``, raw
+    saturated logits otherwise).
+    """
+    t, cin = x.shape
+    ksz, cin2, cout = codes.shape
+    assert ksz == kernel_size and cin == cin2
+    # Address-generator equivalent: dilated causal tap gather.
+    pad = (kernel_size - 1) * dilation
+    xp = jnp.pad(x.astype(jnp.int32), ((pad, 0), (0, 0)))
+    taps = jnp.stack(
+        [jax.lax.dynamic_slice_in_dim(xp, j * dilation, t, 0) for j in range(kernel_size)],
+        axis=1,
+    )  # [T, K, Cin]
+    a = taps.reshape(t, kernel_size * cin)
+    c = codes.reshape(kernel_size * cin, cout).astype(jnp.int32)
+
+    a = _pad_to(_pad_to(a, 0, tile_t), 1, K_SLAB)
+    c = _pad_to(_pad_to(c, 0, K_SLAB), 1, tile_n)
+    b = _pad_to(bias.astype(jnp.int32), 0, tile_n)
+    has_res = residual is not None
+    if has_res:
+        r = _pad_to(_pad_to(residual.astype(jnp.int32), 0, tile_t), 1, tile_n)
+    else:
+        r = jnp.zeros((a.shape[0], c.shape[1]), jnp.int32)
+
+    tp, kp = a.shape
+    _, np_ = c.shape
+    n_k = kp // K_SLAB
+    grid = (tp // tile_t, np_ // tile_n, n_k)
+    out = pl.pallas_call(
+        functools.partial(
+            _conv_kernel,
+            n_k=n_k,
+            out_shift=out_shift,
+            relu=relu,
+            res_shift=res_shift,
+            has_res=has_res,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_t, K_SLAB), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((K_SLAB, tile_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((tile_n,), lambda i, j, kk: (j,)),
+            pl.BlockSpec((tile_t, tile_n), lambda i, j, kk: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_t, tile_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((tp, np_), jnp.int32),
+        interpret=True,
+    )(a, c, b, r)
+    return out[:t, :cout]

@@ -1,0 +1,94 @@
+"""L1 Pallas kernel: MatMul-free (shift-add) matrix multiply.
+
+This is the chip's PE array as a Pallas kernel. Each grid step consumes one
+"cycle-equivalent" slab of 16 input channels (the K axis), mirroring the
+16x16 array: products are ``act << (|code|-1)`` with sign correction, summed
+and accumulated into 18-bit-saturating output-stationary registers.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; structure (block shapes, schedule), not wallclock, is what we
+optimize at this layer. The BlockSpec expresses the SRAM->PE schedule the
+chip implements with its address generator:
+
+  VMEM footprint per grid step (defaults, int32 in interpret mode):
+    acts  tile_m x 16    = 16*16*4   = 1   KiB
+    codes 16 x tile_n    = 16*16*4   = 1   KiB
+    out   tile_m x tile_n= 16*16*4   = 1   KiB
+  (on the chip: 16 u4 acts + 256 s4 weights + 16 i18 accumulators per cycle)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import quantlib as ql
+
+K_SLAB = 16  # input channels consumed per PE-array pass (one cycle)
+
+
+def _decode(codes):
+    """s4 log2 code -> integer weight value, as shift + sign correction."""
+    mag = jnp.where(codes == 0, 0, 1 << (jnp.abs(codes) - 1).astype(jnp.int32))
+    return jnp.where(codes < 0, -mag, mag).astype(jnp.int32)
+
+
+def _matmul_kernel(a_ref, c_ref, o_ref, *, apply_sat):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...].astype(jnp.int32)  # [tile_m, 16] u4
+    w = _decode(c_ref[...].astype(jnp.int32))  # [16, tile_n]
+    part = jax.lax.dot_general(
+        a, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    acc = o_ref[...] + part
+    if apply_sat:
+        acc = jnp.clip(acc, ql.ACC_MIN, ql.ACC_MAX)
+    o_ref[...] = acc
+
+
+def _pad_to(x, axis, mult):
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_n", "saturate"))
+def log2_matmul(acts, codes, tile_m=16, tile_n=16, saturate=True):
+    """Pallas shift-add matmul: int32[M,K] u4 x int32[K,N] s4 codes -> int32[M,N].
+
+    Bit-exact against ``ref.log2_matmul_ref`` (18-bit saturation applied
+    after every 16-row K slab, in ascending-K order). ``tile_m``/``tile_n``
+    model the PE-array mode (16 = full array, 4 = low-leakage mode).
+    """
+    m, k = acts.shape
+    k2, n = codes.shape
+    assert k == k2, f"K mismatch: {k} vs {k2}"
+    a = _pad_to(_pad_to(acts.astype(jnp.int32), 0, tile_m), 1, K_SLAB)
+    c = _pad_to(_pad_to(codes.astype(jnp.int32), 0, K_SLAB), 1, tile_n)
+    mp, kp = a.shape
+    _, np_ = c.shape
+    grid = (mp // tile_m, np_ // tile_n, kp // K_SLAB)
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, apply_sat=saturate),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, K_SLAB), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((K_SLAB, tile_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        interpret=True,
+    )(a, c)
+    return out[:m, :n]

@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+Every kernel in this package must agree bit-exactly with its oracle here;
+``python/tests/test_kernel.py`` sweeps shapes with hypothesis. The oracles
+also define the semantics the rust golden model mirrors.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import quantlib as ql
+
+
+def log2_matmul_ref(acts, codes):
+    """MatMul-free matrix multiply oracle.
+
+    ``acts``  -- int32 [M, K], u4 range (0..15)
+    ``codes`` -- int32 [K, N], s4 log2 codes (-8..7)
+    returns   -- int32 [M, N], 18-bit-saturated accumulation in chip order:
+                 products are summed 16 rows of K at a time (one PE-array
+                 pass per cycle), the running accumulator saturating after
+                 every cycle, exactly as the 18-bit output registers do.
+    """
+    m, k = acts.shape
+    k2, n = codes.shape
+    assert k == k2
+    w = ql.log2_decode(codes)  # [K, N]
+    acc = jnp.zeros((m, n), jnp.int32)
+    for k0 in range(0, k, 16):
+        part = jnp.matmul(
+            acts[:, k0 : k0 + 16].astype(jnp.int32), w[k0 : k0 + 16].astype(jnp.int32)
+        )
+        acc = ql.sat_acc(acc + part)
+    return acc
+
+
+def gather_dilated_taps(x, kernel_size, dilation):
+    """Causal dilated tap gather: tap j of output t reads x[t - (K-1-j)*d].
+
+    ``x`` -- int32 [T, Cin]; returns int32 [T, K, Cin] with zero left-padding
+    (the chip's address generator never reads those positions; zeros are the
+    ReLU-domain neutral element).
+    """
+    t, cin = x.shape
+    pad = (kernel_size - 1) * dilation
+    xp = jnp.pad(x, ((pad, 0), (0, 0)))
+    taps = [xp[j * dilation : j * dilation + t] for j in range(kernel_size)]
+    return jnp.stack(taps, axis=1)
+
+
+def dilated_conv_ref(
+    x,
+    codes,
+    bias,
+    out_shift,
+    dilation=1,
+    relu=True,
+    residual=None,
+    res_shift=0,
+):
+    """Dilated causal conv1d layer oracle, full chip datapath.
+
+    ``x``     -- int32 [T, Cin] u4 activations
+    ``codes`` -- int32 [K, Cin, Cout] s4 log2 codes
+    ``bias``  -- int32 [Cout], 14-bit range
+    returns   -- int32 [T, Cout]: u4 if ``relu`` else raw saturated
+                 accumulator (logit readout for the final FC layer).
+    """
+    t, cin = x.shape
+    ksz, cin2, cout = codes.shape
+    assert cin == cin2
+    taps = gather_dilated_taps(x, ksz, dilation)  # [T, K, Cin]
+    acc = log2_matmul_ref(taps.reshape(t, ksz * cin), codes.reshape(ksz * cin, cout))
+    if relu:
+        return ql.ope(acc, bias, out_shift, relu=True, residual=residual, res_shift=res_shift)
+    total = acc + ql.sat_bias(bias)
+    if residual is not None:
+        total = total + (jnp.asarray(residual, jnp.int32) << res_shift)
+    return ql.sat_acc(total)
+
+
+def fc_ref(x, codes, bias):
+    """Final FC / prototypical layer oracle: raw logits (no ReLU/requant).
+
+    ``x`` -- int32 [V] u4 embedding; ``codes`` -- int32 [V, N];
+    ``bias`` -- int32 [N]. Returns int32 [N] saturated logits.
+    """
+    acc = log2_matmul_ref(x[None, :], codes)[0]
+    return ql.sat_acc(acc + jnp.asarray(bias, jnp.int32))

@@ -1,0 +1,482 @@
+"""L2: the TCN embedder (paper Fig. 7) in JAX — float, QAT, and integer forms.
+
+Three forwards over one parameter set:
+
+* ``float_forward``   -- FP32 training graph (BN + ReLU + residual blocks).
+* ``qat_forward``     -- fake-quantized graph (STE log2 weights / u4 acts)
+                         used for quantization-aware finetuning.
+* ``int_forward``     -- bit-exact integer graph over a ``QuantizedModel``
+                         (what the chip executes); backed either by the
+                         pure-jnp oracles or the Pallas kernels — this is
+                         the graph ``aot.py`` lowers to HLO.
+
+Network structure (paper Fig. 7(a)): stacked residual blocks, each holding
+two causal dilated conv1d layers (dilation doubles per block) with BN+ReLU,
+plus an identity or 1x1-conv residual; after the last block the final
+timestep feeds an FC embedding layer, optionally followed by a classifier /
+prototypical FC head.
+
+Scale bookkeeping (DESIGN.md §Quantization grammar): a tensor with u4 codes
+``q`` and shift ``e`` represents ``q * 2^e``; weight codes with po2 scale
+``2^g`` make the accumulator scale ``2^(e_in+g)``; biases are stored at
+accumulator scale; the OPE right-shift is ``e_out - e_in - g`` (forced >= 0
+by bumping ``e_out`` when calibration asks for a finer grid than the
+accumulator provides). The residual enters the conv2 OPE rescaled by the
+*signed* shift ``e_blk - (e_in2 + g2)``; negative values are applied as a
+floor right-shift on the u4 residual before the merge — identical semantics
+in the oracle, the Pallas kernel, and the rust golden model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import quantlib as ql
+from .kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class TCNConfig:
+    """Architecture of one Chameleon-deployable TCN."""
+
+    name: str
+    in_channels: int
+    seq_len: int
+    channels: tuple  # output channels per residual block; dilation = 2**i
+    kernel_size: int
+    embed_dim: int
+    n_classes: Optional[int] = None  # fixed head (KWS); None = PN embedder
+
+    @property
+    def n_blocks(self) -> int:
+        return len(self.channels)
+
+    @property
+    def dilations(self) -> tuple:
+        return tuple(2**i for i in range(self.n_blocks))
+
+    @property
+    def receptive_field(self) -> int:
+        # R = 1 + sum over layers of (k-1) * d  (two layers per block)
+        return 1 + sum(2 * (self.kernel_size - 1) * d for d in self.dilations)
+
+    def param_count(self) -> int:
+        n, cin = 0, self.in_channels
+        for c in self.channels:
+            n += self.kernel_size * cin * c + c  # conv1 + bias
+            n += self.kernel_size * c * c + c  # conv2 + bias
+            if cin != c:
+                n += cin * c + c  # 1x1 residual
+            cin = c
+        n += cin * self.embed_dim + self.embed_dim
+        if self.n_classes:
+            n += self.embed_dim * self.n_classes + self.n_classes
+        return n
+
+
+# Standard model zoo (the paper's three deployments, scaled per DESIGN.md).
+OMNIGLOT_CFG = TCNConfig(
+    name="omniglot_fsl", in_channels=1, seq_len=784,
+    channels=(24, 24, 24, 24, 32, 32), kernel_size=7, embed_dim=64,
+)
+KWS_MFCC_CFG = TCNConfig(
+    name="kws_mfcc", in_channels=28, seq_len=63, channels=(20, 20, 24, 24),
+    kernel_size=5, embed_dim=32, n_classes=12,
+)
+KWS_RAW_CFG = TCNConfig(
+    name="kws_raw", in_channels=1, seq_len=2048,
+    channels=(16, 16, 16, 24, 24, 32, 32, 32), kernel_size=5, embed_dim=32,
+    n_classes=12,
+)
+
+MODEL_ZOO = {c.name: c for c in (OMNIGLOT_CFG, KWS_MFCC_CFG, KWS_RAW_CFG)}
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def _he(rng, shape, fan_in):
+    return (rng.standard_normal(shape) * np.sqrt(2.0 / fan_in)).astype(np.float32)
+
+
+def init_params(cfg: TCNConfig, seed: int = 0):
+    """He-initialised float parameters (paper §IV-A initialisation)."""
+    rng = np.random.default_rng(seed)
+    blocks = []
+    cin = cfg.in_channels
+    for c in cfg.channels:
+        def conv(ci, co):
+            return {
+                "w": _he(rng, (cfg.kernel_size, ci, co), cfg.kernel_size * ci),
+                "b": np.zeros(co, np.float32),
+                "bn": {
+                    "gamma": np.ones(co, np.float32),
+                    "beta": np.zeros(co, np.float32),
+                    "mean": np.zeros(co, np.float32),
+                    "var": np.ones(co, np.float32),
+                },
+            }
+
+        block = {"conv1": conv(cin, c), "conv2": conv(c, c)}
+        if cin != c:
+            block["res"] = {"w": _he(rng, (1, cin, c), cin), "b": np.zeros(c, np.float32)}
+        blocks.append(block)
+        cin = c
+    params = {
+        "blocks": blocks,
+        "embed": {
+            "w": _he(rng, (cin, cfg.embed_dim), cin),
+            "b": np.zeros(cfg.embed_dim, np.float32),
+        },
+    }
+    if cfg.n_classes:
+        params["head"] = {
+            "w": _he(rng, (cfg.embed_dim, cfg.n_classes), cfg.embed_dim),
+            "b": np.zeros(cfg.n_classes, np.float32),
+        }
+    return jax.tree_util.tree_map(jnp.asarray, params)
+
+
+# ---------------------------------------------------------------------------
+# Float forward (training graph)
+# ---------------------------------------------------------------------------
+
+def _causal_conv(x, w, dilation):
+    """x [B, T, C] * w [K, Cin, Cout], causal, dilated."""
+    k = w.shape[0]
+    pad = (k - 1) * dilation
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1,), padding=[(pad, 0)], rhs_dilation=(dilation,),
+        dimension_numbers=("NWC", "WIO", "NWC"),
+    )
+
+
+def _bn(x, bn, train, momentum=0.9):
+    if train:
+        mean = jnp.mean(x, axis=(0, 1))
+        var = jnp.var(x, axis=(0, 1))
+        new = {
+            "gamma": bn["gamma"], "beta": bn["beta"],
+            "mean": momentum * bn["mean"] + (1 - momentum) * mean,
+            "var": momentum * bn["var"] + (1 - momentum) * var,
+        }
+    else:
+        mean, var, new = bn["mean"], bn["var"], bn
+    y = (x - mean) / jnp.sqrt(var + 1e-5) * bn["gamma"] + bn["beta"]
+    return y, new
+
+
+def float_forward(params, x, cfg: TCNConfig, train: bool = False, with_head: bool = True):
+    """FP32 forward. x [B, T, Cin] -> (embedding [B, V] or logits, new_params)."""
+    new_blocks = []
+    h = x
+    for bi, block in enumerate(params["blocks"]):
+        d = 2**bi
+        res = h
+        y, bn1 = _bn(
+            _causal_conv(h, block["conv1"]["w"], d) + block["conv1"]["b"],
+            block["conv1"]["bn"], train,
+        )
+        y = jax.nn.relu(y)
+        y, bn2 = _bn(
+            _causal_conv(y, block["conv2"]["w"], d) + block["conv2"]["b"],
+            block["conv2"]["bn"], train,
+        )
+        if "res" in block:
+            # The chip stores the 1x1-residual output as u4 (unsigned), so
+            # the residual path is ReLU'd — mirrored here for consistency
+            # across the float / QAT / integer graphs.
+            res = jax.nn.relu(_causal_conv(res, block["res"]["w"], 1) + block["res"]["b"])
+        h = jax.nn.relu(y + res)
+        nb = dict(block)
+        nb["conv1"] = dict(block["conv1"], bn=bn1)
+        nb["conv2"] = dict(block["conv2"], bn=bn2)
+        new_blocks.append(nb)
+    last = h[:, -1, :]
+    emb = jax.nn.relu(last @ params["embed"]["w"] + params["embed"]["b"])
+    new_params = dict(params, blocks=new_blocks)
+    if with_head and "head" in params:
+        return emb @ params["head"]["w"] + params["head"]["b"], new_params
+    return emb, new_params
+
+
+# ---------------------------------------------------------------------------
+# QAT forward (fake-quantized training graph)
+# ---------------------------------------------------------------------------
+
+def _fake_u4(x, shift):
+    return ql.ste_u4(x, shift)
+
+
+def qat_forward(params, x, cfg: TCNConfig, qcfg, with_head: bool = True):
+    """Fake-quantized forward using calibrated scales ``qcfg``.
+
+    BN is folded (eval statistics) so the graph matches the chip's datapath,
+    with STE quantizers on weights and activations.
+    """
+    h = _fake_u4(x, qcfg["in_shift"])
+    for bi, block in enumerate(params["blocks"]):
+        d = 2**bi
+        lq = qcfg["blocks"][bi]
+        res = h
+        w1, b1 = _folded(block["conv1"])
+        y = _causal_conv(h, ql.ste_log2(w1, lq["conv1"]["w_scale"]), d) + b1
+        y = _fake_u4(jax.nn.relu(y), lq["conv1"]["act_shift"])
+        w2, b2 = _folded(block["conv2"])
+        y = _causal_conv(y, ql.ste_log2(w2, lq["conv2"]["w_scale"]), d) + b2
+        if "res" in block:
+            res = _causal_conv(
+                res, ql.ste_log2(block["res"]["w"], lq["res"]["w_scale"]), 1
+            ) + block["res"]["b"]
+            res = _fake_u4(jax.nn.relu(res), qcfg["in_shift"] if bi == 0 else qcfg["blocks"][bi - 1]["out_shift_act"])
+        h = _fake_u4(jax.nn.relu(y + res), lq["out_shift_act"])
+    last = h[:, -1, :]
+    emb = jax.nn.relu(
+        last @ ql.ste_log2(params["embed"]["w"], qcfg["embed"]["w_scale"])
+        + params["embed"]["b"]
+    )
+    emb = _fake_u4(emb, qcfg["embed"]["act_shift"])
+    if with_head and "head" in params:
+        return emb @ ql.ste_log2(params["head"]["w"], qcfg["head"]["w_scale"]) + params["head"]["b"]
+    return emb
+
+
+def _folded(conv):
+    bn = conv["bn"]
+    g = bn["gamma"] / jnp.sqrt(bn["var"] + 1e-5)
+    return conv["w"] * g, (conv["b"] - bn["mean"]) * g + bn["beta"]
+
+
+# ---------------------------------------------------------------------------
+# Calibration
+# ---------------------------------------------------------------------------
+
+def calibrate(params, x_cal, cfg: TCNConfig):
+    """Run the float graph on calibration data; pick po2 scales per tensor."""
+
+    def act_shift(t, pct=99.7):
+        m = float(np.percentile(np.asarray(t), pct)) + 1e-9
+        return ql.choose_act_shift(m)
+
+    h = x_cal
+    in_shift = act_shift(h, pct=100.0)
+    h = jnp.round(h / 2.0**in_shift).clip(0, 15) * 2.0**in_shift
+    blocks = []
+    for bi, block in enumerate(params["blocks"]):
+        d = 2**bi
+        w1, b1 = _folded(block["conv1"])
+        res = h
+        y = jax.nn.relu(_causal_conv(h, w1, d) + b1)
+        s1 = act_shift(y)
+        y = jnp.round(y / 2.0**s1).clip(0, 15) * 2.0**s1
+        w2, b2 = _folded(block["conv2"])
+        z = _causal_conv(y, w2, d) + b2
+        lq = {
+            "conv1": {"w_scale": ql.choose_weight_scale(w1), "act_shift": s1},
+            "conv2": {"w_scale": ql.choose_weight_scale(w2)},
+        }
+        if "res" in block:
+            res = jax.nn.relu(_causal_conv(res, block["res"]["w"], 1) + block["res"]["b"])
+            lq["res"] = {"w_scale": ql.choose_weight_scale(block["res"]["w"])}
+        h = jax.nn.relu(z + res)
+        so = act_shift(h)
+        h = jnp.round(h / 2.0**so).clip(0, 15) * 2.0**so
+        lq["out_shift_act"] = so
+        blocks.append(lq)
+    last = h[:, -1, :]
+    emb = jax.nn.relu(last @ params["embed"]["w"] + params["embed"]["b"])
+    qcfg = {
+        "in_shift": in_shift,
+        "blocks": blocks,
+        "embed": {
+            "w_scale": ql.choose_weight_scale(params["embed"]["w"]),
+            "act_shift": act_shift(emb),
+        },
+    }
+    if "head" in params:
+        qcfg["head"] = {"w_scale": ql.choose_weight_scale(params["head"]["w"])}
+    return qcfg
+
+
+# ---------------------------------------------------------------------------
+# Quantized export
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class QLayer:
+    """One integer conv/FC layer as the chip sees it."""
+
+    codes: np.ndarray  # int32 s4 log2 codes; conv [K, Cin, Cout] / FC [Cin, Cout]
+    bias: np.ndarray  # int32, 14-bit range
+    out_shift: int  # arithmetic right shift at the OPE (>= 0)
+    dilation: int = 1
+    relu: bool = True
+    res_shift: Optional[int] = None  # signed residual rescale; None = no residual
+    # Optional 1x1 residual conv (u4 output at the block-input shift).
+    res_codes: Optional[np.ndarray] = None
+    res_bias: Optional[np.ndarray] = None
+    res_out_shift: Optional[int] = None
+
+
+@dataclasses.dataclass
+class QuantizedModel:
+    """Bit-exact integer model: what gets exported to rust + HLO."""
+
+    cfg: TCNConfig
+    in_shift: int  # u4 input quantizer shift (real -> q)
+    layers: list  # flat list of QLayer, two per block
+    embed: QLayer
+    head: Optional[QLayer]
+    embed_shift: int  # u4 shift of the embedding output
+    act_shifts: list  # per-tensor activation shifts (inspection/debug)
+
+    def total_code_count(self) -> int:
+        n = sum(l.codes.size + l.bias.size for l in self.layers)
+        n += sum(
+            l.res_codes.size + l.res_bias.size
+            for l in self.layers
+            if l.res_codes is not None
+        )
+        n += self.embed.codes.size + self.embed.bias.size
+        if self.head is not None:
+            n += self.head.codes.size + self.head.bias.size
+        return n
+
+
+def _derive(e_out_cal, e_in, g):
+    """OPE shift >= 0; bump e_out if calibration asked for a finer grid."""
+    shift = max(0, e_out_cal - e_in - g)
+    return shift, e_in + g + shift
+
+
+def _q_bias(b, scale_exp):
+    return np.clip(
+        np.round(np.asarray(b) / 2.0**scale_exp), ql.BIAS_MIN, ql.BIAS_MAX
+    ).astype(np.int32)
+
+
+def quantize_model(params, qcfg, cfg: TCNConfig) -> QuantizedModel:
+    """Fold BN, encode weights to log2 codes, derive the integer shift schedule."""
+    p = jax.tree_util.tree_map(np.asarray, params)
+    layers = []
+    e_in = int(qcfg["in_shift"])
+    act_shifts = [e_in]
+    for bi, block in enumerate(p["blocks"]):
+        d = 2**bi
+        lq = qcfg["blocks"][bi]
+        e_blk = e_in
+        # conv1
+        w1, b1 = _folded_np(block["conv1"])
+        g1 = int(np.log2(lq["conv1"]["w_scale"]))
+        s1, e1 = _derive(int(lq["conv1"]["act_shift"]), e_in, g1)
+        layers.append(QLayer(
+            codes=np.asarray(ql.log2_encode_float(w1, 2.0**g1)),
+            bias=_q_bias(b1, e_in + g1), out_shift=s1, dilation=d, relu=True,
+        ))
+        act_shifts.append(e1)
+        # optional 1x1 residual conv: u4 output back at the block-input shift
+        res_codes = res_bias = None
+        res_out_shift = None
+        if "res" in block:
+            gr = min(int(np.log2(lq["res"]["w_scale"])), 0)  # force shift >= 0
+            res_codes = np.asarray(ql.log2_encode_float(block["res"]["w"], 2.0**gr))
+            res_bias = _q_bias(block["res"]["b"], e_blk + gr)
+            res_out_shift = -gr  # back to e_blk scale: e_blk - (e_blk + gr)
+        # conv2: residual enters the OPE at accumulator scale 2^(e1+g2)
+        w2, b2 = _folded_np(block["conv2"])
+        g2 = int(np.log2(lq["conv2"]["w_scale"]))
+        s2, e2 = _derive(int(lq["out_shift_act"]), e1, g2)
+        layers.append(QLayer(
+            codes=np.asarray(ql.log2_encode_float(w2, 2.0**g2)),
+            bias=_q_bias(b2, e1 + g2), out_shift=s2, dilation=d, relu=True,
+            res_shift=e_blk - (e1 + g2),
+            res_codes=res_codes, res_bias=res_bias, res_out_shift=res_out_shift,
+        ))
+        act_shifts.append(e2)
+        e_in = e2
+    # embedding FC
+    ge = int(np.log2(qcfg["embed"]["w_scale"]))
+    se, e_emb = _derive(int(qcfg["embed"]["act_shift"]), e_in, ge)
+    embed = QLayer(
+        codes=np.asarray(ql.log2_encode_float(p["embed"]["w"], 2.0**ge)),
+        bias=_q_bias(p["embed"]["b"], e_in + ge), out_shift=se, relu=True,
+    )
+    head = None
+    if "head" in p:
+        gh = int(np.log2(qcfg["head"]["w_scale"]))
+        head = QLayer(
+            codes=np.asarray(ql.log2_encode_float(p["head"]["w"], 2.0**gh)),
+            bias=_q_bias(p["head"]["b"], e_emb + gh), out_shift=0, relu=False,
+        )
+    return QuantizedModel(
+        cfg=cfg, in_shift=int(qcfg["in_shift"]), layers=layers, embed=embed,
+        head=head, embed_shift=e_emb, act_shifts=act_shifts,
+    )
+
+
+def _folded_np(conv):
+    bn = conv["bn"]
+    g = np.asarray(bn["gamma"]) / np.sqrt(np.asarray(bn["var"]) + 1e-5)
+    return np.asarray(conv["w"]) * g, (np.asarray(conv["b"]) - np.asarray(bn["mean"])) * g + np.asarray(bn["beta"])
+
+
+# ---------------------------------------------------------------------------
+# Integer forward (bit-exact; oracle- or Pallas-backed)
+# ---------------------------------------------------------------------------
+
+def int_forward(qm: QuantizedModel, x_q, use_pallas: bool = False, with_head: bool = True):
+    """Bit-exact integer forward: u4 input [T, Cin] -> u4 embedding or logits.
+
+    The same computation the rust golden model and the cycle simulator
+    perform; ``use_pallas=True`` swaps the oracle for the Pallas kernels
+    (identical numerics; the variant ``aot.py`` lowers to HLO).
+    """
+    if use_pallas:
+        from .kernels.dilated_conv import dilated_conv
+
+        def run_conv(x, codes, bias, out_shift, dilation, relu, residual, res_shift):
+            return dilated_conv(
+                x, jnp.asarray(codes), jnp.asarray(bias), out_shift,
+                codes.shape[0], dilation=dilation, relu=relu,
+                residual=residual, res_shift=res_shift,
+            )
+    else:
+        def run_conv(x, codes, bias, out_shift, dilation, relu, residual, res_shift):
+            return kref.dilated_conv_ref(
+                x, jnp.asarray(codes), jnp.asarray(bias), out_shift,
+                dilation=dilation, relu=relu, residual=residual, res_shift=res_shift,
+            )
+
+    h = jnp.asarray(x_q, jnp.int32)
+    for bi in range(qm.cfg.n_blocks):
+        l1, l2 = qm.layers[2 * bi], qm.layers[2 * bi + 1]
+        blk_in = h
+        h = run_conv(h, l1.codes, l1.bias, l1.out_shift, l1.dilation, True, None, 0)
+        res = blk_in
+        if l2.res_codes is not None:
+            res = run_conv(
+                blk_in, l2.res_codes, l2.res_bias, l2.res_out_shift, 1, True, None, 0
+            )
+        # Signed residual rescale into the accumulator domain.
+        rs = l2.res_shift or 0
+        if rs < 0:
+            res, rs = jnp.right_shift(jnp.asarray(res, jnp.int32), -rs), 0
+        h = run_conv(h, l2.codes, l2.bias, l2.out_shift, l2.dilation, True, res, rs)
+    last = h[-1:, :]  # [1, C]
+    emb = run_conv(
+        last, qm.embed.codes[None], qm.embed.bias, qm.embed.out_shift, 1, True, None, 0
+    )[0]
+    if with_head and qm.head is not None:
+        return kref.fc_ref(emb, jnp.asarray(qm.head.codes), jnp.asarray(qm.head.bias))
+    return emb
+
+
+def quantize_input(x, qm: QuantizedModel):
+    """Real-valued input [T, Cin] -> u4 codes at the model's input shift."""
+    return np.asarray(ql.u4_encode(jnp.asarray(x), qm.in_shift))

@@ -1,0 +1,237 @@
+"""Prototypical-network meta-learning (paper §II-A, §III-A) + Eq. 3-8.
+
+Implements:
+
+* episodic meta-training of the TCN embedder with the prototypical loss
+  (squared-L2 distances, softmax over negated distances) — the off-chip
+  ``meta-training`` phase of the paper;
+* the PN -> FC reformulation, both in float (Eq. 6) and in the chip's
+  quantized log2 form (Eq. 8 + the po2 pre-shift detailed in DESIGN.md);
+* a hand-rolled Adam (no optax in this environment).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from . import quantlib as ql
+
+# ---------------------------------------------------------------------------
+# Adam
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params):
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree_util.tree_map(lambda m_: m_ / (1 - b1 ** t.astype(jnp.float32)), m)
+    vh = jax.tree_util.tree_map(lambda v_: v_ / (1 - b2 ** t.astype(jnp.float32)), v)
+    new = jax.tree_util.tree_map(lambda p, m_, v_: p - lr * m_ / (jnp.sqrt(v_) + eps), params, mh, vh)
+    return new, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# Prototypical loss
+# ---------------------------------------------------------------------------
+
+
+def proto_loss(sup_emb, qry_emb, n_way, k_shot, n_query, proto_quant_scale=None):
+    """Squared-L2 prototypical loss + accuracy.
+
+    ``sup_emb`` [N*k, V] grouped class-major; ``qry_emb`` [N*q, V] likewise.
+    ``proto_quant_scale``: when set (QAT), prototypes are fake-quantized to
+    the log2 grid at that scale — matching the chip's Eq. 8 deployment where
+    prototype weights are s4 log2 codes (paper §IV-A: "prototypes are
+    quantized using 4-bit signed log2 quantization").
+    """
+    protos = sup_emb.reshape(n_way, k_shot, -1).mean(axis=1)  # [N, V]
+    if proto_quant_scale is not None:
+        protos = ql.ste_log2(protos, proto_quant_scale)
+    d2 = jnp.sum((qry_emb[:, None, :] - protos[None, :, :]) ** 2, axis=-1)  # [Nq, N]
+    logits = -d2
+    labels = jnp.repeat(jnp.arange(n_way), n_query)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.mean(logp[jnp.arange(labels.shape[0]), labels])
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+    return loss, acc
+
+
+# ---------------------------------------------------------------------------
+# Meta-training loop
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class MetaTrainLog:
+    steps: list
+    losses: list
+    accs: list
+
+
+def make_episode_step(cfg: M.TCNConfig, n_way, k_shot, n_query, lr, qat_qcfg=None):
+    """Build a jitted one-episode update closure (float or QAT graph)."""
+
+    def loss_fn(params, sup, qry):
+        if qat_qcfg is None:
+            sup_emb, new_params = M.float_forward(params, sup, cfg, train=True, with_head=False)
+            qry_emb, _ = M.float_forward(new_params, qry, cfg, train=True, with_head=False)
+            pq_scale = None
+        else:
+            sup_emb = M.qat_forward(params, sup, cfg, qat_qcfg, with_head=False)
+            qry_emb = M.qat_forward(params, qry, cfg, qat_qcfg, with_head=False)
+            new_params = params
+            # Prototype weights deploy as log2 codes on the u4 embedding
+            # grid; fold that quantizer into the QAT loss.
+            pq_scale = 2.0 ** qat_qcfg["embed"]["act_shift"]
+        loss, acc = proto_loss(sup_emb, qry_emb, n_way, k_shot, n_query, proto_quant_scale=pq_scale)
+        return loss, (acc, new_params)
+
+    @jax.jit
+    def step(params, opt, sup, qry):
+        (loss, (acc, new_params)), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, sup, qry)
+        # BN running stats come back through new_params; apply Adam on top.
+        new_params, opt = adam_update(new_params, grads, opt, lr=lr)
+        return new_params, opt, loss, acc
+
+    return step
+
+
+def meta_train(
+    params, dataset, cfg: M.TCNConfig, *, episodes=200, n_way=5, k_shot=5,
+    n_query=5, lr=1e-3, seed=0, qat_qcfg=None, log_every=10, class_pool=None,
+    verbose=True,
+):
+    """Episodic prototypical meta-training; returns (params, MetaTrainLog)."""
+    rng = np.random.default_rng(seed)
+    step = make_episode_step(cfg, n_way, k_shot, n_query, lr, qat_qcfg)
+    opt = adam_init(params)
+    log = MetaTrainLog([], [], [])
+    for ep in range(episodes):
+        sup, qry, _ = dataset.episode(rng, n_way, k_shot, n_query, class_pool=class_pool)
+        sup = jnp.asarray(sup.reshape(n_way * k_shot, *sup.shape[2:]))
+        qry = jnp.asarray(qry.reshape(n_way * n_query, *qry.shape[2:]))
+        params, opt, loss, acc = step(params, opt, sup, qry)
+        if ep % log_every == 0 or ep == episodes - 1:
+            log.steps.append(ep)
+            log.losses.append(float(loss))
+            log.accs.append(float(acc))
+            if verbose:
+                print(f"  episode {ep:4d}  loss {float(loss):.4f}  acc {float(acc):.3f}")
+    return params, log
+
+
+# ---------------------------------------------------------------------------
+# PN -> FC conversion
+# ---------------------------------------------------------------------------
+
+
+def pn_to_fc_float(sup_emb, n_way, k_shot):
+    """Eq. 6: float prototypes -> equivalent FC (W [V, N], b [N]).
+
+    Emits *negated* distance terms so downstream argmax(logits) equals
+    argmin(distance): ``logit_j = W_j . x - b_j`` with ``W_j = s^j``,
+    ``b_j = (1/2k) sum_i (s_i^j)^2`` (then logits scaled by 2/k are
+    monotone in -D^2).
+    """
+    s = sup_emb.reshape(n_way, k_shot, -1).sum(axis=1)  # [N, V]
+    w = s.T  # [V, N]
+    b = -(s**2).sum(axis=1) / (2.0 * k_shot)  # [N]
+    return w, b
+
+
+def classify_float_fc(emb, w, b):
+    return jnp.argmax(emb @ w + b, axis=-1)
+
+
+def proto_preshift(k_shot: int) -> int:
+    """po2 approximation of the class-mean: s >> ceil(log2 k) ~= prototype."""
+    return max(0, math.ceil(math.log2(k_shot))) if k_shot > 1 else 0
+
+
+def pn_to_fc_quant(sup_emb_q, n_way, k_shot):
+    """Eq. 8: quantized prototypes -> log2 FC codes + 14-bit biases.
+
+    ``sup_emb_q`` int32 [N*k, V] u4 embeddings (class-major). The per-class
+    embedding sum is divided by the shot count (round-half-up; the paper
+    uses the po2 pre-shift ``>> ceil(log2 k)`` — identical for po2 k, see
+    rust ``ProtoAccumulator::extract`` for the deviation rationale) and
+    log2-encoded, so every weight is a shift; the bias is
+    ``-(1/2) sum_i shat_i^2`` computed purely with shifts (``2^(2e)``),
+    saturated to the 14-bit bias grid.
+
+    Returns (codes [V, N] int32, bias [N] int32).
+    """
+    sup = np.asarray(sup_emb_q, np.int64).reshape(n_way, k_shot, -1)
+    s = sup.sum(axis=1)  # [N, V], values in 0..15k
+    s_hat = (2 * s + k_shot) // (2 * k_shot)  # rounded mean
+    codes = np.asarray(ql.log2_encode_int(jnp.asarray(s_hat, jnp.int32)))  # [N, V]
+    dec = np.asarray(ql.log2_decode(jnp.asarray(codes)), np.int64)  # exact 2^e values
+    # b_j = -(1/2) sum dec^2 ; dec^2 = 1 << (2e) -- shifts only on chip.
+    b = -(dec.astype(np.int64) ** 2).sum(axis=1) >> 1
+    b = np.clip(b, ql.BIAS_MIN, ql.BIAS_MAX).astype(np.int32)
+    return codes.T.astype(np.int32), b
+
+
+def classify_quant_fc(emb_q, codes, bias):
+    """On-chip classification: argmax over the saturated FC logits."""
+    from .kernels import ref as kref
+
+    logits = kref.fc_ref(jnp.asarray(emb_q, jnp.int32), jnp.asarray(codes), jnp.asarray(bias))
+    return int(jnp.argmax(logits)), np.asarray(logits)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end FSL / CL evaluation harnesses (python-side reference; the rust
+# benches re-run the same protocol through the simulator)
+# ---------------------------------------------------------------------------
+
+
+def eval_fsl_float(params, dataset, cfg, *, n_way, k_shot, n_tasks=100, n_query=5, seed=1, class_pool=None):
+    """Float PN baseline accuracy (the 'FP32 embedder' upper bound)."""
+    rng = np.random.default_rng(seed)
+    fwd = jax.jit(lambda p, x: M.float_forward(p, x, cfg, train=False, with_head=False)[0])
+    accs = []
+    for _ in range(n_tasks):
+        sup, qry, _ = dataset.episode(rng, n_way, k_shot, n_query, class_pool=class_pool)
+        se = fwd(params, jnp.asarray(sup.reshape(n_way * k_shot, *sup.shape[2:])))
+        qe = fwd(params, jnp.asarray(qry.reshape(n_way * n_query, *qry.shape[2:])))
+        w, b = pn_to_fc_float(se, n_way, k_shot)
+        pred = classify_float_fc(qe, w, b)
+        labels = jnp.repeat(jnp.arange(n_way), n_query)
+        accs.append(float(jnp.mean((pred == labels).astype(jnp.float32))))
+    return float(np.mean(accs)), float(1.96 * np.std(accs) / np.sqrt(len(accs)))
+
+
+def eval_fsl_quant(qm, dataset, *, n_way, k_shot, n_tasks=20, n_query=5, seed=1, class_pool=None):
+    """Fully quantized end-to-end FSL (the chip's protocol, python oracle)."""
+    rng = np.random.default_rng(seed)
+    accs = []
+    for _ in range(n_tasks):
+        sup, qry, _ = dataset.episode(rng, n_way, k_shot, n_query, class_pool=class_pool)
+        se = np.stack([
+            np.asarray(M.int_forward(qm, M.quantize_input(s, qm), with_head=False))
+            for s in sup.reshape(n_way * k_shot, *sup.shape[2:])
+        ])
+        codes, bias = pn_to_fc_quant(se, n_way, k_shot)
+        correct = 0
+        total = 0
+        for ci in range(n_way):
+            for q in qry[ci]:
+                emb = np.asarray(M.int_forward(qm, M.quantize_input(q, qm), with_head=False))
+                pred, _ = classify_quant_fc(emb, codes, bias)
+                correct += int(pred == ci)
+                total += 1
+        accs.append(correct / total)
+    return float(np.mean(accs)), float(1.96 * np.std(accs) / np.sqrt(len(accs)))

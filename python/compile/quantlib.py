@@ -1,0 +1,269 @@
+"""Quantization grammar of the Chameleon datapath (bit-exact spec).
+
+This module is the single source of truth for the integer semantics of the
+MatMul-free PE array; ``rust/src/quant`` mirrors it bit-exactly and the
+cross-check test vectors exported by ``aot.py`` pin both sides together.
+
+Grammar (see DESIGN.md §Quantization grammar):
+
+* activations  -- u4 uniform, ReLU-native: ``x_q = clamp(round(x / 2^s), 0, 15)``
+* weights      -- s4 log2 code ``c in [-8, 7]`` (two's-complement nibble):
+                  ``value(c) = 0 if c == 0 else sgn(c) * 2**(|c| - 1)``
+                  i.e. magnitudes 2^0..2^6 positive and 2^0..2^7 negative,
+                  the int8-like asymmetric dynamic range the paper cites.
+* product      -- activation left-shifted by the weight exponent with sign
+                  correction; 15 << 7 = 1920 fits a 12-bit signed value.
+* accumulator  -- 18-bit signed, saturating.
+* bias         -- 14-bit signed.
+* OPE          -- ``y = clamp(relu((acc + (res << res_shift) + bias) >> out_shift), 0, 15)``
+                  with an arithmetic (floor) right shift, matching a
+                  hardware barrel shifter.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Bit-width constants (the chip's datapath)
+# ---------------------------------------------------------------------------
+
+ACT_BITS = 4
+ACT_MAX = (1 << ACT_BITS) - 1  # 15
+
+WEIGHT_CODE_MIN = -8
+WEIGHT_CODE_MAX = 7
+
+PRODUCT_BITS = 12  # signed; 15 << 7 = 1920 < 2048
+
+ACC_BITS = 18
+ACC_MIN = -(1 << (ACC_BITS - 1))  # -131072
+ACC_MAX = (1 << (ACC_BITS - 1)) - 1  # 131071
+
+BIAS_BITS = 14
+BIAS_MIN = -(1 << (BIAS_BITS - 1))  # -8192
+BIAS_MAX = (1 << (BIAS_BITS - 1)) - 1  # 8191
+
+# Decoded magnitudes representable by a log2 code (positive side).
+POS_MAGNITUDES = np.array([1, 2, 4, 8, 16, 32, 64], dtype=np.int32)  # c=1..7
+NEG_MAGNITUDES = np.array([1, 2, 4, 8, 16, 32, 64, 128], dtype=np.int32)  # c=-1..-8
+
+
+# ---------------------------------------------------------------------------
+# log2 codec
+# ---------------------------------------------------------------------------
+
+def log2_decode(code):
+    """Decode s4 log2 codes to integer values.
+
+    ``code`` is an integer array in [-8, 7]; returns int32 values in
+    {0, +-1, +-2, ..., +64, -128}.
+    """
+    code = jnp.asarray(code, jnp.int32)
+    mag = jnp.where(code == 0, 0, 1 << (jnp.abs(code) - 1).astype(jnp.int32))
+    return jnp.where(code < 0, -mag, mag).astype(jnp.int32)
+
+
+def log2_encode_int(value):
+    """Encode integer values to the nearest representable log2 value.
+
+    Ties between two representable magnitudes round toward the larger
+    exponent iff the value is >= the geometric midpoint rounded up
+    (i.e. plain nearest with ties-to-larger), matching the rust codec.
+    Values beyond the dynamic range saturate (+64 / -128).
+    """
+    value = jnp.asarray(value, jnp.int32)
+    sign_neg = value < 0
+    mag = jnp.abs(value)
+    # Nearest power of two: exponent e such that 2^e closest to mag.
+    # For mag >= 1: e = floor(log2(mag)); round up when mag >= 1.5 * 2^e.
+    # float32 log2 is exact for the magnitudes seen here (< 2^24).
+    e_floor = jnp.where(
+        mag > 0, jnp.floor(jnp.log2(jnp.maximum(mag, 1).astype(jnp.float32))), 0
+    ).astype(jnp.int32)
+    low = (1 << e_floor.astype(jnp.int32)).astype(jnp.int32)
+    # round up if mag - low >= low (midpoint 1.5*low: distance to 2*low is
+    # 2*low - mag; round up when mag - low >= 2*low - mag  <=> 2*mag >= 3*low)
+    e = jnp.where(2 * mag >= 3 * low, e_floor + 1, e_floor)
+    e_pos = jnp.clip(e, 0, 6)
+    e_neg = jnp.clip(e, 0, 7)
+    code = jnp.where(
+        mag == 0,
+        0,
+        jnp.where(sign_neg, -(e_neg + 1), e_pos + 1),
+    )
+    return code.astype(jnp.int32)
+
+
+def log2_encode_float(value, scale=1.0):
+    """Quantize real weights to log2 codes: ``encode(round-to-grid(v/scale))``.
+
+    Quantizes ``value / scale`` to the nearest representable log2 point
+    (including 0), by true nearest-value comparison in the real domain —
+    used by QAT, where the grid matters more than integer rounding.
+    """
+    v = jnp.asarray(value, jnp.float32) / scale
+    # Candidate representable values.
+    cands = np.concatenate(
+        [np.array([0.0]), POS_MAGNITUDES.astype(np.float64), -NEG_MAGNITUDES.astype(np.float64)]
+    )
+    codes = np.concatenate(
+        [np.array([0]), np.arange(1, 8), -np.arange(1, 9)]
+    ).astype(np.int32)
+    d = jnp.abs(v[..., None] - cands[None, :])
+    idx = jnp.argmin(d, axis=-1)
+    return jnp.asarray(codes)[idx].astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# u4 activation codec
+# ---------------------------------------------------------------------------
+
+def u4_encode(x, shift):
+    """``clamp(round(x / 2^shift), 0, 15)`` — power-of-two scale."""
+    q = jnp.round(jnp.asarray(x, jnp.float32) / (2.0 ** shift))
+    return jnp.clip(q, 0, ACT_MAX).astype(jnp.int32)
+
+
+def u4_decode(q, shift):
+    return jnp.asarray(q, jnp.float32) * (2.0 ** shift)
+
+
+# ---------------------------------------------------------------------------
+# Integer datapath primitives
+# ---------------------------------------------------------------------------
+
+def shift_product(act, code):
+    """u4 activation x log2 weight -> signed product (12-bit range).
+
+    Exactly ``act * log2_decode(code)`` — on the chip this is a left shift
+    by ``|code|-1`` plus sign correction.
+    """
+    return (jnp.asarray(act, jnp.int32) * log2_decode(code)).astype(jnp.int32)
+
+
+def sat_acc(x):
+    """Saturate to the 18-bit signed accumulator range."""
+    return jnp.clip(jnp.asarray(x, jnp.int32), ACC_MIN, ACC_MAX)
+
+
+def sat_bias(x):
+    """Saturate to the 14-bit signed bias range."""
+    return jnp.clip(jnp.asarray(x, jnp.int32), BIAS_MIN, BIAS_MAX)
+
+
+def arithmetic_shift_right(x, shift):
+    """Floor division by 2^shift (arithmetic shift, exact for negatives)."""
+    x = jnp.asarray(x, jnp.int32)
+    return jnp.right_shift(x, jnp.asarray(shift, jnp.int32))
+
+
+def rounding_shift_right(x, shift):
+    """Round-half-up shift: ``(x + 2^(s-1)) >> s`` — the OPE's rounding
+    adder. Matches the round() semantics QAT trains with (up to the
+    half-up vs half-even difference at exact midpoints) instead of a plain
+    floor, which would lose 0.5 LSB per layer and compound over depth.
+    """
+    x = jnp.asarray(x, jnp.int32)
+    s = jnp.asarray(shift, jnp.int32)
+    bias = jnp.where(s > 0, 1 << jnp.maximum(s - 1, 0), 0)
+    return jnp.right_shift(x + bias, s)
+
+
+def ope(acc, bias, out_shift, relu=True, residual=None, res_shift=0):
+    """Output-PE: residual add, bias add, shift, ReLU, clamp to u4.
+
+    ``acc`` int32 (18-bit range), ``bias`` int32 (14-bit range),
+    ``residual`` u4 (pre-rescaled with ``res_shift``). Returns u4 int32.
+    """
+    acc = jnp.asarray(acc, jnp.int32)
+    total = acc + sat_bias(bias)
+    if residual is not None:
+        total = total + (jnp.asarray(residual, jnp.int32) << res_shift)
+    total = sat_acc(total)
+    if relu:
+        y = rounding_shift_right(total, out_shift)
+        y = jnp.maximum(y, 0)
+        y = jnp.minimum(y, ACT_MAX)
+    else:
+        y = total
+    return y.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Straight-through estimators for QAT
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def ste_u4(x, shift):
+    """Fake-quantize activations to the u4 grid (forward), identity grad."""
+    q = jnp.clip(jnp.round(x / (2.0 ** shift)), 0.0, float(ACT_MAX))
+    return q * (2.0 ** shift)
+
+
+def _ste_u4_fwd(x, shift):
+    return ste_u4(x, shift), (x, shift)
+
+
+def _ste_u4_bwd(res, g):
+    x, shift = res
+    lo, hi = 0.0, ACT_MAX * (2.0 ** shift)
+    mask = ((x >= lo) & (x <= hi)).astype(g.dtype)
+    return (g * mask, None)
+
+
+ste_u4.defvjp(_ste_u4_fwd, _ste_u4_bwd)
+
+
+@jax.custom_vjp
+def ste_log2(w, scale):
+    """Fake-quantize weights to the log2 grid (forward), identity grad."""
+    code = log2_encode_float(w, scale)
+    return log2_decode(code).astype(jnp.float32) * scale
+
+
+def _ste_log2_fwd(w, scale):
+    return ste_log2(w, scale), (w, scale)
+
+
+def _ste_log2_bwd(res, g):
+    w, scale = res
+    lo, hi = -128.0 * scale, 64.0 * scale
+    mask = ((w >= lo) & (w <= hi)).astype(g.dtype)
+    return (g * mask, None)
+
+
+ste_log2.defvjp(_ste_log2_fwd, _ste_log2_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Scale selection + BN folding
+# ---------------------------------------------------------------------------
+
+def choose_weight_scale(w):
+    """Per-tensor power-of-two scale so max |w| maps near the log2 grid top."""
+    m = float(np.max(np.abs(np.asarray(w)))) + 1e-12
+    # Map the max magnitude to ~48 (between 2^5 and 2^6) to limit saturation.
+    s = 2.0 ** np.ceil(np.log2(m / 48.0))
+    return float(s)
+
+
+def choose_act_shift(x_max):
+    """Power-of-two shift so x_max maps near the top of the u4 grid."""
+    s = int(np.ceil(np.log2((float(x_max) + 1e-12) / ACT_MAX)))
+    return max(s, -8)
+
+
+def fold_bn(w, b, gamma, beta, mean, var, eps=1e-5):
+    """Fold batch-norm into the preceding conv/FC weights and bias.
+
+    y = gamma * (conv(x, w) + b - mean) / sqrt(var + eps) + beta
+      = conv(x, w * g') + (b - mean) * g' + beta,  g' = gamma / sqrt(var+eps)
+    ``w`` has the output-channel axis LAST (…, Cout).
+    """
+    g = gamma / np.sqrt(var + eps)
+    w_f = np.asarray(w) * g  # broadcast over trailing Cout axis
+    b_f = (np.asarray(b) - mean) * g + beta
+    return w_f, b_f

@@ -1,0 +1,187 @@
+"""Training drivers (build-time only): meta-train the Omniglot embedder,
+train the two KWS classifiers, run the QAT phase, write checkpoints.
+
+The paper trains FP32 first, then runs Brevitas QAT from the best FP32
+checkpoint with BN folded (§IV-A); we mirror that with our own JAX QAT.
+Budgets are modest by default so ``make artifacts`` stays in CI territory;
+set ``CHAMELEON_FULL=1`` for longer runs.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets as D
+from . import io_json
+from . import model as M
+from . import protonet as P
+
+FULL = os.environ.get("CHAMELEON_FULL", "0") == "1"
+CKPT_DIR = os.environ.get("CHAMELEON_CKPT_DIR", os.path.join(os.path.dirname(__file__), "..", "..", "checkpoints"))
+
+
+def _budget(small, full):
+    return full if FULL else small
+
+
+# ---------------------------------------------------------------------------
+# Omniglot FSL embedder (meta-training, paper Table I / Fig. 15)
+# ---------------------------------------------------------------------------
+
+# Meta-train/meta-test class split (Vinyals-style: disjoint class sets).
+OMNIGLOT_CLASSES = 400
+OMNIGLOT_TRAIN_CLASSES = np.arange(0, 300)
+OMNIGLOT_TEST_CLASSES = np.arange(300, 400)
+
+
+def omniglot_dataset():
+    return D.SyntheticOmniglot(OMNIGLOT_CLASSES)
+
+
+def train_omniglot(cfg: M.TCNConfig = M.OMNIGLOT_CFG, seed: int = 0, verbose=True):
+    """FP32 meta-training + QAT finetune; returns (params, qcfg, logs)."""
+    ds = omniglot_dataset()
+    params = M.init_params(cfg, seed=seed)
+    episodes = _budget(280, 1500)
+    if verbose:
+        print(f"[train] omniglot FP32 meta-training: {episodes} episodes, "
+              f"{cfg.param_count()} params, RF {cfg.receptive_field}")
+    params, log = P.meta_train(
+        params, ds, cfg, episodes=episodes, n_way=5, k_shot=5, n_query=5,
+        lr=2e-3, seed=seed, class_pool=OMNIGLOT_TRAIN_CLASSES, verbose=verbose,
+        log_every=20,
+    )
+    # Calibrate on a held-out support batch, then QAT finetune.
+    rng = np.random.default_rng(seed + 1)
+    sup, qry, _ = ds.episode(rng, 8, 5, 2, class_pool=OMNIGLOT_TRAIN_CLASSES)
+    x_cal = jnp.asarray(sup.reshape(-1, cfg.seq_len, cfg.in_channels))
+    qcfg = M.calibrate(params, x_cal, cfg)
+    qat_eps = _budget(120, 500)
+    if verbose:
+        print(f"[train] omniglot QAT finetune: {qat_eps} episodes")
+    params, qat_log = P.meta_train(
+        params, ds, cfg, episodes=qat_eps, n_way=5, k_shot=5, n_query=5,
+        lr=5e-4, seed=seed + 2, qat_qcfg=qcfg, class_pool=OMNIGLOT_TRAIN_CLASSES,
+        verbose=verbose, log_every=20,
+    )
+    log.steps += [s + episodes for s in qat_log.steps]
+    log.losses += qat_log.losses
+    log.accs += qat_log.accs
+    return params, qcfg, log
+
+
+# ---------------------------------------------------------------------------
+# KWS classifiers (supervised, paper Fig. 12/16/17, Table II)
+# ---------------------------------------------------------------------------
+
+def _kws_dataset(view: str):
+    return D.SyntheticSpeechCommands(), view
+
+
+def train_kws(cfg: M.TCNConfig, view: str, seed: int = 0, verbose=True):
+    """Cross-entropy training of the TCN+head; returns (params, qcfg, log)."""
+    ds, view = _kws_dataset(view)
+    params = M.init_params(cfg, seed=seed)
+    steps = _budget(240, 1200)
+    batch = 24 if view == "mfcc" else 10
+    lr = 2e-3
+
+    def loss_fn(p, x, y):
+        logits, new_p = M.float_forward(p, x, cfg, train=True, with_head=True)
+        logp = jax.nn.log_softmax(logits, -1)
+        loss = -jnp.mean(logp[jnp.arange(y.shape[0]), y])
+        acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+        return loss, (acc, new_p)
+
+    @jax.jit
+    def step(p, opt, x, y):
+        (loss, (acc, new_p)), g = jax.value_and_grad(loss_fn, has_aux=True)(p, x, y)
+        new_p, opt = P.adam_update(new_p, g, opt, lr=lr)
+        return new_p, opt, loss, acc
+
+    rng = np.random.default_rng(seed)
+    opt = P.adam_init(params)
+    log = P.MetaTrainLog([], [], [])
+    if verbose:
+        print(f"[train] kws_{view} FP32: {steps} steps x batch {batch}, "
+              f"{cfg.param_count()} params, RF {cfg.receptive_field}")
+    for s in range(steps):
+        x, y = ds.batch(rng, batch, view=view)
+        params, opt, loss, acc = step(params, opt, jnp.asarray(x), jnp.asarray(y))
+        if s % 20 == 0 or s == steps - 1:
+            log.steps.append(s)
+            log.losses.append(float(loss))
+            log.accs.append(float(acc))
+            if verbose:
+                print(f"  step {s:4d}  loss {float(loss):.4f}  acc {float(acc):.3f}")
+    # Calibrate + QAT finetune.
+    x_cal, _ = ds.fixed_split(4, view, base=500)
+    qcfg = M.calibrate(params, jnp.asarray(x_cal), cfg)
+    qat_steps = _budget(100, 400)
+
+    def qat_loss(p, x, y):
+        logits = M.qat_forward(p, x, cfg, qcfg, with_head=True)
+        logp = jax.nn.log_softmax(logits, -1)
+        loss = -jnp.mean(logp[jnp.arange(y.shape[0]), y])
+        acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+        return loss, acc
+
+    @jax.jit
+    def qat_step(p, opt, x, y):
+        (loss, acc), g = jax.value_and_grad(qat_loss, has_aux=True)(p, x, y)
+        p, opt = P.adam_update(p, g, opt, lr=3e-4)
+        return p, opt, loss, acc
+
+    if verbose:
+        print(f"[train] kws_{view} QAT: {qat_steps} steps")
+    opt = P.adam_init(params)
+    for s in range(qat_steps):
+        x, y = ds.batch(rng, batch, view=view)
+        params, opt, loss, acc = qat_step(params, opt, jnp.asarray(x), jnp.asarray(y))
+        if s % 20 == 0 or s == qat_steps - 1:
+            log.steps.append(steps + s)
+            log.losses.append(float(loss))
+            log.accs.append(float(acc))
+            if verbose:
+                print(f"  qat step {s:4d}  loss {float(loss):.4f}  acc {float(acc):.3f}")
+    return params, qcfg, log
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint orchestration
+# ---------------------------------------------------------------------------
+
+def ensure_checkpoint(name: str, verbose=True):
+    """Train-if-missing; returns (params, qcfg, log). Deterministic seeds."""
+    path = os.path.join(CKPT_DIR, f"{name}.ckpt.json")
+    if os.path.exists(path):
+        params, qcfg, logblob = io_json.load_checkpoint(path)
+        log = P.MetaTrainLog(**logblob) if logblob else None
+        if verbose:
+            print(f"[train] loaded checkpoint {path}")
+        return params, qcfg, log
+    cfg = M.MODEL_ZOO[name]
+    if name == "omniglot_fsl":
+        params, qcfg, log = train_omniglot(cfg, verbose=verbose)
+    elif name == "kws_mfcc":
+        params, qcfg, log = train_kws(cfg, "mfcc", verbose=verbose)
+    elif name == "kws_raw":
+        params, qcfg, log = train_kws(cfg, "raw", verbose=verbose)
+    else:
+        raise KeyError(name)
+    io_json.save_checkpoint(path, params, qcfg, log)
+    if verbose:
+        print(f"[train] saved checkpoint {path}")
+    return params, qcfg, log
+
+
+if __name__ == "__main__":
+    import sys
+
+    names = sys.argv[1:] or list(M.MODEL_ZOO)
+    for n in names:
+        ensure_checkpoint(n)

@@ -1,0 +1,80 @@
+"""Synthetic dataset generators: determinism, shapes, class structure, and
+the episode protocol (support/query disjointness, class disjointness)."""
+
+import numpy as np
+
+from compile import datasets as D
+
+
+def test_omniglot_shapes_and_determinism():
+    ds = D.SyntheticOmniglot(10)
+    a = ds.sample(3, 5)
+    b = ds.sample(3, 5)
+    assert a.shape == (784, 1)
+    assert (a == b).all(), "samples must be deterministic"
+    assert a.min() >= 0.0 and a.max() <= 1.0
+
+
+def test_omniglot_class_prefix_stable():
+    # class i must be identical regardless of the total class count (the
+    # meta-test export relies on this).
+    a = D.SyntheticOmniglot(10).sample(4, 0)
+    b = D.SyntheticOmniglot(50).sample(4, 0)
+    assert (a == b).all()
+
+
+def test_omniglot_classes_differ():
+    ds = D.SyntheticOmniglot(6)
+    dists = []
+    for c in range(1, 6):
+        dists.append(np.abs(ds.sample(0, 0) - ds.sample(c, 0)).mean())
+    assert min(dists) > 0.005, "classes must be distinguishable"
+
+
+def test_omniglot_episode_protocol():
+    ds = D.SyntheticOmniglot(12)
+    rng = np.random.default_rng(0)
+    sup, qry, classes = ds.episode(rng, n_way=4, k_shot=2, n_query=3)
+    assert sup.shape == (4, 2, 784, 1)
+    assert qry.shape == (4, 3, 784, 1)
+    assert len(set(classes.tolist())) == 4
+    pool = np.asarray([5, 6, 7, 8])
+    _, _, classes = ds.episode(rng, 3, 1, 1, class_pool=pool)
+    assert set(classes.tolist()) <= set(pool.tolist())
+
+
+def test_speech_raw_and_mfcc_shapes():
+    ds = D.SyntheticSpeechCommands()
+    cfg = ds.cfg
+    raw = ds.sample(0, 0, "raw")
+    assert raw.shape == (cfg.n_samples, 1)
+    assert np.abs(raw).max() <= 1.0
+    mfcc = ds.sample(0, 0, "mfcc")
+    assert mfcc.shape == (cfg.n_frames, cfg.n_mfcc)
+    assert cfg.n_frames == 63  # KWS-standard frame count
+
+
+def test_speech_determinism_and_12_classes():
+    ds = D.SyntheticSpeechCommands()
+    assert D.N_CLASSES == 12
+    assert D.CLASSES[-2:] == ["unknown", "silence"]
+    a = ds.sample(5, 7, "raw")
+    b = ds.sample(5, 7, "raw")
+    assert (a == b).all()
+
+
+def test_silence_is_quieter_than_keywords():
+    ds = D.SyntheticSpeechCommands()
+    kw_energy = np.mean([np.abs(ds.sample(c, i, "raw")).mean() for c in range(4) for i in range(3)])
+    sil_energy = np.mean([np.abs(ds.sample(11, i, "raw")).mean() for i in range(3)])
+    assert sil_energy < kw_energy
+
+
+def test_batch_and_fixed_split():
+    ds = D.SyntheticSpeechCommands()
+    rng = np.random.default_rng(1)
+    x, y = ds.batch(rng, 8, "mfcc")
+    assert x.shape[0] == 8 and y.shape == (8,)
+    xs, ys = ds.fixed_split(2, "mfcc", base=100)
+    assert xs.shape[0] == 24
+    assert (np.bincount(ys) == 2).all()

@@ -1,0 +1,99 @@
+"""L2 model tests: shapes, receptive field, quantized-export consistency,
+integer forward vs pallas forward, and the scale-schedule invariants."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile import quantlib as ql
+
+TINY = M.TCNConfig(
+    name="tiny_test", in_channels=2, seq_len=64, channels=(6, 8),
+    kernel_size=3, embed_dim=16, n_classes=4,
+)
+
+
+@pytest.fixture(scope="module")
+def quantized():
+    params = M.init_params(TINY, seed=1)
+    rng = np.random.default_rng(0)
+    x_cal = jnp.asarray(rng.uniform(0, 1, (6, TINY.seq_len, TINY.in_channels)).astype(np.float32))
+    qcfg = M.calibrate(params, x_cal, TINY)
+    qm = M.quantize_model(params, qcfg, TINY)
+    return params, qcfg, qm
+
+
+def test_param_count_formula():
+    n = TINY.param_count()
+    expect = (3 * 2 * 6 + 6) + (3 * 6 * 6 + 6) + (2 * 6 + 6) \
+        + (3 * 6 * 8 + 8) + (3 * 8 * 8 + 8) + (6 * 8 + 8) \
+        + (8 * 16 + 16) + (16 * 4 + 4)
+    assert n == expect
+
+
+def test_receptive_field():
+    # two blocks, k=3: 1 + 2*2*1 + 2*2*2 = 13
+    assert TINY.receptive_field == 13
+
+
+def test_float_forward_shapes():
+    params = M.init_params(TINY, seed=0)
+    x = jnp.zeros((3, TINY.seq_len, TINY.in_channels))
+    logits, _ = M.float_forward(params, x, TINY, train=False, with_head=True)
+    assert logits.shape == (3, 4)
+    emb, _ = M.float_forward(params, x, TINY, train=False, with_head=False)
+    assert emb.shape == (3, TINY.embed_dim)
+
+
+def test_quantized_export_invariants(quantized):
+    _, _, qm = quantized
+    assert len(qm.layers) == 2 * TINY.n_blocks
+    for l in qm.layers:
+        assert l.out_shift >= 0, "OPE shifts must be non-negative"
+        assert np.abs(l.codes).max() <= 8
+        assert l.bias.min() >= ql.BIAS_MIN and l.bias.max() <= ql.BIAS_MAX
+        if l.res_codes is not None:
+            assert l.res_out_shift >= 0
+    assert qm.layers[0].dilation == 1 and qm.layers[2].dilation == 2
+
+
+def test_int_forward_is_u4(quantized):
+    _, _, qm = quantized
+    rng = np.random.default_rng(2)
+    xq = rng.integers(0, 16, (TINY.seq_len, TINY.in_channels)).astype(np.int32)
+    emb = np.asarray(M.int_forward(qm, jnp.asarray(xq), with_head=False))
+    assert emb.shape == (TINY.embed_dim,)
+    assert emb.min() >= 0 and emb.max() <= 15
+
+
+def test_pallas_and_oracle_forward_agree(quantized):
+    _, _, qm = quantized
+    rng = np.random.default_rng(3)
+    for _ in range(3):
+        xq = jnp.asarray(rng.integers(0, 16, (TINY.seq_len, TINY.in_channels)).astype(np.int32))
+        a = np.asarray(M.int_forward(qm, xq, use_pallas=False, with_head=True))
+        b = np.asarray(M.int_forward(qm, xq, use_pallas=True, with_head=True))
+        assert (a == b).all()
+
+
+def test_qat_forward_runs_and_is_finite(quantized):
+    params, qcfg, _ = quantized
+    x = jnp.asarray(np.random.default_rng(4).uniform(0, 1, (2, TINY.seq_len, TINY.in_channels)).astype(np.float32))
+    out = M.qat_forward(params, x, TINY, qcfg, with_head=True)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_quantize_input_clamps(quantized):
+    _, _, qm = quantized
+    x = np.full((TINY.seq_len, TINY.in_channels), 1e9, np.float32)
+    q = M.quantize_input(x, qm)
+    assert q.max() == 15
+    x = np.full((TINY.seq_len, TINY.in_channels), -5.0, np.float32)
+    assert M.quantize_input(x, qm).max() == 0
+
+
+def test_model_zoo_sane():
+    for name, cfg in M.MODEL_ZOO.items():
+        assert cfg.receptive_field >= cfg.seq_len // 3, name
+        assert cfg.param_count() < 140_000, name  # chip capacity

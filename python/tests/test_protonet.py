@@ -1,0 +1,95 @@
+"""PN -> FC reformulation tests (paper Eq. 3-8): float equivalence of the
+FC form to nearest-prototype classification, and the quantized (log2)
+variant's properties."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import protonet as P
+from compile import quantlib as ql
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(
+    n_way=st.integers(2, 8),
+    k_shot=st.integers(1, 5),
+    dim=st.integers(2, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fc_form_equals_nearest_prototype_float(n_way, k_shot, dim, seed):
+    """Eq. 6: argmax(W.x + b) == argmin_j ||proto_j - x||^2 exactly."""
+    rng = np.random.default_rng(seed)
+    sup = rng.normal(size=(n_way * k_shot, dim)).astype(np.float32)
+    q = rng.normal(size=(3, dim)).astype(np.float32)
+    w, b = P.pn_to_fc_float(jnp.asarray(sup), n_way, k_shot)
+    fc_pred = np.asarray(P.classify_float_fc(jnp.asarray(q), w, b))
+    protos = sup.reshape(n_way, k_shot, dim).mean(1)
+    d = ((q[:, None, :] - protos[None]) ** 2).sum(-1)
+    np_pred = d.argmin(1)
+    assert (fc_pred == np_pred).all()
+
+
+def test_quant_fc_weights_are_log2_of_preshifted_sum():
+    sup = np.asarray([[4, 8, 0, 2], [4, 8, 0, 2]], np.int32)  # 2 shots, 1 way
+    codes, bias = P.pn_to_fc_quant(sup, n_way=1, k_shot=2)
+    # sum = [8,16,0,4]; preshift ceil(log2 2)=1 -> [4,8,0,2]
+    dec = np.asarray(ql.log2_decode(jnp.asarray(codes[:, 0])))
+    assert (dec == [4, 8, 0, 2]).all()
+    # bias = -(sum of squares)/2 = -(16+64+0+4)/2 = -42
+    assert bias[0] == -42
+
+
+@settings(**SETTINGS)
+@given(
+    n_way=st.integers(2, 6),
+    dim=st.integers(4, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quant_classify_matches_nearest_decoded(n_way, dim, seed):
+    """One-shot: FC argmax equals argmin distance to decoded prototypes,
+    up to the half-LSB floor of the odd-sum bias (distance slack <= 1)."""
+    rng = np.random.default_rng(seed)
+    sup = rng.integers(0, 16, (n_way, dim)).astype(np.int32)
+    codes, bias = P.pn_to_fc_quant(sup, n_way=n_way, k_shot=1)
+    q = rng.integers(0, 16, dim).astype(np.int32)
+    pred, _ = P.classify_quant_fc(q, codes, bias)
+    dec = np.stack([
+        np.asarray(ql.log2_decode(jnp.asarray(codes[:, j]))) for j in range(n_way)
+    ])
+    d = ((q[None] - dec) ** 2).sum(1)
+    assert d[pred] <= d.min() + 1
+
+
+def test_preshift_values():
+    assert P.proto_preshift(1) == 0
+    assert P.proto_preshift(2) == 1
+    assert P.proto_preshift(5) == 3
+    assert P.proto_preshift(10) == 4
+
+
+def test_bias_saturates_at_14_bits():
+    sup = np.full((1, 256), 15, np.int32)  # extreme: all-max embedding
+    codes, bias = P.pn_to_fc_quant(sup, 1, 1)
+    assert bias[0] == ql.BIAS_MIN  # saturated, not wrapped
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_adam_decreases_simple_quadratic(seed):
+    rng = np.random.default_rng(seed)
+    target = jnp.asarray(rng.normal(size=4).astype(np.float32))
+    params = {"w": jnp.zeros(4)}
+    opt = P.adam_init(params)
+    import jax
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(50):
+        g = jax.grad(loss)(params)
+        params, opt = P.adam_update(params, g, opt, lr=0.1)
+    assert float(loss(params)) < l0 * 0.2

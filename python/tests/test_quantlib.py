@@ -1,0 +1,98 @@
+"""Quantization-grammar unit tests: codecs, saturation, OPE semantics —
+the python half of the cross-language contract with rust/src/quant."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import quantlib as ql
+
+SETTINGS = dict(max_examples=50, deadline=None)
+
+
+def test_log2_decode_table():
+    codes = jnp.arange(-8, 8)
+    vals = np.asarray(ql.log2_decode(codes))
+    assert vals[8] == 0  # code 0
+    assert vals[9] == 1 and vals[15] == 64  # codes 1..7
+    assert vals[7] == -1 and vals[0] == -128  # codes -1..-8
+
+
+def test_encode_decode_fixpoint():
+    for c in range(-8, 8):
+        v = int(ql.log2_decode(jnp.asarray(c)))
+        assert int(ql.log2_encode_int(jnp.asarray(v))) == c or v == 0
+
+
+@settings(**SETTINGS)
+@given(v=st.integers(-4096, 4096))
+def test_encode_int_is_nearest(v):
+    got = int(ql.log2_decode(ql.log2_encode_int(jnp.asarray(v))))
+    if -128 <= v <= 64:
+        cands = [0] + [2**e for e in range(7)] + [-(2**e) for e in range(8)]
+        best = min(abs(v - c) for c in cands)
+        assert abs(v - got) <= best
+
+
+@settings(**SETTINGS)
+@given(act=st.integers(0, 15), code=st.integers(-8, 7))
+def test_product_fits_12_bits(act, code):
+    p = int(ql.shift_product(jnp.asarray(act), jnp.asarray(code)))
+    assert -2048 <= p <= 2047
+
+
+def test_sat_bounds():
+    assert int(ql.sat_acc(jnp.asarray(10**6))) == 131071
+    assert int(ql.sat_acc(jnp.asarray(-(10**6)))) == -131072
+    assert int(ql.sat_bias(jnp.asarray(10**5))) == 8191
+    assert int(ql.sat_bias(jnp.asarray(-(10**5)))) == -8192
+
+
+def test_rounding_shift():
+    assert int(ql.rounding_shift_right(jnp.asarray(7), 2)) == 2
+    assert int(ql.rounding_shift_right(jnp.asarray(6), 2)) == 2
+    assert int(ql.rounding_shift_right(jnp.asarray(5), 2)) == 1
+    assert int(ql.rounding_shift_right(jnp.asarray(-6), 2)) == -1
+    assert int(ql.rounding_shift_right(jnp.asarray(9), 0)) == 9
+
+
+def test_ope_residual_and_clamp():
+    y = int(ql.ope(jnp.asarray(100), jnp.asarray(20), 3, relu=True,
+                   residual=jnp.asarray(3), res_shift=2))
+    assert y == min(max((100 + 20 + 12 + 4) >> 3, 0), 15)
+    # non-relu: raw saturated total
+    y = int(ql.ope(jnp.asarray(131000), jnp.asarray(8191), 0, relu=False))
+    assert y == 131071
+
+
+@settings(**SETTINGS)
+@given(x=st.floats(-10, 200, allow_nan=False), shift=st.integers(-4, 4))
+def test_u4_encode_in_range(x, shift):
+    q = int(ql.u4_encode(jnp.asarray(np.float32(x)), shift))
+    assert 0 <= q <= 15
+
+
+def test_ste_roundtrips_are_on_grid():
+    w = jnp.asarray(np.linspace(-2.0, 2.0, 33, dtype=np.float32))
+    wq = np.asarray(ql.ste_log2(w, 0.03125))
+    grid = set()
+    for c in range(-8, 8):
+        grid.add(round(float(ql.log2_decode(jnp.asarray(c))) * 0.03125, 9))
+    for v in wq:
+        assert round(float(v), 9) in grid
+
+
+def test_fold_bn_matches_direct():
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(3, 4, 5)).astype(np.float32)
+    b = rng.normal(size=5).astype(np.float32)
+    gamma = rng.uniform(0.5, 2, 5).astype(np.float32)
+    beta = rng.normal(size=5).astype(np.float32)
+    mean = rng.normal(size=5).astype(np.float32)
+    var = rng.uniform(0.5, 2, 5).astype(np.float32)
+    wf, bf = ql.fold_bn(w, b, gamma, beta, mean, var)
+    x = rng.normal(size=(7, 4)).astype(np.float32)
+    pre = x @ w[0] + b
+    ref = gamma * (pre - mean) / np.sqrt(var + 1e-5) + beta
+    got = x @ wf[0] + bf
+    assert np.allclose(got, ref, atol=1e-4)

@@ -1,0 +1,113 @@
+//! Ablations of the design choices DESIGN.md calls out:
+//!   1. dilation-aware skipping on/off (compute + memory);
+//!   2. residual register file vs multi-buffer schemes (memory);
+//!   3. log2 vs plain-nearest-integer 4-bit weights (python tests cover
+//!      accuracy; here: the dynamic-range argument, decode table ranges);
+//!   4. dual-mode vs fixed-size array (real-time power + peak GOPS).
+
+use chameleon::baselines::Strategy;
+use chameleon::expt;
+use chameleon::quant;
+use chameleon::sim::power::{energy_per_cycle, leakage, LEAK_CORE_073, LEAK_MSB_073};
+use chameleon::sim::scheduler::{GreedySim, Schedule};
+use chameleon::sim::ArrayMode;
+use chameleon::util::bench::{fmt_power, fmt_si, Table};
+
+fn main() -> anyhow::Result<()> {
+    let model = expt::load_model("kws_raw")?;
+    let pool = expt::load_pool("kws_raw")?;
+    let x = pool.sample(0, 0);
+
+    // ---- 1. dilation-aware skipping ----
+    // The dense variant legitimately exceeds the chip's 2 kB activation
+    // SRAM (that's the point of the ablation), so it runs with the memory
+    // constraint lifted; the skip variant runs under the real budget.
+    let sim = GreedySim::new(&model, ArrayMode::M16x16);
+    let skip = sim.run(x, &Schedule::single_output(&model))?;
+    let sim_unbounded = GreedySim::with_capacity(&model, ArrayMode::M16x16, usize::MAX);
+    let dense = sim_unbounded.run(x, &Schedule::dense(&model))?;
+    assert_eq!(skip.embedding, dense.embedding, "ablation must not change outputs");
+    let mut t = Table::new(
+        "Ablation 1 — greedy dilation-aware skipping (kws_raw, identical outputs)",
+        &["variant", "MACs", "cycles", "act-mem high water"],
+    );
+    for (name, r) in [("skip ON (Chameleon)", &skip), ("skip OFF (dense)", &dense)] {
+        t.rowv(vec![
+            name.into(),
+            fmt_si(r.trace.total_macs() as f64),
+            fmt_si(r.trace.total_cycles() as f64),
+            format!("{} B", r.trace.act_mem_high_water),
+        ]);
+    }
+    t.print();
+    let mac_gain = dense.trace.total_macs() as f64 / skip.trace.total_macs() as f64;
+    println!("compute reduction from skipping: {mac_gain:.1}x");
+    assert!(mac_gain > 3.0);
+
+    // ---- 2. residual buffering ----
+    let mut t = Table::new(
+        "Ablation 2 — residual handling schemes",
+        &["scheme", "buffers", "act bytes at seq 2048"],
+    );
+    for s in [Strategy::WeightStationary, Strategy::PingPongFifo, Strategy::Chameleon] {
+        t.rowv(vec![
+            s.name().into(),
+            s.residual_buffers().to_string(),
+            format!("{}", chameleon::baselines::activation_bytes(s, &model, 2048)),
+        ]);
+    }
+    t.print();
+
+    // ---- 3. log2 weight dynamic range ----
+    let mut t = Table::new(
+        "Ablation 3 — 4-bit weight codings",
+        &["coding", "values", "dynamic range", "multiplier"],
+    );
+    t.rowv(vec![
+        "uniform s4".into(), "-8..7 step 1".into(), "15:1".into(), "4x4 multiplier".into(),
+    ]);
+    t.rowv(vec![
+        "log2 s4 (Chameleon)".into(),
+        "0, ±2^0..2^6, -2^7".into(),
+        format!("{}:1", quant::log2_decode(-8).unsigned_abs()),
+        "barrel shifter".into(),
+    ]);
+    t.print();
+    assert_eq!(quant::log2_decode(-8), -128, "int8-equivalent dynamic range");
+
+    // ---- 4. dual-mode vs fixed array ----
+    let kws = expt::load_model("kws_mfcc")?;
+    let pm = expt::load_pool("kws_mfcc")?;
+    let c4 = GreedySim::new(&kws, ArrayMode::M4x4)
+        .run(pm.sample(0, 0), &Schedule::single_output(&kws))?
+        .trace
+        .total_cycles();
+    let v = 0.73;
+    let p_dual_rt = leakage(LEAK_CORE_073, v) + energy_per_cycle(ArrayMode::M4x4, v) * c4 as f64;
+    let p_fixed16_rt = leakage(LEAK_CORE_073 + LEAK_MSB_073, v)
+        + energy_per_cycle(ArrayMode::M16x16, v) * (c4 / 16) as f64;
+    let mut t = Table::new(
+        "Ablation 4 — dual-mode array vs fixed 16x16",
+        &["configuration", "real-time KWS power", "peak GOPS @150MHz"],
+    );
+    t.rowv(vec![
+        "fixed 16x16 only".into(),
+        fmt_power(p_fixed16_rt),
+        format!("{:.1}", ArrayMode::M16x16.peak_ops(150e6) / 1e9),
+    ]);
+    t.rowv(vec![
+        "fixed 4x4 only".into(),
+        fmt_power(p_dual_rt),
+        format!("{:.1}", ArrayMode::M4x4.peak_ops(150e6) / 1e9),
+    ]);
+    t.rowv(vec![
+        "dual-mode (Chameleon)".into(),
+        fmt_power(p_dual_rt),
+        format!("{:.1}", ArrayMode::M16x16.peak_ops(150e6) / 1e9),
+    ]);
+    t.print();
+    println!("dual mode keeps BOTH the low power and the 16x peak throughput");
+    assert!(p_dual_rt < p_fixed16_rt);
+    println!("\nall ablation checks OK");
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! Fig. 13(a,b): SoC metrics summary + per-module area breakdown, from the
+//! area model anchored to the paper's absolutes (0.74 mm² core in 40 nm,
+//! learning logic 0.5 % of core).
+
+use chameleon::expt;
+use chameleon::sim::area::{breakdown, core_mm2, PAPER_CORE_MM2};
+use chameleon::sim::memory::MemoryConfig;
+use chameleon::sim::power::f_max;
+use chameleon::sim::ArrayMode;
+use chameleon::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let mem = MemoryConfig::default();
+
+    let mut t = Table::new("Fig. 13(a) — metrics summary", &["metric", "modelled", "paper"]);
+    t.rowv(vec!["technology".into(), "40-nm LP (modelled)".into(), "40-nm LP".into()]);
+    t.rowv(vec![
+        "core area".into(),
+        format!("{:.2} mm²", core_mm2(&mem)),
+        format!("{PAPER_CORE_MM2:.2} mm²"),
+    ]);
+    t.rowv(vec![
+        "on-chip memory".into(),
+        format!("{:.0} kB", mem.total_bytes() as f64 / 1024.0),
+        "71 kB".into(),
+    ]);
+    t.rowv(vec![
+        "max clock @1.1V".into(),
+        format!("{:.0} MHz", f_max(1.1) / 1e6),
+        "150 MHz".into(),
+    ]);
+    t.rowv(vec![
+        "peak throughput".into(),
+        format!("{:.1} GOPS", ArrayMode::M16x16.peak_ops(f_max(1.1)) / 1e9),
+        "76.8 GOPS".into(),
+    ]);
+    t.rowv(vec![
+        "supply".into(), "0.6-1.1 V (alpha-power model)".into(), "0.6-1.1 V".into(),
+    ]);
+    t.print();
+
+    let items = breakdown(&mem);
+    let total = core_mm2(&mem);
+    let mut b = Table::new("Fig. 13(b) — area breakdown", &["module", "mm²", "% of core"]);
+    for i in &items {
+        b.rowv(vec![
+            i.name.into(),
+            format!("{:.4}", i.mm2),
+            format!("{:.2}%", 100.0 * i.mm2 / total),
+        ]);
+    }
+    b.print();
+
+    let learning_pct = 100.0
+        * items.iter().find(|i| i.name.contains("learning")).unwrap().mm2
+        / total;
+    println!("\nlearning hardware: {learning_pct:.2}% of core (paper: 0.5%)");
+    assert!((0.3..0.7).contains(&learning_pct), "learning area fraction off");
+    let err = (total - PAPER_CORE_MM2).abs() / PAPER_CORE_MM2;
+    assert!(err < 0.25, "core area error {err:.2}");
+
+    // Context: the deployed models vs the memory system.
+    for name in ["kws_mfcc", "kws_raw", "omniglot_fsl"] {
+        let m = expt::load_model(name)?;
+        println!(
+            "{name}: {} codes -> {:.1} kB of the {:.1} kB weight SRAM",
+            m.param_count(),
+            m.param_count() as f64 / 2.0 / 1024.0,
+            mem.weight_codes as f64 / 2.0 / 1024.0,
+        );
+    }
+    println!("shape checks OK");
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! Fig. 13(e): efficiency (TOPS/W) and maximum clock frequency vs core
+//! voltage, from the calibrated alpha-power/leakage model. The anchors are
+//! the paper's measured points: 150 MHz max clock at 1.1 V, operation down
+//! to 0.6 V, ~6 TOPS/W peak.
+
+use chameleon::sim::power::{f_max, peak_ops_and_efficiency};
+use chameleon::sim::ArrayMode;
+use chameleon::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let mut t = Table::new(
+        "Fig. 13(e) — f_max and efficiency vs voltage",
+        &["V", "f_max", "peak GOPS", "TOPS/W (16x16)", "TOPS/W (4x4)"],
+    );
+    let mut effs = Vec::new();
+    for v10 in [60usize, 65, 70, 73, 80, 90, 100, 110] {
+        let v = v10 as f64 / 100.0;
+        let f = f_max(v);
+        let (ops16, eff16) = peak_ops_and_efficiency(ArrayMode::M16x16, v);
+        let (_, eff4) = peak_ops_and_efficiency(ArrayMode::M4x4, v);
+        effs.push((v, eff16 / 1e12));
+        t.rowv(vec![
+            format!("{v:.2}"),
+            format!("{:.2} MHz", f / 1e6),
+            format!("{:.2}", ops16 / 1e9),
+            format!("{:.2}", eff16 / 1e12),
+            format!("{:.2}", eff4 / 1e12),
+        ]);
+    }
+    t.print();
+
+    // Anchors + shape: f_max(1.1) = 150 MHz; throughput rises with V while
+    // efficiency falls (CV^2), so TOPS/W peaks toward the low-voltage end —
+    // exactly the trade Fig. 13(e) plots.
+    assert!((f_max(1.1) - 150e6).abs() / 150e6 < 0.01);
+    assert!(f_max(0.6) > 0.0 && f_max(0.6) < f_max(1.1) / 5.0);
+    let max_eff = effs.iter().cloned().fold((0.0, 0.0), |m, e| if e.1 > m.1 { e } else { m });
+    let eff_nominal = effs.iter().find(|(v, _)| (*v - 0.73).abs() < 1e-6).unwrap().1;
+    println!(
+        "\nefficiency: {:.1} TOPS/W at 0.73 V, best {:.1} TOPS/W at {:.2} V \
+         (paper Table II: 6.0 peak TOPS/W); 150 MHz @ 1.1 V anchored",
+        eff_nominal, max_eff.1, max_eff.0
+    );
+    assert!(max_eff.0 <= 0.73, "efficiency must peak at the low-voltage end");
+    assert!((3.0..25.0).contains(&eff_nominal), "nominal efficiency out of family: {eff_nominal}");
+    let eff_11 = effs.last().unwrap().1;
+    assert!((3.0..12.0).contains(&eff_11), "1.1 V efficiency out of family: {eff_11}");
+    println!("shape checks OK");
+    Ok(())
+}

@@ -1,0 +1,120 @@
+//! Fig. 8(c): activation memory and compute of Chameleon's greedy
+//! dilation-aware execution vs weight-stationary TCN inference, swept over
+//! sequence length at a fixed ~130 k-parameter network (the chip's maximum
+//! deployable size). Paper headline: 90x memory and ~10^4x compute
+//! reduction at 16 k steps (raw audio).
+
+use chameleon::baselines::{activation_bytes, compute_macs, Strategy};
+use chameleon::model::{QLayer, QuantModel};
+use chameleon::util::bench::{fmt_si, Table};
+
+/// Build a ~130 k-parameter raw-audio-style TCN (11 blocks, dilations to
+/// 1024 — receptive field >16 k) without needing trained weights: the
+/// figure is a structural property.
+fn paper_max_model(seq_len: usize) -> QuantModel {
+    let k = 5usize;
+    let chs = [16usize, 16, 24, 24, 32, 32, 40, 40, 40, 48, 48];
+    let mut layers = Vec::new();
+    let mut cin = 1usize;
+    let mk = |kk: usize, ci: usize, co: usize, d: usize, res: bool| QLayer {
+        codes: vec![1i8; kk * ci * co],
+        codes_shape: vec![kk, ci, co],
+        bias: vec![0; co],
+        out_shift: 4,
+        dilation: d,
+        relu: true,
+        res_shift: if res { Some(0) } else { None },
+        res_codes: None,
+        res_codes_shape: None,
+        res_bias: None,
+        res_out_shift: None,
+    };
+    for (b, &c) in chs.iter().enumerate() {
+        let d = 1usize << b;
+        layers.push(mk(k, cin, c, d, false));
+        let mut l2 = mk(k, c, c, d, true);
+        if cin != c {
+            l2.res_codes = Some(vec![1i8; cin * c]);
+            l2.res_codes_shape = Some(vec![1, cin, c]);
+            l2.res_bias = Some(vec![0; c]);
+            l2.res_out_shift = Some(0);
+        }
+        layers.push(l2);
+        cin = c;
+    }
+    let v = 64usize;
+    QuantModel {
+        name: "paper_max".into(),
+        in_channels: 1,
+        seq_len,
+        channels: chs.to_vec(),
+        kernel_size: k,
+        embed_dim: v,
+        n_classes: Some(12),
+        in_shift: 0,
+        embed_shift: 0,
+        embed: QLayer {
+            codes: vec![1i8; cin * v], codes_shape: vec![cin, v], bias: vec![0; v],
+            out_shift: 4, dilation: 1, relu: true, res_shift: None,
+            res_codes: None, res_codes_shape: None, res_bias: None, res_out_shift: None,
+        },
+        head: Some(QLayer {
+            codes: vec![1i8; v * 12], codes_shape: vec![v, 12], bias: vec![0; 12],
+            out_shift: 0, dilation: 1, relu: false, res_shift: None,
+            res_codes: None, res_codes_shape: None, res_bias: None, res_out_shift: None,
+        }),
+        layers,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let m0 = paper_max_model(16_384);
+    println!(
+        "network: {} params, RF {} (paper: 130 k max, 16 k raw audio)",
+        m0.param_count(),
+        m0.receptive_field()
+    );
+
+    let mut t = Table::new(
+        "Fig. 8(c) — memory & compute vs sequence length (WS baseline vs Chameleon)",
+        &["seq len", "WS act mem", "Cham act mem", "mem ratio",
+          "WS MACs", "Cham MACs", "compute ratio"],
+    );
+    let mut last_ratios = (0.0f64, 0.0f64);
+    for &seq in &[256usize, 1024, 4096, 16_384] {
+        let m = paper_max_model(seq);
+        let ws_mem = activation_bytes(Strategy::WeightStationary, &m, seq);
+        let ch_mem = activation_bytes(Strategy::Chameleon, &m, seq);
+        let ws_mac = compute_macs(Strategy::WeightStationary, &m, seq);
+        let ch_mac = compute_macs(Strategy::Chameleon, &m, seq);
+        let mem_ratio = ws_mem as f64 / ch_mem as f64;
+        let mac_ratio = ws_mac as f64 / ch_mac as f64;
+        last_ratios = (mem_ratio, mac_ratio);
+        t.rowv(vec![
+            format!("{seq}"),
+            format!("{:.1} kB", ws_mem as f64 / 1024.0),
+            format!("{:.2} kB", ch_mem as f64 / 1024.0),
+            format!("{mem_ratio:.0}x"),
+            fmt_si(ws_mac as f64),
+            fmt_si(ch_mac as f64),
+            format!("{mac_ratio:.0}x"),
+        ]);
+    }
+    t.print();
+    println!(
+        "\npaper @16k: 90x memory, ~1e4x compute; measured: {:.0}x / {:.0}x\n\
+         (memory overshoots the paper's 90x because our WS model triple-buffers\n\
+         residuals over the full sequence per UltraTrail; the direction and\n\
+         order of magnitude are the claim under test)",
+        last_ratios.0, last_ratios.1
+    );
+
+    // Shape: both ratios must grow with sequence length and be large at 16k.
+    assert!(last_ratios.0 > 30.0, "memory reduction too small: {}", last_ratios.0);
+    assert!(last_ratios.1 > 1e3, "compute reduction too small: {}", last_ratios.1);
+    // Chameleon activation memory must fit the chip's 2 kB at 16k steps.
+    let ch = activation_bytes(Strategy::Chameleon, &paper_max_model(16_384), 16_384);
+    assert!(ch <= 2048 + 512, "activation memory {ch} B exceeds the 2 kB-ish budget");
+    println!("shape checks OK");
+    Ok(())
+}

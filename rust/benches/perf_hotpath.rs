@@ -1,0 +1,134 @@
+//! §Perf harness: wall-clock performance of the three execution engines
+//! and the coordinator — the numbers tracked across the optimization pass
+//! (EXPERIMENTS.md §Perf). Prints throughput in simulated-MACs/s for the
+//! golden model and the cycle simulator, PJRT latency for the XLA
+//! artifact, and served requests/s through the coordinator.
+
+use std::sync::Arc;
+
+use chameleon::coordinator::server::EngineFactory;
+use chameleon::coordinator::{Coordinator, CoordinatorConfig, Engine};
+use chameleon::expt;
+use chameleon::golden;
+use chameleon::runtime::{Runtime, XlaModel};
+use chameleon::sim::scheduler::{GreedySim, Schedule};
+use chameleon::sim::ArrayMode;
+use chameleon::util::bench::{fmt_dur, fmt_si, Bencher, Table};
+
+fn main() -> anyhow::Result<()> {
+    let dir = expt::require_artifacts()?;
+    let bencher = Bencher::default();
+    let mut t = Table::new(
+        "§Perf — engine hot paths",
+        &["path", "workload", "mean", "p99", "throughput"],
+    );
+
+    for name in ["kws_mfcc", "omniglot_fsl", "kws_raw"] {
+        let model = expt::load_model(name)?;
+        let pool = expt::load_pool(if name == "omniglot_fsl" { "omniglot" } else { name })?;
+        let x = pool.sample(0, 0).to_vec();
+        let macs = {
+            let s = Schedule::single_output(&model);
+            let mut total = 0u64;
+            for (l, needed) in s.needed.iter().enumerate() {
+                total += (needed.len() * model.layers[l].macs_per_step()) as u64;
+            }
+            total
+        };
+
+        // golden forward
+        let m = bencher.measure(&format!("golden {name}"), || {
+            golden::embed(&model, &x).unwrap()
+        });
+        t.rowv(vec![
+            "golden".into(),
+            name.into(),
+            fmt_dur(m.mean),
+            fmt_dur(m.p99),
+            format!("{} MAC/s", fmt_si(macs as f64 / m.mean.as_secs_f64())),
+        ]);
+
+        // cycle simulator
+        let sim = GreedySim::new(&model, ArrayMode::M16x16);
+        let sched = Schedule::single_output(&model);
+        let m = bencher.measure(&format!("sim {name}"), || sim.run(&x, &sched).unwrap());
+        t.rowv(vec![
+            "sim".into(),
+            name.into(),
+            fmt_dur(m.mean),
+            fmt_dur(m.p99),
+            format!("{} MAC/s", fmt_si(macs as f64 / m.mean.as_secs_f64())),
+        ]);
+    }
+
+    // XLA runtime latency (kws_mfcc)
+    {
+        let model = expt::load_model("kws_mfcc")?;
+        let pool = expt::load_pool("kws_mfcc")?;
+        let x = pool.sample(0, 0).to_vec();
+        let rt = Runtime::cpu()?;
+        let xm = XlaModel::load(&rt, &dir, &model)?;
+        let m = bencher.measure("xla kws_mfcc", || xm.forward(&x).unwrap());
+        t.rowv(vec![
+            "xla (PJRT)".into(),
+            "kws_mfcc".into(),
+            fmt_dur(m.mean),
+            fmt_dur(m.p99),
+            format!("{:.0} inf/s", 1.0 / m.mean.as_secs_f64()),
+        ]);
+    }
+
+    // coordinator end-to-end throughput (golden engines, 4 workers)
+    {
+        let model = Arc::new(expt::load_model("kws_mfcc")?);
+        let pool = expt::load_pool("kws_mfcc")?;
+        let workers = 4;
+        let factories: Vec<EngineFactory> = (0..workers)
+            .map(|_| {
+                let m = model.clone();
+                Box::new(move || Ok(Engine::golden(m))) as EngineFactory
+            })
+            .collect();
+        let coord = Arc::new(Coordinator::start(
+            factories,
+            CoordinatorConfig { workers, queue_depth: 256 },
+        )?);
+        let n = 400usize;
+        let clients = 4usize;
+        let t0 = std::time::Instant::now();
+        let mut handles = Vec::new();
+        for cid in 0..clients {
+            let coord = coord.clone();
+            let samples: Vec<Vec<u8>> = (0..n / clients)
+                .map(|i| {
+                    let j = cid * (n / clients) + i;
+                    pool.sample(j % pool.classes, j % pool.samples_per_class).to_vec()
+                })
+                .collect();
+            handles.push(std::thread::spawn(move || {
+                let mut ok = 0usize;
+                for x in samples {
+                    if coord.classify(x).is_ok() {
+                        ok += 1;
+                    }
+                }
+                ok
+            }));
+        }
+        let ok: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        let dt = t0.elapsed();
+        let snap = coord.metrics().snapshot();
+        t.rowv(vec![
+            "coordinator (4 workers)".into(),
+            "kws_mfcc classify".into(),
+            fmt_dur(dt / n as u32),
+            format!("p99 {:.1} us", snap.p99_latency_us),
+            format!("{:.0} req/s ({ok}/{n} ok)", n as f64 / dt.as_secs_f64()),
+        ]);
+        // dropping the Arc'd coordinator closes the queue; workers exit
+        drop(coord);
+    }
+
+    t.print();
+    Ok(())
+}

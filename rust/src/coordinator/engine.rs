@@ -1,0 +1,102 @@
+//! Inference-engine abstraction: every serving/learning path runs on one of
+//! three interchangeable engines, all bit-identical on the functional
+//! output (asserted by integration tests):
+//!
+//! * [`Engine::Golden`] — the scalar bit-exact model (fast, no timing);
+//! * [`Engine::Sim`]    — the cycle-level SoC simulator (adds cycle/energy
+//!   traces; the "chip" itself);
+//! * [`Engine::Xla`]    — the PJRT-executed AOT artifact (the Pallas/JAX
+//!   graph; proves the three-layer stack composes).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::golden;
+use crate::model::QuantModel;
+use crate::runtime::XlaModel;
+use crate::sim::{self, ArrayMode, Trace};
+
+/// Output of one forward pass.
+#[derive(Debug, Clone)]
+pub struct Forward {
+    pub embedding: Vec<u8>,
+    pub logits: Option<Vec<i32>>,
+    /// Only the simulator produces timing traces.
+    pub trace: Option<Trace>,
+}
+
+pub enum EngineKind {
+    Golden,
+    Sim(ArrayMode),
+    Xla(XlaModel),
+}
+
+/// A model bound to an execution engine.
+pub struct Engine {
+    pub model: Arc<QuantModel>,
+    pub kind: EngineKind,
+}
+
+impl Engine {
+    pub fn golden(model: Arc<QuantModel>) -> Engine {
+        Engine { model, kind: EngineKind::Golden }
+    }
+
+    pub fn sim(model: Arc<QuantModel>, mode: ArrayMode) -> Engine {
+        Engine { model, kind: EngineKind::Sim(mode) }
+    }
+
+    pub fn xla(model: Arc<QuantModel>, xm: XlaModel) -> Engine {
+        Engine { model, kind: EngineKind::Xla(xm) }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self.kind {
+            EngineKind::Golden => "golden",
+            EngineKind::Sim(_) => "sim",
+            EngineKind::Xla(_) => "xla",
+        }
+    }
+
+    /// One forward pass over a u4 input sequence.
+    pub fn forward(&self, x_q: &[u8]) -> Result<Forward> {
+        match &self.kind {
+            EngineKind::Golden => {
+                let (embedding, logits) = golden::forward(&self.model, x_q)?;
+                Ok(Forward { embedding, logits, trace: None })
+            }
+            EngineKind::Sim(mode) => {
+                let r = sim::simulate_inference(&self.model, *mode, x_q)?;
+                Ok(Forward { embedding: r.embedding, logits: r.logits, trace: Some(r.trace) })
+            }
+            EngineKind::Xla(xm) => {
+                let (embedding, logits) = xm.forward(x_q)?;
+                Ok(Forward { embedding, logits, trace: None })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn golden_and_sim_agree() {
+        let m = Arc::new(crate::model::tests::tiny_model());
+        let g = Engine::golden(m.clone());
+        let s = Engine::sim(m.clone(), ArrayMode::M16x16);
+        let mut rng = Rng::new(8);
+        for _ in 0..5 {
+            let x: Vec<u8> = (0..m.seq_len * m.in_channels)
+                .map(|_| rng.range(0, 16) as u8)
+                .collect();
+            let a = g.forward(&x).unwrap();
+            let b = s.forward(&x).unwrap();
+            assert_eq!(a.embedding, b.embedding);
+            assert!(b.trace.is_some());
+        }
+    }
+}

@@ -1,0 +1,103 @@
+//! Serving metrics: latency histogram, throughput, queue depth, per-class
+//! counts — what the test harness records while driving the chip.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::stats;
+
+/// Thread-safe metrics sink shared between workers and the reporter.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub completed: AtomicU64,
+    pub errors: AtomicU64,
+    pub rejected: AtomicU64,
+    pub learn_ways: AtomicU64,
+    latencies_us: Mutex<Vec<f64>>,
+    sim_cycles: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    pub fn record_latency(&self, d: Duration) {
+        self.latencies_us.lock().unwrap().push(d.as_secs_f64() * 1e6);
+        self.completed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_cycles(&self, cycles: u64) {
+        self.sim_cycles.fetch_add(cycles, Ordering::Relaxed);
+    }
+
+    pub fn total_sim_cycles(&self) -> u64 {
+        self.sim_cycles.load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let lat = self.latencies_us.lock().unwrap().clone();
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            learn_ways: self.learn_ways.load(Ordering::Relaxed),
+            mean_latency_us: stats::mean(&lat),
+            p50_latency_us: stats::percentile(&lat, 50.0),
+            p99_latency_us: stats::percentile(&lat, 99.0),
+            sim_cycles: self.total_sim_cycles(),
+        }
+    }
+}
+
+/// Point-in-time copy for reporting.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub completed: u64,
+    pub errors: u64,
+    pub rejected: u64,
+    pub learn_ways: u64,
+    pub mean_latency_us: f64,
+    pub p50_latency_us: f64,
+    pub p99_latency_us: f64,
+    pub sim_cycles: u64,
+}
+
+impl MetricsSnapshot {
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} completed={} errors={} rejected={} learned_ways={} \
+             latency mean={:.1}us p50={:.1}us p99={:.1}us sim_cycles={}",
+            self.requests,
+            self.completed,
+            self.errors,
+            self.rejected,
+            self.learn_ways,
+            self.mean_latency_us,
+            self.p50_latency_us,
+            self.p99_latency_us,
+            self.sim_cycles,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_percentiles() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.record_latency(Duration::from_micros(i));
+        }
+        let s = m.snapshot();
+        assert_eq!(s.completed, 100);
+        assert!(s.p50_latency_us >= 49.0 && s.p50_latency_us <= 52.0);
+        assert!(s.p99_latency_us >= 98.0);
+    }
+}

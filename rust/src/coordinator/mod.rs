@@ -1,0 +1,17 @@
+//! L3 coordinator: streaming serving + on-device learning orchestration.
+//!
+//! The paper's system contribution is the *chip*; this layer is the host
+//! runtime a deployment would actually use (and the role the ZCU104 FPGA
+//! plays in the paper's measurement setup): engine replicas behind a
+//! bounded work queue, session-scoped prototypical heads for FSL/CL,
+//! latency/throughput metrics, and an audio windower for streaming KWS.
+
+pub mod engine;
+pub mod metrics;
+pub mod server;
+pub mod streaming;
+
+pub use engine::{Engine, EngineKind, Forward};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use server::{Coordinator, CoordinatorConfig, Request, Response, SessionId};
+pub use streaming::AudioWindower;

@@ -1,0 +1,416 @@
+//! The streaming coordinator: the rust event loop that drives the chip.
+//!
+//! Plays the role of the paper's FPGA test harness *and* of a deployment
+//! host: it owns worker threads bound to engine replicas, routes classify /
+//! learn requests through a bounded queue (backpressure = reject when
+//! full), keeps per-session prototypical heads for on-device FSL/CL, and
+//! records serving metrics. Learning requests are serialized per session;
+//! classification fans out across workers.
+
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::engine::Engine;
+use crate::coordinator::metrics::Metrics;
+use crate::protonet::ProtoHead;
+use crate::sim::learning::learning_cycles;
+
+/// A classification / learning request.
+pub enum Request {
+    /// Classify with the model's built-in head (KWS).
+    Classify { input: Vec<u8>, reply: mpsc::Sender<Result<Response>> },
+    /// Embed + classify against a session's learned prototypical head.
+    ClassifySession { session: SessionId, input: Vec<u8>, reply: mpsc::Sender<Result<Response>> },
+    /// Learn one new way for a session from k support sequences.
+    LearnWay { session: SessionId, shots: Vec<Vec<u8>>, reply: mpsc::Sender<Result<Response>> },
+}
+
+pub type SessionId = u64;
+
+/// Reply payload.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub predicted: Option<usize>,
+    pub logits: Option<Vec<i32>>,
+    pub learned_way: Option<usize>,
+    pub sim_cycles: Option<u64>,
+}
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    pub workers: usize,
+    /// Bounded queue depth; submissions beyond this are rejected
+    /// (backpressure toward the stimulus source).
+    pub queue_depth: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig { workers: 2, queue_depth: 256 }
+    }
+}
+
+struct Shared {
+    sessions: Mutex<HashMap<SessionId, ProtoHead>>,
+    metrics: Arc<Metrics>,
+    embed_dim: usize,
+}
+
+/// The coordinator handle. Dropping it shuts the workers down.
+pub struct Coordinator {
+    tx: mpsc::SyncSender<Request>,
+    workers: Vec<JoinHandle<()>>,
+    shared: Arc<Shared>,
+}
+
+/// Engines are constructed *inside* their worker thread: the PJRT handles
+/// of the XLA engine are not `Send` (internal `Rc`s + raw pointers), so
+/// each worker owns an independent engine instance end to end.
+pub type EngineFactory = Box<dyn FnOnce() -> Result<Engine> + Send>;
+
+impl Coordinator {
+    /// Spawn worker threads, each constructing + owning one engine replica.
+    pub fn start(factories: Vec<EngineFactory>, cfg: CoordinatorConfig) -> Result<Coordinator> {
+        if factories.is_empty() {
+            bail!("need at least one engine factory");
+        }
+        let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_depth);
+        let rx = Arc::new(Mutex::new(rx));
+        let (dim_tx, dim_rx) = mpsc::channel::<Result<usize>>();
+        let shared_cell: Arc<Mutex<Option<Arc<Shared>>>> = Arc::new(Mutex::new(None));
+        let mut workers = Vec::new();
+        for (wid, factory) in factories.into_iter().enumerate() {
+            let rx = rx.clone();
+            let dim_tx = dim_tx.clone();
+            let shared_cell = shared_cell.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("chameleon-worker-{wid}"))
+                    .spawn(move || {
+                        let engine = match factory() {
+                            Ok(e) => {
+                                let _ = dim_tx.send(Ok(e.model.embed_dim));
+                                e
+                            }
+                            Err(e) => {
+                                let _ = dim_tx.send(Err(e));
+                                return;
+                            }
+                        };
+                        // Wait until the shared state is published.
+                        let shared = loop {
+                            if let Some(s) = shared_cell.lock().unwrap().clone() {
+                                break s;
+                            }
+                            std::thread::yield_now();
+                        };
+                        worker_loop(engine, rx, shared)
+                    })
+                    .map_err(|e| anyhow!("spawning worker: {e}"))?,
+            );
+        }
+        drop(dim_tx);
+        // First successful engine defines the embedding dimension.
+        let embed_dim = dim_rx
+            .recv()
+            .map_err(|e| anyhow!("no worker came up: {e}"))??;
+        let shared = Arc::new(Shared {
+            sessions: Mutex::new(HashMap::new()),
+            metrics: Arc::new(Metrics::new()),
+            embed_dim,
+        });
+        *shared_cell.lock().unwrap() = Some(shared.clone());
+        Ok(Coordinator { tx, workers, shared })
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.shared.metrics.clone()
+    }
+
+    /// Submit a request; `Err` when the queue is full (backpressure).
+    pub fn submit(&self, req: Request) -> Result<()> {
+        self.shared.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        self.tx.try_send(req).map_err(|e| {
+            self.shared.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            anyhow!("queue full or closed: {e}")
+        })
+    }
+
+    /// Blocking convenience: classify with the built-in head.
+    pub fn classify(&self, input: Vec<u8>) -> Result<Response> {
+        let (rtx, rrx) = mpsc::channel();
+        self.submit(Request::Classify { input, reply: rtx })?;
+        rrx.recv().map_err(|e| anyhow!("worker gone: {e}"))?
+    }
+
+    /// Blocking convenience: session classify.
+    pub fn classify_session(&self, session: SessionId, input: Vec<u8>) -> Result<Response> {
+        let (rtx, rrx) = mpsc::channel();
+        self.submit(Request::ClassifySession { session, input, reply: rtx })?;
+        rrx.recv().map_err(|e| anyhow!("worker gone: {e}"))?
+    }
+
+    /// Blocking convenience: learn one way.
+    pub fn learn_way(&self, session: SessionId, shots: Vec<Vec<u8>>) -> Result<Response> {
+        let (rtx, rrx) = mpsc::channel();
+        self.submit(Request::LearnWay { session, shots, reply: rtx })?;
+        rrx.recv().map_err(|e| anyhow!("worker gone: {e}"))?
+    }
+
+    /// Number of ways a session has learned so far.
+    pub fn session_ways(&self, session: SessionId) -> usize {
+        self.shared
+            .sessions
+            .lock()
+            .unwrap()
+            .get(&session)
+            .map_or(0, |h| h.n_ways())
+    }
+
+    /// Graceful shutdown: close the queue and join the workers.
+    pub fn shutdown(mut self) {
+        drop(self.tx);
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(engine: Engine, rx: Arc<Mutex<mpsc::Receiver<Request>>>, shared: Arc<Shared>) {
+    loop {
+        // Hold the lock only while receiving (work-stealing from one queue).
+        let req = match rx.lock().unwrap().recv() {
+            Ok(r) => r,
+            Err(_) => return, // queue closed
+        };
+        let start = Instant::now();
+        // Metrics are recorded *before* the reply is sent so a caller that
+        // snapshots right after recv() observes its own request.
+        match req {
+            Request::Classify { input, reply } => {
+                let res = handle_classify(&engine, &input, &shared);
+                shared.metrics.record_latency(start.elapsed());
+                let _ = reply.send(res);
+            }
+            Request::ClassifySession { session, input, reply } => {
+                let res = handle_classify_session(&engine, session, &input, &shared);
+                shared.metrics.record_latency(start.elapsed());
+                let _ = reply.send(res);
+            }
+            Request::LearnWay { session, shots, reply } => {
+                let res = handle_learn(&engine, session, &shots, &shared);
+                shared.metrics.record_latency(start.elapsed());
+                let _ = reply.send(res);
+            }
+        }
+    }
+}
+
+fn handle_classify(engine: &Engine, input: &[u8], shared: &Shared) -> Result<Response> {
+    let fwd = engine.forward(input).inspect_err(|_| {
+        shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+    })?;
+    let cycles = fwd.trace.as_ref().map(|t| t.total_cycles());
+    if let Some(c) = cycles {
+        shared.metrics.record_cycles(c);
+    }
+    let logits = fwd
+        .logits
+        .ok_or_else(|| anyhow!("model has no built-in head; use a session"))?;
+    Ok(Response {
+        predicted: Some(crate::golden::argmax(&logits)),
+        logits: Some(logits),
+        learned_way: None,
+        sim_cycles: cycles,
+    })
+}
+
+fn handle_classify_session(
+    engine: &Engine,
+    session: SessionId,
+    input: &[u8],
+    shared: &Shared,
+) -> Result<Response> {
+    let fwd = engine.forward(input)?;
+    let cycles = fwd.trace.as_ref().map(|t| t.total_cycles());
+    if let Some(c) = cycles {
+        shared.metrics.record_cycles(c);
+    }
+    let sessions = shared.sessions.lock().unwrap();
+    let head = sessions
+        .get(&session)
+        .ok_or_else(|| anyhow!("unknown session {session} (learn first)"))?;
+    if head.n_ways() == 0 {
+        bail!("session {session} has no learned ways");
+    }
+    let logits = head.logits(&fwd.embedding);
+    Ok(Response {
+        predicted: Some(crate::golden::argmax(&logits)),
+        logits: Some(logits),
+        learned_way: None,
+        sim_cycles: cycles,
+    })
+}
+
+fn handle_learn(
+    engine: &Engine,
+    session: SessionId,
+    shots: &[Vec<u8>],
+    shared: &Shared,
+) -> Result<Response> {
+    if shots.is_empty() {
+        bail!("learning a way requires at least one shot");
+    }
+    // Step 1: embed every shot on the engine.
+    let mut embs = Vec::with_capacity(shots.len());
+    let mut cycles = 0u64;
+    for s in shots {
+        let fwd = engine.forward(s)?;
+        if let Some(t) = &fwd.trace {
+            cycles += t.total_cycles();
+        }
+        embs.push(fwd.embedding);
+    }
+    // Steps 2+3: prototype extraction (closed-form cycle cost).
+    cycles += learning_cycles(shots.len(), shared.embed_dim);
+    shared.metrics.record_cycles(cycles);
+    // Serialize the head update per session.
+    let mut sessions = shared.sessions.lock().unwrap();
+    let head = sessions
+        .entry(session)
+        .or_insert_with(|| ProtoHead::new(shared.embed_dim));
+    head.learn_way(&embs);
+    shared.metrics.learn_ways.fetch_add(1, Ordering::Relaxed);
+    Ok(Response {
+        predicted: None,
+        logits: None,
+        learned_way: Some(head.n_ways() - 1),
+        sim_cycles: Some(cycles),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::Engine;
+    use crate::sim::ArrayMode;
+    use crate::util::rng::Rng;
+    use std::sync::Arc as SArc;
+
+    fn mk_coord(workers: usize) -> (Coordinator, SArc<crate::model::QuantModel>) {
+        let m = SArc::new(crate::model::tests::tiny_model());
+        let engines: Vec<EngineFactory> = (0..workers)
+            .map(|i| {
+                let m = m.clone();
+                Box::new(move || {
+                    Ok(if i % 2 == 0 {
+                        Engine::golden(m)
+                    } else {
+                        Engine::sim(m, ArrayMode::M16x16)
+                    })
+                }) as EngineFactory
+            })
+            .collect();
+        let c = Coordinator::start(engines, CoordinatorConfig { workers, queue_depth: 64 }).unwrap();
+        (c, m)
+    }
+
+    fn rand_seq(m: &crate::model::QuantModel, rng: &mut Rng, lo: u8, hi: u8) -> Vec<u8> {
+        (0..m.seq_len * m.in_channels)
+            .map(|_| rng.range(lo as i64, hi as i64) as u8)
+            .collect()
+    }
+
+    #[test]
+    fn learn_then_classify_session() {
+        let (c, m) = mk_coord(2);
+        let mut rng = Rng::new(1);
+        let a: Vec<Vec<u8>> = (0..3).map(|_| rand_seq(&m, &mut rng, 0, 3)).collect();
+        let b: Vec<Vec<u8>> = (0..3).map(|_| rand_seq(&m, &mut rng, 13, 16)).collect();
+        let r = c.learn_way(7, a).unwrap();
+        assert_eq!(r.learned_way, Some(0));
+        let r = c.learn_way(7, b).unwrap();
+        assert_eq!(r.learned_way, Some(1));
+        assert_eq!(c.session_ways(7), 2);
+        let q = rand_seq(&m, &mut rng, 0, 3);
+        let r = c.classify_session(7, q).unwrap();
+        assert_eq!(r.predicted, Some(0));
+        let q = rand_seq(&m, &mut rng, 13, 16);
+        let r = c.classify_session(7, q).unwrap();
+        assert_eq!(r.predicted, Some(1));
+        let snap = c.metrics().snapshot();
+        assert_eq!(snap.learn_ways, 2);
+        assert!(snap.completed >= 4);
+        c.shutdown();
+    }
+
+    #[test]
+    fn classify_without_head_errors() {
+        let (c, m) = mk_coord(1);
+        let mut rng = Rng::new(2);
+        let q = rand_seq(&m, &mut rng, 0, 16);
+        assert!(c.classify(q).is_err()); // tiny model has no built-in head
+        assert!(c.classify_session(99, rand_seq(&m, &mut rng, 0, 16)).is_err());
+        c.shutdown();
+    }
+
+    #[test]
+    fn concurrent_classification() {
+        let (c, m) = mk_coord(4);
+        let mut rng = Rng::new(3);
+        let shots: Vec<Vec<u8>> = (0..2).map(|_| rand_seq(&m, &mut rng, 0, 16)).collect();
+        c.learn_way(1, shots).unwrap();
+        // Fan out many session classifications via raw submits.
+        let mut replies = Vec::new();
+        for _ in 0..32 {
+            let (rtx, rrx) = mpsc::channel();
+            c.submit(Request::ClassifySession {
+                session: 1,
+                input: rand_seq(&m, &mut rng, 0, 16),
+                reply: rtx,
+            })
+            .unwrap();
+            replies.push(rrx);
+        }
+        for r in replies {
+            let resp = r.recv().unwrap().unwrap();
+            assert_eq!(resp.predicted, Some(0)); // single way
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        // One slow worker + tiny queue: flooding must produce rejections.
+        let m = SArc::new(crate::model::tests::tiny_model());
+        let mf = m.clone();
+        let c = Coordinator::start(
+            vec![Box::new(move || Ok(Engine::sim(mf, ArrayMode::M4x4))) as EngineFactory],
+            CoordinatorConfig { workers: 1, queue_depth: 2 },
+        )
+        .unwrap();
+        let mut rng = Rng::new(4);
+        let mut rejected = 0;
+        let mut receivers = Vec::new();
+        for _ in 0..64 {
+            let (rtx, rrx) = mpsc::channel();
+            match c.submit(Request::ClassifySession {
+                session: 0,
+                input: rand_seq(&m, &mut rng, 0, 16),
+                reply: rtx,
+            }) {
+                Ok(()) => receivers.push(rrx),
+                Err(_) => rejected += 1,
+            }
+        }
+        assert!(rejected > 0, "expected backpressure rejections");
+        drop(receivers);
+        c.shutdown();
+    }
+}

@@ -1,0 +1,68 @@
+//! Streaming audio front-end: chops an unbounded u4 sample stream into
+//! model-sized windows (1 s for KWS) with configurable hop, mirroring the
+//! chip's 0.25 kB asynchronous input buffer + windowed real-time operation.
+
+/// Sliding-window segmenter over a u4 stream.
+pub struct AudioWindower {
+    window: usize,
+    hop: usize,
+    channels: usize,
+    buf: Vec<u8>,
+}
+
+impl AudioWindower {
+    pub fn new(window: usize, hop: usize, channels: usize) -> Self {
+        assert!(hop > 0 && window > 0);
+        AudioWindower { window, hop, channels, buf: Vec::new() }
+    }
+
+    /// Feed samples ([T][C] u4 codes); returns every complete window that
+    /// became available.
+    pub fn push(&mut self, samples: &[u8]) -> Vec<Vec<u8>> {
+        debug_assert_eq!(samples.len() % self.channels, 0);
+        self.buf.extend_from_slice(samples);
+        let mut out = Vec::new();
+        let w = self.window * self.channels;
+        let h = self.hop * self.channels;
+        while self.buf.len() >= w {
+            out.push(self.buf[..w].to_vec());
+            self.buf.drain(..h.min(self.buf.len()));
+        }
+        out
+    }
+
+    /// Timesteps currently buffered.
+    pub fn pending(&self) -> usize {
+        self.buf.len() / self.channels
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emits_windows_with_hop() {
+        let mut w = AudioWindower::new(4, 2, 1);
+        assert!(w.push(&[1, 2, 3]).is_empty());
+        let ws = w.push(&[4, 5, 6, 7, 8]);
+        // stream = 1..8; windows: [1,2,3,4], [3,4,5,6], [5,6,7,8]
+        assert_eq!(ws, vec![vec![1, 2, 3, 4], vec![3, 4, 5, 6], vec![5, 6, 7, 8]]);
+        assert_eq!(w.pending(), 2); // [7, 8]
+    }
+
+    #[test]
+    fn multichannel_windows() {
+        let mut w = AudioWindower::new(2, 2, 2);
+        let ws = w.push(&[1, 1, 2, 2, 3, 3, 4, 4]);
+        assert_eq!(ws, vec![vec![1, 1, 2, 2], vec![3, 3, 4, 4]]);
+    }
+
+    #[test]
+    fn non_overlapping_when_hop_equals_window() {
+        let mut w = AudioWindower::new(3, 3, 1);
+        let ws = w.push(&[0, 1, 2, 3, 4, 5, 6]);
+        assert_eq!(ws.len(), 2);
+        assert_eq!(w.pending(), 1);
+    }
+}

@@ -1,0 +1,165 @@
+//! Evaluation-dataset loading: the hex-packed u4 sequence pools exported by
+//! `python/compile/export_eval.py` (synthetic Omniglot meta-test classes and
+//! the synthetic speech-commands test split).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json;
+use crate::util::rng::Rng;
+
+/// A pool of labelled u4 sequences: `samples_per_class` sequences for each
+/// of `classes` classes, each `[seq_len][in_channels]` row-major.
+#[derive(Debug, Clone)]
+pub struct EvalPool {
+    pub name: String,
+    pub seq_len: usize,
+    pub in_channels: usize,
+    pub classes: usize,
+    pub samples_per_class: usize,
+    pub in_shift: i32,
+    pub class_names: Option<Vec<String>>,
+    /// All sequences, `[class * samples_per_class + sample]`.
+    data: Vec<Vec<u8>>,
+}
+
+impl EvalPool {
+    pub fn load(path: &Path) -> Result<EvalPool> {
+        let v = json::parse_file(path)?;
+        let seq_len = v.req("seq_len")?.as_usize()?;
+        let in_channels = v.req("in_channels")?.as_usize()?;
+        let classes = v.req("classes")?.as_usize()?;
+        let samples_per_class = v.req("samples_per_class")?.as_usize()?;
+        let entries = v.req("data")?.as_arr()?;
+        if entries.len() != classes * samples_per_class {
+            bail!(
+                "expected {} sequences, got {}",
+                classes * samples_per_class,
+                entries.len()
+            );
+        }
+        let expect_len = seq_len * in_channels;
+        let data = entries
+            .iter()
+            .map(|e| unpack_hex(e.as_str()?, expect_len))
+            .collect::<Result<Vec<_>>>()
+            .with_context(|| format!("unpacking {}", path.display()))?;
+        Ok(EvalPool {
+            name: v.req("name")?.as_str()?.to_string(),
+            seq_len,
+            in_channels,
+            classes,
+            samples_per_class,
+            in_shift: v.req("in_shift")?.as_i64()? as i32,
+            class_names: match v.get_nonnull("class_names") {
+                Some(ns) => Some(
+                    ns.as_arr()?
+                        .iter()
+                        .map(|n| Ok(n.as_str()?.to_string()))
+                        .collect::<Result<Vec<_>>>()?,
+                ),
+                None => None,
+            },
+            data,
+        })
+    }
+
+    pub fn sample(&self, class: usize, idx: usize) -> &[u8] {
+        &self.data[class * self.samples_per_class + idx]
+    }
+
+    /// Sample an FSL episode: `n_way` distinct classes, `k_shot` support and
+    /// `n_query` query samples each (disjoint). Returns
+    /// `(class_ids, support[way][shot], query[way][q])` as slices.
+    #[allow(clippy::type_complexity)]
+    pub fn episode(
+        &self,
+        rng: &mut Rng,
+        n_way: usize,
+        k_shot: usize,
+        n_query: usize,
+    ) -> (Vec<usize>, Vec<Vec<&[u8]>>, Vec<Vec<&[u8]>>) {
+        assert!(
+            k_shot + n_query <= self.samples_per_class,
+            "k+q exceeds pool depth"
+        );
+        let classes = rng.choose_distinct(self.classes, n_way);
+        let mut sup = Vec::with_capacity(n_way);
+        let mut qry = Vec::with_capacity(n_way);
+        for &c in &classes {
+            let ids = rng.choose_distinct(self.samples_per_class, k_shot + n_query);
+            sup.push(ids[..k_shot].iter().map(|&i| self.sample(c, i)).collect());
+            qry.push(ids[k_shot..].iter().map(|&i| self.sample(c, i)).collect());
+        }
+        (classes, sup, qry)
+    }
+}
+
+fn unpack_hex(s: &str, expect_len: usize) -> Result<Vec<u8>> {
+    if s.len() != expect_len {
+        bail!("sequence length {} != expected {}", s.len(), expect_len);
+    }
+    s.bytes()
+        .map(|b| match b {
+            b'0'..=b'9' => Ok(b - b'0'),
+            b'a'..=b'f' => Ok(b - b'a' + 10),
+            _ => bail!("bad hex digit {:?}", b as char),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unpack_hex_roundtrip() {
+        let v = unpack_hex("0f3a", 4).unwrap();
+        assert_eq!(v, vec![0, 15, 3, 10]);
+        assert!(unpack_hex("0f", 4).is_err());
+        assert!(unpack_hex("zz", 2).is_err());
+    }
+
+    fn tiny_pool() -> EvalPool {
+        // 3 classes x 4 samples of [2][1] sequences.
+        let data = (0..12u8).map(|i| vec![i % 16, (i + 1) % 16]).collect();
+        EvalPool {
+            name: "t".into(),
+            seq_len: 2,
+            in_channels: 1,
+            classes: 3,
+            samples_per_class: 4,
+            in_shift: 0,
+            class_names: None,
+            data,
+        }
+    }
+
+    #[test]
+    fn episode_disjoint_support_query() {
+        let pool = tiny_pool();
+        let mut rng = Rng::new(5);
+        for _ in 0..50 {
+            let (classes, sup, qry) = pool.episode(&mut rng, 2, 2, 2);
+            assert_eq!(classes.len(), 2);
+            for w in 0..2 {
+                for s in &sup[w] {
+                    for q in &qry[w] {
+                        assert!(
+                            s.as_ptr() != q.as_ptr(),
+                            "support and query share a sample"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sample_indexing() {
+        let pool = tiny_pool();
+        assert_eq!(pool.sample(1, 0), &[4, 5]);
+        assert_eq!(pool.sample(2, 3), &[11, 12]);
+    }
+}

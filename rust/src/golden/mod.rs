@@ -1,0 +1,492 @@
+//! Golden bit-exact functional model of the Chameleon datapath.
+//!
+//! Executes the integer TCN + PN-FC exactly as the chip (and the python
+//! oracle / Pallas kernels) would, with the 18-bit accumulator saturating
+//! after every 16-element slab of the flattened `(tap, cin)` reduction
+//! axis — the order imposed by one 16x16 PE-array pass per cycle.
+//!
+//! Used as: the reference for the cycle simulator (which must produce
+//! identical activations), the fast inference engine for the FSL/CL
+//! benches, and the cross-check target for the exported python vectors.
+
+use anyhow::{bail, Result};
+
+use crate::model::{QLayer, QuantModel};
+use crate::quant;
+
+/// Activations are u4 codes stored one per byte, `[T][C]` row-major.
+pub type Acts = Vec<u8>;
+
+/// Dilated causal conv1d over the full layer, bit-exact chip datapath.
+///
+/// `x`: `[t_len][c_in]` u4; `residual`: optional `[t_len][c_out]` u4 merged
+/// at the OPE with the layer's signed `res_shift`.
+/// Returns `[t_len][c_out]` u4 when `layer.relu`, else saturated logits
+/// widened into `i32` (use [`conv_layer_raw`] for that case).
+///
+/// §Perf: the hot path runs slab-major (16 flat `(tap, cin)` elements per
+/// slab, vectorizable over `c_out` with contiguous weight rows) over
+/// pre-decoded integer weights; `CHAMELEON_GOLDEN=naive` selects the
+/// original scalar per-output loop for before/after comparison — both are
+/// bit-identical (asserted by `fast_equals_naive` below).
+pub fn conv_layer(x: &[u8], t_len: usize, layer: &QLayer, residual: Option<&[u8]>) -> Acts {
+    debug_assert!(layer.relu, "use conv_layer_raw for non-ReLU layers");
+    if use_naive() {
+        return conv_layer_naive(x, t_len, layer, residual);
+    }
+    let cin = layer.c_in();
+    let cout = layer.c_out();
+    let decoded = decode_codes(&layer.codes);
+    let mut out = vec![0u8; t_len * cout];
+    let mut acc = vec![0i32; cout];
+    let mut partial = vec![0i32; cout];
+    for t in 0..t_len {
+        accumulate_row(x, cin, layer, &decoded, t, &mut acc, &mut partial);
+        let rs = layer.res_shift.unwrap_or(0);
+        for co in 0..cout {
+            let res = residual.map_or(0, |r| r[t * cout + co] as i32);
+            let (res, rs) = apply_signed_res(res, rs);
+            out[t * cout + co] =
+                quant::ope(acc[co], layer.bias[co], layer.out_shift, true, res, rs) as u8;
+        }
+    }
+    out
+}
+
+fn use_naive() -> bool {
+    static NAIVE: once_cell::sync::Lazy<bool> = once_cell::sync::Lazy::new(|| {
+        std::env::var("CHAMELEON_GOLDEN").map(|v| v == "naive").unwrap_or(false)
+    });
+    *NAIVE
+}
+
+/// Pre-decoded weight values (i32), same layout as the codes.
+fn decode_codes(codes: &[i8]) -> Vec<i32> {
+    codes.iter().map(|&c| quant::log2_decode(c)).collect()
+}
+
+/// Slab-major accumulation of one output row (all `c_out` channels of
+/// timestep `t`): for each 16-element slab of the flattened `(tap, cin)`
+/// axis, the partial products are accumulated contiguously over `c_out`
+/// (auto-vectorizes), then saturated into `acc` — identical slab order and
+/// saturation points as the scalar path.
+#[inline]
+fn accumulate_row(
+    x: &[u8],
+    cin: usize,
+    layer: &QLayer,
+    decoded: &[i32],
+    t: usize,
+    acc: &mut [i32],
+    partial: &mut [i32],
+) {
+    let k = layer.kernel_size();
+    let d = layer.dilation;
+    let cout = acc.len();
+    acc.fill(0);
+    partial.fill(0);
+    let mut slab = 0usize;
+    for tap in 0..k {
+        let offset = (k - 1 - tap) * d;
+        let (row, in_range) = if t >= offset { (t - offset, true) } else { (0, false) };
+        for ci in 0..cin {
+            if in_range {
+                let a = x[row * cin + ci] as i32;
+                if a != 0 {
+                    let wrow = &decoded[(tap * cin + ci) * cout..(tap * cin + ci + 1) * cout];
+                    for (p, &w) in partial.iter_mut().zip(wrow) {
+                        *p += a * w;
+                    }
+                }
+            }
+            slab += 1;
+            if slab == 16 {
+                for (a, p) in acc.iter_mut().zip(partial.iter_mut()) {
+                    *a = quant::sat_acc(*a + *p);
+                    *p = 0;
+                }
+                slab = 0;
+            }
+        }
+    }
+    if slab != 0 {
+        for (a, p) in acc.iter_mut().zip(partial.iter_mut()) {
+            *a = quant::sat_acc(*a + *p);
+        }
+    }
+}
+
+/// Original scalar implementation (kept for §Perf before/after and as a
+/// second implementation the property tests cross-check).
+pub fn conv_layer_naive(x: &[u8], t_len: usize, layer: &QLayer, residual: Option<&[u8]>) -> Acts {
+    let cin = layer.c_in();
+    let cout = layer.c_out();
+    let mut out = vec![0u8; t_len * cout];
+    for t in 0..t_len {
+        for co in 0..cout {
+            let acc = accumulate(x, t_len, cin, layer, t, co);
+            let res = residual.map_or(0, |r| r[t * cout + co] as i32);
+            let (res, rs) = apply_signed_res(res, layer.res_shift.unwrap_or(0));
+            let y = quant::ope(acc, layer.bias[co], layer.out_shift, true, res, rs);
+            out[t * cout + co] = y as u8;
+        }
+    }
+    out
+}
+
+/// Non-ReLU variant returning raw saturated accumulator values.
+pub fn conv_layer_raw(x: &[u8], t_len: usize, layer: &QLayer, residual: Option<&[u8]>) -> Vec<i32> {
+    let cin = layer.c_in();
+    let cout = layer.c_out();
+    let mut out = vec![0i32; t_len * cout];
+    for t in 0..t_len {
+        for co in 0..cout {
+            let acc = accumulate(x, t_len, cin, layer, t, co);
+            let res = residual.map_or(0, |r| r[t * cout + co] as i32);
+            let (res, rs) = apply_signed_res(res, layer.res_shift.unwrap_or(0));
+            out[t * cout + co] = quant::ope(acc, layer.bias[co], layer.out_shift, false, res, rs);
+        }
+    }
+    out
+}
+
+/// Negative residual shifts are applied as a floor right-shift *before*
+/// the OPE merge (canonical semantics shared with python).
+#[inline]
+fn apply_signed_res(res: i32, rs: i32) -> (i32, i32) {
+    if rs < 0 {
+        (res >> (-rs), 0)
+    } else {
+        (res, rs)
+    }
+}
+
+/// The PE-array reduction for one output `(t, co)`: products over the
+/// flattened `(tap, cin)` axis in 16-element slabs, saturating after each.
+#[inline]
+fn accumulate(x: &[u8], t_len: usize, cin: usize, layer: &QLayer, t: usize, co: usize) -> i32 {
+    let k = layer.kernel_size();
+    let d = layer.dilation;
+    let cout = layer.c_out();
+    let mut acc: i32 = 0;
+    let mut partial: i32 = 0;
+    let mut slab: usize = 0;
+    for tap in 0..k {
+        // Causal tap: tap j reads x[t - (k-1-j)*d]; out-of-range -> zero.
+        let offset = (k - 1 - tap) * d;
+        let (row, in_range) = if t >= offset { (t - offset, true) } else { (0, false) };
+        for ci in 0..cin {
+            if in_range {
+                let a = x[row * cin + ci] as i32;
+                let w = layer.codes[(tap * cin + ci) * cout + co];
+                partial += quant::shift_product(a, w);
+            }
+            slab += 1;
+            if slab == 16 {
+                acc = quant::sat_acc(acc + partial);
+                partial = 0;
+                slab = 0;
+            }
+        }
+        let _ = t_len;
+    }
+    if slab != 0 {
+        acc = quant::sat_acc(acc + partial);
+    }
+    acc
+}
+
+/// FC over a single u4 vector (embedding / prototypical head):
+/// `logits = sat(sat-slab-matmul(x, codes) + bias)`, no ReLU / requant.
+pub fn fc_logits(x: &[u8], codes: &[i8], cin: usize, cout: usize, bias: &[i32]) -> Vec<i32> {
+    let mut out = vec![0i32; cout];
+    for (co, o) in out.iter_mut().enumerate() {
+        let mut acc = 0i32;
+        let mut partial = 0i32;
+        for (ci, &a) in x.iter().enumerate().take(cin) {
+            partial += quant::shift_product(a as i32, codes[ci * cout + co]);
+            if ci % 16 == 15 {
+                acc = quant::sat_acc(acc + partial);
+                partial = 0;
+            }
+        }
+        if cin % 16 != 0 {
+            acc = quant::sat_acc(acc + partial);
+        }
+        *o = quant::sat_acc(acc + quant::sat_bias(bias[co]));
+    }
+    out
+}
+
+/// Full forward to the u4 embedding, with optional per-layer checksums.
+pub fn embed(model: &QuantModel, x_q: &[u8]) -> Result<Acts> {
+    embed_traced(model, x_q, &mut None)
+}
+
+/// Per-layer activation-sum checksums (matches python `layer_output_sums`).
+pub fn layer_sums(model: &QuantModel, x_q: &[u8]) -> Result<Vec<i64>> {
+    let mut sums = Some(Vec::new());
+    embed_traced(model, x_q, &mut sums)?;
+    Ok(sums.unwrap())
+}
+
+fn embed_traced(model: &QuantModel, x_q: &[u8], sums: &mut Option<Vec<i64>>) -> Result<Acts> {
+    let t_len = model.seq_len;
+    if x_q.len() != t_len * model.in_channels {
+        bail!(
+            "input length {} != seq_len {} * in_channels {}",
+            x_q.len(),
+            t_len,
+            model.in_channels
+        );
+    }
+    let mut h: Acts = x_q.to_vec();
+    for b in 0..model.n_blocks() {
+        let l1 = &model.layers[2 * b];
+        let l2 = &model.layers[2 * b + 1];
+        let blk_in = h.clone();
+        h = conv_layer(&h, t_len, l1, None);
+        if let Some(s) = sums.as_mut() {
+            s.push(h.iter().map(|&v| v as i64).sum());
+        }
+        // Residual path: identity, or the 1x1 conv re-quantized to u4.
+        let res: Acts = match (&l2.res_codes, &l2.res_codes_shape) {
+            (Some(rc), Some(shape)) => {
+                let rl = QLayer {
+                    codes: rc.clone(),
+                    codes_shape: shape.clone(),
+                    bias: l2.res_bias.clone().unwrap(),
+                    out_shift: l2.res_out_shift.unwrap(),
+                    dilation: 1,
+                    relu: true,
+                    res_shift: None,
+                    res_codes: None,
+                    res_codes_shape: None,
+                    res_bias: None,
+                    res_out_shift: None,
+                };
+                conv_layer(&blk_in, t_len, &rl, None)
+            }
+            _ => blk_in,
+        };
+        h = conv_layer(&h, t_len, l2, Some(&res));
+        if let Some(s) = sums.as_mut() {
+            s.push(h.iter().map(|&v| v as i64).sum());
+        }
+    }
+    // Embedding FC over the final timestep (k=1 conv on one row).
+    let c_last = model.embed.c_in();
+    let last = &h[(t_len - 1) * c_last..t_len * c_last];
+    let emb = conv_layer(last, 1, &model.embed, None);
+    Ok(emb)
+}
+
+/// Full forward: embedding + head logits (if the model has a head).
+pub fn forward(model: &QuantModel, x_q: &[u8]) -> Result<(Acts, Option<Vec<i32>>)> {
+    let emb = embed(model, x_q)?;
+    let logits = model.head.as_ref().map(|h| {
+        fc_logits(&emb, &h.codes, h.c_in(), h.c_out(), &h.bias)
+    });
+    Ok((emb, logits))
+}
+
+/// Argmax helper (first max wins, like numpy).
+pub fn argmax(xs: &[i32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::QLayer;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+    use crate::{prop_assert, prop_assert_eq};
+
+    fn layer(k: usize, cin: usize, cout: usize, d: usize, codes: Vec<i8>, bias: Vec<i32>, shift: i32) -> QLayer {
+        QLayer {
+            codes,
+            codes_shape: vec![k, cin, cout],
+            bias,
+            out_shift: shift,
+            dilation: d,
+            relu: true,
+            res_shift: None,
+            res_codes: None,
+            res_codes_shape: None,
+            res_bias: None,
+            res_out_shift: None,
+        }
+    }
+
+    /// Dense reference conv (no slab saturation, i64) for cross-checking on
+    /// small inputs where saturation never triggers.
+    fn naive_conv(x: &[u8], t_len: usize, l: &QLayer) -> Vec<i64> {
+        let (k, cin, cout) = (l.kernel_size(), l.c_in(), l.c_out());
+        let mut out = vec![0i64; t_len * cout];
+        for t in 0..t_len {
+            for co in 0..cout {
+                let mut acc = 0i64;
+                for tap in 0..k {
+                    let off = (k - 1 - tap) * l.dilation;
+                    if t < off {
+                        continue;
+                    }
+                    for ci in 0..cin {
+                        let a = x[(t - off) * cin + ci] as i64;
+                        let w = quant::log2_decode(l.codes[(tap * cin + ci) * cout + co]) as i64;
+                        acc += a * w;
+                    }
+                }
+                out[t * cout + co] = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn conv_matches_naive_when_unsaturated() {
+        prop::check(100, 0x51AB, |rng| {
+            let t_len = rng.range(1, 12) as usize;
+            let cin = rng.range(1, 6) as usize;
+            let cout = rng.range(1, 6) as usize;
+            let k = rng.range(1, 4) as usize;
+            let d = 1 << rng.range(0, 3);
+            let codes: Vec<i8> = (0..k * cin * cout).map(|_| rng.range(-4, 5) as i8).collect();
+            let bias: Vec<i32> = (0..cout).map(|_| rng.range(-50, 50) as i32).collect();
+            let x: Vec<u8> = (0..t_len * cin).map(|_| rng.range(0, 16) as u8).collect();
+            let l = layer(k, cin, cout, d as usize, codes, bias.clone(), 2);
+            let got = conv_layer(&x, t_len, &l, None);
+            let naive = naive_conv(&x, t_len, &l);
+            for t in 0..t_len {
+                for co in 0..cout {
+                    let total = naive[t * cout + co] + bias[co] as i64;
+                    let expect = ((total + 2) >> 2).clamp(0, 15); // rounding shift
+                    prop_assert_eq!(got[t * cout + co] as i64, expect);
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn saturation_slab_order_matters() {
+        // 32 inputs of 15 * weight 64 = 960 each; 16-slab partial = 15360;
+        // after slab 1: acc = 15360; after slab 2: acc = sat(30720) = 30720
+        // (half the unsaturated 18-bit... construct a case that actually
+        // saturates: use 9 slabs -> 138240 > 131071).
+        let cin = 16 * 9;
+        let codes = vec![7i8; cin]; // one output channel
+        let l = layer(1, cin, 1, 1, codes, vec![0], 0);
+        let x = vec![15u8; cin];
+        let raw = conv_layer_raw(&x, 1, &l, None);
+        assert_eq!(raw[0], quant::ACC_MAX); // saturated, not wrapped
+    }
+
+    #[test]
+    fn fc_logits_matches_manual() {
+        let x = [1u8, 2, 3];
+        let codes = vec![1i8, 2, 1, 2, 1, 2]; // [3][2]
+        let logits = fc_logits(&x, &codes, 3, 2, &[10, -10]);
+        // col0: 1*1 + 2*1 + 3*1 = 6 (+10) = 16; col1: 1*2+2*2+3*2 = 12 (-10) = 2
+        assert_eq!(logits, vec![16, 2]);
+    }
+
+    #[test]
+    fn causality() {
+        // Changing a *future* input must not change earlier outputs.
+        prop::check(50, 0xCAFE, |rng| {
+            let t_len = 10;
+            let l = layer(
+                3, 2, 2, 2,
+                (0..12).map(|_| rng.range(-8, 8) as i8).collect(),
+                vec![0, 0], 1,
+            );
+            let mut x: Vec<u8> = (0..t_len * 2).map(|_| rng.range(0, 16) as u8).collect();
+            let before = conv_layer(&x, t_len, &l, None);
+            // mutate the last timestep
+            x[(t_len - 1) * 2] = (x[(t_len - 1) * 2] + 1) % 16;
+            let after = conv_layer(&x, t_len, &l, None);
+            for t in 0..t_len - 1 {
+                for c in 0..2 {
+                    prop_assert_eq!(before[t * 2 + c], after[t * 2 + c]);
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn outputs_are_u4() {
+        prop::check(50, 0xF00D, |rng| {
+            let t_len = 8;
+            let cin = 3;
+            let cout = 3;
+            let l = layer(
+                2, cin, cout, 1,
+                (0..2 * cin * cout).map(|_| rng.range(-8, 8) as i8).collect(),
+                (0..cout).map(|_| rng.range(-8192, 8192) as i32).collect(),
+                rng.range(0, 6) as i32,
+            );
+            let x: Vec<u8> = (0..t_len * cin).map(|_| rng.range(0, 16) as u8).collect();
+            let y = conv_layer(&x, t_len, &l, None);
+            prop_assert!(y.iter().all(|&v| v <= 15), "non-u4 output");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn embed_runs_on_tiny_model() {
+        let m = crate::model::tests::tiny_model();
+        let mut rng = Rng::new(4);
+        let x: Vec<u8> = (0..m.seq_len * m.in_channels).map(|_| rng.range(0, 16) as u8).collect();
+        let emb = embed(&m, &x).unwrap();
+        assert_eq!(emb.len(), m.embed_dim);
+        let sums = layer_sums(&m, &x).unwrap();
+        assert_eq!(sums.len(), m.layers.len());
+    }
+
+    #[test]
+    fn fast_equals_naive() {
+        // The slab-major vectorized path must be bit-identical to the
+        // scalar path on random layers (incl. residuals + odd channel
+        // counts straddling slab boundaries).
+        prop::check(150, 0xFA57, |rng| {
+            let t_len = rng.range(1, 20) as usize;
+            let cin = rng.range(1, 35) as usize;
+            let cout = rng.range(1, 20) as usize;
+            let k = rng.range(1, 5) as usize;
+            let l = QLayer {
+                codes: (0..k * cin * cout).map(|_| rng.range(-8, 8) as i8).collect(),
+                codes_shape: vec![k, cin, cout],
+                bias: (0..cout).map(|_| rng.range(-8192, 8192) as i32).collect(),
+                out_shift: rng.range(0, 8) as i32,
+                dilation: 1 << rng.range(0, 4),
+                relu: true,
+                res_shift: Some(rng.range(-3, 5) as i32),
+                res_codes: None,
+                res_codes_shape: None,
+                res_bias: None,
+                res_out_shift: None,
+            };
+            let x: Vec<u8> = (0..t_len * cin).map(|_| rng.range(0, 16) as u8).collect();
+            let res: Vec<u8> = (0..t_len * cout).map(|_| rng.range(0, 16) as u8).collect();
+            let fast = conv_layer(&x, t_len, &l, Some(&res));
+            let naive = conv_layer_naive(&x, t_len, &l, Some(&res));
+            prop_assert_eq!(fast, naive);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn argmax_first_max_wins() {
+        assert_eq!(argmax(&[1, 5, 5, 2]), 1);
+        assert_eq!(argmax(&[-3]), 0);
+    }
+}

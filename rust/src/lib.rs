@@ -1,0 +1,40 @@
+//! # Chameleon — MatMul-free TCN accelerator for end-to-end FSL/CL
+//!
+//! Rust + JAX + Pallas reproduction of *"Chameleon: A MatMul-Free Temporal
+//! Convolutional Network Accelerator for End-to-End Few-Shot and Continual
+//! Learning from Sequential Data"* (den Blanken & Frenkel, JSSC 2025).
+//!
+//! Layering (see DESIGN.md):
+//! * build time (python, runs once): Pallas shift-add kernels + JAX TCN,
+//!   meta-training, QAT, AOT-lowered to HLO text in `artifacts/`;
+//! * run time (this crate): [`runtime`] executes the lowered graphs via
+//!   PJRT, [`golden`] is the bit-exact functional model, [`sim`] is the
+//!   cycle/power-level SoC simulator implementing the paper's three
+//!   contributions, [`coordinator`] serves streaming inference + on-device
+//!   FSL/CL on top of any of those engines, and [`baselines`] hold the
+//!   prior-work cost models the paper compares against.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod data;
+pub mod expt;
+pub mod golden;
+pub mod model;
+pub mod protonet;
+pub mod quant;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+use std::path::PathBuf;
+
+/// Locate the artifacts directory: `$CHAMELEON_ARTIFACTS` or `./artifacts`
+/// relative to the workspace root.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("CHAMELEON_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let mut d = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    d.push("artifacts");
+    d
+}

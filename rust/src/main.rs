@@ -1,0 +1,328 @@
+//! Chameleon CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   info                         inventory of artifacts + model zoo
+//!   infer   --model NAME [...]   classify eval samples on an engine
+//!   learn   --ways N --shots K   run an on-"chip" FSL episode
+//!   serve   --model NAME         drive the streaming coordinator
+//!   power   [--mode 4|16 ...]    evaluate the calibrated power model
+//!   verify                       cross-check golden/sim/xla vs vectors
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use chameleon::coordinator::{Coordinator, CoordinatorConfig, Engine};
+use chameleon::data::EvalPool;
+use chameleon::model::QuantModel;
+use chameleon::runtime::{Runtime, XlaModel};
+use chameleon::sim::{self, ArrayMode, LearningController, OperatingPoint};
+use chameleon::util::args::Args;
+use chameleon::util::bench::{fmt_dur, fmt_power, Table};
+use chameleon::util::rng::Rng;
+use chameleon::{golden, util::json};
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("info");
+    let res = match cmd {
+        "info" => cmd_info(&args),
+        "infer" => cmd_infer(&args),
+        "learn" => cmd_learn(&args),
+        "serve" => cmd_serve(&args),
+        "power" => cmd_power(&args),
+        "verify" => cmd_verify(&args),
+        "hlo-stats" => cmd_hlo_stats(&args),
+        other => {
+            eprintln!("unknown command {other:?}; try info|infer|learn|serve|power|verify|hlo-stats");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = res {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn artifacts(args: &Args) -> PathBuf {
+    args.get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(chameleon::artifacts_dir)
+}
+
+fn load_model(args: &Args, default: &str) -> Result<QuantModel> {
+    let name = args.get_or("model", default).to_string();
+    let path = artifacts(args).join(format!("{name}.model.json"));
+    QuantModel::load(&path).with_context(|| format!("loading {name}"))
+}
+
+fn mode_from(args: &Args) -> ArrayMode {
+    match args.get_or("mode", "16") {
+        "4" => ArrayMode::M4x4,
+        _ => ArrayMode::M16x16,
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = artifacts(args);
+    println!("artifacts: {}", dir.display());
+    let manifest = dir.join("manifest.json");
+    if !manifest.exists() {
+        bail!("no manifest — run `make artifacts` first");
+    }
+    let v = json::parse_file(&manifest)?;
+    let mut t = Table::new("model zoo", &["name", "params", "RF", "seq", "V", "classes"]);
+    for m in v.req("models")?.as_arr()? {
+        t.rowv(vec![
+            m.req("name")?.as_str()?.to_string(),
+            m.req("params")?.as_i64()?.to_string(),
+            m.req("receptive_field")?.as_i64()?.to_string(),
+            m.req("seq_len")?.as_i64()?.to_string(),
+            m.req("embed_dim")?.as_i64()?.to_string(),
+            m.get_nonnull("n_classes").map_or("-".into(), |c| {
+                c.as_i64().map(|v| v.to_string()).unwrap_or_default()
+            }),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn engine_from(args: &Args, model: Arc<QuantModel>) -> Result<Engine> {
+    match args.get_or("engine", "golden") {
+        "golden" => Ok(Engine::golden(model)),
+        "sim" => Ok(Engine::sim(model, mode_from(args))),
+        "xla" => {
+            let rt = Runtime::cpu()?;
+            let xm = XlaModel::load(&rt, &artifacts(args), &model)?;
+            // Note: Runtime must outlive the executable; leak it for CLI use.
+            std::mem::forget(rt);
+            Ok(Engine::xla(model, xm))
+        }
+        e => bail!("unknown engine {e:?} (golden|sim|xla)"),
+    }
+}
+
+fn cmd_infer(args: &Args) -> Result<()> {
+    let model = Arc::new(load_model(args, "kws_mfcc")?);
+    println!("{}", model.describe());
+    let pool = EvalPool::load(&artifacts(args).join(format!("eval_{}.json", model.name)))?;
+    let engine = engine_from(args, model.clone())?;
+    let n = args.get_usize("n", 24)?;
+    let mut rng = Rng::new(args.get_u64("seed", 1)?);
+    let mut correct = 0;
+    let t0 = Instant::now();
+    for i in 0..n {
+        let class = rng.below(pool.classes as u64) as usize;
+        let idx = rng.below(pool.samples_per_class as u64) as usize;
+        let fwd = engine.forward(pool.sample(class, idx))?;
+        let logits = fwd.logits.context("model has no head")?;
+        let pred = golden::argmax(&logits);
+        correct += usize::from(pred == class);
+        if i < 8 {
+            let name = pool
+                .class_names
+                .as_ref()
+                .map(|ns| ns[class].clone())
+                .unwrap_or_else(|| class.to_string());
+            println!("  sample {i}: true={name} pred={pred} {}", if pred == class { "ok" } else { "MISS" });
+        }
+    }
+    let dt = t0.elapsed();
+    println!(
+        "accuracy {}/{} = {:.1}%  ({} per inference, engine={})",
+        correct,
+        n,
+        100.0 * correct as f64 / n as f64,
+        fmt_dur(dt / n as u32),
+        engine.name(),
+    );
+    Ok(())
+}
+
+fn cmd_learn(args: &Args) -> Result<()> {
+    let model = load_model(args, "omniglot_fsl")?;
+    println!("{}", model.describe());
+    let pool = EvalPool::load(&artifacts(args).join("eval_omniglot.json"))?;
+    let n_way = args.get_usize("ways", 5)?;
+    let k_shot = args.get_usize("shots", 1)?;
+    let n_query = args.get_usize("queries", 5)?;
+    let mut rng = Rng::new(args.get_u64("seed", 1)?);
+    let mode = mode_from(args);
+    let mut lc = LearningController::new(&model, mode);
+    let (_, sup, qry) = pool.episode(&mut rng, n_way, k_shot, n_query);
+    let op = OperatingPoint::fsl_fast();
+    let mut learn_cycles = 0u64;
+    for shots in &sup {
+        let t = lc.learn_way(shots)?;
+        learn_cycles += t.total_cycles();
+    }
+    let mut correct = 0;
+    let mut total = 0;
+    for (way, queries) in qry.iter().enumerate() {
+        for q in queries {
+            let (pred, _) = lc.classify(q)?;
+            correct += usize::from(pred == way);
+            total += 1;
+        }
+    }
+    println!(
+        "{n_way}-way {k_shot}-shot: accuracy {:.1}%  learn cycles {} ({} @100 MHz, {} energy)",
+        100.0 * correct as f64 / total as f64,
+        learn_cycles,
+        fmt_dur(std::time::Duration::from_secs_f64(op.seconds(learn_cycles))),
+        chameleon::util::bench::fmt_energy(op.energy(learn_cycles)),
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model = Arc::new(load_model(args, "kws_mfcc")?);
+    println!("{}", model.describe());
+    let pool = EvalPool::load(&artifacts(args).join(format!("eval_{}.json", model.name)))?;
+    let workers = args.get_usize("workers", 2)?;
+    let n = args.get_usize("n", 200)?;
+    let engine_kind = args.get_or("engine", "golden").to_string();
+    let mode = mode_from(args);
+    let dir = artifacts(args);
+    let factories: Vec<chameleon::coordinator::server::EngineFactory> = (0..workers)
+        .map(|_| {
+            let model = model.clone();
+            let kind = engine_kind.clone();
+            let dir = dir.clone();
+            Box::new(move || -> Result<Engine> {
+                match kind.as_str() {
+                    "golden" => Ok(Engine::golden(model)),
+                    "sim" => Ok(Engine::sim(model, mode)),
+                    "xla" => {
+                        let rt = Runtime::cpu()?;
+                        let xm = XlaModel::load(&rt, &dir, &model)?;
+                        std::mem::forget(rt); // keep the client alive for the thread
+                        Ok(Engine::xla(model, xm))
+                    }
+                    e => bail!("unknown engine {e:?}"),
+                }
+            }) as chameleon::coordinator::server::EngineFactory
+        })
+        .collect();
+    let coord = Coordinator::start(factories, CoordinatorConfig { workers, queue_depth: 128 })?;
+    let mut rng = Rng::new(7);
+    let t0 = Instant::now();
+    let mut correct = 0;
+    for _ in 0..n {
+        let class = rng.below(pool.classes as u64) as usize;
+        let idx = rng.below(pool.samples_per_class as u64) as usize;
+        let r = coord.classify(pool.sample(class, idx).to_vec())?;
+        correct += usize::from(r.predicted == Some(class));
+    }
+    let dt = t0.elapsed();
+    let snap = coord.metrics().snapshot();
+    println!("{}", snap.report());
+    println!(
+        "accuracy {:.1}%  throughput {:.1} req/s",
+        100.0 * correct as f64 / n as f64,
+        n as f64 / dt.as_secs_f64()
+    );
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_power(args: &Args) -> Result<()> {
+    let mut t = Table::new(
+        "operating points (calibrated model)",
+        &["point", "mode", "V", "f", "core leak", "MSB leak", "dynamic", "total"],
+    );
+    for (name, op) in [
+        ("KWS MFCC low-power", OperatingPoint::kws_low_power()),
+        ("KWS raw 16x16", OperatingPoint::kws_raw()),
+        ("FSL fast", OperatingPoint::fsl_fast()),
+        ("FSL low-power", OperatingPoint::fsl_low_power()),
+    ] {
+        let p = op.power();
+        t.rowv(vec![
+            name.into(),
+            format!("{}x{}", op.mode.size(), op.mode.size()),
+            format!("{:.3}", op.voltage),
+            format!("{:.3e}", op.f_hz),
+            fmt_power(p.core_leak),
+            fmt_power(p.msb_leak),
+            fmt_power(p.dynamic),
+            fmt_power(p.total()),
+        ]);
+    }
+    t.print();
+    let _ = args;
+    Ok(())
+}
+
+/// L2 profiling: op histogram of the lowered artifacts (§Perf).
+fn cmd_hlo_stats(args: &Args) -> Result<()> {
+    use chameleon::runtime::hlo_stats;
+    let dir = artifacts(args);
+    let manifest = json::parse_file(&dir.join("manifest.json"))?;
+    for entry in manifest.req("models")?.as_arr()? {
+        let name = entry.req("name")?.as_str()?;
+        let s = hlo_stats::analyze_file(&dir.join(format!("{name}.hlo.txt")))?;
+        let mut t = Table::new(
+            &format!(
+                "{name}: {} instructions, {} computations, {} while loops, \
+                 {} constant elems, {} kB text",
+                s.instructions, s.computations, s.while_loops,
+                s.constant_elements, s.text_bytes / 1024
+            ),
+            &["op", "count"],
+        );
+        for (op, n) in s.top_ops(12) {
+            t.rowv(vec![op, n.to_string()]);
+        }
+        t.print();
+    }
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> Result<()> {
+    let dir = artifacts(args);
+    let manifest = json::parse_file(&dir.join("manifest.json"))?;
+    let mut failures = 0;
+    for entry in manifest.req("models")?.as_arr()? {
+        let name = entry.req("name")?.as_str()?;
+        let model = QuantModel::load(&dir.join(format!("{name}.model.json")))?;
+        let vectors = json::parse_file(&dir.join(format!("{name}.vectors.json")))?;
+        print!("{name}: ");
+        let mut ok = true;
+        for (ci, case) in vectors.req("cases")?.as_arr()?.iter().enumerate() {
+            let input: Vec<u8> = case.req("input")?.as_i32_vec()?.iter().map(|&v| v as u8).collect();
+            let want_emb: Vec<u8> =
+                case.req("embedding")?.as_i32_vec()?.iter().map(|&v| v as u8).collect();
+            let (emb, logits) = golden::forward(&model, &input)?;
+            if emb != want_emb {
+                println!("case {ci}: golden embedding MISMATCH");
+                ok = false;
+                continue;
+            }
+            if let Some(want_logits) = case.get_nonnull("logits") {
+                if logits.as_deref() != Some(want_logits.as_i32_vec()?.as_slice()) {
+                    println!("case {ci}: golden logits MISMATCH");
+                    ok = false;
+                }
+            }
+            // sim must agree bit-exactly with golden
+            let r = sim::simulate_inference(&model, ArrayMode::M16x16, &input)?;
+            if r.embedding != want_emb {
+                println!("case {ci}: sim embedding MISMATCH");
+                ok = false;
+            }
+        }
+        if ok {
+            println!("golden+sim OK ({} cases)", vectors.req("cases")?.as_arr()?.len());
+        } else {
+            failures += 1;
+        }
+    }
+    if failures > 0 {
+        bail!("{failures} model(s) failed verification");
+    }
+    Ok(())
+}

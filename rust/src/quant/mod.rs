@@ -1,0 +1,274 @@
+//! Bit-exact mirror of `python/compile/quantlib.py` — the single shared
+//! quantization grammar of the Chameleon datapath (DESIGN.md §Quantization
+//! grammar). The cross-language test vectors exported by `aot.py` pin the
+//! two implementations together.
+//!
+//! * activations: u4 uniform (0..15), power-of-two scales
+//! * weights: s4 log2 codes `c in [-8, 7]`; `value(c) = sgn(c) * 2^(|c|-1)`,
+//!   `value(0) = 0` — shifts instead of multiplies in the PE array
+//! * partial products: 12-bit signed; accumulators: 18-bit signed saturating
+//! * biases: 14-bit signed
+//! * OPE: bias/residual add, arithmetic right shift, ReLU, u4 clamp
+
+/// Activation bit width / max code.
+pub const ACT_BITS: u32 = 4;
+pub const ACT_MAX: i32 = (1 << ACT_BITS) - 1;
+
+/// Accumulator saturation bounds (18-bit signed).
+pub const ACC_BITS: u32 = 18;
+pub const ACC_MIN: i32 = -(1 << (ACC_BITS - 1));
+pub const ACC_MAX: i32 = (1 << (ACC_BITS - 1)) - 1;
+
+/// Bias saturation bounds (14-bit signed).
+pub const BIAS_BITS: u32 = 14;
+pub const BIAS_MIN: i32 = -(1 << (BIAS_BITS - 1));
+pub const BIAS_MAX: i32 = (1 << (BIAS_BITS - 1)) - 1;
+
+/// Weight code range (two's-complement nibble).
+pub const CODE_MIN: i8 = -8;
+pub const CODE_MAX: i8 = 7;
+
+/// Decode an s4 log2 code to its integer value.
+///
+/// `0 -> 0`; positive codes 1..=7 -> 2^0..2^6; negative codes -1..=-8 ->
+/// -2^0..-2^7 (the int8-like asymmetric dynamic range).
+#[inline]
+pub fn log2_decode(code: i8) -> i32 {
+    if code == 0 {
+        0
+    } else if code > 0 {
+        1 << (code - 1)
+    } else {
+        -(1 << (-(code as i32) - 1))
+    }
+}
+
+/// Encode an integer to the nearest representable log2 value.
+///
+/// Nearest-magnitude with ties rounding to the larger exponent
+/// (`2*mag >= 3*2^e_floor`), saturating at +64 / -128. Bit-exact with
+/// `quantlib.log2_encode_int`.
+pub fn log2_encode_int(value: i32) -> i8 {
+    if value == 0 {
+        return 0;
+    }
+    let neg = value < 0;
+    let mag = (value as i64).unsigned_abs();
+    let e_floor = 63 - mag.leading_zeros() as i64; // floor(log2(mag))
+    let low = 1u64 << e_floor;
+    let e = if 2 * mag >= 3 * low { e_floor + 1 } else { e_floor };
+    if neg {
+        let e = e.clamp(0, 7);
+        -((e + 1) as i8)
+    } else {
+        let e = e.clamp(0, 6);
+        (e + 1) as i8
+    }
+}
+
+/// Saturate to the 18-bit accumulator range.
+#[inline]
+pub fn sat_acc(x: i32) -> i32 {
+    x.clamp(ACC_MIN, ACC_MAX)
+}
+
+/// Saturate to the 14-bit bias range.
+#[inline]
+pub fn sat_bias(x: i32) -> i32 {
+    x.clamp(BIAS_MIN, BIAS_MAX)
+}
+
+/// One PE: u4 activation x log2 weight via shift + sign correction.
+/// Result fits 12-bit signed (15 << 7 = 1920).
+#[inline]
+pub fn shift_product(act: i32, code: i8) -> i32 {
+    debug_assert!((0..=ACT_MAX).contains(&act), "activation {act} out of u4 range");
+    act * log2_decode(code)
+}
+
+/// Signed shift: `x << s` for `s >= 0`, arithmetic `x >> -s` otherwise.
+#[inline]
+pub fn signed_shift(x: i32, s: i32) -> i32 {
+    if s >= 0 {
+        x << s
+    } else {
+        x >> (-s)
+    }
+}
+
+/// Rounding arithmetic right shift: `(x + 2^(s-1)) >> s` — the OPE's
+/// rounding adder (round-half-up), matching the round() the QAT trains
+/// with instead of a floor that loses 0.5 LSB per layer.
+#[inline]
+pub fn rounding_shift_right(x: i32, s: i32) -> i32 {
+    let bias = if s > 0 { 1 << (s - 1) } else { 0 };
+    (x + bias) >> s
+}
+
+/// Output-PE: `clamp(relu(round_shift(sat(acc + bias + res<<rs))), 0, 15)`.
+///
+/// `relu=false` returns the raw saturated total (final-layer logit readout).
+#[inline]
+pub fn ope(acc: i32, bias: i32, out_shift: i32, relu: bool, residual: i32, res_shift: i32) -> i32 {
+    let mut total = acc + sat_bias(bias);
+    total += signed_shift(residual, res_shift);
+    total = sat_acc(total);
+    if relu {
+        let y = rounding_shift_right(total, out_shift);
+        y.clamp(0, ACT_MAX)
+    } else {
+        total
+    }
+}
+
+/// Quantize a real value to the u4 grid with a power-of-two shift
+/// (round-half-away-from-zero matches numpy's `np.round`... careful:
+/// numpy rounds half to even, so we mirror that exactly).
+pub fn u4_encode(x: f32, shift: i32) -> i32 {
+    let v = x / (2.0f32).powi(shift);
+    let r = round_half_even(v);
+    r.clamp(0, ACT_MAX)
+}
+
+/// numpy-compatible round-half-to-even.
+#[inline]
+pub fn round_half_even(v: f32) -> i32 {
+    let f = v.floor();
+    let diff = v - f;
+    let fi = f as i32;
+    if diff > 0.5 {
+        fi + 1
+    } else if diff < 0.5 {
+        fi
+    } else if fi % 2 == 0 {
+        fi
+    } else {
+        fi + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::{prop_assert, prop_assert_eq};
+
+    #[test]
+    fn decode_table() {
+        assert_eq!(log2_decode(0), 0);
+        assert_eq!(log2_decode(1), 1);
+        assert_eq!(log2_decode(7), 64);
+        assert_eq!(log2_decode(-1), -1);
+        assert_eq!(log2_decode(-8), -128);
+    }
+
+    #[test]
+    fn encode_decode_fixpoint() {
+        // Every representable value encodes to itself.
+        for c in CODE_MIN..=CODE_MAX {
+            let v = log2_decode(c);
+            assert_eq!(log2_decode(log2_encode_int(v)), v, "code {c}");
+        }
+    }
+
+    #[test]
+    fn encode_rounds_to_nearest() {
+        assert_eq!(log2_decode(log2_encode_int(3)), 4); // tie 2 vs 4 -> up
+        assert_eq!(log2_decode(log2_encode_int(5)), 4);
+        assert_eq!(log2_decode(log2_encode_int(6)), 8); // 6 = 1.5*4 -> up
+        assert_eq!(log2_decode(log2_encode_int(100)), 64); // pos saturation
+        assert_eq!(log2_decode(log2_encode_int(-200)), -128); // neg saturation
+        assert_eq!(log2_decode(log2_encode_int(-96)), -128); // tie up in magnitude
+    }
+
+    #[test]
+    fn encode_nearest_property() {
+        prop::check(500, 0xBEEF, |rng| {
+            let v = rng.range(-4096, 4096) as i32;
+            let got = log2_decode(log2_encode_int(v));
+            // No representable value may be strictly closer than `got`
+            // (saturation exempt: outside the dynamic range the extreme
+            // point is returned by construction).
+            if (-128..=64).contains(&v) {
+                for c in CODE_MIN..=CODE_MAX {
+                    let cand = log2_decode(c);
+                    prop_assert!(
+                        (v - got).abs() <= (v - cand).abs(),
+                        "v={v}: got {got} but {cand} is closer"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn product_fits_12_bits() {
+        for act in 0..=ACT_MAX {
+            for c in CODE_MIN..=CODE_MAX {
+                let p = shift_product(act, c);
+                assert!((-2048..=2047).contains(&p), "{act} * code {c} = {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn ope_matches_manual() {
+        // acc + bias + res<<2, rounding >>3, relu-clamped
+        let y = ope(100, 20, 3, true, 3, 2);
+        assert_eq!(y, ((100 + 20 + 12 + 4) >> 3).clamp(0, 15));
+        // negative residual shift (floor right shift), no relu: raw total
+        let y = ope(100, 0, 0, false, 7, -1);
+        assert_eq!(y, 103);
+    }
+
+    #[test]
+    fn rounding_shift_examples() {
+        assert_eq!(rounding_shift_right(7, 2), 2); // 7/4 = 1.75 -> 2
+        assert_eq!(rounding_shift_right(6, 2), 2); // 1.5 -> 2 (half up)
+        assert_eq!(rounding_shift_right(5, 2), 1);
+        assert_eq!(rounding_shift_right(-5, 2), -1); // -1.25 -> -1
+        assert_eq!(rounding_shift_right(-6, 2), -1); // -1.5 -> -1 (half up)
+        assert_eq!(rounding_shift_right(9, 0), 9);
+    }
+
+    #[test]
+    fn ope_saturates() {
+        let y = ope(ACC_MAX, BIAS_MAX, 0, false, 0, 0);
+        assert_eq!(y, ACC_MAX);
+        let y = ope(ACC_MIN, BIAS_MIN, 0, false, 0, 0);
+        assert_eq!(y, ACC_MIN);
+    }
+
+    #[test]
+    fn round_half_even_matches_numpy() {
+        assert_eq!(round_half_even(0.5), 0);
+        assert_eq!(round_half_even(1.5), 2);
+        assert_eq!(round_half_even(2.5), 2);
+        assert_eq!(round_half_even(-0.5), 0);
+        assert_eq!(round_half_even(-1.5), -2);
+        assert_eq!(round_half_even(1.2), 1);
+        assert_eq!(round_half_even(1.7), 2);
+    }
+
+    #[test]
+    fn u4_encode_clamps() {
+        prop_assert_eq_outer();
+        fn prop_assert_eq_outer() {
+            assert_eq!(u4_encode(100.0, 0), 15);
+            assert_eq!(u4_encode(-3.0, 0), 0);
+            assert_eq!(u4_encode(8.0, 1), 4);
+        }
+    }
+
+    #[test]
+    fn signed_shift_floor_division() {
+        prop::check(200, 0xA11CE, |rng| {
+            let x = rng.range(-100_000, 100_000) as i32;
+            let s = rng.range(0, 8) as i32;
+            prop_assert_eq!(signed_shift(x, -s), x >> s);
+            prop_assert_eq!(signed_shift(x, -s), (x as f64 / (1 << s) as f64).floor() as i32);
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,147 @@
+//! HLO-text statistics: the L2 profiling tool of the §Perf pass.
+//!
+//! Parses the AOT artifacts (HLO text) into an op histogram + constant
+//! footprint so the lowered graph can be audited for redundant
+//! recomputation, fusion structure and constant bloat without running it.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Summary of one HLO module.
+#[derive(Debug, Clone, Default)]
+pub struct HloStats {
+    /// op name -> instruction count
+    pub op_counts: HashMap<String, usize>,
+    pub instructions: usize,
+    pub computations: usize,
+    /// total elements across constant literals (weights baked in)
+    pub constant_elements: u64,
+    /// number of while loops (pallas interpret grids lower to these)
+    pub while_loops: usize,
+    pub fusions: usize,
+    pub text_bytes: usize,
+}
+
+impl HloStats {
+    pub fn count(&self, op: &str) -> usize {
+        self.op_counts.get(op).copied().unwrap_or(0)
+    }
+
+    /// Top-n ops by count.
+    pub fn top_ops(&self, n: usize) -> Vec<(String, usize)> {
+        let mut v: Vec<_> = self.op_counts.iter().map(|(k, c)| (k.clone(), *c)).collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        v.truncate(n);
+        v
+    }
+}
+
+/// Parse statistics from HLO text.
+pub fn analyze_text(text: &str) -> HloStats {
+    let mut s = HloStats { text_bytes: text.len(), ..Default::default() };
+    for line in text.lines() {
+        let trimmed = line.trim_start();
+        if trimmed.starts_with("ENTRY") || (trimmed.starts_with('%') && trimmed.contains('{') && trimmed.ends_with('{')) {
+            s.computations += 1;
+            continue;
+        }
+        // Instruction lines look like: `%name = type[shape]{layout} opcode(...)`
+        let Some(eq) = trimmed.find(" = ") else { continue };
+        let rhs = &trimmed[eq + 3..];
+        // Skip the (possibly tuple / layout-annotated) result type: scan to
+        // the first whitespace at bracket depth 0.
+        let mut depth = 0i32;
+        let mut op_start = None;
+        for (i, b) in rhs.bytes().enumerate() {
+            match b {
+                b'(' | b'[' | b'{' => depth += 1,
+                b')' | b']' | b'}' => depth -= 1,
+                b' ' if depth == 0 => {
+                    op_start = Some(i + 1);
+                    break;
+                }
+                _ => {}
+            }
+        }
+        let Some(op_start) = op_start else { continue };
+        let rest = &rhs[op_start..];
+        let op: String = rest
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '-' || *c == '_' || *c == '.')
+            .collect();
+        if op.is_empty() {
+            continue;
+        }
+        let op = op.trim_end_matches(|c: char| c == '.' || c.is_ascii_digit()).to_string();
+        if op.is_empty() {
+            continue;
+        }
+        s.instructions += 1;
+        match op.as_str() {
+            "while" => s.while_loops += 1,
+            "fusion" => s.fusions += 1,
+            "constant" => {
+                // crude element count: number of commas + 1 inside the
+                // literal braces of this line
+                if let Some(open) = rest.find('{') {
+                    let lit = &rest[open..];
+                    s.constant_elements += lit.bytes().filter(|&b| b == b',').count() as u64 + 1;
+                }
+            }
+            _ => {}
+        }
+        *s.op_counts.entry(op).or_insert(0) += 1;
+    }
+    s
+}
+
+/// Analyze an HLO artifact file.
+pub fn analyze_file(path: &Path) -> Result<HloStats> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    Ok(analyze_text(&text))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+HloModule jit_fn
+
+%add_comp (a: s32[], b: s32[]) -> s32[] {
+  %a = s32[] parameter(0)
+  %b = s32[] parameter(1)
+  ROOT %sum = s32[] add(%a, %b)
+}
+
+ENTRY %main (x: s32[4,4]) -> (s32[4,4]) {
+  %x = s32[4,4]{1,0} parameter(0)
+  %c = s32[4]{0} constant({1, 2, 3, 4})
+  %bc = s32[4,4]{1,0} broadcast(%c), dimensions={1}
+  %y = s32[4,4]{1,0} add(%x, %bc)
+  %w = s32[4,4]{1,0} while(%y), condition=%cond, body=%body
+  ROOT %t = (s32[4,4]{1,0}) tuple(%w)
+}
+"#;
+
+    #[test]
+    fn counts_ops() {
+        let s = analyze_text(SAMPLE);
+        assert_eq!(s.count("add"), 2);
+        assert_eq!(s.count("parameter"), 3);
+        assert_eq!(s.count("while"), 1);
+        assert_eq!(s.while_loops, 1);
+        assert_eq!(s.constant_elements, 4);
+        assert!(s.instructions >= 8);
+    }
+
+    #[test]
+    fn top_ops_sorted() {
+        let s = analyze_text(SAMPLE);
+        let top = s.top_ops(2);
+        assert_eq!(top[0].0, "parameter");
+    }
+}

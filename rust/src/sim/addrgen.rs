@@ -1,0 +1,115 @@
+//! The network address generator (paper §III-B, Fig. 8(b)).
+//!
+//! Allocates one FIFO ring per layer in the shared activation SRAM. Each
+//! ring stores rows keyed by *timestep index*; a write always overwrites
+//! the oldest live row ("the output of a new timestep always overwrites
+//! the oldest, unused one"). Under greedy dilation-aware execution the
+//! producer only writes timesteps some consumer will read, so a small
+//! fixed ring (`capacity` rows) suffices regardless of dilation.
+
+use anyhow::{bail, Result};
+
+/// One per-layer activation ring.
+#[derive(Debug, Clone)]
+pub struct LayerRing {
+    /// Row width in u4 entries (channel count).
+    pub width: usize,
+    /// Ring capacity in rows.
+    pub capacity: usize,
+    /// (timestep, row data); at most `capacity` live entries, ordered by
+    /// insertion (oldest first).
+    slots: Vec<(usize, Vec<u8>)>,
+    /// Total writes (for SRAM traffic accounting).
+    pub writes: u64,
+    pub reads: u64,
+}
+
+impl LayerRing {
+    pub fn new(width: usize, capacity: usize) -> Self {
+        LayerRing { width, capacity, slots: Vec::with_capacity(capacity), writes: 0, reads: 0 }
+    }
+
+    /// Store the row for `timestep`, evicting the oldest if full.
+    pub fn push(&mut self, timestep: usize, row: Vec<u8>) -> Result<()> {
+        if row.len() != self.width {
+            bail!("row width {} != ring width {}", row.len(), self.width);
+        }
+        if let Some(last) = self.slots.last() {
+            if timestep <= last.0 {
+                bail!("non-monotonic timestep {timestep} after {}", last.0);
+            }
+        }
+        if self.slots.len() == self.capacity {
+            self.slots.remove(0); // oldest row overwritten
+        }
+        self.slots.push((timestep, row));
+        self.writes += 1;
+        Ok(())
+    }
+
+    /// Read the row for `timestep`, if still live.
+    pub fn get(&mut self, timestep: usize) -> Option<&[u8]> {
+        let hit = self
+            .slots
+            .iter()
+            .find(|(t, _)| *t == timestep)
+            .map(|(_, r)| r.as_slice());
+        if hit.is_some() {
+            self.reads += 1;
+        }
+        hit
+    }
+
+    /// Latest stored timestep.
+    pub fn latest(&self) -> Option<usize> {
+        self.slots.last().map(|(t, _)| *t)
+    }
+
+    pub fn live_rows(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// u4 entries reserved by this ring in the activation SRAM.
+    pub fn reserved_entries(&self) -> usize {
+        self.capacity * self.width
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_evicts_oldest() {
+        let mut r = LayerRing::new(2, 3);
+        for t in 0..5 {
+            r.push(t, vec![t as u8, t as u8]).unwrap();
+        }
+        assert_eq!(r.live_rows(), 3);
+        assert!(r.get(0).is_none(), "oldest must be evicted");
+        assert!(r.get(1).is_none());
+        assert_eq!(r.get(2).unwrap(), &[2, 2]);
+        assert_eq!(r.latest(), Some(4));
+    }
+
+    #[test]
+    fn rejects_non_monotonic_and_bad_width() {
+        let mut r = LayerRing::new(2, 2);
+        r.push(3, vec![0, 0]).unwrap();
+        assert!(r.push(3, vec![0, 0]).is_err());
+        assert!(r.push(2, vec![0, 0]).is_err());
+        assert!(r.push(4, vec![0]).is_err());
+    }
+
+    #[test]
+    fn counts_traffic() {
+        let mut r = LayerRing::new(1, 2);
+        r.push(0, vec![1]).unwrap();
+        r.push(1, vec![2]).unwrap();
+        let _ = r.get(0);
+        let _ = r.get(1);
+        let _ = r.get(9); // miss: not counted
+        assert_eq!(r.writes, 2);
+        assert_eq!(r.reads, 2);
+    }
+}

@@ -1,0 +1,94 @@
+//! Area model of the Chameleon SoC (paper Fig. 13(a,b)).
+//!
+//! Per-module area fractions are taken from the die's reported breakdown
+//! structure and anchored to the paper's absolutes (1.25 mm² die,
+//! 0.83 mm² core incl. power rings, 0.74 mm² logic+memory core area in
+//! Table II, learning logic = 0.5 % of core). SRAM area is derived from a
+//! 40-nm bit-cell+overhead density so the model extrapolates to other
+//! memory configurations (used by the ablations).
+
+use crate::sim::memory::MemoryConfig;
+
+/// 40-nm LP single-port SRAM macro density, mm² per kB (bit-cell +
+/// periphery overhead at the small-macro sizes used here).
+pub const SRAM_MM2_PER_KB: f64 = 0.004;
+
+/// Core area excluding memories (PE array + control + OPE + misc logic).
+pub const LOGIC_CORE_MM2: f64 = 0.30;
+
+/// Fraction of the logic core taken by one PE (16x16 array dominates).
+pub const PE_ARRAY_FRACTION: f64 = 0.55;
+
+/// Learning controller + prototypical parameter extractor: the paper's
+/// headline 0.5 % of total core area.
+pub const LEARNING_FRACTION_OF_CORE: f64 = 0.005;
+
+/// One module's area contribution.
+#[derive(Debug, Clone)]
+pub struct AreaItem {
+    pub name: &'static str,
+    pub mm2: f64,
+}
+
+/// Full area breakdown for a memory configuration.
+pub fn breakdown(mem: &MemoryConfig) -> Vec<AreaItem> {
+    let act_kb = mem.act_entries as f64 / 2.0 / 1024.0;
+    let w_kb = mem.weight_codes as f64 / 2.0 / 1024.0;
+    let b_kb = mem.bias_entries as f64 * 14.0 / 8.0 / 1024.0;
+    let in_kb = mem.input_buf_entries as f64 / 2.0 / 1024.0;
+    let pe = LOGIC_CORE_MM2 * PE_ARRAY_FRACTION;
+    let core_total_pre = LOGIC_CORE_MM2
+        + (act_kb + w_kb + b_kb + in_kb) * SRAM_MM2_PER_KB;
+    let learning = core_total_pre * LEARNING_FRACTION_OF_CORE;
+    vec![
+        AreaItem { name: "PE array (dual-mode, MatMul-free)", mm2: pe },
+        AreaItem { name: "control + OPE + addr generator", mm2: LOGIC_CORE_MM2 - pe - learning },
+        AreaItem { name: "learning controller + extractor", mm2: learning },
+        AreaItem { name: "weight SRAM", mm2: w_kb * SRAM_MM2_PER_KB },
+        AreaItem { name: "bias SRAM", mm2: b_kb * SRAM_MM2_PER_KB },
+        AreaItem { name: "activation SRAM", mm2: act_kb * SRAM_MM2_PER_KB },
+        AreaItem { name: "input buffer", mm2: in_kb * SRAM_MM2_PER_KB },
+    ]
+}
+
+/// Total core area (mm²).
+pub fn core_mm2(mem: &MemoryConfig) -> f64 {
+    breakdown(mem).iter().map(|i| i.mm2).sum()
+}
+
+/// The paper's reported absolutes for cross-checking.
+pub const PAPER_CORE_MM2: f64 = 0.74;
+pub const PAPER_DIE_MM2: f64 = 1.25;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn core_area_matches_paper_within_model_error() {
+        let mem = MemoryConfig::default();
+        let core = core_mm2(&mem);
+        let err = (core - PAPER_CORE_MM2).abs() / PAPER_CORE_MM2;
+        assert!(err < 0.25, "core area {core:.3} mm² vs paper {PAPER_CORE_MM2} (err {err:.2})");
+    }
+
+    #[test]
+    fn learning_overhead_is_half_percent() {
+        let mem = MemoryConfig::default();
+        let b = breakdown(&mem);
+        let total = core_mm2(&mem);
+        let learning = b.iter().find(|i| i.name.contains("learning")).unwrap().mm2;
+        let frac = learning / total;
+        assert!((0.003..0.007).contains(&frac), "learning fraction {frac}");
+    }
+
+    #[test]
+    fn memories_dominate_logic() {
+        // Extreme-edge accelerators are SRAM-dominated; the weight SRAM
+        // must be the largest single memory.
+        let b = breakdown(&MemoryConfig::default());
+        let w = b.iter().find(|i| i.name == "weight SRAM").unwrap().mm2;
+        let act = b.iter().find(|i| i.name == "activation SRAM").unwrap().mm2;
+        assert!(w > act * 10.0, "weights {w} vs act {act}");
+    }
+}

@@ -1,0 +1,167 @@
+//! Learning controller + prototypical parameter extractor (paper §III-A,
+//! Figs. 4–6): the 0.5 %-area module pair that turns the inference
+//! accelerator into an FSL/CL engine.
+//!
+//! The three-step flow of Fig. 6:
+//!   1. embed all `k` shots through the ordinary inference datapath,
+//!      parking the embeddings in activation memory;
+//!   2. stream the embeddings back through the PE array to accumulate the
+//!      prototype sum (`k * V/16` cycles);
+//!   3. square/accumulate the bias and write the new FC column
+//!      (`2 * V/16 + 1` cycles).
+//! Steps 2+3 together cost exactly `(k+2) * V/16 + 1` cycles — the paper's
+//! closed-form learning latency, asserted by tests and benches.
+
+use anyhow::Result;
+
+use crate::model::QuantModel;
+use crate::protonet::{ProtoAccumulator, ProtoHead};
+use crate::sim::pe_array::ArrayMode;
+use crate::sim::scheduler::{GreedySim, Schedule, SimResult};
+use crate::sim::trace::{Phase, Trace};
+
+/// Closed-form learning cycle count for steps 2+3 (paper §III-A):
+/// `(k+2) * V/16 + 1` (the /16 is the PE-array width).
+pub fn learning_cycles(k_shots: usize, embed_dim: usize) -> u64 {
+    ((k_shots + 2) * embed_dim / 16 + 1) as u64
+}
+
+/// The on-chip learning state machine.
+pub struct LearningController<'m> {
+    pub sim: GreedySim<'m>,
+    pub head: ProtoHead,
+    schedule: Schedule,
+}
+
+impl<'m> LearningController<'m> {
+    pub fn new(model: &'m QuantModel, mode: ArrayMode) -> Self {
+        let sim = GreedySim::new(model, mode);
+        let schedule = Schedule::single_output(model);
+        LearningController {
+            head: ProtoHead::new(model.embed_dim),
+            sim,
+            schedule,
+        }
+    }
+
+    /// Learn one new way from `k` support inputs (u4 sequences).
+    /// Returns the merged trace: embedding (step 1) under `Inference`,
+    /// steps 2/3 under `Prototype` / `Extraction`.
+    pub fn learn_way(&mut self, shots: &[&[u8]]) -> Result<Trace> {
+        let v = self.sim.model.embed_dim;
+        let mut trace = Trace::default();
+        let mut acc = ProtoAccumulator::new(v);
+
+        // Step 1: inference per shot; embeddings parked in activation SRAM.
+        for shot in shots {
+            let r = self.sim.run(shot, &self.schedule)?;
+            trace.merge(&r.trace);
+            acc.add_shot(&r.embedding);
+        }
+
+        // Step 2: prototype accumulation — k embeddings of V dims streamed
+        // through the 16-wide array.
+        let k = shots.len();
+        let step2 = (k * v / 16) as u64;
+        {
+            let p = trace.phase_mut(Phase::Prototype);
+            p.cycles += step2;
+            p.macs += (k * v) as u64;
+            p.sram_reads += (k * v) as u64;
+        }
+
+        // Step 3: bias squares + FC weight/bias write-back.
+        let step3 = (2 * v / 16 + 1) as u64;
+        {
+            let e = trace.phase_mut(Phase::Extraction);
+            e.cycles += step3;
+            e.sram_writes += v as u64 + 1;
+        }
+        debug_assert_eq!(step2 + step3, learning_cycles(k, v));
+
+        // The extractor writes the new FC column straight from the
+        // accumulated prototype state.
+        self.head.ways.push(acc.extract());
+        Ok(trace)
+    }
+
+    /// Classify one query input through the full chip pipeline.
+    pub fn classify(&self, x: &[u8]) -> Result<(usize, SimResult)> {
+        let r = self.sim.run(x, &self.schedule)?;
+        let pred = self.head.classify(&r.embedding);
+        Ok((pred, r))
+    }
+
+    pub fn n_ways(&self) -> usize {
+        self.head.n_ways()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+    use crate::{prop_assert, prop_assert_eq};
+
+    #[test]
+    fn formula_matches_paper_examples() {
+        // k=1, V=64: (1+2)*4 + 1 = 13 cycles; k=5: (5+2)*4+1 = 29.
+        assert_eq!(learning_cycles(1, 64), 13);
+        assert_eq!(learning_cycles(5, 64), 29);
+        assert_eq!(learning_cycles(10, 256), (12 * 16 + 1) as u64);
+    }
+
+    #[test]
+    fn learn_way_cycle_accounting() {
+        let m = crate::model::tests::tiny_model();
+        let mut lc = LearningController::new(&m, ArrayMode::M16x16);
+        let mut rng = Rng::new(9);
+        let shots: Vec<Vec<u8>> = (0..3)
+            .map(|_| (0..m.seq_len * m.in_channels).map(|_| rng.range(0, 16) as u8).collect())
+            .collect();
+        let refs: Vec<&[u8]> = shots.iter().map(|s| s.as_slice()).collect();
+        let t = lc.learn_way(&refs).unwrap();
+        // V=8 < 16: integer division gives 0-cycle step2 at k*8/16;
+        // use the closed-form with the same integer semantics.
+        assert_eq!(t.learning_overhead_cycles(), learning_cycles(3, 8));
+        assert_eq!(lc.n_ways(), 1);
+        // learning overhead is tiny vs embedding even on the toy model
+        // (paper: < 0.04 % on the full-size net, asserted in the benches)
+        assert!(t.learning_overhead_cycles() * 10 < t.inference.cycles);
+    }
+
+    #[test]
+    fn learned_head_classifies_its_own_shots() {
+        let m = crate::model::tests::tiny_model();
+        let mut lc = LearningController::new(&m, ArrayMode::M16x16);
+        let mut rng = Rng::new(10);
+        // two distinct "classes" of inputs: low-valued vs high-valued
+        let mk = |hi: bool, rng: &mut Rng| -> Vec<u8> {
+            (0..m.seq_len * m.in_channels)
+                .map(|_| if hi { rng.range(13, 16) } else { rng.range(0, 3) } as u8)
+                .collect()
+        };
+        let a: Vec<Vec<u8>> = (0..3).map(|_| mk(false, &mut rng)).collect();
+        let b: Vec<Vec<u8>> = (0..3).map(|_| mk(true, &mut rng)).collect();
+        lc.learn_way(&a.iter().map(|s| s.as_slice()).collect::<Vec<_>>()).unwrap();
+        lc.learn_way(&b.iter().map(|s| s.as_slice()).collect::<Vec<_>>()).unwrap();
+        let (pred_a, _) = lc.classify(&mk(false, &mut rng)).unwrap();
+        let (pred_b, _) = lc.classify(&mk(true, &mut rng)).unwrap();
+        assert_eq!(pred_a, 0);
+        assert_eq!(pred_b, 1);
+    }
+
+    #[test]
+    fn formula_scales_linearly_property() {
+        prop::check(100, 0x1EA4, |rng| {
+            let k = rng.range(1, 16) as usize;
+            let v = 16 * rng.range(1, 16) as usize;
+            let c = learning_cycles(k, v);
+            let c1 = learning_cycles(k + 1, v);
+            prop_assert_eq!(c1 - c, (v / 16) as u64); // linear in shots
+            prop_assert!(c >= 1);
+            Ok(())
+        });
+    }
+}

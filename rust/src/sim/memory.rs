@@ -1,0 +1,146 @@
+//! On-chip memory system (paper Fig. 11(b), Table II).
+//!
+//! Capacities model the taped-out SoC: 4-bit activation SRAM, 4-bit weight
+//! SRAM split into an always-on LSB section (the 4x4-mode working set:
+//! 16 k weights / 512 biases) and a power-gateable MSB section, a 14-bit
+//! bias memory, and the 0.25 kB asynchronous streaming input buffer.
+
+use anyhow::{bail, Result};
+
+/// Chip memory capacities (defaults mirror the paper's SoC).
+#[derive(Debug, Clone)]
+pub struct MemoryConfig {
+    /// Activation SRAM in u4 entries (2 kB -> 4096 entries).
+    pub act_entries: usize,
+    /// Total weight capacity in 4-bit codes (133 k max weights).
+    pub weight_codes: usize,
+    /// Always-on (LSB-bank) weight capacity (4x4 mode): 16 k codes.
+    pub always_on_weight_codes: usize,
+    /// Bias entries (14-bit each).
+    pub bias_entries: usize,
+    /// Always-on bias entries (4x4 mode): 512.
+    pub always_on_bias_entries: usize,
+    /// Streaming input buffer in u4 entries (0.25 kB -> 512 entries).
+    pub input_buf_entries: usize,
+}
+
+impl Default for MemoryConfig {
+    fn default() -> Self {
+        MemoryConfig {
+            act_entries: 4096,
+            weight_codes: 133_000,
+            always_on_weight_codes: 16_384,
+            bias_entries: 4096,
+            always_on_bias_entries: 512,
+            input_buf_entries: 512,
+        }
+    }
+}
+
+impl MemoryConfig {
+    /// Total on-chip memory in bytes (activation + weights + bias + input).
+    pub fn total_bytes(&self) -> usize {
+        self.act_entries / 2
+            + self.weight_codes / 2
+            + self.bias_entries * 14 / 8
+            + self.input_buf_entries / 2
+    }
+
+    /// Can `n_codes` weights + `n_bias` biases run in 4x4 (always-on) mode?
+    pub fn fits_always_on(&self, n_codes: usize, n_bias: usize) -> bool {
+        n_codes <= self.always_on_weight_codes && n_bias <= self.always_on_bias_entries
+    }
+
+    /// Validate a deployment against the memory system.
+    pub fn check_model(&self, n_codes: usize, n_bias: usize, four_by_four: bool) -> Result<()> {
+        let (wcap, bcap) = if four_by_four {
+            (self.always_on_weight_codes, self.always_on_bias_entries)
+        } else {
+            (self.weight_codes, self.bias_entries)
+        };
+        if n_codes > wcap {
+            bail!("model needs {n_codes} weight codes, capacity {wcap}");
+        }
+        if n_bias > bcap {
+            bail!("model needs {n_bias} biases, capacity {bcap}");
+        }
+        Ok(())
+    }
+}
+
+/// Live activation-memory allocator state: the address generator reserves
+/// ring space per layer; this tracks aggregate usage + the high-water mark
+/// and enforces the 2 kB budget.
+#[derive(Debug, Clone, Default)]
+pub struct ActMemTracker {
+    pub entries_in_use: usize,
+    pub high_water_entries: usize,
+    pub capacity_entries: usize,
+}
+
+impl ActMemTracker {
+    pub fn new(capacity_entries: usize) -> Self {
+        ActMemTracker { entries_in_use: 0, high_water_entries: 0, capacity_entries }
+    }
+
+    pub fn alloc(&mut self, entries: usize) -> Result<()> {
+        self.entries_in_use += entries;
+        self.high_water_entries = self.high_water_entries.max(self.entries_in_use);
+        if self.entries_in_use > self.capacity_entries {
+            bail!(
+                "activation memory overflow: {} > {} u4 entries",
+                self.entries_in_use,
+                self.capacity_entries
+            );
+        }
+        Ok(())
+    }
+
+    pub fn free(&mut self, entries: usize) {
+        self.entries_in_use = self.entries_in_use.saturating_sub(entries);
+    }
+
+    pub fn high_water_bytes(&self) -> usize {
+        self.high_water_entries.div_ceil(2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_capacities_match_paper() {
+        let m = MemoryConfig::default();
+        // 71 kB total on-chip memory (paper Table II): 2 kB act + ~66.5 kB
+        // weights + 7 kB bias + 0.25 kB input ~= 76 kB with our rounding;
+        // the headline figures are act = 2 kB and weights = 133 k codes.
+        assert_eq!(m.act_entries / 2, 2048);
+        assert_eq!(m.weight_codes, 133_000);
+        assert!(m.fits_always_on(16_000, 500));
+        assert!(!m.fits_always_on(17_000, 500));
+    }
+
+    #[test]
+    fn check_model_modes() {
+        let m = MemoryConfig::default();
+        // 8.5 kB KWS model = 17 k codes: too big for 4x4? The paper's 16.5 k
+        // param net *does* fit the always-on section (16 k weights + biases
+        // separate). 17 k codes exceeds it.
+        assert!(m.check_model(16_000, 400, true).is_ok());
+        assert!(m.check_model(17_000, 400, true).is_err());
+        assert!(m.check_model(130_000, 2000, false).is_ok());
+        assert!(m.check_model(140_000, 2000, false).is_err());
+    }
+
+    #[test]
+    fn tracker_high_water() {
+        let mut t = ActMemTracker::new(100);
+        t.alloc(60).unwrap();
+        t.free(20);
+        t.alloc(30).unwrap();
+        assert_eq!(t.entries_in_use, 70);
+        assert_eq!(t.high_water_entries, 70);
+        assert!(t.alloc(40).is_err());
+    }
+}

@@ -1,0 +1,112 @@
+//! Cycle-level simulator of the Chameleon SoC.
+//!
+//! The paper's three contributions map to:
+//! * [`learning`] — unified learning/inference (learning controller +
+//!   prototypical parameter extractor, Figs. 4–6);
+//! * [`scheduler`] + [`addrgen`] — greedy dilation-aware TCN execution
+//!   with FIFO activation storage (Fig. 8);
+//! * [`pe_array`] + [`memory`] + [`power`] — dual-mode MatMul-free compute
+//!   with bank power gating (Figs. 10–11).
+//!
+//! The simulator executes real u4 data bit-exactly (asserted against
+//! [`crate::golden`]) while counting cycles, SRAM traffic and energy.
+
+pub mod addrgen;
+pub mod area;
+pub mod learning;
+pub mod memory;
+pub mod pe_array;
+pub mod power;
+pub mod scheduler;
+pub mod streaming;
+pub mod trace;
+
+pub use learning::{learning_cycles, LearningController};
+pub use pe_array::ArrayMode;
+pub use scheduler::{GreedySim, Schedule, SimResult};
+pub use trace::Trace;
+
+use anyhow::Result;
+
+use crate::model::QuantModel;
+
+/// Operating point of the chip (voltage + clock + array mode).
+#[derive(Debug, Clone, Copy)]
+pub struct OperatingPoint {
+    pub voltage: f64,
+    pub f_hz: f64,
+    pub mode: ArrayMode,
+}
+
+impl OperatingPoint {
+    /// The paper's real-time MFCC KWS point (3.1 uW).
+    pub fn kws_low_power() -> Self {
+        OperatingPoint { voltage: 0.73, f_hz: 23_300.0, mode: ArrayMode::M4x4 }
+    }
+
+    /// The paper's raw-audio KWS point (59.4 uW).
+    pub fn kws_raw() -> Self {
+        OperatingPoint { voltage: 0.73, f_hz: 532_000.0, mode: ArrayMode::M16x16 }
+    }
+
+    /// The paper's high-speed FSL point (11.6 mW @ 100 MHz, 1.0 V).
+    pub fn fsl_fast() -> Self {
+        OperatingPoint { voltage: 1.0, f_hz: 100e6, mode: ArrayMode::M16x16 }
+    }
+
+    /// The paper's minimum-power FSL point (12.9 uW @ 100 kHz, 0.625 V).
+    pub fn fsl_low_power() -> Self {
+        OperatingPoint { voltage: 0.625, f_hz: 100e3, mode: ArrayMode::M16x16 }
+    }
+
+    /// Wall-clock for `cycles` at this operating point.
+    pub fn seconds(&self, cycles: u64) -> f64 {
+        cycles as f64 / self.f_hz
+    }
+
+    /// Energy for `cycles` at this operating point.
+    pub fn energy(&self, cycles: u64) -> f64 {
+        power::energy(self.mode, self.voltage, self.f_hz, cycles, None)
+    }
+
+    /// Sustained power at this operating point.
+    pub fn power(&self) -> power::PowerBreakdown {
+        power::power(self.mode, self.voltage, self.f_hz, None)
+    }
+}
+
+/// Convenience: one-shot single-output inference with trace.
+pub fn simulate_inference(
+    model: &QuantModel,
+    mode: ArrayMode,
+    x_q: &[u8],
+) -> Result<SimResult> {
+    let sim = GreedySim::new(model, mode);
+    let schedule = Schedule::single_output(model);
+    sim.run(x_q, &schedule)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn operating_points_sane() {
+        let op = OperatingPoint::kws_low_power();
+        assert!(op.power().total() < 5e-6);
+        let op = OperatingPoint::fsl_fast();
+        assert!(op.seconds(100_000) < 2e-3);
+    }
+
+    #[test]
+    fn simulate_inference_end_to_end() {
+        let m = crate::model::tests::tiny_model();
+        let mut rng = Rng::new(3);
+        let x: Vec<u8> = (0..m.seq_len * m.in_channels).map(|_| rng.range(0, 16) as u8).collect();
+        let r = simulate_inference(&m, ArrayMode::M16x16, &x).unwrap();
+        assert_eq!(r.embedding.len(), m.embed_dim);
+        assert!(r.trace.total_cycles() > 0);
+        assert!(r.trace.act_mem_high_water > 0);
+    }
+}

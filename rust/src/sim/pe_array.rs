@@ -1,0 +1,203 @@
+//! The dual-mode MatMul-free PE array (paper §III-C, Fig. 10/11).
+//!
+//! Functionally each cycle multiplies an `A`-vector of u4 activations by an
+//! `A x A` block of s4 log2 weights using shifts + sign correction, summing
+//! into 18-bit output-stationary accumulators. `A` is 16 in high-throughput
+//! mode and 4 in low-leakage mode (MSB weight/bias banks power-gated).
+
+use crate::quant;
+
+/// PE-array operating mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrayMode {
+    /// Low-leakage 4x4 mode: MSB memory banks power-gated, 16 weights/cycle.
+    M4x4,
+    /// High-throughput 16x16 mode: all banks on, 256 weights/cycle.
+    M16x16,
+}
+
+impl ArrayMode {
+    pub fn size(self) -> usize {
+        match self {
+            ArrayMode::M4x4 => 4,
+            ArrayMode::M16x16 => 16,
+        }
+    }
+
+    /// Peak throughput in ops/s at clock `f_hz` (2 ops per MAC lane).
+    pub fn peak_ops(self, f_hz: f64) -> f64 {
+        let a = self.size() as f64;
+        2.0 * a * a * f_hz
+    }
+
+    /// Whether the gateable MSB memory sections must be powered.
+    pub fn msb_banks_on(self) -> bool {
+        matches!(self, ArrayMode::M16x16)
+    }
+}
+
+/// Cost (in cycles) of producing one output node of a conv layer:
+/// `k` taps x `ceil(cin/A)` input slabs x `ceil(cout/A)` output groups,
+/// plus one OPE write-back cycle per output group.
+pub fn node_cycles(mode: ArrayMode, k: usize, cin: usize, cout: usize) -> u64 {
+    let a = mode.size();
+    let in_slabs = cin.div_ceil(a) as u64;
+    let out_groups = cout.div_ceil(a) as u64;
+    (k as u64) * in_slabs * out_groups + out_groups
+}
+
+/// SRAM traffic of one node: weight reads (one `A x A` block per
+/// tap/slab/group), activation reads (one `A`-row per tap/slab) and
+/// activation writes (one row per output group).
+pub fn node_sram(mode: ArrayMode, k: usize, cin: usize, cout: usize) -> (u64, u64) {
+    let a = mode.size() as u64;
+    let in_slabs = cin.div_ceil(mode.size()) as u64;
+    let out_groups = cout.div_ceil(mode.size()) as u64;
+    let weight_reads = (k as u64) * in_slabs * out_groups * a * a;
+    let act_reads = (k as u64) * in_slabs * a;
+    let act_writes = out_groups * a;
+    (weight_reads + act_reads, act_writes)
+}
+
+/// One full PE-array reduction for a single output channel: products over
+/// the flattened `(tap, cin)` axis in `A*A`-independent but 16-element
+/// saturation slabs — the saturation grain is the physical 16-lane adder
+/// tree, identical in both modes (the 4x4 mode time-multiplexes it).
+///
+/// `taps[j]` is the input row for tap `j` (`None` = causal zero padding).
+pub fn reduce_node(taps: &[Option<&[u8]>], codes: &[i8], cin: usize, cout: usize, co: usize) -> i32 {
+    let k = taps.len();
+    let mut acc: i32 = 0;
+    let mut partial: i32 = 0;
+    let mut slab: usize = 0;
+    for (j, tap) in taps.iter().enumerate() {
+        for ci in 0..cin {
+            if let Some(row) = tap {
+                let a = row[ci] as i32;
+                let w = codes[(j * cin + ci) * cout + co];
+                partial += quant::shift_product(a, w);
+            }
+            slab += 1;
+            if slab == 16 {
+                acc = quant::sat_acc(acc + partial);
+                partial = 0;
+                slab = 0;
+            }
+        }
+    }
+    let _ = k;
+    if slab != 0 {
+        acc = quant::sat_acc(acc + partial);
+    }
+    acc
+}
+
+/// Row-at-once variant of [`reduce_node`]: accumulates all `c_out`
+/// channels of one node over pre-decoded weights, slab-major (§Perf:
+/// contiguous weight rows vectorize; identical saturation points).
+/// `acc`/`partial` are caller-provided scratch of length `c_out`.
+pub fn reduce_node_row(
+    taps: &[Option<&[u8]>],
+    decoded: &[i32],
+    cin: usize,
+    cout: usize,
+    acc: &mut [i32],
+    partial: &mut [i32],
+) {
+    acc.fill(0);
+    partial.fill(0);
+    let mut slab = 0usize;
+    for (j, tap) in taps.iter().enumerate() {
+        for ci in 0..cin {
+            if let Some(row) = tap {
+                let a = row[ci] as i32;
+                if a != 0 {
+                    let wrow = &decoded[(j * cin + ci) * cout..(j * cin + ci + 1) * cout];
+                    for (p, &w) in partial.iter_mut().zip(wrow) {
+                        *p += a * w;
+                    }
+                }
+            }
+            slab += 1;
+            if slab == 16 {
+                for (a, p) in acc.iter_mut().zip(partial.iter_mut()) {
+                    *a = quant::sat_acc(*a + *p);
+                    *p = 0;
+                }
+                slab = 0;
+            }
+        }
+    }
+    if slab != 0 {
+        for (a, p) in acc.iter_mut().zip(partial.iter_mut()) {
+            *a = quant::sat_acc(*a + *p);
+        }
+    }
+}
+
+/// Decode a code slice once (per layer) for the row-based reduction.
+pub fn decode_codes(codes: &[i8]) -> Vec<i32> {
+    codes.iter().map(|&c| quant::log2_decode(c)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_ops_matches_paper() {
+        // 16x16 @ 150 MHz = 76.8 GOPS (paper Table II), 4x4 = 1/16 of that.
+        assert!((ArrayMode::M16x16.peak_ops(150e6) - 76.8e9).abs() < 1e3);
+        assert!((ArrayMode::M4x4.peak_ops(150e6) - 4.8e9).abs() < 1e3);
+    }
+
+    #[test]
+    fn mode_ratio_is_16x() {
+        let c16 = node_cycles(ArrayMode::M16x16, 5, 32, 32);
+        let c4 = node_cycles(ArrayMode::M4x4, 5, 32, 32);
+        // 5*2*2+2 = 22 vs 5*8*8+8 = 328: ~16x more cycles in 4x4 mode.
+        assert_eq!(c16, 22);
+        assert_eq!(c4, 328);
+    }
+
+    #[test]
+    fn reduce_matches_golden_layer() {
+        use crate::golden;
+        use crate::model::QLayer;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(77);
+        let (k, cin, cout, t_len) = (3usize, 5usize, 4usize, 9usize);
+        let codes: Vec<i8> = (0..k * cin * cout).map(|_| rng.range(-8, 8) as i8).collect();
+        let x: Vec<u8> = (0..t_len * cin).map(|_| rng.range(0, 16) as u8).collect();
+        let layer = QLayer {
+            codes: codes.clone(),
+            codes_shape: vec![k, cin, cout],
+            bias: vec![0; cout],
+            out_shift: 0,
+            dilation: 2,
+            relu: false,
+            res_shift: None,
+            res_codes: None,
+            res_codes_shape: None,
+            res_bias: None,
+            res_out_shift: None,
+        };
+        let want = golden::conv_layer_raw(&x, t_len, &layer, None);
+        for t in 0..t_len {
+            let taps: Vec<Option<&[u8]>> = (0..k)
+                .map(|j| {
+                    let off = (k - 1 - j) * 2;
+                    if t >= off {
+                        Some(&x[(t - off) * cin..(t - off + 1) * cin])
+                    } else {
+                        None
+                    }
+                })
+                .collect();
+            for co in 0..cout {
+                let got = reduce_node(&taps, &codes, cin, cout, co);
+                assert_eq!(got, want[t * cout + co], "t={t} co={co}");
+            }
+        }
+    }
+}

@@ -1,0 +1,506 @@
+//! Greedy dilation-aware TCN execution (paper §III-B, Fig. 8).
+//!
+//! Builds the *needed-node* set top-down from the classification output
+//! (skipping the dilation-induced zero/unused activations — the white
+//! circles of Fig. 7(b)), then executes nodes greedily: a layer fires as
+//! soon as its causal taps are available, cascading through the network,
+//! with control reverting to earlier layers when more inputs are required.
+//!
+//! Activation rows live in per-layer FIFO storage with exact liveness
+//! (a row is freed once its last consumer has read it — the address
+//! generator's "overwrite the oldest, unused" policy); the run reports the
+//! exact activation-memory high-water mark along with cycle / MAC / SRAM
+//! counters from the PE-array cost model.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::model::{QLayer, QuantModel};
+use crate::quant;
+use crate::sim::memory::ActMemTracker;
+use crate::sim::pe_array::{node_cycles, node_sram, reduce_node_row, ArrayMode};
+use crate::sim::trace::{Phase, Trace};
+
+/// Result of one simulated inference.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub embedding: Vec<u8>,
+    pub logits: Option<Vec<i32>>,
+    pub trace: Trace,
+}
+
+/// Which output nodes each conv layer must produce.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    /// `needed[l]` = sorted needed output timesteps of conv layer `l`.
+    pub needed: Vec<Vec<usize>>,
+    pub seq_len: usize,
+}
+
+impl Schedule {
+    /// Dense schedule: every node of every layer (weight-stationary-like
+    /// coverage, used for the ablation and for per-step streaming outputs).
+    pub fn dense(model: &QuantModel) -> Schedule {
+        let t = model.seq_len;
+        Schedule {
+            needed: model.layers.iter().map(|_| (0..t).collect()).collect(),
+            seq_len: t,
+        }
+    }
+
+    /// Dilation-aware schedule for a single classification at the final
+    /// timestep: only ancestors of the last node are computed.
+    pub fn single_output(model: &QuantModel) -> Schedule {
+        let t_len = model.seq_len;
+        let n = model.layers.len();
+        let mut needed: Vec<Vec<bool>> = vec![vec![false; t_len]; n];
+        // The embedding FC reads the final timestep of the last conv layer.
+        needed[n - 1][t_len - 1] = true;
+        // Walk conv layers backwards, propagating tap requirements.
+        for l in (0..n).rev() {
+            let layer = &model.layers[l];
+            let k = layer.kernel_size();
+            let d = layer.dilation;
+            let timesteps: Vec<usize> =
+                (0..t_len).filter(|&t| needed[l][t]).collect();
+            for &t in &timesteps {
+                for j in 0..k {
+                    let off = (k - 1 - j) * d;
+                    if t >= off {
+                        let tin = t - off;
+                        // Input of layer l = output of layer l-1 (or the
+                        // model input, which needs no propagation).
+                        if l > 0 {
+                            needed[l - 1][tin] = true;
+                        }
+                    }
+                }
+                // conv2 (odd layers) additionally consumes the block input
+                // at timestep t for the residual merge.
+                if l % 2 == 1 && l >= 2 {
+                    needed[l - 2][t] = true;
+                }
+            }
+        }
+        Schedule {
+            needed: needed
+                .into_iter()
+                .map(|v| (0..t_len).filter(|&t| v[t]).collect())
+                .collect(),
+            seq_len: t_len,
+        }
+    }
+
+    pub fn total_nodes(&self) -> u64 {
+        self.needed.iter().map(|v| v.len() as u64).sum()
+    }
+
+    pub fn dense_nodes(&self) -> u64 {
+        (self.needed.len() * self.seq_len) as u64
+    }
+}
+
+/// Key of a produced activation row: (producer layer index + 1; 0 = input).
+type RowKey = (usize, usize); // (producer id, timestep)
+
+struct LiveStore {
+    rows: HashMap<RowKey, (Vec<u8>, u32)>, // row data + remaining uses
+    tracker: ActMemTracker,
+    reads: u64,
+    writes: u64,
+}
+
+impl LiveStore {
+    fn new(capacity_entries: usize) -> Self {
+        LiveStore {
+            rows: HashMap::new(),
+            tracker: ActMemTracker::new(capacity_entries),
+            reads: 0,
+            writes: 0,
+        }
+    }
+
+    fn insert(&mut self, key: RowKey, row: Vec<u8>, uses: u32) -> Result<()> {
+        if uses == 0 {
+            return Ok(()); // dead on arrival: the chip never stores it
+        }
+        self.tracker.alloc(row.len())?;
+        self.writes += 1;
+        self.rows.insert(key, (row, uses));
+        Ok(())
+    }
+
+    /// Read a row, decrementing its use count and freeing it at zero.
+    fn consume(&mut self, key: RowKey) -> Result<Vec<u8>> {
+        self.reads += 1;
+        let (row, uses) = self
+            .rows
+            .get_mut(&key)
+            .ok_or_else(|| anyhow!("read of dead/absent row {key:?} — scheduler bug"))?;
+        let out = row.clone();
+        *uses -= 1;
+        if *uses == 0 {
+            let w = row.len();
+            self.rows.remove(&key);
+            self.tracker.free(w);
+        }
+        Ok(out)
+    }
+
+    /// Peek without consuming (used for multi-tap reads where the same row
+    /// feeds several taps of one node — physically a single SRAM read burst).
+    fn peek(&self, key: RowKey) -> Option<&[u8]> {
+        self.rows.get(&key).map(|(r, _)| r.as_slice())
+    }
+}
+
+/// The greedy executor.
+pub struct GreedySim<'m> {
+    pub model: &'m QuantModel,
+    pub mode: ArrayMode,
+    /// Activation memory budget in u4 entries (default: chip's 4096).
+    pub act_capacity: usize,
+    /// §Perf: per-layer pre-decoded weights (conv, residual-conv) so the
+    /// hot loop runs integer multiplies over contiguous rows instead of
+    /// decoding log2 codes per MAC.
+    decoded: Vec<Vec<i32>>,
+    decoded_res: Vec<Option<Vec<i32>>>,
+    decoded_embed: Vec<i32>,
+}
+
+impl<'m> GreedySim<'m> {
+    pub fn new(model: &'m QuantModel, mode: ArrayMode) -> Self {
+        Self::with_capacity(model, mode, 4096)
+    }
+
+    pub fn with_capacity(model: &'m QuantModel, mode: ArrayMode, act_capacity: usize) -> Self {
+        use crate::sim::pe_array::decode_codes;
+        let decoded = model.layers.iter().map(|l| decode_codes(&l.codes)).collect();
+        let decoded_res = model
+            .layers
+            .iter()
+            .map(|l| l.res_codes.as_ref().map(|rc| decode_codes(rc)))
+            .collect();
+        let decoded_embed = decode_codes(&model.embed.codes);
+        GreedySim { model, mode, act_capacity, decoded, decoded_res, decoded_embed }
+    }
+
+    /// Run one inference with the given schedule.
+    pub fn run(&self, x_q: &[u8], schedule: &Schedule) -> Result<SimResult> {
+        let model = self.model;
+        let t_len = model.seq_len;
+        if x_q.len() != t_len * model.in_channels {
+            bail!("input size mismatch");
+        }
+        let n_layers = model.layers.len();
+        let mut trace = Trace::default();
+
+        // ---- use counting: how many consumers read each produced row ----
+        // producer ids: 0 = model input, l+1 = conv layer l.
+        let mut uses: HashMap<RowKey, u32> = HashMap::new();
+        for l in 0..n_layers {
+            let layer = &model.layers[l];
+            let (k, d) = (layer.kernel_size(), layer.dilation);
+            for &t in &schedule.needed[l] {
+                for j in 0..k {
+                    let off = (k - 1 - j) * d;
+                    if t >= off {
+                        *uses.entry((l, t - off)).or_insert(0) += 1;
+                    }
+                }
+                if l % 2 == 1 {
+                    // residual merge reads the block input at t
+                    let block_input_producer = if l >= 2 { l - 1 } else { 0 };
+                    *uses.entry((block_input_producer, t)).or_insert(0) += 1;
+                }
+            }
+        }
+        // embedding reads the final row of the last conv layer
+        *uses.entry((n_layers, t_len - 1)).or_insert(0) += 1;
+
+        let mut store = LiveStore::new(self.act_capacity);
+
+        // ---- greedy cascade ----
+        // per-layer cursor into its needed list + last produced timestep
+        let mut cursor = vec![0usize; n_layers];
+        let mut avail: Vec<i64> = vec![-1; n_layers + 1]; // by producer id
+        let mut final_row: Option<Vec<u8>> = None;
+
+        for t_in in 0..t_len {
+            // the streaming input buffer hands the next timestep to the
+            // address generator, which stores it only if some node reads it
+            let key = (0usize, t_in);
+            let n_uses = uses.get(&key).copied().unwrap_or(0);
+            store.insert(key, x_q[t_in * model.in_channels..(t_in + 1) * model.in_channels].to_vec(), n_uses)?;
+            avail[0] = t_in as i64;
+
+            // cascade: fire every layer whose next needed node is ready
+            loop {
+                let mut progressed = false;
+                for l in 0..n_layers {
+                    while cursor[l] < schedule.needed[l].len() {
+                        let t = schedule.needed[l][cursor[l]];
+                        // ready when the producer has reached timestep t
+                        if avail[l] < t as i64 {
+                            break;
+                        }
+                        self.fire_node(l, t, &mut store, &uses, &mut trace)?;
+                        avail[l + 1] = t as i64;
+                        cursor[l] += 1;
+                        progressed = true;
+                        if l == n_layers - 1 && t == t_len - 1 {
+                            final_row = Some(
+                                store.peek((n_layers, t)).unwrap().to_vec(),
+                            );
+                        }
+                    }
+                }
+                if !progressed {
+                    break;
+                }
+            }
+        }
+
+        for (l, c) in cursor.iter().enumerate() {
+            if *c != schedule.needed[l].len() {
+                bail!("layer {l} incomplete: {}/{} nodes", c, schedule.needed[l].len());
+            }
+        }
+        let final_row = final_row.ok_or_else(|| anyhow!("final row never produced"))?;
+        // consume the embedding's read
+        let _ = store.consume((n_layers, t_len - 1))?;
+
+        // ---- embedding FC + optional head ----
+        let emb = self.run_fc(&final_row, &model.embed, true, &mut trace);
+        let emb_u8: Vec<u8> = emb.iter().map(|&v| v as u8).collect();
+        let logits = model.head.as_ref().map(|h| {
+            self.run_fc(&emb_u8, h, false, &mut trace)
+        });
+
+        trace.nodes_computed = schedule.total_nodes();
+        trace.nodes_skipped = schedule.dense_nodes() - schedule.total_nodes();
+        trace.act_mem_high_water = store.tracker.high_water_bytes();
+        trace.inference.sram_reads += store.reads;
+        trace.inference.sram_writes += store.writes;
+
+        Ok(SimResult { embedding: emb_u8, logits, trace })
+    }
+
+    /// Compute one conv node (all output channels at timestep `t`).
+    fn fire_node(
+        &self,
+        l: usize,
+        t: usize,
+        store: &mut LiveStore,
+        uses: &HashMap<RowKey, u32>,
+        trace: &mut Trace,
+    ) -> Result<()> {
+        let model = self.model;
+        let layer = &model.layers[l];
+        let (k, d) = (layer.kernel_size(), layer.dilation);
+        let (cin, cout) = (layer.c_in(), layer.c_out());
+
+        // Gather taps (peek: one physical read per tap row, consumed below).
+        let mut tap_keys: Vec<Option<RowKey>> = Vec::with_capacity(k);
+        for j in 0..k {
+            let off = (k - 1 - j) * d;
+            tap_keys.push(if t >= off { Some((l, t - off)) } else { None });
+        }
+        let tap_rows: Vec<Option<Vec<u8>>> = tap_keys
+            .iter()
+            .map(|tk| match tk {
+                Some(key) => store
+                    .peek(*key)
+                    .map(|r| r.to_vec())
+                    .ok_or_else(|| anyhow!("layer {l} t {t}: tap row {key:?} missing"))
+                    .map(Some),
+                None => Ok(None),
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        // Residual path for conv2 layers.
+        let residual_row: Option<Vec<u8>> = if l % 2 == 1 {
+            let block_input_producer = if l >= 2 { l - 1 } else { 0 };
+            let raw = store.consume((block_input_producer, t))?;
+            match (&self.decoded_res[l], &layer.res_codes_shape) {
+                (Some(rc), Some(shape)) => {
+                    // 1x1 residual conv node (extra PE-array pass).
+                    let (rcin, rcout) = (shape[shape.len() - 2], shape[shape.len() - 1]);
+                    let bias = layer.res_bias.as_ref().unwrap();
+                    let shift = layer.res_out_shift.unwrap();
+                    let taps = [Some(raw.as_slice())];
+                    let mut acc = vec![0i32; rcout];
+                    let mut partial = vec![0i32; rcout];
+                    reduce_node_row(&taps, rc, rcin, rcout, &mut acc, &mut partial);
+                    let row: Vec<u8> = (0..rcout)
+                        .map(|co| quant::ope(acc[co], bias[co], shift, true, 0, 0) as u8)
+                        .collect();
+                    let inf = trace.phase_mut(Phase::Inference);
+                    inf.cycles += node_cycles(self.mode, 1, rcin, rcout);
+                    inf.macs += (rcin * rcout) as u64;
+                    let (r, w) = node_sram(self.mode, 1, rcin, rcout);
+                    inf.sram_reads += r;
+                    inf.sram_writes += w;
+                    Some(row)
+                }
+                _ => Some(raw),
+            }
+        } else {
+            None
+        };
+
+        // PE-array reduction + OPE for every output channel (slab-major
+        // over pre-decoded weights; identical numerics to reduce_node).
+        let taps: Vec<Option<&[u8]>> = tap_rows.iter().map(|r| r.as_deref()).collect();
+        let mut acc = vec![0i32; cout];
+        let mut partial = vec![0i32; cout];
+        reduce_node_row(&taps, &self.decoded[l], cin, cout, &mut acc, &mut partial);
+        let mut out = vec![0u8; cout];
+        for (co, slot) in out.iter_mut().enumerate() {
+            let res = residual_row.as_ref().map_or(0, |r| r[co] as i32);
+            let rs = layer.res_shift.unwrap_or(0);
+            let (res, rs) = if rs < 0 { (res >> (-rs), 0) } else { (res, rs) };
+            *slot = quant::ope(acc[co], layer.bias[co], layer.out_shift, true, res, rs) as u8;
+        }
+
+        // Consume the tap reads (liveness decrement, one per tap per node).
+        for tk in tap_keys.into_iter().flatten() {
+            let _ = store.consume(tk)?;
+        }
+
+        let n_uses = uses.get(&(l + 1, t)).copied().unwrap_or(0);
+        store.insert((l + 1, t), out, n_uses)?;
+
+        let inf = trace.phase_mut(Phase::Inference);
+        inf.cycles += node_cycles(self.mode, k, cin, cout);
+        inf.macs += (k * cin * cout) as u64;
+        let (r, w) = node_sram(self.mode, k, cin, cout);
+        inf.sram_reads += r;
+        inf.sram_writes += w;
+        Ok(())
+    }
+
+    /// FC layer on the PE array (embedding / classifier head).
+    fn run_fc(&self, x: &[u8], layer: &QLayer, relu: bool, trace: &mut Trace) -> Vec<i32> {
+        let cin = layer.c_in();
+        let cout = layer.c_out();
+        // FC codes may be stored [Cin, Cout] or [1, Cin, Cout].
+        let taps = [Some(x)];
+        let decoded_local;
+        let decoded = if std::ptr::eq(layer, &self.model.embed) {
+            &self.decoded_embed
+        } else {
+            decoded_local = crate::sim::pe_array::decode_codes(&layer.codes);
+            &decoded_local
+        };
+        let mut acc = vec![0i32; cout];
+        let mut partial = vec![0i32; cout];
+        reduce_node_row(&taps, decoded, cin, cout, &mut acc, &mut partial);
+        let mut out = vec![0i32; cout];
+        for (co, slot) in out.iter_mut().enumerate() {
+            *slot = quant::ope(acc[co], layer.bias[co], layer.out_shift, relu, 0, 0);
+        }
+        let inf = trace.phase_mut(Phase::Inference);
+        inf.cycles += node_cycles(self.mode, 1, cin, cout);
+        inf.macs += (cin * cout) as u64;
+        let (r, w) = node_sram(self.mode, 1, cin, cout);
+        inf.sram_reads += r;
+        inf.sram_writes += w;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::golden;
+    use crate::util::rng::Rng;
+
+    fn random_input(model: &QuantModel, seed: u64) -> Vec<u8> {
+        let mut rng = Rng::new(seed);
+        (0..model.seq_len * model.in_channels)
+            .map(|_| rng.range(0, 16) as u8)
+            .collect()
+    }
+
+    #[test]
+    fn single_schedule_is_subset_of_dense() {
+        let m = crate::model::tests::tiny_model();
+        let s = Schedule::single_output(&m);
+        let d = Schedule::dense(&m);
+        assert!(s.total_nodes() <= d.total_nodes());
+        // last layer needs exactly the final node... plus whatever the
+        // residual chain adds; at minimum the final timestep is present.
+        assert!(s.needed.last().unwrap().contains(&(m.seq_len - 1)));
+    }
+
+    #[test]
+    fn sim_matches_golden_single() {
+        let m = crate::model::tests::tiny_model();
+        let x = random_input(&m, 1);
+        let want = golden::embed(&m, &x).unwrap();
+        let sim = GreedySim::new(&m, ArrayMode::M16x16);
+        let got = sim.run(&x, &Schedule::single_output(&m)).unwrap();
+        assert_eq!(got.embedding, want);
+    }
+
+    #[test]
+    fn sim_matches_golden_dense() {
+        let m = crate::model::tests::tiny_model();
+        let x = random_input(&m, 2);
+        let want = golden::embed(&m, &x).unwrap();
+        let sim = GreedySim::new(&m, ArrayMode::M4x4);
+        let got = sim.run(&x, &Schedule::dense(&m)).unwrap();
+        assert_eq!(got.embedding, want);
+    }
+
+    #[test]
+    fn dense_mode_4x4_needs_more_cycles() {
+        let m = crate::model::tests::tiny_model();
+        let x = random_input(&m, 3);
+        let c16 = GreedySim::new(&m, ArrayMode::M16x16)
+            .run(&x, &Schedule::dense(&m))
+            .unwrap()
+            .trace
+            .total_cycles();
+        let c4 = GreedySim::new(&m, ArrayMode::M4x4)
+            .run(&x, &Schedule::dense(&m))
+            .unwrap()
+            .trace
+            .total_cycles();
+        // The tiny test model has 4-6 channels, so the asymptotic 16x only
+        // shows as >1x here; the exact 16x ratio is asserted at 32 channels
+        // in pe_array::tests::mode_ratio_is_16x.
+        assert!(c4 > c16, "4x4 {c4} vs 16x16 {c16}");
+    }
+
+    #[test]
+    fn skipping_reduces_compute() {
+        let m = crate::model::tests::tiny_model();
+        let x = random_input(&m, 4);
+        let sim = GreedySim::new(&m, ArrayMode::M16x16);
+        let single = sim.run(&x, &Schedule::single_output(&m)).unwrap();
+        let dense = sim.run(&x, &Schedule::dense(&m)).unwrap();
+        assert!(single.trace.inference.macs < dense.trace.inference.macs);
+        assert!(single.trace.nodes_skipped > 0);
+        assert_eq!(dense.trace.nodes_skipped, 0);
+        // identical outputs (the paper's "producing identical outputs")
+        assert_eq!(single.embedding, dense.embedding);
+    }
+
+    #[test]
+    fn memory_high_water_is_bounded_for_single() {
+        let m = crate::model::tests::tiny_model();
+        let x = random_input(&m, 5);
+        let sim = GreedySim::new(&m, ArrayMode::M16x16);
+        let r = sim.run(&x, &Schedule::single_output(&m)).unwrap();
+        // greedy estimate: sum over layers of (k+1) rows (+ residual taps)
+        let est = m.fifo_activation_bytes();
+        assert!(
+            r.trace.act_mem_high_water <= 2 * est,
+            "high water {} vs estimate {est}",
+            r.trace.act_mem_high_water
+        );
+    }
+}

@@ -1,0 +1,231 @@
+//! Dense streaming execution: one output per input timestep, Giraldo-style
+//! `(k-1)d + 1` FIFO rings (paper §III-B's baseline dataflow, which
+//! Chameleon extends with dilation-aware skipping for single-output
+//! classification). Used for per-frame streaming outputs — e.g. a
+//! wake-word detector emitting a posterior every frame — and as the
+//! live-hardware counterpart of [`crate::sim::addrgen::LayerRing`].
+
+use anyhow::{bail, Result};
+
+use crate::model::{QLayer, QuantModel};
+use crate::quant;
+use crate::sim::addrgen::LayerRing;
+use crate::sim::pe_array::{node_cycles, reduce_node, ArrayMode};
+
+/// Stateful streaming executor: push input timesteps, receive the last
+/// conv layer's activation row for every timestep once warmed up.
+pub struct StreamingTcn<'m> {
+    model: &'m QuantModel,
+    mode: ArrayMode,
+    /// ring\[0\] = model input; ring\[l+1\] = output of conv layer l.
+    rings: Vec<LayerRing>,
+    /// next timestep each conv layer will produce
+    next_t: Vec<usize>,
+    t_in: usize,
+    pub cycles: u64,
+}
+
+impl<'m> StreamingTcn<'m> {
+    pub fn new(model: &'m QuantModel, mode: ArrayMode) -> Self {
+        let mut rings = Vec::with_capacity(model.layers.len() + 1);
+        // Input ring: sized for layer 0's history + block-0 residual tap.
+        let l0 = &model.layers[0];
+        rings.push(LayerRing::new(
+            model.in_channels,
+            (l0.kernel_size() - 1) * l0.dilation + 2,
+        ));
+        for (i, l) in model.layers.iter().enumerate() {
+            // Ring for this layer's OUTPUT: consumers are the next layer's
+            // taps and (for block inputs) the residual merge of the block
+            // after; size for the larger history.
+            let hist = model
+                .layers
+                .get(i + 1)
+                .map(|nl| (nl.kernel_size() - 1) * nl.dilation + 1)
+                .unwrap_or(1);
+            rings.push(LayerRing::new(l.c_out(), hist + 1));
+        }
+        StreamingTcn {
+            model,
+            mode,
+            rings,
+            next_t: vec![0; model.layers.len()],
+            t_in: 0,
+            cycles: 0,
+        }
+    }
+
+    /// Total activation-memory reservation of the dense rings (bytes).
+    pub fn reserved_bytes(&self) -> usize {
+        self.rings.iter().map(|r| r.reserved_entries()).sum::<usize>() / 2
+    }
+
+    /// Push one input timestep; returns the final conv layer's u4 rows
+    /// that became available (usually one once warmed up).
+    pub fn push(&mut self, row: &[u8]) -> Result<Vec<(usize, Vec<u8>)>> {
+        if row.len() != self.model.in_channels {
+            bail!("row width {} != in_channels {}", row.len(), self.model.in_channels);
+        }
+        self.rings[0].push(self.t_in, row.to_vec())?;
+        self.t_in += 1;
+        let n_layers = self.model.layers.len();
+        let mut outputs = Vec::new();
+        loop {
+            let mut progressed = false;
+            for l in 0..n_layers {
+                let t = self.next_t[l];
+                // dense: produce t as soon as the producer reached t
+                let avail = self.rings[l].latest().map(|x| x as i64).unwrap_or(-1);
+                if avail < t as i64 {
+                    continue;
+                }
+                let out = self.fire(l, t)?;
+                if l == n_layers - 1 {
+                    outputs.push((t, out.clone()));
+                }
+                self.rings[l + 1].push(t, out)?;
+                self.next_t[l] += 1;
+                progressed = true;
+            }
+            if !progressed {
+                break;
+            }
+        }
+        Ok(outputs)
+    }
+
+    fn fire(&mut self, l: usize, t: usize) -> Result<Vec<u8>> {
+        let layer: &QLayer = &self.model.layers[l];
+        let (k, d) = (layer.kernel_size(), layer.dilation);
+        let (cin, cout) = (layer.c_in(), layer.c_out());
+        // Gather tap rows from the input ring.
+        let mut taps_data: Vec<Option<Vec<u8>>> = Vec::with_capacity(k);
+        for j in 0..k {
+            let off = (k - 1 - j) * d;
+            if t >= off {
+                let tin = t - off;
+                let row = self.rings[l]
+                    .get(tin)
+                    .map(|r| r.to_vec())
+                    .ok_or_else(|| anyhow::anyhow!("layer {l}: tap {tin} evicted (ring too small)"))?;
+                taps_data.push(Some(row));
+            } else {
+                taps_data.push(None);
+            }
+        }
+        // Residual row for conv2 layers.
+        let residual: Option<Vec<u8>> = if l % 2 == 1 {
+            let src = if l >= 2 { l - 1 } else { 0 };
+            let raw = self.rings[src]
+                .get(t)
+                .map(|r| r.to_vec())
+                .ok_or_else(|| anyhow::anyhow!("layer {l}: residual row {t} evicted"))?;
+            match (&layer.res_codes, &layer.res_codes_shape) {
+                (Some(rc), Some(shape)) => {
+                    let (rcin, rcout) = (shape[shape.len() - 2], shape[shape.len() - 1]);
+                    let bias = layer.res_bias.as_ref().unwrap();
+                    let shift = layer.res_out_shift.unwrap();
+                    let taps = [Some(raw.as_slice())];
+                    let mut rrow = vec![0u8; rcout];
+                    for (co, slot) in rrow.iter_mut().enumerate() {
+                        let acc = reduce_node(&taps, rc, rcin, rcout, co);
+                        *slot = quant::ope(acc, bias[co], shift, true, 0, 0) as u8;
+                    }
+                    self.cycles += node_cycles(self.mode, 1, rcin, rcout);
+                    Some(rrow)
+                }
+                _ => Some(raw),
+            }
+        } else {
+            None
+        };
+        let taps: Vec<Option<&[u8]>> = taps_data.iter().map(|r| r.as_deref()).collect();
+        let mut out = vec![0u8; cout];
+        for (co, slot) in out.iter_mut().enumerate() {
+            let acc = reduce_node(&taps, &layer.codes, cin, cout, co);
+            let res = residual.as_ref().map_or(0, |r| r[co] as i32);
+            let rs = layer.res_shift.unwrap_or(0);
+            let (res, rs) = if rs < 0 { (res >> (-rs), 0) } else { (res, rs) };
+            *slot = quant::ope(acc, layer.bias[co], layer.out_shift, true, res, rs) as u8;
+        }
+        self.cycles += node_cycles(self.mode, k, cin, cout);
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::golden;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn streaming_matches_golden_dense_trajectory() {
+        let m = crate::model::tests::tiny_model();
+        let mut rng = Rng::new(21);
+        let x: Vec<u8> = (0..m.seq_len * m.in_channels).map(|_| rng.range(0, 16) as u8).collect();
+        // golden full trajectory of the last conv layer
+        let mut h = x.clone();
+        let t_len = m.seq_len;
+        let mut want = Vec::new();
+        for b in 0..m.n_blocks() {
+            let l1 = &m.layers[2 * b];
+            let l2 = &m.layers[2 * b + 1];
+            let blk_in = h.clone();
+            h = golden::conv_layer(&h, t_len, l1, None);
+            let res = match (&l2.res_codes, &l2.res_codes_shape) {
+                (Some(rc), Some(shape)) => {
+                    let rl = crate::model::QLayer {
+                        codes: rc.clone(),
+                        codes_shape: shape.clone(),
+                        bias: l2.res_bias.clone().unwrap(),
+                        out_shift: l2.res_out_shift.unwrap(),
+                        dilation: 1,
+                        relu: true,
+                        res_shift: None,
+                        res_codes: None,
+                        res_codes_shape: None,
+                        res_bias: None,
+                        res_out_shift: None,
+                    };
+                    golden::conv_layer(&blk_in, t_len, &rl, None)
+                }
+                _ => blk_in,
+            };
+            h = golden::conv_layer(&h, t_len, l2, Some(&res));
+            if b == m.n_blocks() - 1 {
+                want = h.clone();
+            }
+        }
+        // streaming executor, timestep by timestep
+        let mut s = StreamingTcn::new(&m, ArrayMode::M16x16);
+        let cout = m.layers.last().unwrap().c_out();
+        let mut got = vec![0u8; t_len * cout];
+        let mut n_out = 0;
+        for t in 0..t_len {
+            for (ot, row) in s.push(&x[t * m.in_channels..(t + 1) * m.in_channels]).unwrap() {
+                got[ot * cout..(ot + 1) * cout].copy_from_slice(&row);
+                n_out += 1;
+            }
+        }
+        assert_eq!(n_out, t_len, "one output per input timestep");
+        assert_eq!(got, want, "streaming must equal the batch trajectory");
+        assert!(s.cycles > 0);
+    }
+
+    #[test]
+    fn streaming_memory_matches_dense_fifo_estimate() {
+        let m = crate::model::tests::tiny_model();
+        let s = StreamingTcn::new(&m, ArrayMode::M16x16);
+        // within 2x of the closed-form (k-1)d+1 ring estimate
+        let est = m.dense_fifo_activation_bytes();
+        assert!(s.reserved_bytes() <= 2 * est + 64, "{} vs {est}", s.reserved_bytes());
+    }
+
+    #[test]
+    fn rejects_bad_row_width() {
+        let m = crate::model::tests::tiny_model();
+        let mut s = StreamingTcn::new(&m, ArrayMode::M16x16);
+        assert!(s.push(&[1, 2]).is_err());
+    }
+}

@@ -1,0 +1,96 @@
+//! Cycle / operation / memory-traffic counters collected by the simulator.
+
+/// Execution phases the paper reports separately.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// TCN + embedding inference (also learning step 1: embedding shots).
+    Inference,
+    /// Learning step 2: prototype accumulation in the PE array.
+    Prototype,
+    /// Learning step 3: parameter extraction (weights + bias write-back).
+    Extraction,
+}
+
+/// Counter block for one phase.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PhaseCounters {
+    pub cycles: u64,
+    /// MAC-equivalent operations actually performed (2 ops each in GOPS terms).
+    pub macs: u64,
+    pub sram_reads: u64,
+    pub sram_writes: u64,
+}
+
+/// Full execution trace of one simulator run.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub inference: PhaseCounters,
+    pub prototype: PhaseCounters,
+    pub extraction: PhaseCounters,
+    /// Activation nodes computed vs skipped by dilation-aware execution.
+    pub nodes_computed: u64,
+    pub nodes_skipped: u64,
+    /// High-water activation-memory usage in bytes (u4 entries / 2).
+    pub act_mem_high_water: usize,
+}
+
+impl Trace {
+    pub fn phase_mut(&mut self, p: Phase) -> &mut PhaseCounters {
+        match p {
+            Phase::Inference => &mut self.inference,
+            Phase::Prototype => &mut self.prototype,
+            Phase::Extraction => &mut self.extraction,
+        }
+    }
+
+    pub fn total_cycles(&self) -> u64 {
+        self.inference.cycles + self.prototype.cycles + self.extraction.cycles
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.inference.macs + self.prototype.macs + self.extraction.macs
+    }
+
+    /// Learning cycles outside plain inference (the paper's "<0.04 %" claim).
+    pub fn learning_overhead_cycles(&self) -> u64 {
+        self.prototype.cycles + self.extraction.cycles
+    }
+
+    pub fn merge(&mut self, other: &Trace) {
+        for p in [Phase::Inference, Phase::Prototype, Phase::Extraction] {
+            let o = match p {
+                Phase::Inference => other.inference,
+                Phase::Prototype => other.prototype,
+                Phase::Extraction => other.extraction,
+            };
+            let m = self.phase_mut(p);
+            m.cycles += o.cycles;
+            m.macs += o.macs;
+            m.sram_reads += o.sram_reads;
+            m.sram_writes += o.sram_writes;
+        }
+        self.nodes_computed += other.nodes_computed;
+        self.nodes_skipped += other.nodes_skipped;
+        self.act_mem_high_water = self.act_mem_high_water.max(other.act_mem_high_water);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = Trace::default();
+        a.inference.cycles = 10;
+        a.act_mem_high_water = 100;
+        let mut b = Trace::default();
+        b.inference.cycles = 5;
+        b.prototype.cycles = 3;
+        b.act_mem_high_water = 50;
+        a.merge(&b);
+        assert_eq!(a.total_cycles(), 18);
+        assert_eq!(a.learning_overhead_cycles(), 3);
+        assert_eq!(a.act_mem_high_water, 100);
+    }
+}

@@ -1,0 +1,108 @@
+//! Tiny CLI argument parser (no clap offline): `--key value`, `--flag`,
+//! and positional arguments, with typed getters and defaults.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse an iterator of arguments (not including argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.options.insert(key.to_string(), v);
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| anyhow!("--{name} expects an integer, got {s:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| anyhow!("--{name} expects a number, got {s:?}")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| anyhow!("--{name} expects an integer, got {s:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn mixes_positional_options_flags() {
+        // note: a bare `--flag` followed by a non-option token would bind
+        // as `--flag token`; flags therefore go last (or use `--k=v`).
+        let a = parse("serve input.bin --model kws_mfcc --threads 4 --verbose");
+        assert_eq!(a.positional, vec!["serve", "input.bin"]);
+        assert_eq!(a.get("model"), Some("kws_mfcc"));
+        assert_eq!(a.get_usize("threads", 1).unwrap(), 4);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("--n=12 --rate=0.5");
+        assert_eq!(a.get_usize("n", 0).unwrap(), 12);
+        assert!((a.get_f64("rate", 0.0).unwrap() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse("--n notanumber");
+        assert!(a.get_usize("n", 3).is_err());
+        assert_eq!(a.get_usize("m", 3).unwrap(), 3);
+    }
+}

@@ -1,0 +1,220 @@
+//! Micro-benchmark harness for the `cargo bench` targets (criterion is not
+//! available offline). Benches are `harness = false` binaries that use
+//! [`Bencher`] for timing and [`Table`] for paper-style row output.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// Timing result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+}
+
+impl Measurement {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean.as_secs_f64()
+    }
+}
+
+/// Simple warmup + sample loop with adaptive iteration count.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub samples: usize,
+    pub max_total: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(150),
+            samples: 30,
+            max_total: Duration::from_secs(10),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(20),
+            samples: 10,
+            max_total: Duration::from_secs(3),
+        }
+    }
+
+    /// Time `f`, returning per-iteration statistics. `f` should perform one
+    /// unit of work and return something observable (black-boxed here).
+    pub fn measure<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> Measurement {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            black_box(f());
+        }
+        // Sample.
+        let mut durs: Vec<f64> = Vec::with_capacity(self.samples);
+        let total_start = Instant::now();
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            black_box(f());
+            durs.push(t.elapsed().as_secs_f64());
+            if total_start.elapsed() > self.max_total {
+                break;
+            }
+        }
+        let to_dur = |s: f64| Duration::from_secs_f64(s.max(0.0));
+        Measurement {
+            name: name.to_string(),
+            iters: durs.len(),
+            mean: to_dur(stats::mean(&durs)),
+            p50: to_dur(stats::percentile(&durs, 50.0)),
+            p99: to_dur(stats::percentile(&durs, 99.0)),
+            min: to_dur(stats::min(&durs)),
+        }
+    }
+}
+
+/// Opaque value sink (stable `std::hint::black_box`).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Fixed-width text table, used by every bench to print the paper's
+/// rows/series in a uniform format that EXPERIMENTS.md records verbatim.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rowv(&mut self, cells: Vec<String>) {
+        self.row(&cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", widths.iter().map(|w| "-".repeat(*w + 2)).collect::<String>());
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// Format a duration in engineering units.
+pub fn fmt_dur(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.2} s")
+    } else if s >= 1e-3 {
+        format!("{:.2} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.2} us", s * 1e6)
+    } else {
+        format!("{:.0} ns", s * 1e9)
+    }
+}
+
+/// Format a power value in engineering units.
+pub fn fmt_power(watts: f64) -> String {
+    if watts >= 1.0 {
+        format!("{watts:.2} W")
+    } else if watts >= 1e-3 {
+        format!("{:.2} mW", watts * 1e3)
+    } else if watts >= 1e-6 {
+        format!("{:.2} uW", watts * 1e6)
+    } else {
+        format!("{:.1} nW", watts * 1e9)
+    }
+}
+
+/// Format an energy value in engineering units.
+pub fn fmt_energy(joules: f64) -> String {
+    if joules >= 1.0 {
+        format!("{joules:.2} J")
+    } else if joules >= 1e-3 {
+        format!("{:.2} mJ", joules * 1e3)
+    } else if joules >= 1e-6 {
+        format!("{:.2} uJ", joules * 1e6)
+    } else if joules >= 1e-9 {
+        format!("{:.2} nJ", joules * 1e9)
+    } else {
+        format!("{:.2} pJ", joules * 1e12)
+    }
+}
+
+/// Format a large count with SI suffix.
+pub fn fmt_si(x: f64) -> String {
+    let a = x.abs();
+    if a >= 1e12 {
+        format!("{:.2}T", x / 1e12)
+    } else if a >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if a >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if a >= 1e3 {
+        format!("{:.2}k", x / 1e3)
+    } else {
+        format!("{x:.1}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_iters() {
+        let b = Bencher { warmup: Duration::from_millis(1), samples: 5, max_total: Duration::from_secs(1) };
+        let m = b.measure("noop", || 1 + 1);
+        assert_eq!(m.iters, 5);
+        assert!(m.mean <= Duration::from_millis(10));
+    }
+
+    #[test]
+    fn table_formats() {
+        let mut t = Table::new("demo", &["a", "bbbb"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print(); // should not panic
+    }
+
+    #[test]
+    fn formatting_units() {
+        assert_eq!(fmt_power(3.1e-6), "3.10 uW");
+        assert_eq!(fmt_energy(6.84e-6), "6.84 uJ");
+        assert_eq!(fmt_si(76.8e9), "76.80G");
+    }
+}

@@ -1,0 +1,15 @@
+//! Self-contained utilities.
+//!
+//! This environment has no network access to crates.io, so the coordinator
+//! deliberately hand-rolls the small amount of infrastructure that would
+//! normally come from serde/clap/criterion/proptest: a JSON codec, a CLI
+//! argument parser, a seedable RNG, summary statistics, a micro-benchmark
+//! harness (used by the `cargo bench` targets) and a miniature
+//! property-testing runner.
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,90 @@
+//! Miniature property-testing runner (proptest is not available offline).
+//!
+//! Usage:
+//! ```ignore
+//! prop::check(200, 0xC0FFEE, |rng| {
+//!     let n = rng.range(1, 64) as usize;
+//!     // build inputs from rng, assert the invariant, return Ok(()).
+//!     Ok(())
+//! });
+//! ```
+//! On failure the failing case index and seed are reported so the case can
+//! be replayed exactly.
+
+use super::rng::Rng;
+
+/// Run `cases` random cases of `f`. Panics (with seed info) on the first
+/// failing case — either an `Err` return or a panic inside `f`.
+pub fn check<F>(cases: usize, seed: u64, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let case_seed = seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case as u64);
+        let mut rng = Rng::new(case_seed);
+        match f(&mut rng) {
+            Ok(()) => {}
+            Err(msg) => panic!(
+                "property failed at case {case}/{cases} (replay seed {case_seed:#x}): {msg}"
+            ),
+        }
+    }
+}
+
+/// Assert helper producing `Result<(), String>` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+/// Assert equality helper with value printing.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?})",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_good_property() {
+        check(100, 1, |rng| {
+            let a = rng.range(0, 1000);
+            prop_assert!(a + 1 > a);
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_bad_property() {
+        check(100, 2, |rng| {
+            let a = rng.range(0, 10);
+            prop_assert!(a < 9, "a was {a}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,78 @@
+//! Shared helpers for the integration tests: artifact discovery with
+//! graceful skip when `make artifacts` has not been run.
+
+use std::path::PathBuf;
+
+use chameleon::model::QuantModel;
+use chameleon::util::json::{self, Value};
+
+pub fn artifacts() -> Option<PathBuf> {
+    let dir = chameleon::artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!(
+            "SKIP: artifacts not found at {} (run `make artifacts`)",
+            dir.display()
+        );
+        None
+    }
+}
+
+pub fn manifest(dir: &std::path::Path) -> Value {
+    json::parse_file(&dir.join("manifest.json")).expect("manifest parses")
+}
+
+pub fn model_names(dir: &std::path::Path) -> Vec<String> {
+    manifest(dir)
+        .req("models")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|m| m.req("name").unwrap().as_str().unwrap().to_string())
+        .collect()
+}
+
+pub fn load_model(dir: &std::path::Path, name: &str) -> QuantModel {
+    QuantModel::load(&dir.join(format!("{name}.model.json"))).expect("model loads")
+}
+
+pub fn load_vectors(dir: &std::path::Path, name: &str) -> Vec<VectorCase> {
+    let v = json::parse_file(&dir.join(format!("{name}.vectors.json"))).expect("vectors parse");
+    v.req("cases")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|c| VectorCase {
+            input: c
+                .req("input")
+                .unwrap()
+                .as_i32_vec()
+                .unwrap()
+                .iter()
+                .map(|&x| x as u8)
+                .collect(),
+            embedding: c
+                .req("embedding")
+                .unwrap()
+                .as_i32_vec()
+                .unwrap()
+                .iter()
+                .map(|&x| x as u8)
+                .collect(),
+            logits: c.get_nonnull("logits").map(|l| l.as_i32_vec().unwrap()),
+            layer_sums: c
+                .get_nonnull("layer_sums")
+                .map(|l| l.as_arr().unwrap().iter().map(|x| x.as_i64().unwrap()).collect()),
+        })
+        .collect()
+}
+
+pub struct VectorCase {
+    pub input: Vec<u8>,
+    pub embedding: Vec<u8>,
+    pub logits: Option<Vec<i32>>,
+    pub layer_sums: Option<Vec<i64>>,
+}

@@ -1,0 +1,94 @@
+//! Coordinator over real artifacts: golden and xla engine replicas serving
+//! the same KWS traffic must agree prediction-for-prediction, and session
+//! FSL must work through the full serving path.
+
+mod common;
+
+use std::sync::Arc;
+
+use chameleon::coordinator::server::EngineFactory;
+use chameleon::coordinator::{Coordinator, CoordinatorConfig, Engine};
+use chameleon::data::EvalPool;
+use chameleon::runtime::{Runtime, XlaModel};
+use chameleon::util::rng::Rng;
+
+#[test]
+fn golden_and_xla_workers_agree_on_kws() {
+    let Some(dir) = common::artifacts() else { return };
+    let model = Arc::new(common::load_model(&dir, "kws_mfcc"));
+    let pool = EvalPool::load(&dir.join("eval_kws_mfcc.json")).unwrap();
+
+    let mk = |kind: &'static str, dir: std::path::PathBuf, m: Arc<chameleon::model::QuantModel>| {
+        Box::new(move || match kind {
+            "golden" => Ok(Engine::golden(m)),
+            _ => {
+                let rt = Runtime::cpu()?;
+                let xm = XlaModel::load(&rt, &dir, &m)?;
+                std::mem::forget(rt);
+                Ok(Engine::xla(m, xm))
+            }
+        }) as EngineFactory
+    };
+
+    let golden = Coordinator::start(
+        vec![mk("golden", dir.clone(), model.clone())],
+        CoordinatorConfig::default(),
+    )
+    .unwrap();
+    let xla = Coordinator::start(
+        vec![mk("xla", dir.clone(), model.clone())],
+        CoordinatorConfig::default(),
+    )
+    .unwrap();
+
+    let mut rng = Rng::new(3);
+    let mut correct = 0;
+    let n = 24;
+    for _ in 0..n {
+        let c = rng.below(pool.classes as u64) as usize;
+        let s = rng.below(pool.samples_per_class as u64) as usize;
+        let x = pool.sample(c, s).to_vec();
+        let a = golden.classify(x.clone()).unwrap();
+        let b = xla.classify(x).unwrap();
+        assert_eq!(a.predicted, b.predicted, "engines disagree");
+        assert_eq!(a.logits, b.logits, "logits disagree");
+        correct += usize::from(a.predicted == Some(c));
+    }
+    println!("KWS accuracy on {n} served samples: {}/{n}", correct);
+    golden.shutdown();
+    xla.shutdown();
+}
+
+#[test]
+fn session_fsl_through_coordinator() {
+    let Some(dir) = common::artifacts() else { return };
+    let model = Arc::new(common::load_model(&dir, "omniglot_fsl"));
+    let pool = EvalPool::load(&dir.join("eval_omniglot.json")).unwrap();
+    let m2 = model.clone();
+    let coord = Coordinator::start(
+        vec![Box::new(move || Ok(Engine::golden(m2))) as EngineFactory],
+        CoordinatorConfig::default(),
+    )
+    .unwrap();
+    let mut rng = Rng::new(5);
+    let (_, sup, qry) = pool.episode(&mut rng, 3, 2, 2);
+    for shots in &sup {
+        let shots: Vec<Vec<u8>> = shots.iter().map(|s| s.to_vec()).collect();
+        coord.learn_way(1, shots).unwrap();
+    }
+    assert_eq!(coord.session_ways(1), 3);
+    let mut correct = 0;
+    let mut total = 0;
+    for (way, queries) in qry.iter().enumerate() {
+        for q in queries {
+            let r = coord.classify_session(1, q.to_vec()).unwrap();
+            correct += usize::from(r.predicted == Some(way));
+            total += 1;
+        }
+    }
+    println!("session FSL: {correct}/{total}");
+    assert!(correct * 2 > total, "session FSL below 50%");
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.learn_ways, 3);
+    coord.shutdown();
+}

@@ -1,0 +1,147 @@
+//! Property tests over the simulator on randomly generated networks:
+//! golden/sim equivalence, dilation-skip output invariance, memory
+//! boundedness, and the dual-mode cycle relationship — the invariants the
+//! paper's architecture rests on.
+
+use chameleon::model::{QLayer, QuantModel};
+use chameleon::sim::scheduler::{GreedySim, Schedule};
+use chameleon::sim::ArrayMode;
+use chameleon::util::prop;
+use chameleon::util::rng::Rng;
+use chameleon::{golden, prop_assert, prop_assert_eq};
+
+/// Build a random quantized TCN (structure + codes) from an RNG.
+fn random_model(rng: &mut Rng) -> QuantModel {
+    let n_blocks = rng.range(1, 4) as usize;
+    let k = rng.range(2, 5) as usize;
+    let in_ch = rng.range(1, 5) as usize;
+    let seq_len = rng.range(24, 64) as usize;
+    let mut channels = Vec::new();
+    let mut cin = in_ch;
+    let mut layers = Vec::new();
+    for b in 0..n_blocks {
+        let c = rng.range(2, 8) as usize;
+        channels.push(c);
+        let d = 1usize << b;
+        let mk = |rng: &mut Rng, kk: usize, ci: usize, co: usize, dil: usize| QLayer {
+            codes: (0..kk * ci * co).map(|_| rng.range(-8, 8) as i8).collect(),
+            codes_shape: vec![kk, ci, co],
+            bias: (0..co).map(|_| rng.range(-512, 512) as i32).collect(),
+            out_shift: rng.range(2, 7) as i32,
+            dilation: dil,
+            relu: true,
+            res_shift: None,
+            res_codes: None,
+            res_codes_shape: None,
+            res_bias: None,
+            res_out_shift: None,
+        };
+        let l1 = mk(rng, k, cin, c, d);
+        let mut l2 = mk(rng, k, c, c, d);
+        l2.res_shift = Some(rng.range(-2, 4) as i32);
+        if cin != c {
+            l2.res_codes = Some((0..cin * c).map(|_| rng.range(-8, 8) as i8).collect());
+            l2.res_codes_shape = Some(vec![1, cin, c]);
+            l2.res_bias = Some((0..c).map(|_| rng.range(-64, 64) as i32).collect());
+            l2.res_out_shift = Some(rng.range(0, 5) as i32);
+        }
+        layers.push(l1);
+        layers.push(l2);
+        cin = c;
+    }
+    let v = 8;
+    QuantModel {
+        name: "random".into(),
+        in_channels: in_ch,
+        seq_len,
+        channels,
+        kernel_size: k,
+        embed_dim: v,
+        n_classes: None,
+        in_shift: 0,
+        embed_shift: 0,
+        layers,
+        embed: QLayer {
+            codes: (0..cin * v).map(|_| rng.range(-8, 8) as i8).collect(),
+            codes_shape: vec![cin, v],
+            bias: (0..v).map(|_| rng.range(-128, 128) as i32).collect(),
+            out_shift: 4,
+            dilation: 1,
+            relu: true,
+            res_shift: None,
+            res_codes: None,
+            res_codes_shape: None,
+            res_bias: None,
+            res_out_shift: None,
+        },
+        head: None,
+    }
+}
+
+fn random_input(m: &QuantModel, rng: &mut Rng) -> Vec<u8> {
+    (0..m.seq_len * m.in_channels).map(|_| rng.range(0, 16) as u8).collect()
+}
+
+#[test]
+fn sim_equals_golden_on_random_networks() {
+    prop::check(40, 0xD15C0, |rng| {
+        let m = random_model(rng);
+        let x = random_input(&m, rng);
+        let want = golden::embed(&m, &x).map_err(|e| e.to_string())?;
+        let sim = GreedySim::with_capacity(&m, ArrayMode::M16x16, usize::MAX);
+        let got = sim
+            .run(&x, &Schedule::single_output(&m))
+            .map_err(|e| format!("{e:#}"))?;
+        prop_assert_eq!(got.embedding, want);
+        Ok(())
+    });
+}
+
+#[test]
+fn dense_and_skipped_schedules_agree() {
+    prop::check(25, 0xAB1E, |rng| {
+        let m = random_model(rng);
+        let x = random_input(&m, rng);
+        let sim = GreedySim::with_capacity(&m, ArrayMode::M16x16, usize::MAX);
+        let a = sim.run(&x, &Schedule::single_output(&m)).map_err(|e| format!("{e:#}"))?;
+        let b = sim.run(&x, &Schedule::dense(&m)).map_err(|e| format!("{e:#}"))?;
+        prop_assert_eq!(&a.embedding, &b.embedding);
+        prop_assert!(a.trace.inference.macs <= b.trace.inference.macs);
+        Ok(())
+    });
+}
+
+#[test]
+fn mode_does_not_change_numerics() {
+    prop::check(25, 0x40DE, |rng| {
+        let m = random_model(rng);
+        let x = random_input(&m, rng);
+        let s = Schedule::single_output(&m);
+        let a = GreedySim::with_capacity(&m, ArrayMode::M16x16, usize::MAX)
+            .run(&x, &s)
+            .map_err(|e| format!("{e:#}"))?;
+        let b = GreedySim::with_capacity(&m, ArrayMode::M4x4, usize::MAX)
+            .run(&x, &s)
+            .map_err(|e| format!("{e:#}"))?;
+        prop_assert_eq!(a.embedding, b.embedding);
+        prop_assert!(b.trace.total_cycles() >= a.trace.total_cycles());
+        Ok(())
+    });
+}
+
+#[test]
+fn greedy_memory_stays_near_estimate() {
+    prop::check(25, 0x3E57, |rng| {
+        let m = random_model(rng);
+        let x = random_input(&m, rng);
+        let sim = GreedySim::with_capacity(&m, ArrayMode::M16x16, usize::MAX);
+        let r = sim.run(&x, &Schedule::single_output(&m)).map_err(|e| format!("{e:#}"))?;
+        let est = m.fifo_activation_bytes();
+        prop_assert!(
+            r.trace.act_mem_high_water <= 3 * est + 64,
+            "high water {} vs estimate {est}",
+            r.trace.act_mem_high_water
+        );
+        Ok(())
+    });
+}

@@ -1,0 +1,47 @@
+//! Three-layer composition proof: the PJRT-executed AOT artifact (Pallas
+//! kernels inside the JAX-lowered HLO) must agree bit-exactly with the
+//! rust golden model on the exported vectors.
+
+mod common;
+
+use chameleon::runtime::{Runtime, XlaModel};
+
+#[test]
+fn xla_artifacts_match_python_vectors() {
+    let Some(dir) = common::artifacts() else { return };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    println!("platform: {}", rt.platform());
+    for name in common::model_names(&dir) {
+        let model = common::load_model(&dir, &name);
+        let xm = XlaModel::load(&rt, &dir, &model).expect("artifact loads+compiles");
+        for (ci, case) in common::load_vectors(&dir, &name).iter().enumerate() {
+            let (emb, logits) = xm.forward(&case.input).unwrap();
+            assert_eq!(emb, case.embedding, "{name} case {ci}: xla embedding");
+            if let Some(want) = &case.logits {
+                assert_eq!(logits.as_ref(), Some(want), "{name} case {ci}: xla logits");
+            }
+        }
+        println!("{name}: xla artifact matches python vectors");
+    }
+}
+
+#[test]
+fn xla_rejects_malformed_input() {
+    let Some(dir) = common::artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let name = &common::model_names(&dir)[0];
+    let model = common::load_model(&dir, name);
+    let xm = XlaModel::load(&rt, &dir, &model).unwrap();
+    assert!(xm.forward(&[0u8; 3]).is_err(), "wrong-size input must error");
+}
+
+#[test]
+fn executable_cache_returns_same_instance() {
+    let Some(dir) = common::artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let name = &common::model_names(&dir)[0];
+    let path = dir.join(format!("{name}.hlo.txt"));
+    let a = rt.load(&path).unwrap();
+    let b = rt.load(&path).unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &b), "compile cache must hit");
+}
