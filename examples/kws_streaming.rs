@@ -57,7 +57,10 @@ fn main() -> anyhow::Result<()> {
             }) as EngineFactory
         })
         .collect();
-    let coord = Coordinator::start(factories, CoordinatorConfig { workers, queue_depth: 64 })?;
+    let coord = Coordinator::start(
+        factories,
+        CoordinatorConfig { workers, queue_depth: 64, ..Default::default() },
+    )?;
 
     // Build a continuous stream: random utterances back to back, window =
     // one model input, hop = window (the chip classifies 1/s windows).

@@ -91,7 +91,7 @@ fn main() -> anyhow::Result<()> {
             .collect();
         let coord = Arc::new(Coordinator::start(
             factories,
-            CoordinatorConfig { workers, queue_depth: 256 },
+            CoordinatorConfig { workers, queue_depth: 256, ..Default::default() },
         )?);
         let n = 400usize;
         let clients = 4usize;

@@ -1,0 +1,72 @@
+//! Serving-layer throughput/latency sweep over loopback: the built-in demo
+//! model behind the sharded TCP server, driven by the open-loop Poisson
+//! load generator at increasing offered rates. Reports achieved
+//! throughput and p50/p95/p99 latency per rate — the serving counterpart
+//! of `perf_hotpath` (which measures the in-process coordinator).
+//!
+//! `CHAMELEON_LOADGEN_SECS` overrides the per-point duration (default 2 s).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use chameleon::coordinator::server::EngineFactory;
+use chameleon::coordinator::Engine;
+use chameleon::model::demo_tiny_kws;
+use chameleon::serve::loadgen::{self, LoadgenConfig};
+use chameleon::serve::{ServeConfig, Server};
+use chameleon::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let secs: f64 = std::env::var("CHAMELEON_LOADGEN_SECS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2.0);
+    let model = Arc::new(demo_tiny_kws());
+    println!("model: {}", model.describe());
+
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        shards: 2,
+        workers_per_shard: 2,
+        ..Default::default()
+    };
+    let m = model.clone();
+    let server = Server::start(cfg, move |_s, _w| {
+        let m = m.clone();
+        Box::new(move || Ok(Engine::golden(m))) as EngineFactory
+    })?;
+    let addr = server.local_addr().to_string();
+    println!("loopback server on {addr} (2 shards x 2 workers, golden engine)");
+
+    let mut t = Table::new(
+        "serve loopback sweep (open-loop Poisson, 5% learn mix)",
+        &["offered req/s", "ok", "overloaded", "proto err", "ach. req/s", "p50", "p95", "p99"],
+    );
+    for rps in [100.0, 400.0, 1600.0] {
+        let report = loadgen::run(&LoadgenConfig {
+            addr: addr.clone(),
+            rps,
+            duration: Duration::from_secs_f64(secs),
+            learn_frac: 0.05,
+            sessions: 16,
+            shots: 2,
+            connections: 8,
+            seed: 1,
+        })?;
+        t.rowv(vec![
+            format!("{rps:.0}"),
+            report.ok.to_string(),
+            report.overloaded.to_string(),
+            report.protocol_errors.to_string(),
+            format!("{:.0}", report.achieved_rps()),
+            format!("{:.0} us", report.latency.percentile_us(50.0)),
+            format!("{:.0} us", report.latency.percentile_us(95.0)),
+            format!("{:.0} us", report.latency.percentile_us(99.0)),
+        ]);
+    }
+    t.print();
+    let snap = server.metrics();
+    println!("\nserver totals: {}", snap.report());
+    server.shutdown();
+    Ok(())
+}

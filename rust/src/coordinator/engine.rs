@@ -9,13 +9,14 @@
 //!   graph; proves the three-layer stack composes).
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::Result;
 
 use crate::golden;
 use crate::model::QuantModel;
 use crate::runtime::XlaModel;
-use crate::sim::{self, ArrayMode, Trace};
+use crate::sim::{self, ArrayMode, OperatingPoint, Trace};
 
 /// Output of one forward pass.
 #[derive(Debug, Clone)]
@@ -30,6 +31,12 @@ pub enum EngineKind {
     Golden,
     Sim(ArrayMode),
     Xla(XlaModel),
+    /// Cycle simulator paced to real time: after computing, sleeps for the
+    /// simulated wall-clock (`cycles / f_hz`) of the operating point. Turns
+    /// the host into a latency-faithful stand-in for the physical chip —
+    /// used to exercise serve-layer backpressure under realistic service
+    /// times instead of host-speed ones.
+    Paced(OperatingPoint),
 }
 
 /// A model bound to an execution engine.
@@ -51,11 +58,16 @@ impl Engine {
         Engine { model, kind: EngineKind::Xla(xm) }
     }
 
+    pub fn paced(model: Arc<QuantModel>, op: OperatingPoint) -> Engine {
+        Engine { model, kind: EngineKind::Paced(op) }
+    }
+
     pub fn name(&self) -> &'static str {
         match self.kind {
             EngineKind::Golden => "golden",
             EngineKind::Sim(_) => "sim",
             EngineKind::Xla(_) => "xla",
+            EngineKind::Paced(_) => "paced",
         }
     }
 
@@ -73,6 +85,18 @@ impl Engine {
             EngineKind::Xla(xm) => {
                 let (embedding, logits) = xm.forward(x_q)?;
                 Ok(Forward { embedding, logits, trace: None })
+            }
+            EngineKind::Paced(op) => {
+                // Host compute counts toward the simulated budget: total
+                // service time is max(host, chip), not their sum.
+                let t0 = std::time::Instant::now();
+                let r = sim::simulate_inference(&self.model, op.mode, x_q)?;
+                let budget = Duration::from_secs_f64(op.seconds(r.trace.total_cycles()));
+                let elapsed = t0.elapsed();
+                if budget > elapsed {
+                    std::thread::sleep(budget - elapsed);
+                }
+                Ok(Forward { embedding: r.embedding, logits: r.logits, trace: Some(r.trace) })
             }
         }
     }

@@ -1,11 +1,146 @@
 //! Serving metrics: latency histogram, throughput, queue depth, per-class
-//! counts — what the test harness records while driving the chip.
+//! counts — what the test harness records while driving the chip, and what
+//! the serve layer's `Metrics` wire op reports per shard.
+//!
+//! Latencies go into a fixed-bucket log-linear histogram (16 linear 1 us
+//! buckets, then 8 sub-buckets per power-of-two octave, HDR-style): every
+//! record is two relaxed atomic adds, snapshots never pause the workers,
+//! and per-shard snapshots merge by simply summing bucket counts — which is
+//! how the serve layer aggregates p50/p95/p99 across shards.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 use std::time::Duration;
 
-use crate::util::stats;
+/// Buckets: 0..15 us linear, then octaves 2^4..2^30 us with 8 sub-buckets
+/// each (relative error <= ~6 %); one final overflow bucket at the top.
+pub const HIST_BUCKETS: usize = 16 + 27 * 8;
+
+const MAX_US: u64 = (1u64 << 31) - 1;
+
+/// Bucket index for a latency in microseconds.
+#[inline]
+pub fn bucket_index(us: u64) -> usize {
+    if us < 16 {
+        us as usize
+    } else {
+        let us = us.min(MAX_US);
+        let msb = 63 - us.leading_zeros() as usize; // 4..=30
+        let sub = ((us >> (msb - 3)) & 7) as usize;
+        16 + (msb - 4) * 8 + sub
+    }
+}
+
+/// Representative latency (us) of bucket `i` — the midpoint of its range.
+pub fn bucket_value_us(i: usize) -> f64 {
+    if i < 16 {
+        i as f64
+    } else {
+        let oct = (i - 16) / 8;
+        let sub = (i - 16) % 8;
+        let msb = oct + 4;
+        let width = (1u64 << msb) / 8;
+        let lo = (1u64 << msb) + sub as u64 * width;
+        lo as f64 + width as f64 / 2.0
+    }
+}
+
+/// Thread-safe fixed-bucket latency histogram (see module docs). Shared by
+/// the coordinator metrics and the serve load generator.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, d: Duration) {
+        self.record_us(d.as_micros().min(MAX_US as u128) as u64);
+    }
+
+    pub fn record_us(&self, us: u64) {
+        self.buckets[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us.min(MAX_US), Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            counts: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum_us: self.sum_us.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time, mergeable copy of a [`LatencyHistogram`].
+#[derive(Debug, Clone)]
+pub struct HistSnapshot {
+    pub counts: Vec<u64>,
+    pub count: u64,
+    pub sum_us: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        HistSnapshot { counts: vec![0; HIST_BUCKETS], count: 0, sum_us: 0 }
+    }
+}
+
+impl HistSnapshot {
+    /// Latency (us) at percentile `p` in [0, 100]; 0.0 when empty.
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return bucket_value_us(i);
+            }
+        }
+        bucket_value_us(HIST_BUCKETS - 1)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    /// Merge another snapshot in (cross-shard / cross-thread aggregation):
+    /// fixed identical buckets mean percentiles of the merge stay exact to
+    /// bucket resolution.
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+    }
+}
 
 /// Thread-safe metrics sink shared between workers and the reporter.
 #[derive(Debug, Default)]
@@ -15,7 +150,9 @@ pub struct Metrics {
     pub errors: AtomicU64,
     pub rejected: AtomicU64,
     pub learn_ways: AtomicU64,
-    latencies_us: Mutex<Vec<f64>>,
+    /// Sessions removed from the store (LRU pressure + explicit evict ops).
+    pub evictions: AtomicU64,
+    latency: LatencyHistogram,
     sim_cycles: AtomicU64,
 }
 
@@ -25,7 +162,7 @@ impl Metrics {
     }
 
     pub fn record_latency(&self, d: Duration) {
-        self.latencies_us.lock().unwrap().push(d.as_secs_f64() * 1e6);
+        self.latency.record(d);
         self.completed.fetch_add(1, Ordering::Relaxed);
     }
 
@@ -38,17 +175,20 @@ impl Metrics {
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let lat = self.latencies_us.lock().unwrap().clone();
+        let hist = self.latency.snapshot();
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
             learn_ways: self.learn_ways.load(Ordering::Relaxed),
-            mean_latency_us: stats::mean(&lat),
-            p50_latency_us: stats::percentile(&lat, 50.0),
-            p99_latency_us: stats::percentile(&lat, 99.0),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            mean_latency_us: hist.mean_us(),
+            p50_latency_us: hist.percentile_us(50.0),
+            p95_latency_us: hist.percentile_us(95.0),
+            p99_latency_us: hist.percentile_us(99.0),
             sim_cycles: self.total_sim_cycles(),
+            latency_hist: hist,
         }
     }
 }
@@ -61,24 +201,46 @@ pub struct MetricsSnapshot {
     pub errors: u64,
     pub rejected: u64,
     pub learn_ways: u64,
+    pub evictions: u64,
     pub mean_latency_us: f64,
     pub p50_latency_us: f64,
+    pub p95_latency_us: f64,
     pub p99_latency_us: f64,
     pub sim_cycles: u64,
+    pub latency_hist: HistSnapshot,
 }
 
 impl MetricsSnapshot {
+    /// Fold another shard's snapshot into this one; percentiles are
+    /// recomputed over the merged histogram.
+    pub fn merge(&mut self, other: &MetricsSnapshot) {
+        self.requests += other.requests;
+        self.completed += other.completed;
+        self.errors += other.errors;
+        self.rejected += other.rejected;
+        self.learn_ways += other.learn_ways;
+        self.evictions += other.evictions;
+        self.sim_cycles += other.sim_cycles;
+        self.latency_hist.merge(&other.latency_hist);
+        self.mean_latency_us = self.latency_hist.mean_us();
+        self.p50_latency_us = self.latency_hist.percentile_us(50.0);
+        self.p95_latency_us = self.latency_hist.percentile_us(95.0);
+        self.p99_latency_us = self.latency_hist.percentile_us(99.0);
+    }
+
     pub fn report(&self) -> String {
         format!(
-            "requests={} completed={} errors={} rejected={} learned_ways={} \
-             latency mean={:.1}us p50={:.1}us p99={:.1}us sim_cycles={}",
+            "requests={} completed={} errors={} rejected={} learned_ways={} evictions={} \
+             latency mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us sim_cycles={}",
             self.requests,
             self.completed,
             self.errors,
             self.rejected,
             self.learn_ways,
+            self.evictions,
             self.mean_latency_us,
             self.p50_latency_us,
+            self.p95_latency_us,
             self.p99_latency_us,
             self.sim_cycles,
         )
@@ -97,7 +259,77 @@ mod tests {
         }
         let s = m.snapshot();
         assert_eq!(s.completed, 100);
-        assert!(s.p50_latency_us >= 49.0 && s.p50_latency_us <= 52.0);
-        assert!(s.p99_latency_us >= 98.0);
+        // log-linear buckets: <= ~6 % relative error on every percentile
+        assert!(s.p50_latency_us >= 46.0 && s.p50_latency_us <= 54.0, "{}", s.p50_latency_us);
+        assert!(s.p95_latency_us >= 89.0 && s.p95_latency_us <= 101.0, "{}", s.p95_latency_us);
+        assert!(s.p99_latency_us >= 93.0 && s.p99_latency_us <= 105.0, "{}", s.p99_latency_us);
+        assert!((s.mean_latency_us - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bucket_mapping_is_monotonic_and_bounded() {
+        let mut prev = 0usize;
+        for us in 0..100_000u64 {
+            let b = bucket_index(us);
+            assert!(b >= prev, "bucket index must be monotonic at {us}");
+            assert!(b < HIST_BUCKETS);
+            prev = b;
+        }
+        // representative value stays within ~6 % of any member of the bucket
+        for us in 16..100_000u64 {
+            let v = bucket_value_us(bucket_index(us));
+            let err = (v - us as f64).abs() / us as f64;
+            assert!(err <= 0.07, "us={us} rep={v} err={err}");
+        }
+        // overflow clamps instead of panicking
+        assert!(bucket_index(u64::MAX) < HIST_BUCKETS);
+    }
+
+    #[test]
+    fn merged_histograms_match_pooled_recording() {
+        let a = LatencyHistogram::new();
+        let b = LatencyHistogram::new();
+        let pooled = LatencyHistogram::new();
+        for i in 1..=50u64 {
+            a.record_us(i * 3);
+            pooled.record_us(i * 3);
+        }
+        for i in 1..=50u64 {
+            b.record_us(i * 17);
+            pooled.record_us(i * 17);
+        }
+        let mut merged = a.snapshot();
+        merged.merge(&b.snapshot());
+        let want = pooled.snapshot();
+        assert_eq!(merged.counts, want.counts);
+        assert_eq!(merged.count, want.count);
+        for p in [10.0, 50.0, 95.0, 99.0] {
+            assert_eq!(merged.percentile_us(p), want.percentile_us(p));
+        }
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = LatencyHistogram::new();
+        let s = h.snapshot();
+        assert_eq!(s.percentile_us(50.0), 0.0);
+        assert_eq!(s.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn snapshot_merge_combines_counters() {
+        let m1 = Metrics::new();
+        let m2 = Metrics::new();
+        m1.record_latency(Duration::from_micros(10));
+        m1.errors.fetch_add(2, Ordering::Relaxed);
+        m2.record_latency(Duration::from_micros(1000));
+        m2.evictions.fetch_add(1, Ordering::Relaxed);
+        let mut s = m1.snapshot();
+        s.merge(&m2.snapshot());
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.errors, 2);
+        assert_eq!(s.evictions, 1);
+        assert!(s.p99_latency_us > 900.0);
+        assert!(s.p50_latency_us <= 11.0);
     }
 }

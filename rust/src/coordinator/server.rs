@@ -3,9 +3,10 @@
 //! Plays the role of the paper's FPGA test harness *and* of a deployment
 //! host: it owns worker threads bound to engine replicas, routes classify /
 //! learn requests through a bounded queue (backpressure = reject when
-//! full), keeps per-session prototypical heads for on-device FSL/CL, and
-//! records serving metrics. Learning requests are serialized per session;
-//! classification fans out across workers.
+//! full), keeps per-session prototypical heads for on-device FSL/CL behind
+//! an LRU cap, and records serving metrics. Learning requests are
+//! serialized per session; classification fans out across workers. The
+//! serve layer (`crate::serve`) stacks N of these behind a TCP front end.
 
 use std::collections::HashMap;
 use std::sync::atomic::Ordering;
@@ -28,17 +29,21 @@ pub enum Request {
     ClassifySession { session: SessionId, input: Vec<u8>, reply: mpsc::Sender<Result<Response>> },
     /// Learn one new way for a session from k support sequences.
     LearnWay { session: SessionId, shots: Vec<Vec<u8>>, reply: mpsc::Sender<Result<Response>> },
+    /// Drop a session's learned head (frees its store slot).
+    EvictSession { session: SessionId, reply: mpsc::Sender<Result<Response>> },
 }
 
 pub type SessionId = u64;
 
 /// Reply payload.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct Response {
     pub predicted: Option<usize>,
     pub logits: Option<Vec<i32>>,
     pub learned_way: Option<usize>,
     pub sim_cycles: Option<u64>,
+    /// `EvictSession` only: whether the session existed.
+    pub evicted: Option<bool>,
 }
 
 /// Coordinator configuration.
@@ -48,18 +53,108 @@ pub struct CoordinatorConfig {
     /// Bounded queue depth; submissions beyond this are rejected
     /// (backpressure toward the stimulus source).
     pub queue_depth: usize,
+    /// LRU cap on live sessions: learning an (n+1)-th session evicts the
+    /// least-recently-used one (counted in `Metrics::evictions`), so a
+    /// long-running server cannot grow without bound.
+    pub max_sessions: usize,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        CoordinatorConfig { workers: 2, queue_depth: 256 }
+        CoordinatorConfig { workers: 2, queue_depth: 256, max_sessions: 1024 }
+    }
+}
+
+/// Why a submission was not enqueued.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Bounded queue full — backpressure; the caller should shed or retry.
+    Full,
+    /// The coordinator has shut down.
+    Closed,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Full => write!(f, "queue full (backpressure)"),
+            SubmitError::Closed => write!(f, "coordinator closed"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// LRU session store: a hash map plus a logical access clock. Eviction
+/// scans for the minimum `last_used` — O(n), but n is the configured cap
+/// and eviction only happens on session *creation* past the cap.
+struct SessionStore {
+    map: HashMap<SessionId, (ProtoHead, u64)>,
+    clock: u64,
+    cap: usize,
+}
+
+impl SessionStore {
+    fn new(cap: usize) -> Self {
+        SessionStore { map: HashMap::new(), clock: 0, cap: cap.max(1) }
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Look up a session, refreshing its recency.
+    fn touch(&mut self, id: SessionId) -> Option<&ProtoHead> {
+        let now = self.tick();
+        match self.map.get_mut(&id) {
+            Some((head, used)) => {
+                *used = now;
+                Some(&*head)
+            }
+            None => None,
+        }
+    }
+
+    /// Get-or-create a session head for learning, refreshing recency.
+    /// Returns the id of the LRU session evicted to make room, if any.
+    fn get_or_insert(&mut self, id: SessionId, dim: usize) -> (&mut ProtoHead, Option<SessionId>) {
+        let now = self.tick();
+        let mut evicted = None;
+        if !self.map.contains_key(&id) && self.map.len() >= self.cap {
+            let victim = self
+                .map
+                .iter()
+                .min_by_key(|(_, (_, used))| *used)
+                .map(|(k, _)| *k);
+            if let Some(victim) = victim {
+                self.map.remove(&victim);
+                evicted = Some(victim);
+            }
+        }
+        let entry = self.map.entry(id).or_insert_with(|| (ProtoHead::new(dim), now));
+        entry.1 = now;
+        (&mut entry.0, evicted)
+    }
+
+    fn remove(&mut self, id: SessionId) -> bool {
+        self.map.remove(&id).is_some()
+    }
+
+    fn ways(&self, id: SessionId) -> usize {
+        self.map.get(&id).map_or(0, |(h, _)| h.n_ways())
+    }
+
+    fn len(&self) -> usize {
+        self.map.len()
     }
 }
 
 struct Shared {
-    sessions: Mutex<HashMap<SessionId, ProtoHead>>,
+    sessions: Mutex<SessionStore>,
     metrics: Arc<Metrics>,
     embed_dim: usize,
+    input_len: usize,
 }
 
 /// The coordinator handle. Dropping it shuts the workers down.
@@ -82,7 +177,7 @@ impl Coordinator {
         }
         let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_depth);
         let rx = Arc::new(Mutex::new(rx));
-        let (dim_tx, dim_rx) = mpsc::channel::<Result<usize>>();
+        let (dim_tx, dim_rx) = mpsc::channel::<Result<(usize, usize)>>();
         let shared_cell: Arc<Mutex<Option<Arc<Shared>>>> = Arc::new(Mutex::new(None));
         let mut workers = Vec::new();
         for (wid, factory) in factories.into_iter().enumerate() {
@@ -95,7 +190,10 @@ impl Coordinator {
                     .spawn(move || {
                         let engine = match factory() {
                             Ok(e) => {
-                                let _ = dim_tx.send(Ok(e.model.embed_dim));
+                                let _ = dim_tx.send(Ok((
+                                    e.model.embed_dim,
+                                    e.model.seq_len * e.model.in_channels,
+                                )));
                                 e
                             }
                             Err(e) => {
@@ -116,14 +214,15 @@ impl Coordinator {
             );
         }
         drop(dim_tx);
-        // First successful engine defines the embedding dimension.
-        let embed_dim = dim_rx
+        // First successful engine defines the model geometry.
+        let (embed_dim, input_len) = dim_rx
             .recv()
             .map_err(|e| anyhow!("no worker came up: {e}"))??;
         let shared = Arc::new(Shared {
-            sessions: Mutex::new(HashMap::new()),
+            sessions: Mutex::new(SessionStore::new(cfg.max_sessions)),
             metrics: Arc::new(Metrics::new()),
             embed_dim,
+            input_len,
         });
         *shared_cell.lock().unwrap() = Some(shared.clone());
         Ok(Coordinator { tx, workers, shared })
@@ -133,13 +232,43 @@ impl Coordinator {
         self.shared.metrics.clone()
     }
 
-    /// Submit a request; `Err` when the queue is full (backpressure).
-    pub fn submit(&self, req: Request) -> Result<()> {
+    /// Point-in-time metrics snapshot (used by the serve `Metrics` op).
+    pub fn snapshot(&self) -> crate::coordinator::metrics::MetricsSnapshot {
+        self.shared.metrics.snapshot()
+    }
+
+    /// Embedding dimensionality of the deployed model.
+    pub fn embed_dim(&self) -> usize {
+        self.shared.embed_dim
+    }
+
+    /// Flat input length (`seq_len * in_channels`) one request must carry.
+    pub fn input_len(&self) -> usize {
+        self.shared.input_len
+    }
+
+    /// Number of live sessions in the store.
+    pub fn session_count(&self) -> usize {
+        self.shared.sessions.lock().unwrap().len()
+    }
+
+    /// Submit a request without blocking; distinguishes backpressure
+    /// ([`SubmitError::Full`]) from shutdown ([`SubmitError::Closed`]) so
+    /// the serve layer can surface an explicit `Overloaded` wire error.
+    pub fn try_submit(&self, req: Request) -> std::result::Result<(), SubmitError> {
         self.shared.metrics.requests.fetch_add(1, Ordering::Relaxed);
         self.tx.try_send(req).map_err(|e| {
             self.shared.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-            anyhow!("queue full or closed: {e}")
+            match e {
+                mpsc::TrySendError::Full(_) => SubmitError::Full,
+                mpsc::TrySendError::Disconnected(_) => SubmitError::Closed,
+            }
         })
+    }
+
+    /// Submit a request; `Err` when the queue is full (backpressure).
+    pub fn submit(&self, req: Request) -> Result<()> {
+        self.try_submit(req).map_err(|e| anyhow!("{e}"))
     }
 
     /// Blocking convenience: classify with the built-in head.
@@ -163,14 +292,17 @@ impl Coordinator {
         rrx.recv().map_err(|e| anyhow!("worker gone: {e}"))?
     }
 
+    /// Blocking convenience: evict a session. Returns whether it existed.
+    pub fn evict_session(&self, session: SessionId) -> Result<bool> {
+        let (rtx, rrx) = mpsc::channel();
+        self.submit(Request::EvictSession { session, reply: rtx })?;
+        let r = rrx.recv().map_err(|e| anyhow!("worker gone: {e}"))??;
+        Ok(r.evicted.unwrap_or(false))
+    }
+
     /// Number of ways a session has learned so far.
     pub fn session_ways(&self, session: SessionId) -> usize {
-        self.shared
-            .sessions
-            .lock()
-            .unwrap()
-            .get(&session)
-            .map_or(0, |h| h.n_ways())
+        self.shared.sessions.lock().unwrap().ways(session)
     }
 
     /// Graceful shutdown: close the queue and join the workers.
@@ -208,6 +340,17 @@ fn worker_loop(engine: Engine, rx: Arc<Mutex<mpsc::Receiver<Request>>>, shared: 
                 shared.metrics.record_latency(start.elapsed());
                 let _ = reply.send(res);
             }
+            Request::EvictSession { session, reply } => {
+                let existed = shared.sessions.lock().unwrap().remove(session);
+                if existed {
+                    shared.metrics.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+                shared.metrics.record_latency(start.elapsed());
+                let _ = reply.send(Ok(Response {
+                    evicted: Some(existed),
+                    ..Response::default()
+                }));
+            }
         }
     }
 }
@@ -226,8 +369,8 @@ fn handle_classify(engine: &Engine, input: &[u8], shared: &Shared) -> Result<Res
     Ok(Response {
         predicted: Some(crate::golden::argmax(&logits)),
         logits: Some(logits),
-        learned_way: None,
         sim_cycles: cycles,
+        ..Response::default()
     })
 }
 
@@ -242,9 +385,9 @@ fn handle_classify_session(
     if let Some(c) = cycles {
         shared.metrics.record_cycles(c);
     }
-    let sessions = shared.sessions.lock().unwrap();
+    let mut sessions = shared.sessions.lock().unwrap();
     let head = sessions
-        .get(&session)
+        .touch(session)
         .ok_or_else(|| anyhow!("unknown session {session} (learn first)"))?;
     if head.n_ways() == 0 {
         bail!("session {session} has no learned ways");
@@ -253,8 +396,8 @@ fn handle_classify_session(
     Ok(Response {
         predicted: Some(crate::golden::argmax(&logits)),
         logits: Some(logits),
-        learned_way: None,
         sim_cycles: cycles,
+        ..Response::default()
     })
 }
 
@@ -280,18 +423,21 @@ fn handle_learn(
     // Steps 2+3: prototype extraction (closed-form cycle cost).
     cycles += learning_cycles(shots.len(), shared.embed_dim);
     shared.metrics.record_cycles(cycles);
-    // Serialize the head update per session.
+    // Serialize the head update per session; creating a session past the
+    // LRU cap evicts the least-recently-used one.
     let mut sessions = shared.sessions.lock().unwrap();
-    let head = sessions
-        .entry(session)
-        .or_insert_with(|| ProtoHead::new(shared.embed_dim));
+    let (head, lru_evicted) = sessions.get_or_insert(session, shared.embed_dim);
     head.learn_way(&embs);
+    let learned = head.n_ways() - 1;
+    drop(sessions);
+    if lru_evicted.is_some() {
+        shared.metrics.evictions.fetch_add(1, Ordering::Relaxed);
+    }
     shared.metrics.learn_ways.fetch_add(1, Ordering::Relaxed);
     Ok(Response {
-        predicted: None,
-        logits: None,
-        learned_way: Some(head.n_ways() - 1),
+        learned_way: Some(learned),
         sim_cycles: Some(cycles),
+        ..Response::default()
     })
 }
 
@@ -317,7 +463,11 @@ mod tests {
                 }) as EngineFactory
             })
             .collect();
-        let c = Coordinator::start(engines, CoordinatorConfig { workers, queue_depth: 64 }).unwrap();
+        let c = Coordinator::start(
+            engines,
+            CoordinatorConfig { workers, queue_depth: 64, ..Default::default() },
+        )
+        .unwrap();
         (c, m)
     }
 
@@ -392,7 +542,7 @@ mod tests {
         let mf = m.clone();
         let c = Coordinator::start(
             vec![Box::new(move || Ok(Engine::sim(mf, ArrayMode::M4x4))) as EngineFactory],
-            CoordinatorConfig { workers: 1, queue_depth: 2 },
+            CoordinatorConfig { workers: 1, queue_depth: 2, ..Default::default() },
         )
         .unwrap();
         let mut rng = Rng::new(4);
@@ -400,17 +550,59 @@ mod tests {
         let mut receivers = Vec::new();
         for _ in 0..64 {
             let (rtx, rrx) = mpsc::channel();
-            match c.submit(Request::ClassifySession {
+            match c.try_submit(Request::ClassifySession {
                 session: 0,
                 input: rand_seq(&m, &mut rng, 0, 16),
                 reply: rtx,
             }) {
                 Ok(()) => receivers.push(rrx),
-                Err(_) => rejected += 1,
+                Err(e) => {
+                    assert_eq!(e, SubmitError::Full);
+                    rejected += 1;
+                }
             }
         }
         assert!(rejected > 0, "expected backpressure rejections");
+        assert_eq!(c.metrics().snapshot().rejected, rejected);
         drop(receivers);
+        c.shutdown();
+    }
+
+    #[test]
+    fn lru_cap_evicts_oldest_session() {
+        let m = SArc::new(crate::model::tests::tiny_model());
+        let mf = m.clone();
+        let c = Coordinator::start(
+            vec![Box::new(move || Ok(Engine::golden(mf))) as EngineFactory],
+            CoordinatorConfig { workers: 1, queue_depth: 16, max_sessions: 3 },
+        )
+        .unwrap();
+        let mut rng = Rng::new(5);
+        for s in 1..=3u64 {
+            c.learn_way(s, vec![rand_seq(&m, &mut rng, 0, 16)]).unwrap();
+        }
+        assert_eq!(c.session_count(), 3);
+        // Refresh session 1 so session 2 is now the LRU.
+        c.classify_session(1, rand_seq(&m, &mut rng, 0, 16)).unwrap();
+        c.learn_way(4, vec![rand_seq(&m, &mut rng, 0, 16)]).unwrap();
+        assert_eq!(c.session_count(), 3);
+        assert_eq!(c.session_ways(2), 0, "LRU session 2 must be evicted");
+        assert_eq!(c.session_ways(1), 1, "recently-used session survives");
+        assert_eq!(c.metrics().snapshot().evictions, 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn explicit_evict_session() {
+        let (c, m) = mk_coord(1);
+        let mut rng = Rng::new(6);
+        c.learn_way(9, vec![rand_seq(&m, &mut rng, 0, 16)]).unwrap();
+        assert_eq!(c.session_count(), 1);
+        assert!(c.evict_session(9).unwrap());
+        assert_eq!(c.session_count(), 0);
+        assert!(!c.evict_session(9).unwrap(), "double evict reports absent");
+        assert!(c.classify_session(9, rand_seq(&m, &mut rng, 0, 16)).is_err());
+        assert_eq!(c.metrics().snapshot().evictions, 1);
         c.shutdown();
     }
 }

@@ -54,10 +54,10 @@ pub fn conv_layer(x: &[u8], t_len: usize, layer: &QLayer, residual: Option<&[u8]
 }
 
 fn use_naive() -> bool {
-    static NAIVE: once_cell::sync::Lazy<bool> = once_cell::sync::Lazy::new(|| {
+    static NAIVE: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *NAIVE.get_or_init(|| {
         std::env::var("CHAMELEON_GOLDEN").map(|v| v == "naive").unwrap_or(false)
-    });
-    *NAIVE
+    })
 }
 
 /// Pre-decoded weight values (i32), same layout as the codes.

@@ -8,11 +8,28 @@
 //! * build time (python, runs once): Pallas shift-add kernels + JAX TCN,
 //!   meta-training, QAT, AOT-lowered to HLO text in `artifacts/`;
 //! * run time (this crate): [`runtime`] executes the lowered graphs via
-//!   PJRT, [`golden`] is the bit-exact functional model, [`sim`] is the
-//!   cycle/power-level SoC simulator implementing the paper's three
-//!   contributions, [`coordinator`] serves streaming inference + on-device
-//!   FSL/CL on top of any of those engines, and [`baselines`] hold the
-//!   prior-work cost models the paper compares against.
+//!   PJRT (feature `xla`; stubbed otherwise), [`golden`] is the bit-exact
+//!   functional model, [`sim`] is the cycle/power-level SoC simulator
+//!   implementing the paper's three contributions, [`coordinator`] serves
+//!   streaming inference + on-device FSL/CL on top of any of those
+//!   engines, [`serve`] puts N coordinator shards behind a TCP wire
+//!   protocol (with a client library and an open-loop load generator), and
+//!   [`baselines`] hold the prior-work cost models the paper compares
+//!   against.
+//!
+//! # Serving quickstart
+//!
+//! No artifacts required — the built-in demo model serves out of the box:
+//!
+//! ```text
+//! cargo run --release -- serve --shards 2 --workers 2
+//! cargo run --release -- loadgen --rps 200 --duration 10 --learn-frac 0.05
+//! ```
+//!
+//! The first command starts a sharded TCP server (default
+//! `127.0.0.1:7070`); the second drives it with open-loop Poisson traffic
+//! and prints throughput plus p50/p95/p99 latency. See `DESIGN.md` §Serve
+//! for the framing, sharding and backpressure contracts.
 
 pub mod baselines;
 pub mod coordinator;
@@ -23,6 +40,7 @@ pub mod model;
 pub mod protonet;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod util;
 

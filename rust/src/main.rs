@@ -4,20 +4,27 @@
 //!   info                         inventory of artifacts + model zoo
 //!   infer   --model NAME [...]   classify eval samples on an engine
 //!   learn   --ways N --shots K   run an on-"chip" FSL episode
-//!   serve   --model NAME         drive the streaming coordinator
+//!   serve   --shards N [...]     sharded TCP serving layer (wire protocol)
+//!   loadgen --rps R [...]        open-loop Poisson load generator
+//!   drive   --model NAME         drive the in-process streaming coordinator
 //!   power   [--mode 4|16 ...]    evaluate the calibrated power model
 //!   verify                       cross-check golden/sim/xla vs vectors
+//!
+//! `serve` and `loadgen` default to the built-in demo model (`--model
+//! tiny_kws`), so the full network stack runs without `make artifacts`.
 
 use std::path::PathBuf;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use chameleon::coordinator::server::EngineFactory;
 use chameleon::coordinator::{Coordinator, CoordinatorConfig, Engine};
 use chameleon::data::EvalPool;
 use chameleon::model::QuantModel;
 use chameleon::runtime::{Runtime, XlaModel};
+use chameleon::serve::{LoadgenConfig, ServeConfig, Server};
 use chameleon::sim::{self, ArrayMode, LearningController, OperatingPoint};
 use chameleon::util::args::Args;
 use chameleon::util::bench::{fmt_dur, fmt_power, Table};
@@ -32,11 +39,16 @@ fn main() {
         "infer" => cmd_infer(&args),
         "learn" => cmd_learn(&args),
         "serve" => cmd_serve(&args),
+        "loadgen" => cmd_loadgen(&args),
+        "drive" => cmd_drive(&args),
         "power" => cmd_power(&args),
         "verify" => cmd_verify(&args),
         "hlo-stats" => cmd_hlo_stats(&args),
         other => {
-            eprintln!("unknown command {other:?}; try info|infer|learn|serve|power|verify|hlo-stats");
+            eprintln!(
+                "unknown command {other:?}; try \
+                 info|infer|learn|serve|loadgen|drive|power|verify|hlo-stats"
+            );
             std::process::exit(2);
         }
     };
@@ -178,7 +190,127 @@ fn cmd_learn(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Resolve `--model`: the built-in demo models serve without artifacts;
+/// anything else loads from the artifacts directory.
+fn serve_model(args: &Args, default: &str) -> Result<QuantModel> {
+    match args.get_or("model", default) {
+        "tiny" => Ok(chameleon::model::demo_tiny()),
+        "tiny_kws" => Ok(chameleon::model::demo_tiny_kws()),
+        _ => load_model(args, default),
+    }
+}
+
+/// Build one engine factory for a serve worker thread.
+fn serve_engine_factory(
+    kind: String,
+    model: Arc<QuantModel>,
+    mode: ArrayMode,
+    dir: PathBuf,
+    paced_hz: f64,
+) -> EngineFactory {
+    Box::new(move || -> Result<Engine> {
+        match kind.as_str() {
+            "golden" => Ok(Engine::golden(model)),
+            "sim" => Ok(Engine::sim(model, mode)),
+            "paced" => Ok(Engine::paced(
+                model,
+                OperatingPoint { voltage: 0.73, f_hz: paced_hz, mode },
+            )),
+            "xla" => {
+                let rt = Runtime::cpu()?;
+                let xm = XlaModel::load(&rt, &dir, &model)?;
+                std::mem::forget(rt); // keep the client alive for the thread
+                Ok(Engine::xla(model, xm))
+            }
+            e => bail!("unknown engine {e:?} (golden|sim|paced|xla)"),
+        }
+    })
+}
+
+/// The sharded TCP serving layer (see `DESIGN.md` §Serve).
 fn cmd_serve(args: &Args) -> Result<()> {
+    let model = Arc::new(serve_model(args, "tiny_kws")?);
+    println!("{}", model.describe());
+    let cfg = ServeConfig {
+        addr: args.get_or("addr", "127.0.0.1:7070").to_string(),
+        shards: args.get_usize("shards", 2)?,
+        workers_per_shard: args.get_usize("workers", 2)?,
+        queue_depth: args.get_usize("queue-depth", 256)?,
+        max_sessions: args.get_usize("max-sessions", 1024)?,
+        ..Default::default()
+    };
+    let engine_kind = args.get_or("engine", "golden").to_string();
+    let mode = mode_from(args);
+    let paced_hz = args.get_f64("paced-hz", 1e6)?;
+    let dir = artifacts(args);
+    let server = Server::start(cfg.clone(), |_shard, _worker| {
+        serve_engine_factory(
+            engine_kind.clone(),
+            model.clone(),
+            mode,
+            dir.clone(),
+            paced_hz,
+        )
+    })?;
+    println!(
+        "serving on {} — {} shard(s) x {} worker(s), queue depth {}, \
+         max {} sessions/shard, engine={engine_kind}",
+        server.local_addr(),
+        cfg.shards,
+        cfg.workers_per_shard,
+        cfg.queue_depth,
+        cfg.max_sessions,
+    );
+    let duration = args.get_f64("duration", 0.0)?;
+    let report_every = args.get_f64("report-every", 10.0)?.max(0.5);
+    let t0 = Instant::now();
+    loop {
+        let tick = if duration > 0.0 {
+            report_every.min((duration - t0.elapsed().as_secs_f64()).max(0.0))
+        } else {
+            report_every
+        };
+        std::thread::sleep(Duration::from_secs_f64(tick));
+        println!("{}", server.metrics().report());
+        if duration > 0.0 && t0.elapsed().as_secs_f64() >= duration {
+            break;
+        }
+    }
+    server.shutdown();
+    Ok(())
+}
+
+/// Open-loop Poisson load generator against a serve endpoint.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let cfg = LoadgenConfig {
+        addr: args.get_or("addr", "127.0.0.1:7070").to_string(),
+        rps: args.get_f64("rps", 200.0)?,
+        duration: Duration::from_secs_f64(args.get_f64("duration", 10.0)?),
+        learn_frac: args.get_f64("learn-frac", 0.05)?,
+        sessions: args.get_u64("sessions", 16)?,
+        shots: args.get_usize("shots", 2)?,
+        connections: args.get_usize("connections", 4)?,
+        seed: args.get_u64("seed", 1)?,
+    };
+    println!(
+        "loadgen -> {}: {:.0} req/s for {:.1} s (learn {:.1}%, {} sessions, {} connections)",
+        cfg.addr,
+        cfg.rps,
+        cfg.duration.as_secs_f64(),
+        100.0 * cfg.learn_frac,
+        cfg.sessions,
+        cfg.connections,
+    );
+    let report = chameleon::serve::loadgen::run(&cfg)?;
+    println!("{}", report.report());
+    if report.protocol_errors > 0 {
+        bail!("{} protocol errors observed", report.protocol_errors);
+    }
+    Ok(())
+}
+
+/// Drive the in-process coordinator directly (the pre-serve harness).
+fn cmd_drive(args: &Args) -> Result<()> {
     let model = Arc::new(load_model(args, "kws_mfcc")?);
     println!("{}", model.describe());
     let pool = EvalPool::load(&artifacts(args).join(format!("eval_{}.json", model.name)))?;
@@ -186,28 +318,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n = args.get_usize("n", 200)?;
     let engine_kind = args.get_or("engine", "golden").to_string();
     let mode = mode_from(args);
+    let paced_hz = args.get_f64("paced-hz", 1e6)?;
     let dir = artifacts(args);
-    let factories: Vec<chameleon::coordinator::server::EngineFactory> = (0..workers)
+    let factories: Vec<EngineFactory> = (0..workers)
         .map(|_| {
-            let model = model.clone();
-            let kind = engine_kind.clone();
-            let dir = dir.clone();
-            Box::new(move || -> Result<Engine> {
-                match kind.as_str() {
-                    "golden" => Ok(Engine::golden(model)),
-                    "sim" => Ok(Engine::sim(model, mode)),
-                    "xla" => {
-                        let rt = Runtime::cpu()?;
-                        let xm = XlaModel::load(&rt, &dir, &model)?;
-                        std::mem::forget(rt); // keep the client alive for the thread
-                        Ok(Engine::xla(model, xm))
-                    }
-                    e => bail!("unknown engine {e:?}"),
-                }
-            }) as chameleon::coordinator::server::EngineFactory
+            serve_engine_factory(engine_kind.clone(), model.clone(), mode, dir.clone(), paced_hz)
         })
         .collect();
-    let coord = Coordinator::start(factories, CoordinatorConfig { workers, queue_depth: 128 })?;
+    let coord = Coordinator::start(
+        factories,
+        CoordinatorConfig { workers, queue_depth: 128, ..Default::default() },
+    )?;
     let mut rng = Rng::new(7);
     let t0 = Instant::now();
     let mut correct = 0;

@@ -258,67 +258,103 @@ impl QuantModel {
     }
 }
 
-#[cfg(test)]
-pub mod tests {
-    use super::*;
+/// Deterministic pseudo-random s4 codes for the built-in demo models.
+fn demo_codes(n: usize, seed: i32) -> Vec<i8> {
+    (0..n).map(|i| (((i as i32 * 7 + seed) % 9) - 4) as i8).collect()
+}
 
-    /// Build a tiny hand-rolled model for unit tests (no artifacts needed):
-    /// two residual blocks — identity residual in block 0, 1x1-conv
-    /// residual (channel change 4 -> 6) in block 1 — with mildly varied
-    /// codes so tests exercise real mixed-sign shift arithmetic.
-    pub fn tiny_model() -> QuantModel {
-        fn codes(n: usize, seed: i32) -> Vec<i8> {
-            (0..n).map(|i| (((i as i32 * 7 + seed) % 9) - 4) as i8).collect()
-        }
-        let conv = |k: usize, cin: usize, cout: usize, dil: usize, res: Option<i32>, seed: i32| QLayer {
-            codes: codes(k * cin * cout, seed),
-            codes_shape: vec![k, cin, cout],
-            bias: (0..cout).map(|c| (c as i32 * 3 - 4) * 2).collect(),
+/// Built-in demo model (no artifacts needed): two residual blocks —
+/// identity residual in block 0, 1x1-conv residual (channel change 4 -> 6)
+/// in block 1 — with mildly varied codes so the full mixed-sign shift
+/// arithmetic is exercised. Headless: classification goes through a
+/// session's learned prototypical head (FSL/CL serving).
+///
+/// Used as the default model of the `serve`/`loadgen` subcommands and by
+/// the unit/integration tests, so the whole serving stack runs end to end
+/// on a fresh checkout without `make artifacts`.
+pub fn demo_tiny() -> QuantModel {
+    let conv = |k: usize, cin: usize, cout: usize, dil: usize, res: Option<i32>, seed: i32| QLayer {
+        codes: demo_codes(k * cin * cout, seed),
+        codes_shape: vec![k, cin, cout],
+        bias: (0..cout).map(|c| (c as i32 * 3 - 4) * 2).collect(),
+        out_shift: 4,
+        dilation: dil,
+        relu: true,
+        res_shift: res,
+        res_codes: None,
+        res_codes_shape: None,
+        res_bias: None,
+        res_out_shift: None,
+    };
+    let mut l_res = conv(3, 6, 6, 2, Some(1), 5);
+    l_res.res_codes = Some(demo_codes(4 * 6, 3));
+    l_res.res_codes_shape = Some(vec![1, 4, 6]);
+    l_res.res_bias = Some(vec![1; 6]);
+    l_res.res_out_shift = Some(2);
+    QuantModel {
+        name: "tiny".into(),
+        in_channels: 4,
+        seq_len: 16,
+        channels: vec![4, 6],
+        kernel_size: 3,
+        embed_dim: 8,
+        n_classes: None,
+        in_shift: 0,
+        embed_shift: 0,
+        layers: vec![
+            conv(3, 4, 4, 1, None, 1),
+            conv(3, 4, 4, 1, Some(0), 2),
+            conv(3, 4, 6, 2, None, 4),
+            l_res,
+        ],
+        embed: QLayer {
+            codes: demo_codes(6 * 8, 6),
+            codes_shape: vec![6, 8],
+            bias: vec![0; 8],
             out_shift: 4,
-            dilation: dil,
+            dilation: 1,
             relu: true,
-            res_shift: res,
+            res_shift: None,
             res_codes: None,
             res_codes_shape: None,
             res_bias: None,
             res_out_shift: None,
-        };
-        let mut l_res = conv(3, 6, 6, 2, Some(1), 5);
-        l_res.res_codes = Some(codes(4 * 6, 3));
-        l_res.res_codes_shape = Some(vec![1, 4, 6]);
-        l_res.res_bias = Some(vec![1; 6]);
-        l_res.res_out_shift = Some(2);
-        QuantModel {
-            name: "tiny".into(),
-            in_channels: 4,
-            seq_len: 16,
-            channels: vec![4, 6],
-            kernel_size: 3,
-            embed_dim: 8,
-            n_classes: None,
-            in_shift: 0,
-            embed_shift: 0,
-            layers: vec![
-                conv(3, 4, 4, 1, None, 1),
-                conv(3, 4, 4, 1, Some(0), 2),
-                conv(3, 4, 6, 2, None, 4),
-                l_res,
-            ],
-            embed: QLayer {
-                codes: codes(6 * 8, 6),
-                codes_shape: vec![6, 8],
-                bias: vec![0; 8],
-                out_shift: 4,
-                dilation: 1,
-                relu: true,
-                res_shift: None,
-                res_codes: None,
-                res_codes_shape: None,
-                res_bias: None,
-                res_out_shift: None,
-            },
-            head: None,
-        }
+        },
+        head: None,
+    }
+}
+
+/// [`demo_tiny`] plus a fixed 5-class classifier head, so the plain
+/// `Classify` path (KWS-style serving with the built-in head) also works
+/// without artifacts. Predictions are deterministic but arbitrary — the
+/// point is exercising the datapath, not accuracy.
+pub fn demo_tiny_kws() -> QuantModel {
+    let mut m = demo_tiny();
+    m.name = "tiny_kws".into();
+    m.n_classes = Some(5);
+    m.head = Some(QLayer {
+        codes: demo_codes(8 * 5, 7),
+        codes_shape: vec![8, 5],
+        bias: (0..5).map(|c| c * 7 - 14).collect(),
+        out_shift: 0,
+        dilation: 1,
+        relu: false,
+        res_shift: None,
+        res_codes: None,
+        res_codes_shape: None,
+        res_bias: None,
+        res_out_shift: None,
+    });
+    m
+}
+
+#[cfg(test)]
+pub mod tests {
+    use super::*;
+
+    /// The canonical tiny test model — the built-in demo model.
+    pub fn tiny_model() -> QuantModel {
+        demo_tiny()
     }
 
     #[test]

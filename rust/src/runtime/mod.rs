@@ -1,139 +1,21 @@
-//! PJRT runtime: loads the AOT-lowered HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them on the XLA CPU client.
+//! Execution runtime for the AOT-lowered artifacts.
 //!
-//! HLO *text* is the interchange format (not serialized protos): jax >= 0.5
-//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids (see /opt/xla-example/README.md). Python never runs
-//! on this path — the artifacts are self-contained.
+//! The real implementation ([`pjrt`], behind the `xla` feature) compiles the
+//! HLO text with a PJRT CPU client. The offline build image does not vendor
+//! the `xla` crate, so by default an API-compatible [`stub`] is used instead:
+//! every constructor returns an error at *runtime*, while every caller — the
+//! `xla` engine selection in the CLI, the benches, the examples — keeps
+//! compiling unchanged. [`hlo_stats`] is pure text analysis and always
+//! available.
 
 pub mod hlo_stats;
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+#[cfg(feature = "xla")]
+mod pjrt;
+#[cfg(feature = "xla")]
+pub use pjrt::{Executable, Runtime, XlaModel};
 
-use anyhow::{anyhow, bail, Context, Result};
-
-/// A PJRT CPU client plus a cache of compiled executables.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    cache: Mutex<HashMap<PathBuf, std::sync::Arc<Executable>>>,
-}
-
-/// One compiled HLO module.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    pub path: PathBuf,
-}
-
-impl Runtime {
-    /// Create the CPU PJRT client.
-    pub fn cpu() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Runtime { client, cache: Mutex::new(HashMap::new()) })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile an HLO text file (cached by path).
-    pub fn load(&self, path: &Path) -> Result<std::sync::Arc<Executable>> {
-        if let Some(hit) = self.cache.lock().unwrap().get(path) {
-            return Ok(hit.clone());
-        }
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
-        let exe = std::sync::Arc::new(Executable { exe, path: path.to_path_buf() });
-        self.cache.lock().unwrap().insert(path.to_path_buf(), exe.clone());
-        Ok(exe)
-    }
-}
-
-impl Executable {
-    /// Execute with i32 tensor inputs; returns the flattened i32 outputs of
-    /// the result tuple (jax lowers with `return_tuple=True`).
-    pub fn run_i32(&self, inputs: &[(Vec<i32>, Vec<usize>)]) -> Result<Vec<Vec<i32>>> {
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (data, shape) in inputs {
-            let lit = xla::Literal::vec1(data);
-            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-            let lit = lit
-                .reshape(&dims)
-                .map_err(|e| anyhow!("reshape to {dims:?}: {e:?}"))?;
-            literals.push(lit);
-        }
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute: {e:?}"))?;
-        let out = result
-            .first()
-            .and_then(|d| d.first())
-            .ok_or_else(|| anyhow!("no output buffers"))?
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch output: {e:?}"))?;
-        // Outer tuple -> element literals.
-        let elems = out.to_tuple().map_err(|e| anyhow!("decompose tuple: {e:?}"))?;
-        elems
-            .into_iter()
-            .map(|l| l.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e:?}")))
-            .collect()
-    }
-}
-
-/// Convenience wrapper: the AOT-compiled integer TCN of one model.
-pub struct XlaModel {
-    pub exe: std::sync::Arc<Executable>,
-    pub seq_len: usize,
-    pub in_channels: usize,
-    pub embed_dim: usize,
-    pub n_classes: Option<usize>,
-}
-
-impl XlaModel {
-    pub fn load(rt: &Runtime, artifacts: &Path, model: &crate::model::QuantModel) -> Result<XlaModel> {
-        let hlo = artifacts.join(format!("{}.hlo.txt", model.name));
-        if !hlo.exists() {
-            bail!("artifact {} missing — run `make artifacts`", hlo.display());
-        }
-        let exe = rt
-            .load(&hlo)
-            .with_context(|| format!("loading {}", hlo.display()))?;
-        Ok(XlaModel {
-            exe,
-            seq_len: model.seq_len,
-            in_channels: model.in_channels,
-            embed_dim: model.embed_dim,
-            n_classes: model.n_classes,
-        })
-    }
-
-    /// u4 input sequence -> (embedding u4, logits if the graph has a head).
-    pub fn forward(&self, x_q: &[u8]) -> Result<(Vec<u8>, Option<Vec<i32>>)> {
-        if x_q.len() != self.seq_len * self.in_channels {
-            bail!(
-                "input size mismatch: {} != {}",
-                x_q.len(),
-                self.seq_len * self.in_channels
-            );
-        }
-        let data: Vec<i32> = x_q.iter().map(|&v| v as i32).collect();
-        let outs = self
-            .exe
-            .run_i32(&[(data, vec![self.seq_len, self.in_channels])])?;
-        let emb: Vec<u8> = outs
-            .first()
-            .ok_or_else(|| anyhow!("missing embedding output"))?
-            .iter()
-            .map(|&v| v as u8)
-            .collect();
-        let logits = outs.get(1).cloned();
-        Ok((emb, logits))
-    }
-}
+#[cfg(not(feature = "xla"))]
+mod stub;
+#[cfg(not(feature = "xla"))]
+pub use stub::{Executable, Runtime, XlaModel};

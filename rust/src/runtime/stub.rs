@@ -1,0 +1,84 @@
+//! Stub PJRT runtime, used when the crate is built without the `xla`
+//! feature (the default in the offline image, which cannot vendor the `xla`
+//! crate). Mirrors the public API of [`super::pjrt`] exactly so engine
+//! selection, benches and examples compile; any attempt to actually *use*
+//! the XLA path fails with a clear error at runtime.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+const NO_XLA: &str = "built without the `xla` feature: the PJRT runtime is unavailable \
+                      (add the `xla` crate to rust/Cargo.toml [dependencies] and rebuild \
+                      with `--features xla` — see the Cargo.toml [features] note); \
+                      use --engine golden or --engine sim instead";
+
+/// Stand-in for the PJRT CPU client. Cannot be constructed.
+pub struct Runtime {
+    _private: (),
+}
+
+/// Stand-in for a compiled HLO module. Cannot be constructed.
+pub struct Executable {
+    pub path: PathBuf,
+    _private: (),
+}
+
+/// Stand-in for the AOT-compiled integer TCN of one model.
+///
+/// Carries the same public metadata fields as the real wrapper so code that
+/// merely *stores* an `XlaModel` (e.g. [`crate::coordinator::EngineKind`])
+/// compiles; it can never be instantiated without the `xla` feature.
+pub struct XlaModel {
+    pub seq_len: usize,
+    pub in_channels: usize,
+    pub embed_dim: usize,
+    pub n_classes: Option<usize>,
+    _private: (),
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        bail!(NO_XLA)
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn load(&self, _path: &Path) -> Result<Arc<Executable>> {
+        bail!(NO_XLA)
+    }
+}
+
+impl Executable {
+    pub fn run_i32(&self, _inputs: &[(Vec<i32>, Vec<usize>)]) -> Result<Vec<Vec<i32>>> {
+        bail!(NO_XLA)
+    }
+}
+
+impl XlaModel {
+    pub fn load(
+        _rt: &Runtime,
+        _artifacts: &Path,
+        _model: &crate::model::QuantModel,
+    ) -> Result<XlaModel> {
+        bail!(NO_XLA)
+    }
+
+    pub fn forward(&self, _x_q: &[u8]) -> Result<(Vec<u8>, Option<Vec<i32>>)> {
+        bail!(NO_XLA)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_errors_cleanly() {
+        let err = Runtime::cpu().err().expect("stub must not construct");
+        assert!(err.to_string().contains("xla"));
+    }
+}

@@ -1,0 +1,229 @@
+//! Blocking client for the serve wire protocol, with reconnect + timeout
+//! handling.
+//!
+//! [`Client::call`] is the raw request/response primitive: transport and
+//! framing failures are `Err` (after the configured reconnect attempts),
+//! while server-sent `Error` frames come back as
+//! `Ok(WireResponse::Error { .. })` so callers like the load generator can
+//! count `Overloaded` (expected under backpressure) separately from
+//! protocol failures (never expected). The typed convenience methods fold
+//! server errors into `anyhow` errors for ordinary callers.
+
+use std::io::{BufReader, BufWriter};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::serve::proto::{
+    self, ErrorCode, HealthWire, MetricsWire, WireReply, WireRequest, WireResponse,
+};
+
+/// Client tuning knobs.
+#[derive(Debug, Clone)]
+pub struct ClientConfig {
+    /// Socket read/write timeout per call.
+    pub timeout: Duration,
+    /// Transport failures tolerated per call before giving up (each retry
+    /// reconnects from scratch).
+    pub reconnect_attempts: u32,
+    /// Pause between reconnect attempts.
+    pub reconnect_backoff: Duration,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        ClientConfig {
+            timeout: Duration::from_secs(10),
+            reconnect_attempts: 2,
+            reconnect_backoff: Duration::from_millis(50),
+        }
+    }
+}
+
+/// Blocking connection to a serve endpoint. One in-flight request at a
+/// time (the protocol is strictly request/response per connection); use
+/// one client per thread to pipeline.
+pub struct Client {
+    addr: String,
+    cfg: ClientConfig,
+    stream: Option<TcpStream>,
+}
+
+impl Client {
+    /// Connect with default configuration.
+    pub fn connect(addr: impl Into<String>) -> Result<Client> {
+        Client::with_config(addr, ClientConfig::default())
+    }
+
+    pub fn with_config(addr: impl Into<String>, cfg: ClientConfig) -> Result<Client> {
+        let mut c = Client { addr: addr.into(), cfg, stream: None };
+        c.ensure_connected()?;
+        Ok(c)
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    fn ensure_connected(&mut self) -> Result<&mut TcpStream> {
+        if self.stream.is_none() {
+            let s = TcpStream::connect(&self.addr)
+                .with_context(|| format!("connecting to {}", self.addr))?;
+            s.set_read_timeout(Some(self.cfg.timeout))?;
+            s.set_write_timeout(Some(self.cfg.timeout))?;
+            s.set_nodelay(true).ok();
+            self.stream = Some(s);
+        }
+        Ok(self.stream.as_mut().unwrap())
+    }
+
+    /// Raw call: send one request frame, read one response frame.
+    /// Reconnects and retries on transport errors up to the configured
+    /// attempt budget; server `Error` frames are returned as `Ok`.
+    ///
+    /// Retry discipline: a failure *before* the request hit the wire is
+    /// always retried. A failure *after* it may have been sent is only
+    /// retried for idempotent requests — re-sending a `LearnWay` whose
+    /// reply was lost could apply the learning twice, so it surfaces as
+    /// an error for the caller to decide.
+    pub fn call(&mut self, req: &WireRequest) -> Result<WireResponse> {
+        let frame = proto::encode_request(req);
+        let idempotent = !matches!(req, WireRequest::LearnWay { .. });
+        let mut last_err: Option<anyhow::Error> = None;
+        for attempt in 0..=self.cfg.reconnect_attempts {
+            if attempt > 0 {
+                std::thread::sleep(self.cfg.reconnect_backoff);
+            }
+            match self.try_call(&frame) {
+                Ok(resp) => return Ok(resp),
+                Err(CallError::NotSent(e)) => {
+                    self.stream = None;
+                    last_err = Some(e);
+                }
+                Err(CallError::Sent(e)) => {
+                    // Drop the (possibly poisoned) connection before retry.
+                    self.stream = None;
+                    if !idempotent {
+                        return Err(e.context(
+                            "transport failed after a non-idempotent request may have \
+                             been sent; not retrying (the server may have applied it)",
+                        ));
+                    }
+                    last_err = Some(e);
+                }
+            }
+        }
+        Err(last_err.unwrap_or_else(|| anyhow!("call failed with no attempts")))
+    }
+
+    fn try_call(&mut self, frame: &[u8]) -> std::result::Result<WireResponse, CallError> {
+        let stream = self.ensure_connected().map_err(CallError::NotSent)?;
+        let cloned = stream.try_clone().map_err(|e| CallError::NotSent(e.into()))?;
+        let mut writer = BufWriter::new(cloned);
+        proto::write_frame(&mut writer, frame).map_err(CallError::Sent)?;
+        drop(writer);
+        let reader_stream = self
+            .stream
+            .as_mut()
+            .unwrap()
+            .try_clone()
+            .map_err(|e| CallError::Sent(e.into()))?;
+        let mut reader = BufReader::new(reader_stream);
+        let blob = proto::read_frame(&mut reader)
+            .map_err(CallError::Sent)?
+            .ok_or_else(|| CallError::Sent(anyhow!("server closed the connection")))?;
+        proto::decode_response(&blob).map_err(CallError::Sent)
+    }
+
+    fn expect_reply(&mut self, req: &WireRequest) -> Result<WireReply> {
+        match self.call(req)? {
+            WireResponse::Reply(r) => Ok(r),
+            WireResponse::Error { code, message } => {
+                bail!("server error ({code:?}): {message}")
+            }
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Classify with the model's built-in head.
+    pub fn classify(&mut self, input: Vec<u8>) -> Result<WireReply> {
+        self.expect_reply(&WireRequest::Classify { input })
+    }
+
+    /// Classify against a session's learned head.
+    pub fn classify_session(&mut self, session: u64, input: Vec<u8>) -> Result<WireReply> {
+        self.expect_reply(&WireRequest::ClassifySession { session, input })
+    }
+
+    /// Learn one new way for a session.
+    pub fn learn_way(&mut self, session: u64, shots: Vec<Vec<u8>>) -> Result<WireReply> {
+        self.expect_reply(&WireRequest::LearnWay { session, shots })
+    }
+
+    /// Evict a session; returns whether it existed.
+    pub fn evict_session(&mut self, session: u64) -> Result<bool> {
+        match self.call(&WireRequest::EvictSession { session })? {
+            WireResponse::Evicted { existed } => Ok(existed),
+            WireResponse::Error { code, message } => {
+                bail!("server error ({code:?}): {message}")
+            }
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Liveness + model geometry probe.
+    pub fn health(&mut self) -> Result<HealthWire> {
+        match self.call(&WireRequest::Health)? {
+            WireResponse::Health(h) => Ok(h),
+            WireResponse::Error { code, message } => {
+                bail!("server error ({code:?}): {message}")
+            }
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Aggregated serving metrics across all shards.
+    pub fn metrics(&mut self) -> Result<MetricsWire> {
+        match self.call(&WireRequest::Metrics)? {
+            WireResponse::Metrics(m) => Ok(m),
+            WireResponse::Error { code, message } => {
+                bail!("server error ({code:?}): {message}")
+            }
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+}
+
+/// Whether a transport failure happened before or after the request may
+/// have reached the server — decides retry safety for non-idempotent ops.
+enum CallError {
+    NotSent(anyhow::Error),
+    Sent(anyhow::Error),
+}
+
+/// Classify the outcome of a raw [`Client::call`] for load accounting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// A successful operation reply.
+    Ok,
+    /// Backpressure shed by the server — expected under overload.
+    Overloaded,
+    /// Well-formed but failed at the application layer.
+    AppError,
+    /// Transport or framing failure — never expected against a healthy
+    /// loopback server.
+    ProtocolError,
+}
+
+impl Outcome {
+    pub fn of(result: &Result<WireResponse>) -> Outcome {
+        match result {
+            Ok(WireResponse::Error { code: ErrorCode::Overloaded, .. }) => Outcome::Overloaded,
+            Ok(WireResponse::Error { code: ErrorCode::Malformed, .. }) => Outcome::ProtocolError,
+            Ok(WireResponse::Error { .. }) => Outcome::AppError,
+            Ok(_) => Outcome::Ok,
+            Err(_) => Outcome::ProtocolError,
+        }
+    }
+}

@@ -1,0 +1,313 @@
+//! Open-loop Poisson load generator for the serve layer.
+//!
+//! Arrival times are pre-drawn from an exponential inter-arrival process at
+//! the configured rate and *do not* adapt to response latency (open-loop):
+//! if the server falls behind, arrivals queue on the worker threads and the
+//! measured latency — taken from each request's **scheduled** arrival time,
+//! not its actual send time — faithfully includes that coordination delay.
+//! This avoids the closed-loop trap where a slow server throttles its own
+//! load and the tail disappears from the histogram.
+//!
+//! Traffic mix: each arrival is a `LearnWay` with probability `learn_frac`
+//! (k random shots on a random session), otherwise a `ClassifySession` on a
+//! random pre-warmed session. Sessions span all shards, so a run exercises
+//! cross-shard routing by construction.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::metrics::{HistSnapshot, LatencyHistogram};
+use crate::serve::client::{Client, ClientConfig, Outcome};
+use crate::serve::proto::{ErrorCode, MetricsWire, WireRequest, WireResponse};
+use crate::util::rng::Rng;
+
+/// Load generator configuration.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    pub addr: String,
+    /// Offered load in requests per second (Poisson arrivals).
+    pub rps: f64,
+    pub duration: Duration,
+    /// Fraction of arrivals that are `LearnWay` ops (rest classify).
+    pub learn_frac: f64,
+    /// Session-id space (1..=sessions), warmed before the run starts.
+    pub sessions: u64,
+    /// Shots per learn op.
+    pub shots: usize,
+    /// Worker connections draining the arrival schedule.
+    pub connections: usize,
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            addr: "127.0.0.1:7070".to_string(),
+            rps: 200.0,
+            duration: Duration::from_secs(10),
+            learn_frac: 0.05,
+            sessions: 16,
+            shots: 2,
+            connections: 4,
+            seed: 1,
+        }
+    }
+}
+
+/// Outcome of one load generation run.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub offered_rps: f64,
+    pub sent: u64,
+    pub ok: u64,
+    pub overloaded: u64,
+    pub app_errors: u64,
+    /// Transport/framing failures — must be zero against a healthy server.
+    pub protocol_errors: u64,
+    pub wall: Duration,
+    /// Client-observed latency from each request's scheduled arrival.
+    pub latency: HistSnapshot,
+    /// Server-side aggregated metrics fetched after the run.
+    pub server: Option<MetricsWire>,
+}
+
+impl LoadReport {
+    pub fn achieved_rps(&self) -> f64 {
+        if self.wall.as_secs_f64() <= 0.0 {
+            0.0
+        } else {
+            self.ok as f64 / self.wall.as_secs_f64()
+        }
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "offered {:.1} req/s -> completed {} ok / {} overloaded / {} app errors / \
+             {} protocol errors in {:.2} s\n\
+             throughput {:.1} req/s  latency p50={:.0}us p95={:.0}us p99={:.0}us mean={:.0}us",
+            self.offered_rps,
+            self.ok,
+            self.overloaded,
+            self.app_errors,
+            self.protocol_errors,
+            self.wall.as_secs_f64(),
+            self.achieved_rps(),
+            self.latency.percentile_us(50.0),
+            self.latency.percentile_us(95.0),
+            self.latency.percentile_us(99.0),
+            self.latency.mean_us(),
+        );
+        if let Some(m) = &self.server {
+            s.push_str("\nserver: ");
+            s.push_str(&m.report());
+        }
+        s
+    }
+}
+
+struct Counters {
+    next: AtomicUsize,
+    ok: AtomicU64,
+    overloaded: AtomicU64,
+    app_errors: AtomicU64,
+    protocol_errors: AtomicU64,
+}
+
+/// Run the load generator against a serve endpoint. Warms every session
+/// with one learned way first so classification traffic is always valid.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
+    if cfg.rps <= 0.0 {
+        bail!("--rps must be positive");
+    }
+    if cfg.sessions == 0 {
+        bail!("--sessions must be at least 1");
+    }
+    if !(0.0..=1.0).contains(&cfg.learn_frac) {
+        bail!("--learn-frac must be in [0, 1]");
+    }
+
+    // ---- probe + session warmup -----------------------------------------
+    let mut probe = Client::with_config(
+        &cfg.addr,
+        ClientConfig { timeout: Duration::from_secs(30), ..Default::default() },
+    )
+    .context("connecting to serve endpoint")?;
+    let health = probe.health().context("health probe")?;
+    let input_len = health.input_len as usize;
+    let mut rng = Rng::new(cfg.seed);
+    for session in 1..=cfg.sessions {
+        let shots: Vec<Vec<u8>> = (0..cfg.shots.max(1))
+            .map(|_| rand_input(&mut rng, input_len))
+            .collect();
+        let mut warmed = false;
+        for _ in 0..50 {
+            match probe.call(&WireRequest::LearnWay { session, shots: shots.clone() }) {
+                Ok(WireResponse::Error { code: ErrorCode::Overloaded, .. }) => {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Ok(WireResponse::Error { code, message }) => {
+                    bail!("warming session {session} failed ({code:?}): {message}");
+                }
+                Ok(_) => {
+                    warmed = true;
+                    break;
+                }
+                Err(e) => return Err(e).context("warming sessions"),
+            }
+        }
+        if !warmed {
+            bail!("could not warm session {session}: server persistently overloaded");
+        }
+    }
+
+    // ---- pre-draw the open-loop arrival schedule ------------------------
+    let mut schedule = Vec::new();
+    let mut t = 0.0f64;
+    let horizon = cfg.duration.as_secs_f64();
+    loop {
+        // Exponential inter-arrival: -ln(U)/rate.
+        let u = (1.0 - rng.uniform()).max(f64::MIN_POSITIVE);
+        t += -u.ln() / cfg.rps;
+        if t >= horizon {
+            break;
+        }
+        schedule.push(Duration::from_secs_f64(t));
+    }
+    let schedule = Arc::new(schedule);
+
+    let counters = Arc::new(Counters {
+        next: AtomicUsize::new(0),
+        ok: AtomicU64::new(0),
+        overloaded: AtomicU64::new(0),
+        app_errors: AtomicU64::new(0),
+        protocol_errors: AtomicU64::new(0),
+    });
+    let hist = Arc::new(LatencyHistogram::new());
+
+    // ---- drain the schedule over N connections --------------------------
+    let start = Instant::now();
+    let mut workers = Vec::new();
+    for wid in 0..cfg.connections.max(1) {
+        let schedule = schedule.clone();
+        let counters = counters.clone();
+        let hist = hist.clone();
+        let addr = cfg.addr.clone();
+        let (seed, sessions, learn_frac, shots) =
+            (cfg.seed, cfg.sessions, cfg.learn_frac, cfg.shots.max(1));
+        workers.push(
+            std::thread::Builder::new()
+                .name(format!("loadgen-{wid}"))
+                .spawn(move || -> Result<()> {
+                    let mut client = Client::connect(&addr)?;
+                    loop {
+                        let i = counters.next.fetch_add(1, Ordering::Relaxed);
+                        if i >= schedule.len() {
+                            return Ok(());
+                        }
+                        let due = start + schedule[i];
+                        let now = Instant::now();
+                        if due > now {
+                            std::thread::sleep(due - now);
+                        }
+                        // Per-arrival deterministic op stream.
+                        let mut op_rng =
+                            Rng::new(seed ^ (i as u64).wrapping_mul(0xA24B_AED4_963E_E407));
+                        let session = 1 + op_rng.below(sessions);
+                        let req = if op_rng.uniform() < learn_frac {
+                            WireRequest::LearnWay {
+                                session,
+                                shots: (0..shots)
+                                    .map(|_| rand_input(&mut op_rng, input_len))
+                                    .collect(),
+                            }
+                        } else {
+                            WireRequest::ClassifySession {
+                                session,
+                                input: rand_input(&mut op_rng, input_len),
+                            }
+                        };
+                        let result = client.call(&req);
+                        // Open-loop latency: from scheduled arrival.
+                        hist.record(due.elapsed());
+                        match Outcome::of(&result) {
+                            Outcome::Ok => counters.ok.fetch_add(1, Ordering::Relaxed),
+                            Outcome::Overloaded => {
+                                counters.overloaded.fetch_add(1, Ordering::Relaxed)
+                            }
+                            Outcome::AppError => {
+                                counters.app_errors.fetch_add(1, Ordering::Relaxed)
+                            }
+                            Outcome::ProtocolError => {
+                                counters.protocol_errors.fetch_add(1, Ordering::Relaxed)
+                            }
+                        };
+                    }
+                })
+                .context("spawning loadgen worker")?,
+        );
+    }
+    for w in workers {
+        match w.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => return Err(e.context("loadgen worker failed")),
+            Err(_) => bail!("loadgen worker panicked"),
+        }
+    }
+    let wall = start.elapsed();
+
+    let server = probe.metrics().ok();
+    Ok(LoadReport {
+        offered_rps: cfg.rps,
+        sent: schedule.len() as u64,
+        ok: counters.ok.load(Ordering::Relaxed),
+        overloaded: counters.overloaded.load(Ordering::Relaxed),
+        app_errors: counters.app_errors.load(Ordering::Relaxed),
+        protocol_errors: counters.protocol_errors.load(Ordering::Relaxed),
+        wall,
+        latency: hist.snapshot(),
+        server,
+    })
+}
+
+fn rand_input(rng: &mut Rng, len: usize) -> Vec<u8> {
+    (0..len).map(|_| rng.below(16) as u8).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_validation() {
+        let mut cfg = LoadgenConfig { rps: 0.0, ..Default::default() };
+        assert!(run(&cfg).is_err());
+        cfg.rps = 100.0;
+        cfg.learn_frac = 1.5;
+        assert!(run(&cfg).is_err());
+        cfg.learn_frac = 0.1;
+        cfg.sessions = 0;
+        assert!(run(&cfg).is_err());
+    }
+
+    #[test]
+    fn report_formats() {
+        let r = LoadReport {
+            offered_rps: 100.0,
+            sent: 10,
+            ok: 9,
+            overloaded: 1,
+            app_errors: 0,
+            protocol_errors: 0,
+            wall: Duration::from_secs(1),
+            latency: HistSnapshot::default(),
+            server: None,
+        };
+        let s = r.report();
+        assert!(s.contains("9 ok"));
+        assert!(s.contains("p99"));
+        assert!((r.achieved_rps() - 9.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,34 @@
+//! Network serving layer: a sharded TCP front end over the coordinator.
+//!
+//! This is the first subsystem that exercises the whole stack — golden
+//! model / cycle simulator / (optional) PJRT runtime, behind the
+//! coordinator's bounded queues and session store — across a process
+//! boundary. Four pieces (see `DESIGN.md` §Serve):
+//!
+//! * [`proto`]  — length-prefixed, versioned binary wire protocol;
+//! * [`server`] — thread-per-connection TCP server over N coordinator
+//!   shards: sessions route by stable `SessionId` hash, session-less
+//!   classification fans out round-robin, queue overflow surfaces as an
+//!   explicit `Overloaded` wire error;
+//! * [`client`] — blocking client library with reconnect + timeouts;
+//! * [`loadgen`] — open-loop Poisson load generator reporting throughput
+//!   and p50/p95/p99 latency from the shared fixed-bucket histogram.
+//!
+//! Quickstart (no artifacts needed — uses the built-in demo model):
+//!
+//! ```text
+//! cargo run --release -- serve --shards 2 --workers 2
+//! cargo run --release -- loadgen --rps 200 --duration 10 --learn-frac 0.05
+//! ```
+
+pub mod client;
+pub mod loadgen;
+pub mod proto;
+pub mod server;
+
+pub use client::{Client, ClientConfig, Outcome};
+pub use loadgen::{LoadReport, LoadgenConfig};
+pub use proto::{
+    ErrorCode, HealthWire, MetricsWire, WireReply, WireRequest, WireResponse,
+};
+pub use server::{shard_of, ServeConfig, Server};

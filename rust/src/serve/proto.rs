@@ -1,0 +1,706 @@
+//! Length-prefixed binary wire protocol of the serve layer.
+//!
+//! Framing (all integers little-endian):
+//!
+//! ```text
+//! frame   := len:u32 | body                  len = body length in bytes
+//! body    := version:u8 (=1) | opcode:u8 | payload
+//! bytes   := n:u32 | raw[n]
+//! string  := bytes (utf-8)
+//! opt<T>  := 0:u8 | 1:u8 T
+//! list<T> := n:u32 | T[n]
+//! ```
+//!
+//! A frame whose length prefix exceeds [`MAX_FRAME`] bytes (or is too short
+//! to hold the header), whose version byte is unknown, or whose payload
+//! does not decode exactly, is *malformed*: the server answers with an
+//! `Error { code: Malformed }` frame and closes the connection. Payload
+//! decoding is strict — trailing bytes are an error — so every frame has
+//! exactly one valid byte representation (round-trip tested below).
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Result};
+
+/// Protocol version carried in every frame header.
+pub const VERSION: u8 = 1;
+
+/// Upper bound on one frame body; protects the server from hostile length
+/// prefixes (a learn frame of 64 shots x 16 kB inputs is ~1 MB, so 16 MiB
+/// leaves ample headroom).
+pub const MAX_FRAME: usize = 16 << 20;
+
+// Request opcodes.
+const OP_CLASSIFY: u8 = 0x01;
+const OP_CLASSIFY_SESSION: u8 = 0x02;
+const OP_LEARN_WAY: u8 = 0x03;
+const OP_EVICT_SESSION: u8 = 0x04;
+const OP_HEALTH: u8 = 0x05;
+const OP_METRICS: u8 = 0x06;
+
+// Response opcodes.
+const OP_REPLY: u8 = 0x81;
+const OP_HEALTH_REPLY: u8 = 0x82;
+const OP_METRICS_REPLY: u8 = 0x83;
+const OP_EVICTED: u8 = 0x84;
+const OP_ERROR: u8 = 0xFF;
+
+/// Client -> server messages.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireRequest {
+    /// Classify with the model's built-in head.
+    Classify { input: Vec<u8> },
+    /// Classify against a session's learned prototypical head.
+    ClassifySession { session: u64, input: Vec<u8> },
+    /// Learn one new way for a session from k support sequences.
+    LearnWay { session: u64, shots: Vec<Vec<u8>> },
+    /// Drop a session's learned head.
+    EvictSession { session: u64 },
+    /// Liveness + model geometry probe.
+    Health,
+    /// Aggregated serving metrics across all shards.
+    Metrics,
+}
+
+/// Server -> client messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireResponse {
+    Reply(WireReply),
+    Health(HealthWire),
+    Metrics(MetricsWire),
+    Evicted { existed: bool },
+    Error { code: ErrorCode, message: String },
+}
+
+/// Mirror of [`crate::coordinator::Response`] on the wire.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct WireReply {
+    pub predicted: Option<u64>,
+    pub logits: Option<Vec<i32>>,
+    pub learned_way: Option<u64>,
+    pub sim_cycles: Option<u64>,
+}
+
+/// Health probe payload: enough for a client (or the load generator) to
+/// shape valid traffic without out-of-band model knowledge.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct HealthWire {
+    pub shards: u32,
+    pub live_sessions: u64,
+    /// Flat input length (`seq_len * in_channels`) a request must carry.
+    pub input_len: u32,
+    pub embed_dim: u32,
+}
+
+/// Aggregated metrics payload (counters summed across shards, percentiles
+/// computed over the merged fixed-bucket histograms).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsWire {
+    pub requests: u64,
+    pub completed: u64,
+    pub errors: u64,
+    pub rejected: u64,
+    pub learn_ways: u64,
+    pub evictions: u64,
+    pub sim_cycles: u64,
+    pub mean_latency_us: f64,
+    pub p50_latency_us: f64,
+    pub p95_latency_us: f64,
+    pub p99_latency_us: f64,
+}
+
+impl From<&crate::coordinator::metrics::MetricsSnapshot> for MetricsWire {
+    fn from(s: &crate::coordinator::metrics::MetricsSnapshot) -> MetricsWire {
+        MetricsWire {
+            requests: s.requests,
+            completed: s.completed,
+            errors: s.errors,
+            rejected: s.rejected,
+            learn_ways: s.learn_ways,
+            evictions: s.evictions,
+            sim_cycles: s.sim_cycles,
+            mean_latency_us: s.mean_latency_us,
+            p50_latency_us: s.p50_latency_us,
+            p95_latency_us: s.p95_latency_us,
+            p99_latency_us: s.p99_latency_us,
+        }
+    }
+}
+
+impl MetricsWire {
+    /// Keep the line format in sync with `MetricsSnapshot::report`
+    /// (coordinator/metrics.rs) — same fields, wire side simply lacks the
+    /// raw histogram.
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} completed={} errors={} rejected={} learned_ways={} evictions={} \
+             latency mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us sim_cycles={}",
+            self.requests,
+            self.completed,
+            self.errors,
+            self.rejected,
+            self.learn_ways,
+            self.evictions,
+            self.mean_latency_us,
+            self.p50_latency_us,
+            self.p95_latency_us,
+            self.p99_latency_us,
+            self.sim_cycles,
+        )
+    }
+}
+
+/// Wire error classes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Bounded-queue backpressure: the request was *not* processed; retry
+    /// later or shed. Surfaced instead of letting the connection hang.
+    Overloaded,
+    /// The frame violated the protocol; the server closes the connection.
+    Malformed,
+    /// The request was well-formed but failed (unknown session, wrong
+    /// input length, engine error, shutdown).
+    App,
+}
+
+impl ErrorCode {
+    pub fn as_u8(self) -> u8 {
+        match self {
+            ErrorCode::Overloaded => 1,
+            ErrorCode::Malformed => 2,
+            ErrorCode::App => 3,
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Result<ErrorCode> {
+        Ok(match v {
+            1 => ErrorCode::Overloaded,
+            2 => ErrorCode::Malformed,
+            3 => ErrorCode::App,
+            _ => bail!("unknown error code {v}"),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    put_u32(out, b.len() as u32);
+    out.extend_from_slice(b);
+}
+
+fn put_opt_u64(out: &mut Vec<u8>, v: Option<u64>) {
+    match v {
+        None => out.push(0),
+        Some(x) => {
+            out.push(1);
+            put_u64(out, x);
+        }
+    }
+}
+
+fn put_opt_i32s(out: &mut Vec<u8>, v: &Option<Vec<i32>>) {
+    match v {
+        None => out.push(0),
+        Some(xs) => {
+            out.push(1);
+            put_u32(out, xs.len() as u32);
+            for x in xs {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+}
+
+fn body(opcode: u8) -> Vec<u8> {
+    vec![VERSION, opcode]
+}
+
+/// Encode a request as a full frame (length prefix included).
+pub fn encode_request(req: &WireRequest) -> Vec<u8> {
+    let mut b = match req {
+        WireRequest::Classify { input } => {
+            let mut b = body(OP_CLASSIFY);
+            put_bytes(&mut b, input);
+            b
+        }
+        WireRequest::ClassifySession { session, input } => {
+            let mut b = body(OP_CLASSIFY_SESSION);
+            put_u64(&mut b, *session);
+            put_bytes(&mut b, input);
+            b
+        }
+        WireRequest::LearnWay { session, shots } => {
+            let mut b = body(OP_LEARN_WAY);
+            put_u64(&mut b, *session);
+            put_u32(&mut b, shots.len() as u32);
+            for s in shots {
+                put_bytes(&mut b, s);
+            }
+            b
+        }
+        WireRequest::EvictSession { session } => {
+            let mut b = body(OP_EVICT_SESSION);
+            put_u64(&mut b, *session);
+            b
+        }
+        WireRequest::Health => body(OP_HEALTH),
+        WireRequest::Metrics => body(OP_METRICS),
+    };
+    prepend_len(&mut b);
+    b
+}
+
+/// Encode a response as a full frame (length prefix included).
+pub fn encode_response(resp: &WireResponse) -> Vec<u8> {
+    let mut b = match resp {
+        WireResponse::Reply(r) => {
+            let mut b = body(OP_REPLY);
+            put_opt_u64(&mut b, r.predicted);
+            put_opt_i32s(&mut b, &r.logits);
+            put_opt_u64(&mut b, r.learned_way);
+            put_opt_u64(&mut b, r.sim_cycles);
+            b
+        }
+        WireResponse::Health(h) => {
+            let mut b = body(OP_HEALTH_REPLY);
+            put_u32(&mut b, h.shards);
+            put_u64(&mut b, h.live_sessions);
+            put_u32(&mut b, h.input_len);
+            put_u32(&mut b, h.embed_dim);
+            b
+        }
+        WireResponse::Metrics(m) => {
+            let mut b = body(OP_METRICS_REPLY);
+            for v in [
+                m.requests, m.completed, m.errors, m.rejected,
+                m.learn_ways, m.evictions, m.sim_cycles,
+            ] {
+                put_u64(&mut b, v);
+            }
+            for v in [m.mean_latency_us, m.p50_latency_us, m.p95_latency_us, m.p99_latency_us] {
+                put_f64(&mut b, v);
+            }
+            b
+        }
+        WireResponse::Evicted { existed } => {
+            let mut b = body(OP_EVICTED);
+            b.push(u8::from(*existed));
+            b
+        }
+        WireResponse::Error { code, message } => {
+            let mut b = body(OP_ERROR);
+            b.push(code.as_u8());
+            put_bytes(&mut b, message.as_bytes());
+            b
+        }
+    };
+    prepend_len(&mut b);
+    b
+}
+
+fn prepend_len(b: &mut Vec<u8>) {
+    let len = (b.len() as u32).to_le_bytes();
+    b.splice(0..0, len);
+}
+
+// ---------------------------------------------------------------------------
+// Decoding
+// ---------------------------------------------------------------------------
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("truncated frame: wanted {n} bytes at offset {}", self.i);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn i32(&mut self) -> Result<i32> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        if n > MAX_FRAME {
+            bail!("bytes field of {n} exceeds frame bound");
+        }
+        Ok(self.take(n)?.to_vec())
+    }
+
+    fn opt_u64(&mut self) -> Result<Option<u64>> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.u64()?)),
+            t => bail!("bad option tag {t}"),
+        }
+    }
+
+    fn opt_i32s(&mut self) -> Result<Option<Vec<i32>>> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => {
+                let n = self.u32()? as usize;
+                if n * 4 > MAX_FRAME {
+                    bail!("i32 list of {n} exceeds frame bound");
+                }
+                let mut out = Vec::with_capacity(n);
+                for _ in 0..n {
+                    out.push(self.i32()?);
+                }
+                Ok(Some(out))
+            }
+            t => bail!("bad option tag {t}"),
+        }
+    }
+
+    fn finish(&self) -> Result<()> {
+        if self.i != self.b.len() {
+            bail!("{} trailing bytes after payload", self.b.len() - self.i);
+        }
+        Ok(())
+    }
+}
+
+fn header(frame_body: &[u8]) -> Result<(u8, Cursor<'_>)> {
+    let mut c = Cursor { b: frame_body, i: 0 };
+    let version = c.u8()?;
+    if version != VERSION {
+        bail!("unsupported protocol version {version} (expected {VERSION})");
+    }
+    let opcode = c.u8()?;
+    Ok((opcode, c))
+}
+
+/// Decode a request frame body (after the length prefix).
+pub fn decode_request(frame_body: &[u8]) -> Result<WireRequest> {
+    let (opcode, mut c) = header(frame_body)?;
+    let req = match opcode {
+        OP_CLASSIFY => WireRequest::Classify { input: c.bytes()? },
+        OP_CLASSIFY_SESSION => {
+            WireRequest::ClassifySession { session: c.u64()?, input: c.bytes()? }
+        }
+        OP_LEARN_WAY => {
+            let session = c.u64()?;
+            let n = c.u32()? as usize;
+            if n > 4096 {
+                bail!("learn frame with {n} shots");
+            }
+            let mut shots = Vec::with_capacity(n);
+            for _ in 0..n {
+                shots.push(c.bytes()?);
+            }
+            WireRequest::LearnWay { session, shots }
+        }
+        OP_EVICT_SESSION => WireRequest::EvictSession { session: c.u64()? },
+        OP_HEALTH => WireRequest::Health,
+        OP_METRICS => WireRequest::Metrics,
+        op => bail!("unknown request opcode {op:#04x}"),
+    };
+    c.finish()?;
+    Ok(req)
+}
+
+/// Decode a response frame body (after the length prefix).
+pub fn decode_response(frame_body: &[u8]) -> Result<WireResponse> {
+    let (opcode, mut c) = header(frame_body)?;
+    let resp = match opcode {
+        OP_REPLY => WireResponse::Reply(WireReply {
+            predicted: c.opt_u64()?,
+            logits: c.opt_i32s()?,
+            learned_way: c.opt_u64()?,
+            sim_cycles: c.opt_u64()?,
+        }),
+        OP_HEALTH_REPLY => WireResponse::Health(HealthWire {
+            shards: c.u32()?,
+            live_sessions: c.u64()?,
+            input_len: c.u32()?,
+            embed_dim: c.u32()?,
+        }),
+        OP_METRICS_REPLY => WireResponse::Metrics(MetricsWire {
+            requests: c.u64()?,
+            completed: c.u64()?,
+            errors: c.u64()?,
+            rejected: c.u64()?,
+            learn_ways: c.u64()?,
+            evictions: c.u64()?,
+            sim_cycles: c.u64()?,
+            mean_latency_us: c.f64()?,
+            p50_latency_us: c.f64()?,
+            p95_latency_us: c.f64()?,
+            p99_latency_us: c.f64()?,
+        }),
+        OP_EVICTED => WireResponse::Evicted { existed: c.u8()? != 0 },
+        OP_ERROR => WireResponse::Error {
+            code: ErrorCode::from_u8(c.u8()?)?,
+            message: String::from_utf8_lossy(&c.bytes()?).into_owned(),
+        },
+        op => bail!("unknown response opcode {op:#04x}"),
+    };
+    c.finish()?;
+    Ok(resp)
+}
+
+// ---------------------------------------------------------------------------
+// Framed I/O
+// ---------------------------------------------------------------------------
+
+/// Consecutive read-timeout retries tolerated once a frame has started
+/// arriving (at the server's 250 ms socket timeout this is ~10 s of
+/// stall). A writer that starts a frame and then goes silent is dropped
+/// instead of pinning its connection thread forever.
+pub const MAX_STALL_RETRIES: u32 = 40;
+
+/// Read one frame body. `Ok(None)` on clean EOF at a frame boundary;
+/// `Err` on truncation mid-frame or a malformed length prefix.
+///
+/// On sockets with a read timeout, an *idle* connection (no bytes of the
+/// next frame yet) surfaces the `WouldBlock`/`TimedOut` error so callers
+/// can poll a shutdown flag; once the first byte of a frame has arrived,
+/// timeouts are retried internally — up to [`MAX_STALL_RETRIES`] in a
+/// row — so a slow writer cannot desynchronize the stream and a stalled
+/// one cannot hold the thread hostage.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>> {
+    let mut len_buf = [0u8; 4];
+    let mut got = 0;
+    let mut stalls = 0u32;
+    while got < 4 {
+        match r.read(&mut len_buf[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(None); // clean EOF between frames
+                }
+                bail!("EOF inside frame length prefix");
+            }
+            Ok(n) => {
+                got += n;
+                stalls = 0;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e)
+                if got > 0
+                    && matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+            {
+                stalls += 1;
+                if stalls > MAX_STALL_RETRIES {
+                    bail!("peer stalled inside frame length prefix");
+                }
+                continue; // mid-frame: keep waiting for the writer
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len < 2 {
+        bail!("frame body of {len} bytes is too short for the header");
+    }
+    if len > MAX_FRAME {
+        bail!("frame body of {len} bytes exceeds MAX_FRAME ({MAX_FRAME})");
+    }
+    let mut buf = vec![0u8; len];
+    let mut got = 0;
+    let mut stalls = 0u32;
+    while got < len {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => bail!("EOF inside frame body at {got}/{len} bytes"),
+            Ok(n) => {
+                got += n;
+                stalls = 0;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                stalls += 1;
+                if stalls > MAX_STALL_RETRIES {
+                    bail!("peer stalled inside frame body at {got}/{len} bytes");
+                }
+                continue;
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(Some(buf))
+}
+
+/// Write one already-encoded frame (length prefix included).
+pub fn write_frame<W: Write>(w: &mut W, frame: &[u8]) -> Result<()> {
+    w.write_all(frame)?;
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rt_request(req: WireRequest) {
+        let frame = encode_request(&req);
+        let mut r = std::io::Cursor::new(frame.clone());
+        let blob = read_frame(&mut r).unwrap().unwrap();
+        assert_eq!(blob.len() + 4, frame.len());
+        let got = decode_request(&blob).unwrap();
+        assert_eq!(got, req);
+    }
+
+    fn rt_response(resp: WireResponse) {
+        let frame = encode_response(&resp);
+        let mut r = std::io::Cursor::new(frame);
+        let blob = read_frame(&mut r).unwrap().unwrap();
+        let got = decode_response(&blob).unwrap();
+        assert_eq!(got, resp);
+    }
+
+    #[test]
+    fn request_roundtrips_exhaustive() {
+        rt_request(WireRequest::Classify { input: vec![] });
+        rt_request(WireRequest::Classify { input: (0..64).map(|i| i % 16).collect() });
+        rt_request(WireRequest::ClassifySession { session: 0, input: vec![15; 3] });
+        rt_request(WireRequest::ClassifySession { session: u64::MAX, input: vec![] });
+        rt_request(WireRequest::LearnWay { session: 7, shots: vec![] });
+        rt_request(WireRequest::LearnWay {
+            session: 42,
+            shots: vec![vec![1, 2, 3], vec![], vec![15; 100]],
+        });
+        rt_request(WireRequest::EvictSession { session: 1 << 63 });
+        rt_request(WireRequest::Health);
+        rt_request(WireRequest::Metrics);
+    }
+
+    #[test]
+    fn response_roundtrips_exhaustive() {
+        rt_response(WireResponse::Reply(WireReply::default()));
+        rt_response(WireResponse::Reply(WireReply {
+            predicted: Some(3),
+            logits: Some(vec![i32::MIN, -1, 0, 1, i32::MAX]),
+            learned_way: Some(0),
+            sim_cycles: Some(u64::MAX),
+        }));
+        rt_response(WireResponse::Health(HealthWire {
+            shards: 4,
+            live_sessions: 123,
+            input_len: 64,
+            embed_dim: 8,
+        }));
+        rt_response(WireResponse::Metrics(MetricsWire {
+            requests: 1,
+            completed: 2,
+            errors: 3,
+            rejected: 4,
+            learn_ways: 5,
+            evictions: 6,
+            sim_cycles: 7,
+            mean_latency_us: 1.5,
+            p50_latency_us: 2.5,
+            p95_latency_us: 100.0,
+            p99_latency_us: 1e6,
+        }));
+        rt_response(WireResponse::Evicted { existed: true });
+        rt_response(WireResponse::Evicted { existed: false });
+        for code in [ErrorCode::Overloaded, ErrorCode::Malformed, ErrorCode::App] {
+            rt_response(WireResponse::Error { code, message: "queue full".into() });
+        }
+        rt_response(WireResponse::Error { code: ErrorCode::App, message: String::new() });
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let mut frame = encode_request(&WireRequest::Health);
+        frame[4] = 9; // version byte lives right after the length prefix
+        assert!(decode_request(&frame[4..]).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_opcode_and_trailing_bytes() {
+        assert!(decode_request(&[VERSION, 0x77]).is_err());
+        let mut frame = encode_request(&WireRequest::Health);
+        frame.push(0); // trailing garbage after a well-formed payload
+        assert!(decode_request(&frame[4..]).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_payload() {
+        let frame = encode_request(&WireRequest::ClassifySession {
+            session: 5,
+            input: vec![1, 2, 3, 4],
+        });
+        let blob = &frame[4..];
+        for cut in 2..blob.len() {
+            assert!(decode_request(&blob[..cut]).is_err(), "cut at {cut} must fail");
+        }
+    }
+
+    #[test]
+    fn read_frame_rejects_hostile_lengths() {
+        // over-large length prefix
+        let mut r = std::io::Cursor::new((u32::MAX).to_le_bytes().to_vec());
+        assert!(read_frame(&mut r).is_err());
+        // too-short body length
+        let mut r = std::io::Cursor::new(1u32.to_le_bytes().to_vec());
+        assert!(read_frame(&mut r).is_err());
+        // truncated mid-frame
+        let mut partial = 10u32.to_le_bytes().to_vec();
+        partial.extend_from_slice(&[VERSION, OP_HEALTH]);
+        let mut r = std::io::Cursor::new(partial);
+        assert!(read_frame(&mut r).is_err());
+        // clean EOF
+        let mut r = std::io::Cursor::new(Vec::<u8>::new());
+        assert!(read_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn frames_concatenate_on_a_stream() {
+        let mut stream = Vec::new();
+        stream.extend_from_slice(&encode_request(&WireRequest::Health));
+        stream.extend_from_slice(&encode_request(&WireRequest::EvictSession { session: 2 }));
+        let mut r = std::io::Cursor::new(stream);
+        let a = decode_request(&read_frame(&mut r).unwrap().unwrap()).unwrap();
+        let b = decode_request(&read_frame(&mut r).unwrap().unwrap()).unwrap();
+        assert_eq!(a, WireRequest::Health);
+        assert_eq!(b, WireRequest::EvictSession { session: 2 });
+        assert!(read_frame(&mut r).unwrap().is_none());
+    }
+}

@@ -1,0 +1,369 @@
+//! Thread-per-connection TCP server fronting N sharded [`Coordinator`]s.
+//!
+//! Sharding: session-scoped requests (`ClassifySession`, `LearnWay`,
+//! `EvictSession`) route by a stable hash of the `SessionId`
+//! ([`shard_of`]), so the same session always lands on the same shard no
+//! matter which connection carries it — learning stays serialized per
+//! session while sessions spread across shards. Session-less `Classify`
+//! requests fan out round-robin over all shards.
+//!
+//! Backpressure: the coordinator's bounded queue is *never* awaited on the
+//! accept path — a full queue surfaces as an explicit `Overloaded` wire
+//! error instead of a hang, so clients (and the load generator) observe
+//! overload rather than timeouts.
+
+use std::io::{BufReader, BufWriter};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::metrics::MetricsSnapshot;
+use crate::coordinator::server::{
+    Coordinator, CoordinatorConfig, EngineFactory, Request, SubmitError,
+};
+use crate::serve::proto::{
+    self, ErrorCode, HealthWire, MetricsWire, WireReply, WireRequest, WireResponse,
+};
+
+/// Serving configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bind address; use port 0 for an ephemeral port (tests).
+    pub addr: String,
+    /// Number of coordinator shards.
+    pub shards: usize,
+    /// Engine worker threads per shard.
+    pub workers_per_shard: usize,
+    /// Bounded queue depth per shard (backpressure threshold).
+    pub queue_depth: usize,
+    /// LRU session cap per shard.
+    pub max_sessions: usize,
+    /// Per-connection socket read timeout; connections poll the shutdown
+    /// flag at this granularity.
+    pub read_timeout: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7070".to_string(),
+            shards: 2,
+            workers_per_shard: 2,
+            queue_depth: 256,
+            max_sessions: 1024,
+            read_timeout: Duration::from_millis(250),
+        }
+    }
+}
+
+/// Stable shard assignment for a session id (SplitMix64 finalizer — the
+/// same mix every client/server version computes, so the mapping is part
+/// of the protocol contract rather than process state).
+pub fn shard_of(session: u64, shards: usize) -> usize {
+    let mut z = session.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    (z % shards.max(1) as u64) as usize
+}
+
+struct ServerState {
+    shards: Vec<Coordinator>,
+    rr: AtomicUsize,
+    stop: AtomicBool,
+    live_conns: AtomicU64,
+    read_timeout: Duration,
+}
+
+/// Running server handle. `shutdown()` (or drop) stops the accept loop;
+/// coordinator workers wind down once the last connection drains.
+pub struct Server {
+    state: Arc<ServerState>,
+    addr: SocketAddr,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and serve. `engines(shard, worker)` yields the engine factory
+    /// for each worker replica of each shard.
+    pub fn start<F>(cfg: ServeConfig, mut engines: F) -> Result<Server>
+    where
+        F: FnMut(usize, usize) -> EngineFactory,
+    {
+        let mut shards = Vec::with_capacity(cfg.shards.max(1));
+        for shard in 0..cfg.shards.max(1) {
+            let factories: Vec<EngineFactory> = (0..cfg.workers_per_shard.max(1))
+                .map(|worker| engines(shard, worker))
+                .collect();
+            let coord = Coordinator::start(
+                factories,
+                CoordinatorConfig {
+                    workers: cfg.workers_per_shard.max(1),
+                    queue_depth: cfg.queue_depth,
+                    max_sessions: cfg.max_sessions,
+                },
+            )
+            .with_context(|| format!("starting shard {shard}"))?;
+            shards.push(coord);
+        }
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        let addr = listener.local_addr()?;
+        let state = Arc::new(ServerState {
+            shards,
+            rr: AtomicUsize::new(0),
+            stop: AtomicBool::new(false),
+            live_conns: AtomicU64::new(0),
+            read_timeout: cfg.read_timeout,
+        });
+        let accept_state = state.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("chameleon-accept".to_string())
+            .spawn(move || accept_loop(listener, accept_state))
+            .map_err(|e| anyhow!("spawning accept loop: {e}"))?;
+        Ok(Server { state, addr, accept_thread: Some(accept_thread) })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.state.shards.len()
+    }
+
+    pub fn live_connections(&self) -> u64 {
+        self.state.live_conns.load(Ordering::Relaxed)
+    }
+
+    /// Aggregated metrics across all shards (merged histograms).
+    pub fn metrics(&self) -> MetricsSnapshot {
+        aggregate(&self.state.shards)
+    }
+
+    /// Stop accepting; existing connections drain at their next timeout.
+    pub fn shutdown(mut self) {
+        self.stop_accept();
+    }
+
+    fn stop_accept(&mut self) {
+        self.state.stop.store(true, Ordering::SeqCst);
+        // Wake the blocking accept with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        if self.accept_thread.is_some() {
+            self.stop_accept();
+        }
+    }
+}
+
+fn aggregate(shards: &[Coordinator]) -> MetricsSnapshot {
+    let mut it = shards.iter();
+    let mut snap = it.next().expect("at least one shard").snapshot();
+    for s in it {
+        snap.merge(&s.snapshot());
+    }
+    snap
+}
+
+fn accept_loop(listener: TcpListener, state: Arc<ServerState>) {
+    for conn in listener.incoming() {
+        if state.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match conn {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let conn_state = state.clone();
+        let _ = std::thread::Builder::new()
+            .name("chameleon-conn".to_string())
+            .spawn(move || {
+                conn_state.live_conns.fetch_add(1, Ordering::Relaxed);
+                let _ = serve_connection(stream, &conn_state);
+                conn_state.live_conns.fetch_sub(1, Ordering::Relaxed);
+            });
+    }
+}
+
+/// One connection: sequential request/response frames until EOF, protocol
+/// violation, or server shutdown.
+fn serve_connection(stream: TcpStream, state: &ServerState) -> Result<()> {
+    stream.set_read_timeout(Some(state.read_timeout))?;
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    loop {
+        let blob = match proto::read_frame(&mut reader) {
+            Ok(Some(b)) => b,
+            Ok(None) => return Ok(()), // client closed cleanly
+            Err(e) => {
+                if let Some(ioe) = e.downcast_ref::<std::io::Error>() {
+                    if matches!(
+                        ioe.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) {
+                        if state.stop.load(Ordering::SeqCst) {
+                            return Ok(()); // drain on shutdown
+                        }
+                        continue; // idle connection; keep polling
+                    }
+                    return Ok(()); // client vanished mid-frame
+                }
+                // Hostile or corrupt length prefix: tell the client, close.
+                let resp = WireResponse::Error {
+                    code: ErrorCode::Malformed,
+                    message: format!("{e:#}"),
+                };
+                let _ = proto::write_frame(&mut writer, &proto::encode_response(&resp));
+                return Ok(());
+            }
+        };
+        let resp = match proto::decode_request(&blob) {
+            Ok(req) => handle_request(req, state),
+            Err(e) => {
+                // Malformed payload: answer then close the connection —
+                // framing can no longer be trusted.
+                let resp = WireResponse::Error {
+                    code: ErrorCode::Malformed,
+                    message: format!("{e:#}"),
+                };
+                let _ = proto::write_frame(&mut writer, &proto::encode_response(&resp));
+                return Ok(());
+            }
+        };
+        proto::write_frame(&mut writer, &proto::encode_response(&resp))?;
+    }
+}
+
+fn handle_request(req: WireRequest, state: &ServerState) -> WireResponse {
+    let n = state.shards.len();
+    match req {
+        WireRequest::Classify { input } => {
+            // Session-less: fan out round-robin across shards.
+            let shard = state.rr.fetch_add(1, Ordering::Relaxed) % n;
+            let (rtx, rrx) = mpsc::channel();
+            dispatch(&state.shards[shard], Request::Classify { input, reply: rtx }, rrx)
+        }
+        WireRequest::ClassifySession { session, input } => {
+            let shard = shard_of(session, n);
+            let (rtx, rrx) = mpsc::channel();
+            dispatch(
+                &state.shards[shard],
+                Request::ClassifySession { session, input, reply: rtx },
+                rrx,
+            )
+        }
+        WireRequest::LearnWay { session, shots } => {
+            let shard = shard_of(session, n);
+            let (rtx, rrx) = mpsc::channel();
+            dispatch(
+                &state.shards[shard],
+                Request::LearnWay { session, shots, reply: rtx },
+                rrx,
+            )
+        }
+        WireRequest::EvictSession { session } => {
+            let shard = shard_of(session, n);
+            let (rtx, rrx) = mpsc::channel();
+            // `dispatch` folds a Response carrying `evicted` into
+            // `WireResponse::Evicted` directly.
+            dispatch(
+                &state.shards[shard],
+                Request::EvictSession { session, reply: rtx },
+                rrx,
+            )
+        }
+        WireRequest::Health => {
+            let sessions: u64 = state.shards.iter().map(|c| c.session_count() as u64).sum();
+            WireResponse::Health(HealthWire {
+                shards: n as u32,
+                live_sessions: sessions,
+                input_len: state.shards[0].input_len() as u32,
+                embed_dim: state.shards[0].embed_dim() as u32,
+            })
+        }
+        WireRequest::Metrics => {
+            WireResponse::Metrics(MetricsWire::from(&aggregate(&state.shards)))
+        }
+    }
+}
+
+/// Submit to a shard and wait for the worker's reply, translating
+/// backpressure and failures into wire errors.
+fn dispatch(
+    coord: &Coordinator,
+    req: Request,
+    rrx: mpsc::Receiver<Result<crate::coordinator::Response>>,
+) -> WireResponse {
+    match coord.try_submit(req) {
+        Ok(()) => {}
+        Err(SubmitError::Full) => {
+            return WireResponse::Error {
+                code: ErrorCode::Overloaded,
+                message: "shard queue full".to_string(),
+            }
+        }
+        Err(SubmitError::Closed) => {
+            return WireResponse::Error {
+                code: ErrorCode::App,
+                message: "shard shut down".to_string(),
+            }
+        }
+    }
+    match rrx.recv() {
+        Ok(Ok(resp)) => {
+            if let Some(existed) = resp.evicted {
+                WireResponse::Evicted { existed }
+            } else {
+                WireResponse::Reply(WireReply {
+                    predicted: resp.predicted.map(|p| p as u64),
+                    logits: resp.logits,
+                    learned_way: resp.learned_way.map(|w| w as u64),
+                    sim_cycles: resp.sim_cycles,
+                })
+            }
+        }
+        Ok(Err(e)) => WireResponse::Error { code: ErrorCode::App, message: format!("{e:#}") },
+        Err(_) => WireResponse::Error {
+            code: ErrorCode::App,
+            message: "worker gone before replying".to_string(),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_assignment_is_stable_and_spread() {
+        for shards in [1usize, 2, 3, 8] {
+            let mut seen = vec![0usize; shards];
+            for s in 0..256u64 {
+                let a = shard_of(s, shards);
+                assert_eq!(a, shard_of(s, shards), "must be deterministic");
+                assert!(a < shards);
+                seen[a] += 1;
+            }
+            if shards > 1 {
+                assert!(
+                    seen.iter().all(|&c| c > 0),
+                    "256 sessions must touch every one of {shards} shards: {seen:?}"
+                );
+            }
+        }
+    }
+}
