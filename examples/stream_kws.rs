@@ -1,0 +1,102 @@
+//! END-TO-END DRIVER: incremental streaming KWS over the wire.
+//!
+//! Starts a loopback serve stack (sharded TCP server, built-in `tiny_kws`
+//! demo model — no artifacts needed), then drives it with the protocol-v2
+//! stream ops: `StreamOpen` a session, `StreamPush` a continuous synthetic
+//! audio stream in ragged chunks, collect one classification decision per
+//! hop-strided window, and `StreamClose`. Every decision's logits are
+//! cross-checked against `golden::forward` on the corresponding window —
+//! the incremental executor is bit-exact, not approximately right.
+//!
+//! Run: `cargo run --release --example stream_kws -- [--hop 4]
+//!       [--windows 12] [--chunk 11]`
+
+use std::sync::Arc;
+
+use chameleon::coordinator::server::EngineFactory;
+use chameleon::coordinator::Engine;
+use chameleon::golden;
+use chameleon::model::demo_tiny_kws;
+use chameleon::serve::{Client, ServeConfig, Server};
+use chameleon::util::args::Args;
+use chameleon::util::bench::Table;
+use chameleon::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let hop = args.get_usize("hop", 4)?;
+    let n_windows = args.get_usize("windows", 12)?;
+    let chunk = args.get_usize("chunk", 11)?; // deliberately ragged
+
+    let model = Arc::new(demo_tiny_kws());
+    println!("end-to-end streaming KWS over the wire");
+    println!("  model : {}", model.describe());
+    println!("  window: {} steps, hop {hop}, chunks of {chunk} bytes", model.seq_len);
+
+    let m = model.clone();
+    let server = Server::start(
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            shards: 2,
+            workers_per_shard: 2,
+            ..Default::default()
+        },
+        move |_shard, _worker| {
+            let m = m.clone();
+            Box::new(move || Ok(Engine::golden(m))) as EngineFactory
+        },
+    )?;
+    let mut client = Client::connect(server.local_addr().to_string())?;
+
+    let session = 42u64;
+    let (window, hop_echo) = client.stream_open(session, hop as u32)?;
+    assert_eq!(window as usize, model.seq_len);
+    assert_eq!(hop_echo as usize, hop);
+
+    // A continuous synthetic "microphone": enough samples for n_windows
+    // hop-strided windows.
+    let t_total = model.seq_len + (n_windows - 1) * hop;
+    let mut rng = Rng::new(7);
+    let stream: Vec<u8> = (0..t_total * model.in_channels).map(|_| rng.below(16) as u8).collect();
+
+    let mut decisions = Vec::new();
+    let mut pushes = 0u32;
+    for part in stream.chunks(chunk) {
+        decisions.extend(client.stream_push(session, part.to_vec())?);
+        pushes += 1;
+    }
+    assert_eq!(decisions.len(), n_windows, "one decision per complete window");
+
+    let mut t = Table::new(
+        &format!("stream decisions ({pushes} pushes)"),
+        &["window", "end step", "predicted", "bit-exact vs golden::forward"],
+    );
+    for d in &decisions {
+        let start = d.window as usize * hop;
+        let w = &stream[start * model.in_channels..(start + model.seq_len) * model.in_channels];
+        let (_, logits) = golden::forward(&model, w)?;
+        assert_eq!(Some(&d.logits), logits.as_ref(), "window {}", d.window);
+        assert_eq!(d.predicted, golden::argmax(&d.logits) as u64);
+        t.rowv(vec![
+            d.window.to_string(),
+            d.end_t.to_string(),
+            d.predicted.to_string(),
+            "yes".into(),
+        ]);
+    }
+    t.print();
+
+    let (existed, windows) = client.stream_close(session)?;
+    assert!(existed);
+    assert_eq!(windows, n_windows as u64);
+
+    let metrics = client.metrics()?;
+    println!("\nserver: {}", metrics.report());
+    assert_eq!(metrics.stream_decisions, n_windows as u64);
+    server.shutdown();
+    println!(
+        "END-TO-END OK: chunked stream -> wire v2 -> shard session -> incremental \
+         golden executor -> {n_windows} bit-exact decisions"
+    );
+    Ok(())
+}

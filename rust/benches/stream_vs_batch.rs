@@ -1,0 +1,170 @@
+//! Streaming-incremental vs full-window re-evaluation (the tentpole perf
+//! claim of the streaming subsystem): at hop < window, an incremental
+//! session amortizes the overlap between consecutive windows — each
+//! decision costs O(hop · model) instead of O(window · model) — while
+//! staying bit-identical to `golden::forward` on every window (asserted
+//! here on every decision).
+//!
+//! Model: a synthetic 3-block TCN (k = 3, dilations 1..32, receptive
+//! field 127, window 128) — deep enough that the conv datapath dominates.
+//!
+//! `CHAMELEON_STREAM_DECISIONS` overrides the decisions per point
+//! (default 64).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use chameleon::golden::{self, StreamingState};
+use chameleon::model::{QLayer, QuantModel};
+use chameleon::util::bench::Table;
+use chameleon::util::rng::Rng;
+
+fn codes(n: usize, seed: i32) -> Vec<i8> {
+    (0..n).map(|i| (((i as i32 * 11 + seed) % 15) - 7) as i8).collect()
+}
+
+fn conv(k: usize, cin: usize, cout: usize, dil: usize, res: Option<i32>, seed: i32) -> QLayer {
+    QLayer {
+        codes: codes(k * cin * cout, seed),
+        codes_shape: vec![k, cin, cout],
+        bias: (0..cout).map(|c| (c as i32 % 7 - 3) * 4).collect(),
+        out_shift: 5,
+        dilation: dil,
+        relu: true,
+        res_shift: res,
+        res_codes: None,
+        res_codes_shape: None,
+        res_bias: None,
+        res_out_shift: None,
+    }
+}
+
+/// Synthetic streaming KWS model: 3 residual blocks, k = 3, dilation
+/// doubling per layer (1, 2, 4, 8, 16, 32), receptive field 127, window
+/// 128, 10-class head.
+fn stream_model() -> QuantModel {
+    let (in_ch, ch, k) = (8usize, 16usize, 3usize);
+    let mut layers = Vec::new();
+    let mut cin = in_ch;
+    for b in 0..3usize {
+        let (d1, d2) = (1usize << (2 * b), 1usize << (2 * b + 1));
+        layers.push(conv(k, cin, ch, d1, None, 1 + 2 * b as i32));
+        let mut l2 = conv(k, ch, ch, d2, Some(0), 2 + 2 * b as i32);
+        if cin != ch {
+            l2.res_codes = Some(codes(cin * ch, 9));
+            l2.res_codes_shape = Some(vec![1, cin, ch]);
+            l2.res_bias = Some(vec![2; ch]);
+            l2.res_out_shift = Some(3);
+        }
+        layers.push(l2);
+        cin = ch;
+    }
+    let embed_dim = 16usize;
+    let n_classes = 10usize;
+    QuantModel {
+        name: "stream_bench".into(),
+        in_channels: in_ch,
+        seq_len: 128,
+        channels: vec![ch; 3],
+        kernel_size: k,
+        embed_dim,
+        n_classes: Some(n_classes),
+        in_shift: 0,
+        embed_shift: 0,
+        layers,
+        embed: QLayer {
+            codes: codes(ch * embed_dim, 13),
+            codes_shape: vec![ch, embed_dim],
+            bias: vec![0; embed_dim],
+            out_shift: 4,
+            dilation: 1,
+            relu: true,
+            res_shift: None,
+            res_codes: None,
+            res_codes_shape: None,
+            res_bias: None,
+            res_out_shift: None,
+        },
+        head: Some(QLayer {
+            codes: codes(embed_dim * n_classes, 17),
+            codes_shape: vec![embed_dim, n_classes],
+            bias: (0..n_classes as i32).map(|c| c * 5 - 20).collect(),
+            out_shift: 0,
+            dilation: 1,
+            relu: false,
+            res_shift: None,
+            res_codes: None,
+            res_codes_shape: None,
+            res_bias: None,
+            res_out_shift: None,
+        }),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let n_dec: usize = std::env::var("CHAMELEON_STREAM_DECISIONS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64);
+    let model = Arc::new(stream_model());
+    let (seq, cin) = (model.seq_len, model.in_channels);
+    println!("model: {}", model.describe());
+    println!(
+        "receptive field {} <= window {} (streaming precondition)",
+        model.receptive_field(),
+        seq
+    );
+
+    let mut t = Table::new(
+        &format!("incremental stream vs full-window re-eval ({n_dec} decisions/point)"),
+        &["hop", "stream us/dec", "batch us/dec", "speedup", "bit-exact"],
+    );
+    for hop in [seq / 8, seq / 4, seq / 2, seq] {
+        let t_total = seq + (n_dec - 1) * hop;
+        let mut rng = Rng::new(1000 + hop as u64);
+        let stream: Vec<u8> = (0..t_total * cin).map(|_| rng.below(16) as u8).collect();
+
+        // Incremental: one stateful session, hop-sized chunks.
+        let mut s = StreamingState::new(model.clone(), hop)?;
+        let t0 = Instant::now();
+        let mut outs = Vec::new();
+        for chunk in stream.chunks(hop * cin) {
+            outs.extend(s.push(chunk)?);
+        }
+        let inc = t0.elapsed();
+        assert_eq!(outs.len(), n_dec, "hop {hop}: decision count");
+
+        // Batch: re-run the full window for every decision.
+        let t0 = Instant::now();
+        let mut batch = Vec::with_capacity(n_dec);
+        for n in 0..n_dec {
+            let st = n * hop * cin;
+            batch.push(golden::forward(&model, &stream[st..st + seq * cin])?);
+        }
+        let bat = t0.elapsed();
+
+        // Bit-exactness on every decision (the point of the design).
+        for (o, (emb, logits)) in outs.iter().zip(&batch) {
+            assert_eq!(&o.embedding, emb, "hop {hop}: embedding mismatch");
+            assert_eq!(&o.logits, logits, "hop {hop}: logits mismatch");
+        }
+
+        let inc_us = inc.as_secs_f64() * 1e6 / n_dec as f64;
+        let bat_us = bat.as_secs_f64() * 1e6 / n_dec as f64;
+        t.rowv(vec![
+            hop.to_string(),
+            format!("{inc_us:.1}"),
+            format!("{bat_us:.1}"),
+            format!("{:.1}x", bat_us / inc_us),
+            "yes".into(),
+        ]);
+    }
+    t.print();
+    let s = StreamingState::new(model.clone(), 1)?;
+    println!(
+        "\nring memory: {} B reserved (closed-form dense-FIFO estimate {} B)",
+        s.reserved_bytes(),
+        model.dense_fifo_activation_bytes(),
+    );
+    Ok(())
+}

@@ -2,11 +2,11 @@
 //! three interchangeable engines, all bit-identical on the functional
 //! output (asserted by integration tests):
 //!
-//! * [`Engine::Golden`] — the scalar bit-exact model (fast, no timing);
-//! * [`Engine::Sim`]    — the cycle-level SoC simulator (adds cycle/energy
-//!   traces; the "chip" itself);
-//! * [`Engine::Xla`]    — the PJRT-executed AOT artifact (the Pallas/JAX
-//!   graph; proves the three-layer stack composes).
+//! * [`EngineKind::Golden`] — the scalar bit-exact model (fast, no timing);
+//! * [`EngineKind::Sim`]    — the cycle-level SoC simulator (adds
+//!   cycle/energy traces; the "chip" itself);
+//! * [`EngineKind::Xla`]    — the PJRT-executed AOT artifact (the
+//!   Pallas/JAX graph; proves the three-layer stack composes).
 
 use std::sync::Arc;
 use std::time::Duration;

@@ -152,6 +152,10 @@ pub struct Metrics {
     pub learn_ways: AtomicU64,
     /// Sessions removed from the store (LRU pressure + explicit evict ops).
     pub evictions: AtomicU64,
+    /// Stream chunks accepted (`StreamPush` ops that were processed).
+    pub stream_chunks: AtomicU64,
+    /// Per-window classification decisions emitted by stream pushes.
+    pub stream_decisions: AtomicU64,
     latency: LatencyHistogram,
     sim_cycles: AtomicU64,
 }
@@ -183,6 +187,8 @@ impl Metrics {
             rejected: self.rejected.load(Ordering::Relaxed),
             learn_ways: self.learn_ways.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
+            stream_chunks: self.stream_chunks.load(Ordering::Relaxed),
+            stream_decisions: self.stream_decisions.load(Ordering::Relaxed),
             mean_latency_us: hist.mean_us(),
             p50_latency_us: hist.percentile_us(50.0),
             p95_latency_us: hist.percentile_us(95.0),
@@ -202,6 +208,8 @@ pub struct MetricsSnapshot {
     pub rejected: u64,
     pub learn_ways: u64,
     pub evictions: u64,
+    pub stream_chunks: u64,
+    pub stream_decisions: u64,
     pub mean_latency_us: f64,
     pub p50_latency_us: f64,
     pub p95_latency_us: f64,
@@ -220,6 +228,8 @@ impl MetricsSnapshot {
         self.rejected += other.rejected;
         self.learn_ways += other.learn_ways;
         self.evictions += other.evictions;
+        self.stream_chunks += other.stream_chunks;
+        self.stream_decisions += other.stream_decisions;
         self.sim_cycles += other.sim_cycles;
         self.latency_hist.merge(&other.latency_hist);
         self.mean_latency_us = self.latency_hist.mean_us();
@@ -231,6 +241,7 @@ impl MetricsSnapshot {
     pub fn report(&self) -> String {
         format!(
             "requests={} completed={} errors={} rejected={} learned_ways={} evictions={} \
+             stream_chunks={} stream_decisions={} \
              latency mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us sim_cycles={}",
             self.requests,
             self.completed,
@@ -238,6 +249,8 @@ impl MetricsSnapshot {
             self.rejected,
             self.learn_ways,
             self.evictions,
+            self.stream_chunks,
+            self.stream_decisions,
             self.mean_latency_us,
             self.p50_latency_us,
             self.p95_latency_us,

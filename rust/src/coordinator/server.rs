@@ -18,6 +18,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::engine::Engine;
 use crate::coordinator::metrics::Metrics;
+use crate::golden::streaming::StreamingState;
 use crate::protonet::ProtoHead;
 use crate::sim::learning::learning_cycles;
 
@@ -31,6 +32,13 @@ pub enum Request {
     LearnWay { session: SessionId, shots: Vec<Vec<u8>>, reply: mpsc::Sender<Result<Response>> },
     /// Drop a session's learned head (frees its store slot).
     EvictSession { session: SessionId, reply: mpsc::Sender<Result<Response>> },
+    /// Open (or reset) an incremental stream on a session; the window is
+    /// the model's `seq_len`, `hop` is the decision stride in timesteps.
+    StreamOpen { session: SessionId, hop: usize, reply: mpsc::Sender<Result<Response>> },
+    /// Push a chunk of u4 samples into a session's open stream.
+    StreamPush { session: SessionId, samples: Vec<u8>, reply: mpsc::Sender<Result<Response>> },
+    /// Close a session's stream (its learned head survives).
+    StreamClose { session: SessionId, reply: mpsc::Sender<Result<Response>> },
 }
 
 pub type SessionId = u64;
@@ -44,6 +52,34 @@ pub struct Response {
     pub sim_cycles: Option<u64>,
     /// `EvictSession` only: whether the session existed.
     pub evicted: Option<bool>,
+    /// `StreamOpen` only: accepted stream geometry.
+    pub stream: Option<StreamInfo>,
+    /// `StreamPush` only: one decision per window the chunk completed
+    /// (possibly empty).
+    pub decisions: Option<Vec<StreamDecision>>,
+    /// `StreamClose` only: whether a stream existed, and how many windows
+    /// it emitted over its lifetime.
+    pub stream_closed: Option<(bool, u64)>,
+}
+
+/// Stream geometry echoed by `StreamOpen`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamInfo {
+    /// Window length in timesteps (the model's `seq_len`).
+    pub window: usize,
+    /// Decision stride in timesteps.
+    pub hop: usize,
+}
+
+/// One per-window classification decision emitted by `StreamPush`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StreamDecision {
+    /// 0-based window index within the stream.
+    pub window: u64,
+    /// Absolute 0-based timestep of the window's last sample.
+    pub end_t: u64,
+    pub predicted: usize,
+    pub logits: Vec<i32>,
 }
 
 /// Coordinator configuration.
@@ -85,11 +121,21 @@ impl std::fmt::Display for SubmitError {
 
 impl std::error::Error for SubmitError {}
 
+/// One live session: the learned prototypical head plus (optionally) an
+/// open incremental stream. The stream sits behind its own lock so a long
+/// chunk push never serializes unrelated sessions — only concurrent
+/// pushes to the *same* session serialize.
+struct SessionEntry {
+    head: ProtoHead,
+    stream: Option<Arc<Mutex<StreamingState>>>,
+}
+
 /// LRU session store: a hash map plus a logical access clock. Eviction
 /// scans for the minimum `last_used` — O(n), but n is the configured cap
-/// and eviction only happens on session *creation* past the cap.
+/// and eviction only happens on session *creation* past the cap. An
+/// evicted session loses both its learned head and its open stream.
 struct SessionStore {
-    map: HashMap<SessionId, (ProtoHead, u64)>,
+    map: HashMap<SessionId, (SessionEntry, u64)>,
     clock: u64,
     cap: usize,
 }
@@ -105,20 +151,37 @@ impl SessionStore {
     }
 
     /// Look up a session, refreshing its recency.
-    fn touch(&mut self, id: SessionId) -> Option<&ProtoHead> {
+    fn touch(&mut self, id: SessionId) -> Option<&SessionEntry> {
         let now = self.tick();
         match self.map.get_mut(&id) {
-            Some((head, used)) => {
+            Some((entry, used)) => {
                 *used = now;
-                Some(&*head)
+                Some(&*entry)
             }
             None => None,
         }
     }
 
-    /// Get-or-create a session head for learning, refreshing recency.
-    /// Returns the id of the LRU session evicted to make room, if any.
-    fn get_or_insert(&mut self, id: SessionId, dim: usize) -> (&mut ProtoHead, Option<SessionId>) {
+    /// Detach and return a session's stream, if any (the head survives).
+    fn close_stream(&mut self, id: SessionId) -> Option<Arc<Mutex<StreamingState>>> {
+        let now = self.tick();
+        match self.map.get_mut(&id) {
+            Some((entry, used)) => {
+                *used = now;
+                entry.stream.take()
+            }
+            None => None,
+        }
+    }
+
+    /// Get-or-create a session for learning or streaming, refreshing
+    /// recency. Returns the id of the LRU session evicted to make room,
+    /// if any.
+    fn get_or_insert(
+        &mut self,
+        id: SessionId,
+        dim: usize,
+    ) -> (&mut SessionEntry, Option<SessionId>) {
         let now = self.tick();
         let mut evicted = None;
         if !self.map.contains_key(&id) && self.map.len() >= self.cap {
@@ -132,7 +195,10 @@ impl SessionStore {
                 evicted = Some(victim);
             }
         }
-        let entry = self.map.entry(id).or_insert_with(|| (ProtoHead::new(dim), now));
+        let entry = self
+            .map
+            .entry(id)
+            .or_insert_with(|| (SessionEntry { head: ProtoHead::new(dim), stream: None }, now));
         entry.1 = now;
         (&mut entry.0, evicted)
     }
@@ -142,7 +208,7 @@ impl SessionStore {
     }
 
     fn ways(&self, id: SessionId) -> usize {
-        self.map.get(&id).map_or(0, |(h, _)| h.n_ways())
+        self.map.get(&id).map_or(0, |(e, _)| e.head.n_ways())
     }
 
     fn len(&self) -> usize {
@@ -154,7 +220,8 @@ struct Shared {
     sessions: Mutex<SessionStore>,
     metrics: Arc<Metrics>,
     embed_dim: usize,
-    input_len: usize,
+    seq_len: usize,
+    in_channels: usize,
 }
 
 /// The coordinator handle. Dropping it shuts the workers down.
@@ -177,7 +244,7 @@ impl Coordinator {
         }
         let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_depth);
         let rx = Arc::new(Mutex::new(rx));
-        let (dim_tx, dim_rx) = mpsc::channel::<Result<(usize, usize)>>();
+        let (dim_tx, dim_rx) = mpsc::channel::<Result<(usize, usize, usize)>>();
         let shared_cell: Arc<Mutex<Option<Arc<Shared>>>> = Arc::new(Mutex::new(None));
         let mut workers = Vec::new();
         for (wid, factory) in factories.into_iter().enumerate() {
@@ -192,7 +259,8 @@ impl Coordinator {
                             Ok(e) => {
                                 let _ = dim_tx.send(Ok((
                                     e.model.embed_dim,
-                                    e.model.seq_len * e.model.in_channels,
+                                    e.model.seq_len,
+                                    e.model.in_channels,
                                 )));
                                 e
                             }
@@ -215,14 +283,15 @@ impl Coordinator {
         }
         drop(dim_tx);
         // First successful engine defines the model geometry.
-        let (embed_dim, input_len) = dim_rx
+        let (embed_dim, seq_len, in_channels) = dim_rx
             .recv()
             .map_err(|e| anyhow!("no worker came up: {e}"))??;
         let shared = Arc::new(Shared {
             sessions: Mutex::new(SessionStore::new(cfg.max_sessions)),
             metrics: Arc::new(Metrics::new()),
             embed_dim,
-            input_len,
+            seq_len,
+            in_channels,
         });
         *shared_cell.lock().unwrap() = Some(shared.clone());
         Ok(Coordinator { tx, workers, shared })
@@ -244,7 +313,17 @@ impl Coordinator {
 
     /// Flat input length (`seq_len * in_channels`) one request must carry.
     pub fn input_len(&self) -> usize {
-        self.shared.input_len
+        self.shared.seq_len * self.shared.in_channels
+    }
+
+    /// Window length in timesteps (the deployed model's `seq_len`).
+    pub fn seq_len(&self) -> usize {
+        self.shared.seq_len
+    }
+
+    /// Input channels per timestep of the deployed model.
+    pub fn in_channels(&self) -> usize {
+        self.shared.in_channels
     }
 
     /// Number of live sessions in the store.
@@ -300,6 +379,36 @@ impl Coordinator {
         Ok(r.evicted.unwrap_or(false))
     }
 
+    /// Blocking convenience: open (or reset) a stream session.
+    pub fn stream_open(&self, session: SessionId, hop: usize) -> Result<StreamInfo> {
+        let (rtx, rrx) = mpsc::channel();
+        self.submit(Request::StreamOpen { session, hop, reply: rtx })?;
+        let r = rrx.recv().map_err(|e| anyhow!("worker gone: {e}"))??;
+        r.stream.ok_or_else(|| anyhow!("missing stream info in reply"))
+    }
+
+    /// Blocking convenience: push samples into a stream, returning a
+    /// decision for every window the chunk completed.
+    pub fn stream_push(
+        &self,
+        session: SessionId,
+        samples: Vec<u8>,
+    ) -> Result<Vec<StreamDecision>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.submit(Request::StreamPush { session, samples, reply: rtx })?;
+        let r = rrx.recv().map_err(|e| anyhow!("worker gone: {e}"))??;
+        Ok(r.decisions.unwrap_or_default())
+    }
+
+    /// Blocking convenience: close a stream. Returns whether one existed
+    /// and how many windows it emitted.
+    pub fn stream_close(&self, session: SessionId) -> Result<(bool, u64)> {
+        let (rtx, rrx) = mpsc::channel();
+        self.submit(Request::StreamClose { session, reply: rtx })?;
+        let r = rrx.recv().map_err(|e| anyhow!("worker gone: {e}"))??;
+        Ok(r.stream_closed.unwrap_or((false, 0)))
+    }
+
     /// Number of ways a session has learned so far.
     pub fn session_ways(&self, session: SessionId) -> usize {
         self.shared.sessions.lock().unwrap().ways(session)
@@ -351,6 +460,21 @@ fn worker_loop(engine: Engine, rx: Arc<Mutex<mpsc::Receiver<Request>>>, shared: 
                     ..Response::default()
                 }));
             }
+            Request::StreamOpen { session, hop, reply } => {
+                let res = handle_stream_open(&engine, session, hop, &shared);
+                shared.metrics.record_latency(start.elapsed());
+                let _ = reply.send(res);
+            }
+            Request::StreamPush { session, samples, reply } => {
+                let res = handle_stream_push(session, &samples, &shared);
+                shared.metrics.record_latency(start.elapsed());
+                let _ = reply.send(res);
+            }
+            Request::StreamClose { session, reply } => {
+                let res = handle_stream_close(session, &shared);
+                shared.metrics.record_latency(start.elapsed());
+                let _ = reply.send(res);
+            }
         }
     }
 }
@@ -386,9 +510,10 @@ fn handle_classify_session(
         shared.metrics.record_cycles(c);
     }
     let mut sessions = shared.sessions.lock().unwrap();
-    let head = sessions
+    let head = &sessions
         .touch(session)
-        .ok_or_else(|| anyhow!("unknown session {session} (learn first)"))?;
+        .ok_or_else(|| anyhow!("unknown session {session} (learn first)"))?
+        .head;
     if head.n_ways() == 0 {
         bail!("session {session} has no learned ways");
     }
@@ -426,9 +551,9 @@ fn handle_learn(
     // Serialize the head update per session; creating a session past the
     // LRU cap evicts the least-recently-used one.
     let mut sessions = shared.sessions.lock().unwrap();
-    let (head, lru_evicted) = sessions.get_or_insert(session, shared.embed_dim);
-    head.learn_way(&embs);
-    let learned = head.n_ways() - 1;
+    let (entry, lru_evicted) = sessions.get_or_insert(session, shared.embed_dim);
+    entry.head.learn_way(&embs);
+    let learned = entry.head.n_ways() - 1;
     drop(sessions);
     if lru_evicted.is_some() {
         shared.metrics.evictions.fetch_add(1, Ordering::Relaxed);
@@ -439,6 +564,112 @@ fn handle_learn(
         sim_cycles: Some(cycles),
         ..Response::default()
     })
+}
+
+/// Open (or reset) a session's incremental stream. The session entry
+/// participates in the same LRU cap as learned heads, so long-lived
+/// streams are bounded memory like everything else in the store.
+fn handle_stream_open(
+    engine: &Engine,
+    session: SessionId,
+    hop: usize,
+    shared: &Shared,
+) -> Result<Response> {
+    let state = StreamingState::new(engine.model.clone(), hop).inspect_err(|_| {
+        shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+    })?;
+    let info = StreamInfo { window: state.window(), hop };
+    let mut sessions = shared.sessions.lock().unwrap();
+    let (entry, lru_evicted) = sessions.get_or_insert(session, shared.embed_dim);
+    entry.stream = Some(Arc::new(Mutex::new(state)));
+    drop(sessions);
+    if lru_evicted.is_some() {
+        shared.metrics.evictions.fetch_add(1, Ordering::Relaxed);
+    }
+    Ok(Response { stream: Some(info), ..Response::default() })
+}
+
+/// Push a chunk into a session's stream and classify every completed
+/// window: with the model's built-in head when it has one, otherwise with
+/// the session's learned prototypical head (the `ClassifySession` rule).
+///
+/// The streaming executor always runs the golden incremental datapath —
+/// its outputs are bit-identical to every engine kind, so the worker's
+/// engine only contributes its model here.
+fn handle_stream_push(session: SessionId, samples: &[u8], shared: &Shared) -> Result<Response> {
+    // Resolve the stream handle (and head readiness) under the store lock,
+    // then push outside it so a long chunk never serializes unrelated
+    // sessions.
+    let resolved = {
+        let mut sessions = shared.sessions.lock().unwrap();
+        sessions
+            .touch(session)
+            .and_then(|e| e.stream.clone().map(|s| (s, e.head.n_ways())))
+    };
+    let (stream, ways) = match resolved {
+        Some(t) => t,
+        None => {
+            shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+            bail!("session {session} has no open stream (send StreamOpen first)");
+        }
+    };
+    let mut st = stream.lock().unwrap();
+    // Fail *before* consuming the chunk: a push that cannot produce
+    // decisions must not advance the stream (pushes are not retried).
+    if st.needs_session_head() && ways == 0 {
+        shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+        bail!(
+            "session {session} has no learned ways and the model has no built-in \
+             head; learn ways before streaming (the chunk was not consumed)"
+        );
+    }
+    let outs = st.push(samples).inspect_err(|_| {
+        shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+    })?;
+    drop(st);
+    let mut decisions = Vec::with_capacity(outs.len());
+    for w in outs {
+        let logits = match w.logits {
+            Some(logits) => logits,
+            None => {
+                let mut sessions = shared.sessions.lock().unwrap();
+                let head = &sessions
+                    .touch(session)
+                    .ok_or_else(|| {
+                        shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                        anyhow!("session {session} evicted mid-push")
+                    })?
+                    .head;
+                if head.n_ways() == 0 {
+                    shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                    bail!("session {session} lost its learned ways mid-push");
+                }
+                head.logits(&w.embedding)
+            }
+        };
+        decisions.push(StreamDecision {
+            window: w.window,
+            end_t: w.end_t,
+            predicted: crate::golden::argmax(&logits),
+            logits,
+        });
+    }
+    shared.metrics.stream_chunks.fetch_add(1, Ordering::Relaxed);
+    shared
+        .metrics
+        .stream_decisions
+        .fetch_add(decisions.len() as u64, Ordering::Relaxed);
+    Ok(Response { decisions: Some(decisions), ..Response::default() })
+}
+
+/// Close a session's stream; the learned head (if any) survives.
+fn handle_stream_close(session: SessionId, shared: &Shared) -> Result<Response> {
+    let stream = shared.sessions.lock().unwrap().close_stream(session);
+    let closed = match stream {
+        Some(s) => (true, s.lock().unwrap().windows_emitted()),
+        None => (false, 0),
+    };
+    Ok(Response { stream_closed: Some(closed), ..Response::default() })
 }
 
 #[cfg(test)]
@@ -589,6 +820,90 @@ mod tests {
         assert_eq!(c.session_ways(2), 0, "LRU session 2 must be evicted");
         assert_eq!(c.session_ways(1), 1, "recently-used session survives");
         assert_eq!(c.metrics().snapshot().evictions, 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn stream_decisions_match_batch_forward() {
+        // Built-in-head model: decisions must be bit-identical to running
+        // golden::forward over each hop-strided window.
+        let m = SArc::new(crate::model::demo_tiny_kws());
+        let mf = m.clone();
+        let c = Coordinator::start(
+            vec![Box::new(move || Ok(Engine::golden(mf))) as EngineFactory],
+            CoordinatorConfig::default(),
+        )
+        .unwrap();
+        let hop = 4usize;
+        let info = c.stream_open(3, hop).unwrap();
+        assert_eq!(info.window, m.seq_len);
+        assert_eq!(info.hop, hop);
+        let mut rng = Rng::new(31);
+        let t_total = m.seq_len + 3 * hop;
+        let stream: Vec<u8> = (0..t_total * m.in_channels)
+            .map(|_| rng.range(0, 16) as u8)
+            .collect();
+        let mut decisions = Vec::new();
+        for chunk in stream.chunks(10) {
+            decisions.extend(c.stream_push(3, chunk.to_vec()).unwrap());
+        }
+        assert_eq!(decisions.len(), 4);
+        for (n, d) in decisions.iter().enumerate() {
+            assert_eq!(d.window, n as u64);
+            let start = n * hop;
+            let w = &stream[start * m.in_channels..(start + m.seq_len) * m.in_channels];
+            let (_, logits) = crate::golden::forward(&m, w).unwrap();
+            let logits = logits.unwrap();
+            assert_eq!(d.logits, logits, "window {n}");
+            assert_eq!(d.predicted, crate::golden::argmax(&logits));
+        }
+        assert_eq!(c.stream_close(3).unwrap(), (true, 4));
+        assert_eq!(c.stream_close(3).unwrap(), (false, 0), "double close reports absent");
+        let snap = c.metrics().snapshot();
+        assert_eq!(snap.stream_decisions, 4);
+        assert!(snap.stream_chunks > 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn headless_stream_uses_session_proto_head() {
+        // The tiny model has no built-in head: decisions must agree with
+        // ClassifySession on the same window.
+        let (c, m) = mk_coord(2);
+        let mut rng = Rng::new(32);
+        let a: Vec<Vec<u8>> = (0..3).map(|_| rand_seq(&m, &mut rng, 0, 3)).collect();
+        let b: Vec<Vec<u8>> = (0..3).map(|_| rand_seq(&m, &mut rng, 13, 16)).collect();
+        c.learn_way(7, a).unwrap();
+        c.learn_way(7, b).unwrap();
+        c.stream_open(7, m.seq_len).unwrap();
+        for lo_hi in [(0u8, 3u8), (13, 16)] {
+            let window = rand_seq(&m, &mut rng, lo_hi.0, lo_hi.1);
+            let ds = c.stream_push(7, window.clone()).unwrap();
+            assert_eq!(ds.len(), 1);
+            let want = c.classify_session(7, window).unwrap();
+            assert_eq!(Some(ds[0].predicted), want.predicted);
+            assert_eq!(ds[0].logits, want.logits.unwrap());
+        }
+        // Opening a stream did not disturb the learned head.
+        assert_eq!(c.session_ways(7), 2);
+        c.shutdown();
+    }
+
+    #[test]
+    fn stream_errors_are_app_level() {
+        let (c, m) = mk_coord(1);
+        let mut rng = Rng::new(33);
+        // Push without open.
+        assert!(c.stream_push(1, rand_seq(&m, &mut rng, 0, 16)).is_err());
+        // hop 0 is rejected at open.
+        assert!(c.stream_open(1, 0).is_err());
+        // Headless model + no learned ways: the first decision errors.
+        c.stream_open(1, m.seq_len).unwrap();
+        assert!(c.stream_push(1, rand_seq(&m, &mut rng, 0, 16)).is_err());
+        // Evicting the session tears down its stream.
+        c.stream_open(2, m.seq_len).unwrap();
+        assert!(c.evict_session(2).unwrap());
+        assert!(c.stream_push(2, rand_seq(&m, &mut rng, 0, 16)).is_err());
         c.shutdown();
     }
 

@@ -14,6 +14,10 @@ use anyhow::{bail, Result};
 use crate::model::{QLayer, QuantModel};
 use crate::quant;
 
+pub mod streaming;
+
+pub use streaming::{StreamingState, WindowOutput};
+
 /// Activations are u4 codes stored one per byte, `[T][C]` row-major.
 pub type Acts = Vec<u8>;
 
@@ -36,12 +40,25 @@ pub fn conv_layer(x: &[u8], t_len: usize, layer: &QLayer, residual: Option<&[u8]
     }
     let cin = layer.c_in();
     let cout = layer.c_out();
+    let k = layer.kernel_size();
+    let d = layer.dilation;
     let decoded = decode_codes(&layer.codes);
     let mut out = vec![0u8; t_len * cout];
     let mut acc = vec![0i32; cout];
     let mut partial = vec![0i32; cout];
+    let mut taps: Vec<Option<&[u8]>> = Vec::with_capacity(k);
     for t in 0..t_len {
-        accumulate_row(x, cin, layer, &decoded, t, &mut acc, &mut partial);
+        taps.clear();
+        for tap in 0..k {
+            let offset = (k - 1 - tap) * d;
+            taps.push(if t >= offset {
+                let row = t - offset;
+                Some(&x[row * cin..(row + 1) * cin])
+            } else {
+                None
+            });
+        }
+        accumulate_row_taps(&taps, cin, &decoded, &mut acc, &mut partial);
         let rs = layer.res_shift.unwrap_or(0);
         for co in 0..cout {
             let res = residual.map_or(0, |r| r[t * cout + co] as i32);
@@ -61,37 +78,37 @@ fn use_naive() -> bool {
 }
 
 /// Pre-decoded weight values (i32), same layout as the codes.
-fn decode_codes(codes: &[i8]) -> Vec<i32> {
+pub(crate) fn decode_codes(codes: &[i8]) -> Vec<i32> {
     codes.iter().map(|&c| quant::log2_decode(c)).collect()
 }
 
-/// Slab-major accumulation of one output row (all `c_out` channels of
-/// timestep `t`): for each 16-element slab of the flattened `(tap, cin)`
-/// axis, the partial products are accumulated contiguously over `c_out`
-/// (auto-vectorizes), then saturated into `acc` — identical slab order and
-/// saturation points as the scalar path.
+/// Slab-major accumulation of one output row (all `c_out` channels of one
+/// timestep) from its gathered tap rows: for each 16-element slab of the
+/// flattened `(tap, cin)` axis, the partial products are accumulated
+/// contiguously over `c_out` (auto-vectorizes), then saturated into `acc`
+/// — identical slab order and saturation points as the scalar path. A
+/// `None` tap (causal out-of-range) contributes zeros but still advances
+/// the slab counter, exactly like the zero-padded scalar datapath.
+///
+/// Shared by the batch path ([`conv_layer`]) and the incremental streaming
+/// executor ([`streaming::StreamingState`]) so the two are bit-identical
+/// by construction.
 #[inline]
-fn accumulate_row(
-    x: &[u8],
+pub(crate) fn accumulate_row_taps(
+    taps: &[Option<&[u8]>],
     cin: usize,
-    layer: &QLayer,
     decoded: &[i32],
-    t: usize,
     acc: &mut [i32],
     partial: &mut [i32],
 ) {
-    let k = layer.kernel_size();
-    let d = layer.dilation;
     let cout = acc.len();
     acc.fill(0);
     partial.fill(0);
     let mut slab = 0usize;
-    for tap in 0..k {
-        let offset = (k - 1 - tap) * d;
-        let (row, in_range) = if t >= offset { (t - offset, true) } else { (0, false) };
+    for (tap, row) in taps.iter().enumerate() {
         for ci in 0..cin {
-            if in_range {
-                let a = x[row * cin + ci] as i32;
+            if let Some(row) = row {
+                let a = row[ci] as i32;
                 if a != 0 {
                     let wrow = &decoded[(tap * cin + ci) * cout..(tap * cin + ci + 1) * cout];
                     for (p, &w) in partial.iter_mut().zip(wrow) {
@@ -153,7 +170,7 @@ pub fn conv_layer_raw(x: &[u8], t_len: usize, layer: &QLayer, residual: Option<&
 /// Negative residual shifts are applied as a floor right-shift *before*
 /// the OPE merge (canonical semantics shared with python).
 #[inline]
-fn apply_signed_res(res: i32, rs: i32) -> (i32, i32) {
+pub(crate) fn apply_signed_res(res: i32, rs: i32) -> (i32, i32) {
     if rs < 0 {
         (res >> (-rs), 0)
     } else {

@@ -1,0 +1,447 @@
+//! Incremental, bit-exact streaming execution of the golden datapath.
+//!
+//! [`StreamingState`] consumes an unbounded u4 sample stream in arbitrary
+//! chunks and emits one classification decision per complete window
+//! (length `seq_len`, stride `hop`), with embeddings and logits
+//! **bit-identical** to running [`super::forward`] on each window in
+//! isolation. Unlike re-evaluating overlapping windows from scratch —
+//! O(window · model) work per decision — pushing L samples costs
+//! O(L · model): each conv layer advances one timestep per input sample
+//! over small per-layer FIFO rings (the `(k-1)·d + 1` sizing rule of
+//! [`crate::sim::addrgen::LayerRing`], paper §III-B), and only the
+//! timestep-local embedding FC + head run at window boundaries.
+//!
+//! It is also the serving counterpart of [`crate::sim::streaming`]'s
+//! [`crate::sim::streaming::StreamingTcn`]: same dense ring dataflow, but
+//! running the slab-major [`super::conv_layer`] datapath (the shared
+//! `accumulate_row_taps` inner loop) instead of the cycle-accurate
+//! PE-array reduction, so it is fast enough to sit on the serve hot path.
+//!
+//! # Why the windows come out bit-identical
+//!
+//! [`super::forward`] zero-pads causal taps that reach before the window
+//! start, while this executor keeps the *continuous* stream history. The
+//! two agree on every emitted decision because the decision only reads the
+//! final conv row of the window's last timestep, and — whenever
+//! `receptive_field <= seq_len`, which [`StreamingState::new`] enforces —
+//! the dependency cone of that row telescopes entirely inside the window:
+//! no zero-padded (batch) or pre-window (streaming) input ever enters it.
+//! The first window of a stream sees zero history in both executions, so
+//! it agrees trivially.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::model::QuantModel;
+use crate::quant;
+
+use super::{accumulate_row_taps, apply_signed_res, conv_layer, decode_codes, fc_logits};
+
+/// Fixed-capacity activation ring holding the most recent rows of one
+/// layer, keyed by absolute timestep. Same `(k-1)·d + 1` sizing rule as
+/// [`crate::sim::addrgen::LayerRing`], but flat storage addressed by
+/// `t % capacity` — no scan and no per-row allocation on the hot path.
+struct RowRing {
+    /// Row width in u4 entries (channel count).
+    width: usize,
+    /// Capacity in rows.
+    capacity: usize,
+    buf: Vec<u8>,
+    /// Next timestep to be written; rows `[next - capacity, next)` are live.
+    next: usize,
+}
+
+impl RowRing {
+    fn new(width: usize, capacity: usize) -> RowRing {
+        let capacity = capacity.max(1);
+        RowRing { width, capacity, buf: vec![0; width * capacity], next: 0 }
+    }
+
+    /// Writable slot for the next timestep; call [`RowRing::commit`] after
+    /// filling it.
+    fn slot(&mut self) -> &mut [u8] {
+        let i = (self.next % self.capacity) * self.width;
+        &mut self.buf[i..i + self.width]
+    }
+
+    fn commit(&mut self) {
+        self.next += 1;
+    }
+
+    /// The row for `timestep`, if still live.
+    fn row(&self, timestep: usize) -> Option<&[u8]> {
+        if timestep >= self.next || self.next - timestep > self.capacity {
+            return None;
+        }
+        let i = (timestep % self.capacity) * self.width;
+        Some(&self.buf[i..i + self.width])
+    }
+}
+
+/// Per-layer weights pre-decoded from s4 log2 codes to integers, so the
+/// per-timestep hot loop never touches the code tables.
+struct LayerPlan {
+    decoded: Vec<i32>,
+    /// Decoded 1x1 residual-conv codes, for blocks that change width.
+    res_decoded: Option<Vec<i32>>,
+}
+
+/// One emitted window: the raw output of the incremental executor.
+///
+/// `logits` is the built-in classifier head's output when the model has
+/// one (KWS-style serving); headless FSL/CL models return the embedding
+/// only and the caller applies a session's prototypical head.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WindowOutput {
+    /// 0-based index of the window within the stream.
+    pub window: u64,
+    /// Absolute 0-based timestep of the window's last sample.
+    pub end_t: u64,
+    /// u4 embedding, bit-identical to [`super::embed`] on the window.
+    pub embedding: Vec<u8>,
+    /// Built-in-head logits, bit-identical to [`super::forward`].
+    pub logits: Option<Vec<i32>>,
+}
+
+/// Stateful incremental executor: push u4 samples in chunks of any size
+/// (partial timesteps are buffered), receive a [`WindowOutput`] for every
+/// complete window of `seq_len` samples at stride `hop`.
+pub struct StreamingState {
+    model: Arc<QuantModel>,
+    hop: usize,
+    /// `rings[0]` = model input; `rings[l + 1]` = output of conv layer `l`.
+    rings: Vec<RowRing>,
+    plans: Vec<LayerPlan>,
+    /// Input timesteps fully consumed so far.
+    t: usize,
+    /// Windows emitted so far.
+    windows: u64,
+    /// Buffered partial input row (`< in_channels` samples).
+    pending: Vec<u8>,
+    /// Scratch accumulators sized for the widest layer.
+    acc: Vec<i32>,
+    partial: Vec<i32>,
+}
+
+impl StreamingState {
+    /// Open a stream over `model` with decision stride `hop` (timesteps).
+    ///
+    /// Fails when `hop == 0`, when the model has no conv layers, or when
+    /// `receptive_field > seq_len` — in that last case the batch forward's
+    /// per-window zero padding reaches into every window's decision cone,
+    /// so overlapping windows cannot share incremental state bit-exactly
+    /// (see the module docs).
+    pub fn new(model: Arc<QuantModel>, hop: usize) -> Result<StreamingState> {
+        if hop == 0 {
+            bail!("stream hop must be positive");
+        }
+        if model.layers.is_empty() {
+            bail!("model {} has no conv layers to stream", model.name);
+        }
+        let rf = model.receptive_field();
+        if rf > model.seq_len {
+            bail!(
+                "model {}: receptive field {rf} exceeds window {} — windows cannot \
+                 be emitted bit-exactly from shared streaming state",
+                model.name,
+                model.seq_len
+            );
+        }
+        // History each conv layer needs of its *input* ring.
+        let hist = |l: &crate::model::QLayer| (l.kernel_size() - 1) * l.dilation + 1;
+        let mut rings = Vec::with_capacity(model.layers.len() + 1);
+        rings.push(RowRing::new(model.in_channels, hist(&model.layers[0])));
+        for (i, l) in model.layers.iter().enumerate() {
+            // Ring for layer i's output: sized for the next layer's taps
+            // (the same-timestep residual and embedding reads only ever
+            // touch the newest row).
+            let cap = model.layers.get(i + 1).map(hist).unwrap_or(1);
+            rings.push(RowRing::new(l.c_out(), cap));
+        }
+        let plans: Vec<LayerPlan> = model
+            .layers
+            .iter()
+            .map(|l| LayerPlan {
+                decoded: decode_codes(&l.codes),
+                res_decoded: l.res_codes.as_deref().map(decode_codes),
+            })
+            .collect();
+        let mut widest = 1usize;
+        for l in &model.layers {
+            widest = widest.max(l.c_out());
+            if let Some(shape) = &l.res_codes_shape {
+                widest = widest.max(shape[shape.len() - 1]);
+            }
+        }
+        Ok(StreamingState {
+            model,
+            hop,
+            rings,
+            plans,
+            t: 0,
+            windows: 0,
+            pending: Vec::new(),
+            acc: vec![0i32; widest],
+            partial: vec![0i32; widest],
+        })
+    }
+
+    /// Window length in timesteps (the model's `seq_len`).
+    pub fn window(&self) -> usize {
+        self.model.seq_len
+    }
+
+    /// Decision stride in timesteps.
+    pub fn hop(&self) -> usize {
+        self.hop
+    }
+
+    /// Windows emitted so far.
+    pub fn windows_emitted(&self) -> u64 {
+        self.windows
+    }
+
+    /// Input timesteps fully consumed so far.
+    pub fn timesteps_seen(&self) -> u64 {
+        self.t as u64
+    }
+
+    /// Activation bytes reserved by the rings (u4 entries / 2) — the live
+    /// counterpart of [`QuantModel::dense_fifo_activation_bytes`].
+    pub fn reserved_bytes(&self) -> usize {
+        self.rings.iter().map(|r| r.capacity * r.width).sum::<usize>() / 2
+    }
+
+    /// Whether decisions need a caller-supplied classifier: `true` for
+    /// headless (FSL/CL) models, whose [`WindowOutput::logits`] is `None`
+    /// and must be resolved against a learned prototypical head.
+    pub fn needs_session_head(&self) -> bool {
+        self.model.head.is_none()
+    }
+
+    /// Push a chunk of u4 samples (`[T][C]` order, any length — partial
+    /// timesteps buffer until completed by a later push). Returns a
+    /// [`WindowOutput`] for every window the chunk completed, in order.
+    ///
+    /// Samples are validated up front: a chunk containing a non-u4 byte is
+    /// rejected whole, leaving the stream state untouched.
+    pub fn push(&mut self, samples: &[u8]) -> Result<Vec<WindowOutput>> {
+        if let Some(&bad) = samples.iter().find(|&&s| s > quant::ACT_MAX as u8) {
+            bail!("sample {bad} out of u4 range");
+        }
+        let cin = self.model.in_channels;
+        self.pending.extend_from_slice(samples);
+        // Take the buffer instead of copying it (`step` never touches
+        // `pending`); the sub-row tail shifts back in via the drain.
+        let buf = std::mem::take(&mut self.pending);
+        let full = (buf.len() / cin) * cin;
+        let mut out = Vec::new();
+        for row in buf[..full].chunks_exact(cin) {
+            if let Some(w) = self.step(row) {
+                out.push(w);
+            }
+        }
+        self.pending = buf;
+        self.pending.drain(..full);
+        Ok(out)
+    }
+
+    /// Advance every layer by one timestep; returns a decision when this
+    /// timestep completes a window.
+    ///
+    /// The small per-layer `taps`/residual vectors allocated here are a
+    /// deliberate tradeoff: they cannot live in `self` (they borrow the
+    /// rings), and at k-element size their cost is well under a percent
+    /// of the conv work per step.
+    fn step(&mut self, row: &[u8]) -> Option<WindowOutput> {
+        let t = self.t;
+        self.rings[0].slot().copy_from_slice(row);
+        self.rings[0].commit();
+        let model = self.model.clone();
+        let n_layers = model.layers.len();
+        for (l, layer) in model.layers.iter().enumerate() {
+            let k = layer.kernel_size();
+            let d = layer.dilation;
+            let cin = layer.c_in();
+            let cout = layer.c_out();
+            // Residual row for the second conv of each block: the block
+            // input at the same timestep, optionally through the 1x1
+            // re-quantizing conv (same slab datapath, k = 1).
+            let residual: Option<Vec<u8>> = if l % 2 == 1 {
+                // rings[l - 1] is the block input (the previous block's
+                // output, or the model input ring when l == 1).
+                let src = l - 1;
+                let raw = self.rings[src]
+                    .row(t)
+                    .expect("block-input row is the ring's newest entry")
+                    .to_vec();
+                match &self.plans[l].res_decoded {
+                    Some(rdec) => {
+                        let shape = layer.res_codes_shape.as_ref().unwrap();
+                        let (rcin, rcout) = (shape[shape.len() - 2], shape[shape.len() - 1]);
+                        let rbias = layer.res_bias.as_ref().unwrap();
+                        let rshift = layer.res_out_shift.unwrap();
+                        let rtaps = [Some(raw.as_slice())];
+                        accumulate_row_taps(
+                            &rtaps,
+                            rcin,
+                            rdec,
+                            &mut self.acc[..rcout],
+                            &mut self.partial[..rcout],
+                        );
+                        let mut rrow = vec![0u8; rcout];
+                        for (co, slot) in rrow.iter_mut().enumerate() {
+                            *slot = quant::ope(self.acc[co], rbias[co], rshift, true, 0, 0) as u8;
+                        }
+                        Some(rrow)
+                    }
+                    None => Some(raw),
+                }
+            } else {
+                None
+            };
+            // Gather causal taps from this layer's input ring; rows before
+            // the stream start are None (zero + slab advance, identical to
+            // the batch path's window-start padding).
+            let mut taps: Vec<Option<&[u8]>> = Vec::with_capacity(k);
+            for tap in 0..k {
+                let offset = (k - 1 - tap) * d;
+                taps.push(if t >= offset {
+                    Some(self.rings[l].row(t - offset).expect("tap row within ring history"))
+                } else {
+                    None
+                });
+            }
+            accumulate_row_taps(
+                &taps,
+                cin,
+                &self.plans[l].decoded,
+                &mut self.acc[..cout],
+                &mut self.partial[..cout],
+            );
+            drop(taps);
+            let rs = layer.res_shift.unwrap_or(0);
+            let outslot = self.rings[l + 1].slot();
+            for (co, slot) in outslot.iter_mut().enumerate() {
+                let res = residual.as_ref().map_or(0, |r| r[co] as i32);
+                let (res, rs) = apply_signed_res(res, rs);
+                *slot = quant::ope(self.acc[co], layer.bias[co], layer.out_shift, true, res, rs)
+                    as u8;
+            }
+            self.rings[l + 1].commit();
+        }
+        self.t += 1;
+        // Window boundary: decisions at t = seq_len - 1 + n * hop.
+        if self.t < model.seq_len || (self.t - model.seq_len) % self.hop != 0 {
+            return None;
+        }
+        let last = self.rings[n_layers]
+            .row(t)
+            .expect("final conv row just written")
+            .to_vec();
+        let embedding = conv_layer(&last, 1, &model.embed, None);
+        let logits = model
+            .head
+            .as_ref()
+            .map(|h| fc_logits(&embedding, &h.codes, h.c_in(), h.c_out(), &h.bias));
+        let window = self.windows;
+        self.windows += 1;
+        Some(WindowOutput { window, end_t: t as u64, embedding, logits })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::golden;
+    use crate::util::rng::Rng;
+
+    fn rand_stream(rng: &mut Rng, timesteps: usize, channels: usize) -> Vec<u8> {
+        (0..timesteps * channels).map(|_| rng.range(0, 16) as u8).collect()
+    }
+
+    /// Decisions must be bit-identical to the batch forward on every
+    /// window, for overlapping and non-overlapping hops alike.
+    #[test]
+    fn matches_batch_forward_on_every_window() {
+        let m = Arc::new(crate::model::demo_tiny_kws());
+        for (case, hop) in [1usize, 3, 7, m.seq_len].into_iter().enumerate() {
+            let mut rng = Rng::new(40 + case as u64);
+            let t_total = m.seq_len + 5 * hop + 2;
+            let stream = rand_stream(&mut rng, t_total, m.in_channels);
+            let mut s = StreamingState::new(m.clone(), hop).unwrap();
+            // Ragged chunk sizes, including partial timesteps.
+            let mut outs = Vec::new();
+            let mut i = 0;
+            while i < stream.len() {
+                let n = (1 + rng.below(13) as usize).min(stream.len() - i);
+                outs.extend(s.push(&stream[i..i + n]).unwrap());
+                i += n;
+            }
+            assert_eq!(outs.len(), (t_total - m.seq_len) / hop + 1);
+            assert_eq!(s.windows_emitted(), outs.len() as u64);
+            for (n, out) in outs.iter().enumerate() {
+                assert_eq!(out.window, n as u64);
+                let start = n * hop;
+                assert_eq!(out.end_t, (start + m.seq_len - 1) as u64);
+                let w = &stream[start * m.in_channels..(start + m.seq_len) * m.in_channels];
+                let (emb, logits) = golden::forward(&m, w).unwrap();
+                assert_eq!(out.embedding, emb, "hop {hop} window {n}: embedding");
+                assert_eq!(out.logits, logits, "hop {hop} window {n}: logits");
+            }
+        }
+    }
+
+    /// The same stream split differently must yield identical decisions.
+    #[test]
+    fn chunking_is_invisible() {
+        let m = Arc::new(crate::model::demo_tiny());
+        let mut rng = Rng::new(77);
+        let stream = rand_stream(&mut rng, m.seq_len + 3 * 5, m.in_channels);
+        let mut all_at_once = StreamingState::new(m.clone(), 5).unwrap();
+        let want = all_at_once.push(&stream).unwrap();
+        let mut one_byte = StreamingState::new(m.clone(), 5).unwrap();
+        let mut got = Vec::new();
+        for b in &stream {
+            got.extend(one_byte.push(std::slice::from_ref(b)).unwrap());
+        }
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn headless_model_emits_embedding_only() {
+        let m = Arc::new(crate::model::demo_tiny());
+        let mut rng = Rng::new(9);
+        let stream = rand_stream(&mut rng, m.seq_len, m.in_channels);
+        let mut s = StreamingState::new(m.clone(), 4).unwrap();
+        let outs = s.push(&stream).unwrap();
+        assert_eq!(outs.len(), 1);
+        assert!(outs[0].logits.is_none());
+        assert_eq!(outs[0].embedding.len(), m.embed_dim);
+    }
+
+    #[test]
+    fn rejects_bad_configs_and_samples() {
+        let m = Arc::new(crate::model::demo_tiny());
+        assert!(StreamingState::new(m.clone(), 0).is_err(), "hop 0");
+        let mut narrow = crate::model::demo_tiny();
+        narrow.seq_len = 4; // receptive field 13 > window 4
+        assert!(StreamingState::new(Arc::new(narrow), 1).is_err());
+        let mut s = StreamingState::new(m, 1).unwrap();
+        assert!(s.push(&[16]).is_err(), "non-u4 sample");
+        assert_eq!(s.timesteps_seen(), 0, "rejected chunk must not advance");
+    }
+
+    #[test]
+    fn ring_memory_matches_dense_fifo_estimate() {
+        let m = Arc::new(crate::model::demo_tiny());
+        let s = StreamingState::new(m.clone(), 1).unwrap();
+        let est = m.dense_fifo_activation_bytes();
+        assert!(
+            s.reserved_bytes() <= 2 * est + 64,
+            "{} vs estimate {est}",
+            s.reserved_bytes()
+        );
+    }
+}

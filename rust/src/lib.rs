@@ -9,11 +9,12 @@
 //!   meta-training, QAT, AOT-lowered to HLO text in `artifacts/`;
 //! * run time (this crate): [`runtime`] executes the lowered graphs via
 //!   PJRT (feature `xla`; stubbed otherwise), [`golden`] is the bit-exact
-//!   functional model, [`sim`] is the cycle/power-level SoC simulator
+//!   functional model (batch forward + the incremental streaming
+//!   executor), [`sim`] is the cycle/power-level SoC simulator
 //!   implementing the paper's three contributions, [`coordinator`] serves
 //!   streaming inference + on-device FSL/CL on top of any of those
 //!   engines, [`serve`] puts N coordinator shards behind a TCP wire
-//!   protocol (with a client library and an open-loop load generator), and
+//!   protocol (with a client library and open-loop load generators), and
 //!   [`baselines`] hold the prior-work cost models the paper compares
 //!   against.
 //!
@@ -24,12 +25,16 @@
 //! ```text
 //! cargo run --release -- serve --shards 2 --workers 2
 //! cargo run --release -- loadgen --rps 200 --duration 10 --learn-frac 0.05
+//! cargo run --release -- loadgen --stream --chunk 8 --hop 4 --duration 10
 //! ```
 //!
 //! The first command starts a sharded TCP server (default
-//! `127.0.0.1:7070`); the second drives it with open-loop Poisson traffic
-//! and prints throughput plus p50/p95/p99 latency. See `DESIGN.md` §Serve
-//! for the framing, sharding and backpressure contracts.
+//! `127.0.0.1:7070`); the second drives it with open-loop Poisson request
+//! traffic and prints throughput plus p50/p95/p99 latency; the third
+//! drives incremental stream sessions (protocol v2) instead — chunked
+//! sample pushes, one bit-exact decision per hop-strided window. See
+//! `DESIGN.md` §Serve and §Streaming for the framing, sharding,
+//! backpressure and bit-exactness contracts.
 
 pub mod baselines;
 pub mod coordinator;

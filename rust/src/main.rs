@@ -5,7 +5,9 @@
 //!   infer   --model NAME [...]   classify eval samples on an engine
 //!   learn   --ways N --shots K   run an on-"chip" FSL episode
 //!   serve   --shards N [...]     sharded TCP serving layer (wire protocol)
-//!   loadgen --rps R [...]        open-loop Poisson load generator
+//!   loadgen --rps R [...]        open-loop Poisson load generator;
+//!           --stream [--chunk C --hop H --pace-hz F] drives incremental
+//!           stream sessions instead of request traffic
 //!   drive   --model NAME         drive the in-process streaming coordinator
 //!   power   [--mode 4|16 ...]    evaluate the calibrated power model
 //!   verify                       cross-check golden/sim/xla vs vectors
@@ -24,7 +26,7 @@ use chameleon::coordinator::{Coordinator, CoordinatorConfig, Engine};
 use chameleon::data::EvalPool;
 use chameleon::model::QuantModel;
 use chameleon::runtime::{Runtime, XlaModel};
-use chameleon::serve::{LoadgenConfig, ServeConfig, Server};
+use chameleon::serve::{LoadgenConfig, ServeConfig, Server, StreamLoadConfig};
 use chameleon::sim::{self, ArrayMode, LearningController, OperatingPoint};
 use chameleon::util::args::Args;
 use chameleon::util::bench::{fmt_dur, fmt_power, Table};
@@ -280,8 +282,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Open-loop Poisson load generator against a serve endpoint.
+/// Open-loop load generator against a serve endpoint: Poisson request
+/// traffic by default, paced stream sessions with `--stream`.
 fn cmd_loadgen(args: &Args) -> Result<()> {
+    if args.flag("stream") {
+        return cmd_loadgen_stream(args);
+    }
     let cfg = LoadgenConfig {
         addr: args.get_or("addr", "127.0.0.1:7070").to_string(),
         rps: args.get_f64("rps", 200.0)?,
@@ -302,6 +308,40 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         cfg.connections,
     );
     let report = chameleon::serve::loadgen::run(&cfg)?;
+    println!("{}", report.report());
+    if report.protocol_errors > 0 {
+        bail!("{} protocol errors observed", report.protocol_errors);
+    }
+    Ok(())
+}
+
+/// Streaming mode of the load generator: one incremental stream session
+/// per connection, chunked pushes paced to `--pace-hz` timesteps/s
+/// (0 = free-running), per-chunk and per-decision latency percentiles.
+fn cmd_loadgen_stream(args: &Args) -> Result<()> {
+    let cfg = StreamLoadConfig {
+        addr: args.get_or("addr", "127.0.0.1:7070").to_string(),
+        connections: args.get_usize("connections", 4)?,
+        duration: Duration::from_secs_f64(args.get_f64("duration", 10.0)?),
+        chunk: args.get_usize("chunk", 64)?,
+        hop: args.get_usize("hop", 0)?,
+        pace_hz: args.get_f64("pace-hz", 0.0)?,
+        seed: args.get_u64("seed", 1)?,
+    };
+    println!(
+        "loadgen --stream -> {}: {} session(s), {} steps/chunk, hop {} for {:.1} s ({})",
+        cfg.addr,
+        cfg.connections,
+        cfg.chunk,
+        if cfg.hop == 0 { "window".to_string() } else { cfg.hop.to_string() },
+        cfg.duration.as_secs_f64(),
+        if cfg.pace_hz > 0.0 {
+            format!("paced at {:.0} steps/s", cfg.pace_hz)
+        } else {
+            "free-running".to_string()
+        },
+    );
+    let report = chameleon::serve::loadgen::run_stream(&cfg)?;
     println!("{}", report.report());
     if report.protocol_errors > 0 {
         bail!("{} protocol errors observed", report.protocol_errors);

@@ -1,8 +1,8 @@
 //! Execution runtime for the AOT-lowered artifacts.
 //!
-//! The real implementation ([`pjrt`], behind the `xla` feature) compiles the
+//! The real implementation (`pjrt`, behind the `xla` feature) compiles the
 //! HLO text with a PJRT CPU client. The offline build image does not vendor
-//! the `xla` crate, so by default an API-compatible [`stub`] is used instead:
+//! the `xla` crate, so by default an API-compatible `stub` is used instead:
 //! every constructor returns an error at *runtime*, while every caller — the
 //! `xla` engine selection in the CLI, the benches, the examples — keeps
 //! compiling unchanged. [`hlo_stats`] is pure text analysis and always

@@ -16,7 +16,7 @@ use std::time::Duration;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::serve::proto::{
-    self, ErrorCode, HealthWire, MetricsWire, WireReply, WireRequest, WireResponse,
+    self, ErrorCode, HealthWire, MetricsWire, WireDecision, WireReply, WireRequest, WireResponse,
 };
 
 /// Client tuning knobs.
@@ -85,11 +85,13 @@ impl Client {
     /// Retry discipline: a failure *before* the request hit the wire is
     /// always retried. A failure *after* it may have been sent is only
     /// retried for idempotent requests — re-sending a `LearnWay` whose
-    /// reply was lost could apply the learning twice, so it surfaces as
-    /// an error for the caller to decide.
+    /// reply was lost could apply the learning twice, and re-sending a
+    /// `StreamPush` would advance the stream twice, so those surface as
+    /// errors for the caller to decide.
     pub fn call(&mut self, req: &WireRequest) -> Result<WireResponse> {
         let frame = proto::encode_request(req);
-        let idempotent = !matches!(req, WireRequest::LearnWay { .. });
+        let idempotent =
+            !matches!(req, WireRequest::LearnWay { .. } | WireRequest::StreamPush { .. });
         let mut last_err: Option<anyhow::Error> = None;
         for attempt in 0..=self.cfg.reconnect_attempts {
             if attempt > 0 {
@@ -165,6 +167,42 @@ impl Client {
     pub fn evict_session(&mut self, session: u64) -> Result<bool> {
         match self.call(&WireRequest::EvictSession { session })? {
             WireResponse::Evicted { existed } => Ok(existed),
+            WireResponse::Error { code, message } => {
+                bail!("server error ({code:?}): {message}")
+            }
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Open (or reset) an incremental stream on a session; returns the
+    /// accepted `(window, hop)` geometry in timesteps.
+    pub fn stream_open(&mut self, session: u64, hop: u32) -> Result<(u32, u32)> {
+        match self.call(&WireRequest::StreamOpen { session, hop })? {
+            WireResponse::StreamOpened { window, hop } => Ok((window, hop)),
+            WireResponse::Error { code, message } => {
+                bail!("server error ({code:?}): {message}")
+            }
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Push a chunk of u4 samples into a session's open stream; returns a
+    /// decision for every window the chunk completed (often empty).
+    pub fn stream_push(&mut self, session: u64, samples: Vec<u8>) -> Result<Vec<WireDecision>> {
+        match self.call(&WireRequest::StreamPush { session, samples })? {
+            WireResponse::StreamDecisions(ds) => Ok(ds),
+            WireResponse::Error { code, message } => {
+                bail!("server error ({code:?}): {message}")
+            }
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Close a session's stream; returns whether one existed and how many
+    /// windows it emitted.
+    pub fn stream_close(&mut self, session: u64) -> Result<(bool, u64)> {
+        match self.call(&WireRequest::StreamClose { session })? {
+            WireResponse::StreamClosed { existed, windows } => Ok((existed, windows)),
             WireResponse::Error { code, message } => {
                 bail!("server error ({code:?}): {message}")
             }

@@ -1,17 +1,24 @@
-//! Open-loop Poisson load generator for the serve layer.
+//! Open-loop load generators for the serve layer: Poisson request traffic
+//! ([`run`]) and paced streaming-session traffic ([`run_stream`]).
 //!
-//! Arrival times are pre-drawn from an exponential inter-arrival process at
-//! the configured rate and *do not* adapt to response latency (open-loop):
-//! if the server falls behind, arrivals queue on the worker threads and the
-//! measured latency — taken from each request's **scheduled** arrival time,
-//! not its actual send time — faithfully includes that coordination delay.
-//! This avoids the closed-loop trap where a slow server throttles its own
-//! load and the tail disappears from the histogram.
+//! Arrival times are pre-drawn (requests) or fixed by the pacing rate
+//! (stream chunks) and *do not* adapt to response latency (open-loop): if
+//! the server falls behind, arrivals queue on the worker threads and the
+//! measured latency — taken from each request's **scheduled** arrival
+//! time, not its actual send time — faithfully includes that coordination
+//! delay. This avoids the closed-loop trap where a slow server throttles
+//! its own load and the tail disappears from the histogram.
 //!
-//! Traffic mix: each arrival is a `LearnWay` with probability `learn_frac`
-//! (k random shots on a random session), otherwise a `ClassifySession` on a
-//! random pre-warmed session. Sessions span all shards, so a run exercises
-//! cross-shard routing by construction.
+//! Request-mode traffic mix: each arrival is a `LearnWay` with probability
+//! `learn_frac` (k random shots on a random session), otherwise a
+//! `ClassifySession` on a random pre-warmed session. Sessions span all
+//! shards, so a run exercises cross-shard routing by construction.
+//!
+//! Stream mode opens one stream session per connection and pushes
+//! fixed-size chunks, paced to a sample rate (e.g. 16 kHz audio) or
+//! free-running; it reports **per-chunk** and **per-decision** latency
+//! separately, since a decision's latency is what an end user of
+//! streaming KWS actually observes.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -276,6 +283,257 @@ fn rand_input(rng: &mut Rng, len: usize) -> Vec<u8> {
     (0..len).map(|_| rng.below(16) as u8).collect()
 }
 
+// ---------------------------------------------------------------------------
+// Streaming mode
+// ---------------------------------------------------------------------------
+
+/// Session-id base for stream sessions, so a streaming run never collides
+/// with request-mode warmed sessions on the same server.
+const STREAM_SESSION_BASE: u64 = 1 << 40;
+
+/// Streaming load configuration: one stream session per connection.
+#[derive(Debug, Clone)]
+pub struct StreamLoadConfig {
+    pub addr: String,
+    /// Concurrent stream sessions (one connection each).
+    pub connections: usize,
+    pub duration: Duration,
+    /// Timesteps pushed per chunk.
+    pub chunk: usize,
+    /// Decision stride in timesteps; 0 means one window (non-overlapping).
+    pub hop: usize,
+    /// Input sample rate in timesteps/s each session is paced to;
+    /// 0 = free-running (push as fast as the server accepts).
+    pub pace_hz: f64,
+    pub seed: u64,
+}
+
+impl Default for StreamLoadConfig {
+    fn default() -> Self {
+        StreamLoadConfig {
+            addr: "127.0.0.1:7070".to_string(),
+            connections: 4,
+            duration: Duration::from_secs(10),
+            chunk: 64,
+            hop: 0,
+            pace_hz: 0.0,
+            seed: 1,
+        }
+    }
+}
+
+/// Outcome of one streaming load run.
+#[derive(Debug, Clone)]
+pub struct StreamReport {
+    pub sessions: usize,
+    /// Window / hop geometry the server accepted (timesteps).
+    pub window: usize,
+    pub hop: usize,
+    pub chunk: usize,
+    /// Chunks accepted (answered with `StreamDecisions`).
+    pub ok: u64,
+    /// Chunks shed by backpressure — the stream *skips* those samples.
+    pub overloaded: u64,
+    pub app_errors: u64,
+    /// Transport/framing failures — must be zero against a healthy server.
+    pub protocol_errors: u64,
+    /// Per-window decisions received across all sessions.
+    pub decisions: u64,
+    pub wall: Duration,
+    /// Latency of each chunk push, from its scheduled send time.
+    pub chunk_latency: HistSnapshot,
+    /// Latency of each *decision*, from the scheduled send of the chunk
+    /// that completed its window.
+    pub decision_latency: HistSnapshot,
+    /// Server-side aggregated metrics fetched after the run.
+    pub server: Option<MetricsWire>,
+}
+
+impl StreamReport {
+    pub fn decisions_per_sec(&self) -> f64 {
+        if self.wall.as_secs_f64() <= 0.0 {
+            0.0
+        } else {
+            self.decisions as f64 / self.wall.as_secs_f64()
+        }
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "streaming: {} session(s), window {} hop {} chunk {} steps -> \
+             {} chunks ok / {} overloaded / {} app errors / {} protocol errors in {:.2} s\n\
+             decisions {} ({:.1}/s)\n\
+             chunk latency    p50={:.0}us p95={:.0}us p99={:.0}us mean={:.0}us\n\
+             decision latency p50={:.0}us p95={:.0}us p99={:.0}us mean={:.0}us",
+            self.sessions,
+            self.window,
+            self.hop,
+            self.chunk,
+            self.ok,
+            self.overloaded,
+            self.app_errors,
+            self.protocol_errors,
+            self.wall.as_secs_f64(),
+            self.decisions,
+            self.decisions_per_sec(),
+            self.chunk_latency.percentile_us(50.0),
+            self.chunk_latency.percentile_us(95.0),
+            self.chunk_latency.percentile_us(99.0),
+            self.chunk_latency.mean_us(),
+            self.decision_latency.percentile_us(50.0),
+            self.decision_latency.percentile_us(95.0),
+            self.decision_latency.percentile_us(99.0),
+            self.decision_latency.mean_us(),
+        );
+        if let Some(m) = &self.server {
+            s.push_str("\nserver: ");
+            s.push_str(&m.report());
+        }
+        s
+    }
+}
+
+struct StreamCounters {
+    ok: AtomicU64,
+    overloaded: AtomicU64,
+    app_errors: AtomicU64,
+    protocol_errors: AtomicU64,
+    decisions: AtomicU64,
+}
+
+/// Run the streaming load generator: each connection opens its own stream
+/// session and pushes `chunk`-timestep chunks until the duration elapses,
+/// then closes its stream.
+pub fn run_stream(cfg: &StreamLoadConfig) -> Result<StreamReport> {
+    if cfg.chunk == 0 {
+        bail!("--chunk must be positive");
+    }
+    if cfg.connections == 0 {
+        bail!("--connections must be at least 1");
+    }
+    if cfg.pace_hz < 0.0 {
+        bail!("--pace-hz must be non-negative");
+    }
+    let mut probe = Client::with_config(
+        &cfg.addr,
+        ClientConfig { timeout: Duration::from_secs(30), ..Default::default() },
+    )
+    .context("connecting to serve endpoint")?;
+    let health = probe.health().context("health probe")?;
+    if health.window == 0 || health.channels == 0 {
+        bail!("server does not report stream geometry (pre-v2 server?)");
+    }
+    let window = health.window as usize;
+    let channels = health.channels as usize;
+    let hop = if cfg.hop == 0 { window } else { cfg.hop };
+
+    let counters = Arc::new(StreamCounters {
+        ok: AtomicU64::new(0),
+        overloaded: AtomicU64::new(0),
+        app_errors: AtomicU64::new(0),
+        protocol_errors: AtomicU64::new(0),
+        decisions: AtomicU64::new(0),
+    });
+    let chunk_hist = Arc::new(LatencyHistogram::new());
+    let decision_hist = Arc::new(LatencyHistogram::new());
+
+    let start = Instant::now();
+    let deadline = start + cfg.duration;
+    let mut workers = Vec::new();
+    for wid in 0..cfg.connections {
+        let counters = counters.clone();
+        let chunk_hist = chunk_hist.clone();
+        let decision_hist = decision_hist.clone();
+        let addr = cfg.addr.clone();
+        let (seed, chunk, pace_hz) = (cfg.seed, cfg.chunk, cfg.pace_hz);
+        workers.push(
+            std::thread::Builder::new()
+                .name(format!("streamgen-{wid}"))
+                .spawn(move || -> Result<()> {
+                    let mut client = Client::connect(&addr)?;
+                    let session = STREAM_SESSION_BASE + wid as u64;
+                    client
+                        .stream_open(session, hop as u32)
+                        .context("opening stream session")?;
+                    let period = if pace_hz > 0.0 {
+                        Some(Duration::from_secs_f64(chunk as f64 / pace_hz))
+                    } else {
+                        None
+                    };
+                    let mut rng =
+                        Rng::new(seed ^ (wid as u64).wrapping_mul(0xD1B5_4A32_D192_ED03));
+                    let mut n = 0u64;
+                    loop {
+                        let due = match period {
+                            Some(p) => start + p.mul_f64(n as f64),
+                            None => Instant::now(),
+                        };
+                        if due >= deadline || Instant::now() >= deadline {
+                            break;
+                        }
+                        let now = Instant::now();
+                        if due > now {
+                            std::thread::sleep(due - now);
+                        }
+                        let samples = rand_input(&mut rng, chunk * channels);
+                        let result = client.call(&WireRequest::StreamPush { session, samples });
+                        let lat = due.elapsed();
+                        chunk_hist.record(lat);
+                        match &result {
+                            Ok(WireResponse::StreamDecisions(ds)) => {
+                                counters.ok.fetch_add(1, Ordering::Relaxed);
+                                counters.decisions.fetch_add(ds.len() as u64, Ordering::Relaxed);
+                                for _ in ds {
+                                    decision_hist.record(lat);
+                                }
+                            }
+                            _ => match Outcome::of(&result) {
+                                Outcome::Overloaded => {
+                                    counters.overloaded.fetch_add(1, Ordering::Relaxed);
+                                }
+                                Outcome::ProtocolError => {
+                                    counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                                }
+                                _ => {
+                                    counters.app_errors.fetch_add(1, Ordering::Relaxed);
+                                }
+                            },
+                        }
+                        n += 1;
+                    }
+                    let _ = client.stream_close(session);
+                    Ok(())
+                })
+                .context("spawning stream worker")?,
+        );
+    }
+    for w in workers {
+        match w.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => return Err(e.context("stream worker failed")),
+            Err(_) => bail!("stream worker panicked"),
+        }
+    }
+    let wall = start.elapsed();
+
+    let server = probe.metrics().ok();
+    Ok(StreamReport {
+        sessions: cfg.connections,
+        window,
+        hop,
+        chunk: cfg.chunk,
+        ok: counters.ok.load(Ordering::Relaxed),
+        overloaded: counters.overloaded.load(Ordering::Relaxed),
+        app_errors: counters.app_errors.load(Ordering::Relaxed),
+        protocol_errors: counters.protocol_errors.load(Ordering::Relaxed),
+        decisions: counters.decisions.load(Ordering::Relaxed),
+        wall,
+        chunk_latency: chunk_hist.snapshot(),
+        decision_latency: decision_hist.snapshot(),
+        server,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -290,6 +548,41 @@ mod tests {
         cfg.learn_frac = 0.1;
         cfg.sessions = 0;
         assert!(run(&cfg).is_err());
+    }
+
+    #[test]
+    fn stream_config_validation() {
+        let mut cfg = StreamLoadConfig { chunk: 0, ..Default::default() };
+        assert!(run_stream(&cfg).is_err());
+        cfg.chunk = 8;
+        cfg.connections = 0;
+        assert!(run_stream(&cfg).is_err());
+        cfg.connections = 1;
+        cfg.pace_hz = -1.0;
+        assert!(run_stream(&cfg).is_err());
+    }
+
+    #[test]
+    fn stream_report_formats() {
+        let r = StreamReport {
+            sessions: 2,
+            window: 16,
+            hop: 4,
+            chunk: 8,
+            ok: 10,
+            overloaded: 1,
+            app_errors: 0,
+            protocol_errors: 0,
+            decisions: 7,
+            wall: Duration::from_secs(1),
+            chunk_latency: HistSnapshot::default(),
+            decision_latency: HistSnapshot::default(),
+            server: None,
+        };
+        let s = r.report();
+        assert!(s.contains("10 chunks ok"), "{s}");
+        assert!(s.contains("decision latency"), "{s}");
+        assert!((r.decisions_per_sec() - 7.0).abs() < 1e-9);
     }
 
     #[test]

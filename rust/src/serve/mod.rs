@@ -3,22 +3,25 @@
 //! This is the first subsystem that exercises the whole stack — golden
 //! model / cycle simulator / (optional) PJRT runtime, behind the
 //! coordinator's bounded queues and session store — across a process
-//! boundary. Four pieces (see `DESIGN.md` §Serve):
+//! boundary. Four pieces (see `DESIGN.md` §Serve and §Streaming):
 //!
-//! * [`proto`]  — length-prefixed, versioned binary wire protocol;
+//! * [`proto`]  — length-prefixed, versioned binary wire protocol (v2
+//!   adds the incremental stream ops);
 //! * [`server`] — thread-per-connection TCP server over N coordinator
-//!   shards: sessions route by stable `SessionId` hash, session-less
-//!   classification fans out round-robin, queue overflow surfaces as an
-//!   explicit `Overloaded` wire error;
+//!   shards: sessions (and their open streams) route by stable
+//!   `SessionId` hash, session-less classification fans out round-robin,
+//!   queue overflow surfaces as an explicit `Overloaded` wire error;
 //! * [`client`] — blocking client library with reconnect + timeouts;
-//! * [`loadgen`] — open-loop Poisson load generator reporting throughput
-//!   and p50/p95/p99 latency from the shared fixed-bucket histogram.
+//! * [`loadgen`] — open-loop load generators: Poisson request traffic and
+//!   paced streaming sessions, both reporting p50/p95/p99 latency from
+//!   the shared fixed-bucket histogram.
 //!
 //! Quickstart (no artifacts needed — uses the built-in demo model):
 //!
 //! ```text
 //! cargo run --release -- serve --shards 2 --workers 2
 //! cargo run --release -- loadgen --rps 200 --duration 10 --learn-frac 0.05
+//! cargo run --release -- loadgen --stream --chunk 8 --hop 4 --duration 10
 //! ```
 
 pub mod client;
@@ -27,8 +30,8 @@ pub mod proto;
 pub mod server;
 
 pub use client::{Client, ClientConfig, Outcome};
-pub use loadgen::{LoadReport, LoadgenConfig};
+pub use loadgen::{LoadReport, LoadgenConfig, StreamLoadConfig, StreamReport};
 pub use proto::{
-    ErrorCode, HealthWire, MetricsWire, WireReply, WireRequest, WireResponse,
+    ErrorCode, HealthWire, MetricsWire, WireDecision, WireReply, WireRequest, WireResponse,
 };
 pub use server::{shard_of, ServeConfig, Server};

@@ -4,26 +4,65 @@
 //!
 //! ```text
 //! frame   := len:u32 | body                  len = body length in bytes
-//! body    := version:u8 (=1) | opcode:u8 | payload
+//! body    := version:u8 | opcode:u8 | payload
 //! bytes   := n:u32 | raw[n]
 //! string  := bytes (utf-8)
 //! opt<T>  := 0:u8 | 1:u8 T
 //! list<T> := n:u32 | T[n]
 //! ```
 //!
+//! # Opcodes
+//!
+//! | op     | since | direction | message |
+//! |--------|-------|-----------|---------|
+//! | `0x01` | v1    | request   | `Classify { input: bytes }` |
+//! | `0x02` | v1    | request   | `ClassifySession { session: u64, input: bytes }` |
+//! | `0x03` | v1    | request   | `LearnWay { session: u64, shots: list<bytes> }` |
+//! | `0x04` | v1    | request   | `EvictSession { session: u64 }` |
+//! | `0x05` | v1    | request   | `Health` |
+//! | `0x06` | v1    | request   | `Metrics` |
+//! | `0x07` | v2    | request   | `StreamOpen { session: u64, hop: u32 }` |
+//! | `0x08` | v2    | request   | `StreamPush { session: u64, samples: bytes }` |
+//! | `0x09` | v2    | request   | `StreamClose { session: u64 }` |
+//! | `0x81` | v1    | response  | `Reply { predicted?, logits?, learned_way?, cycles? }` |
+//! | `0x82` | v1    | response  | `Health { shards, sessions, input_len, embed_dim, window (v2), channels (v2) }` |
+//! | `0x83` | v1    | response  | `Metrics { counters..., latency percentiles }` |
+//! | `0x84` | v1    | response  | `Evicted { existed: u8 }` |
+//! | `0x85` | v2    | response  | `StreamOpened { window: u32, hop: u32 }` |
+//! | `0x86` | v2    | response  | `StreamDecisions(list<decision>)` |
+//! | `0x87` | v2    | response  | `StreamClosed { existed: u8, windows: u64 }` |
+//! | `0xFF` | v1    | response  | `Error { code: u8, message: string }` |
+//!
+//! # Versioning
+//!
+//! Every frame carries its version byte. This build encodes requests at
+//! [`VERSION`] and decodes any version from [`MIN_VERSION`] up to
+//! [`VERSION`]: v2 is a strict superset of v1, so v1 frames still decode
+//! (their `Health`/`Metrics` payloads simply lack the fields v2 appended,
+//! which decode as zero). The server replies **at the requester's
+//! version** ([`encode_response_versioned`]), omitting v2-only payload
+//! fields from v1 frames, so strict v1 clients keep working against a v2
+//! server. The stream opcodes exist only in v2 — a v1 frame carrying one
+//! is malformed.
+//!
 //! A frame whose length prefix exceeds [`MAX_FRAME`] bytes (or is too short
 //! to hold the header), whose version byte is unknown, or whose payload
 //! does not decode exactly, is *malformed*: the server answers with an
 //! `Error { code: Malformed }` frame and closes the connection. Payload
 //! decoding is strict — trailing bytes are an error — so every frame has
-//! exactly one valid byte representation (round-trip tested below).
+//! exactly one valid byte representation per version (round-trip tested
+//! below).
 
 use std::io::{Read, Write};
 
 use anyhow::{bail, Result};
 
-/// Protocol version carried in every frame header.
-pub const VERSION: u8 = 1;
+/// Highest protocol version this build speaks; every encoded frame
+/// carries it.
+pub const VERSION: u8 = 2;
+
+/// Oldest protocol version still accepted on decode.
+pub const MIN_VERSION: u8 = 1;
 
 /// Upper bound on one frame body; protects the server from hostile length
 /// prefixes (a learn frame of 64 shots x 16 kB inputs is ~1 MB, so 16 MiB
@@ -37,12 +76,18 @@ const OP_LEARN_WAY: u8 = 0x03;
 const OP_EVICT_SESSION: u8 = 0x04;
 const OP_HEALTH: u8 = 0x05;
 const OP_METRICS: u8 = 0x06;
+const OP_STREAM_OPEN: u8 = 0x07;
+const OP_STREAM_PUSH: u8 = 0x08;
+const OP_STREAM_CLOSE: u8 = 0x09;
 
 // Response opcodes.
 const OP_REPLY: u8 = 0x81;
 const OP_HEALTH_REPLY: u8 = 0x82;
 const OP_METRICS_REPLY: u8 = 0x83;
 const OP_EVICTED: u8 = 0x84;
+const OP_STREAM_OPENED: u8 = 0x85;
+const OP_STREAM_DECISIONS: u8 = 0x86;
+const OP_STREAM_CLOSED: u8 = 0x87;
 const OP_ERROR: u8 = 0xFF;
 
 /// Client -> server messages.
@@ -60,6 +105,15 @@ pub enum WireRequest {
     Health,
     /// Aggregated serving metrics across all shards.
     Metrics,
+    /// v2: open (or reset) an incremental stream on a session. The window
+    /// is the model's `seq_len`; `hop` is the decision stride in
+    /// timesteps.
+    StreamOpen { session: u64, hop: u32 },
+    /// v2: push a chunk of u4 samples into a session's open stream;
+    /// answered by `StreamDecisions` with zero or more per-window results.
+    StreamPush { session: u64, samples: Vec<u8> },
+    /// v2: close a session's stream (its learned head survives).
+    StreamClose { session: u64 },
 }
 
 /// Server -> client messages.
@@ -69,7 +123,25 @@ pub enum WireResponse {
     Health(HealthWire),
     Metrics(MetricsWire),
     Evicted { existed: bool },
+    /// v2: stream accepted; echoes the window length and hop (timesteps).
+    StreamOpened { window: u32, hop: u32 },
+    /// v2: per-window decisions completed by a `StreamPush` (often empty).
+    StreamDecisions(Vec<WireDecision>),
+    /// v2: stream closed; whether one existed and how many windows it
+    /// emitted over its lifetime.
+    StreamClosed { existed: bool, windows: u64 },
     Error { code: ErrorCode, message: String },
+}
+
+/// One per-window classification decision on the wire.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireDecision {
+    /// 0-based window index within the stream.
+    pub window: u64,
+    /// Absolute 0-based timestep of the window's last sample.
+    pub end_t: u64,
+    pub predicted: u64,
+    pub logits: Vec<i32>,
 }
 
 /// Mirror of [`crate::coordinator::Response`] on the wire.
@@ -90,6 +162,10 @@ pub struct HealthWire {
     /// Flat input length (`seq_len * in_channels`) a request must carry.
     pub input_len: u32,
     pub embed_dim: u32,
+    /// v2: model window length in timesteps (`seq_len`); 0 from a v1 peer.
+    pub window: u32,
+    /// v2: input channels per timestep; 0 from a v1 peer.
+    pub channels: u32,
 }
 
 /// Aggregated metrics payload (counters summed across shards, percentiles
@@ -103,6 +179,10 @@ pub struct MetricsWire {
     pub learn_ways: u64,
     pub evictions: u64,
     pub sim_cycles: u64,
+    /// v2: stream chunks accepted; 0 from a v1 peer.
+    pub stream_chunks: u64,
+    /// v2: per-window stream decisions emitted; 0 from a v1 peer.
+    pub stream_decisions: u64,
     pub mean_latency_us: f64,
     pub p50_latency_us: f64,
     pub p95_latency_us: f64,
@@ -119,6 +199,8 @@ impl From<&crate::coordinator::metrics::MetricsSnapshot> for MetricsWire {
             learn_ways: s.learn_ways,
             evictions: s.evictions,
             sim_cycles: s.sim_cycles,
+            stream_chunks: s.stream_chunks,
+            stream_decisions: s.stream_decisions,
             mean_latency_us: s.mean_latency_us,
             p50_latency_us: s.p50_latency_us,
             p95_latency_us: s.p95_latency_us,
@@ -134,6 +216,7 @@ impl MetricsWire {
     pub fn report(&self) -> String {
         format!(
             "requests={} completed={} errors={} rejected={} learned_ways={} evictions={} \
+             stream_chunks={} stream_decisions={} \
              latency mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us sim_cycles={}",
             self.requests,
             self.completed,
@@ -141,6 +224,8 @@ impl MetricsWire {
             self.rejected,
             self.learn_ways,
             self.evictions,
+            self.stream_chunks,
+            self.stream_decisions,
             self.mean_latency_us,
             self.p50_latency_us,
             self.p95_latency_us,
@@ -260,13 +345,46 @@ pub fn encode_request(req: &WireRequest) -> Vec<u8> {
         }
         WireRequest::Health => body(OP_HEALTH),
         WireRequest::Metrics => body(OP_METRICS),
+        WireRequest::StreamOpen { session, hop } => {
+            let mut b = body(OP_STREAM_OPEN);
+            put_u64(&mut b, *session);
+            put_u32(&mut b, *hop);
+            b
+        }
+        WireRequest::StreamPush { session, samples } => {
+            let mut b = body(OP_STREAM_PUSH);
+            put_u64(&mut b, *session);
+            put_bytes(&mut b, samples);
+            b
+        }
+        WireRequest::StreamClose { session } => {
+            let mut b = body(OP_STREAM_CLOSE);
+            put_u64(&mut b, *session);
+            b
+        }
     };
     prepend_len(&mut b);
     b
 }
 
-/// Encode a response as a full frame (length prefix included).
+/// Encode a response as a full frame (length prefix included) at the
+/// current [`VERSION`].
 pub fn encode_response(resp: &WireResponse) -> Vec<u8> {
+    encode_response_versioned(resp, VERSION)
+}
+
+/// Encode a response at the *requester's* protocol version, so a strict
+/// v1 peer can decode the reply: the fields v2 appended to `Health` and
+/// `Metrics` are omitted from a v1 frame. Stream responses only ever
+/// answer v2 requests and are always stamped v2. Out-of-range versions
+/// clamp into the supported range.
+pub fn encode_response_versioned(resp: &WireResponse, version: u8) -> Vec<u8> {
+    let v = match resp {
+        WireResponse::StreamOpened { .. }
+        | WireResponse::StreamDecisions(_)
+        | WireResponse::StreamClosed { .. } => VERSION,
+        _ => version.clamp(MIN_VERSION, VERSION),
+    };
     let mut b = match resp {
         WireResponse::Reply(r) => {
             let mut b = body(OP_REPLY);
@@ -282,24 +400,58 @@ pub fn encode_response(resp: &WireResponse) -> Vec<u8> {
             put_u64(&mut b, h.live_sessions);
             put_u32(&mut b, h.input_len);
             put_u32(&mut b, h.embed_dim);
+            if v >= 2 {
+                put_u32(&mut b, h.window);
+                put_u32(&mut b, h.channels);
+            }
             b
         }
         WireResponse::Metrics(m) => {
             let mut b = body(OP_METRICS_REPLY);
-            for v in [
+            for c in [
                 m.requests, m.completed, m.errors, m.rejected,
                 m.learn_ways, m.evictions, m.sim_cycles,
             ] {
-                put_u64(&mut b, v);
+                put_u64(&mut b, c);
             }
-            for v in [m.mean_latency_us, m.p50_latency_us, m.p95_latency_us, m.p99_latency_us] {
-                put_f64(&mut b, v);
+            if v >= 2 {
+                put_u64(&mut b, m.stream_chunks);
+                put_u64(&mut b, m.stream_decisions);
+            }
+            for c in [m.mean_latency_us, m.p50_latency_us, m.p95_latency_us, m.p99_latency_us] {
+                put_f64(&mut b, c);
             }
             b
         }
         WireResponse::Evicted { existed } => {
             let mut b = body(OP_EVICTED);
             b.push(u8::from(*existed));
+            b
+        }
+        WireResponse::StreamOpened { window, hop } => {
+            let mut b = body(OP_STREAM_OPENED);
+            put_u32(&mut b, *window);
+            put_u32(&mut b, *hop);
+            b
+        }
+        WireResponse::StreamDecisions(ds) => {
+            let mut b = body(OP_STREAM_DECISIONS);
+            put_u32(&mut b, ds.len() as u32);
+            for d in ds {
+                put_u64(&mut b, d.window);
+                put_u64(&mut b, d.end_t);
+                put_u64(&mut b, d.predicted);
+                put_u32(&mut b, d.logits.len() as u32);
+                for x in &d.logits {
+                    b.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            b
+        }
+        WireResponse::StreamClosed { existed, windows } => {
+            let mut b = body(OP_STREAM_CLOSED);
+            b.push(u8::from(*existed));
+            put_u64(&mut b, *windows);
             b
         }
         WireResponse::Error { code, message } => {
@@ -309,6 +461,7 @@ pub fn encode_response(resp: &WireResponse) -> Vec<u8> {
             b
         }
     };
+    b[0] = v; // `body()` stamps VERSION; re-stamp at the peer's version.
     prepend_len(&mut b);
     b
 }
@@ -399,19 +552,27 @@ impl<'a> Cursor<'a> {
     }
 }
 
-fn header(frame_body: &[u8]) -> Result<(u8, Cursor<'_>)> {
+fn header(frame_body: &[u8]) -> Result<(u8, u8, Cursor<'_>)> {
     let mut c = Cursor { b: frame_body, i: 0 };
     let version = c.u8()?;
-    if version != VERSION {
-        bail!("unsupported protocol version {version} (expected {VERSION})");
+    if !(MIN_VERSION..=VERSION).contains(&version) {
+        bail!("unsupported protocol version {version} (accepting {MIN_VERSION}..={VERSION})");
     }
     let opcode = c.u8()?;
-    Ok((opcode, c))
+    Ok((version, opcode, c))
+}
+
+/// The stream opcodes only exist from protocol v2 on.
+fn require_v2(version: u8, op: &str) -> Result<()> {
+    if version < 2 {
+        bail!("{op} requires protocol v2 (frame carries v{version})");
+    }
+    Ok(())
 }
 
 /// Decode a request frame body (after the length prefix).
 pub fn decode_request(frame_body: &[u8]) -> Result<WireRequest> {
-    let (opcode, mut c) = header(frame_body)?;
+    let (version, opcode, mut c) = header(frame_body)?;
     let req = match opcode {
         OP_CLASSIFY => WireRequest::Classify { input: c.bytes()? },
         OP_CLASSIFY_SESSION => {
@@ -432,6 +593,18 @@ pub fn decode_request(frame_body: &[u8]) -> Result<WireRequest> {
         OP_EVICT_SESSION => WireRequest::EvictSession { session: c.u64()? },
         OP_HEALTH => WireRequest::Health,
         OP_METRICS => WireRequest::Metrics,
+        OP_STREAM_OPEN => {
+            require_v2(version, "StreamOpen")?;
+            WireRequest::StreamOpen { session: c.u64()?, hop: c.u32()? }
+        }
+        OP_STREAM_PUSH => {
+            require_v2(version, "StreamPush")?;
+            WireRequest::StreamPush { session: c.u64()?, samples: c.bytes()? }
+        }
+        OP_STREAM_CLOSE => {
+            require_v2(version, "StreamClose")?;
+            WireRequest::StreamClose { session: c.u64()? }
+        }
         op => bail!("unknown request opcode {op:#04x}"),
     };
     c.finish()?;
@@ -440,7 +613,7 @@ pub fn decode_request(frame_body: &[u8]) -> Result<WireRequest> {
 
 /// Decode a response frame body (after the length prefix).
 pub fn decode_response(frame_body: &[u8]) -> Result<WireResponse> {
-    let (opcode, mut c) = header(frame_body)?;
+    let (version, opcode, mut c) = header(frame_body)?;
     let resp = match opcode {
         OP_REPLY => WireResponse::Reply(WireReply {
             predicted: c.opt_u64()?,
@@ -448,26 +621,75 @@ pub fn decode_response(frame_body: &[u8]) -> Result<WireResponse> {
             learned_way: c.opt_u64()?,
             sim_cycles: c.opt_u64()?,
         }),
-        OP_HEALTH_REPLY => WireResponse::Health(HealthWire {
-            shards: c.u32()?,
-            live_sessions: c.u64()?,
-            input_len: c.u32()?,
-            embed_dim: c.u32()?,
-        }),
-        OP_METRICS_REPLY => WireResponse::Metrics(MetricsWire {
-            requests: c.u64()?,
-            completed: c.u64()?,
-            errors: c.u64()?,
-            rejected: c.u64()?,
-            learn_ways: c.u64()?,
-            evictions: c.u64()?,
-            sim_cycles: c.u64()?,
-            mean_latency_us: c.f64()?,
-            p50_latency_us: c.f64()?,
-            p95_latency_us: c.f64()?,
-            p99_latency_us: c.f64()?,
-        }),
+        OP_HEALTH_REPLY => {
+            let mut h = HealthWire {
+                shards: c.u32()?,
+                live_sessions: c.u64()?,
+                input_len: c.u32()?,
+                embed_dim: c.u32()?,
+                window: 0,
+                channels: 0,
+            };
+            if version >= 2 {
+                h.window = c.u32()?;
+                h.channels = c.u32()?;
+            }
+            WireResponse::Health(h)
+        }
+        OP_METRICS_REPLY => {
+            let mut m = MetricsWire {
+                requests: c.u64()?,
+                completed: c.u64()?,
+                errors: c.u64()?,
+                rejected: c.u64()?,
+                learn_ways: c.u64()?,
+                evictions: c.u64()?,
+                sim_cycles: c.u64()?,
+                ..MetricsWire::default()
+            };
+            if version >= 2 {
+                m.stream_chunks = c.u64()?;
+                m.stream_decisions = c.u64()?;
+            }
+            m.mean_latency_us = c.f64()?;
+            m.p50_latency_us = c.f64()?;
+            m.p95_latency_us = c.f64()?;
+            m.p99_latency_us = c.f64()?;
+            WireResponse::Metrics(m)
+        }
         OP_EVICTED => WireResponse::Evicted { existed: c.u8()? != 0 },
+        OP_STREAM_OPENED => {
+            require_v2(version, "StreamOpened")?;
+            WireResponse::StreamOpened { window: c.u32()?, hop: c.u32()? }
+        }
+        OP_STREAM_DECISIONS => {
+            require_v2(version, "StreamDecisions")?;
+            let n = c.u32()? as usize;
+            // Each decision is at least 28 bytes; bound before allocating.
+            if n.saturating_mul(28) > MAX_FRAME {
+                bail!("decision list of {n} exceeds frame bound");
+            }
+            let mut ds = Vec::with_capacity(n);
+            for _ in 0..n {
+                let window = c.u64()?;
+                let end_t = c.u64()?;
+                let predicted = c.u64()?;
+                let nl = c.u32()? as usize;
+                if nl.saturating_mul(4) > MAX_FRAME {
+                    bail!("logit list of {nl} exceeds frame bound");
+                }
+                let mut logits = Vec::with_capacity(nl);
+                for _ in 0..nl {
+                    logits.push(c.i32()?);
+                }
+                ds.push(WireDecision { window, end_t, predicted, logits });
+            }
+            WireResponse::StreamDecisions(ds)
+        }
+        OP_STREAM_CLOSED => {
+            require_v2(version, "StreamClosed")?;
+            WireResponse::StreamClosed { existed: c.u8()? != 0, windows: c.u64()? }
+        }
         OP_ERROR => WireResponse::Error {
             code: ErrorCode::from_u8(c.u8()?)?,
             message: String::from_utf8_lossy(&c.bytes()?).into_owned(),
@@ -608,6 +830,14 @@ mod tests {
         rt_request(WireRequest::EvictSession { session: 1 << 63 });
         rt_request(WireRequest::Health);
         rt_request(WireRequest::Metrics);
+        rt_request(WireRequest::StreamOpen { session: 3, hop: 1 });
+        rt_request(WireRequest::StreamOpen { session: u64::MAX, hop: u32::MAX });
+        rt_request(WireRequest::StreamPush { session: 9, samples: vec![] });
+        rt_request(WireRequest::StreamPush {
+            session: 9,
+            samples: (0..200).map(|i| i % 16).collect(),
+        });
+        rt_request(WireRequest::StreamClose { session: 0 });
     }
 
     #[test]
@@ -624,6 +854,8 @@ mod tests {
             live_sessions: 123,
             input_len: 64,
             embed_dim: 8,
+            window: 16,
+            channels: 4,
         }));
         rt_response(WireResponse::Metrics(MetricsWire {
             requests: 1,
@@ -633,6 +865,8 @@ mod tests {
             learn_ways: 5,
             evictions: 6,
             sim_cycles: 7,
+            stream_chunks: 8,
+            stream_decisions: 9,
             mean_latency_us: 1.5,
             p50_latency_us: 2.5,
             p95_latency_us: 100.0,
@@ -640,10 +874,97 @@ mod tests {
         }));
         rt_response(WireResponse::Evicted { existed: true });
         rt_response(WireResponse::Evicted { existed: false });
+        rt_response(WireResponse::StreamOpened { window: 16, hop: 4 });
+        rt_response(WireResponse::StreamDecisions(vec![]));
+        rt_response(WireResponse::StreamDecisions(vec![
+            WireDecision { window: 0, end_t: 15, predicted: 3, logits: vec![1, -2, 3] },
+            WireDecision {
+                window: u64::MAX,
+                end_t: u64::MAX,
+                predicted: 0,
+                logits: vec![i32::MIN, i32::MAX],
+            },
+            WireDecision { window: 2, end_t: 23, predicted: 1, logits: vec![] },
+        ]));
+        rt_response(WireResponse::StreamClosed { existed: true, windows: 42 });
+        rt_response(WireResponse::StreamClosed { existed: false, windows: 0 });
         for code in [ErrorCode::Overloaded, ErrorCode::Malformed, ErrorCode::App] {
             rt_response(WireResponse::Error { code, message: "queue full".into() });
         }
         rt_response(WireResponse::Error { code: ErrorCode::App, message: String::new() });
+    }
+
+    #[test]
+    fn responses_downgrade_to_v1_for_v1_peers() {
+        // A v1 peer must receive a strictly v1-shaped frame: version byte
+        // 1 and no v2-appended payload fields.
+        let h = HealthWire {
+            shards: 2,
+            live_sessions: 5,
+            input_len: 64,
+            embed_dim: 8,
+            window: 16,
+            channels: 4,
+        };
+        let frame = encode_response_versioned(&WireResponse::Health(h.clone()), 1);
+        let body = &frame[4..];
+        assert_eq!(body[0], 1, "version byte must be the peer's");
+        // Strict decode (as this crate's v1 shipped): exactly 2 + 4 + 8 +
+        // 4 + 4 bytes, no trailing window/channels.
+        assert_eq!(body.len(), 2 + 4 + 8 + 4 + 4);
+        match decode_response(body).unwrap() {
+            WireResponse::Health(got) => {
+                assert_eq!(got.shards, h.shards);
+                assert_eq!(got.window, 0, "v2 fields dropped at v1");
+                assert_eq!(got.channels, 0);
+            }
+            other => panic!("expected Health, got {other:?}"),
+        }
+        // Metrics likewise lose only the stream counters.
+        let m = MetricsWire { stream_chunks: 7, stream_decisions: 9, ..MetricsWire::default() };
+        let frame = encode_response_versioned(&WireResponse::Metrics(m), 1);
+        match decode_response(&frame[4..]).unwrap() {
+            WireResponse::Metrics(got) => {
+                assert_eq!(got.stream_chunks, 0);
+                assert_eq!(got.stream_decisions, 0);
+            }
+            other => panic!("expected Metrics, got {other:?}"),
+        }
+        // Stream responses cannot be downgraded; they stay v2.
+        let frame =
+            encode_response_versioned(&WireResponse::StreamOpened { window: 16, hop: 4 }, 1);
+        assert_eq!(frame[4], VERSION);
+        // Out-of-range versions clamp instead of producing junk frames.
+        let frame = encode_response_versioned(&WireResponse::Evicted { existed: true }, 9);
+        assert_eq!(frame[4], VERSION);
+    }
+
+    #[test]
+    fn v1_frames_still_decode_but_not_stream_ops() {
+        // A v1 Health request decodes fine.
+        assert_eq!(decode_request(&[1, OP_HEALTH]).unwrap(), WireRequest::Health);
+        // A v1 Health *reply* decodes with the v2 geometry fields zeroed.
+        let mut body = vec![1u8, OP_HEALTH_REPLY];
+        put_u32(&mut body, 2); // shards
+        put_u64(&mut body, 5); // live_sessions
+        put_u32(&mut body, 64); // input_len
+        put_u32(&mut body, 8); // embed_dim
+        match decode_response(&body).unwrap() {
+            WireResponse::Health(h) => {
+                assert_eq!(h.shards, 2);
+                assert_eq!(h.window, 0, "v1 reply lacks stream geometry");
+                assert_eq!(h.channels, 0);
+            }
+            other => panic!("expected Health, got {other:?}"),
+        }
+        // Stream ops inside a v1 frame are malformed.
+        let mut body = vec![1u8, OP_STREAM_CLOSE];
+        put_u64(&mut body, 7);
+        assert!(decode_request(&body).is_err(), "v1 frame must not carry stream ops");
+        let mut body = vec![1u8, OP_STREAM_OPEN];
+        put_u64(&mut body, 7);
+        put_u32(&mut body, 1);
+        assert!(decode_request(&body).is_err());
     }
 
     #[test]

@@ -26,7 +26,7 @@ use crate::coordinator::server::{
     Coordinator, CoordinatorConfig, EngineFactory, Request, SubmitError,
 };
 use crate::serve::proto::{
-    self, ErrorCode, HealthWire, MetricsWire, WireReply, WireRequest, WireResponse,
+    self, ErrorCode, HealthWire, MetricsWire, WireDecision, WireReply, WireRequest, WireResponse,
 };
 
 /// Serving configuration.
@@ -231,6 +231,9 @@ fn serve_connection(stream: TcpStream, state: &ServerState) -> Result<()> {
                 return Ok(());
             }
         };
+        // Reply at the requester's protocol version (first body byte), so
+        // v1 peers receive frames they can decode.
+        let peer_version = blob.first().copied().unwrap_or(proto::VERSION);
         let resp = match proto::decode_request(&blob) {
             Ok(req) => handle_request(req, state),
             Err(e) => {
@@ -240,11 +243,14 @@ fn serve_connection(stream: TcpStream, state: &ServerState) -> Result<()> {
                     code: ErrorCode::Malformed,
                     message: format!("{e:#}"),
                 };
-                let _ = proto::write_frame(&mut writer, &proto::encode_response(&resp));
+                let _ = proto::write_frame(
+                    &mut writer,
+                    &proto::encode_response_versioned(&resp, peer_version),
+                );
                 return Ok(());
             }
         };
-        proto::write_frame(&mut writer, &proto::encode_response(&resp))?;
+        proto::write_frame(&mut writer, &proto::encode_response_versioned(&resp, peer_version))?;
     }
 }
 
@@ -293,10 +299,42 @@ fn handle_request(req: WireRequest, state: &ServerState) -> WireResponse {
                 live_sessions: sessions,
                 input_len: state.shards[0].input_len() as u32,
                 embed_dim: state.shards[0].embed_dim() as u32,
+                window: state.shards[0].seq_len() as u32,
+                channels: state.shards[0].in_channels() as u32,
             })
         }
         WireRequest::Metrics => {
             WireResponse::Metrics(MetricsWire::from(&aggregate(&state.shards)))
+        }
+        // Stream ops are session-scoped: same stable hash routing, so a
+        // stream's state lives on exactly one shard no matter which
+        // connection pushes into it.
+        WireRequest::StreamOpen { session, hop } => {
+            let shard = shard_of(session, n);
+            let (rtx, rrx) = mpsc::channel();
+            dispatch(
+                &state.shards[shard],
+                Request::StreamOpen { session, hop: hop as usize, reply: rtx },
+                rrx,
+            )
+        }
+        WireRequest::StreamPush { session, samples } => {
+            let shard = shard_of(session, n);
+            let (rtx, rrx) = mpsc::channel();
+            dispatch(
+                &state.shards[shard],
+                Request::StreamPush { session, samples, reply: rtx },
+                rrx,
+            )
+        }
+        WireRequest::StreamClose { session } => {
+            let shard = shard_of(session, n);
+            let (rtx, rrx) = mpsc::channel();
+            dispatch(
+                &state.shards[shard],
+                Request::StreamClose { session, reply: rtx },
+                rrx,
+            )
         }
     }
 }
@@ -327,6 +365,21 @@ fn dispatch(
         Ok(Ok(resp)) => {
             if let Some(existed) = resp.evicted {
                 WireResponse::Evicted { existed }
+            } else if let Some(info) = resp.stream {
+                WireResponse::StreamOpened { window: info.window as u32, hop: info.hop as u32 }
+            } else if let Some(ds) = resp.decisions {
+                WireResponse::StreamDecisions(
+                    ds.into_iter()
+                        .map(|d| WireDecision {
+                            window: d.window,
+                            end_t: d.end_t,
+                            predicted: d.predicted as u64,
+                            logits: d.logits,
+                        })
+                        .collect(),
+                )
+            } else if let Some((existed, windows)) = resp.stream_closed {
+                WireResponse::StreamClosed { existed, windows }
             } else {
                 WireResponse::Reply(WireReply {
                     predicted: resp.predicted.map(|p| p as u64),

@@ -2,7 +2,10 @@
 //! real TCP socket into sharded coordinators running the built-in demo
 //! model (no artifacts needed) — classify, learn-then-classify-session,
 //! backpressure/`Overloaded`, malformed-frame rejection, cross-shard
-//! session affinity, eviction, and a short zero-protocol-error loadgen run.
+//! session affinity, eviction, incremental stream sessions
+//! (open -> push -> decisions -> close, mid-stream eviction, malformed
+//! stream ops), and short zero-protocol-error loadgen runs in both
+//! request and streaming mode.
 
 use std::net::TcpStream;
 use std::sync::Arc;
@@ -10,8 +13,9 @@ use std::time::Duration;
 
 use chameleon::coordinator::server::EngineFactory;
 use chameleon::coordinator::Engine;
-use chameleon::model::{demo_tiny_kws, QuantModel};
-use chameleon::serve::loadgen::{self, LoadgenConfig};
+use chameleon::golden;
+use chameleon::model::{demo_tiny, demo_tiny_kws, QuantModel};
+use chameleon::serve::loadgen::{self, LoadgenConfig, StreamLoadConfig};
 use chameleon::serve::proto::{self, ErrorCode, WireRequest, WireResponse};
 use chameleon::serve::{shard_of, Client, ServeConfig, Server};
 use chameleon::sim::{ArrayMode, OperatingPoint};
@@ -308,6 +312,246 @@ fn lru_cap_bounds_session_memory() {
     // The most recent session survives; the oldest was evicted.
     assert!(client.classify_session(10, rand_input(&model, &mut rng, 0, 16)).is_ok());
     assert!(client.classify_session(1, rand_input(&model, &mut rng, 0, 16)).is_err());
+    server.shutdown();
+}
+
+#[test]
+fn stream_over_wire_matches_batch_forward() {
+    let (server, model) = golden_server(2, 2);
+    let mut client = Client::connect(server.local_addr().to_string()).unwrap();
+
+    // v2 health reports the stream geometry.
+    let health = client.health().unwrap();
+    assert_eq!(health.window as usize, model.seq_len);
+    assert_eq!(health.channels as usize, model.in_channels);
+
+    let hop = 4usize;
+    let (window, hop_echo) = client.stream_open(9, hop as u32).unwrap();
+    assert_eq!(window as usize, model.seq_len);
+    assert_eq!(hop_echo as usize, hop);
+
+    let mut rng = Rng::new(21);
+    let t_total = model.seq_len + 5 * hop;
+    let stream: Vec<u8> = (0..t_total * model.in_channels)
+        .map(|_| rng.range(0, 16) as u8)
+        .collect();
+    // Ragged pushes, including partial timesteps.
+    let mut decisions = Vec::new();
+    for part in stream.chunks(7) {
+        decisions.extend(client.stream_push(9, part.to_vec()).unwrap());
+    }
+    assert_eq!(decisions.len(), 6, "one decision per complete window");
+    for (n, d) in decisions.iter().enumerate() {
+        assert_eq!(d.window, n as u64);
+        let start = n * hop;
+        assert_eq!(d.end_t, (start + model.seq_len - 1) as u64);
+        let w = &stream[start * model.in_channels..(start + model.seq_len) * model.in_channels];
+        let (_, logits) = golden::forward(&model, w).unwrap();
+        assert_eq!(Some(&d.logits), logits.as_ref(), "window {n}: bit-exact logits");
+        assert_eq!(d.predicted, golden::argmax(&d.logits) as u64);
+    }
+
+    let (existed, windows) = client.stream_close(9).unwrap();
+    assert!(existed);
+    assert_eq!(windows, 6);
+    assert_eq!(client.stream_close(9).unwrap(), (false, 0), "double close");
+    // Pushing after close is an application error; the connection survives.
+    match client
+        .call(&WireRequest::StreamPush { session: 9, samples: vec![1, 2, 3, 4] })
+        .unwrap()
+    {
+        WireResponse::Error { code: ErrorCode::App, message } => {
+            assert!(message.contains("stream"), "{message}");
+        }
+        other => panic!("expected App error after close, got {other:?}"),
+    }
+    let metrics = client.metrics().unwrap();
+    assert_eq!(metrics.stream_decisions, 6, "{}", metrics.report());
+    assert!(metrics.stream_chunks > 0);
+    server.shutdown();
+}
+
+#[test]
+fn headless_stream_follows_session_affinity() {
+    // Headless model: stream decisions use the session's learned head, and
+    // any connection can push into the stream (hash routing, not
+    // connection state).
+    let model = Arc::new(demo_tiny());
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        shards: 3,
+        workers_per_shard: 1,
+        ..Default::default()
+    };
+    let m = model.clone();
+    let server = Server::start(cfg, move |_s, _w| {
+        let m = m.clone();
+        Box::new(move || Ok(Engine::golden(m))) as EngineFactory
+    })
+    .unwrap();
+    let addr = server.local_addr().to_string();
+
+    let mut rng = Rng::new(23);
+    let rand_in = |rng: &mut Rng, lo: u8, hi: u8| -> Vec<u8> {
+        (0..model.seq_len * model.in_channels)
+            .map(|_| rng.range(lo as i64, hi as i64) as u8)
+            .collect()
+    };
+    let mut conn_a = Client::connect(addr.clone()).unwrap();
+    let a: Vec<Vec<u8>> = (0..3).map(|_| rand_in(&mut rng, 0, 3)).collect();
+    let b: Vec<Vec<u8>> = (0..3).map(|_| rand_in(&mut rng, 13, 16)).collect();
+    conn_a.learn_way(5, a).unwrap();
+    conn_a.learn_way(5, b).unwrap();
+    conn_a.stream_open(5, model.seq_len as u32).unwrap();
+
+    // A different connection pushes and sees head-based decisions.
+    let mut conn_b = Client::connect(addr).unwrap();
+    let w0 = rand_in(&mut rng, 0, 3);
+    let ds = conn_b.stream_push(5, w0.clone()).unwrap();
+    assert_eq!(ds.len(), 1);
+    assert_eq!(ds[0].predicted, 0, "way-0-like window");
+    let want = conn_b.classify_session(5, w0).unwrap();
+    assert_eq!(Some(ds[0].predicted), want.predicted);
+    assert_eq!(Some(&ds[0].logits), want.logits.as_ref());
+    let w1 = rand_in(&mut rng, 13, 16);
+    let ds = conn_b.stream_push(5, w1).unwrap();
+    assert_eq!(ds[0].predicted, 1, "way-1-like window");
+    server.shutdown();
+}
+
+#[test]
+fn mid_stream_eviction_kills_the_stream() {
+    // One shard with a 2-session LRU cap: opening a stream then creating
+    // two more sessions evicts the stream's session; the next push fails
+    // as an application error while the connection stays healthy.
+    let model = Arc::new(demo_tiny_kws());
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        shards: 1,
+        workers_per_shard: 1,
+        max_sessions: 2,
+        ..Default::default()
+    };
+    let m = model.clone();
+    let server = Server::start(cfg, move |_s, _w| {
+        let m = m.clone();
+        Box::new(move || Ok(Engine::golden(m))) as EngineFactory
+    })
+    .unwrap();
+    let mut client = Client::connect(server.local_addr().to_string()).unwrap();
+    let mut rng = Rng::new(29);
+    let input = |rng: &mut Rng| -> Vec<u8> {
+        (0..model.seq_len * model.in_channels)
+            .map(|_| rng.range(0, 16) as u8)
+            .collect()
+    };
+
+    client.stream_open(1, 4).unwrap();
+    assert!(client.stream_push(1, input(&mut rng)[..8].to_vec()).is_ok());
+    client.learn_way(2, vec![input(&mut rng)]).unwrap();
+    client.learn_way(3, vec![input(&mut rng)]).unwrap(); // evicts session 1 (LRU)
+    match client
+        .call(&WireRequest::StreamPush { session: 1, samples: input(&mut rng) })
+        .unwrap()
+    {
+        WireResponse::Error { code: ErrorCode::App, message } => {
+            assert!(message.contains("stream"), "{message}");
+        }
+        other => panic!("expected App error after eviction, got {other:?}"),
+    }
+    let metrics = client.metrics().unwrap();
+    assert!(metrics.evictions >= 1, "{}", metrics.report());
+    // The connection (and the server) survive; a fresh stream works.
+    client.stream_open(1, 4).unwrap();
+    assert!(client.stream_push(1, input(&mut rng)).is_ok());
+    server.shutdown();
+}
+
+#[test]
+fn malformed_stream_ops_are_rejected() {
+    let (server, _model) = golden_server(1, 1);
+    let addr = server.local_addr();
+
+    // A v1 frame carrying a v2 stream opcode is malformed.
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut body = vec![1u8, 0x09]; // v1, StreamClose
+        body.extend_from_slice(&7u64.to_le_bytes());
+        let mut frame = (body.len() as u32).to_le_bytes().to_vec();
+        frame.extend_from_slice(&body);
+        proto::write_frame(&mut s, &frame).unwrap();
+        let blob = proto::read_frame(&mut s).unwrap().expect("error frame expected");
+        match proto::decode_response(&blob).unwrap() {
+            WireResponse::Error { code: ErrorCode::Malformed, message } => {
+                assert!(message.contains("v2"), "{message}");
+            }
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+        assert!(proto::read_frame(&mut s).unwrap().is_none(), "connection closed");
+    }
+
+    // Truncated StreamPush payload.
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let body = [proto::VERSION, 0x08, 5, 0, 0]; // session cut short
+        let mut frame = (body.len() as u32).to_le_bytes().to_vec();
+        frame.extend_from_slice(&body);
+        proto::write_frame(&mut s, &frame).unwrap();
+        let blob = proto::read_frame(&mut s).unwrap().expect("error frame expected");
+        match proto::decode_response(&blob).unwrap() {
+            WireResponse::Error { code: ErrorCode::Malformed, .. } => {}
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+    }
+
+    // Well-formed but invalid stream parameters are App errors, not
+    // protocol errors: hop 0, push without open, non-u4 samples.
+    let mut client = Client::connect(addr.to_string()).unwrap();
+    for req in [
+        WireRequest::StreamOpen { session: 2, hop: 0 },
+        WireRequest::StreamPush { session: 2, samples: vec![1, 2, 3] },
+    ] {
+        match client.call(&req).unwrap() {
+            WireResponse::Error { code: ErrorCode::App, .. } => {}
+            other => panic!("expected App error for {req:?}, got {other:?}"),
+        }
+    }
+    client.stream_open(2, 1).unwrap();
+    match client
+        .call(&WireRequest::StreamPush { session: 2, samples: vec![200] })
+        .unwrap()
+    {
+        WireResponse::Error { code: ErrorCode::App, message } => {
+            assert!(message.contains("u4"), "{message}");
+        }
+        other => panic!("expected App error for non-u4 samples, got {other:?}"),
+    }
+    server.shutdown();
+}
+
+#[test]
+fn stream_loadgen_loopback_has_zero_protocol_errors() {
+    let (server, model) = golden_server(2, 2);
+    let cfg = StreamLoadConfig {
+        addr: server.local_addr().to_string(),
+        connections: 3,
+        duration: Duration::from_millis(800),
+        chunk: 8,
+        hop: 4,
+        pace_hz: 0.0, // free-running over loopback
+        seed: 17,
+    };
+    let report = loadgen::run_stream(&cfg).expect("stream loadgen runs");
+    assert_eq!(report.protocol_errors, 0, "{}", report.report());
+    assert_eq!(report.app_errors, 0, "{}", report.report());
+    assert_eq!(report.window, model.seq_len);
+    assert_eq!(report.hop, 4);
+    assert!(report.ok > 0, "{}", report.report());
+    assert!(report.decisions > 0, "{}", report.report());
+    assert_eq!(report.chunk_latency.count, report.ok + report.overloaded);
+    assert_eq!(report.decision_latency.count, report.decisions);
+    let srv = report.server.as_ref().expect("server metrics fetched");
+    assert_eq!(srv.stream_decisions, report.decisions, "{}", srv.report());
     server.shutdown();
 }
 

@@ -1,0 +1,243 @@
+//! Property tests pinning the streaming executor to the batch oracle:
+//! `golden::StreamingState` fed randomized chunk splits must produce
+//! embeddings and logits **bit-identical** to `golden::forward` on every
+//! complete window — across random kernel sizes, dilations, channel
+//! widths, residual variants (identity and 1x1 re-quantizing conv), hops,
+//! and the saturating-slab edge cases where accumulation order matters
+//! (`saturation_slab_order_matters` in `golden/mod.rs`).
+
+use std::sync::Arc;
+
+use chameleon::golden::{self, StreamingState};
+use chameleon::model::{QLayer, QuantModel};
+use chameleon::util::prop;
+use chameleon::util::rng::Rng;
+use chameleon::{prop_assert, prop_assert_eq};
+
+fn rand_codes(rng: &mut Rng, n: usize) -> Vec<i8> {
+    (0..n).map(|_| rng.range(-8, 8) as i8).collect()
+}
+
+fn rand_conv(
+    rng: &mut Rng,
+    k: usize,
+    cin: usize,
+    cout: usize,
+    d: usize,
+    res: Option<i32>,
+) -> QLayer {
+    QLayer {
+        codes: rand_codes(rng, k * cin * cout),
+        codes_shape: vec![k, cin, cout],
+        bias: (0..cout).map(|_| rng.range(-8192, 8192) as i32).collect(),
+        out_shift: rng.range(0, 7) as i32,
+        dilation: d,
+        relu: true,
+        res_shift: res,
+        res_codes: None,
+        res_codes_shape: None,
+        res_bias: None,
+        res_out_shift: None,
+    }
+}
+
+/// Random TCN respecting the block grammar the golden forward expects:
+/// two conv layers per block, residual merge on the second (identity when
+/// the width is unchanged, 1x1 conv otherwise or at random), plus embed
+/// FC and — half the time — a classifier head. `seq_len` is drawn at or
+/// above the receptive field (the streaming precondition).
+fn rand_model(rng: &mut Rng) -> QuantModel {
+    let blocks = rng.range(1, 4) as usize;
+    let k = rng.range(1, 5) as usize;
+    let in_ch = rng.range(1, 6) as usize;
+    let mut channels = Vec::new();
+    let mut layers = Vec::new();
+    let mut cin = in_ch;
+    for _ in 0..blocks {
+        let ch = rng.range(1, 8) as usize;
+        let d1 = 1usize << rng.range(0, 3);
+        let d2 = 1usize << rng.range(0, 3);
+        layers.push(rand_conv(rng, k, cin, ch, d1, None));
+        let mut l2 = rand_conv(rng, k, ch, ch, d2, Some(rng.range(-3, 5) as i32));
+        if cin != ch || rng.below(3) == 0 {
+            l2.res_codes = Some(rand_codes(rng, cin * ch));
+            l2.res_codes_shape = Some(vec![1, cin, ch]);
+            l2.res_bias = Some((0..ch).map(|_| rng.range(-512, 512) as i32).collect());
+            l2.res_out_shift = Some(rng.range(0, 5) as i32);
+        }
+        layers.push(l2);
+        channels.push(ch);
+        cin = ch;
+    }
+    let embed_dim = rng.range(1, 9) as usize;
+    let embed = QLayer {
+        codes: rand_codes(rng, cin * embed_dim),
+        codes_shape: vec![cin, embed_dim],
+        bias: (0..embed_dim).map(|_| rng.range(-256, 256) as i32).collect(),
+        out_shift: rng.range(0, 6) as i32,
+        dilation: 1,
+        relu: true,
+        res_shift: None,
+        res_codes: None,
+        res_codes_shape: None,
+        res_bias: None,
+        res_out_shift: None,
+    };
+    let head = if rng.below(2) == 0 {
+        let classes = rng.range(2, 7) as usize;
+        Some(QLayer {
+            codes: rand_codes(rng, embed_dim * classes),
+            codes_shape: vec![embed_dim, classes],
+            bias: (0..classes).map(|_| rng.range(-256, 256) as i32).collect(),
+            out_shift: 0,
+            dilation: 1,
+            relu: false,
+            res_shift: None,
+            res_codes: None,
+            res_codes_shape: None,
+            res_bias: None,
+            res_out_shift: None,
+        })
+    } else {
+        None
+    };
+    let mut m = QuantModel {
+        name: "prop".into(),
+        in_channels: in_ch,
+        seq_len: 0,
+        channels,
+        kernel_size: k,
+        embed_dim,
+        n_classes: head.as_ref().map(|h| h.c_out()),
+        in_shift: 0,
+        embed_shift: 0,
+        layers,
+        embed,
+        head,
+    };
+    m.seq_len = m.receptive_field() + rng.range(0, 6) as usize;
+    m
+}
+
+/// Check one stream against the batch oracle: random chunk splits, every
+/// emitted window compared bit-for-bit.
+fn check_stream(
+    rng: &mut Rng,
+    m: &Arc<QuantModel>,
+    hop: usize,
+    stream: &[u8],
+) -> Result<(), String> {
+    let cin = m.in_channels;
+    let t_total = stream.len() / cin;
+    let mut s = StreamingState::new(m.clone(), hop).map_err(|e| e.to_string())?;
+    let mut outs = Vec::new();
+    let mut i = 0;
+    while i < stream.len() {
+        // Ragged chunks, frequently not multiples of the channel count.
+        let n = (1 + rng.below(41) as usize).min(stream.len() - i);
+        outs.extend(s.push(&stream[i..i + n]).map_err(|e| e.to_string())?);
+        i += n;
+    }
+    let expect = if t_total >= m.seq_len { (t_total - m.seq_len) / hop + 1 } else { 0 };
+    prop_assert_eq!(outs.len(), expect);
+    for (n, out) in outs.iter().enumerate() {
+        prop_assert_eq!(out.window, n as u64);
+        let start = n * hop;
+        prop_assert_eq!(out.end_t, (start + m.seq_len - 1) as u64);
+        let w = &stream[start * cin..(start + m.seq_len) * cin];
+        let (emb, logits) = golden::forward(m, w).map_err(|e| e.to_string())?;
+        prop_assert_eq!(&out.embedding, &emb);
+        prop_assert_eq!(&out.logits, &logits);
+        prop_assert!(out.embedding.iter().all(|&v| v <= 15), "non-u4 embedding");
+    }
+    Ok(())
+}
+
+#[test]
+fn streaming_is_bit_identical_to_batch_windows() {
+    prop::check(60, 0x57EA_0001, |rng| {
+        let m = Arc::new(rand_model(rng));
+        let hop = rng.range(1, m.seq_len as i64 + 1) as usize;
+        let n_windows = rng.range(1, 5) as usize;
+        let t_total = m.seq_len + (n_windows - 1) * hop + rng.range(0, hop as i64) as usize;
+        let stream: Vec<u8> =
+            (0..t_total * m.in_channels).map(|_| rng.range(0, 16) as u8).collect();
+        check_stream(rng, &m, hop, &stream)
+    });
+}
+
+#[test]
+fn streaming_matches_under_saturation_pressure() {
+    // Extreme codes and activations so the 18-bit accumulator saturates
+    // inside windows: any slab-order divergence between the incremental
+    // and batch paths shows up immediately.
+    prop::check(40, 0x57EA_0002, |rng| {
+        let mut m = rand_model(rng);
+        for l in &mut m.layers {
+            for c in &mut l.codes {
+                *c = if rng.below(2) == 0 { 7 } else { -8 };
+            }
+        }
+        let m = Arc::new(m);
+        let hop = rng.range(1, m.seq_len as i64 + 1) as usize;
+        let t_total = m.seq_len + 2 * hop;
+        // Near-max activations to drive the accumulators into the rails.
+        let stream: Vec<u8> =
+            (0..t_total * m.in_channels).map(|_| rng.range(12, 16) as u8).collect();
+        check_stream(rng, &m, hop, &stream)
+    });
+}
+
+#[test]
+fn saturating_slab_order_is_reproduced() {
+    // The `saturation_slab_order_matters` construction from golden/mod.rs,
+    // streamed: 9 all-max 16-element slabs per output, saturating the
+    // 18-bit accumulator — the streaming path must agree bit-for-bit.
+    let cin = 16 * 9;
+    let ch = 4;
+    let mk = |codes_val: i8, cout: usize, cin: usize| QLayer {
+        codes: vec![codes_val; cin * cout],
+        codes_shape: vec![1, cin, cout],
+        bias: vec![0; cout],
+        out_shift: 6,
+        dilation: 1,
+        relu: true,
+        res_shift: None,
+        res_codes: None,
+        res_codes_shape: None,
+        res_bias: None,
+        res_out_shift: None,
+    };
+    let l1 = mk(7, ch, cin);
+    let mut l2 = mk(7, ch, ch);
+    l2.res_shift = Some(0);
+    l2.res_codes = Some(vec![7; cin * ch]);
+    l2.res_codes_shape = Some(vec![1, cin, ch]);
+    l2.res_bias = Some(vec![0; ch]);
+    l2.res_out_shift = Some(6);
+    let m = Arc::new(QuantModel {
+        name: "sat".into(),
+        in_channels: cin,
+        seq_len: 2,
+        channels: vec![ch],
+        kernel_size: 1,
+        embed_dim: 2,
+        n_classes: None,
+        in_shift: 0,
+        embed_shift: 0,
+        layers: vec![l1, l2],
+        embed: mk(7, 2, ch),
+        head: None,
+    });
+    assert!(m.receptive_field() <= m.seq_len);
+    let t_total = 6usize;
+    let stream = vec![15u8; t_total * cin];
+    let mut s = StreamingState::new(m.clone(), 1).unwrap();
+    let outs = s.push(&stream).unwrap();
+    assert_eq!(outs.len(), t_total - m.seq_len + 1);
+    for (n, out) in outs.iter().enumerate() {
+        let w = &stream[n * cin..(n + m.seq_len) * cin];
+        let (emb, _) = golden::forward(&m, w).unwrap();
+        assert_eq!(out.embedding, emb, "window {n}");
+    }
+}
