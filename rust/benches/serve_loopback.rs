@@ -1,26 +1,46 @@
 //! Serving-layer throughput/latency sweep over loopback: the built-in demo
 //! model behind the sharded TCP server, driven by the open-loop Poisson
-//! load generator at increasing offered rates. Reports achieved
-//! throughput and p50/p95/p99 latency per rate — the serving counterpart
-//! of `perf_hotpath` (which measures the in-process coordinator).
+//! load generator at increasing offered rates, followed by the protocol-v3
+//! **single-connection pipelining comparison** — the acceptance bench for
+//! v3: one connection running sequential (v2-style) classify vs. the same
+//! requests pipelined (`submit`/`wait`, tagged frames) vs. `ClassifyBatch`
+//! frames. Responses are asserted bit-identical across all three modes,
+//! and the pipelined path must clear >= 2x the sequential throughput.
 //!
-//! `CHAMELEON_LOADGEN_SECS` overrides the per-point duration (default 2 s).
+//! `CHAMELEON_LOADGEN_SECS` overrides the per-point sweep duration
+//! (default 2 s); `CHAMELEON_PIPE_REQS` the comparison request count
+//! (default 512).
 
+use std::collections::VecDeque;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use chameleon::coordinator::server::EngineFactory;
 use chameleon::coordinator::Engine;
 use chameleon::model::demo_tiny_kws;
 use chameleon::serve::loadgen::{self, LoadgenConfig};
-use chameleon::serve::{ServeConfig, Server};
+use chameleon::serve::{
+    BatchItem, Client, ClientConfig, ServeConfig, Server, WireReply, WireRequest, WireResponse,
+};
 use chameleon::util::bench::Table;
+use chameleon::util::rng::Rng;
+
+fn expect_reply(resp: WireResponse) -> anyhow::Result<WireReply> {
+    match resp {
+        WireResponse::Reply(r) => Ok(r),
+        other => anyhow::bail!("unexpected response {other:?}"),
+    }
+}
 
 fn main() -> anyhow::Result<()> {
     let secs: f64 = std::env::var("CHAMELEON_LOADGEN_SECS")
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(2.0);
+    let n_pipe: usize = std::env::var("CHAMELEON_PIPE_REQS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(512);
     let model = Arc::new(demo_tiny_kws());
     println!("model: {}", model.describe());
 
@@ -52,6 +72,7 @@ fn main() -> anyhow::Result<()> {
             shots: 2,
             connections: 8,
             seed: 1,
+            ..Default::default()
         })?;
         t.rowv(vec![
             format!("{rps:.0}"),
@@ -65,6 +86,104 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     t.print();
+
+    // ---- single-connection pipelining comparison (protocol v3) ----------
+    // The same N classify windows through one connection, three ways; the
+    // responses must be bit-identical and the pipelined path must at least
+    // double the sequential throughput.
+    let input_len = model.seq_len * model.in_channels;
+    let mut rng = Rng::new(42);
+    let inputs: Vec<Vec<u8>> = (0..n_pipe)
+        .map(|_| (0..input_len).map(|_| rng.below(16) as u8).collect())
+        .collect();
+
+    // Sequential, strictly one-in-flight, spoken at protocol v2 — the
+    // pre-pipelining baseline.
+    let mut c2 = Client::with_config(
+        &addr,
+        ClientConfig { version: 2, ..Default::default() },
+    )?;
+    let t0 = Instant::now();
+    let mut seq = Vec::with_capacity(n_pipe);
+    for x in &inputs {
+        seq.push(c2.classify(x.clone())?);
+    }
+    let t_seq = t0.elapsed();
+
+    // Pipelined v3: up to DEPTH tagged requests in flight on ONE socket.
+    const DEPTH: usize = 32;
+    let mut c3 = Client::connect(&addr)?;
+    let t0 = Instant::now();
+    let mut pipe: Vec<Option<WireReply>> = (0..n_pipe).map(|_| None).collect();
+    let mut window: VecDeque<(usize, u64)> = VecDeque::new();
+    for (i, x) in inputs.iter().enumerate() {
+        while window.len() >= DEPTH {
+            let (j, id) = window.pop_front().unwrap();
+            pipe[j] = Some(expect_reply(c3.wait(id)?)?);
+        }
+        window.push_back((i, c3.submit(&WireRequest::Classify { input: x.clone() })?));
+    }
+    while let Some((j, id)) = window.pop_front() {
+        pipe[j] = Some(expect_reply(c3.wait(id)?)?);
+    }
+    let t_pipe = t0.elapsed();
+    let pipe: Vec<WireReply> = pipe.into_iter().map(|r| r.expect("all collected")).collect();
+
+    // ClassifyBatch v3: 32 windows per frame, one connection.
+    let t0 = Instant::now();
+    let mut batched = Vec::with_capacity(n_pipe);
+    for chunk in inputs.chunks(32) {
+        for item in c3.classify_batch(chunk.to_vec())? {
+            match item {
+                BatchItem::Reply(r) => batched.push(r),
+                BatchItem::Error { code, message } => {
+                    anyhow::bail!("batch item failed ({code:?}): {message}")
+                }
+            }
+        }
+    }
+    let t_batch = t0.elapsed();
+
+    assert_eq!(seq, pipe, "pipelined responses must be bit-identical to sequential v2");
+    assert_eq!(seq, batched, "batched responses must be bit-identical to sequential v2");
+
+    let rps = |d: Duration| n_pipe as f64 / d.as_secs_f64().max(1e-9);
+    let speedup_pipe = rps(t_pipe) / rps(t_seq);
+    let speedup_batch = rps(t_batch) / rps(t_seq);
+    let mut t = Table::new(
+        &format!("single-connection classify, {n_pipe} requests (bit-identical responses)"),
+        &["mode", "wall", "req/s", "vs sequential"],
+    );
+    t.rowv(vec![
+        "sequential v2".into(),
+        format!("{:.3} s", t_seq.as_secs_f64()),
+        format!("{:.0}", rps(t_seq)),
+        "1.00x".into(),
+    ]);
+    t.rowv(vec![
+        format!("pipelined v3 (depth {DEPTH})"),
+        format!("{:.3} s", t_pipe.as_secs_f64()),
+        format!("{:.0}", rps(t_pipe)),
+        format!("{speedup_pipe:.2}x"),
+    ]);
+    t.rowv(vec![
+        "batched v3 (32/frame)".into(),
+        format!("{:.3} s", t_batch.as_secs_f64()),
+        format!("{:.0}", rps(t_batch)),
+        format!("{speedup_batch:.2}x"),
+    ]);
+    t.print();
+    assert!(
+        speedup_pipe >= 2.0,
+        "v3 pipelining must at least double single-connection classify throughput \
+         (got {speedup_pipe:.2}x)"
+    );
+    assert!(
+        speedup_batch >= 2.0,
+        "v3 batching must at least double single-connection classify throughput \
+         (got {speedup_batch:.2}x)"
+    );
+
     let snap = server.metrics();
     println!("\nserver totals: {}", snap.report());
     server.shutdown();

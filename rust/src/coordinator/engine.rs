@@ -27,6 +27,16 @@ pub struct Forward {
     pub trace: Option<Trace>,
 }
 
+/// Magic first input byte that makes a [`EngineKind::Chaos`] engine panic.
+/// Deliberately outside the u4 code range (0..=15), so real traffic can
+/// never trip it by accident.
+pub const CHAOS_PANIC_TOKEN: u8 = 0xEE;
+
+/// Magic first input byte that makes a [`EngineKind::Chaos`] engine stall
+/// for its configured delay before forwarding (the byte is squashed to 0
+/// so the forward itself stays valid). Also outside the u4 range.
+pub const CHAOS_SLOW_TOKEN: u8 = 0xDD;
+
 pub enum EngineKind {
     Golden,
     Sim(ArrayMode),
@@ -37,6 +47,13 @@ pub enum EngineKind {
     /// used to exercise serve-layer backpressure under realistic service
     /// times instead of host-speed ones.
     Paced(OperatingPoint),
+    /// Golden datapath plus deterministic fault injection, keyed on the
+    /// first input byte: [`CHAOS_PANIC_TOKEN`] panics mid-request (for
+    /// fault-isolation tests proving a shard survives a poisoned request)
+    /// and [`CHAOS_SLOW_TOKEN`] stalls for `slow` before forwarding (for
+    /// backpressure and pipelining-order tests). Everything else forwards
+    /// normally.
+    Chaos { slow: Duration },
 }
 
 /// A model bound to an execution engine.
@@ -62,12 +79,19 @@ impl Engine {
         Engine { model, kind: EngineKind::Paced(op) }
     }
 
+    /// Fault-injection engine for robustness tests (see
+    /// [`EngineKind::Chaos`]).
+    pub fn chaos(model: Arc<QuantModel>, slow: Duration) -> Engine {
+        Engine { model, kind: EngineKind::Chaos { slow } }
+    }
+
     pub fn name(&self) -> &'static str {
         match self.kind {
             EngineKind::Golden => "golden",
             EngineKind::Sim(_) => "sim",
             EngineKind::Xla(_) => "xla",
             EngineKind::Paced(_) => "paced",
+            EngineKind::Chaos { .. } => "chaos",
         }
     }
 
@@ -97,6 +121,24 @@ impl Engine {
                     std::thread::sleep(budget - elapsed);
                 }
                 Ok(Forward { embedding: r.embedding, logits: r.logits, trace: Some(r.trace) })
+            }
+            EngineKind::Chaos { slow } => {
+                match x_q.first().copied() {
+                    Some(CHAOS_PANIC_TOKEN) => {
+                        panic!("chaos engine: injected panic (poisoned request)");
+                    }
+                    Some(CHAOS_SLOW_TOKEN) => {
+                        std::thread::sleep(*slow);
+                        let mut x = x_q.to_vec();
+                        x[0] = 0;
+                        let (embedding, logits) = golden::forward(&self.model, &x)?;
+                        Ok(Forward { embedding, logits, trace: None })
+                    }
+                    _ => {
+                        let (embedding, logits) = golden::forward(&self.model, x_q)?;
+                        Ok(Forward { embedding, logits, trace: None })
+                    }
+                }
             }
         }
     }

@@ -148,6 +148,10 @@ pub struct Metrics {
     pub requests: AtomicU64,
     pub completed: AtomicU64,
     pub errors: AtomicU64,
+    /// Handler panics caught by a worker (the request got an `App` error
+    /// reply and the worker kept running). Any non-zero value means a
+    /// poisoned request reached an engine — worth alerting on.
+    pub worker_panics: AtomicU64,
     pub rejected: AtomicU64,
     pub learn_ways: AtomicU64,
     /// Sessions removed from the store (LRU pressure + explicit evict ops).
@@ -184,6 +188,7 @@ impl Metrics {
             requests: self.requests.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            worker_panics: self.worker_panics.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
             learn_ways: self.learn_ways.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
@@ -205,6 +210,7 @@ pub struct MetricsSnapshot {
     pub requests: u64,
     pub completed: u64,
     pub errors: u64,
+    pub worker_panics: u64,
     pub rejected: u64,
     pub learn_ways: u64,
     pub evictions: u64,
@@ -225,6 +231,7 @@ impl MetricsSnapshot {
         self.requests += other.requests;
         self.completed += other.completed;
         self.errors += other.errors;
+        self.worker_panics += other.worker_panics;
         self.rejected += other.rejected;
         self.learn_ways += other.learn_ways;
         self.evictions += other.evictions;
@@ -240,12 +247,13 @@ impl MetricsSnapshot {
 
     pub fn report(&self) -> String {
         format!(
-            "requests={} completed={} errors={} rejected={} learned_ways={} evictions={} \
-             stream_chunks={} stream_decisions={} \
+            "requests={} completed={} errors={} worker_panics={} rejected={} learned_ways={} \
+             evictions={} stream_chunks={} stream_decisions={} \
              latency mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us sim_cycles={}",
             self.requests,
             self.completed,
             self.errors,
+            self.worker_panics,
             self.rejected,
             self.learn_ways,
             self.evictions,

@@ -22,23 +22,83 @@ use crate::golden::streaming::StreamingState;
 use crate::protonet::ProtoHead;
 use crate::sim::learning::learning_cycles;
 
+/// How a worker delivers the outcome of one request: an arbitrary
+/// callback, so blocking callers hand in an mpsc sender (via `From`) while
+/// the serve layer's pipelined connections encode + enqueue the wire frame
+/// directly on their writer — no per-request waiter thread.
+///
+/// Delivery is guaranteed: if the sink is dropped without being called
+/// (worker died, queue torn down at shutdown with requests still inside),
+/// it fires with an error so no caller ever hangs on a lost reply.
+pub struct ReplySink(Option<Box<dyn FnOnce(Result<Response>) + Send>>);
+
+impl ReplySink {
+    /// Wrap an arbitrary delivery callback.
+    pub fn call<F>(f: F) -> ReplySink
+    where
+        F: FnOnce(Result<Response>) + Send + 'static,
+    {
+        ReplySink(Some(Box::new(f)))
+    }
+
+    /// Deliver the outcome (consumes the sink; at most one delivery).
+    pub fn deliver(mut self, res: Result<Response>) {
+        if let Some(f) = self.0.take() {
+            f(res);
+        }
+    }
+}
+
+impl Drop for ReplySink {
+    fn drop(&mut self) {
+        if let Some(f) = self.0.take() {
+            f(Err(anyhow!("worker gone before replying")));
+        }
+    }
+}
+
+impl From<mpsc::Sender<Result<Response>>> for ReplySink {
+    fn from(tx: mpsc::Sender<Result<Response>>) -> ReplySink {
+        ReplySink::call(move |res| {
+            let _ = tx.send(res);
+        })
+    }
+}
+
 /// A classification / learning request.
 pub enum Request {
     /// Classify with the model's built-in head (KWS).
-    Classify { input: Vec<u8>, reply: mpsc::Sender<Result<Response>> },
+    Classify { input: Vec<u8>, reply: ReplySink },
     /// Embed + classify against a session's learned prototypical head.
-    ClassifySession { session: SessionId, input: Vec<u8>, reply: mpsc::Sender<Result<Response>> },
+    ClassifySession { session: SessionId, input: Vec<u8>, reply: ReplySink },
     /// Learn one new way for a session from k support sequences.
-    LearnWay { session: SessionId, shots: Vec<Vec<u8>>, reply: mpsc::Sender<Result<Response>> },
+    LearnWay { session: SessionId, shots: Vec<Vec<u8>>, reply: ReplySink },
     /// Drop a session's learned head (frees its store slot).
-    EvictSession { session: SessionId, reply: mpsc::Sender<Result<Response>> },
+    EvictSession { session: SessionId, reply: ReplySink },
     /// Open (or reset) an incremental stream on a session; the window is
     /// the model's `seq_len`, `hop` is the decision stride in timesteps.
-    StreamOpen { session: SessionId, hop: usize, reply: mpsc::Sender<Result<Response>> },
+    StreamOpen { session: SessionId, hop: usize, reply: ReplySink },
     /// Push a chunk of u4 samples into a session's open stream.
-    StreamPush { session: SessionId, samples: Vec<u8>, reply: mpsc::Sender<Result<Response>> },
+    StreamPush { session: SessionId, samples: Vec<u8>, reply: ReplySink },
     /// Close a session's stream (its learned head survives).
-    StreamClose { session: SessionId, reply: mpsc::Sender<Result<Response>> },
+    StreamClose { session: SessionId, reply: ReplySink },
+}
+
+impl Request {
+    /// Take back the reply sink — used by callers that failed to enqueue
+    /// the request (e.g. the serve layer's classify fan-over after every
+    /// shard rejected it) and still owe the requester an answer.
+    pub fn into_reply(self) -> ReplySink {
+        match self {
+            Request::Classify { reply, .. }
+            | Request::ClassifySession { reply, .. }
+            | Request::LearnWay { reply, .. }
+            | Request::EvictSession { reply, .. }
+            | Request::StreamOpen { reply, .. }
+            | Request::StreamPush { reply, .. }
+            | Request::StreamClose { reply, .. } => reply,
+        }
+    }
 }
 
 pub type SessionId = u64;
@@ -224,6 +284,19 @@ struct Shared {
     in_channels: usize,
 }
 
+impl Shared {
+    /// Session-store access that survives a poisoned lock. A panicking
+    /// handler (caught in [`worker_loop`]) may have been holding the lock;
+    /// the store is a plain map whose state stays valid after any
+    /// interrupted operation, so recovering the guard is safe — writing
+    /// off the whole shard to a poison flag is not.
+    fn session_store(&self) -> std::sync::MutexGuard<'_, SessionStore> {
+        self.sessions
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+}
+
 /// The coordinator handle. Dropping it shuts the workers down.
 pub struct Coordinator {
     tx: mpsc::SyncSender<Request>,
@@ -328,21 +401,56 @@ impl Coordinator {
 
     /// Number of live sessions in the store.
     pub fn session_count(&self) -> usize {
-        self.shared.sessions.lock().unwrap().len()
+        self.shared.session_store().len()
     }
 
     /// Submit a request without blocking; distinguishes backpressure
     /// ([`SubmitError::Full`]) from shutdown ([`SubmitError::Closed`]) so
     /// the serve layer can surface an explicit `Overloaded` wire error.
     pub fn try_submit(&self, req: Request) -> std::result::Result<(), SubmitError> {
-        self.shared.metrics.requests.fetch_add(1, Ordering::Relaxed);
-        self.tx.try_send(req).map_err(|e| {
-            self.shared.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-            match e {
-                mpsc::TrySendError::Full(_) => SubmitError::Full,
-                mpsc::TrySendError::Disconnected(_) => SubmitError::Closed,
+        self.try_submit_ret(req).map_err(|(e, _)| e)
+    }
+
+    /// Like [`Coordinator::try_submit`], but hands the request back on
+    /// failure so the caller can re-route it to another shard (the serve
+    /// layer's classify fan-over). Records one `requests` tick, plus a
+    /// `rejected` tick on failure.
+    pub fn try_submit_ret(
+        &self,
+        req: Request,
+    ) -> std::result::Result<(), (SubmitError, Request)> {
+        match self.try_enqueue(req) {
+            Ok(()) => {
+                self.record_submission(false);
+                Ok(())
             }
+            Err(e) => {
+                self.record_submission(true);
+                Err(e)
+            }
+        }
+    }
+
+    /// Enqueue without touching the `requests`/`rejected` metrics. For
+    /// multi-shard routing (classify fan-over): re-route *attempts* must
+    /// not inflate the counters — the router calls
+    /// [`Coordinator::record_submission`] exactly once per logical
+    /// request, on the shard that accepted it (or, if every shard
+    /// refused, on the shard whose rejection the client observes).
+    pub fn try_enqueue(&self, req: Request) -> std::result::Result<(), (SubmitError, Request)> {
+        self.tx.try_send(req).map_err(|e| match e {
+            mpsc::TrySendError::Full(r) => (SubmitError::Full, r),
+            mpsc::TrySendError::Disconnected(r) => (SubmitError::Closed, r),
         })
+    }
+
+    /// Record one logical submission in this shard's metrics (see
+    /// [`Coordinator::try_enqueue`]).
+    pub fn record_submission(&self, rejected: bool) {
+        self.shared.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        if rejected {
+            self.shared.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     /// Submit a request; `Err` when the queue is full (backpressure).
@@ -353,28 +461,28 @@ impl Coordinator {
     /// Blocking convenience: classify with the built-in head.
     pub fn classify(&self, input: Vec<u8>) -> Result<Response> {
         let (rtx, rrx) = mpsc::channel();
-        self.submit(Request::Classify { input, reply: rtx })?;
+        self.submit(Request::Classify { input, reply: rtx.into() })?;
         rrx.recv().map_err(|e| anyhow!("worker gone: {e}"))?
     }
 
     /// Blocking convenience: session classify.
     pub fn classify_session(&self, session: SessionId, input: Vec<u8>) -> Result<Response> {
         let (rtx, rrx) = mpsc::channel();
-        self.submit(Request::ClassifySession { session, input, reply: rtx })?;
+        self.submit(Request::ClassifySession { session, input, reply: rtx.into() })?;
         rrx.recv().map_err(|e| anyhow!("worker gone: {e}"))?
     }
 
     /// Blocking convenience: learn one way.
     pub fn learn_way(&self, session: SessionId, shots: Vec<Vec<u8>>) -> Result<Response> {
         let (rtx, rrx) = mpsc::channel();
-        self.submit(Request::LearnWay { session, shots, reply: rtx })?;
+        self.submit(Request::LearnWay { session, shots, reply: rtx.into() })?;
         rrx.recv().map_err(|e| anyhow!("worker gone: {e}"))?
     }
 
     /// Blocking convenience: evict a session. Returns whether it existed.
     pub fn evict_session(&self, session: SessionId) -> Result<bool> {
         let (rtx, rrx) = mpsc::channel();
-        self.submit(Request::EvictSession { session, reply: rtx })?;
+        self.submit(Request::EvictSession { session, reply: rtx.into() })?;
         let r = rrx.recv().map_err(|e| anyhow!("worker gone: {e}"))??;
         Ok(r.evicted.unwrap_or(false))
     }
@@ -382,7 +490,7 @@ impl Coordinator {
     /// Blocking convenience: open (or reset) a stream session.
     pub fn stream_open(&self, session: SessionId, hop: usize) -> Result<StreamInfo> {
         let (rtx, rrx) = mpsc::channel();
-        self.submit(Request::StreamOpen { session, hop, reply: rtx })?;
+        self.submit(Request::StreamOpen { session, hop, reply: rtx.into() })?;
         let r = rrx.recv().map_err(|e| anyhow!("worker gone: {e}"))??;
         r.stream.ok_or_else(|| anyhow!("missing stream info in reply"))
     }
@@ -395,7 +503,7 @@ impl Coordinator {
         samples: Vec<u8>,
     ) -> Result<Vec<StreamDecision>> {
         let (rtx, rrx) = mpsc::channel();
-        self.submit(Request::StreamPush { session, samples, reply: rtx })?;
+        self.submit(Request::StreamPush { session, samples, reply: rtx.into() })?;
         let r = rrx.recv().map_err(|e| anyhow!("worker gone: {e}"))??;
         Ok(r.decisions.unwrap_or_default())
     }
@@ -404,14 +512,14 @@ impl Coordinator {
     /// and how many windows it emitted.
     pub fn stream_close(&self, session: SessionId) -> Result<(bool, u64)> {
         let (rtx, rrx) = mpsc::channel();
-        self.submit(Request::StreamClose { session, reply: rtx })?;
+        self.submit(Request::StreamClose { session, reply: rtx.into() })?;
         let r = rrx.recv().map_err(|e| anyhow!("worker gone: {e}"))??;
         Ok(r.stream_closed.unwrap_or((false, 0)))
     }
 
     /// Number of ways a session has learned so far.
     pub fn session_ways(&self, session: SessionId) -> usize {
-        self.shared.sessions.lock().unwrap().ways(session)
+        self.shared.session_store().ways(session)
     }
 
     /// Graceful shutdown: close the queue and join the workers.
@@ -431,58 +539,81 @@ fn worker_loop(engine: Engine, rx: Arc<Mutex<mpsc::Receiver<Request>>>, shared: 
             Err(_) => return, // queue closed
         };
         let start = Instant::now();
-        // Metrics are recorded *before* the reply is sent so a caller that
-        // snapshots right after recv() observes its own request.
-        match req {
-            Request::Classify { input, reply } => {
-                let res = handle_classify(&engine, &input, &shared);
-                shared.metrics.record_latency(start.elapsed());
-                let _ = reply.send(res);
+        let (reply, res) = run_request(&engine, req, &shared);
+        // Unified accounting: `errors` is recorded here and only here, so
+        // every failing path — classify, session classify, learn, stream —
+        // counts exactly once. Metrics land *before* the reply is sent so
+        // a caller that snapshots right after recv() observes its own
+        // request.
+        if res.is_err() {
+            shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        shared.metrics.record_latency(start.elapsed());
+        reply.deliver(res);
+    }
+}
+
+/// Route one request to its handler, catching panics so a poisoned request
+/// costs one `App` error instead of the worker thread (and with it, a
+/// slice of the shard's capacity — the pre-fix failure mode was a shard
+/// that silently shrank until it hung).
+fn run_request(engine: &Engine, req: Request, shared: &Shared) -> (ReplySink, Result<Response>) {
+    match req {
+        Request::Classify { input, reply } => {
+            (reply, guarded(shared, || handle_classify(engine, &input, shared)))
+        }
+        Request::ClassifySession { session, input, reply } => {
+            (reply, guarded(shared, || handle_classify_session(engine, session, &input, shared)))
+        }
+        Request::LearnWay { session, shots, reply } => {
+            (reply, guarded(shared, || handle_learn(engine, session, &shots, shared)))
+        }
+        Request::EvictSession { session, reply } => {
+            let existed = shared.session_store().remove(session);
+            if existed {
+                shared.metrics.evictions.fetch_add(1, Ordering::Relaxed);
             }
-            Request::ClassifySession { session, input, reply } => {
-                let res = handle_classify_session(&engine, session, &input, &shared);
-                shared.metrics.record_latency(start.elapsed());
-                let _ = reply.send(res);
-            }
-            Request::LearnWay { session, shots, reply } => {
-                let res = handle_learn(&engine, session, &shots, &shared);
-                shared.metrics.record_latency(start.elapsed());
-                let _ = reply.send(res);
-            }
-            Request::EvictSession { session, reply } => {
-                let existed = shared.sessions.lock().unwrap().remove(session);
-                if existed {
-                    shared.metrics.evictions.fetch_add(1, Ordering::Relaxed);
-                }
-                shared.metrics.record_latency(start.elapsed());
-                let _ = reply.send(Ok(Response {
-                    evicted: Some(existed),
-                    ..Response::default()
-                }));
-            }
-            Request::StreamOpen { session, hop, reply } => {
-                let res = handle_stream_open(&engine, session, hop, &shared);
-                shared.metrics.record_latency(start.elapsed());
-                let _ = reply.send(res);
-            }
-            Request::StreamPush { session, samples, reply } => {
-                let res = handle_stream_push(session, &samples, &shared);
-                shared.metrics.record_latency(start.elapsed());
-                let _ = reply.send(res);
-            }
-            Request::StreamClose { session, reply } => {
-                let res = handle_stream_close(session, &shared);
-                shared.metrics.record_latency(start.elapsed());
-                let _ = reply.send(res);
-            }
+            (reply, Ok(Response { evicted: Some(existed), ..Response::default() }))
+        }
+        Request::StreamOpen { session, hop, reply } => {
+            (reply, guarded(shared, || handle_stream_open(engine, session, hop, shared)))
+        }
+        Request::StreamPush { session, samples, reply } => {
+            (reply, guarded(shared, || handle_stream_push(session, &samples, shared)))
+        }
+        Request::StreamClose { session, reply } => {
+            (reply, guarded(shared, || handle_stream_close(session, shared)))
+        }
+    }
+}
+
+/// Run a handler with panic isolation: a panic becomes an `Err` reply and
+/// a `worker_panics` metric tick, and the worker lives on. The engines are
+/// stateless across forwards and the session store recovers poisoned
+/// locks ([`Shared::session_store`]), so continuing after an unwind is
+/// sound.
+fn guarded<F>(shared: &Shared, f: F) -> Result<Response>
+where
+    F: FnOnce() -> Result<Response>,
+{
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+        Ok(res) => res,
+        Err(payload) => {
+            shared.metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
+            let msg = if let Some(s) = payload.downcast_ref::<&str>() {
+                (*s).to_string()
+            } else if let Some(s) = payload.downcast_ref::<String>() {
+                s.clone()
+            } else {
+                "non-string panic payload".to_string()
+            };
+            Err(anyhow!("request handler panicked (worker kept alive): {msg}"))
         }
     }
 }
 
 fn handle_classify(engine: &Engine, input: &[u8], shared: &Shared) -> Result<Response> {
-    let fwd = engine.forward(input).inspect_err(|_| {
-        shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
-    })?;
+    let fwd = engine.forward(input)?;
     let cycles = fwd.trace.as_ref().map(|t| t.total_cycles());
     if let Some(c) = cycles {
         shared.metrics.record_cycles(c);
@@ -509,7 +640,7 @@ fn handle_classify_session(
     if let Some(c) = cycles {
         shared.metrics.record_cycles(c);
     }
-    let mut sessions = shared.sessions.lock().unwrap();
+    let mut sessions = shared.session_store();
     let head = &sessions
         .touch(session)
         .ok_or_else(|| anyhow!("unknown session {session} (learn first)"))?
@@ -550,7 +681,7 @@ fn handle_learn(
     shared.metrics.record_cycles(cycles);
     // Serialize the head update per session; creating a session past the
     // LRU cap evicts the least-recently-used one.
-    let mut sessions = shared.sessions.lock().unwrap();
+    let mut sessions = shared.session_store();
     let (entry, lru_evicted) = sessions.get_or_insert(session, shared.embed_dim);
     entry.head.learn_way(&embs);
     let learned = entry.head.n_ways() - 1;
@@ -575,11 +706,9 @@ fn handle_stream_open(
     hop: usize,
     shared: &Shared,
 ) -> Result<Response> {
-    let state = StreamingState::new(engine.model.clone(), hop).inspect_err(|_| {
-        shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
-    })?;
+    let state = StreamingState::new(engine.model.clone(), hop)?;
     let info = StreamInfo { window: state.window(), hop };
-    let mut sessions = shared.sessions.lock().unwrap();
+    let mut sessions = shared.session_store();
     let (entry, lru_evicted) = sessions.get_or_insert(session, shared.embed_dim);
     entry.stream = Some(Arc::new(Mutex::new(state)));
     drop(sessions);
@@ -601,7 +730,7 @@ fn handle_stream_push(session: SessionId, samples: &[u8], shared: &Shared) -> Re
     // then push outside it so a long chunk never serializes unrelated
     // sessions.
     let resolved = {
-        let mut sessions = shared.sessions.lock().unwrap();
+        let mut sessions = shared.session_store();
         sessions
             .touch(session)
             .and_then(|e| e.stream.clone().map(|s| (s, e.head.n_ways())))
@@ -609,39 +738,44 @@ fn handle_stream_push(session: SessionId, samples: &[u8], shared: &Shared) -> Re
     let (stream, ways) = match resolved {
         Some(t) => t,
         None => {
-            shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
             bail!("session {session} has no open stream (send StreamOpen first)");
         }
     };
-    let mut st = stream.lock().unwrap();
+    // A panic mid-push (caught in `worker_loop`) poisons this stream's
+    // lock with its rings/counters at an unknown interior state. Resuming
+    // could silently break the bit-exactness contract, so tear the stream
+    // down instead — the client re-opens and restarts clean.
+    let mut st = match stream.lock() {
+        Ok(g) => g,
+        Err(_) => {
+            shared.session_store().close_stream(session);
+            bail!(
+                "session {session}'s stream was poisoned by a panic and has been \
+                 closed; re-open it"
+            );
+        }
+    };
     // Fail *before* consuming the chunk: a push that cannot produce
     // decisions must not advance the stream (pushes are not retried).
     if st.needs_session_head() && ways == 0 {
-        shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
         bail!(
             "session {session} has no learned ways and the model has no built-in \
              head; learn ways before streaming (the chunk was not consumed)"
         );
     }
-    let outs = st.push(samples).inspect_err(|_| {
-        shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
-    })?;
+    let outs = st.push(samples)?;
     drop(st);
     let mut decisions = Vec::with_capacity(outs.len());
     for w in outs {
         let logits = match w.logits {
             Some(logits) => logits,
             None => {
-                let mut sessions = shared.sessions.lock().unwrap();
+                let mut sessions = shared.session_store();
                 let head = &sessions
                     .touch(session)
-                    .ok_or_else(|| {
-                        shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
-                        anyhow!("session {session} evicted mid-push")
-                    })?
+                    .ok_or_else(|| anyhow!("session {session} evicted mid-push"))?
                     .head;
                 if head.n_ways() == 0 {
-                    shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
                     bail!("session {session} lost its learned ways mid-push");
                 }
                 head.logits(&w.embedding)
@@ -664,9 +798,12 @@ fn handle_stream_push(session: SessionId, samples: &[u8], shared: &Shared) -> Re
 
 /// Close a session's stream; the learned head (if any) survives.
 fn handle_stream_close(session: SessionId, shared: &Shared) -> Result<Response> {
-    let stream = shared.sessions.lock().unwrap().close_stream(session);
+    let stream = shared.session_store().close_stream(session);
     let closed = match stream {
-        Some(s) => (true, s.lock().unwrap().windows_emitted()),
+        Some(s) => {
+            let st = s.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            (true, st.windows_emitted())
+        }
         None => (false, 0),
     };
     Ok(Response { stream_closed: Some(closed), ..Response::default() })
@@ -754,7 +891,7 @@ mod tests {
             c.submit(Request::ClassifySession {
                 session: 1,
                 input: rand_seq(&m, &mut rng, 0, 16),
-                reply: rtx,
+                reply: rtx.into(),
             })
             .unwrap();
             replies.push(rrx);
@@ -784,7 +921,7 @@ mod tests {
             match c.try_submit(Request::ClassifySession {
                 session: 0,
                 input: rand_seq(&m, &mut rng, 0, 16),
-                reply: rtx,
+                reply: rtx.into(),
             }) {
                 Ok(()) => receivers.push(rrx),
                 Err(e) => {
@@ -904,6 +1041,55 @@ mod tests {
         c.stream_open(2, m.seq_len).unwrap();
         assert!(c.evict_session(2).unwrap());
         assert!(c.stream_push(2, rand_seq(&m, &mut rng, 0, 16)).is_err());
+        c.shutdown();
+    }
+
+    #[test]
+    fn session_path_failures_count_errors() {
+        // Regression: `handle_classify_session` and `handle_learn` used to
+        // skip the `errors` metric (only plain classify counted), so the
+        // session paths undercounted failures. Accounting is now unified
+        // in `worker_loop`: exactly one tick per failed request.
+        let (c, m) = mk_coord(1);
+        let mut rng = Rng::new(41);
+        assert!(c.classify_session(99, rand_seq(&m, &mut rng, 0, 16)).is_err());
+        assert_eq!(c.metrics().snapshot().errors, 1, "unknown session must count");
+        assert!(c.learn_way(99, vec![]).is_err());
+        assert_eq!(c.metrics().snapshot().errors, 2, "empty-shot learn must count");
+        assert!(c.classify(rand_seq(&m, &mut rng, 0, 16)).is_err());
+        assert_eq!(c.metrics().snapshot().errors, 3, "headless classify must count");
+        assert!(c.stream_push(1, rand_seq(&m, &mut rng, 0, 16)).is_err());
+        assert_eq!(c.metrics().snapshot().errors, 4, "push without open must count");
+        c.shutdown();
+    }
+
+    #[test]
+    fn worker_survives_panicking_request() {
+        // Regression: a panicking handler used to kill its worker thread
+        // forever — the engine replica was silently lost. The panic is now
+        // caught: the request gets an error reply, `worker_panics` ticks,
+        // and the (single!) worker keeps serving.
+        let m = SArc::new(crate::model::tests::tiny_model());
+        let mf = m.clone();
+        let c = Coordinator::start(
+            vec![Box::new(move || {
+                Ok(Engine::chaos(mf, std::time::Duration::from_millis(1)))
+            }) as EngineFactory],
+            CoordinatorConfig { workers: 1, queue_depth: 16, ..Default::default() },
+        )
+        .unwrap();
+        let mut rng = Rng::new(42);
+        c.learn_way(5, vec![rand_seq(&m, &mut rng, 0, 16)]).unwrap();
+        let mut poisoned = rand_seq(&m, &mut rng, 0, 16);
+        poisoned[0] = crate::coordinator::engine::CHAOS_PANIC_TOKEN;
+        let err = c.classify_session(5, poisoned).unwrap_err();
+        assert!(format!("{err:#}").contains("panicked"), "{err:#}");
+        // The lone worker is still alive and serving the same session.
+        let r = c.classify_session(5, rand_seq(&m, &mut rng, 0, 16)).unwrap();
+        assert_eq!(r.predicted, Some(0));
+        let snap = c.metrics().snapshot();
+        assert_eq!(snap.worker_panics, 1);
+        assert!(snap.errors >= 1, "the poisoned request counts as an error");
         c.shutdown();
     }
 

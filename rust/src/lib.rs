@@ -30,11 +30,13 @@
 //!
 //! The first command starts a sharded TCP server (default
 //! `127.0.0.1:7070`); the second drives it with open-loop Poisson request
-//! traffic and prints throughput plus p50/p95/p99 latency; the third
-//! drives incremental stream sessions (protocol v2) instead — chunked
-//! sample pushes, one bit-exact decision per hop-strided window. See
-//! `DESIGN.md` §Serve and §Streaming for the framing, sharding,
-//! backpressure and bit-exactness contracts.
+//! traffic and prints throughput plus p50/p95/p99 latency (add
+//! `--pipeline 32` and/or `--batch 16` for the protocol-v3 pipelined /
+//! batched shapes); the third drives incremental stream sessions
+//! (protocol v2) instead — chunked sample pushes, one bit-exact decision
+//! per hop-strided window. See `DESIGN.md` §Serve, §Streaming, §Protocol
+//! v3 and §Fault isolation for the framing, sharding, backpressure,
+//! pipelining and bit-exactness contracts.
 
 pub mod baselines;
 pub mod coordinator;

@@ -6,6 +6,8 @@
 //!   learn   --ways N --shots K   run an on-"chip" FSL episode
 //!   serve   --shards N [...]     sharded TCP serving layer (wire protocol)
 //!   loadgen --rps R [...]        open-loop Poisson load generator;
+//!           --pipeline D keeps D requests in flight per connection and
+//!           --batch N sends N-window ClassifyBatch frames (protocol v3);
 //!           --stream [--chunk C --hop H --pace-hz F] drives incremental
 //!           stream sessions instead of request traffic
 //!   drive   --model NAME         drive the in-process streaming coordinator
@@ -296,16 +298,21 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         sessions: args.get_u64("sessions", 16)?,
         shots: args.get_usize("shots", 2)?,
         connections: args.get_usize("connections", 4)?,
+        pipeline: args.get_usize("pipeline", 1)?,
+        batch: args.get_usize("batch", 0)?,
         seed: args.get_u64("seed", 1)?,
     };
     println!(
-        "loadgen -> {}: {:.0} req/s for {:.1} s (learn {:.1}%, {} sessions, {} connections)",
+        "loadgen -> {}: {:.0} req/s for {:.1} s (learn {:.1}%, {} sessions, {} connections, \
+         pipeline depth {}, batch {})",
         cfg.addr,
         cfg.rps,
         cfg.duration.as_secs_f64(),
         100.0 * cfg.learn_frac,
         cfg.sessions,
         cfg.connections,
+        cfg.pipeline,
+        cfg.batch,
     );
     let report = chameleon::serve::loadgen::run(&cfg)?;
     println!("{}", report.report());

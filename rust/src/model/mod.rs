@@ -64,6 +64,11 @@ impl QLayer {
     }
 
     fn from_json(v: &Value) -> Result<QLayer> {
+        let out_shift = shift_from_json(v.req("out_shift")?, "out_shift", false)?;
+        let res_shift = match v.get_nonnull("res_shift") {
+            Some(s) => Some(shift_from_json(s, "res_shift", true)?),
+            None => None,
+        };
         let codes: Vec<i8> = v
             .req("codes")?
             .as_i32_vec()?
@@ -96,7 +101,7 @@ impl QLayer {
                     ),
                     Some(v.req("res_codes_shape")?.as_usize_vec()?),
                     Some(v.req("res_bias")?.as_i32_vec()?),
-                    Some(v.req("res_out_shift")?.as_i64()? as i32),
+                    Some(shift_from_json(v.req("res_out_shift")?, "res_out_shift", false)?),
                 ),
                 None => (None, None, None, None),
             };
@@ -104,19 +109,30 @@ impl QLayer {
             codes,
             codes_shape,
             bias,
-            out_shift: v.req("out_shift")?.as_i64()? as i32,
+            out_shift,
             dilation: v.req("dilation")?.as_usize()?,
             relu: v.req("relu")?.as_bool()?,
-            res_shift: match v.get_nonnull("res_shift") {
-                Some(s) => Some(s.as_i64()? as i32),
-                None => None,
-            },
+            res_shift,
             res_codes,
             res_codes_shape,
             res_bias,
             res_out_shift,
         })
     }
+}
+
+/// Parse one shift field, rejecting values outside the shift ops'
+/// documented domain (`quant::MAX_SHIFT`) **before** the i64 -> i32 cast
+/// can truncate them into range — a corrupt artifact must fail at load,
+/// not panic (or wrap) a worker mid-request.
+fn shift_from_json(v: &Value, key: &str, signed: bool) -> Result<i32> {
+    let s = v.as_i64()?;
+    let lo = if signed { -(quant::MAX_SHIFT as i64) } else { 0 };
+    let hi = quant::MAX_SHIFT as i64;
+    if !(lo..=hi).contains(&s) {
+        bail!("{key} {s} outside the valid shift range [{lo}, {hi}]");
+    }
+    Ok(s as i32)
 }
 
 /// A full quantized Chameleon-deployable network.
@@ -168,8 +184,8 @@ impl QuantModel {
                 Some(n) => Some(n.as_usize()?),
                 None => None,
             },
-            in_shift: v.req("in_shift")?.as_i64()? as i32,
-            embed_shift: v.req("embed_shift")?.as_i64()? as i32,
+            in_shift: shift_from_json(v.req("in_shift")?, "in_shift", true)?,
+            embed_shift: shift_from_json(v.req("embed_shift")?, "embed_shift", true)?,
             layers,
             embed: QLayer::from_json(v.req("embed")?)?,
             head: match v.get_nonnull("head") {
@@ -405,6 +421,42 @@ pub mod tests {
         assert_eq!(m.layers.len(), 2);
         assert_eq!(m.layers[1].res_shift, Some(0));
         assert!(m.head.is_none());
+    }
+
+    #[test]
+    fn loader_rejects_out_of_range_shifts() {
+        // A corrupt artifact must fail at load, not panic a worker later:
+        // out_shift >= 32 (or huge values that would truncate back into
+        // range on the i64 -> i32 cast) and negative unsigned shifts are
+        // all rejected.
+        let doc = |out_shift: &str, res_shift: &str| {
+            format!(
+                r#"{{
+                "name": "t", "in_channels": 1, "seq_len": 4, "channels": [],
+                "kernel_size": 2, "embed_dim": 2, "n_classes": null,
+                "in_shift": 0, "embed_shift": 0, "layers": [],
+                "embed": {{"codes": [1], "codes_shape": [1,1], "bias": [0],
+                          "out_shift": {out_shift}, "dilation": 1, "relu": true,
+                          "res_shift": {res_shift}, "res_codes": null,
+                          "res_codes_shape": null, "res_bias": null,
+                          "res_out_shift": null}},
+                "head": null
+            }}"#
+            )
+        };
+        for bad in ["32", "99", "-1", "4294967296"] {
+            let v = json::parse(&doc(bad, "null")).unwrap();
+            assert!(QuantModel::from_json(&v).is_err(), "out_shift {bad} must be rejected");
+        }
+        for bad in ["32", "-32", "4294967296"] {
+            let v = json::parse(&doc("0", bad)).unwrap();
+            assert!(QuantModel::from_json(&v).is_err(), "res_shift {bad} must be rejected");
+        }
+        // In-range values (signed res_shift) still load.
+        let v = json::parse(&doc("31", "-31")).unwrap();
+        let m = QuantModel::from_json(&v).unwrap();
+        assert_eq!(m.embed.out_shift, 31);
+        assert_eq!(m.embed.res_shift, Some(-31));
     }
 
     #[test]

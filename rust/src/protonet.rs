@@ -102,10 +102,11 @@ impl ProtoHead {
         self.ways.push(acc.extract());
     }
 
-    /// Memory overhead of one way in bytes: V codes at 4 bits + 14-bit bias
-    /// (paper: 26 B/way at V = 48... scales as 0.5*V + 2).
+    /// Memory overhead of one way in bytes: V codes at 4 bits (nibble-
+    /// padded to whole bytes, so odd V rounds *up*) + 14-bit bias
+    /// (paper: 26 B/way at V = 48... scales as ceil(V/2) + 2).
     pub fn bytes_per_way(&self) -> usize {
-        self.dim / 2 + 2
+        self.dim.div_ceil(2) + 2
     }
 
     /// Convert into a standard [`QLayer`] executable by every engine.
@@ -252,5 +253,10 @@ mod tests {
         // V = 48 -> 26 bytes/way (paper's Omniglot number at its V).
         let head = ProtoHead::new(48);
         assert_eq!(head.bytes_per_way(), 26);
+        // Odd embed dims pack the last nibble into a padded byte — the
+        // count must round up, not floor.
+        assert_eq!(ProtoHead::new(7).bytes_per_way(), 6);
+        assert_eq!(ProtoHead::new(1).bytes_per_way(), 3);
+        assert_eq!(ProtoHead::new(49).bytes_per_way(), 27);
     }
 }

@@ -86,33 +86,68 @@ pub fn shift_product(act: i32, code: i8) -> i32 {
     act * log2_decode(code)
 }
 
+/// Largest shift distance that moves bits inside an i32; model loading
+/// rejects layer shifts outside `[-MAX_SHIFT, MAX_SHIFT]` so a corrupt
+/// artifact cannot reach the degenerate regions of the shift ops.
+pub const MAX_SHIFT: i32 = 31;
+
 /// Signed shift: `x << s` for `s >= 0`, arithmetic `x >> -s` otherwise.
+///
+/// Total over all of `i32 x i32` (a corrupt artifact must not be able to
+/// panic a worker): left shifts saturate to the i32 range instead of
+/// wrapping, and right shifts clamp the distance at 31 (the arithmetic
+/// fixpoint — every further bit repeats the sign). In-domain shifts
+/// (|s| <= [`MAX_SHIFT`], no overflow) are unchanged bit-for-bit.
 #[inline]
 pub fn signed_shift(x: i32, s: i32) -> i32 {
     if s >= 0 {
-        x << s
+        // Distance clamps at 31: |x| < 2^31, so x << 31 fits i64 exactly
+        // (no wrap before the clamp), and any non-zero x shifted 31 is
+        // already at or past the i32 boundary — more distance saturates
+        // to the same value.
+        let wide = (x as i64) << s.min(31);
+        wide.clamp(i32::MIN as i64, i32::MAX as i64) as i32
     } else {
-        x >> (-s)
+        x >> s.unsigned_abs().min(31)
     }
 }
 
 /// Rounding arithmetic right shift: `(x + 2^(s-1)) >> s` — the OPE's
 /// rounding adder (round-half-up), matching the round() the QAT trains
 /// with instead of a floor that loses 0.5 LSB per layer.
+///
+/// Total over all of `i32 x i32`: `s <= 0` multiplies by `2^-s`
+/// (saturating, via [`signed_shift`]), `s >= 63` rounds everything to 0,
+/// and the in-between range computes in i64 so the rounding bias cannot
+/// overflow. In-domain shifts (`0 <= s <= MAX_SHIFT`, accumulator-scale
+/// `x`) are unchanged bit-for-bit.
 #[inline]
 pub fn rounding_shift_right(x: i32, s: i32) -> i32 {
-    let bias = if s > 0 { 1 << (s - 1) } else { 0 };
-    (x + bias) >> s
+    if s <= 0 {
+        // Dividing by 2^s with s <= 0 is an exact left shift; reuse the
+        // saturating path (s.unsigned_abs handles s == i32::MIN).
+        let dist = s.unsigned_abs().min(31) as i32;
+        signed_shift(x, dist)
+    } else if s >= 63 {
+        // |x| < 2^31 <= 2^(s-1): the rounded quotient is 0 for every x.
+        0
+    } else {
+        ((x as i64 + (1i64 << (s - 1))) >> s) as i32
+    }
 }
 
 /// Output-PE: `clamp(relu(round_shift(sat(acc + bias + res<<rs))), 0, 15)`.
 ///
 /// `relu=false` returns the raw saturated total (final-layer logit readout).
+///
+/// The merge runs in i64: a large (validated) `res_shift` can saturate
+/// the residual term near `i32::MAX`, and the subsequent add must reach
+/// the accumulator clamp rather than overflow i32 on the way there.
+/// In-domain inputs (no intermediate overflow) are unchanged bit-for-bit.
 #[inline]
 pub fn ope(acc: i32, bias: i32, out_shift: i32, relu: bool, residual: i32, res_shift: i32) -> i32 {
-    let mut total = acc + sat_bias(bias);
-    total += signed_shift(residual, res_shift);
-    total = sat_acc(total);
+    let wide = acc as i64 + sat_bias(bias) as i64 + signed_shift(residual, res_shift) as i64;
+    let total = wide.clamp(ACC_MIN as i64, ACC_MAX as i64) as i32;
     if relu {
         let y = rounding_shift_right(total, out_shift);
         y.clamp(0, ACT_MAX)
@@ -238,6 +273,12 @@ mod tests {
         assert_eq!(y, ACC_MAX);
         let y = ope(ACC_MIN, BIAS_MIN, 0, false, 0, 0);
         assert_eq!(y, ACC_MIN);
+        // Extreme (but load-valid) residual shifts saturate the residual
+        // term near i32::MAX; the merge must reach the accumulator clamp
+        // instead of overflowing the add.
+        assert_eq!(ope(1000, 0, 0, false, 15, 31), ACC_MAX);
+        assert_eq!(ope(-1000, 0, 0, false, -1, 31), ACC_MIN);
+        assert_eq!(ope(ACC_MAX, BIAS_MAX, 0, false, 15, MAX_SHIFT), ACC_MAX);
     }
 
     #[test]
@@ -259,6 +300,63 @@ mod tests {
             assert_eq!(u4_encode(-3.0, 0), 0);
             assert_eq!(u4_encode(8.0, 1), 4);
         }
+    }
+
+    #[test]
+    fn shift_ops_are_total_over_all_i32() {
+        // Extreme or hostile shift distances (reachable from a corrupt
+        // model artifact before load-time validation existed) must neither
+        // panic in debug nor wrap in release.
+        for &x in &[i32::MIN, -1_000_000, -1, 0, 1, ACC_MAX, i32::MAX] {
+            for &s in &[i32::MIN, -64, -33, -32, -31, 31, 32, 33, 63, 64, i32::MAX] {
+                let y = signed_shift(x, s);
+                if s < 0 {
+                    // Arithmetic right shift converges to the sign bit.
+                    if s <= -31 {
+                        assert_eq!(y, if x < 0 { -1 } else { 0 }, "x={x} s={s}");
+                    }
+                } else if x > 0 && s >= 31 {
+                    assert_eq!(y, i32::MAX, "x={x} s={s} must saturate");
+                } else if x < 0 && s >= 32 {
+                    assert_eq!(y, i32::MIN, "x={x} s={s} must saturate");
+                } else if x == 0 {
+                    assert_eq!(y, 0);
+                }
+                let r = rounding_shift_right(x, s);
+                if s >= 63 {
+                    assert_eq!(r, 0, "x={x} s={s}: everything rounds to 0");
+                }
+            }
+        }
+        // s == 0 stays the identity on both ops.
+        assert_eq!(signed_shift(12345, 0), 12345);
+        assert_eq!(rounding_shift_right(-12345, 0), -12345);
+        // Negative rounding shift multiplies (saturating).
+        assert_eq!(rounding_shift_right(3, -2), 12);
+        assert_eq!(rounding_shift_right(1, -40), i32::MAX);
+        // Large-but-valid rounding shifts: bias no longer overflows i32.
+        assert_eq!(rounding_shift_right(ACC_MAX, 31), 0);
+        assert_eq!(rounding_shift_right(i32::MAX, 31), 1);
+        assert_eq!(rounding_shift_right(i32::MIN, 31), -1);
+    }
+
+    #[test]
+    fn in_domain_shifts_are_unchanged() {
+        // The totality rework must be bit-identical on the documented
+        // domain (accumulator-scale values, shifts within MAX_SHIFT).
+        prop::check(500, 0x5417, |rng| {
+            let x = rng.range(ACC_MIN as i64, ACC_MAX as i64 + 1) as i32;
+            let s = rng.range(0, 18) as i32;
+            prop_assert_eq!(signed_shift(x, -s), x >> s);
+            if s > 0 {
+                prop_assert_eq!(rounding_shift_right(x, s), (x + (1 << (s - 1))) >> s);
+            }
+            // Left shifts that stay in range are exact.
+            let small = rng.range(-2048, 2048) as i32;
+            let ls = rng.range(0, 8) as i32;
+            prop_assert_eq!(signed_shift(small, ls), small << ls);
+            Ok(())
+        });
     }
 
     #[test]

@@ -1,22 +1,41 @@
 //! Blocking client for the serve wire protocol, with reconnect + timeout
-//! handling.
+//! handling and protocol-v3 request pipelining.
 //!
-//! [`Client::call`] is the raw request/response primitive: transport and
-//! framing failures are `Err` (after the configured reconnect attempts),
-//! while server-sent `Error` frames come back as
+//! Two layers of API:
+//!
+//! * [`Client::submit`] / [`Client::wait`] — the pipelined primitives: a
+//!   submit writes one tagged frame and returns immediately with its
+//!   ticket; any number may be in flight on the one connection, and
+//!   `wait` collects responses in *any* order (the server tags each
+//!   response with its request id). This is how a single connection
+//!   saturates every shard of the server.
+//! * [`Client::call`] and the typed helpers — the blocking convenience
+//!   layer (submit + wait for one request), with the original reconnect /
+//!   retry discipline when nothing else is in flight.
+//!
+//! Transport and framing failures are `Err` (after the configured
+//! reconnect attempts), while server-sent `Error` frames come back as
 //! `Ok(WireResponse::Error { .. })` so callers like the load generator can
 //! count `Overloaded` (expected under backpressure) separately from
 //! protocol failures (never expected). The typed convenience methods fold
 //! server errors into `anyhow` errors for ordinary callers.
+//!
+//! Set [`ClientConfig::version`] below 3 to speak an older protocol:
+//! frames go out untagged and responses are matched in arrival order (the
+//! server answers pre-v3 frames strictly in order), which is exactly the
+//! v1/v2 behavior — used by the compatibility tests and the sequential
+//! baseline of `benches/serve_loopback.rs`.
 
-use std::io::{BufReader, BufWriter};
+use std::collections::{HashMap, VecDeque};
+use std::io::BufReader;
 use std::net::TcpStream;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::serve::proto::{
-    self, ErrorCode, HealthWire, MetricsWire, WireDecision, WireReply, WireRequest, WireResponse,
+    self, BatchItem, ErrorCode, HealthWire, MetricsWire, WireDecision, WireReply, WireRequest,
+    WireResponse,
 };
 
 /// Client tuning knobs.
@@ -25,10 +44,15 @@ pub struct ClientConfig {
     /// Socket read/write timeout per call.
     pub timeout: Duration,
     /// Transport failures tolerated per call before giving up (each retry
-    /// reconnects from scratch).
+    /// reconnects from scratch). Only applies when no other requests are
+    /// pipelined on the connection — a reconnect would lose them.
     pub reconnect_attempts: u32,
     /// Pause between reconnect attempts.
     pub reconnect_backoff: Duration,
+    /// Protocol version to speak, clamped to
+    /// `proto::MIN_VERSION..=proto::VERSION`. Pre-v3 sessions send
+    /// untagged frames and match responses in arrival order.
+    pub version: u8,
 }
 
 impl Default for ClientConfig {
@@ -37,17 +61,31 @@ impl Default for ClientConfig {
             timeout: Duration::from_secs(10),
             reconnect_attempts: 2,
             reconnect_backoff: Duration::from_millis(50),
+            version: proto::VERSION,
         }
     }
 }
 
-/// Blocking connection to a serve endpoint. One in-flight request at a
-/// time (the protocol is strictly request/response per connection); use
-/// one client per thread to pipeline.
+/// One live connection: the write half plus a *persistent* buffered
+/// reader. The reader must live as long as the connection — a throwaway
+/// `BufReader` per response could buffer (and then drop) the next
+/// pipelined response behind the one being read.
+struct Conn {
+    write: TcpStream,
+    read: BufReader<TcpStream>,
+}
+
+/// Blocking connection to a serve endpoint with optional pipelining.
 pub struct Client {
     addr: String,
     cfg: ClientConfig,
-    stream: Option<TcpStream>,
+    conn: Option<Conn>,
+    next_id: u64,
+    /// Submitted-but-unwaited request ids, in submit order (the order a
+    /// pre-v3 server answers in).
+    pending: VecDeque<u64>,
+    /// Responses that arrived while waiting for a different id.
+    completed: HashMap<u64, WireResponse>,
 }
 
 impl Client {
@@ -57,7 +95,14 @@ impl Client {
     }
 
     pub fn with_config(addr: impl Into<String>, cfg: ClientConfig) -> Result<Client> {
-        let mut c = Client { addr: addr.into(), cfg, stream: None };
+        let mut c = Client {
+            addr: addr.into(),
+            cfg,
+            conn: None,
+            next_id: 1,
+            pending: VecDeque::new(),
+            completed: HashMap::new(),
+        };
         c.ensure_connected()?;
         Ok(c)
     }
@@ -66,19 +111,206 @@ impl Client {
         &self.addr
     }
 
-    fn ensure_connected(&mut self) -> Result<&mut TcpStream> {
-        if self.stream.is_none() {
+    /// Protocol version this client speaks.
+    pub fn version(&self) -> u8 {
+        self.cfg.version.clamp(proto::MIN_VERSION, proto::VERSION)
+    }
+
+    /// Requests submitted and not yet waited for.
+    pub fn in_flight(&self) -> usize {
+        self.pending.len()
+    }
+
+    fn ensure_connected(&mut self) -> Result<&mut Conn> {
+        if self.conn.is_none() {
             let s = TcpStream::connect(&self.addr)
                 .with_context(|| format!("connecting to {}", self.addr))?;
             s.set_read_timeout(Some(self.cfg.timeout))?;
             s.set_write_timeout(Some(self.cfg.timeout))?;
             s.set_nodelay(true).ok();
-            self.stream = Some(s);
+            let read = BufReader::new(s.try_clone()?);
+            self.conn = Some(Conn { write: s, read });
         }
-        Ok(self.stream.as_mut().unwrap())
+        Ok(self.conn.as_mut().unwrap())
     }
 
-    /// Raw call: send one request frame, read one response frame.
+    /// Drop the connection and every still-pending request (their
+    /// responses can never arrive on a new socket). Responses already
+    /// received and buffered stay claimable — they were complete before
+    /// the failure.
+    fn poison(&mut self) {
+        self.conn = None;
+        self.pending.clear();
+    }
+
+    /// Pipelined submit: write one tagged request frame and return its
+    /// ticket without waiting. Any number of submits may be outstanding;
+    /// collect them with [`Client::wait`] in any order.
+    ///
+    /// Unlike [`Client::call`], a transport failure here is not retried:
+    /// with other requests possibly in flight, a transparent reconnect
+    /// would silently lose them — the error surfaces and poisons the
+    /// connection (every outstanding `wait` then fails fast).
+    pub fn submit(&mut self, req: &WireRequest) -> Result<u64> {
+        let v = self.version();
+        let min = proto::request_min_version(req);
+        if min > v {
+            // Silently up-versioning the frame would make the server
+            // answer it pipelined while this client matches responses in
+            // order — responses would cross. Refuse instead.
+            bail!("request requires protocol v{min} but this client speaks v{v}");
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let frame = proto::encode_request_versioned(req, v, id);
+        let had_pending = !self.pending.is_empty();
+        let wrote = self
+            .ensure_connected()
+            .and_then(|conn| proto::write_frame(&mut conn.write, &frame));
+        match wrote {
+            Ok(()) => {
+                self.pending.push_back(id);
+                Ok(id)
+            }
+            Err(e) => {
+                self.poison();
+                Err(if had_pending {
+                    e.context("transport failed with pipelined requests in flight; all lost")
+                } else {
+                    e
+                })
+            }
+        }
+    }
+
+    /// Collect the response for one submitted ticket, in any order.
+    /// Responses for *other* tickets that arrive first are buffered for
+    /// their own `wait`. A transport failure poisons the connection and
+    /// fails every outstanding ticket.
+    pub fn wait(&mut self, id: u64) -> Result<WireResponse> {
+        if let Some(resp) = self.completed.remove(&id) {
+            return Ok(resp);
+        }
+        if !self.pending.contains(&id) {
+            bail!(
+                "request {id} is not in flight (never submitted, lost to a reconnect, \
+                 or already waited for)"
+            );
+        }
+        loop {
+            let frame = match self.read_response() {
+                Ok(f) => f,
+                Err(e) => {
+                    self.poison();
+                    return Err(e.context("reading pipelined response"));
+                }
+            };
+            let (got, resp) = self.admit(frame)?;
+            if got == id {
+                return Ok(resp);
+            }
+            self.completed.insert(got, resp);
+        }
+    }
+
+    /// Deadline-bounded [`Client::wait`]: returns `Ok(None)` — connection
+    /// intact, ticket still in flight — if the response has not arrived by
+    /// `deadline`. Lets a pipelined caller (the load generator) collect
+    /// responses opportunistically during idle gaps without stalling its
+    /// own schedule behind a slow request.
+    ///
+    /// Deadline precision: ~1 ms (the probe read timeout). A frame whose
+    /// first bytes arrived but then stalls mid-body can hold the probe up
+    /// to `proto::MAX_STALL_RETRIES` x 1 ms (~40 ms) past the deadline —
+    /// bounded, and only reachable when the peer stalls inside a frame.
+    pub fn wait_until(&mut self, id: u64, deadline: Instant) -> Result<Option<WireResponse>> {
+        if let Some(resp) = self.completed.remove(&id) {
+            return Ok(Some(resp));
+        }
+        if !self.pending.contains(&id) {
+            bail!(
+                "request {id} is not in flight (never submitted, lost to a reconnect, \
+                 or already waited for)"
+            );
+        }
+        loop {
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok(None);
+            }
+            // Short fixed probe so `read_frame`'s internal mid-frame
+            // retries (MAX_STALL_RETRIES of them) cannot multiply a large
+            // remaining-time window into seconds of overshoot.
+            let probe = Duration::from_millis(1);
+            let read = {
+                let conn = self.conn.as_mut().ok_or_else(|| anyhow!("not connected"))?;
+                let _ = conn.read.get_ref().set_read_timeout(Some(probe));
+                let r = proto::read_frame(&mut conn.read);
+                let _ = conn.read.get_ref().set_read_timeout(Some(self.cfg.timeout));
+                r
+            };
+            let frame = match read {
+                Ok(Some(blob)) => match proto::decode_response(&blob) {
+                    Ok(f) => f,
+                    Err(e) => {
+                        self.poison();
+                        return Err(e.context("decoding pipelined response"));
+                    }
+                },
+                Ok(None) => {
+                    self.poison();
+                    return Err(anyhow!("server closed the connection"));
+                }
+                Err(e) => {
+                    if let Some(ioe) = e.downcast_ref::<std::io::Error>() {
+                        if matches!(
+                            ioe.kind(),
+                            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                        ) {
+                            continue; // nothing arrived yet; re-check deadline
+                        }
+                    }
+                    self.poison();
+                    return Err(e.context("reading pipelined response"));
+                }
+            };
+            let (got, resp) = self.admit(frame)?;
+            if got == id {
+                return Ok(Some(resp));
+            }
+            self.completed.insert(got, resp);
+        }
+    }
+
+    /// Match one arrived response frame to its ticket — by tag at v3, by
+    /// submit order (FIFO) below — removing the ticket from `pending`.
+    fn admit(&mut self, frame: proto::ResponseFrame) -> Result<(u64, WireResponse)> {
+        let got = if self.version() >= 3 {
+            frame.request_id
+        } else {
+            // Pre-v3 servers answer strictly in submit order.
+            self.pending.front().copied().unwrap_or(0)
+        };
+        match self.pending.iter().position(|&p| p == got) {
+            Some(pos) => {
+                self.pending.remove(pos);
+            }
+            None => {
+                self.poison();
+                bail!("server answered unknown request id {got}");
+            }
+        }
+        Ok((got, frame.resp))
+    }
+
+    fn read_response(&mut self) -> Result<proto::ResponseFrame> {
+        let conn = self.conn.as_mut().ok_or_else(|| anyhow!("not connected"))?;
+        let blob = proto::read_frame(&mut conn.read)?
+            .ok_or_else(|| anyhow!("server closed the connection"))?;
+        proto::decode_response(&blob)
+    }
+
+    /// Raw call: send one request frame, wait for its response frame.
     /// Reconnects and retries on transport errors up to the configured
     /// attempt budget; server `Error` frames are returned as `Ok`.
     ///
@@ -87,9 +319,20 @@ impl Client {
     /// retried for idempotent requests — re-sending a `LearnWay` whose
     /// reply was lost could apply the learning twice, and re-sending a
     /// `StreamPush` would advance the stream twice, so those surface as
-    /// errors for the caller to decide.
+    /// errors for the caller to decide. With pipelined requests already in
+    /// flight there is no retry at all (a reconnect would lose them).
     pub fn call(&mut self, req: &WireRequest) -> Result<WireResponse> {
-        let frame = proto::encode_request(req);
+        let v = self.version();
+        let min = proto::request_min_version(req);
+        if min > v {
+            // Permanent condition: fail before the retry loop can tear
+            // down a healthy connection over it.
+            bail!("request requires protocol v{min} but this client speaks v{v}");
+        }
+        if !self.pending.is_empty() {
+            let id = self.submit(req)?;
+            return self.wait(id);
+        }
         let idempotent =
             !matches!(req, WireRequest::LearnWay { .. } | WireRequest::StreamPush { .. });
         let mut last_err: Option<anyhow::Error> = None;
@@ -97,15 +340,15 @@ impl Client {
             if attempt > 0 {
                 std::thread::sleep(self.cfg.reconnect_backoff);
             }
-            match self.try_call(&frame) {
+            match self.try_call(req) {
                 Ok(resp) => return Ok(resp),
                 Err(CallError::NotSent(e)) => {
-                    self.stream = None;
+                    self.poison();
                     last_err = Some(e);
                 }
                 Err(CallError::Sent(e)) => {
                     // Drop the (possibly poisoned) connection before retry.
-                    self.stream = None;
+                    self.poison();
                     if !idempotent {
                         return Err(e.context(
                             "transport failed after a non-idempotent request may have \
@@ -119,23 +362,25 @@ impl Client {
         Err(last_err.unwrap_or_else(|| anyhow!("call failed with no attempts")))
     }
 
-    fn try_call(&mut self, frame: &[u8]) -> std::result::Result<WireResponse, CallError> {
-        let stream = self.ensure_connected().map_err(CallError::NotSent)?;
-        let cloned = stream.try_clone().map_err(|e| CallError::NotSent(e.into()))?;
-        let mut writer = BufWriter::new(cloned);
-        proto::write_frame(&mut writer, frame).map_err(CallError::Sent)?;
-        drop(writer);
-        let reader_stream = self
-            .stream
-            .as_mut()
-            .unwrap()
-            .try_clone()
-            .map_err(|e| CallError::Sent(e.into()))?;
-        let mut reader = BufReader::new(reader_stream);
-        let blob = proto::read_frame(&mut reader)
+    fn try_call(&mut self, req: &WireRequest) -> std::result::Result<WireResponse, CallError> {
+        let v = self.version();
+        let id = self.next_id;
+        self.next_id += 1;
+        let frame = proto::encode_request_versioned(req, v, id);
+        self.ensure_connected().map_err(CallError::NotSent)?;
+        let conn = self.conn.as_mut().unwrap();
+        proto::write_frame(&mut conn.write, &frame).map_err(CallError::Sent)?;
+        let blob = proto::read_frame(&mut conn.read)
             .map_err(CallError::Sent)?
             .ok_or_else(|| CallError::Sent(anyhow!("server closed the connection")))?;
-        proto::decode_response(&blob).map_err(CallError::Sent)
+        let rf = proto::decode_response(&blob).map_err(CallError::Sent)?;
+        if v >= 3 && rf.request_id != id {
+            return Err(CallError::Sent(anyhow!(
+                "response tag {} does not match request {id}",
+                rf.request_id
+            )));
+        }
+        Ok(rf.resp)
     }
 
     fn expect_reply(&mut self, req: &WireRequest) -> Result<WireReply> {
@@ -151,6 +396,18 @@ impl Client {
     /// Classify with the model's built-in head.
     pub fn classify(&mut self, input: Vec<u8>) -> Result<WireReply> {
         self.expect_reply(&WireRequest::Classify { input })
+    }
+
+    /// Classify a batch of session-less windows in one frame (v3); items
+    /// come back in input order, each independently a reply or an error.
+    pub fn classify_batch(&mut self, inputs: Vec<Vec<u8>>) -> Result<Vec<BatchItem>> {
+        match self.call(&WireRequest::ClassifyBatch { inputs })? {
+            WireResponse::ReplyBatch(items) => Ok(items),
+            WireResponse::Error { code, message } => {
+                bail!("server error ({code:?}): {message}")
+            }
+            other => bail!("unexpected response {other:?}"),
+        }
     }
 
     /// Classify against a session's learned head.

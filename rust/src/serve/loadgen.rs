@@ -14,12 +14,21 @@
 //! `ClassifySession` on a random pre-warmed session. Sessions span all
 //! shards, so a run exercises cross-shard routing by construction.
 //!
+//! Two protocol-v3 load shapes stack on top:
+//!
+//! * `pipeline: D` keeps up to D requests in flight per connection via
+//!   [`Client::submit`]/[`Client::wait`] instead of one blocking call at a
+//!   time — a single connection can then saturate every shard;
+//! * `batch: N` replaces the session mix with `ClassifyBatch` frames of N
+//!   session-less windows each (requires a model with a built-in head).
+//!
 //! Stream mode opens one stream session per connection and pushes
 //! fixed-size chunks, paced to a sample rate (e.g. 16 kHz audio) or
 //! free-running; it reports **per-chunk** and **per-decision** latency
 //! separately, since a decision's latency is what an end user of
 //! streaming KWS actually observes.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -28,7 +37,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::metrics::{HistSnapshot, LatencyHistogram};
 use crate::serve::client::{Client, ClientConfig, Outcome};
-use crate::serve::proto::{ErrorCode, MetricsWire, WireRequest, WireResponse};
+use crate::serve::proto::{BatchItem, ErrorCode, MetricsWire, WireRequest, WireResponse};
 use crate::util::rng::Rng;
 
 /// Load generator configuration.
@@ -46,6 +55,13 @@ pub struct LoadgenConfig {
     pub shots: usize,
     /// Worker connections draining the arrival schedule.
     pub connections: usize,
+    /// Requests kept in flight per connection (protocol-v3 pipelining);
+    /// 1 = the classic one-blocking-call-at-a-time client.
+    pub pipeline: usize,
+    /// When > 0, every arrival is a `ClassifyBatch` of this many
+    /// session-less windows instead of the session mix (needs a model
+    /// with a built-in head).
+    pub batch: usize,
     pub seed: u64,
 }
 
@@ -59,6 +75,8 @@ impl Default for LoadgenConfig {
             sessions: 16,
             shots: 2,
             connections: 4,
+            pipeline: 1,
+            batch: 0,
             seed: 1,
         }
     }
@@ -124,16 +142,26 @@ struct Counters {
 }
 
 /// Run the load generator against a serve endpoint. Warms every session
-/// with one learned way first so classification traffic is always valid.
+/// with one learned way first so classification traffic is always valid
+/// (batch mode is session-less and skips the warmup).
 pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
     if cfg.rps <= 0.0 {
         bail!("--rps must be positive");
     }
-    if cfg.sessions == 0 {
+    if cfg.sessions == 0 && cfg.batch == 0 {
         bail!("--sessions must be at least 1");
     }
     if !(0.0..=1.0).contains(&cfg.learn_frac) {
         bail!("--learn-frac must be in [0, 1]");
+    }
+    if cfg.pipeline == 0 {
+        bail!("--pipeline must be at least 1");
+    }
+    if cfg.batch > crate::serve::proto::MAX_LIST {
+        bail!(
+            "--batch must be at most {} (the protocol's list bound)",
+            crate::serve::proto::MAX_LIST
+        );
     }
 
     // ---- probe + session warmup -----------------------------------------
@@ -145,28 +173,30 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
     let health = probe.health().context("health probe")?;
     let input_len = health.input_len as usize;
     let mut rng = Rng::new(cfg.seed);
-    for session in 1..=cfg.sessions {
-        let shots: Vec<Vec<u8>> = (0..cfg.shots.max(1))
-            .map(|_| rand_input(&mut rng, input_len))
-            .collect();
-        let mut warmed = false;
-        for _ in 0..50 {
-            match probe.call(&WireRequest::LearnWay { session, shots: shots.clone() }) {
-                Ok(WireResponse::Error { code: ErrorCode::Overloaded, .. }) => {
-                    std::thread::sleep(Duration::from_millis(10));
+    if cfg.batch == 0 {
+        for session in 1..=cfg.sessions {
+            let shots: Vec<Vec<u8>> = (0..cfg.shots.max(1))
+                .map(|_| rand_input(&mut rng, input_len))
+                .collect();
+            let mut warmed = false;
+            for _ in 0..50 {
+                match probe.call(&WireRequest::LearnWay { session, shots: shots.clone() }) {
+                    Ok(WireResponse::Error { code: ErrorCode::Overloaded, .. }) => {
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    Ok(WireResponse::Error { code, message }) => {
+                        bail!("warming session {session} failed ({code:?}): {message}");
+                    }
+                    Ok(_) => {
+                        warmed = true;
+                        break;
+                    }
+                    Err(e) => return Err(e).context("warming sessions"),
                 }
-                Ok(WireResponse::Error { code, message }) => {
-                    bail!("warming session {session} failed ({code:?}): {message}");
-                }
-                Ok(_) => {
-                    warmed = true;
-                    break;
-                }
-                Err(e) => return Err(e).context("warming sessions"),
             }
-        }
-        if !warmed {
-            bail!("could not warm session {session}: server persistently overloaded");
+            if !warmed {
+                bail!("could not warm session {session}: server persistently overloaded");
+            }
         }
     }
 
@@ -202,56 +232,125 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
         let counters = counters.clone();
         let hist = hist.clone();
         let addr = cfg.addr.clone();
-        let (seed, sessions, learn_frac, shots) =
-            (cfg.seed, cfg.sessions, cfg.learn_frac, cfg.shots.max(1));
+        let (seed, sessions, learn_frac, shots, batch, depth) = (
+            cfg.seed,
+            cfg.sessions,
+            cfg.learn_frac,
+            cfg.shots.max(1),
+            cfg.batch,
+            cfg.pipeline.max(1),
+        );
         workers.push(
             std::thread::Builder::new()
                 .name(format!("loadgen-{wid}"))
                 .spawn(move || -> Result<()> {
                     let mut client = Client::connect(&addr)?;
-                    loop {
-                        let i = counters.next.fetch_add(1, Ordering::Relaxed);
-                        if i >= schedule.len() {
-                            return Ok(());
-                        }
-                        let due = start + schedule[i];
-                        let now = Instant::now();
-                        if due > now {
-                            std::thread::sleep(due - now);
-                        }
-                        // Per-arrival deterministic op stream.
+                    // Per-arrival deterministic op stream.
+                    let build = |i: usize| -> WireRequest {
                         let mut op_rng =
                             Rng::new(seed ^ (i as u64).wrapping_mul(0xA24B_AED4_963E_E407));
-                        let session = 1 + op_rng.below(sessions);
-                        let req = if op_rng.uniform() < learn_frac {
-                            WireRequest::LearnWay {
-                                session,
-                                shots: (0..shots)
+                        if batch > 0 {
+                            WireRequest::ClassifyBatch {
+                                inputs: (0..batch)
                                     .map(|_| rand_input(&mut op_rng, input_len))
                                     .collect(),
                             }
                         } else {
-                            WireRequest::ClassifySession {
-                                session,
-                                input: rand_input(&mut op_rng, input_len),
+                            let session = 1 + op_rng.below(sessions);
+                            if op_rng.uniform() < learn_frac {
+                                WireRequest::LearnWay {
+                                    session,
+                                    shots: (0..shots)
+                                        .map(|_| rand_input(&mut op_rng, input_len))
+                                        .collect(),
+                                }
+                            } else {
+                                WireRequest::ClassifySession {
+                                    session,
+                                    input: rand_input(&mut op_rng, input_len),
+                                }
                             }
-                        };
-                        let result = client.call(&req);
-                        // Open-loop latency: from scheduled arrival.
-                        hist.record(due.elapsed());
-                        match Outcome::of(&result) {
-                            Outcome::Ok => counters.ok.fetch_add(1, Ordering::Relaxed),
-                            Outcome::Overloaded => {
-                                counters.overloaded.fetch_add(1, Ordering::Relaxed)
+                        }
+                    };
+                    if depth <= 1 {
+                        // Classic blocking path (with the client's
+                        // reconnect/retry discipline).
+                        loop {
+                            let i = counters.next.fetch_add(1, Ordering::Relaxed);
+                            if i >= schedule.len() {
+                                return Ok(());
                             }
-                            Outcome::AppError => {
-                                counters.app_errors.fetch_add(1, Ordering::Relaxed)
+                            let due = start + schedule[i];
+                            let now = Instant::now();
+                            if due > now {
+                                std::thread::sleep(due - now);
                             }
-                            Outcome::ProtocolError => {
-                                counters.protocol_errors.fetch_add(1, Ordering::Relaxed)
-                            }
-                        };
+                            let result = client.call(&build(i));
+                            // Open-loop latency: from scheduled arrival.
+                            hist.record(due.elapsed());
+                            record_result(&result, &counters);
+                        }
                     }
+                    // Pipelined path: keep up to `depth` requests in
+                    // flight, draining the oldest when the window is full.
+                    let mut inflight: VecDeque<(u64, Instant)> = VecDeque::new();
+                    loop {
+                        let i = counters.next.fetch_add(1, Ordering::Relaxed);
+                        if i >= schedule.len() {
+                            break;
+                        }
+                        let due = start + schedule[i];
+                        while inflight.len() >= depth {
+                            drain_one(&mut client, &mut inflight, &hist, &counters);
+                        }
+                        // Use idle time before the next arrival to collect
+                        // responses that have already arrived, so their
+                        // recorded latency reflects the server rather than
+                        // client-side hold time (at low rates the window
+                        // would otherwise only drain when full — up to
+                        // depth x gap later). Deadline-bounded: a slow
+                        // response never stalls the arrival schedule.
+                        while let Some(&(id, d)) = inflight.front() {
+                            if Instant::now() >= due {
+                                break;
+                            }
+                            match client.wait_until(id, due) {
+                                Ok(Some(resp)) => {
+                                    inflight.pop_front();
+                                    hist.record(d.elapsed());
+                                    record_result(&Ok(resp), &counters);
+                                }
+                                Ok(None) => break, // deadline reached
+                                Err(e) => {
+                                    inflight.pop_front();
+                                    hist.record(d.elapsed());
+                                    record_result(&Err(e), &counters);
+                                }
+                            }
+                        }
+                        let now = Instant::now();
+                        if due > now {
+                            std::thread::sleep(due - now);
+                        }
+                        match client.submit(&build(i)) {
+                            Ok(id) => inflight.push_back((id, due)),
+                            Err(_) => {
+                                // The failed submit and every request lost
+                                // with the connection count as protocol
+                                // errors, latencies from their dues.
+                                hist.record(due.elapsed());
+                                counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                                for (_, d) in inflight.drain(..) {
+                                    hist.record(d.elapsed());
+                                    counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                        }
+                    }
+                    while !inflight.is_empty() {
+                        drain_one(&mut client, &mut inflight, &hist, &counters);
+                    }
+                    Ok(())
                 })
                 .context("spawning loadgen worker")?,
         );
@@ -277,6 +376,46 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
         latency: hist.snapshot(),
         server,
     })
+}
+
+/// Wait for the oldest in-flight request and account its outcome.
+fn drain_one(
+    client: &mut Client,
+    inflight: &mut VecDeque<(u64, Instant)>,
+    hist: &LatencyHistogram,
+    counters: &Counters,
+) {
+    if let Some((id, due)) = inflight.pop_front() {
+        let result = client.wait(id);
+        hist.record(due.elapsed());
+        record_result(&result, counters);
+    }
+}
+
+/// Account one response. A `ReplyBatch` counts as one frame: overloaded if
+/// any window was shed, an app error if any window failed, ok otherwise.
+fn record_result(result: &Result<WireResponse>, counters: &Counters) {
+    let bucket = match result {
+        Ok(WireResponse::ReplyBatch(items)) => {
+            if items
+                .iter()
+                .any(|it| matches!(it, BatchItem::Error { code: ErrorCode::Overloaded, .. }))
+            {
+                &counters.overloaded
+            } else if items.iter().any(|it| matches!(it, BatchItem::Error { .. })) {
+                &counters.app_errors
+            } else {
+                &counters.ok
+            }
+        }
+        _ => match Outcome::of(result) {
+            Outcome::Ok => &counters.ok,
+            Outcome::Overloaded => &counters.overloaded,
+            Outcome::AppError => &counters.app_errors,
+            Outcome::ProtocolError => &counters.protocol_errors,
+        },
+    };
+    bucket.fetch_add(1, Ordering::Relaxed);
 }
 
 fn rand_input(rng: &mut Rng, len: usize) -> Vec<u8> {
@@ -548,6 +687,39 @@ mod tests {
         cfg.learn_frac = 0.1;
         cfg.sessions = 0;
         assert!(run(&cfg).is_err());
+        cfg.sessions = 4;
+        cfg.pipeline = 0;
+        assert!(run(&cfg).is_err());
+        cfg.pipeline = 1;
+        cfg.batch = crate::serve::proto::MAX_LIST + 1;
+        assert!(run(&cfg).is_err(), "oversized --batch must fail fast");
+    }
+
+    #[test]
+    fn batch_replies_count_as_one_frame() {
+        let counters = Counters {
+            next: AtomicUsize::new(0),
+            ok: AtomicU64::new(0),
+            overloaded: AtomicU64::new(0),
+            app_errors: AtomicU64::new(0),
+            protocol_errors: AtomicU64::new(0),
+        };
+        let ok_batch: Result<WireResponse> =
+            Ok(WireResponse::ReplyBatch(vec![BatchItem::Reply(Default::default())]));
+        record_result(&ok_batch, &counters);
+        let shed: Result<WireResponse> = Ok(WireResponse::ReplyBatch(vec![
+            BatchItem::Reply(Default::default()),
+            BatchItem::Error { code: ErrorCode::Overloaded, message: "full".into() },
+        ]));
+        record_result(&shed, &counters);
+        let failed: Result<WireResponse> = Ok(WireResponse::ReplyBatch(vec![BatchItem::Error {
+            code: ErrorCode::App,
+            message: "bad window".into(),
+        }]));
+        record_result(&failed, &counters);
+        assert_eq!(counters.ok.load(Ordering::Relaxed), 1);
+        assert_eq!(counters.overloaded.load(Ordering::Relaxed), 1);
+        assert_eq!(counters.app_errors.load(Ordering::Relaxed), 1);
     }
 
     #[test]

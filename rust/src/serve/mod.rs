@@ -6,21 +6,28 @@
 //! boundary. Four pieces (see `DESIGN.md` §Serve and §Streaming):
 //!
 //! * [`proto`]  — length-prefixed, versioned binary wire protocol (v2
-//!   adds the incremental stream ops);
+//!   adds the incremental stream ops; v3 adds tagged frames for request
+//!   pipelining and the `ClassifyBatch` op);
 //! * [`server`] — thread-per-connection TCP server over N coordinator
-//!   shards: sessions (and their open streams) route by stable
-//!   `SessionId` hash, session-less classification fans out round-robin,
-//!   queue overflow surfaces as an explicit `Overloaded` wire error;
-//! * [`client`] — blocking client library with reconnect + timeouts;
-//! * [`loadgen`] — open-loop load generators: Poisson request traffic and
-//!   paced streaming sessions, both reporting p50/p95/p99 latency from
-//!   the shared fixed-bucket histogram.
+//!   shards, with a reader/dispatcher/writer split per connection so v3
+//!   requests pipeline (responses return in completion order): sessions
+//!   (and their open streams) route by stable `SessionId` hash,
+//!   session-less classification fans out round-robin — trying every
+//!   shard before surfacing backpressure — and queue overflow surfaces as
+//!   an explicit `Overloaded` wire error;
+//! * [`client`] — blocking client library with reconnect + timeouts plus
+//!   pipelined `submit`/`wait` primitives;
+//! * [`loadgen`] — open-loop load generators: Poisson request traffic
+//!   (optionally pipelined and/or batched) and paced streaming sessions,
+//!   all reporting p50/p95/p99 latency from the shared fixed-bucket
+//!   histogram.
 //!
 //! Quickstart (no artifacts needed — uses the built-in demo model):
 //!
 //! ```text
 //! cargo run --release -- serve --shards 2 --workers 2
 //! cargo run --release -- loadgen --rps 200 --duration 10 --learn-frac 0.05
+//! cargo run --release -- loadgen --rps 2000 --pipeline 32 --batch 16
 //! cargo run --release -- loadgen --stream --chunk 8 --hop 4 --duration 10
 //! ```
 
@@ -32,6 +39,7 @@ pub mod server;
 pub use client::{Client, ClientConfig, Outcome};
 pub use loadgen::{LoadReport, LoadgenConfig, StreamLoadConfig, StreamReport};
 pub use proto::{
-    ErrorCode, HealthWire, MetricsWire, WireDecision, WireReply, WireRequest, WireResponse,
+    BatchItem, ErrorCode, HealthWire, MetricsWire, RequestFrame, ResponseFrame, WireDecision,
+    WireReply, WireRequest, WireResponse,
 };
 pub use server::{shard_of, ServeConfig, Server};

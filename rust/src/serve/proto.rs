@@ -4,7 +4,8 @@
 //!
 //! ```text
 //! frame   := len:u32 | body                  len = body length in bytes
-//! body    := version:u8 | opcode:u8 | payload
+//! body    := version:u8 | opcode:u8 | tag | payload
+//! tag     := request_id:u64                  (v3+ frames only; absent before)
 //! bytes   := n:u32 | raw[n]
 //! string  := bytes (utf-8)
 //! opt<T>  := 0:u8 | 1:u8 T
@@ -24,6 +25,7 @@
 //! | `0x07` | v2    | request   | `StreamOpen { session: u64, hop: u32 }` |
 //! | `0x08` | v2    | request   | `StreamPush { session: u64, samples: bytes }` |
 //! | `0x09` | v2    | request   | `StreamClose { session: u64 }` |
+//! | `0x0A` | v3    | request   | `ClassifyBatch { inputs: list<bytes> }` |
 //! | `0x81` | v1    | response  | `Reply { predicted?, logits?, learned_way?, cycles? }` |
 //! | `0x82` | v1    | response  | `Health { shards, sessions, input_len, embed_dim, window (v2), channels (v2) }` |
 //! | `0x83` | v1    | response  | `Metrics { counters..., latency percentiles }` |
@@ -31,19 +33,34 @@
 //! | `0x85` | v2    | response  | `StreamOpened { window: u32, hop: u32 }` |
 //! | `0x86` | v2    | response  | `StreamDecisions(list<decision>)` |
 //! | `0x87` | v2    | response  | `StreamClosed { existed: u8, windows: u64 }` |
+//! | `0x88` | v3    | response  | `ReplyBatch(list<item>)` |
 //! | `0xFF` | v1    | response  | `Error { code: u8, message: string }` |
 //!
 //! # Versioning
 //!
 //! Every frame carries its version byte. This build encodes requests at
 //! [`VERSION`] and decodes any version from [`MIN_VERSION`] up to
-//! [`VERSION`]: v2 is a strict superset of v1, so v1 frames still decode
-//! (their `Health`/`Metrics` payloads simply lack the fields v2 appended,
-//! which decode as zero). The server replies **at the requester's
-//! version** ([`encode_response_versioned`]), omitting v2-only payload
-//! fields from v1 frames, so strict v1 clients keep working against a v2
-//! server. The stream opcodes exist only in v2 — a v1 frame carrying one
-//! is malformed.
+//! [`VERSION`]: each version is a strict superset of the one before, so
+//! older frames still decode (payload fields a later version appended
+//! simply decode as zero; the v3 `request_id` tag is absent and reads as
+//! 0). The server replies **at the requester's version**
+//! ([`encode_response_versioned`]), omitting newer payload fields and the
+//! tag from older frames, so strict v1/v2 clients keep working against a
+//! v3 server. Version-gated opcodes (streams in v2, batch in v3) inside an
+//! older frame are malformed.
+//!
+//! # Pipelining (v3)
+//!
+//! A v3 request frame carries a client-assigned `request_id` that the
+//! server echoes in the response frame. That makes responses self-
+//! identifying, so a client may keep many requests in flight on one
+//! connection and the server completes them **in whatever order its
+//! workers finish** — out-of-order responses are expected and correct.
+//! Pre-v3 frames carry no tag; the server answers them strictly in order
+//! (one at a time), preserving the original request/response discipline.
+//! `ClassifyBatch` carries N session-less windows in one frame; the server
+//! fans them out across shards and answers with one `ReplyBatch` whose
+//! items are in input order, each independently a reply or an error.
 //!
 //! A frame whose length prefix exceeds [`MAX_FRAME`] bytes (or is too short
 //! to hold the header), whose version byte is unknown, or whose payload
@@ -59,7 +76,7 @@ use anyhow::{bail, Result};
 
 /// Highest protocol version this build speaks; every encoded frame
 /// carries it.
-pub const VERSION: u8 = 2;
+pub const VERSION: u8 = 3;
 
 /// Oldest protocol version still accepted on decode.
 pub const MIN_VERSION: u8 = 1;
@@ -68,6 +85,10 @@ pub const MIN_VERSION: u8 = 1;
 /// prefixes (a learn frame of 64 shots x 16 kB inputs is ~1 MB, so 16 MiB
 /// leaves ample headroom).
 pub const MAX_FRAME: usize = 16 << 20;
+
+/// Upper bound on list-of-inputs ops (`LearnWay` shots, `ClassifyBatch`
+/// windows) — a hostile count must not drive allocation.
+pub const MAX_LIST: usize = 4096;
 
 // Request opcodes.
 const OP_CLASSIFY: u8 = 0x01;
@@ -79,6 +100,7 @@ const OP_METRICS: u8 = 0x06;
 const OP_STREAM_OPEN: u8 = 0x07;
 const OP_STREAM_PUSH: u8 = 0x08;
 const OP_STREAM_CLOSE: u8 = 0x09;
+const OP_CLASSIFY_BATCH: u8 = 0x0A;
 
 // Response opcodes.
 const OP_REPLY: u8 = 0x81;
@@ -88,6 +110,7 @@ const OP_EVICTED: u8 = 0x84;
 const OP_STREAM_OPENED: u8 = 0x85;
 const OP_STREAM_DECISIONS: u8 = 0x86;
 const OP_STREAM_CLOSED: u8 = 0x87;
+const OP_REPLY_BATCH: u8 = 0x88;
 const OP_ERROR: u8 = 0xFF;
 
 /// Client -> server messages.
@@ -114,6 +137,10 @@ pub enum WireRequest {
     StreamPush { session: u64, samples: Vec<u8> },
     /// v2: close a session's stream (its learned head survives).
     StreamClose { session: u64 },
+    /// v3: classify N session-less windows in one frame; the server fans
+    /// them out across shards and answers with a `ReplyBatch` in input
+    /// order.
+    ClassifyBatch { inputs: Vec<Vec<u8>> },
 }
 
 /// Server -> client messages.
@@ -130,6 +157,16 @@ pub enum WireResponse {
     /// v2: stream closed; whether one existed and how many windows it
     /// emitted over its lifetime.
     StreamClosed { existed: bool, windows: u64 },
+    /// v3: one item per `ClassifyBatch` window, in input order.
+    ReplyBatch(Vec<BatchItem>),
+    Error { code: ErrorCode, message: String },
+}
+
+/// One `ClassifyBatch` outcome: windows succeed or fail independently, so
+/// a single bad window cannot sink its whole frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BatchItem {
+    Reply(WireReply),
     Error { code: ErrorCode, message: String },
 }
 
@@ -183,6 +220,9 @@ pub struct MetricsWire {
     pub stream_chunks: u64,
     /// v2: per-window stream decisions emitted; 0 from a v1 peer.
     pub stream_decisions: u64,
+    /// v3: handler panics caught by workers (the shard survived each one);
+    /// 0 from a pre-v3 peer.
+    pub worker_panics: u64,
     pub mean_latency_us: f64,
     pub p50_latency_us: f64,
     pub p95_latency_us: f64,
@@ -201,6 +241,7 @@ impl From<&crate::coordinator::metrics::MetricsSnapshot> for MetricsWire {
             sim_cycles: s.sim_cycles,
             stream_chunks: s.stream_chunks,
             stream_decisions: s.stream_decisions,
+            worker_panics: s.worker_panics,
             mean_latency_us: s.mean_latency_us,
             p50_latency_us: s.p50_latency_us,
             p95_latency_us: s.p95_latency_us,
@@ -215,12 +256,13 @@ impl MetricsWire {
     /// raw histogram.
     pub fn report(&self) -> String {
         format!(
-            "requests={} completed={} errors={} rejected={} learned_ways={} evictions={} \
-             stream_chunks={} stream_decisions={} \
+            "requests={} completed={} errors={} worker_panics={} rejected={} learned_ways={} \
+             evictions={} stream_chunks={} stream_decisions={} \
              latency mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us sim_cycles={}",
             self.requests,
             self.completed,
             self.errors,
+            self.worker_panics,
             self.rejected,
             self.learn_ways,
             self.evictions,
@@ -267,6 +309,23 @@ impl ErrorCode {
     }
 }
 
+/// One decoded request frame: the peer's protocol version, the pipelining
+/// tag (0 for pre-v3 frames, which carry none), and the request itself.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestFrame {
+    pub version: u8,
+    pub request_id: u64,
+    pub req: WireRequest,
+}
+
+/// One decoded response frame: version, echoed tag (0 pre-v3), response.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResponseFrame {
+    pub version: u8,
+    pub request_id: u64,
+    pub resp: WireResponse,
+}
+
 // ---------------------------------------------------------------------------
 // Encoding
 // ---------------------------------------------------------------------------
@@ -311,91 +370,144 @@ fn put_opt_i32s(out: &mut Vec<u8>, v: &Option<Vec<i32>>) {
     }
 }
 
-fn body(opcode: u8) -> Vec<u8> {
-    vec![VERSION, opcode]
+fn put_reply(out: &mut Vec<u8>, r: &WireReply) {
+    put_opt_u64(out, r.predicted);
+    put_opt_i32s(out, &r.logits);
+    put_opt_u64(out, r.learned_way);
+    put_opt_u64(out, r.sim_cycles);
 }
 
-/// Encode a request as a full frame (length prefix included).
+/// Frame header: version, opcode, and the v3 pipelining tag.
+fn head(v: u8, opcode: u8, request_id: u64) -> Vec<u8> {
+    let mut b = vec![v, opcode];
+    if v >= 3 {
+        put_u64(&mut b, request_id);
+    }
+    b
+}
+
+/// Lowest protocol version that can carry this request (streams: v2,
+/// batch: v3). Clients speaking an older version must refuse such ops
+/// rather than silently up-version the frame — a server treats any v3
+/// frame as pipelined, which would break an in-order client's response
+/// matching.
+pub fn request_min_version(req: &WireRequest) -> u8 {
+    match req {
+        WireRequest::StreamOpen { .. }
+        | WireRequest::StreamPush { .. }
+        | WireRequest::StreamClose { .. } => 2,
+        WireRequest::ClassifyBatch { .. } => 3,
+        _ => 1,
+    }
+}
+
+/// Lowest protocol version that can carry this response.
+fn response_min_version(resp: &WireResponse) -> u8 {
+    match resp {
+        WireResponse::StreamOpened { .. }
+        | WireResponse::StreamDecisions(_)
+        | WireResponse::StreamClosed { .. } => 2,
+        WireResponse::ReplyBatch(_) => 3,
+        _ => 1,
+    }
+}
+
+fn request_opcode(req: &WireRequest) -> u8 {
+    match req {
+        WireRequest::Classify { .. } => OP_CLASSIFY,
+        WireRequest::ClassifySession { .. } => OP_CLASSIFY_SESSION,
+        WireRequest::LearnWay { .. } => OP_LEARN_WAY,
+        WireRequest::EvictSession { .. } => OP_EVICT_SESSION,
+        WireRequest::Health => OP_HEALTH,
+        WireRequest::Metrics => OP_METRICS,
+        WireRequest::StreamOpen { .. } => OP_STREAM_OPEN,
+        WireRequest::StreamPush { .. } => OP_STREAM_PUSH,
+        WireRequest::StreamClose { .. } => OP_STREAM_CLOSE,
+        WireRequest::ClassifyBatch { .. } => OP_CLASSIFY_BATCH,
+    }
+}
+
+fn response_opcode(resp: &WireResponse) -> u8 {
+    match resp {
+        WireResponse::Reply(_) => OP_REPLY,
+        WireResponse::Health(_) => OP_HEALTH_REPLY,
+        WireResponse::Metrics(_) => OP_METRICS_REPLY,
+        WireResponse::Evicted { .. } => OP_EVICTED,
+        WireResponse::StreamOpened { .. } => OP_STREAM_OPENED,
+        WireResponse::StreamDecisions(_) => OP_STREAM_DECISIONS,
+        WireResponse::StreamClosed { .. } => OP_STREAM_CLOSED,
+        WireResponse::ReplyBatch(_) => OP_REPLY_BATCH,
+        WireResponse::Error { .. } => OP_ERROR,
+    }
+}
+
+/// Encode a request as a full frame (length prefix included) at the
+/// current [`VERSION`] with tag 0 (tests / fire-and-forget).
 pub fn encode_request(req: &WireRequest) -> Vec<u8> {
-    let mut b = match req {
-        WireRequest::Classify { input } => {
-            let mut b = body(OP_CLASSIFY);
-            put_bytes(&mut b, input);
-            b
-        }
+    encode_request_versioned(req, VERSION, 0)
+}
+
+/// Encode a request at a chosen protocol version with a pipelining tag.
+/// Pre-v3 versions omit the tag. Out-of-range versions clamp into the
+/// supported range, and an op newer than the requested version raises the
+/// frame to the op's minimum version (a v1 peer cannot express a stream
+/// op at all).
+pub fn encode_request_versioned(req: &WireRequest, version: u8, request_id: u64) -> Vec<u8> {
+    let v = version.clamp(MIN_VERSION, VERSION).max(request_min_version(req));
+    let mut b = head(v, request_opcode(req), request_id);
+    match req {
+        WireRequest::Classify { input } => put_bytes(&mut b, input),
         WireRequest::ClassifySession { session, input } => {
-            let mut b = body(OP_CLASSIFY_SESSION);
             put_u64(&mut b, *session);
             put_bytes(&mut b, input);
-            b
         }
         WireRequest::LearnWay { session, shots } => {
-            let mut b = body(OP_LEARN_WAY);
             put_u64(&mut b, *session);
             put_u32(&mut b, shots.len() as u32);
             for s in shots {
                 put_bytes(&mut b, s);
             }
-            b
         }
-        WireRequest::EvictSession { session } => {
-            let mut b = body(OP_EVICT_SESSION);
-            put_u64(&mut b, *session);
-            b
-        }
-        WireRequest::Health => body(OP_HEALTH),
-        WireRequest::Metrics => body(OP_METRICS),
+        WireRequest::EvictSession { session } => put_u64(&mut b, *session),
+        WireRequest::Health | WireRequest::Metrics => {}
         WireRequest::StreamOpen { session, hop } => {
-            let mut b = body(OP_STREAM_OPEN);
             put_u64(&mut b, *session);
             put_u32(&mut b, *hop);
-            b
         }
         WireRequest::StreamPush { session, samples } => {
-            let mut b = body(OP_STREAM_PUSH);
             put_u64(&mut b, *session);
             put_bytes(&mut b, samples);
-            b
         }
-        WireRequest::StreamClose { session } => {
-            let mut b = body(OP_STREAM_CLOSE);
-            put_u64(&mut b, *session);
-            b
+        WireRequest::StreamClose { session } => put_u64(&mut b, *session),
+        WireRequest::ClassifyBatch { inputs } => {
+            put_u32(&mut b, inputs.len() as u32);
+            for x in inputs {
+                put_bytes(&mut b, x);
+            }
         }
-    };
+    }
     prepend_len(&mut b);
     b
 }
 
 /// Encode a response as a full frame (length prefix included) at the
-/// current [`VERSION`].
+/// current [`VERSION`] with tag 0.
 pub fn encode_response(resp: &WireResponse) -> Vec<u8> {
-    encode_response_versioned(resp, VERSION)
+    encode_response_versioned(resp, VERSION, 0)
 }
 
-/// Encode a response at the *requester's* protocol version, so a strict
-/// v1 peer can decode the reply: the fields v2 appended to `Health` and
-/// `Metrics` are omitted from a v1 frame. Stream responses only ever
-/// answer v2 requests and are always stamped v2. Out-of-range versions
-/// clamp into the supported range.
-pub fn encode_response_versioned(resp: &WireResponse, version: u8) -> Vec<u8> {
-    let v = match resp {
-        WireResponse::StreamOpened { .. }
-        | WireResponse::StreamDecisions(_)
-        | WireResponse::StreamClosed { .. } => VERSION,
-        _ => version.clamp(MIN_VERSION, VERSION),
-    };
-    let mut b = match resp {
-        WireResponse::Reply(r) => {
-            let mut b = body(OP_REPLY);
-            put_opt_u64(&mut b, r.predicted);
-            put_opt_i32s(&mut b, &r.logits);
-            put_opt_u64(&mut b, r.learned_way);
-            put_opt_u64(&mut b, r.sim_cycles);
-            b
-        }
+/// Encode a response at the *requester's* protocol version with the
+/// requester's tag echoed, so every peer can decode its reply: fields a
+/// newer version appended to `Health`/`Metrics` are omitted from older
+/// frames, pre-v3 frames omit the tag, and responses that only exist in a
+/// newer version (streams: v2, batch: v3) are stamped at their minimum
+/// version. Out-of-range versions clamp into the supported range.
+pub fn encode_response_versioned(resp: &WireResponse, version: u8, request_id: u64) -> Vec<u8> {
+    let v = version.clamp(MIN_VERSION, VERSION).max(response_min_version(resp));
+    let mut b = head(v, response_opcode(resp), request_id);
+    match resp {
+        WireResponse::Reply(r) => put_reply(&mut b, r),
         WireResponse::Health(h) => {
-            let mut b = body(OP_HEALTH_REPLY);
             put_u32(&mut b, h.shards);
             put_u64(&mut b, h.live_sessions);
             put_u32(&mut b, h.input_len);
@@ -404,10 +516,8 @@ pub fn encode_response_versioned(resp: &WireResponse, version: u8) -> Vec<u8> {
                 put_u32(&mut b, h.window);
                 put_u32(&mut b, h.channels);
             }
-            b
         }
         WireResponse::Metrics(m) => {
-            let mut b = body(OP_METRICS_REPLY);
             for c in [
                 m.requests, m.completed, m.errors, m.rejected,
                 m.learn_ways, m.evictions, m.sim_cycles,
@@ -418,24 +528,19 @@ pub fn encode_response_versioned(resp: &WireResponse, version: u8) -> Vec<u8> {
                 put_u64(&mut b, m.stream_chunks);
                 put_u64(&mut b, m.stream_decisions);
             }
+            if v >= 3 {
+                put_u64(&mut b, m.worker_panics);
+            }
             for c in [m.mean_latency_us, m.p50_latency_us, m.p95_latency_us, m.p99_latency_us] {
                 put_f64(&mut b, c);
             }
-            b
         }
-        WireResponse::Evicted { existed } => {
-            let mut b = body(OP_EVICTED);
-            b.push(u8::from(*existed));
-            b
-        }
+        WireResponse::Evicted { existed } => b.push(u8::from(*existed)),
         WireResponse::StreamOpened { window, hop } => {
-            let mut b = body(OP_STREAM_OPENED);
             put_u32(&mut b, *window);
             put_u32(&mut b, *hop);
-            b
         }
         WireResponse::StreamDecisions(ds) => {
-            let mut b = body(OP_STREAM_DECISIONS);
             put_u32(&mut b, ds.len() as u32);
             for d in ds {
                 put_u64(&mut b, d.window);
@@ -446,22 +551,32 @@ pub fn encode_response_versioned(resp: &WireResponse, version: u8) -> Vec<u8> {
                     b.extend_from_slice(&x.to_le_bytes());
                 }
             }
-            b
         }
         WireResponse::StreamClosed { existed, windows } => {
-            let mut b = body(OP_STREAM_CLOSED);
             b.push(u8::from(*existed));
             put_u64(&mut b, *windows);
-            b
+        }
+        WireResponse::ReplyBatch(items) => {
+            put_u32(&mut b, items.len() as u32);
+            for item in items {
+                match item {
+                    BatchItem::Reply(r) => {
+                        b.push(0);
+                        put_reply(&mut b, r);
+                    }
+                    BatchItem::Error { code, message } => {
+                        b.push(1);
+                        b.push(code.as_u8());
+                        put_bytes(&mut b, message.as_bytes());
+                    }
+                }
+            }
         }
         WireResponse::Error { code, message } => {
-            let mut b = body(OP_ERROR);
             b.push(code.as_u8());
             put_bytes(&mut b, message.as_bytes());
-            b
         }
-    };
-    b[0] = v; // `body()` stamps VERSION; re-stamp at the peer's version.
+    }
     prepend_len(&mut b);
     b
 }
@@ -531,10 +646,10 @@ impl<'a> Cursor<'a> {
             0 => Ok(None),
             1 => {
                 let n = self.u32()? as usize;
-                if n * 4 > MAX_FRAME {
+                if n.saturating_mul(4) > MAX_FRAME {
                     bail!("i32 list of {n} exceeds frame bound");
                 }
-                let mut out = Vec::with_capacity(n);
+                let mut out = Vec::with_capacity(n.min(MAX_LIST));
                 for _ in 0..n {
                     out.push(self.i32()?);
                 }
@@ -542,6 +657,15 @@ impl<'a> Cursor<'a> {
             }
             t => bail!("bad option tag {t}"),
         }
+    }
+
+    fn reply(&mut self) -> Result<WireReply> {
+        Ok(WireReply {
+            predicted: self.opt_u64()?,
+            logits: self.opt_i32s()?,
+            learned_way: self.opt_u64()?,
+            sim_cycles: self.opt_u64()?,
+        })
     }
 
     fn finish(&self) -> Result<()> {
@@ -552,14 +676,26 @@ impl<'a> Cursor<'a> {
     }
 }
 
-fn header(frame_body: &[u8]) -> Result<(u8, u8, Cursor<'_>)> {
+fn header(frame_body: &[u8]) -> Result<(u8, u8, u64, Cursor<'_>)> {
     let mut c = Cursor { b: frame_body, i: 0 };
     let version = c.u8()?;
     if !(MIN_VERSION..=VERSION).contains(&version) {
         bail!("unsupported protocol version {version} (accepting {MIN_VERSION}..={VERSION})");
     }
     let opcode = c.u8()?;
-    Ok((version, opcode, c))
+    let request_id = if version >= 3 { c.u64()? } else { 0 };
+    Ok((version, opcode, request_id, c))
+}
+
+/// Best-effort pipelining tag of a frame body: the tag of a v3 frame whose
+/// header is intact, else 0. Lets the server tag an error reply even when
+/// the payload itself failed to decode.
+pub fn peek_request_id(frame_body: &[u8]) -> u64 {
+    if frame_body.len() >= 10 && frame_body[0] >= 3 {
+        u64::from_le_bytes(frame_body[2..10].try_into().unwrap())
+    } else {
+        0
+    }
 }
 
 /// The stream opcodes only exist from protocol v2 on.
@@ -570,9 +706,17 @@ fn require_v2(version: u8, op: &str) -> Result<()> {
     Ok(())
 }
 
+/// The batch opcodes only exist from protocol v3 on.
+fn require_v3(version: u8, op: &str) -> Result<()> {
+    if version < 3 {
+        bail!("{op} requires protocol v3 (frame carries v{version})");
+    }
+    Ok(())
+}
+
 /// Decode a request frame body (after the length prefix).
-pub fn decode_request(frame_body: &[u8]) -> Result<WireRequest> {
-    let (version, opcode, mut c) = header(frame_body)?;
+pub fn decode_request(frame_body: &[u8]) -> Result<RequestFrame> {
+    let (version, opcode, request_id, mut c) = header(frame_body)?;
     let req = match opcode {
         OP_CLASSIFY => WireRequest::Classify { input: c.bytes()? },
         OP_CLASSIFY_SESSION => {
@@ -581,7 +725,7 @@ pub fn decode_request(frame_body: &[u8]) -> Result<WireRequest> {
         OP_LEARN_WAY => {
             let session = c.u64()?;
             let n = c.u32()? as usize;
-            if n > 4096 {
+            if n > MAX_LIST {
                 bail!("learn frame with {n} shots");
             }
             let mut shots = Vec::with_capacity(n);
@@ -605,22 +749,29 @@ pub fn decode_request(frame_body: &[u8]) -> Result<WireRequest> {
             require_v2(version, "StreamClose")?;
             WireRequest::StreamClose { session: c.u64()? }
         }
+        OP_CLASSIFY_BATCH => {
+            require_v3(version, "ClassifyBatch")?;
+            let n = c.u32()? as usize;
+            if n > MAX_LIST {
+                bail!("batch frame with {n} windows");
+            }
+            let mut inputs = Vec::with_capacity(n);
+            for _ in 0..n {
+                inputs.push(c.bytes()?);
+            }
+            WireRequest::ClassifyBatch { inputs }
+        }
         op => bail!("unknown request opcode {op:#04x}"),
     };
     c.finish()?;
-    Ok(req)
+    Ok(RequestFrame { version, request_id, req })
 }
 
 /// Decode a response frame body (after the length prefix).
-pub fn decode_response(frame_body: &[u8]) -> Result<WireResponse> {
-    let (version, opcode, mut c) = header(frame_body)?;
+pub fn decode_response(frame_body: &[u8]) -> Result<ResponseFrame> {
+    let (version, opcode, request_id, mut c) = header(frame_body)?;
     let resp = match opcode {
-        OP_REPLY => WireResponse::Reply(WireReply {
-            predicted: c.opt_u64()?,
-            logits: c.opt_i32s()?,
-            learned_way: c.opt_u64()?,
-            sim_cycles: c.opt_u64()?,
-        }),
+        OP_REPLY => WireResponse::Reply(c.reply()?),
         OP_HEALTH_REPLY => {
             let mut h = HealthWire {
                 shards: c.u32()?,
@@ -651,6 +802,9 @@ pub fn decode_response(frame_body: &[u8]) -> Result<WireResponse> {
                 m.stream_chunks = c.u64()?;
                 m.stream_decisions = c.u64()?;
             }
+            if version >= 3 {
+                m.worker_panics = c.u64()?;
+            }
             m.mean_latency_us = c.f64()?;
             m.p50_latency_us = c.f64()?;
             m.p95_latency_us = c.f64()?;
@@ -665,11 +819,13 @@ pub fn decode_response(frame_body: &[u8]) -> Result<WireResponse> {
         OP_STREAM_DECISIONS => {
             require_v2(version, "StreamDecisions")?;
             let n = c.u32()? as usize;
-            // Each decision is at least 28 bytes; bound before allocating.
+            // Each decision is at least 28 bytes; bound before allocating
+            // (capacity additionally capped — a hostile count must fail on
+            // the truncated payload, not on a huge pre-allocation).
             if n.saturating_mul(28) > MAX_FRAME {
                 bail!("decision list of {n} exceeds frame bound");
             }
-            let mut ds = Vec::with_capacity(n);
+            let mut ds = Vec::with_capacity(n.min(MAX_LIST));
             for _ in 0..n {
                 let window = c.u64()?;
                 let end_t = c.u64()?;
@@ -678,7 +834,7 @@ pub fn decode_response(frame_body: &[u8]) -> Result<WireResponse> {
                 if nl.saturating_mul(4) > MAX_FRAME {
                     bail!("logit list of {nl} exceeds frame bound");
                 }
-                let mut logits = Vec::with_capacity(nl);
+                let mut logits = Vec::with_capacity(nl.min(MAX_LIST));
                 for _ in 0..nl {
                     logits.push(c.i32()?);
                 }
@@ -690,6 +846,28 @@ pub fn decode_response(frame_body: &[u8]) -> Result<WireResponse> {
             require_v2(version, "StreamClosed")?;
             WireResponse::StreamClosed { existed: c.u8()? != 0, windows: c.u64()? }
         }
+        OP_REPLY_BATCH => {
+            require_v3(version, "ReplyBatch")?;
+            let n = c.u32()? as usize;
+            // Requests cap their window count at MAX_LIST, so no honest
+            // peer ever answers with more items — reject before the count
+            // can drive allocation.
+            if n > MAX_LIST {
+                bail!("batch reply list of {n} exceeds the {MAX_LIST}-item bound");
+            }
+            let mut items = Vec::with_capacity(n);
+            for _ in 0..n {
+                items.push(match c.u8()? {
+                    0 => BatchItem::Reply(c.reply()?),
+                    1 => BatchItem::Error {
+                        code: ErrorCode::from_u8(c.u8()?)?,
+                        message: String::from_utf8_lossy(&c.bytes()?).into_owned(),
+                    },
+                    t => bail!("bad batch item tag {t}"),
+                });
+            }
+            WireResponse::ReplyBatch(items)
+        }
         OP_ERROR => WireResponse::Error {
             code: ErrorCode::from_u8(c.u8()?)?,
             message: String::from_utf8_lossy(&c.bytes()?).into_owned(),
@@ -697,7 +875,7 @@ pub fn decode_response(frame_body: &[u8]) -> Result<WireResponse> {
         op => bail!("unknown response opcode {op:#04x}"),
     };
     c.finish()?;
-    Ok(resp)
+    Ok(ResponseFrame { version, request_id, resp })
 }
 
 // ---------------------------------------------------------------------------
@@ -800,20 +978,24 @@ mod tests {
     use super::*;
 
     fn rt_request(req: WireRequest) {
-        let frame = encode_request(&req);
+        // Tag echo: the id survives the v3 round trip.
+        let frame = encode_request_versioned(&req, VERSION, 0xDEAD_BEEF_u64);
         let mut r = std::io::Cursor::new(frame.clone());
         let blob = read_frame(&mut r).unwrap().unwrap();
         assert_eq!(blob.len() + 4, frame.len());
         let got = decode_request(&blob).unwrap();
-        assert_eq!(got, req);
+        assert_eq!(got.version, VERSION);
+        assert_eq!(got.request_id, 0xDEAD_BEEF);
+        assert_eq!(got.req, req);
     }
 
     fn rt_response(resp: WireResponse) {
-        let frame = encode_response(&resp);
+        let frame = encode_response_versioned(&resp, VERSION, 7);
         let mut r = std::io::Cursor::new(frame);
         let blob = read_frame(&mut r).unwrap().unwrap();
         let got = decode_response(&blob).unwrap();
-        assert_eq!(got, resp);
+        assert_eq!(got.request_id, 7);
+        assert_eq!(got.resp, resp);
     }
 
     #[test]
@@ -838,6 +1020,10 @@ mod tests {
             samples: (0..200).map(|i| i % 16).collect(),
         });
         rt_request(WireRequest::StreamClose { session: 0 });
+        rt_request(WireRequest::ClassifyBatch { inputs: vec![] });
+        rt_request(WireRequest::ClassifyBatch {
+            inputs: vec![vec![1, 2, 3], vec![], vec![15; 64]],
+        });
     }
 
     #[test]
@@ -867,6 +1053,7 @@ mod tests {
             sim_cycles: 7,
             stream_chunks: 8,
             stream_decisions: 9,
+            worker_panics: 10,
             mean_latency_us: 1.5,
             p50_latency_us: 2.5,
             p95_latency_us: 100.0,
@@ -888,6 +1075,18 @@ mod tests {
         ]));
         rt_response(WireResponse::StreamClosed { existed: true, windows: 42 });
         rt_response(WireResponse::StreamClosed { existed: false, windows: 0 });
+        rt_response(WireResponse::ReplyBatch(vec![]));
+        rt_response(WireResponse::ReplyBatch(vec![
+            BatchItem::Reply(WireReply {
+                predicted: Some(1),
+                logits: Some(vec![-5, 9]),
+                learned_way: None,
+                sim_cycles: None,
+            }),
+            BatchItem::Error { code: ErrorCode::Overloaded, message: "shard full".into() },
+            BatchItem::Reply(WireReply::default()),
+            BatchItem::Error { code: ErrorCode::App, message: String::new() },
+        ]));
         for code in [ErrorCode::Overloaded, ErrorCode::Malformed, ErrorCode::App] {
             rt_response(WireResponse::Error { code, message: "queue full".into() });
         }
@@ -895,9 +1094,9 @@ mod tests {
     }
 
     #[test]
-    fn responses_downgrade_to_v1_for_v1_peers() {
+    fn responses_downgrade_for_older_peers() {
         // A v1 peer must receive a strictly v1-shaped frame: version byte
-        // 1 and no v2-appended payload fields.
+        // 1, no tag, and no v2/v3-appended payload fields.
         let h = HealthWire {
             shards: 2,
             live_sessions: 5,
@@ -906,13 +1105,13 @@ mod tests {
             window: 16,
             channels: 4,
         };
-        let frame = encode_response_versioned(&WireResponse::Health(h.clone()), 1);
+        let frame = encode_response_versioned(&WireResponse::Health(h.clone()), 1, 99);
         let body = &frame[4..];
         assert_eq!(body[0], 1, "version byte must be the peer's");
         // Strict decode (as this crate's v1 shipped): exactly 2 + 4 + 8 +
-        // 4 + 4 bytes, no trailing window/channels.
+        // 4 + 4 bytes — no tag, no trailing window/channels.
         assert_eq!(body.len(), 2 + 4 + 8 + 4 + 4);
-        match decode_response(body).unwrap() {
+        match decode_response(body).unwrap().resp {
             WireResponse::Health(got) => {
                 assert_eq!(got.shards, h.shards);
                 assert_eq!(got.window, 0, "v2 fields dropped at v1");
@@ -920,36 +1119,83 @@ mod tests {
             }
             other => panic!("expected Health, got {other:?}"),
         }
-        // Metrics likewise lose only the stream counters.
-        let m = MetricsWire { stream_chunks: 7, stream_decisions: 9, ..MetricsWire::default() };
-        let frame = encode_response_versioned(&WireResponse::Metrics(m), 1);
-        match decode_response(&frame[4..]).unwrap() {
+        // Metrics at v2 keep the stream counters but lose worker_panics.
+        let m = MetricsWire {
+            stream_chunks: 7,
+            stream_decisions: 9,
+            worker_panics: 3,
+            ..MetricsWire::default()
+        };
+        let frame = encode_response_versioned(&WireResponse::Metrics(m.clone()), 2, 0);
+        assert_eq!(frame[4], 2);
+        match decode_response(&frame[4..]).unwrap().resp {
             WireResponse::Metrics(got) => {
-                assert_eq!(got.stream_chunks, 0);
-                assert_eq!(got.stream_decisions, 0);
+                assert_eq!(got.stream_chunks, 7);
+                assert_eq!(got.stream_decisions, 9);
+                assert_eq!(got.worker_panics, 0, "v3 field dropped at v2");
             }
             other => panic!("expected Metrics, got {other:?}"),
         }
-        // Stream responses cannot be downgraded; they stay v2.
+        // ... and at v1 also lose the stream counters.
+        let frame = encode_response_versioned(&WireResponse::Metrics(m), 1, 0);
+        match decode_response(&frame[4..]).unwrap().resp {
+            WireResponse::Metrics(got) => {
+                assert_eq!(got.stream_chunks, 0);
+                assert_eq!(got.stream_decisions, 0);
+                assert_eq!(got.worker_panics, 0);
+            }
+            other => panic!("expected Metrics, got {other:?}"),
+        }
+        // Stream responses cannot drop below v2; batch not below v3.
         let frame =
-            encode_response_versioned(&WireResponse::StreamOpened { window: 16, hop: 4 }, 1);
-        assert_eq!(frame[4], VERSION);
+            encode_response_versioned(&WireResponse::StreamOpened { window: 16, hop: 4 }, 1, 0);
+        assert_eq!(frame[4], 2);
+        let frame = encode_response_versioned(&WireResponse::ReplyBatch(vec![]), 1, 0);
+        assert_eq!(frame[4], 3);
         // Out-of-range versions clamp instead of producing junk frames.
-        let frame = encode_response_versioned(&WireResponse::Evicted { existed: true }, 9);
+        let frame = encode_response_versioned(&WireResponse::Evicted { existed: true }, 9, 0);
         assert_eq!(frame[4], VERSION);
     }
 
     #[test]
-    fn v1_frames_still_decode_but_not_stream_ops() {
+    fn pre_v3_frames_decode_untagged() {
+        // v1 and v2 frames carry no request id; it reads back as 0 and the
+        // version is preserved for the reply path.
+        for v in [1u8, 2] {
+            let frame = encode_request_versioned(&WireRequest::Health, v, 0xFFFF);
+            let got = decode_request(&frame[4..]).unwrap();
+            assert_eq!(got.version, v);
+            assert_eq!(got.request_id, 0, "pre-v3 frames cannot carry a tag");
+            assert_eq!(got.req, WireRequest::Health);
+            // Header is exactly version + opcode: 2 bytes.
+            assert_eq!(frame.len(), 4 + 2);
+        }
+        // A v3 Health frame is 8 bytes longer (the tag).
+        let frame = encode_request_versioned(&WireRequest::Health, 3, 0xFFFF);
+        assert_eq!(frame.len(), 4 + 10);
+    }
+
+    #[test]
+    fn peek_request_id_is_best_effort() {
+        let frame = encode_request_versioned(&WireRequest::Health, 3, 12345);
+        assert_eq!(peek_request_id(&frame[4..]), 12345);
+        let frame = encode_request_versioned(&WireRequest::Health, 2, 12345);
+        assert_eq!(peek_request_id(&frame[4..]), 0, "v2 frames have no tag");
+        assert_eq!(peek_request_id(&[3u8, OP_HEALTH]), 0, "truncated header");
+        assert_eq!(peek_request_id(&[]), 0);
+    }
+
+    #[test]
+    fn version_gated_ops_are_rejected_in_old_frames() {
         // A v1 Health request decodes fine.
-        assert_eq!(decode_request(&[1, OP_HEALTH]).unwrap(), WireRequest::Health);
+        assert_eq!(decode_request(&[1, OP_HEALTH]).unwrap().req, WireRequest::Health);
         // A v1 Health *reply* decodes with the v2 geometry fields zeroed.
         let mut body = vec![1u8, OP_HEALTH_REPLY];
         put_u32(&mut body, 2); // shards
         put_u64(&mut body, 5); // live_sessions
         put_u32(&mut body, 64); // input_len
         put_u32(&mut body, 8); // embed_dim
-        match decode_response(&body).unwrap() {
+        match decode_response(&body).unwrap().resp {
             WireResponse::Health(h) => {
                 assert_eq!(h.shards, 2);
                 assert_eq!(h.window, 0, "v1 reply lacks stream geometry");
@@ -965,6 +1211,13 @@ mod tests {
         put_u64(&mut body, 7);
         put_u32(&mut body, 1);
         assert!(decode_request(&body).is_err());
+        // Batch ops inside a v2 frame are malformed.
+        let mut body = vec![2u8, OP_CLASSIFY_BATCH];
+        put_u32(&mut body, 0);
+        assert!(decode_request(&body).is_err(), "v2 frame must not carry batch ops");
+        let mut body = vec![2u8, OP_REPLY_BATCH];
+        put_u32(&mut body, 0);
+        assert!(decode_response(&body).is_err());
     }
 
     #[test]
@@ -976,7 +1229,7 @@ mod tests {
 
     #[test]
     fn rejects_unknown_opcode_and_trailing_bytes() {
-        assert!(decode_request(&[VERSION, 0x77]).is_err());
+        assert!(decode_request(&[1, 0x77]).is_err());
         let mut frame = encode_request(&WireRequest::Health);
         frame.push(0); // trailing garbage after a well-formed payload
         assert!(decode_request(&frame[4..]).is_err());
@@ -1004,7 +1257,7 @@ mod tests {
         assert!(read_frame(&mut r).is_err());
         // truncated mid-frame
         let mut partial = 10u32.to_le_bytes().to_vec();
-        partial.extend_from_slice(&[VERSION, OP_HEALTH]);
+        partial.extend_from_slice(&[1, OP_HEALTH]);
         let mut r = std::io::Cursor::new(partial);
         assert!(read_frame(&mut r).is_err());
         // clean EOF
@@ -1020,8 +1273,20 @@ mod tests {
         let mut r = std::io::Cursor::new(stream);
         let a = decode_request(&read_frame(&mut r).unwrap().unwrap()).unwrap();
         let b = decode_request(&read_frame(&mut r).unwrap().unwrap()).unwrap();
-        assert_eq!(a, WireRequest::Health);
-        assert_eq!(b, WireRequest::EvictSession { session: 2 });
+        assert_eq!(a.req, WireRequest::Health);
+        assert_eq!(b.req, WireRequest::EvictSession { session: 2 });
         assert!(read_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn rejects_oversized_lists() {
+        // A hostile shot / window count is rejected before allocation.
+        let mut body = head(VERSION, OP_LEARN_WAY, 0);
+        put_u64(&mut body, 1);
+        put_u32(&mut body, (MAX_LIST + 1) as u32);
+        assert!(decode_request(&body).is_err());
+        let mut body = head(VERSION, OP_CLASSIFY_BATCH, 0);
+        put_u32(&mut body, u32::MAX);
+        assert!(decode_request(&body).is_err());
     }
 }

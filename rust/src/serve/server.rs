@@ -1,21 +1,34 @@
-//! Thread-per-connection TCP server fronting N sharded [`Coordinator`]s.
+//! Thread-per-connection TCP server fronting N sharded [`Coordinator`]s,
+//! with per-connection request pipelining (protocol v3).
+//!
+//! Connection anatomy: the connection thread is the **reader** — it
+//! decodes frames and dispatches them; a dedicated **writer** thread owns
+//! the write side behind an mpsc channel. A v3 request is submitted to its
+//! shard with a [`ReplySink`] that encodes the response (tagged with the
+//! request's id) and enqueues it on the writer *from the worker thread
+//! that finished it* — so one connection can keep many requests in flight
+//! and responses return in completion order, possibly out of order.
+//! Pre-v3 frames are resolved one at a time in arrival order, preserving
+//! the strict request/response discipline those clients expect.
 //!
 //! Sharding: session-scoped requests (`ClassifySession`, `LearnWay`,
-//! `EvictSession`) route by a stable hash of the `SessionId`
+//! `EvictSession`, stream ops) route by a stable hash of the `SessionId`
 //! ([`shard_of`]), so the same session always lands on the same shard no
 //! matter which connection carries it — learning stays serialized per
 //! session while sessions spread across shards. Session-less `Classify`
-//! requests fan out round-robin over all shards.
+//! requests fan out round-robin over all shards, and `ClassifyBatch`
+//! spreads its windows the same way, one submission per window.
 //!
 //! Backpressure: the coordinator's bounded queue is *never* awaited on the
 //! accept path — a full queue surfaces as an explicit `Overloaded` wire
-//! error instead of a hang, so clients (and the load generator) observe
-//! overload rather than timeouts.
+//! error instead of a hang. A session-less classify first **fans over**
+//! the remaining shards (a single full shard is not cluster overload);
+//! only when every shard rejects does the client see `Overloaded`.
 
-use std::io::{BufReader, BufWriter};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
@@ -23,10 +36,11 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::coordinator::metrics::MetricsSnapshot;
 use crate::coordinator::server::{
-    Coordinator, CoordinatorConfig, EngineFactory, Request, SubmitError,
+    Coordinator, CoordinatorConfig, EngineFactory, ReplySink, Request, SubmitError,
 };
 use crate::serve::proto::{
-    self, ErrorCode, HealthWire, MetricsWire, WireDecision, WireReply, WireRequest, WireResponse,
+    self, BatchItem, ErrorCode, HealthWire, MetricsWire, WireDecision, WireReply, WireRequest,
+    WireResponse,
 };
 
 /// Serving configuration.
@@ -198,15 +212,102 @@ fn accept_loop(listener: TcpListener, state: Arc<ServerState>) {
     }
 }
 
-/// One connection: sequential request/response frames until EOF, protocol
-/// violation, or server shutdown.
+/// Responses enqueued on a connection's writer but not yet written before
+/// the reader stops accepting new requests. Restores the TCP backpressure
+/// the pre-pipelining inline-write design had: a peer that floods
+/// requests without reading its responses parks the reader at this bound
+/// instead of growing the response queue without limit.
+const MAX_CONN_BACKLOG: usize = 1024;
+
+/// Shared reader/writer accounting for one connection's response queue.
+struct ConnFlow {
+    /// Frames enqueued on the writer channel and not yet written out.
+    outstanding: AtomicUsize,
+    /// Set when the writer thread exits (peer gone); unparks the reader.
+    writer_gone: AtomicBool,
+}
+
+/// Enqueue one encoded frame, keeping the backlog count exact even when
+/// the writer is already gone.
+fn queue_frame(wtx: &mpsc::Sender<Vec<u8>>, flow: &ConnFlow, frame: Vec<u8>) {
+    flow.outstanding.fetch_add(1, Ordering::AcqRel);
+    if wtx.send(frame).is_err() {
+        flow.outstanding.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// One connection: the calling thread reads + dispatches frames until EOF,
+/// protocol violation, or server shutdown; a paired writer thread drains
+/// the response channel so out-of-order completions from pipelined (v3)
+/// requests serialize onto the socket without blocking any worker.
 fn serve_connection(stream: TcpStream, state: &ServerState) -> Result<()> {
     stream.set_read_timeout(Some(state.read_timeout))?;
     stream.set_nodelay(true).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = BufWriter::new(stream);
+    let (wtx, wrx) = mpsc::channel::<Vec<u8>>();
+    let flow = Arc::new(ConnFlow {
+        outstanding: AtomicUsize::new(0),
+        writer_gone: AtomicBool::new(false),
+    });
+    let writer_stream = stream.try_clone()?;
+    let writer_flow = flow.clone();
+    let writer = std::thread::Builder::new()
+        .name("chameleon-conn-writer".to_string())
+        .spawn(move || writer_loop(writer_stream, wrx, writer_flow))
+        .map_err(|e| anyhow!("spawning connection writer: {e}"))?;
+    let result = read_loop(&mut reader, &wtx, &flow, state);
+    // Dropping our sender lets the writer exit once every in-flight
+    // request has delivered (their sinks hold the remaining clones).
+    drop(wtx);
+    let _ = writer.join();
+    let _ = stream.shutdown(Shutdown::Both);
+    result
+}
+
+/// Drain encoded response frames onto the socket. Frames already queued
+/// behind the current one are coalesced into a single flush.
+fn writer_loop(stream: TcpStream, wrx: mpsc::Receiver<Vec<u8>>, flow: Arc<ConnFlow>) {
+    let mut w = BufWriter::new(stream);
+    'conn: while let Ok(frame) = wrx.recv() {
+        if !write_counted(&mut w, &frame, &flow) {
+            break 'conn; // peer gone; in-flight responses are dropped
+        }
+        while let Ok(more) = wrx.try_recv() {
+            if !write_counted(&mut w, &more, &flow) {
+                break 'conn;
+            }
+        }
+        if w.flush().is_err() {
+            break 'conn;
+        }
+    }
+    flow.writer_gone.store(true, Ordering::Release);
+}
+
+fn write_counted(w: &mut BufWriter<TcpStream>, frame: &[u8], flow: &ConnFlow) -> bool {
+    let ok = w.write_all(frame).is_ok();
+    flow.outstanding.fetch_sub(1, Ordering::AcqRel);
+    ok
+}
+
+fn read_loop<R: Read>(
+    reader: &mut R,
+    wtx: &mpsc::Sender<Vec<u8>>,
+    flow: &Arc<ConnFlow>,
+    state: &ServerState,
+) -> Result<()> {
     loop {
-        let blob = match proto::read_frame(&mut reader) {
+        // Response-backlog backpressure: a peer that pipelines requests
+        // without reading responses parks here (its sends then stall on
+        // TCP flow control) instead of growing the writer queue without
+        // bound.
+        while flow.outstanding.load(Ordering::Acquire) >= MAX_CONN_BACKLOG {
+            if state.stop.load(Ordering::SeqCst) || flow.writer_gone.load(Ordering::Acquire) {
+                return Ok(());
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let blob = match proto::read_frame(reader) {
             Ok(Some(b)) => b,
             Ok(None) => return Ok(()), // client closed cleanly
             Err(e) => {
@@ -227,15 +328,32 @@ fn serve_connection(stream: TcpStream, state: &ServerState) -> Result<()> {
                     code: ErrorCode::Malformed,
                     message: format!("{e:#}"),
                 };
-                let _ = proto::write_frame(&mut writer, &proto::encode_response(&resp));
+                queue_frame(wtx, flow, proto::encode_response(&resp));
                 return Ok(());
             }
         };
-        // Reply at the requester's protocol version (first body byte), so
-        // v1 peers receive frames they can decode.
+        // Reply at the requester's protocol version (first body byte) with
+        // its tag echoed, so every peer receives frames it can decode.
         let peer_version = blob.first().copied().unwrap_or(proto::VERSION);
-        let resp = match proto::decode_request(&blob) {
-            Ok(req) => handle_request(req, state),
+        let request_id = proto::peek_request_id(&blob);
+        match proto::decode_request(&blob) {
+            Ok(frame) if frame.version >= 3 => {
+                // v3: pipelined. Dispatch and go straight back to reading;
+                // the response frame is queued whenever its worker
+                // finishes, tagged so the client can match it.
+                let out = responder(wtx.clone(), flow.clone(), frame.version, frame.request_id);
+                dispatch_request(frame.req, state, out);
+            }
+            Ok(frame) => {
+                // v1/v2 peers expect strict in-order request/response:
+                // resolve each request before reading the next frame.
+                let resp = handle_sync(frame.req, state);
+                let encoded = proto::encode_response_versioned(&resp, frame.version, 0);
+                queue_frame(wtx, flow, encoded);
+                if flow.writer_gone.load(Ordering::Acquire) {
+                    return Ok(()); // peer vanished
+                }
+            }
             Err(e) => {
                 // Malformed payload: answer then close the connection —
                 // framing can no longer be trusted.
@@ -243,126 +361,218 @@ fn serve_connection(stream: TcpStream, state: &ServerState) -> Result<()> {
                     code: ErrorCode::Malformed,
                     message: format!("{e:#}"),
                 };
-                let _ = proto::write_frame(
-                    &mut writer,
-                    &proto::encode_response_versioned(&resp, peer_version),
+                queue_frame(
+                    wtx,
+                    flow,
+                    proto::encode_response_versioned(&resp, peer_version, request_id),
                 );
                 return Ok(());
             }
-        };
-        proto::write_frame(&mut writer, &proto::encode_response_versioned(&resp, peer_version))?;
+        }
     }
 }
 
-fn handle_request(req: WireRequest, state: &ServerState) -> WireResponse {
+/// Build the one-shot completion callback for a v3 request: encode at the
+/// peer's version with its tag and queue on the connection writer.
+fn responder(
+    wtx: mpsc::Sender<Vec<u8>>,
+    flow: Arc<ConnFlow>,
+    version: u8,
+    request_id: u64,
+) -> impl FnOnce(WireResponse) + Send + 'static {
+    move |resp: WireResponse| {
+        queue_frame(&wtx, &flow, proto::encode_response_versioned(&resp, version, request_id));
+    }
+}
+
+/// Resolve one pre-v3 request synchronously (strict in-order semantics):
+/// run it through the same dispatch machinery and block for the single
+/// response.
+fn handle_sync(req: WireRequest, state: &ServerState) -> WireResponse {
+    let (tx, rx) = mpsc::channel::<WireResponse>();
+    dispatch_request(req, state, move |resp| {
+        let _ = tx.send(resp);
+    });
+    rx.recv().unwrap_or_else(|_| WireResponse::Error {
+        code: ErrorCode::App,
+        message: "worker gone before replying".to_string(),
+    })
+}
+
+/// Route one request. `out` is invoked exactly once with the response —
+/// possibly on this thread (`Health`/`Metrics`, submit failures), possibly
+/// on a worker thread (everything that reaches a shard).
+fn dispatch_request<F>(req: WireRequest, state: &ServerState, out: F)
+where
+    F: FnOnce(WireResponse) + Send + 'static,
+{
     let n = state.shards.len();
     match req {
         WireRequest::Classify { input } => {
-            // Session-less: fan out round-robin across shards.
-            let shard = state.rr.fetch_add(1, Ordering::Relaxed) % n;
-            let (rtx, rrx) = mpsc::channel();
-            dispatch(&state.shards[shard], Request::Classify { input, reply: rtx }, rrx)
+            submit_classify(state, input, ReplySink::call(move |res| out(fold_response(res))));
         }
         WireRequest::ClassifySession { session, input } => {
-            let shard = shard_of(session, n);
-            let (rtx, rrx) = mpsc::channel();
-            dispatch(
-                &state.shards[shard],
-                Request::ClassifySession { session, input, reply: rtx },
-                rrx,
-            )
+            let reply = ReplySink::call(move |res| out(fold_response(res)));
+            submit_or_reject(
+                &state.shards[shard_of(session, n)],
+                Request::ClassifySession { session, input, reply },
+            );
         }
         WireRequest::LearnWay { session, shots } => {
-            let shard = shard_of(session, n);
-            let (rtx, rrx) = mpsc::channel();
-            dispatch(
-                &state.shards[shard],
-                Request::LearnWay { session, shots, reply: rtx },
-                rrx,
-            )
+            let reply = ReplySink::call(move |res| out(fold_response(res)));
+            submit_or_reject(
+                &state.shards[shard_of(session, n)],
+                Request::LearnWay { session, shots, reply },
+            );
         }
         WireRequest::EvictSession { session } => {
-            let shard = shard_of(session, n);
-            let (rtx, rrx) = mpsc::channel();
-            // `dispatch` folds a Response carrying `evicted` into
-            // `WireResponse::Evicted` directly.
-            dispatch(
-                &state.shards[shard],
-                Request::EvictSession { session, reply: rtx },
-                rrx,
-            )
+            let reply = ReplySink::call(move |res| out(fold_response(res)));
+            submit_or_reject(
+                &state.shards[shard_of(session, n)],
+                Request::EvictSession { session, reply },
+            );
         }
         WireRequest::Health => {
             let sessions: u64 = state.shards.iter().map(|c| c.session_count() as u64).sum();
-            WireResponse::Health(HealthWire {
+            out(WireResponse::Health(HealthWire {
                 shards: n as u32,
                 live_sessions: sessions,
                 input_len: state.shards[0].input_len() as u32,
                 embed_dim: state.shards[0].embed_dim() as u32,
                 window: state.shards[0].seq_len() as u32,
                 channels: state.shards[0].in_channels() as u32,
-            })
+            }));
         }
         WireRequest::Metrics => {
-            WireResponse::Metrics(MetricsWire::from(&aggregate(&state.shards)))
+            out(WireResponse::Metrics(MetricsWire::from(&aggregate(&state.shards))));
         }
         // Stream ops are session-scoped: same stable hash routing, so a
         // stream's state lives on exactly one shard no matter which
         // connection pushes into it.
         WireRequest::StreamOpen { session, hop } => {
-            let shard = shard_of(session, n);
-            let (rtx, rrx) = mpsc::channel();
-            dispatch(
-                &state.shards[shard],
-                Request::StreamOpen { session, hop: hop as usize, reply: rtx },
-                rrx,
-            )
+            let reply = ReplySink::call(move |res| out(fold_response(res)));
+            submit_or_reject(
+                &state.shards[shard_of(session, n)],
+                Request::StreamOpen { session, hop: hop as usize, reply },
+            );
         }
         WireRequest::StreamPush { session, samples } => {
-            let shard = shard_of(session, n);
-            let (rtx, rrx) = mpsc::channel();
-            dispatch(
-                &state.shards[shard],
-                Request::StreamPush { session, samples, reply: rtx },
-                rrx,
-            )
+            let reply = ReplySink::call(move |res| out(fold_response(res)));
+            submit_or_reject(
+                &state.shards[shard_of(session, n)],
+                Request::StreamPush { session, samples, reply },
+            );
         }
         WireRequest::StreamClose { session } => {
-            let shard = shard_of(session, n);
-            let (rtx, rrx) = mpsc::channel();
-            dispatch(
-                &state.shards[shard],
-                Request::StreamClose { session, reply: rtx },
-                rrx,
-            )
+            let reply = ReplySink::call(move |res| out(fold_response(res)));
+            submit_or_reject(
+                &state.shards[shard_of(session, n)],
+                Request::StreamClose { session, reply },
+            );
         }
+        WireRequest::ClassifyBatch { inputs } => dispatch_batch(state, inputs, out),
     }
 }
 
-/// Submit to a shard and wait for the worker's reply, translating
-/// backpressure and failures into wire errors.
-fn dispatch(
-    coord: &Coordinator,
-    req: Request,
-    rrx: mpsc::Receiver<Result<crate::coordinator::Response>>,
-) -> WireResponse {
-    match coord.try_submit(req) {
-        Ok(()) => {}
-        Err(SubmitError::Full) => {
-            return WireResponse::Error {
-                code: ErrorCode::Overloaded,
-                message: "shard queue full".to_string(),
+/// Submit a session-scoped request to its shard; a rejection is delivered
+/// straight through the request's own reply sink (as `Overloaded` /
+/// shutdown), so `out` still fires exactly once.
+fn submit_or_reject(coord: &Coordinator, req: Request) {
+    if let Err((e, req)) = coord.try_submit_ret(req) {
+        req.into_reply().deliver(Err(anyhow::Error::new(e)));
+    }
+}
+
+/// Session-less classify: start at the round-robin shard, then **fan over**
+/// every other shard before surfacing backpressure — one full shard must
+/// not shed traffic the rest of the cluster could absorb.
+///
+/// Metrics discipline: fan-over *attempts* use the unrecorded enqueue, so
+/// one logical request ticks `requests` exactly once (on the shard that
+/// accepted it) and `rejected` only when the client actually observes
+/// `Overloaded` — healthy fan-over must not read as overload.
+fn submit_classify(state: &ServerState, input: Vec<u8>, reply: ReplySink) {
+    let n = state.shards.len();
+    let first = state.rr.fetch_add(1, Ordering::Relaxed) % n;
+    let mut req = Request::Classify { input, reply };
+    let mut any_full = false;
+    for k in 0..n {
+        let shard = &state.shards[(first + k) % n];
+        match shard.try_enqueue(req) {
+            Ok(()) => {
+                shard.record_submission(false);
+                return;
             }
-        }
-        Err(SubmitError::Closed) => {
-            return WireResponse::Error {
-                code: ErrorCode::App,
-                message: "shard shut down".to_string(),
+            Err((e, r)) => {
+                req = r;
+                any_full |= e == SubmitError::Full;
             }
         }
     }
-    match rrx.recv() {
-        Ok(Ok(resp)) => {
+    // Every shard rejected: true cluster-wide backpressure (or shutdown).
+    state.shards[first].record_submission(true);
+    let e = if any_full { SubmitError::Full } else { SubmitError::Closed };
+    req.into_reply().deliver(Err(anyhow::Error::new(e)));
+}
+
+/// `ClassifyBatch`: fan the windows out across shards (round-robin + fan-
+/// over per window), accumulate the per-window outcomes, and emit one
+/// `ReplyBatch` in input order when the last window lands. Windows fail
+/// independently — a bad window yields an error *item*, never a failed
+/// frame.
+fn dispatch_batch<F>(state: &ServerState, inputs: Vec<Vec<u8>>, out: F)
+where
+    F: FnOnce(WireResponse) + Send + 'static,
+{
+    if inputs.is_empty() {
+        out(WireResponse::ReplyBatch(Vec::new()));
+        return;
+    }
+    struct BatchAcc<F> {
+        slots: Mutex<Vec<Option<BatchItem>>>,
+        remaining: AtomicUsize,
+        out: Mutex<Option<F>>,
+    }
+    let n_items = inputs.len();
+    let acc = Arc::new(BatchAcc {
+        slots: Mutex::new((0..n_items).map(|_| None).collect::<Vec<_>>()),
+        remaining: AtomicUsize::new(n_items),
+        out: Mutex::new(Some(out)),
+    });
+    for (i, input) in inputs.into_iter().enumerate() {
+        let acc = acc.clone();
+        let reply = ReplySink::call(move |res| {
+            let item = match fold_response(res) {
+                WireResponse::Reply(r) => BatchItem::Reply(r),
+                WireResponse::Error { code, message } => BatchItem::Error { code, message },
+                other => BatchItem::Error {
+                    code: ErrorCode::App,
+                    message: format!("unexpected batch reply {other:?}"),
+                },
+            };
+            {
+                let mut slots = acc.slots.lock().unwrap_or_else(|p| p.into_inner());
+                slots[i] = Some(item);
+            }
+            if acc.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                let items: Vec<BatchItem> = {
+                    let mut slots = acc.slots.lock().unwrap_or_else(|p| p.into_inner());
+                    slots.iter_mut().map(|s| s.take().expect("slot filled")).collect()
+                };
+                if let Some(out) = acc.out.lock().unwrap_or_else(|p| p.into_inner()).take() {
+                    out(WireResponse::ReplyBatch(items));
+                }
+            }
+        });
+        submit_classify(state, input, reply);
+    }
+}
+
+/// Fold a worker's reply (or a submit failure smuggled through the sink)
+/// into the wire response.
+fn fold_response(res: Result<crate::coordinator::Response>) -> WireResponse {
+    match res {
+        Ok(resp) => {
             if let Some(existed) = resp.evicted {
                 WireResponse::Evicted { existed }
             } else if let Some(info) = resp.stream {
@@ -389,10 +599,16 @@ fn dispatch(
                 })
             }
         }
-        Ok(Err(e)) => WireResponse::Error { code: ErrorCode::App, message: format!("{e:#}") },
-        Err(_) => WireResponse::Error {
-            code: ErrorCode::App,
-            message: "worker gone before replying".to_string(),
+        Err(e) => match e.downcast_ref::<SubmitError>() {
+            Some(SubmitError::Full) => WireResponse::Error {
+                code: ErrorCode::Overloaded,
+                message: "shard queue full".to_string(),
+            },
+            Some(SubmitError::Closed) => WireResponse::Error {
+                code: ErrorCode::App,
+                message: "shard shut down".to_string(),
+            },
+            None => WireResponse::Error { code: ErrorCode::App, message: format!("{e:#}") },
         },
     }
 }

@@ -4,20 +4,24 @@
 //! backpressure/`Overloaded`, malformed-frame rejection, cross-shard
 //! session affinity, eviction, incremental stream sessions
 //! (open -> push -> decisions -> close, mid-stream eviction, malformed
-//! stream ops), and short zero-protocol-error loadgen runs in both
-//! request and streaming mode.
+//! stream ops), protocol-v3 pipelining (out-of-order completion, batch
+//! classify bit-identity, v1/v2 compatibility clients), fault isolation
+//! (panic injection, classify fan-over past a full shard), and short
+//! zero-protocol-error loadgen runs in request, pipelined, batched and
+//! streaming modes.
 
 use std::net::TcpStream;
 use std::sync::Arc;
 use std::time::Duration;
 
+use chameleon::coordinator::engine::{CHAOS_PANIC_TOKEN, CHAOS_SLOW_TOKEN};
 use chameleon::coordinator::server::EngineFactory;
 use chameleon::coordinator::Engine;
 use chameleon::golden;
 use chameleon::model::{demo_tiny, demo_tiny_kws, QuantModel};
 use chameleon::serve::loadgen::{self, LoadgenConfig, StreamLoadConfig};
 use chameleon::serve::proto::{self, ErrorCode, WireRequest, WireResponse};
-use chameleon::serve::{shard_of, Client, ServeConfig, Server};
+use chameleon::serve::{shard_of, BatchItem, Client, ServeConfig, Server};
 use chameleon::sim::{ArrayMode, OperatingPoint};
 use chameleon::util::rng::Rng;
 
@@ -197,7 +201,7 @@ fn malformed_frames_are_rejected() {
         frame.extend_from_slice(&body);
         proto::write_frame(&mut s, &frame).unwrap();
         let blob = proto::read_frame(&mut s).unwrap().expect("error frame expected");
-        match proto::decode_response(&blob).unwrap() {
+        match proto::decode_response(&blob).unwrap().resp {
             WireResponse::Error { code: ErrorCode::Malformed, .. } => {}
             other => panic!("expected Malformed, got {other:?}"),
         }
@@ -211,7 +215,7 @@ fn malformed_frames_are_rejected() {
         s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
         proto::write_frame(&mut s, &u32::MAX.to_le_bytes()).unwrap();
         let blob = proto::read_frame(&mut s).unwrap().expect("error frame expected");
-        match proto::decode_response(&blob).unwrap() {
+        match proto::decode_response(&blob).unwrap().resp {
             WireResponse::Error { code: ErrorCode::Malformed, message } => {
                 assert!(message.contains("MAX_FRAME"), "{message}");
             }
@@ -219,15 +223,33 @@ fn malformed_frames_are_rejected() {
         }
     }
 
-    // Truncated payload inside a well-framed body.
+    // Truncated payload inside a well-framed body (v2 framing).
     {
         let mut s = TcpStream::connect(addr).unwrap();
-        let body = [proto::VERSION, 0x02, 1, 0, 0]; // ClassifySession cut short
+        let body = [2u8, 0x02, 1, 0, 0]; // ClassifySession cut short
         let mut frame = (body.len() as u32).to_le_bytes().to_vec();
         frame.extend_from_slice(&body);
         proto::write_frame(&mut s, &frame).unwrap();
         let blob = proto::read_frame(&mut s).unwrap().expect("error frame expected");
-        match proto::decode_response(&blob).unwrap() {
+        match proto::decode_response(&blob).unwrap().resp {
+            WireResponse::Error { code: ErrorCode::Malformed, .. } => {}
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+    }
+
+    // A malformed v3 payload still gets its tag echoed on the error frame.
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut body = vec![3u8, 0x02];
+        body.extend_from_slice(&777u64.to_le_bytes()); // request id
+        body.push(1); // truncated session field
+        let mut frame = (body.len() as u32).to_le_bytes().to_vec();
+        frame.extend_from_slice(&body);
+        proto::write_frame(&mut s, &frame).unwrap();
+        let blob = proto::read_frame(&mut s).unwrap().expect("error frame expected");
+        let rf = proto::decode_response(&blob).unwrap();
+        assert_eq!(rf.request_id, 777, "tag echoed on malformed-payload errors");
+        match rf.resp {
             WireResponse::Error { code: ErrorCode::Malformed, .. } => {}
             other => panic!("expected Malformed, got {other:?}"),
         }
@@ -481,7 +503,7 @@ fn malformed_stream_ops_are_rejected() {
         frame.extend_from_slice(&body);
         proto::write_frame(&mut s, &frame).unwrap();
         let blob = proto::read_frame(&mut s).unwrap().expect("error frame expected");
-        match proto::decode_response(&blob).unwrap() {
+        match proto::decode_response(&blob).unwrap().resp {
             WireResponse::Error { code: ErrorCode::Malformed, message } => {
                 assert!(message.contains("v2"), "{message}");
             }
@@ -493,12 +515,12 @@ fn malformed_stream_ops_are_rejected() {
     // Truncated StreamPush payload.
     {
         let mut s = TcpStream::connect(addr).unwrap();
-        let body = [proto::VERSION, 0x08, 5, 0, 0]; // session cut short
+        let body = [2u8, 0x08, 5, 0, 0]; // v2 StreamPush, session cut short
         let mut frame = (body.len() as u32).to_le_bytes().to_vec();
         frame.extend_from_slice(&body);
         proto::write_frame(&mut s, &frame).unwrap();
         let blob = proto::read_frame(&mut s).unwrap().expect("error frame expected");
-        match proto::decode_response(&blob).unwrap() {
+        match proto::decode_response(&blob).unwrap().resp {
             WireResponse::Error { code: ErrorCode::Malformed, .. } => {}
             other => panic!("expected Malformed, got {other:?}"),
         }
@@ -567,6 +589,7 @@ fn loadgen_loopback_has_zero_protocol_errors() {
         shots: 2,
         connections: 3,
         seed: 9,
+        ..Default::default()
     };
     let report = loadgen::run(&cfg).expect("loadgen runs");
     assert_eq!(report.protocol_errors, 0, "{}", report.report());
@@ -583,5 +606,317 @@ fn loadgen_loopback_has_zero_protocol_errors() {
     // and classify traffic.
     let srv = report.server.as_ref().expect("server metrics fetched");
     assert!(srv.learn_ways >= 6, "{}", srv.report());
+    server.shutdown();
+}
+
+#[test]
+fn pipelined_and_batched_loadgen_have_zero_protocol_errors() {
+    // The pipelined submit/wait path and the ClassifyBatch path keep the
+    // loadgen's accounting invariant: every arrival lands in exactly one
+    // bucket and none of them are protocol errors.
+    let (server, _model) = golden_server(2, 2);
+    let addr = server.local_addr().to_string();
+    let report = loadgen::run(&LoadgenConfig {
+        addr: addr.clone(),
+        rps: 400.0,
+        duration: Duration::from_millis(900),
+        learn_frac: 0.1,
+        sessions: 5,
+        shots: 2,
+        connections: 2,
+        pipeline: 8,
+        seed: 11,
+        ..Default::default()
+    })
+    .expect("pipelined loadgen runs");
+    assert_eq!(report.protocol_errors, 0, "{}", report.report());
+    assert_eq!(report.app_errors, 0, "{}", report.report());
+    assert!(report.ok > 0, "{}", report.report());
+    assert_eq!(report.ok + report.overloaded, report.sent, "{}", report.report());
+    assert_eq!(report.latency.count, report.sent);
+
+    let report = loadgen::run(&LoadgenConfig {
+        addr,
+        rps: 150.0,
+        duration: Duration::from_millis(700),
+        connections: 2,
+        pipeline: 4,
+        batch: 8,
+        seed: 12,
+        ..Default::default()
+    })
+    .expect("batched loadgen runs");
+    assert_eq!(report.protocol_errors, 0, "{}", report.report());
+    assert_eq!(report.app_errors, 0, "{}", report.report());
+    assert!(report.ok > 0, "{}", report.report());
+    assert_eq!(report.ok + report.overloaded, report.sent, "{}", report.report());
+    server.shutdown();
+}
+
+#[test]
+fn classify_batch_matches_individual_classifies() {
+    let (server, model) = golden_server(2, 2);
+    let mut client = Client::connect(server.local_addr().to_string()).unwrap();
+    let mut rng = Rng::new(51);
+    let windows: Vec<Vec<u8>> = (0..9).map(|_| rand_input(&model, &mut rng, 0, 16)).collect();
+    // Individual classifies are the bit-exact reference.
+    let want: Vec<_> = windows.iter().map(|w| client.classify(w.clone()).unwrap()).collect();
+    let items = client.classify_batch(windows.clone()).unwrap();
+    assert_eq!(items.len(), windows.len());
+    for (i, item) in items.iter().enumerate() {
+        match item {
+            BatchItem::Reply(r) => assert_eq!(r, &want[i], "window {i} must be bit-identical"),
+            other => panic!("window {i}: expected a reply, got {other:?}"),
+        }
+    }
+    // An empty batch answers an empty batch.
+    assert!(client.classify_batch(vec![]).unwrap().is_empty());
+    // Windows fail independently: a bad-length window yields an error
+    // item, the rest still classify.
+    let mixed = vec![windows[0].clone(), vec![1, 2, 3], windows[1].clone()];
+    let items = client.classify_batch(mixed).unwrap();
+    assert!(matches!(&items[0], BatchItem::Reply(r) if r == &want[0]));
+    assert!(matches!(&items[1], BatchItem::Error { code: ErrorCode::App, .. }));
+    assert!(matches!(&items[2], BatchItem::Reply(r) if r == &want[1]));
+    server.shutdown();
+}
+
+#[test]
+fn pipelined_responses_complete_out_of_order() {
+    // One shard, two workers on a chaos engine: a slow-token request stalls
+    // ~400 ms while a fast one overtakes it on the same connection —
+    // proving the server really completes out of order rather than
+    // serializing the pipeline.
+    let model = Arc::new(demo_tiny_kws());
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        shards: 1,
+        workers_per_shard: 2,
+        ..Default::default()
+    };
+    let m = model.clone();
+    let server = Server::start(cfg, move |_s, _w| {
+        let m = m.clone();
+        Box::new(move || Ok(Engine::chaos(m, Duration::from_millis(400)))) as EngineFactory
+    })
+    .unwrap();
+    let mut client = Client::connect(server.local_addr().to_string()).unwrap();
+    let mut rng = Rng::new(52);
+    let mut slow_input = rand_input(&model, &mut rng, 0, 16);
+    slow_input[0] = CHAOS_SLOW_TOKEN;
+    let fast_input = rand_input(&model, &mut rng, 0, 16);
+    let want_fast = client.classify(fast_input.clone()).unwrap();
+
+    let t0 = std::time::Instant::now();
+    let slow_id = client.submit(&WireRequest::Classify { input: slow_input }).unwrap();
+    let fast_id = client.submit(&WireRequest::Classify { input: fast_input }).unwrap();
+    assert_eq!(client.in_flight(), 2);
+    // The fast response arrives while the slow request is still stalled.
+    match client.wait(fast_id).unwrap() {
+        WireResponse::Reply(r) => assert_eq!(r, want_fast),
+        other => panic!("expected Reply, got {other:?}"),
+    }
+    let fast_latency = t0.elapsed();
+    assert!(
+        fast_latency < Duration::from_millis(300),
+        "fast response must overtake the 400 ms slow request (took {fast_latency:?})"
+    );
+    match client.wait(slow_id).unwrap() {
+        WireResponse::Reply(_) => {}
+        other => panic!("expected Reply for the slow request, got {other:?}"),
+    }
+    assert!(t0.elapsed() >= Duration::from_millis(380), "slow request really was slow");
+    assert_eq!(client.in_flight(), 0);
+    server.shutdown();
+}
+
+#[test]
+fn panicking_request_does_not_sink_the_shard() {
+    // Fault isolation: a poisoned request panics its worker's handler.
+    // The shard must answer it with an App error, report the panic in
+    // Metrics, and keep serving Classify/LearnWay afterwards — on a
+    // single-worker shard, so a dead worker could not hide behind a
+    // replica.
+    let model = Arc::new(demo_tiny_kws());
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        shards: 1,
+        workers_per_shard: 1,
+        ..Default::default()
+    };
+    let m = model.clone();
+    let server = Server::start(cfg, move |_s, _w| {
+        let m = m.clone();
+        Box::new(move || Ok(Engine::chaos(m, Duration::from_millis(1)))) as EngineFactory
+    })
+    .unwrap();
+    let mut client = Client::connect(server.local_addr().to_string()).unwrap();
+    let mut rng = Rng::new(53);
+
+    let mut poisoned = rand_input(&model, &mut rng, 0, 16);
+    poisoned[0] = CHAOS_PANIC_TOKEN;
+    match client.call(&WireRequest::Classify { input: poisoned }).unwrap() {
+        WireResponse::Error { code: ErrorCode::App, message } => {
+            assert!(message.contains("panicked"), "{message}");
+        }
+        other => panic!("expected App error for the poisoned request, got {other:?}"),
+    }
+    // The shard still classifies and learns on its only worker.
+    let r = client.classify(rand_input(&model, &mut rng, 0, 16)).unwrap();
+    assert!(r.predicted.is_some());
+    let r = client.learn_way(3, vec![rand_input(&model, &mut rng, 0, 16)]).unwrap();
+    assert_eq!(r.learned_way, Some(0));
+    let r = client.classify_session(3, rand_input(&model, &mut rng, 0, 16)).unwrap();
+    assert_eq!(r.predicted, Some(0));
+    let metrics = client.metrics().unwrap();
+    assert_eq!(metrics.worker_panics, 1, "{}", metrics.report());
+    assert!(metrics.errors >= 1, "{}", metrics.report());
+    server.shutdown();
+}
+
+#[test]
+fn classify_fans_over_full_shards() {
+    // Regression: session-less Classify used to return Overloaded whenever
+    // the one round-robin shard it picked was full, even with every other
+    // shard idle. Fill shard 0 (slow engine, queue depth 1) and verify
+    // classifies keep succeeding via shard 1 with zero Overloaded.
+    let model = Arc::new(demo_tiny_kws());
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        shards: 2,
+        workers_per_shard: 1,
+        queue_depth: 1,
+        ..Default::default()
+    };
+    let m = model.clone();
+    let server = Server::start(cfg, move |shard, _w| {
+        let m = m.clone();
+        // Shard 0 can be stalled via the chaos slow token; shard 1 is fast.
+        if shard == 0 {
+            Box::new(move || Ok(Engine::chaos(m, Duration::from_millis(800)))) as EngineFactory
+        } else {
+            Box::new(move || Ok(Engine::golden(m))) as EngineFactory
+        }
+    })
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    // A session routed to shard 0, to aim slow traffic at it.
+    let shard0_session = (1..=64u64).find(|&s| shard_of(s, 2) == 0).unwrap();
+
+    // Two slow session-classifies: one occupies shard 0's single worker,
+    // the second fills its depth-1 queue.
+    let mut stallers = Vec::new();
+    for t in 0..2u64 {
+        let addr = addr.clone();
+        let model = model.clone();
+        stallers.push(std::thread::spawn(move || {
+            // Staggered so the first is already in flight (dequeued) when
+            // the second fills the depth-1 queue behind it.
+            std::thread::sleep(Duration::from_millis(40 * t));
+            let mut rng = Rng::new(60 + t);
+            let mut c = Client::connect(addr).unwrap();
+            let mut input = rand_input(&model, &mut rng, 0, 16);
+            input[0] = CHAOS_SLOW_TOKEN;
+            // Errors are fine (unknown session) — the stall happens first.
+            let _ = c.call(&WireRequest::ClassifySession { session: shard0_session, input });
+        }));
+    }
+    // Let both stallers reach the shard.
+    std::thread::sleep(Duration::from_millis(200));
+
+    let mut client = Client::connect(addr).unwrap();
+    let mut rng = Rng::new(61);
+    for i in 0..8 {
+        // Round-robin alternates shards; every pick that lands on the full
+        // shard 0 must fan over to shard 1 instead of shedding.
+        match client.call(&WireRequest::Classify { input: rand_input(&model, &mut rng, 0, 16) }) {
+            Ok(WireResponse::Reply(_)) => {}
+            Ok(other) => panic!("classify {i}: expected a reply, got {other:?}"),
+            Err(e) => panic!("classify {i}: {e:#}"),
+        }
+    }
+    // Fan-over attempts are metric-silent: no client saw Overloaded, so
+    // the cluster must not report any rejected submissions.
+    let metrics = client.metrics().unwrap();
+    assert_eq!(metrics.rejected, 0, "healthy fan-over must not tick rejected: {}", metrics.report());
+    for s in stallers {
+        s.join().unwrap();
+    }
+    server.shutdown();
+}
+
+#[test]
+fn v1_and_v2_clients_still_work() {
+    // Strict downgraded clients against the v3 server: v2 keeps the full
+    // stream workflow; v1 sees a v1-shaped Health (no stream geometry).
+    let (server, model) = golden_server(2, 1);
+    let addr = server.local_addr().to_string();
+    let mut rng = Rng::new(71);
+
+    let mut v2 = Client::with_config(
+        addr.clone(),
+        chameleon::serve::ClientConfig { version: 2, ..Default::default() },
+    )
+    .unwrap();
+    let health = v2.health().unwrap();
+    assert_eq!(health.window as usize, model.seq_len, "v2 health keeps stream geometry");
+    let r = v2.learn_way(21, vec![rand_input(&model, &mut rng, 0, 16)]).unwrap();
+    assert_eq!(r.learned_way, Some(0));
+    let r = v2.classify_session(21, rand_input(&model, &mut rng, 0, 16)).unwrap();
+    assert_eq!(r.predicted, Some(0));
+    let (window, hop) = v2.stream_open(22, 4).unwrap();
+    assert_eq!(window as usize, model.seq_len);
+    assert_eq!(hop, 4);
+    let ds = v2.stream_push(22, rand_input(&model, &mut rng, 0, 16)).unwrap();
+    assert_eq!(ds.len(), 1, "full window pushed at once");
+    assert!(v2.stream_close(22).unwrap().0, "stream existed at close");
+    assert!(v2.metrics().unwrap().completed > 0);
+    // v3-only ops are refused locally, not silently up-versioned (the
+    // server would pipeline them while this client matches in order).
+    assert!(v2.classify_batch(vec![]).is_err(), "ClassifyBatch needs v3");
+
+    let mut v1 = Client::with_config(
+        addr,
+        chameleon::serve::ClientConfig { version: 1, ..Default::default() },
+    )
+    .unwrap();
+    let health = v1.health().unwrap();
+    assert_eq!(health.shards, 2);
+    assert_eq!(health.window, 0, "v1 health has no stream geometry");
+    let r = v1.classify(rand_input(&model, &mut rng, 0, 16)).unwrap();
+    assert!(r.predicted.is_some());
+    let m = v1.metrics().unwrap();
+    assert_eq!(m.stream_chunks, 0, "v1 metrics lack stream counters");
+    assert_eq!(m.worker_panics, 0, "v1 metrics lack the v3 panic counter");
+    server.shutdown();
+}
+
+#[test]
+fn pipelined_classify_saturates_multiple_workers() {
+    // Functional pipelining test (the throughput acceptance lives in
+    // benches/serve_loopback.rs): many tagged requests in flight on one
+    // connection, responses collected out of submit order, all
+    // bit-identical to the blocking path.
+    let (server, model) = golden_server(2, 2);
+    let mut client = Client::connect(server.local_addr().to_string()).unwrap();
+    let mut rng = Rng::new(72);
+    let windows: Vec<Vec<u8>> = (0..24).map(|_| rand_input(&model, &mut rng, 0, 16)).collect();
+    let want: Vec<_> = windows.iter().map(|w| client.classify(w.clone()).unwrap()).collect();
+
+    let ids: Vec<u64> = windows
+        .iter()
+        .map(|w| client.submit(&WireRequest::Classify { input: w.clone() }).unwrap())
+        .collect();
+    assert_eq!(client.in_flight(), windows.len());
+    // Collect in reverse submit order to force the buffered-response path.
+    for (i, id) in ids.iter().enumerate().rev() {
+        match client.wait(*id).unwrap() {
+            WireResponse::Reply(r) => assert_eq!(r, want[i], "request {i}"),
+            other => panic!("request {i}: expected Reply, got {other:?}"),
+        }
+    }
+    assert_eq!(client.in_flight(), 0);
+    // Waiting twice for the same ticket is an error, not a hang.
+    assert!(client.wait(ids[0]).is_err());
     server.shutdown();
 }
