@@ -187,5 +187,17 @@ fn main() -> anyhow::Result<()> {
     let snap = server.metrics();
     println!("\nserver totals: {}", snap.report());
     server.shutdown();
+
+    // ---- prepared-vs-naive end-to-end (execution plans) -----------------
+    // The same closed-loop classify traffic against replicas running the
+    // prepared plan vs the scalar naive loop (bit-identical replies
+    // asserted inside the suite) — the serving end of the `golden::plan`
+    // win, recorded in BENCH_serve.json by `chameleon bench --json`.
+    let quick = std::env::var("CHAMELEON_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let rows = chameleon::util::perfsuite::run_serve_suite(quick)?;
+    chameleon::util::perfsuite::print_rows(
+        "serve loopback — prepared plan vs naive replicas",
+        &rows,
+    );
     Ok(())
 }

@@ -2,18 +2,27 @@
 //! three interchangeable engines, all bit-identical on the functional
 //! output (asserted by integration tests):
 //!
-//! * [`EngineKind::Golden`] — the scalar bit-exact model (fast, no timing);
+//! * [`EngineKind::Golden`] — the bit-exact functional model (fast, no
+//!   timing), running a cached [`PreparedModel`] execution plan;
 //! * [`EngineKind::Sim`]    — the cycle-level SoC simulator (adds
 //!   cycle/energy traces; the "chip" itself);
 //! * [`EngineKind::Xla`]    — the PJRT-executed AOT artifact (the
 //!   Pallas/JAX graph; proves the three-layer stack composes).
+//!
+//! Every replica — whatever its kind — prepares the model's execution plan
+//! **once at construction** and reuses one [`Scratch`] arena across
+//! requests: weights are immutable at serve time, so no request ever pays
+//! for a weight decode or a scratch allocation again. Streams opened on a
+//! replica ([`Engine::plan`] → [`PreparedModel::open_stream`]) share the
+//! same plan.
 
+use std::cell::RefCell;
 use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::golden;
+use crate::golden::{ExecMode, PreparedModel, Scratch};
 use crate::model::QuantModel;
 use crate::runtime::XlaModel;
 use crate::sim::{self, ArrayMode, OperatingPoint, Trace};
@@ -57,32 +66,52 @@ pub enum EngineKind {
 }
 
 /// A model bound to an execution engine.
+///
+/// Not `Sync`: each worker thread owns its replica end to end (the PJRT
+/// handles of the XLA engine are not even `Send`-friendly across sharing),
+/// so the cached scratch arena sits in a `RefCell` rather than a lock.
 pub struct Engine {
     pub model: Arc<QuantModel>,
     pub kind: EngineKind,
+    /// The replica's prepared execution plan (weights decoded once).
+    plan: Arc<PreparedModel>,
+    /// Reusable scratch arena for the plan's forwards.
+    scratch: RefCell<Scratch>,
 }
 
 impl Engine {
+    fn with_kind(model: Arc<QuantModel>, kind: EngineKind, mode: ExecMode) -> Engine {
+        let plan = Arc::new(PreparedModel::with_mode(&model, mode));
+        let scratch = RefCell::new(plan.new_scratch());
+        Engine { model, kind, plan, scratch }
+    }
+
     pub fn golden(model: Arc<QuantModel>) -> Engine {
-        Engine { model, kind: EngineKind::Golden }
+        Self::with_kind(model, EngineKind::Golden, ExecMode::process_default())
+    }
+
+    /// Golden engine with an explicit inner-loop mode — the benches'
+    /// prepared-vs-naive serving comparison (no environment mutation).
+    pub fn golden_mode(model: Arc<QuantModel>, mode: ExecMode) -> Engine {
+        Self::with_kind(model, EngineKind::Golden, mode)
     }
 
     pub fn sim(model: Arc<QuantModel>, mode: ArrayMode) -> Engine {
-        Engine { model, kind: EngineKind::Sim(mode) }
+        Self::with_kind(model, EngineKind::Sim(mode), ExecMode::process_default())
     }
 
     pub fn xla(model: Arc<QuantModel>, xm: XlaModel) -> Engine {
-        Engine { model, kind: EngineKind::Xla(xm) }
+        Self::with_kind(model, EngineKind::Xla(xm), ExecMode::process_default())
     }
 
     pub fn paced(model: Arc<QuantModel>, op: OperatingPoint) -> Engine {
-        Engine { model, kind: EngineKind::Paced(op) }
+        Self::with_kind(model, EngineKind::Paced(op), ExecMode::process_default())
     }
 
     /// Fault-injection engine for robustness tests (see
     /// [`EngineKind::Chaos`]).
     pub fn chaos(model: Arc<QuantModel>, slow: Duration) -> Engine {
-        Engine { model, kind: EngineKind::Chaos { slow } }
+        Self::with_kind(model, EngineKind::Chaos { slow }, ExecMode::process_default())
     }
 
     pub fn name(&self) -> &'static str {
@@ -95,13 +124,16 @@ impl Engine {
         }
     }
 
+    /// The replica's cached execution plan (streams opened on this replica
+    /// share it via [`PreparedModel::open_stream`]).
+    pub fn plan(&self) -> &Arc<PreparedModel> {
+        &self.plan
+    }
+
     /// One forward pass over a u4 input sequence.
     pub fn forward(&self, x_q: &[u8]) -> Result<Forward> {
         match &self.kind {
-            EngineKind::Golden => {
-                let (embedding, logits) = golden::forward(&self.model, x_q)?;
-                Ok(Forward { embedding, logits, trace: None })
-            }
+            EngineKind::Golden => self.plan_forward(x_q),
             EngineKind::Sim(mode) => {
                 let r = sim::simulate_inference(&self.model, *mode, x_q)?;
                 Ok(Forward { embedding: r.embedding, logits: r.logits, trace: Some(r.trace) })
@@ -131,16 +163,19 @@ impl Engine {
                         std::thread::sleep(*slow);
                         let mut x = x_q.to_vec();
                         x[0] = 0;
-                        let (embedding, logits) = golden::forward(&self.model, &x)?;
-                        Ok(Forward { embedding, logits, trace: None })
+                        self.plan_forward(&x)
                     }
-                    _ => {
-                        let (embedding, logits) = golden::forward(&self.model, x_q)?;
-                        Ok(Forward { embedding, logits, trace: None })
-                    }
+                    _ => self.plan_forward(x_q),
                 }
             }
         }
+    }
+
+    /// Forward on the cached plan (golden/chaos datapath).
+    fn plan_forward(&self, x_q: &[u8]) -> Result<Forward> {
+        let mut scratch = self.scratch.borrow_mut();
+        let (embedding, logits) = self.plan.forward(x_q, &mut scratch)?;
+        Ok(Forward { embedding, logits, trace: None })
     }
 }
 
@@ -163,6 +198,41 @@ mod tests {
             let b = s.forward(&x).unwrap();
             assert_eq!(a.embedding, b.embedding);
             assert!(b.trace.is_some());
+        }
+    }
+
+    #[test]
+    fn cached_plan_matches_unprepared_forward_across_modes() {
+        let m = Arc::new(crate::model::demo_tiny_kws());
+        let fast = Engine::golden_mode(m.clone(), ExecMode::Fast);
+        let naive = Engine::golden_mode(m.clone(), ExecMode::Naive);
+        let mut rng = Rng::new(9);
+        for _ in 0..8 {
+            let x: Vec<u8> = (0..m.seq_len * m.in_channels)
+                .map(|_| rng.range(0, 16) as u8)
+                .collect();
+            let want = crate::golden::forward(&m, &x).unwrap();
+            let a = fast.forward(&x).unwrap();
+            let b = naive.forward(&x).unwrap();
+            assert_eq!((a.embedding, a.logits), want.clone());
+            assert_eq!((b.embedding, b.logits), want);
+        }
+    }
+
+    #[test]
+    fn repeated_forwards_share_one_scratch() {
+        // The replica's cached arena must not leak state between
+        // consecutive windows (the ClassifyMany batch pattern).
+        let m = Arc::new(crate::model::demo_tiny_kws());
+        let e = Engine::golden(m.clone());
+        let mut rng = Rng::new(10);
+        for _ in 0..6 {
+            let w: Vec<u8> = (0..m.seq_len * m.in_channels)
+                .map(|_| rng.range(0, 16) as u8)
+                .collect();
+            let got = e.forward(&w).unwrap();
+            let want = crate::golden::forward(&m, &w).unwrap();
+            assert_eq!((got.embedding, got.logits), want);
         }
     }
 }

@@ -14,7 +14,7 @@ pub mod streaming;
 pub use engine::{Engine, EngineKind, Forward};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use server::{
-    Coordinator, CoordinatorConfig, ReplySink, Request, Response, SessionId, StreamDecision,
-    StreamInfo,
+    Coordinator, CoordinatorConfig, ManyItem, ReplySink, Request, Response, SessionId,
+    StreamDecision, StreamInfo,
 };
 pub use streaming::AudioWindower;

@@ -19,7 +19,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::coordinator::engine::Engine;
 use crate::coordinator::metrics::Metrics;
 use crate::golden::streaming::StreamingState;
-use crate::protonet::ProtoHead;
+use crate::protonet::{PreparedHead, ProtoHead};
 use crate::sim::learning::learning_cycles;
 
 /// How a worker delivers the outcome of one request: an arbitrary
@@ -82,6 +82,11 @@ pub enum Request {
     StreamPush { session: SessionId, samples: Vec<u8>, reply: ReplySink },
     /// Close a session's stream (its learned head survives).
     StreamClose { session: SessionId, reply: ReplySink },
+    /// Classify a batch of session-less windows on one replica, sharing
+    /// its cached execution plan + scratch arena (the coordinator half of
+    /// proto v3 `ClassifyBatch`). Windows succeed or fail independently
+    /// (`Response::many`).
+    ClassifyMany { inputs: Vec<Vec<u8>>, reply: ReplySink },
 }
 
 impl Request {
@@ -96,7 +101,8 @@ impl Request {
             | Request::EvictSession { reply, .. }
             | Request::StreamOpen { reply, .. }
             | Request::StreamPush { reply, .. }
-            | Request::StreamClose { reply, .. } => reply,
+            | Request::StreamClose { reply, .. }
+            | Request::ClassifyMany { reply, .. } => reply,
         }
     }
 }
@@ -120,6 +126,17 @@ pub struct Response {
     /// `StreamClose` only: whether a stream existed, and how many windows
     /// it emitted over its lifetime.
     pub stream_closed: Option<(bool, u64)>,
+    /// `ClassifyMany` only: one outcome per window, in input order —
+    /// windows fail independently (a bad window yields an error string,
+    /// never a failed request).
+    pub many: Option<Vec<std::result::Result<ManyItem, String>>>,
+}
+
+/// One successful window of a [`Request::ClassifyMany`] batch.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManyItem {
+    pub predicted: usize,
+    pub logits: Vec<i32>,
 }
 
 /// Stream geometry echoed by `StreamOpen`.
@@ -187,7 +204,27 @@ impl std::error::Error for SubmitError {}
 /// pushes to the *same* session serialize.
 struct SessionEntry {
     head: ProtoHead,
+    /// Decoded snapshot of `head`, rebuilt lazily after every
+    /// `learn_way` (learning sets it back to `None`); eviction drops the
+    /// whole entry. Classification therefore never re-decodes prototype
+    /// rows between head updates.
+    prepared: Option<PreparedHead>,
     stream: Option<Arc<Mutex<StreamingState>>>,
+}
+
+impl SessionEntry {
+    fn new(dim: usize) -> SessionEntry {
+        SessionEntry { head: ProtoHead::new(dim), prepared: None, stream: None }
+    }
+
+    /// Classify against the session head via its prepared snapshot,
+    /// (re)building the snapshot if learning invalidated it.
+    fn head_logits(&mut self, emb: &[u8]) -> Vec<i32> {
+        if self.prepared.is_none() {
+            self.prepared = Some(self.head.prepare());
+        }
+        self.prepared.as_ref().expect("just prepared").logits(emb)
+    }
 }
 
 /// LRU session store: a hash map plus a logical access clock. Eviction
@@ -211,12 +248,12 @@ impl SessionStore {
     }
 
     /// Look up a session, refreshing its recency.
-    fn touch(&mut self, id: SessionId) -> Option<&SessionEntry> {
+    fn touch(&mut self, id: SessionId) -> Option<&mut SessionEntry> {
         let now = self.tick();
         match self.map.get_mut(&id) {
             Some((entry, used)) => {
                 *used = now;
-                Some(&*entry)
+                Some(entry)
             }
             None => None,
         }
@@ -258,7 +295,7 @@ impl SessionStore {
         let entry = self
             .map
             .entry(id)
-            .or_insert_with(|| (SessionEntry { head: ProtoHead::new(dim), stream: None }, now));
+            .or_insert_with(|| (SessionEntry::new(dim), now));
         entry.1 = now;
         (&mut entry.0, evicted)
     }
@@ -584,6 +621,9 @@ fn run_request(engine: &Engine, req: Request, shared: &Shared) -> (ReplySink, Re
         Request::StreamClose { session, reply } => {
             (reply, guarded(shared, || handle_stream_close(session, shared)))
         }
+        Request::ClassifyMany { inputs, reply } => {
+            (reply, guarded(shared, || handle_classify_many(engine, &inputs, shared)))
+        }
     }
 }
 
@@ -600,15 +640,20 @@ where
         Ok(res) => res,
         Err(payload) => {
             shared.metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
-            let msg = if let Some(s) = payload.downcast_ref::<&str>() {
-                (*s).to_string()
-            } else if let Some(s) = payload.downcast_ref::<String>() {
-                s.clone()
-            } else {
-                "non-string panic payload".to_string()
-            };
+            let msg = panic_message(payload.as_ref());
             Err(anyhow!("request handler panicked (worker kept alive): {msg}"))
         }
+    }
+}
+
+/// Best-effort human-readable panic payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 
@@ -629,6 +674,64 @@ fn handle_classify(engine: &Engine, input: &[u8], shared: &Shared) -> Result<Res
     })
 }
 
+/// Classify a batch of session-less windows on this replica's cached plan
+/// + scratch arena. Windows fail independently: a malformed window (or a
+/// headless model) yields an error *item* while the rest of the batch
+/// still classifies. Panics are caught per window (same contract as
+/// [`guarded`], one `worker_panics` tick each), so a poisoned window
+/// costs one error item instead of its whole sub-batch.
+///
+/// Metrics discipline: one `ClassifyMany` is one coordinator request, so
+/// `errors` ticks **at most once** per sub-batch (when any window failed)
+/// to keep the same denominator as `requests` — per-window failures are
+/// visible to the client in the reply items, not in the shard counters.
+fn handle_classify_many(engine: &Engine, inputs: &[Vec<u8>], shared: &Shared) -> Result<Response> {
+    let mut items = Vec::with_capacity(inputs.len());
+    let mut cycles = 0u64;
+    let mut traced = false;
+    for input in inputs {
+        let fwd = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| engine.forward(input)));
+        let fwd = match fwd {
+            Ok(r) => r,
+            Err(payload) => {
+                shared.metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
+                items.push(Err(format!(
+                    "window handler panicked (worker kept alive): {}",
+                    panic_message(payload.as_ref())
+                )));
+                continue;
+            }
+        };
+        match fwd {
+            Ok(f) => {
+                if let Some(t) = &f.trace {
+                    cycles += t.total_cycles();
+                    traced = true;
+                }
+                match f.logits {
+                    Some(logits) => items.push(Ok(ManyItem {
+                        predicted: crate::golden::argmax(&logits),
+                        logits,
+                    })),
+                    None => {
+                        items.push(Err("model has no built-in head; use a session".to_string()));
+                    }
+                }
+            }
+            Err(e) => {
+                items.push(Err(format!("{e:#}")));
+            }
+        }
+    }
+    if traced {
+        shared.metrics.record_cycles(cycles);
+    }
+    if items.iter().any(|i| i.is_err()) {
+        shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+    }
+    Ok(Response { many: Some(items), ..Response::default() })
+}
+
 fn handle_classify_session(
     engine: &Engine,
     session: SessionId,
@@ -641,14 +744,13 @@ fn handle_classify_session(
         shared.metrics.record_cycles(c);
     }
     let mut sessions = shared.session_store();
-    let head = &sessions
+    let entry = sessions
         .touch(session)
-        .ok_or_else(|| anyhow!("unknown session {session} (learn first)"))?
-        .head;
-    if head.n_ways() == 0 {
+        .ok_or_else(|| anyhow!("unknown session {session} (learn first)"))?;
+    if entry.head.n_ways() == 0 {
         bail!("session {session} has no learned ways");
     }
-    let logits = head.logits(&fwd.embedding);
+    let logits = entry.head_logits(&fwd.embedding);
     Ok(Response {
         predicted: Some(crate::golden::argmax(&logits)),
         logits: Some(logits),
@@ -684,6 +786,9 @@ fn handle_learn(
     let mut sessions = shared.session_store();
     let (entry, lru_evicted) = sessions.get_or_insert(session, shared.embed_dim);
     entry.head.learn_way(&embs);
+    // The head changed: the decoded snapshot is stale until the next
+    // classify rebuilds it.
+    entry.prepared = None;
     let learned = entry.head.n_ways() - 1;
     drop(sessions);
     if lru_evicted.is_some() {
@@ -706,7 +811,9 @@ fn handle_stream_open(
     hop: usize,
     shared: &Shared,
 ) -> Result<Response> {
-    let state = StreamingState::new(engine.model.clone(), hop)?;
+    // The stream borrows the replica's cached execution plan — opening a
+    // stream never re-decodes the model's weight planes.
+    let state = StreamingState::with_plan(engine.plan().clone(), hop)?;
     let info = StreamInfo { window: state.window(), hop };
     let mut sessions = shared.session_store();
     let (entry, lru_evicted) = sessions.get_or_insert(session, shared.embed_dim);
@@ -771,14 +878,13 @@ fn handle_stream_push(session: SessionId, samples: &[u8], shared: &Shared) -> Re
             Some(logits) => logits,
             None => {
                 let mut sessions = shared.session_store();
-                let head = &sessions
+                let entry = sessions
                     .touch(session)
-                    .ok_or_else(|| anyhow!("session {session} evicted mid-push"))?
-                    .head;
-                if head.n_ways() == 0 {
+                    .ok_or_else(|| anyhow!("session {session} evicted mid-push"))?;
+                if entry.head.n_ways() == 0 {
                     bail!("session {session} lost its learned ways mid-push");
                 }
-                head.logits(&w.embedding)
+                entry.head_logits(&w.embedding)
             }
         };
         decisions.push(StreamDecision {
@@ -1090,6 +1196,108 @@ mod tests {
         let snap = c.metrics().snapshot();
         assert_eq!(snap.worker_panics, 1);
         assert!(snap.errors >= 1, "the poisoned request counts as an error");
+        c.shutdown();
+    }
+
+    #[test]
+    fn classify_many_matches_individual_classifies() {
+        let m = SArc::new(crate::model::demo_tiny_kws());
+        let mf = m.clone();
+        let c = Coordinator::start(
+            vec![Box::new(move || Ok(Engine::golden(mf))) as EngineFactory],
+            CoordinatorConfig::default(),
+        )
+        .unwrap();
+        let mut rng = Rng::new(61);
+        let windows: Vec<Vec<u8>> = (0..5).map(|_| rand_seq(&m, &mut rng, 0, 16)).collect();
+        let want: Vec<_> = windows
+            .iter()
+            .map(|w| c.classify(w.clone()).unwrap())
+            .collect();
+        let (rtx, rrx) = mpsc::channel();
+        c.submit(Request::ClassifyMany { inputs: windows, reply: rtx.into() }).unwrap();
+        let r = rrx.recv().unwrap().unwrap();
+        let items = r.many.expect("ClassifyMany reply carries items");
+        assert_eq!(items.len(), want.len());
+        for (item, w) in items.iter().zip(&want) {
+            let item = item.as_ref().expect("window classifies");
+            assert_eq!(Some(item.predicted), w.predicted);
+            assert_eq!(Some(&item.logits), w.logits.as_ref());
+        }
+        // Windows fail independently: a short window errors, the rest
+        // (none here) would still classify.
+        let (rtx, rrx) = mpsc::channel();
+        c.submit(Request::ClassifyMany {
+            inputs: vec![vec![1, 2, 3]],
+            reply: rtx.into(),
+        })
+        .unwrap();
+        let r = rrx.recv().unwrap().unwrap();
+        let items = r.many.unwrap();
+        assert!(items[0].is_err(), "bad-length window must yield an error item");
+        c.shutdown();
+    }
+
+    #[test]
+    fn classify_many_isolates_panicking_windows() {
+        // One poisoned window in a batch must cost one error item (and a
+        // worker_panics tick) — not the whole sub-batch, and not the
+        // worker.
+        let m = SArc::new(crate::model::demo_tiny_kws());
+        let mf = m.clone();
+        let c = Coordinator::start(
+            vec![Box::new(move || {
+                Ok(Engine::chaos(mf, std::time::Duration::from_millis(1)))
+            }) as EngineFactory],
+            CoordinatorConfig::default(),
+        )
+        .unwrap();
+        let mut rng = Rng::new(63);
+        let good_a = rand_seq(&m, &mut rng, 0, 16);
+        let good_b = rand_seq(&m, &mut rng, 0, 16);
+        let mut poisoned = rand_seq(&m, &mut rng, 0, 16);
+        poisoned[0] = crate::coordinator::engine::CHAOS_PANIC_TOKEN;
+        let (rtx, rrx) = mpsc::channel();
+        c.submit(Request::ClassifyMany {
+            inputs: vec![good_a.clone(), poisoned, good_b.clone()],
+            reply: rtx.into(),
+        })
+        .unwrap();
+        let r = rrx.recv().unwrap().unwrap();
+        let items = r.many.unwrap();
+        assert_eq!(items.len(), 3);
+        let want_a = c.classify(good_a).unwrap();
+        assert_eq!(items[0].as_ref().unwrap().logits, want_a.logits.unwrap());
+        let err = items[1].as_ref().unwrap_err();
+        assert!(err.contains("panicked"), "{err}");
+        assert!(items[2].is_ok(), "window after the panic must still classify");
+        let snap = c.metrics().snapshot();
+        assert_eq!(snap.worker_panics, 1);
+        // One request, one error tick — per-window failures surface in
+        // the reply items, not the shard counters.
+        assert_eq!(snap.errors, 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn prepared_session_head_tracks_learning() {
+        // The cached PreparedHead must be invalidated by learn_way: a
+        // session that learns a second way after classifying must see the
+        // new way (a stale snapshot would keep answering from one way).
+        let (c, m) = mk_coord(1);
+        let mut rng = Rng::new(62);
+        let a: Vec<Vec<u8>> = (0..3).map(|_| rand_seq(&m, &mut rng, 0, 3)).collect();
+        let b: Vec<Vec<u8>> = (0..3).map(|_| rand_seq(&m, &mut rng, 13, 16)).collect();
+        c.learn_way(11, a).unwrap();
+        // First classify builds the snapshot.
+        let r = c.classify_session(11, rand_seq(&m, &mut rng, 0, 3)).unwrap();
+        assert_eq!(r.predicted, Some(0));
+        assert_eq!(r.logits.as_ref().map(|l| l.len()), Some(1));
+        // Learning a second way must invalidate it.
+        c.learn_way(11, b).unwrap();
+        let r = c.classify_session(11, rand_seq(&m, &mut rng, 13, 16)).unwrap();
+        assert_eq!(r.predicted, Some(1));
+        assert_eq!(r.logits.as_ref().map(|l| l.len()), Some(2));
         c.shutdown();
     }
 

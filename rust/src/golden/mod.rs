@@ -14,8 +14,10 @@ use anyhow::{bail, Result};
 use crate::model::{QLayer, QuantModel};
 use crate::quant;
 
+pub mod plan;
 pub mod streaming;
 
+pub use plan::{ExecMode, PreparedFc, PreparedLayer, PreparedModel, Scratch};
 pub use streaming::{StreamingState, WindowOutput};
 
 /// Activations are u4 codes stored one per byte, `[T][C]` row-major.
@@ -28,109 +30,39 @@ pub type Acts = Vec<u8>;
 /// Returns `[t_len][c_out]` u4 when `layer.relu`, else saturated logits
 /// widened into `i32` (use [`conv_layer_raw`] for that case).
 ///
-/// §Perf: the hot path runs slab-major (16 flat `(tap, cin)` elements per
-/// slab, vectorizable over `c_out` with contiguous weight rows) over
-/// pre-decoded integer weights; `CHAMELEON_GOLDEN=naive` selects the
-/// original scalar per-output loop for before/after comparison — both are
-/// bit-identical (asserted by `fast_equals_naive` below).
+/// §Perf: this un-prepared entry point decodes the layer's weights and
+/// allocates scratch on every call — kept for one-shot callers and as the
+/// pre-plan baseline the benches measure. Hot paths (engines, streams,
+/// batches) go through a [`plan::PreparedModel`], which does that work
+/// exactly once. The inner loop is selected by
+/// [`ExecMode::process_default`] (`CHAMELEON_GOLDEN=naive` at process
+/// start picks the scalar reference loop); both loops are bit-identical
+/// (asserted by `fast_equals_naive` below and `tests/plan_bitexact.rs`).
 pub fn conv_layer(x: &[u8], t_len: usize, layer: &QLayer, residual: Option<&[u8]>) -> Acts {
+    conv_layer_with(x, t_len, layer, residual, ExecMode::process_default())
+}
+
+/// [`conv_layer`] with an explicit execution mode (no environment reads).
+pub fn conv_layer_with(
+    x: &[u8],
+    t_len: usize,
+    layer: &QLayer,
+    residual: Option<&[u8]>,
+    mode: ExecMode,
+) -> Acts {
     debug_assert!(layer.relu, "use conv_layer_raw for non-ReLU layers");
-    if use_naive() {
+    if mode == ExecMode::Naive {
         return conv_layer_naive(x, t_len, layer, residual);
     }
-    let cin = layer.c_in();
+    // Main plane only: residual rows (if any) arrive pre-computed, so the
+    // one-shot path must not pay for decoding a 1x1 plane it never reads.
+    let prepared = PreparedLayer::prepare_main(layer);
     let cout = layer.c_out();
-    let k = layer.kernel_size();
-    let d = layer.dilation;
-    let decoded = decode_codes(&layer.codes);
     let mut out = vec![0u8; t_len * cout];
     let mut acc = vec![0i32; cout];
     let mut partial = vec![0i32; cout];
-    let mut taps: Vec<Option<&[u8]>> = Vec::with_capacity(k);
-    for t in 0..t_len {
-        taps.clear();
-        for tap in 0..k {
-            let offset = (k - 1 - tap) * d;
-            taps.push(if t >= offset {
-                let row = t - offset;
-                Some(&x[row * cin..(row + 1) * cin])
-            } else {
-                None
-            });
-        }
-        accumulate_row_taps(&taps, cin, &decoded, &mut acc, &mut partial);
-        let rs = layer.res_shift.unwrap_or(0);
-        for co in 0..cout {
-            let res = residual.map_or(0, |r| r[t * cout + co] as i32);
-            let (res, rs) = apply_signed_res(res, rs);
-            out[t * cout + co] =
-                quant::ope(acc[co], layer.bias[co], layer.out_shift, true, res, rs) as u8;
-        }
-    }
+    prepared.conv(x, t_len, residual, &mut out, &mut acc, &mut partial, ExecMode::Fast);
     out
-}
-
-fn use_naive() -> bool {
-    static NAIVE: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
-    *NAIVE.get_or_init(|| {
-        std::env::var("CHAMELEON_GOLDEN").map(|v| v == "naive").unwrap_or(false)
-    })
-}
-
-/// Pre-decoded weight values (i32), same layout as the codes.
-pub(crate) fn decode_codes(codes: &[i8]) -> Vec<i32> {
-    codes.iter().map(|&c| quant::log2_decode(c)).collect()
-}
-
-/// Slab-major accumulation of one output row (all `c_out` channels of one
-/// timestep) from its gathered tap rows: for each 16-element slab of the
-/// flattened `(tap, cin)` axis, the partial products are accumulated
-/// contiguously over `c_out` (auto-vectorizes), then saturated into `acc`
-/// — identical slab order and saturation points as the scalar path. A
-/// `None` tap (causal out-of-range) contributes zeros but still advances
-/// the slab counter, exactly like the zero-padded scalar datapath.
-///
-/// Shared by the batch path ([`conv_layer`]) and the incremental streaming
-/// executor ([`streaming::StreamingState`]) so the two are bit-identical
-/// by construction.
-#[inline]
-pub(crate) fn accumulate_row_taps(
-    taps: &[Option<&[u8]>],
-    cin: usize,
-    decoded: &[i32],
-    acc: &mut [i32],
-    partial: &mut [i32],
-) {
-    let cout = acc.len();
-    acc.fill(0);
-    partial.fill(0);
-    let mut slab = 0usize;
-    for (tap, row) in taps.iter().enumerate() {
-        for ci in 0..cin {
-            if let Some(row) = row {
-                let a = row[ci] as i32;
-                if a != 0 {
-                    let wrow = &decoded[(tap * cin + ci) * cout..(tap * cin + ci + 1) * cout];
-                    for (p, &w) in partial.iter_mut().zip(wrow) {
-                        *p += a * w;
-                    }
-                }
-            }
-            slab += 1;
-            if slab == 16 {
-                for (a, p) in acc.iter_mut().zip(partial.iter_mut()) {
-                    *a = quant::sat_acc(*a + *p);
-                    *p = 0;
-                }
-                slab = 0;
-            }
-        }
-    }
-    if slab != 0 {
-        for (a, p) in acc.iter_mut().zip(partial.iter_mut()) {
-            *a = quant::sat_acc(*a + *p);
-        }
-    }
 }
 
 /// Original scalar implementation (kept for §Perf before/after and as a
@@ -237,17 +169,22 @@ pub fn fc_logits(x: &[u8], codes: &[i8], cin: usize, cout: usize, bias: &[i32]) 
 
 /// Full forward to the u4 embedding, with optional per-layer checksums.
 pub fn embed(model: &QuantModel, x_q: &[u8]) -> Result<Acts> {
-    embed_traced(model, x_q, &mut None)
+    embed_traced(model, x_q, &mut None, ExecMode::process_default())
 }
 
 /// Per-layer activation-sum checksums (matches python `layer_output_sums`).
 pub fn layer_sums(model: &QuantModel, x_q: &[u8]) -> Result<Vec<i64>> {
     let mut sums = Some(Vec::new());
-    embed_traced(model, x_q, &mut sums)?;
+    embed_traced(model, x_q, &mut sums, ExecMode::process_default())?;
     Ok(sums.unwrap())
 }
 
-fn embed_traced(model: &QuantModel, x_q: &[u8], sums: &mut Option<Vec<i64>>) -> Result<Acts> {
+fn embed_traced(
+    model: &QuantModel,
+    x_q: &[u8],
+    sums: &mut Option<Vec<i64>>,
+    mode: ExecMode,
+) -> Result<Acts> {
     let t_len = model.seq_len;
     if x_q.len() != t_len * model.in_channels {
         bail!(
@@ -262,7 +199,7 @@ fn embed_traced(model: &QuantModel, x_q: &[u8], sums: &mut Option<Vec<i64>>) -> 
         let l1 = &model.layers[2 * b];
         let l2 = &model.layers[2 * b + 1];
         let blk_in = h.clone();
-        h = conv_layer(&h, t_len, l1, None);
+        h = conv_layer_with(&h, t_len, l1, None, mode);
         if let Some(s) = sums.as_mut() {
             s.push(h.iter().map(|&v| v as i64).sum());
         }
@@ -282,11 +219,11 @@ fn embed_traced(model: &QuantModel, x_q: &[u8], sums: &mut Option<Vec<i64>>) -> 
                     res_bias: None,
                     res_out_shift: None,
                 };
-                conv_layer(&blk_in, t_len, &rl, None)
+                conv_layer_with(&blk_in, t_len, &rl, None, mode)
             }
             _ => blk_in,
         };
-        h = conv_layer(&h, t_len, l2, Some(&res));
+        h = conv_layer_with(&h, t_len, l2, Some(&res), mode);
         if let Some(s) = sums.as_mut() {
             s.push(h.iter().map(|&v| v as i64).sum());
         }
@@ -294,13 +231,23 @@ fn embed_traced(model: &QuantModel, x_q: &[u8], sums: &mut Option<Vec<i64>>) -> 
     // Embedding FC over the final timestep (k=1 conv on one row).
     let c_last = model.embed.c_in();
     let last = &h[(t_len - 1) * c_last..t_len * c_last];
-    let emb = conv_layer(last, 1, &model.embed, None);
+    let emb = conv_layer_with(last, 1, &model.embed, None, mode);
     Ok(emb)
 }
 
 /// Full forward: embedding + head logits (if the model has a head).
 pub fn forward(model: &QuantModel, x_q: &[u8]) -> Result<(Acts, Option<Vec<i32>>)> {
-    let emb = embed(model, x_q)?;
+    forward_with(model, x_q, ExecMode::process_default())
+}
+
+/// [`forward`] with an explicit execution mode — the *un-prepared* path
+/// (weights decoded per call), kept as the benches' pre-plan baseline.
+pub fn forward_with(
+    model: &QuantModel,
+    x_q: &[u8],
+    mode: ExecMode,
+) -> Result<(Acts, Option<Vec<i32>>)> {
+    let emb = embed_traced(model, x_q, &mut None, mode)?;
     let logits = model.head.as_ref().map(|h| {
         fc_logits(&emb, &h.codes, h.c_in(), h.c_out(), &h.bias)
     });
@@ -494,8 +441,10 @@ mod tests {
             };
             let x: Vec<u8> = (0..t_len * cin).map(|_| rng.range(0, 16) as u8).collect();
             let res: Vec<u8> = (0..t_len * cout).map(|_| rng.range(0, 16) as u8).collect();
-            let fast = conv_layer(&x, t_len, &l, Some(&res));
-            let naive = conv_layer_naive(&x, t_len, &l, Some(&res));
+            // Explicit modes: the comparison no longer depends on the
+            // process-wide CHAMELEON_GOLDEN default (or on test order).
+            let fast = conv_layer_with(&x, t_len, &l, Some(&res), ExecMode::Fast);
+            let naive = conv_layer_with(&x, t_len, &l, Some(&res), ExecMode::Naive);
             prop_assert_eq!(fast, naive);
             Ok(())
         });

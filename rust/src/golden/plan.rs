@@ -1,0 +1,827 @@
+//! Prepared execution plans for the matmul-free datapath.
+//!
+//! [`super::conv_layer`] pays a per-call tax the chip never would: it
+//! re-runs the s4-log2 weight decode (a full `Vec<i32>` materialization)
+//! and reallocates its `out`/`acc`/`partial` scratch on **every** forward,
+//! every streaming push and every learned-head classify, even though the
+//! weights are immutable at serve time. [`PreparedModel`] does the work
+//! once: each layer's decoded weight planes are laid out cout-contiguous
+//! (ready for the slab-major inner loop), the residual 1x1 convs and the
+//! classifier head are decoded alongside, and a reusable [`Scratch`] arena
+//! replaces the per-call allocations. The plan then exposes
+//!
+//! * [`PreparedModel::forward`] — one window, zero per-call preparation;
+//! * [`PreparedModel::forward_many`] — batched windows sharing one plan
+//!   and one arena (the per-replica path behind proto v3 `ClassifyBatch`);
+//! * [`PreparedModel::open_stream`] — an incremental
+//!   [`super::StreamingState`] borrowing this plan, so per-chunk pushes
+//!   never touch the code tables again.
+//!
+//! # Saturation-free fast path
+//!
+//! The PE-array contract saturates the 18-bit accumulator after every
+//! 16-element slab of the flattened `(tap, cin)` axis. At prepare time
+//! each output channel's worst case is known exactly: with u4 activations
+//! the largest any slab-boundary prefix sum can reach is
+//! `B_co = 15 * sum_i |w_i,co|`. When `B_co <= ACC_MAX` for every output
+//! channel, no slab clamp can ever engage, every intermediate value fits
+//! i32, and integer addition is associative — so the slab structure
+//! collapses into a plain fused multiply-accumulate that is bit-identical
+//! by construction and substantially faster (no `partial` array, no clamp
+//! pass every 16 elements, out-of-range causal taps skipped outright).
+//! Layers that can saturate (adversarial weights, the property tests'
+//! extremes) keep the exact slab-ordered loop.
+//!
+//! # Execution mode
+//!
+//! [`ExecMode`] selects the inner loop: [`ExecMode::Fast`] (slab-major /
+//! fused) or [`ExecMode::Naive`] (the original scalar per-output loop,
+//! kept for before/after benchmarking). The mode is **explicit** plan
+//! state: benches compare the two by constructing two plans, not by
+//! mutating the environment. `CHAMELEON_GOLDEN=naive` survives only as
+//! the process-start default ([`ExecMode::process_default`]) consulted by
+//! the un-prepared [`super::conv_layer`] wrapper.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::model::{QLayer, QuantModel};
+use crate::quant;
+
+use super::apply_signed_res;
+
+/// Which inner loop a plan (or the un-prepared wrapper) runs. Both are
+/// bit-identical on every output — asserted by `tests/plan_bitexact.rs`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Slab-major vectorized path (fused when saturation-free).
+    Fast,
+    /// Original scalar per-`(t, c_out)` reference loop.
+    Naive,
+}
+
+impl ExecMode {
+    /// Process-start default: `CHAMELEON_GOLDEN=naive` selects
+    /// [`ExecMode::Naive`], anything else [`ExecMode::Fast`]. Read once —
+    /// mutating the variable mid-process has no effect (tests and benches
+    /// that need both modes pass them explicitly instead).
+    pub fn process_default() -> ExecMode {
+        static DEFAULT: std::sync::OnceLock<ExecMode> = std::sync::OnceLock::new();
+        *DEFAULT.get_or_init(|| {
+            match std::env::var("CHAMELEON_GOLDEN") {
+                Ok(v) if v == "naive" => ExecMode::Naive,
+                _ => ExecMode::Fast,
+            }
+        })
+    }
+}
+
+/// Decode a slice of s4 log2 codes into integer weight values (layout
+/// preserved: `[(tap * cin + ci) * cout + co]`, i.e. cout-contiguous rows).
+pub(crate) fn decode_codes(codes: &[i8]) -> Vec<i32> {
+    codes.iter().map(|&c| quant::log2_decode(c)).collect()
+}
+
+/// Whether the slab clamps of a weight plane can ever engage: for each
+/// output channel, `15 * sum |w|` bounds every slab-boundary prefix sum
+/// (activations are u4), so staying within the 18-bit rails for every
+/// channel makes the whole reduction saturation-free (see module docs).
+fn saturation_free(decoded: &[i32], cout: usize) -> bool {
+    if cout == 0 {
+        return true;
+    }
+    let mut sums = vec![0i64; cout];
+    for row in decoded.chunks_exact(cout) {
+        for (s, &w) in sums.iter_mut().zip(row) {
+            *s += w.unsigned_abs() as i64;
+        }
+    }
+    sums.iter().all(|&s| 15 * s <= quant::ACC_MAX as i64)
+}
+
+/// Slab-major accumulation of one output row (all `c_out` channels of one
+/// timestep) from its gathered tap rows: for each 16-element slab of the
+/// flattened `(tap, cin)` axis, partial products accumulate contiguously
+/// over `c_out` (auto-vectorizes), then saturate into `acc` — identical
+/// slab order and saturation points as the scalar chip loop. A `None` tap
+/// (causal out-of-range) contributes zeros but still advances the slab
+/// counter, exactly like the zero-padded scalar datapath.
+pub(crate) fn accumulate_row_slabbed(
+    taps: &[Option<&[u8]>],
+    cin: usize,
+    decoded: &[i32],
+    acc: &mut [i32],
+    partial: &mut [i32],
+) {
+    let cout = acc.len();
+    acc.fill(0);
+    partial.fill(0);
+    let mut slab = 0usize;
+    for (tap, row) in taps.iter().enumerate() {
+        for ci in 0..cin {
+            if let Some(row) = row {
+                let a = row[ci] as i32;
+                if a != 0 {
+                    let wrow = &decoded[(tap * cin + ci) * cout..(tap * cin + ci + 1) * cout];
+                    for (p, &w) in partial.iter_mut().zip(wrow) {
+                        *p += a * w;
+                    }
+                }
+            }
+            slab += 1;
+            if slab == 16 {
+                for (a, p) in acc.iter_mut().zip(partial.iter_mut()) {
+                    *a = quant::sat_acc(*a + *p);
+                    *p = 0;
+                }
+                slab = 0;
+            }
+        }
+    }
+    if slab != 0 {
+        for (a, p) in acc.iter_mut().zip(partial.iter_mut()) {
+            *a = quant::sat_acc(*a + *p);
+        }
+    }
+}
+
+/// Fused accumulation for saturation-free weight planes: a plain
+/// multiply-accumulate straight into `acc`, skipping missing taps, zero
+/// activations, the `partial` array and every slab clamp. Bit-identical
+/// to [`accumulate_row_slabbed`] whenever [`saturation_free`] holds.
+fn accumulate_row_fused(taps: &[Option<&[u8]>], cin: usize, decoded: &[i32], acc: &mut [i32]) {
+    let cout = acc.len();
+    acc.fill(0);
+    for (tap, row) in taps.iter().enumerate() {
+        let Some(row) = row else { continue };
+        for ci in 0..cin {
+            let a = row[ci] as i32;
+            if a != 0 {
+                let wrow = &decoded[(tap * cin + ci) * cout..(tap * cin + ci + 1) * cout];
+                for (o, &w) in acc.iter_mut().zip(wrow) {
+                    *o += a * w;
+                }
+            }
+        }
+    }
+}
+
+/// One decoded weight plane plus its dispatch flag: the unit every
+/// prepared structure (conv layers, residual 1x1s, FC heads) is built on.
+#[derive(Debug, Clone)]
+pub(crate) struct Plane {
+    pub decoded: Vec<i32>,
+    pub sat_free: bool,
+}
+
+impl Plane {
+    fn new(codes: &[i8], cout: usize) -> Plane {
+        let decoded = decode_codes(codes);
+        let sat_free = saturation_free(&decoded, cout);
+        Plane { decoded, sat_free }
+    }
+
+    /// Accumulate one output row from its tap rows into `acc[..cout]`,
+    /// dispatching to the fused or slab-exact loop.
+    #[inline]
+    pub(crate) fn accumulate_row(
+        &self,
+        taps: &[Option<&[u8]>],
+        cin: usize,
+        acc: &mut [i32],
+        partial: &mut [i32],
+    ) {
+        if self.sat_free {
+            accumulate_row_fused(taps, cin, &self.decoded, acc);
+        } else {
+            accumulate_row_slabbed(taps, cin, &self.decoded, acc, partial);
+        }
+    }
+}
+
+/// The 1x1 re-quantizing residual conv of a width-changing block, decoded.
+#[derive(Debug, Clone)]
+pub(crate) struct PreparedRes {
+    pub cin: usize,
+    pub cout: usize,
+    pub bias: Vec<i32>,
+    pub out_shift: i32,
+    pub plane: Plane,
+}
+
+/// One conv layer with its weight planes decoded and laid out once.
+#[derive(Debug, Clone)]
+pub struct PreparedLayer {
+    pub(crate) k: usize,
+    pub(crate) cin: usize,
+    pub(crate) cout: usize,
+    pub(crate) dilation: usize,
+    pub(crate) relu: bool,
+    pub(crate) out_shift: i32,
+    pub(crate) res_shift: i32,
+    pub(crate) bias: Vec<i32>,
+    pub(crate) plane: Plane,
+    /// Decoded 1x1 residual conv, for blocks that change width.
+    pub(crate) res: Option<PreparedRes>,
+}
+
+impl PreparedLayer {
+    /// Decode one layer. The residual fields follow the loader's grammar:
+    /// `res_codes` implies shape/bias/out_shift (enforced at model load).
+    pub fn prepare(l: &QLayer) -> PreparedLayer {
+        let res = l.res_codes.as_ref().map(|rc| {
+            let shape = l.res_codes_shape.as_ref().expect("res_codes_shape with res_codes");
+            let (rcin, rcout) = (shape[shape.len() - 2], shape[shape.len() - 1]);
+            PreparedRes {
+                cin: rcin,
+                cout: rcout,
+                bias: l.res_bias.clone().expect("res_bias with res_codes"),
+                out_shift: l.res_out_shift.expect("res_out_shift with res_codes"),
+                plane: Plane::new(rc, rcout),
+            }
+        });
+        let mut prepared = Self::prepare_main(l);
+        prepared.res = res;
+        prepared
+    }
+
+    /// Decode only the main weight plane, skipping the residual 1x1 conv:
+    /// for one-shot wrappers ([`super::conv_layer`]) whose residual rows
+    /// arrive pre-computed — decoding a plane the call never reads would
+    /// bill the pre-plan baseline for work it does not do.
+    pub fn prepare_main(l: &QLayer) -> PreparedLayer {
+        PreparedLayer {
+            k: l.kernel_size(),
+            cin: l.c_in(),
+            cout: l.c_out(),
+            dilation: l.dilation,
+            relu: l.relu,
+            out_shift: l.out_shift,
+            res_shift: l.res_shift.unwrap_or(0),
+            bias: l.bias.clone(),
+            plane: Plane::new(&l.codes, l.c_out()),
+            res: None,
+        }
+    }
+
+    pub fn c_in(&self) -> usize {
+        self.cin
+    }
+
+    pub fn c_out(&self) -> usize {
+        self.cout
+    }
+
+    pub fn kernel_size(&self) -> usize {
+        self.k
+    }
+
+    pub fn dilation(&self) -> usize {
+        self.dilation
+    }
+
+    /// History this layer needs of its input (`(k-1)·d + 1` rows).
+    pub fn history(&self) -> usize {
+        (self.k - 1) * self.dilation + 1
+    }
+
+    /// Accumulate one output row (all `c_out` channels of one timestep)
+    /// from its gathered causal tap rows.
+    #[inline]
+    pub(crate) fn accumulate_row(
+        &self,
+        taps: &[Option<&[u8]>],
+        acc: &mut [i32],
+        partial: &mut [i32],
+    ) {
+        self.plane.accumulate_row(taps, self.cin, acc, partial);
+    }
+
+    /// Full dilated causal conv over `t_len` timesteps, writing u4 codes
+    /// (ReLU layers) into `out[..t_len * cout]`. `acc`/`partial` must be
+    /// at least `cout` wide.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn conv(
+        &self,
+        x: &[u8],
+        t_len: usize,
+        residual: Option<&[u8]>,
+        out: &mut [u8],
+        acc: &mut [i32],
+        partial: &mut [i32],
+        mode: ExecMode,
+    ) {
+        debug_assert!(self.relu, "prepared conv writes u4; non-ReLU layers use the raw path");
+        if mode == ExecMode::Naive {
+            self.conv_naive(x, t_len, residual, out);
+            return;
+        }
+        let (cin, cout, k, d) = (self.cin, self.cout, self.k, self.dilation);
+        let acc = &mut acc[..cout];
+        let partial = &mut partial[..cout];
+        let mut taps: Vec<Option<&[u8]>> = Vec::with_capacity(k);
+        for t in 0..t_len {
+            taps.clear();
+            for tap in 0..k {
+                let offset = (k - 1 - tap) * d;
+                taps.push(if t >= offset {
+                    let row = t - offset;
+                    Some(&x[row * cin..(row + 1) * cin])
+                } else {
+                    None
+                });
+            }
+            self.accumulate_row(&taps, acc, partial);
+            for co in 0..cout {
+                let res = residual.map_or(0, |r| r[t * cout + co] as i32);
+                let (res, rs) = apply_signed_res(res, self.res_shift);
+                out[t * cout + co] =
+                    quant::ope(acc[co], self.bias[co], self.out_shift, true, res, rs) as u8;
+            }
+        }
+    }
+
+    /// The original scalar per-`(t, co)` loop over the decoded weights:
+    /// products, slab boundaries and saturation points exactly as
+    /// [`super::conv_layer_naive`] (decoded values equal
+    /// `quant::shift_product` outputs by definition).
+    fn conv_naive(&self, x: &[u8], t_len: usize, residual: Option<&[u8]>, out: &mut [u8]) {
+        let (cin, cout, k, d) = (self.cin, self.cout, self.k, self.dilation);
+        for t in 0..t_len {
+            for co in 0..cout {
+                let mut acc = 0i32;
+                let mut partial = 0i32;
+                let mut slab = 0usize;
+                for tap in 0..k {
+                    let offset = (k - 1 - tap) * d;
+                    let (row, in_range) = if t >= offset { (t - offset, true) } else { (0, false) };
+                    for ci in 0..cin {
+                        if in_range {
+                            let a = x[row * cin + ci] as i32;
+                            partial += a * self.plane.decoded[(tap * cin + ci) * cout + co];
+                        }
+                        slab += 1;
+                        if slab == 16 {
+                            acc = quant::sat_acc(acc + partial);
+                            partial = 0;
+                            slab = 0;
+                        }
+                    }
+                }
+                if slab != 0 {
+                    acc = quant::sat_acc(acc + partial);
+                }
+                let res = residual.map_or(0, |r| r[t * cout + co] as i32);
+                let (res, rs) = apply_signed_res(res, self.res_shift);
+                out[t * cout + co] =
+                    quant::ope(acc, self.bias[co], self.out_shift, true, res, rs) as u8;
+            }
+        }
+    }
+}
+
+/// A decoded FC readout (classifier head): `logits = sat(slab-matmul(x, W)
+/// + bias)`, bit-identical to [`super::fc_logits`] on the same codes.
+#[derive(Debug, Clone)]
+pub struct PreparedFc {
+    pub(crate) cin: usize,
+    pub(crate) cout: usize,
+    pub(crate) bias: Vec<i32>,
+    pub(crate) plane: Plane,
+}
+
+impl PreparedFc {
+    pub fn prepare(codes: &[i8], cin: usize, cout: usize, bias: &[i32]) -> PreparedFc {
+        debug_assert_eq!(codes.len(), cin * cout);
+        debug_assert_eq!(bias.len(), cout);
+        PreparedFc { cin, cout, bias: bias.to_vec(), plane: Plane::new(codes, cout) }
+    }
+
+    pub fn c_in(&self) -> usize {
+        self.cin
+    }
+
+    pub fn c_out(&self) -> usize {
+        self.cout
+    }
+
+    /// Logits for one u4 vector (allocates the output; the internal
+    /// accumulators only when the plane is not saturation-free).
+    pub fn logits(&self, x: &[u8]) -> Vec<i32> {
+        debug_assert!(x.len() >= self.cin);
+        let mut out = vec![0i32; self.cout];
+        if self.plane.sat_free {
+            for (ci, &a) in x.iter().enumerate().take(self.cin) {
+                let a = a as i32;
+                if a != 0 {
+                    let wrow = &self.plane.decoded[ci * self.cout..(ci + 1) * self.cout];
+                    for (o, &w) in out.iter_mut().zip(wrow) {
+                        *o += a * w;
+                    }
+                }
+            }
+            for (o, &b) in out.iter_mut().zip(&self.bias) {
+                *o = quant::sat_acc(*o + quant::sat_bias(b));
+            }
+        } else {
+            let mut partial = vec![0i32; self.cout];
+            let taps = [Some(&x[..self.cin])];
+            accumulate_row_slabbed(&taps, self.cin, &self.plane.decoded, &mut out, &mut partial);
+            for (o, &b) in out.iter_mut().zip(&self.bias) {
+                *o = quant::sat_acc(*o + quant::sat_bias(b));
+            }
+        }
+        out
+    }
+}
+
+/// Reusable scratch arena for one plan: accumulators sized for the widest
+/// layer plus the activation ping-pong buffers of the block pipeline.
+/// One `Scratch` serves any number of sequential forwards on plans whose
+/// geometry it covers ([`PreparedModel::new_scratch`] sizes it exactly).
+#[derive(Debug, Default)]
+pub struct Scratch {
+    acc: Vec<i32>,
+    partial: Vec<i32>,
+    /// Current block input (starts as a copy of the model input).
+    cur: Vec<u8>,
+    /// First conv's output within a block.
+    mid: Vec<u8>,
+    /// Second conv's output within a block (swapped into `cur`).
+    out: Vec<u8>,
+    /// Residual row buffer for width-changing blocks.
+    res: Vec<u8>,
+}
+
+impl Scratch {
+    /// Grow (never shrink) to cover `width` channels over `t_len` rows.
+    fn reserve(&mut self, width: usize, t_len: usize) {
+        if self.acc.len() < width {
+            self.acc.resize(width, 0);
+            self.partial.resize(width, 0);
+        }
+        let rows = width * t_len;
+        if self.cur.len() < rows {
+            self.cur.resize(rows, 0);
+            self.mid.resize(rows, 0);
+            self.out.resize(rows, 0);
+            self.res.resize(rows, 0);
+        }
+    }
+}
+
+/// A fully prepared model: every weight plane decoded and laid out once,
+/// ready for [`PreparedModel::forward`] / [`PreparedModel::forward_many`]
+/// with a caller-owned [`Scratch`], and for [`PreparedModel::open_stream`].
+///
+/// Plans are immutable once built (weights never change at serve time);
+/// anything that *does* rewrite weights — the prototypical session heads —
+/// lives outside the plan and prepares itself separately
+/// ([`crate::protonet::PreparedHead`], invalidated on `learn_way` and
+/// eviction).
+#[derive(Debug, Clone)]
+pub struct PreparedModel {
+    name: String,
+    seq_len: usize,
+    in_channels: usize,
+    embed_dim: usize,
+    receptive_field: usize,
+    mode: ExecMode,
+    pub(crate) layers: Vec<PreparedLayer>,
+    pub(crate) embed: PreparedLayer,
+    pub(crate) head: Option<PreparedFc>,
+    /// Widest channel count across input/conv/residual/embed outputs.
+    max_width: usize,
+}
+
+impl PreparedModel {
+    /// Prepare with the process-default [`ExecMode`].
+    pub fn prepare(model: &QuantModel) -> PreparedModel {
+        Self::with_mode(model, ExecMode::process_default())
+    }
+
+    /// Prepare with an explicit execution mode (benches and property tests
+    /// compare modes by building two plans — no environment mutation).
+    pub fn with_mode(model: &QuantModel, mode: ExecMode) -> PreparedModel {
+        let layers: Vec<PreparedLayer> = model.layers.iter().map(PreparedLayer::prepare).collect();
+        let embed = PreparedLayer::prepare(&model.embed);
+        let head = model
+            .head
+            .as_ref()
+            .map(|h| PreparedFc::prepare(&h.codes, h.c_in(), h.c_out(), &h.bias));
+        let mut max_width = model.in_channels.max(embed.cout);
+        for l in &layers {
+            max_width = max_width.max(l.cout);
+            if let Some(r) = &l.res {
+                max_width = max_width.max(r.cout);
+            }
+        }
+        PreparedModel {
+            name: model.name.clone(),
+            seq_len: model.seq_len,
+            in_channels: model.in_channels,
+            embed_dim: model.embed_dim,
+            receptive_field: model.receptive_field(),
+            mode,
+            layers,
+            embed,
+            head,
+            max_width,
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn mode(&self) -> ExecMode {
+        self.mode
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    pub fn in_channels(&self) -> usize {
+        self.in_channels
+    }
+
+    pub fn embed_dim(&self) -> usize {
+        self.embed_dim
+    }
+
+    pub fn receptive_field(&self) -> usize {
+        self.receptive_field
+    }
+
+    /// Flat input length (`seq_len * in_channels`) one window must carry.
+    pub fn input_len(&self) -> usize {
+        self.seq_len * self.in_channels
+    }
+
+    pub fn n_conv_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Whether classification needs a caller-supplied (session) head.
+    pub fn needs_session_head(&self) -> bool {
+        self.head.is_none()
+    }
+
+    /// Widest channel count across input/conv/residual/embed outputs —
+    /// the accumulator sizing every executor over this plan must honor.
+    pub(crate) fn max_width(&self) -> usize {
+        self.max_width
+    }
+
+    /// A scratch arena sized exactly for this plan's geometry.
+    pub fn new_scratch(&self) -> Scratch {
+        let mut s = Scratch::default();
+        s.reserve(self.max_width, self.seq_len);
+        s
+    }
+
+    /// Full forward to the u4 embedding (optionally collecting the
+    /// per-layer activation checksums `layer_sums` reports).
+    pub fn embed_traced(
+        &self,
+        x_q: &[u8],
+        scratch: &mut Scratch,
+        mut sums: Option<&mut Vec<i64>>,
+    ) -> Result<Vec<u8>> {
+        let t_len = self.seq_len;
+        if x_q.len() != t_len * self.in_channels {
+            bail!(
+                "input length {} != seq_len {} * in_channels {} (model {})",
+                x_q.len(),
+                t_len,
+                self.in_channels,
+                self.name
+            );
+        }
+        // Re-assert capacity: one Scratch may serve several plans.
+        scratch.reserve(self.max_width, t_len);
+        let Scratch { acc, partial, cur, mid, out, res } = scratch;
+        cur[..x_q.len()].copy_from_slice(x_q);
+        let mut cur_w = self.in_channels;
+        debug_assert_eq!(self.layers.len() % 2, 0, "block grammar: two conv layers per block");
+        for pair in self.layers.chunks_exact(2) {
+            let (l1, l2) = (&pair[0], &pair[1]);
+            l1.conv(&cur[..t_len * cur_w], t_len, None, mid, acc, partial, self.mode);
+            if let Some(s) = sums.as_mut() {
+                s.push(mid[..t_len * l1.cout].iter().map(|&v| v as i64).sum());
+            }
+            // Residual path: identity, or the 1x1 conv re-quantized to u4.
+            let res_rows: &[u8] = match &l2.res {
+                Some(r) => {
+                    conv_res(r, &cur[..t_len * cur_w], t_len, res, acc, partial, self.mode);
+                    &res[..t_len * r.cout]
+                }
+                None => &cur[..t_len * l2.cout],
+            };
+            l2.conv(&mid[..t_len * l1.cout], t_len, Some(res_rows), out, acc, partial, self.mode);
+            if let Some(s) = sums.as_mut() {
+                s.push(out[..t_len * l2.cout].iter().map(|&v| v as i64).sum());
+            }
+            std::mem::swap(cur, out);
+            cur_w = l2.cout;
+        }
+        // Embedding FC over the final timestep (k=1 conv on one row).
+        let last = &cur[(t_len - 1) * cur_w..t_len * cur_w];
+        Ok(self.embed_row(last, acc, partial))
+    }
+
+    /// Run the embedding FC on one final-timestep row (used by the batch
+    /// forward and by every streaming window boundary).
+    pub(crate) fn embed_row(&self, row: &[u8], acc: &mut [i32], partial: &mut [i32]) -> Vec<u8> {
+        let mut emb = vec![0u8; self.embed.cout];
+        self.embed.conv(row, 1, None, &mut emb, acc, partial, self.mode);
+        emb
+    }
+
+    /// Full forward: embedding plus built-in-head logits (if any) —
+    /// bit-identical to [`super::forward`] on every window.
+    pub fn forward(
+        &self,
+        x_q: &[u8],
+        scratch: &mut Scratch,
+    ) -> Result<(Vec<u8>, Option<Vec<i32>>)> {
+        let emb = self.embed_traced(x_q, scratch, None)?;
+        let logits = self.head.as_ref().map(|h| h.logits(&emb));
+        Ok((emb, logits))
+    }
+
+    /// Batched forward: every window through the same plan and arena, in
+    /// order. Fails on the first malformed window (callers needing
+    /// per-window fault isolation — the serve batch path — loop
+    /// [`PreparedModel::forward`] instead).
+    pub fn forward_many(
+        &self,
+        windows: &[Vec<u8>],
+        scratch: &mut Scratch,
+    ) -> Result<Vec<(Vec<u8>, Option<Vec<i32>>)>> {
+        let mut out = Vec::with_capacity(windows.len());
+        for w in windows {
+            out.push(self.forward(w, scratch)?);
+        }
+        Ok(out)
+    }
+
+    /// Open an incremental stream borrowing this plan (see
+    /// [`super::StreamingState`] for the bit-exactness contract).
+    pub fn open_stream(self: &Arc<Self>, hop: usize) -> Result<super::StreamingState> {
+        super::StreamingState::with_plan(self.clone(), hop)
+    }
+}
+
+/// Run a prepared 1x1 residual conv over all timesteps (same slab
+/// datapath, k = 1, identity OPE residual input).
+fn conv_res(
+    r: &PreparedRes,
+    x: &[u8],
+    t_len: usize,
+    out: &mut [u8],
+    acc: &mut [i32],
+    partial: &mut [i32],
+    mode: ExecMode,
+) {
+    let (cin, cout) = (r.cin, r.cout);
+    let acc = &mut acc[..cout];
+    let partial = &mut partial[..cout];
+    for t in 0..t_len {
+        let row = &x[t * cin..(t + 1) * cin];
+        if mode == ExecMode::Naive {
+            // Scalar per-output loop, slab boundaries as in the batch
+            // reference (k = 1: slabs advance over cin only).
+            for co in 0..cout {
+                let mut a_acc = 0i32;
+                let mut p = 0i32;
+                let mut slab = 0usize;
+                for ci in 0..cin {
+                    p += row[ci] as i32 * r.plane.decoded[ci * cout + co];
+                    slab += 1;
+                    if slab == 16 {
+                        a_acc = quant::sat_acc(a_acc + p);
+                        p = 0;
+                        slab = 0;
+                    }
+                }
+                if slab != 0 {
+                    a_acc = quant::sat_acc(a_acc + p);
+                }
+                out[t * cout + co] = quant::ope(a_acc, r.bias[co], r.out_shift, true, 0, 0) as u8;
+            }
+        } else {
+            let taps = [Some(row)];
+            r.plane.accumulate_row(&taps, cin, acc, partial);
+            for co in 0..cout {
+                out[t * cout + co] = quant::ope(acc[co], r.bias[co], r.out_shift, true, 0, 0) as u8;
+            }
+        }
+    }
+}
+
+/// Apply one prepared residual conv to a single row (streaming path).
+pub(crate) fn res_row(
+    r: &PreparedRes,
+    row: &[u8],
+    out: &mut Vec<u8>,
+    acc: &mut [i32],
+    partial: &mut [i32],
+) {
+    let taps = [Some(row)];
+    r.plane.accumulate_row(&taps, r.cin, &mut acc[..r.cout], &mut partial[..r.cout]);
+    out.clear();
+    for co in 0..r.cout {
+        out.push(quant::ope(acc[co], r.bias[co], r.out_shift, true, 0, 0) as u8);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::golden;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn prepared_forward_matches_unprepared() {
+        for model in [crate::model::demo_tiny(), crate::model::demo_tiny_kws()] {
+            let plan = PreparedModel::with_mode(&model, ExecMode::Fast);
+            let naive = PreparedModel::with_mode(&model, ExecMode::Naive);
+            let mut s = plan.new_scratch();
+            let mut rng = Rng::new(0xBEEF);
+            for _ in 0..10 {
+                let x: Vec<u8> = (0..model.seq_len * model.in_channels)
+                    .map(|_| rng.range(0, 16) as u8)
+                    .collect();
+                let want = golden::forward(&model, &x).unwrap();
+                assert_eq!(plan.forward(&x, &mut s).unwrap(), want, "fast plan vs forward");
+                assert_eq!(naive.forward(&x, &mut s).unwrap(), want, "naive plan vs forward");
+            }
+        }
+    }
+
+    #[test]
+    fn prepared_layer_sums_match() {
+        let model = crate::model::demo_tiny();
+        let plan = PreparedModel::with_mode(&model, ExecMode::Fast);
+        let mut s = plan.new_scratch();
+        let mut rng = Rng::new(7);
+        let x: Vec<u8> = (0..model.seq_len * model.in_channels)
+            .map(|_| rng.range(0, 16) as u8)
+            .collect();
+        let mut sums = Vec::new();
+        let emb = plan.embed_traced(&x, &mut s, Some(&mut sums)).unwrap();
+        assert_eq!(emb, golden::embed(&model, &x).unwrap());
+        assert_eq!(sums, golden::layer_sums(&model, &x).unwrap());
+    }
+
+    #[test]
+    fn saturation_free_detects_extremes() {
+        // Mild weights: fused path engages.
+        let mild = Plane::new(&[2i8; 32], 2);
+        assert!(mild.sat_free);
+        // 9 all-max slabs per output reach past the 18-bit rails.
+        let hot = Plane::new(&[7i8; 16 * 9], 1);
+        assert!(!hot.sat_free);
+    }
+
+    #[test]
+    fn prepared_fc_matches_fc_logits() {
+        let mut rng = Rng::new(0xFC);
+        for case in 0..50 {
+            let cin = 1 + (case % 37);
+            let cout = 1 + (case % 7);
+            let codes: Vec<i8> = (0..cin * cout).map(|_| rng.range(-8, 8) as i8).collect();
+            let bias: Vec<i32> = (0..cout).map(|_| rng.range(-8192, 8192) as i32).collect();
+            let x: Vec<u8> = (0..cin).map(|_| rng.range(0, 16) as u8).collect();
+            let fc = PreparedFc::prepare(&codes, cin, cout, &bias);
+            assert_eq!(fc.logits(&x), golden::fc_logits(&x, &codes, cin, cout, &bias));
+        }
+    }
+
+    #[test]
+    fn forward_many_equals_sequential() {
+        let model = crate::model::demo_tiny_kws();
+        let plan = PreparedModel::with_mode(&model, ExecMode::Fast);
+        let mut s = plan.new_scratch();
+        let mut rng = Rng::new(0xBA7C);
+        let windows: Vec<Vec<u8>> = (0..7)
+            .map(|_| (0..plan.input_len()).map(|_| rng.range(0, 16) as u8).collect())
+            .collect();
+        let batched = plan.forward_many(&windows, &mut s).unwrap();
+        for (w, got) in windows.iter().zip(&batched) {
+            let mut fresh = plan.new_scratch();
+            assert_eq!(got, &plan.forward(w, &mut fresh).unwrap());
+        }
+    }
+
+    #[test]
+    fn forward_rejects_bad_length() {
+        let model = crate::model::demo_tiny();
+        let plan = PreparedModel::prepare(&model);
+        let mut s = plan.new_scratch();
+        assert!(plan.forward(&[1, 2, 3], &mut s).is_err());
+    }
+}

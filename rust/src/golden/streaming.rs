@@ -11,10 +11,16 @@
 //! [`crate::sim::addrgen::LayerRing`], paper §III-B), and only the
 //! timestep-local embedding FC + head run at window boundaries.
 //!
+//! The executor runs over a shared [`PreparedModel`] execution plan
+//! (weights decoded and laid out once, at open — or earlier, when the
+//! stream is opened via [`PreparedModel::open_stream`] on an engine
+//! replica's cached plan), so per-chunk pushes and per-window decisions
+//! never touch the s4 code tables: the same `accumulate_row` inner loop
+//! as the batch path, including its saturation-free fusion.
+//!
 //! It is also the serving counterpart of [`crate::sim::streaming`]'s
 //! [`crate::sim::streaming::StreamingTcn`]: same dense ring dataflow, but
-//! running the slab-major [`super::conv_layer`] datapath (the shared
-//! `accumulate_row_taps` inner loop) instead of the cycle-accurate
+//! running the plan's slab-major datapath instead of the cycle-accurate
 //! PE-array reduction, so it is fast enough to sit on the serve hot path.
 //!
 //! # Why the windows come out bit-identical
@@ -36,7 +42,7 @@ use anyhow::{bail, Result};
 use crate::model::QuantModel;
 use crate::quant;
 
-use super::{accumulate_row_taps, apply_signed_res, conv_layer, decode_codes, fc_logits};
+use super::plan::{res_row, PreparedModel};
 
 /// Fixed-capacity activation ring holding the most recent rows of one
 /// layer, keyed by absolute timestep. Same `(k-1)·d + 1` sizing rule as
@@ -79,14 +85,6 @@ impl RowRing {
     }
 }
 
-/// Per-layer weights pre-decoded from s4 log2 codes to integers, so the
-/// per-timestep hot loop never touches the code tables.
-struct LayerPlan {
-    decoded: Vec<i32>,
-    /// Decoded 1x1 residual-conv codes, for blocks that change width.
-    res_decoded: Option<Vec<i32>>,
-}
-
 /// One emitted window: the raw output of the incremental executor.
 ///
 /// `logits` is the built-in classifier head's output when the model has
@@ -108,11 +106,10 @@ pub struct WindowOutput {
 /// (partial timesteps are buffered), receive a [`WindowOutput`] for every
 /// complete window of `seq_len` samples at stride `hop`.
 pub struct StreamingState {
-    model: Arc<QuantModel>,
+    plan: Arc<PreparedModel>,
     hop: usize,
     /// `rings[0]` = model input; `rings[l + 1]` = output of conv layer `l`.
     rings: Vec<RowRing>,
-    plans: Vec<LayerPlan>,
     /// Input timesteps fully consumed so far.
     t: usize,
     /// Windows emitted so far.
@@ -122,10 +119,17 @@ pub struct StreamingState {
     /// Scratch accumulators sized for the widest layer.
     acc: Vec<i32>,
     partial: Vec<i32>,
+    /// Block-input row copied out of its ring for the residual merge.
+    res_src: Vec<u8>,
+    /// Output row of the 1x1 re-quantizing residual conv.
+    res_out: Vec<u8>,
 }
 
 impl StreamingState {
-    /// Open a stream over `model` with decision stride `hop` (timesteps).
+    /// Open a stream over `model` with decision stride `hop` (timesteps),
+    /// preparing a fresh execution plan. Callers that already hold a plan
+    /// (engine replicas) use [`PreparedModel::open_stream`] /
+    /// [`StreamingState::with_plan`] and skip the decode entirely.
     ///
     /// Fails when `hop == 0`, when the model has no conv layers, or when
     /// `receptive_field > seq_len` — in that last case the batch forward's
@@ -133,63 +137,60 @@ impl StreamingState {
     /// so overlapping windows cannot share incremental state bit-exactly
     /// (see the module docs).
     pub fn new(model: Arc<QuantModel>, hop: usize) -> Result<StreamingState> {
+        Self::with_plan(Arc::new(PreparedModel::prepare(&model)), hop)
+    }
+
+    /// Open a stream over an existing execution plan (no weight decode).
+    pub fn with_plan(plan: Arc<PreparedModel>, hop: usize) -> Result<StreamingState> {
         if hop == 0 {
             bail!("stream hop must be positive");
         }
-        if model.layers.is_empty() {
-            bail!("model {} has no conv layers to stream", model.name);
+        if plan.n_conv_layers() == 0 {
+            bail!("model {} has no conv layers to stream", plan.name());
         }
-        let rf = model.receptive_field();
-        if rf > model.seq_len {
+        let rf = plan.receptive_field();
+        if rf > plan.seq_len() {
             bail!(
                 "model {}: receptive field {rf} exceeds window {} — windows cannot \
                  be emitted bit-exactly from shared streaming state",
-                model.name,
-                model.seq_len
+                plan.name(),
+                plan.seq_len()
             );
         }
-        // History each conv layer needs of its *input* ring.
-        let hist = |l: &crate::model::QLayer| (l.kernel_size() - 1) * l.dilation + 1;
-        let mut rings = Vec::with_capacity(model.layers.len() + 1);
-        rings.push(RowRing::new(model.in_channels, hist(&model.layers[0])));
-        for (i, l) in model.layers.iter().enumerate() {
+        let mut rings = Vec::with_capacity(plan.layers.len() + 1);
+        rings.push(RowRing::new(plan.in_channels(), plan.layers[0].history()));
+        for (i, l) in plan.layers.iter().enumerate() {
             // Ring for layer i's output: sized for the next layer's taps
             // (the same-timestep residual and embedding reads only ever
             // touch the newest row).
-            let cap = model.layers.get(i + 1).map(hist).unwrap_or(1);
+            let cap = plan.layers.get(i + 1).map(|n| n.history()).unwrap_or(1);
             rings.push(RowRing::new(l.c_out(), cap));
         }
-        let plans: Vec<LayerPlan> = model
-            .layers
-            .iter()
-            .map(|l| LayerPlan {
-                decoded: decode_codes(&l.codes),
-                res_decoded: l.res_codes.as_deref().map(decode_codes),
-            })
-            .collect();
-        let mut widest = 1usize;
-        for l in &model.layers {
-            widest = widest.max(l.c_out());
-            if let Some(shape) = &l.res_codes_shape {
-                widest = widest.max(shape[shape.len() - 1]);
-            }
-        }
+        // Accumulators sized by the plan's own widest plane (covers conv,
+        // residual and the embed layer's true output width).
+        let widest = plan.max_width().max(1);
         Ok(StreamingState {
-            model,
+            plan,
             hop,
             rings,
-            plans,
             t: 0,
             windows: 0,
             pending: Vec::new(),
             acc: vec![0i32; widest],
             partial: vec![0i32; widest],
+            res_src: Vec::new(),
+            res_out: Vec::new(),
         })
+    }
+
+    /// The execution plan this stream runs on.
+    pub fn plan(&self) -> &Arc<PreparedModel> {
+        &self.plan
     }
 
     /// Window length in timesteps (the model's `seq_len`).
     pub fn window(&self) -> usize {
-        self.model.seq_len
+        self.plan.seq_len()
     }
 
     /// Decision stride in timesteps.
@@ -217,7 +218,7 @@ impl StreamingState {
     /// headless (FSL/CL) models, whose [`WindowOutput::logits`] is `None`
     /// and must be resolved against a learned prototypical head.
     pub fn needs_session_head(&self) -> bool {
-        self.model.head.is_none()
+        self.plan.needs_session_head()
     }
 
     /// Push a chunk of u4 samples (`[T][C]` order, any length — partial
@@ -230,7 +231,7 @@ impl StreamingState {
         if let Some(&bad) = samples.iter().find(|&&s| s > quant::ACT_MAX as u8) {
             bail!("sample {bad} out of u4 range");
         }
-        let cin = self.model.in_channels;
+        let cin = self.plan.in_channels();
         self.pending.extend_from_slice(samples);
         // Take the buffer instead of copying it (`step` never touches
         // `pending`); the sub-row tail shifts back in via the drain.
@@ -250,53 +251,38 @@ impl StreamingState {
     /// Advance every layer by one timestep; returns a decision when this
     /// timestep completes a window.
     ///
-    /// The small per-layer `taps`/residual vectors allocated here are a
-    /// deliberate tradeoff: they cannot live in `self` (they borrow the
-    /// rings), and at k-element size their cost is well under a percent
-    /// of the conv work per step.
+    /// The small per-layer `taps` vector allocated here is a deliberate
+    /// tradeoff: it cannot live in `self` (it borrows the rings), and at
+    /// k-element size its cost is well under a percent of the conv work
+    /// per step.
     fn step(&mut self, row: &[u8]) -> Option<WindowOutput> {
         let t = self.t;
         self.rings[0].slot().copy_from_slice(row);
         self.rings[0].commit();
-        let model = self.model.clone();
-        let n_layers = model.layers.len();
-        for (l, layer) in model.layers.iter().enumerate() {
+        let plan = self.plan.clone();
+        let n_layers = plan.layers.len();
+        for (l, layer) in plan.layers.iter().enumerate() {
             let k = layer.kernel_size();
-            let d = layer.dilation;
-            let cin = layer.c_in();
+            let d = layer.dilation();
             let cout = layer.c_out();
             // Residual row for the second conv of each block: the block
             // input at the same timestep, optionally through the 1x1
             // re-quantizing conv (same slab datapath, k = 1).
-            let residual: Option<Vec<u8>> = if l % 2 == 1 {
+            let res_is_conv = if l % 2 == 1 {
                 // rings[l - 1] is the block input (the previous block's
                 // output, or the model input ring when l == 1).
-                let src = l - 1;
-                let raw = self.rings[src]
+                let raw = self.rings[l - 1]
                     .row(t)
-                    .expect("block-input row is the ring's newest entry")
-                    .to_vec();
-                match &self.plans[l].res_decoded {
-                    Some(rdec) => {
-                        let shape = layer.res_codes_shape.as_ref().unwrap();
-                        let (rcin, rcout) = (shape[shape.len() - 2], shape[shape.len() - 1]);
-                        let rbias = layer.res_bias.as_ref().unwrap();
-                        let rshift = layer.res_out_shift.unwrap();
-                        let rtaps = [Some(raw.as_slice())];
-                        accumulate_row_taps(
-                            &rtaps,
-                            rcin,
-                            rdec,
-                            &mut self.acc[..rcout],
-                            &mut self.partial[..rcout],
-                        );
-                        let mut rrow = vec![0u8; rcout];
-                        for (co, slot) in rrow.iter_mut().enumerate() {
-                            *slot = quant::ope(self.acc[co], rbias[co], rshift, true, 0, 0) as u8;
-                        }
-                        Some(rrow)
+                    .expect("block-input row is the ring's newest entry");
+                self.res_src.clear();
+                self.res_src.extend_from_slice(raw);
+                match &layer.res {
+                    Some(r) => {
+                        let (src, out) = (&self.res_src, &mut self.res_out);
+                        res_row(r, src, out, &mut self.acc, &mut self.partial);
+                        Some(true)
                     }
-                    None => Some(raw),
+                    None => Some(false),
                 }
             } else {
                 None
@@ -313,38 +299,37 @@ impl StreamingState {
                     None
                 });
             }
-            accumulate_row_taps(
-                &taps,
-                cin,
-                &self.plans[l].decoded,
-                &mut self.acc[..cout],
-                &mut self.partial[..cout],
-            );
+            layer.accumulate_row(&taps, &mut self.acc[..cout], &mut self.partial[..cout]);
             drop(taps);
-            let rs = layer.res_shift.unwrap_or(0);
+            let residual: Option<&[u8]> = match res_is_conv {
+                Some(true) => Some(&self.res_out),
+                Some(false) => Some(&self.res_src),
+                None => None,
+            };
+            let rs = layer.res_shift;
+            let acc = &self.acc;
+            let bias = &layer.bias;
+            let out_shift = layer.out_shift;
             let outslot = self.rings[l + 1].slot();
             for (co, slot) in outslot.iter_mut().enumerate() {
-                let res = residual.as_ref().map_or(0, |r| r[co] as i32);
-                let (res, rs) = apply_signed_res(res, rs);
-                *slot = quant::ope(self.acc[co], layer.bias[co], layer.out_shift, true, res, rs)
-                    as u8;
+                let res = residual.map_or(0, |r| r[co] as i32);
+                let (res, rs) = super::apply_signed_res(res, rs);
+                *slot = quant::ope(acc[co], bias[co], out_shift, true, res, rs) as u8;
             }
             self.rings[l + 1].commit();
         }
         self.t += 1;
         // Window boundary: decisions at t = seq_len - 1 + n * hop.
-        if self.t < model.seq_len || (self.t - model.seq_len) % self.hop != 0 {
+        if self.t < plan.seq_len() || (self.t - plan.seq_len()) % self.hop != 0 {
             return None;
         }
+        self.res_src.clear();
         let last = self.rings[n_layers]
             .row(t)
-            .expect("final conv row just written")
-            .to_vec();
-        let embedding = conv_layer(&last, 1, &model.embed, None);
-        let logits = model
-            .head
-            .as_ref()
-            .map(|h| fc_logits(&embedding, &h.codes, h.c_in(), h.c_out(), &h.bias));
+            .expect("final conv row just written");
+        self.res_src.extend_from_slice(last);
+        let embedding = plan.embed_row(&self.res_src, &mut self.acc, &mut self.partial);
+        let logits = plan.head.as_ref().map(|h| h.logits(&embedding));
         let window = self.windows;
         self.windows += 1;
         Some(WindowOutput { window, end_t: t as u64, embedding, logits })
@@ -407,6 +392,22 @@ mod tests {
             got.extend(one_byte.push(std::slice::from_ref(b)).unwrap());
         }
         assert_eq!(got, want);
+    }
+
+    /// Streams opened on a shared plan answer exactly like streams that
+    /// prepared their own.
+    #[test]
+    fn shared_plan_streams_match_owned_plan_streams() {
+        let m = Arc::new(crate::model::demo_tiny_kws());
+        let plan = Arc::new(PreparedModel::prepare(&m));
+        let mut rng = Rng::new(78);
+        let stream = rand_stream(&mut rng, m.seq_len + 3 * 4, m.in_channels);
+        let mut owned = StreamingState::new(m.clone(), 4).unwrap();
+        let mut shared_a = plan.open_stream(4).unwrap();
+        let mut shared_b = plan.open_stream(4).unwrap();
+        let want = owned.push(&stream).unwrap();
+        assert_eq!(shared_a.push(&stream).unwrap(), want);
+        assert_eq!(shared_b.push(&stream).unwrap(), want);
     }
 
     #[test]

@@ -11,11 +11,17 @@
 //!           --stream [--chunk C --hop H --pace-hz F] drives incremental
 //!           stream sessions instead of request traffic
 //!   drive   --model NAME         drive the in-process streaming coordinator
+//!   bench   [--json ...]         run the hot-path + serve perf suites;
+//!           --json appends a run to BENCH_hotpath.json / BENCH_serve.json
+//!           at the repo root (--out DIR overrides), --quick shortens the
+//!           suites for CI, --baseline PATH enforces the regression gate
+//!           against a committed ci/bench_baseline.json
 //!   power   [--mode 4|16 ...]    evaluate the calibrated power model
 //!   verify                       cross-check golden/sim/xla vs vectors
 //!
-//! `serve` and `loadgen` default to the built-in demo model (`--model
-//! tiny_kws`), so the full network stack runs without `make artifacts`.
+//! `serve`, `loadgen` and `bench` default to built-in demo/synthetic
+//! models, so the full network stack and the perf suites run without
+//! `make artifacts`.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -45,13 +51,14 @@ fn main() {
         "serve" => cmd_serve(&args),
         "loadgen" => cmd_loadgen(&args),
         "drive" => cmd_drive(&args),
+        "bench" => cmd_bench(&args),
         "power" => cmd_power(&args),
         "verify" => cmd_verify(&args),
         "hlo-stats" => cmd_hlo_stats(&args),
         other => {
             eprintln!(
                 "unknown command {other:?}; try \
-                 info|infer|learn|serve|loadgen|drive|power|verify|hlo-stats"
+                 info|infer|learn|serve|loadgen|drive|bench|power|verify|hlo-stats"
             );
             std::process::exit(2);
         }
@@ -394,6 +401,40 @@ fn cmd_drive(args: &Args) -> Result<()> {
         n as f64 / dt.as_secs_f64()
     );
     coord.shutdown();
+    Ok(())
+}
+
+/// Run the hot-path + serve perf suites (no artifacts needed), optionally
+/// appending `BENCH_*.json` trajectory runs and enforcing the CI
+/// regression gate. See `DESIGN.md` §Execution plans.
+fn cmd_bench(args: &Args) -> Result<()> {
+    use chameleon::util::perfsuite;
+    let quick = args.flag("quick");
+    let hotpath = perfsuite::run_hotpath_suite(quick)?;
+    perfsuite::print_rows("bench: hot path (prepared execution plans)", &hotpath);
+    let serve = perfsuite::run_serve_suite(quick)?;
+    perfsuite::print_rows("bench: serve loopback", &serve);
+    if args.flag("json") || args.get("out").is_some() {
+        // Default output: the repository root (resolved at runtime),
+        // where the BENCH_*.json trajectory files live.
+        let out = args
+            .get("out")
+            .map(PathBuf::from)
+            .unwrap_or_else(perfsuite::default_bench_dir);
+        let hp = out.join("BENCH_hotpath.json");
+        perfsuite::append_bench_json(&hp, "hotpath", quick, &hotpath)?;
+        println!("appended run to {}", hp.display());
+        let sv = out.join("BENCH_serve.json");
+        perfsuite::append_bench_json(&sv, "serve", quick, &serve)?;
+        println!("appended run to {}", sv.display());
+    }
+    if let Some(baseline) = args.get("baseline") {
+        perfsuite::check_baseline(
+            std::path::Path::new(baseline),
+            &[("hotpath", hotpath.as_slice()), ("serve", serve.as_slice())],
+        )?;
+        println!("bench regression gate passed ({baseline})");
+    }
     Ok(())
 }
 

@@ -7,7 +7,7 @@
 //! a forward pass through the resulting FC layer — argmax(logits) equals
 //! argmin(squared L2 distance to the prototypes).
 
-use crate::golden;
+use crate::golden::{self, PreparedFc};
 use crate::model::QLayer;
 use crate::quant;
 
@@ -146,6 +146,49 @@ impl ProtoHead {
         let l = self.as_qlayer();
         golden::fc_logits(emb, &l.codes, self.dim, self.n_ways(), &l.bias)
     }
+
+    /// Decode the head into a [`PreparedHead`] execution plan: prototype
+    /// rows laid out way-contiguous with the log2 codes expanded to
+    /// integers, so per-query classification never rebuilds the
+    /// [`QLayer`] or touches the code tables. Must be rebuilt whenever
+    /// the head changes — after [`ProtoHead::learn_way`] or on session
+    /// eviction (the coordinator's session store owns that invalidation).
+    pub fn prepare(&self) -> PreparedHead {
+        let l = self.as_qlayer();
+        PreparedHead {
+            fc: PreparedFc::prepare(&l.codes, self.dim, self.n_ways(), &l.bias),
+        }
+    }
+}
+
+/// A decoded, immutable snapshot of a [`ProtoHead`] — the cheap learned
+/// classifier of the FSL-HDnn-style split (fixed feature extractor +
+/// per-session head), prepared once per `learn_way` instead of once per
+/// query. Bit-identical to [`ProtoHead::logits`] / [`ProtoHead::classify`]
+/// on the head it was prepared from.
+#[derive(Debug, Clone)]
+pub struct PreparedHead {
+    fc: PreparedFc,
+}
+
+impl PreparedHead {
+    pub fn n_ways(&self) -> usize {
+        self.fc.c_out()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.fc.c_in()
+    }
+
+    /// Raw logits (negated, scaled squared distances).
+    pub fn logits(&self, emb: &[u8]) -> Vec<i32> {
+        self.fc.logits(emb)
+    }
+
+    /// Classify a query embedding: argmax over the FC logits.
+    pub fn classify(&self, emb: &[u8]) -> usize {
+        golden::argmax(&self.logits(emb))
+    }
 }
 
 #[cfg(test)]
@@ -230,6 +273,31 @@ mod tests {
         head.learn_way(&[vec![15, 3], vec![1, 1]]);
         let dec: Vec<i32> = head.ways[0].0.iter().map(|&c| quant::log2_decode(c)).collect();
         assert_eq!(dec, vec![8, 2]);
+    }
+
+    #[test]
+    fn prepared_head_is_bit_identical() {
+        prop::check(100, 0x9E4D, |rng| {
+            let dim = rng.range(1, 40) as usize;
+            let n_ways = rng.range(1, 9) as usize;
+            let shots = rng.range(1, 4) as usize;
+            let mut head = ProtoHead::new(dim);
+            for _ in 0..n_ways {
+                let s: Vec<Vec<u8>> = (0..shots)
+                    .map(|_| (0..dim).map(|_| rng.range(0, 16) as u8).collect())
+                    .collect();
+                head.learn_way(&s);
+            }
+            let prepared = head.prepare();
+            prop_assert_eq!(prepared.n_ways(), head.n_ways());
+            prop_assert_eq!(prepared.dim(), dim);
+            for _ in 0..4 {
+                let q: Vec<u8> = (0..dim).map(|_| rng.range(0, 16) as u8).collect();
+                prop_assert_eq!(prepared.logits(&q), head.logits(&q));
+                prop_assert_eq!(prepared.classify(&q), head.classify(&q));
+            }
+            Ok(())
+        });
     }
 
     #[test]

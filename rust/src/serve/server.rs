@@ -87,6 +87,9 @@ pub fn shard_of(session: u64, shards: usize) -> usize {
 
 struct ServerState {
     shards: Vec<Coordinator>,
+    /// Worker replicas per shard — sizes `ClassifyBatch` sub-batching so
+    /// a batch can occupy every replica, not one per shard.
+    workers_per_shard: usize,
     rr: AtomicUsize,
     stop: AtomicBool,
     live_conns: AtomicU64,
@@ -129,6 +132,7 @@ impl Server {
         let addr = listener.local_addr()?;
         let state = Arc::new(ServerState {
             shards,
+            workers_per_shard: cfg.workers_per_shard.max(1),
             rr: AtomicUsize::new(0),
             stop: AtomicBool::new(false),
             live_conns: AtomicU64::new(0),
@@ -515,11 +519,25 @@ fn submit_classify(state: &ServerState, input: Vec<u8>, reply: ReplySink) {
     req.into_reply().deliver(Err(anyhow::Error::new(e)));
 }
 
-/// `ClassifyBatch`: fan the windows out across shards (round-robin + fan-
-/// over per window), accumulate the per-window outcomes, and emit one
-/// `ReplyBatch` in input order when the last window lands. Windows fail
-/// independently — a bad window yields an error *item*, never a failed
-/// frame.
+/// Cap on windows per `ClassifyMany` sub-batch: keeps coordinator queue
+/// slots roughly proportional to admitted work, so the bounded queues
+/// still exert backpressure against huge hostile batches (a 4096-window
+/// frame costs ~128 slots, not 1) while preserving the per-sub-batch
+/// plan/scratch amortization.
+const MAX_MANY_WINDOWS: usize = 32;
+
+/// `ClassifyBatch`: split the windows into round-robin sub-batches —
+/// enough to occupy every worker replica (`shards x workers`), and at
+/// least one per [`MAX_MANY_WINDOWS`] windows — and classify each
+/// sub-batch on a single replica via `Request::ClassifyMany`, so every
+/// window in a sub-batch runs on one cached execution plan + scratch
+/// arena instead of paying per-window queue traffic. Sub-batches fan over
+/// full shards like session-less classifies, outcomes land at their
+/// original indices, and one `ReplyBatch` is emitted in input order when
+/// the last sub-batch lands. Windows still fail independently — a bad
+/// (or even panicking) window yields an error *item* from its replica,
+/// never a failed frame. (Batch items do not carry `sim_cycles`; the
+/// per-request cycle metrics still aggregate.)
 fn dispatch_batch<F>(state: &ServerState, inputs: Vec<Vec<u8>>, out: F)
 where
     F: FnOnce(WireResponse) + Send + 'static,
@@ -534,25 +552,30 @@ where
         out: Mutex<Option<F>>,
     }
     let n_items = inputs.len();
+    let lanes = (state.shards.len() * state.workers_per_shard).max(1);
+    let groups = n_items.min(lanes.max(n_items.div_ceil(MAX_MANY_WINDOWS)));
     let acc = Arc::new(BatchAcc {
         slots: Mutex::new((0..n_items).map(|_| None).collect::<Vec<_>>()),
-        remaining: AtomicUsize::new(n_items),
+        remaining: AtomicUsize::new(groups),
         out: Mutex::new(Some(out)),
     });
+    // Window i joins sub-batch i % groups (interleaved round-robin).
+    let mut grouped: Vec<(Vec<usize>, Vec<Vec<u8>>)> =
+        (0..groups).map(|_| (Vec::new(), Vec::new())).collect();
     for (i, input) in inputs.into_iter().enumerate() {
+        grouped[i % groups].0.push(i);
+        grouped[i % groups].1.push(input);
+    }
+    let first = state.rr.fetch_add(1, Ordering::Relaxed);
+    for (g, (idxs, windows)) in grouped.into_iter().enumerate() {
         let acc = acc.clone();
         let reply = ReplySink::call(move |res| {
-            let item = match fold_response(res) {
-                WireResponse::Reply(r) => BatchItem::Reply(r),
-                WireResponse::Error { code, message } => BatchItem::Error { code, message },
-                other => BatchItem::Error {
-                    code: ErrorCode::App,
-                    message: format!("unexpected batch reply {other:?}"),
-                },
-            };
+            let items = fold_many(res, idxs.len());
             {
                 let mut slots = acc.slots.lock().unwrap_or_else(|p| p.into_inner());
-                slots[i] = Some(item);
+                for (&i, item) in idxs.iter().zip(items) {
+                    slots[i] = Some(item);
+                }
             }
             if acc.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
                 let items: Vec<BatchItem> = {
@@ -564,8 +587,73 @@ where
                 }
             }
         });
-        submit_classify(state, input, reply);
+        submit_many(state, windows, reply, (first + g) % state.shards.len());
     }
+}
+
+/// Fold one `ClassifyMany` outcome into exactly `n` batch items (the
+/// whole sub-batch shares a failure when the submission itself failed).
+fn fold_many(res: Result<crate::coordinator::Response>, n: usize) -> Vec<BatchItem> {
+    let err_item = |code: ErrorCode, message: &str| BatchItem::Error {
+        code,
+        message: message.to_string(),
+    };
+    match res {
+        Ok(resp) => match resp.many {
+            Some(items) if items.len() == n => items
+                .into_iter()
+                .map(|item| match item {
+                    Ok(mi) => BatchItem::Reply(WireReply {
+                        predicted: Some(mi.predicted as u64),
+                        logits: Some(mi.logits),
+                        learned_way: None,
+                        sim_cycles: None,
+                    }),
+                    Err(message) => BatchItem::Error { code: ErrorCode::App, message },
+                })
+                .collect(),
+            other => {
+                let msg = format!(
+                    "unexpected ClassifyMany reply shape ({} items for {n} windows)",
+                    other.map_or(0, |v| v.len())
+                );
+                (0..n).map(|_| err_item(ErrorCode::App, &msg)).collect()
+            }
+        },
+        Err(e) => {
+            let (code, message) = match fold_response(Err(e)) {
+                WireResponse::Error { code, message } => (code, message),
+                other => (ErrorCode::App, format!("unexpected batch reply {other:?}")),
+            };
+            (0..n).map(|_| err_item(code, &message)).collect()
+        }
+    }
+}
+
+/// Submit one `ClassifyMany` sub-batch with classify-style fan-over: try
+/// every shard starting at `first` before surfacing backpressure, with
+/// the same one-tick-per-logical-request metrics discipline as
+/// [`submit_classify`].
+fn submit_many(state: &ServerState, inputs: Vec<Vec<u8>>, reply: ReplySink, first: usize) {
+    let n = state.shards.len();
+    let mut req = Request::ClassifyMany { inputs, reply };
+    let mut any_full = false;
+    for k in 0..n {
+        let shard = &state.shards[(first + k) % n];
+        match shard.try_enqueue(req) {
+            Ok(()) => {
+                shard.record_submission(false);
+                return;
+            }
+            Err((e, r)) => {
+                req = r;
+                any_full |= e == SubmitError::Full;
+            }
+        }
+    }
+    state.shards[first % n].record_submission(true);
+    let e = if any_full { SubmitError::Full } else { SubmitError::Closed };
+    req.into_reply().deliver(Err(anyhow::Error::new(e)));
 }
 
 /// Fold a worker's reply (or a submit failure smuggled through the sink)

@@ -4,12 +4,14 @@
 //! deliberately hand-rolls the small amount of infrastructure that would
 //! normally come from serde/clap/criterion/proptest: a JSON codec, a CLI
 //! argument parser, a seedable RNG, summary statistics, a micro-benchmark
-//! harness (used by the `cargo bench` targets) and a miniature
+//! harness (used by the `cargo bench` targets), the reusable perf suites
+//! behind `chameleon bench` and the CI regression gate, and a miniature
 //! property-testing runner.
 
 pub mod args;
 pub mod bench;
 pub mod json;
+pub mod perfsuite;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,623 @@
+//! Reusable performance suites: the hot-path (execution-plan) and
+//! serve-loopback measurements behind the `chameleon bench` subcommand,
+//! the `perf_hotpath` / `serve_loopback` bench binaries, the repo-root
+//! `BENCH_*.json` trajectory files, and the CI regression gate
+//! (`ci/bench_baseline.json`).
+//!
+//! Every timed path is also cross-checked: the prepared plan, the
+//! pre-plan fast path and the scalar naive path must produce bit-identical
+//! outputs on every measured window, so a benchmark run doubles as an
+//! end-to-end equivalence test — a perf number from a wrong datapath is
+//! worse than no number.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::server::EngineFactory;
+use crate::coordinator::Engine;
+use crate::golden::{self, ExecMode, PreparedModel};
+use crate::model::{demo_tiny_kws, QLayer, QuantModel};
+use crate::serve::loadgen::{self, LoadgenConfig};
+use crate::serve::{BatchItem, Client, ServeConfig, Server};
+use crate::util::bench::{fmt_si, Table};
+use crate::util::json::{self, Value};
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// One named measurement: a row of `key = value` metrics, emitted to the
+/// table printer, the `BENCH_*.json` trajectory and the CI gate.
+#[derive(Debug, Clone)]
+pub struct PerfRow {
+    pub name: String,
+    pub values: Vec<(String, f64)>,
+}
+
+impl PerfRow {
+    fn new(name: impl Into<String>) -> PerfRow {
+        PerfRow { name: name.into(), values: Vec::new() }
+    }
+
+    fn push(mut self, key: &str, v: f64) -> PerfRow {
+        self.values.push((key.to_string(), v));
+        self
+    }
+
+    /// Metric lookup by key.
+    pub fn get(&self, key: &str) -> Option<f64> {
+        self.values.iter().find(|(k, _)| k == key).map(|&(_, v)| v)
+    }
+}
+
+/// Find a row by name.
+pub fn find_row<'a>(rows: &'a [PerfRow], name: &str) -> Option<&'a PerfRow> {
+    rows.iter().find(|r| r.name == name)
+}
+
+/// Print a suite as a two-column table (metrics joined per row).
+pub fn print_rows(title: &str, rows: &[PerfRow]) {
+    let mut t = Table::new(title, &["row", "metrics"]);
+    for r in rows {
+        let metrics = r
+            .values
+            .iter()
+            .map(|(k, v)| {
+                if k.ends_with("_per_sec") {
+                    format!("{k}={}", fmt_si(*v))
+                } else {
+                    format!("{k}={v:.1}")
+                }
+            })
+            .collect::<Vec<_>>()
+            .join("  ");
+        t.rowv(vec![r.name.clone(), metrics]);
+    }
+    t.print();
+}
+
+/// Per-item timing: total wall plus per-item microsecond samples.
+struct Timing {
+    total: Duration,
+    samples_us: Vec<f64>,
+}
+
+fn time_per_item<F: FnMut(usize)>(n: usize, mut f: F) -> Timing {
+    let mut samples_us = Vec::with_capacity(n);
+    let t0 = Instant::now();
+    for i in 0..n {
+        let t = Instant::now();
+        f(i);
+        samples_us.push(t.elapsed().as_secs_f64() * 1e6);
+    }
+    Timing { total: t0.elapsed(), samples_us }
+}
+
+fn rate(n: usize, total: Duration) -> f64 {
+    n as f64 / total.as_secs_f64().max(1e-12)
+}
+
+fn latency_row(name: &str, rate_key: &str, n: usize, t: &Timing) -> PerfRow {
+    PerfRow::new(name)
+        .push(rate_key, rate(n, t.total))
+        .push("p50_us", stats::percentile(&t.samples_us, 50.0))
+        .push("p95_us", stats::percentile(&t.samples_us, 95.0))
+        .push("p99_us", stats::percentile(&t.samples_us, 99.0))
+}
+
+/// The synthetic streaming TCN the medium-sized hot-path workload and the
+/// `stream_vs_batch` bench share: 3 residual blocks, k = 3, dilation
+/// doubling per layer (1..32), receptive field 127, window 128, 10-class
+/// head — deep enough that the conv datapath dominates.
+pub fn synthetic_stream_model() -> QuantModel {
+    fn codes(n: usize, seed: i32) -> Vec<i8> {
+        (0..n).map(|i| (((i as i32 * 11 + seed) % 15) - 7) as i8).collect()
+    }
+    fn conv(k: usize, cin: usize, cout: usize, dil: usize, res: Option<i32>, seed: i32) -> QLayer {
+        QLayer {
+            codes: codes(k * cin * cout, seed),
+            codes_shape: vec![k, cin, cout],
+            bias: (0..cout).map(|c| (c as i32 % 7 - 3) * 4).collect(),
+            out_shift: 5,
+            dilation: dil,
+            relu: true,
+            res_shift: res,
+            res_codes: None,
+            res_codes_shape: None,
+            res_bias: None,
+            res_out_shift: None,
+        }
+    }
+    let (in_ch, ch, k) = (8usize, 16usize, 3usize);
+    let mut layers = Vec::new();
+    let mut cin = in_ch;
+    for b in 0..3usize {
+        let (d1, d2) = (1usize << (2 * b), 1usize << (2 * b + 1));
+        layers.push(conv(k, cin, ch, d1, None, 1 + 2 * b as i32));
+        let mut l2 = conv(k, ch, ch, d2, Some(0), 2 + 2 * b as i32);
+        if cin != ch {
+            l2.res_codes = Some(codes(cin * ch, 9));
+            l2.res_codes_shape = Some(vec![1, cin, ch]);
+            l2.res_bias = Some(vec![2; ch]);
+            l2.res_out_shift = Some(3);
+        }
+        layers.push(l2);
+        cin = ch;
+    }
+    let embed_dim = 16usize;
+    let n_classes = 10usize;
+    QuantModel {
+        name: "stream_tcn".into(),
+        in_channels: in_ch,
+        seq_len: 128,
+        channels: vec![ch; 3],
+        kernel_size: k,
+        embed_dim,
+        n_classes: Some(n_classes),
+        in_shift: 0,
+        embed_shift: 0,
+        layers,
+        embed: QLayer {
+            codes: codes(ch * embed_dim, 13),
+            codes_shape: vec![ch, embed_dim],
+            bias: vec![0; embed_dim],
+            out_shift: 4,
+            dilation: 1,
+            relu: true,
+            res_shift: None,
+            res_codes: None,
+            res_codes_shape: None,
+            res_bias: None,
+            res_out_shift: None,
+        },
+        head: Some(QLayer {
+            codes: codes(embed_dim * n_classes, 17),
+            codes_shape: vec![embed_dim, n_classes],
+            bias: (0..n_classes as i32).map(|c| c * 5 - 20).collect(),
+            out_shift: 0,
+            dilation: 1,
+            relu: false,
+            res_shift: None,
+            res_codes: None,
+            res_codes_shape: None,
+            res_bias: None,
+            res_out_shift: None,
+        }),
+    }
+}
+
+/// Hot-path suite: windows/sec of the scalar naive loop, the un-prepared
+/// fast path (weights decoded per call — the pre-plan baseline) and the
+/// prepared plan (forward, batched forward, incremental stream), on the
+/// serving demo model and a deeper synthetic TCN. All paths are asserted
+/// bit-identical on every window.
+pub fn run_hotpath_suite(quick: bool) -> Result<Vec<PerfRow>> {
+    let mut rows = Vec::new();
+    let workloads: Vec<(&str, QuantModel, usize, usize)> = vec![
+        ("tiny_kws", demo_tiny_kws(), if quick { 400 } else { 2000 }, 4),
+        ("stream_tcn", synthetic_stream_model(), if quick { 48 } else { 192 }, 32),
+    ];
+    for (name, model, n, hop) in workloads {
+        let input_len = model.seq_len * model.in_channels;
+        let mut rng = Rng::new(0xB36C + n as u64);
+        let windows: Vec<Vec<u8>> = (0..n)
+            .map(|_| (0..input_len).map(|_| rng.below(16) as u8).collect())
+            .collect();
+        let plan = Arc::new(PreparedModel::with_mode(&model, ExecMode::Fast));
+        let mut scratch = plan.new_scratch();
+        // Warmup (untimed): touch the windows and the plan once.
+        for w in windows.iter().take(16) {
+            let _ = plan.forward(w, &mut scratch)?;
+        }
+
+        // Scalar naive reference (pre-plan, codes consumed in place).
+        let mut reference = Vec::with_capacity(n);
+        let t_naive = time_per_item(n, |i| {
+            reference
+                .push(golden::forward_with(&model, &windows[i], ExecMode::Naive).expect("naive"));
+        });
+        rows.push(latency_row(&format!("{name}/naive"), "windows_per_sec", n, &t_naive));
+
+        // Pre-plan fast path: slab-major loop, weights decoded per call.
+        let mut fast_out = Vec::with_capacity(n);
+        let t_fast = time_per_item(n, |i| {
+            fast_out
+                .push(golden::forward_with(&model, &windows[i], ExecMode::Fast).expect("fast"));
+        });
+        rows.push(latency_row(&format!("{name}/fast_preplan"), "windows_per_sec", n, &t_fast));
+
+        // Prepared plan: decode amortized away, scratch reused.
+        let mut prep_out = Vec::with_capacity(n);
+        let t_prep = time_per_item(n, |i| {
+            prep_out.push(plan.forward(&windows[i], &mut scratch).expect("prepared"));
+        });
+        rows.push(latency_row(&format!("{name}/prepared"), "windows_per_sec", n, &t_prep));
+
+        if fast_out != reference {
+            bail!("{name}: pre-plan fast path diverged from the naive reference");
+        }
+        if prep_out != reference {
+            bail!("{name}: prepared plan diverged from the naive reference");
+        }
+
+        // Batched forward (32 windows per call, shared plan + arena).
+        let mut batch_out = Vec::with_capacity(n);
+        let t0 = Instant::now();
+        for chunk in windows.chunks(32) {
+            batch_out.extend(plan.forward_many(chunk, &mut scratch)?);
+        }
+        let t_batch = t0.elapsed();
+        if batch_out != reference {
+            bail!("{name}: batched forward diverged from the naive reference");
+        }
+        rows.push(
+            PerfRow::new(format!("{name}/prepared_batch32"))
+                .push("windows_per_sec", rate(n, t_batch)),
+        );
+
+        // Incremental stream on the shared plan: continuous input, one
+        // decision per hop; sampled decisions cross-checked against the
+        // batch forward.
+        let n_dec = n.min(if quick { 64 } else { 256 });
+        let t_total = model.seq_len + (n_dec - 1) * hop;
+        let stream: Vec<u8> = (0..t_total * model.in_channels)
+            .map(|_| rng.below(16) as u8)
+            .collect();
+        let mut s = plan.open_stream(hop)?;
+        let mut decisions = Vec::with_capacity(n_dec);
+        let t0 = Instant::now();
+        for chunk in stream.chunks(hop * model.in_channels) {
+            decisions.extend(s.push(chunk)?);
+        }
+        let t_stream = t0.elapsed();
+        if decisions.len() != n_dec {
+            bail!("{name}: stream emitted {} decisions, expected {n_dec}", decisions.len());
+        }
+        for (d, out) in decisions.iter().enumerate().step_by(8) {
+            let st = d * hop * model.in_channels;
+            let w = &stream[st..st + input_len];
+            let (emb, logits) = golden::forward(&model, w)?;
+            if out.embedding != emb || out.logits != logits {
+                bail!("{name}: stream decision {d} diverged from the batch forward");
+            }
+        }
+        rows.push(
+            PerfRow::new(format!("{name}/stream_hop{hop}"))
+                .push("decisions_per_sec", rate(n_dec, t_stream)),
+        );
+
+        rows.push(
+            PerfRow::new(format!("{name}/speedup"))
+                .push("prepared_vs_naive", rate(n, t_prep.total) / rate(n, t_naive.total))
+                .push("prepared_vs_fast", rate(n, t_prep.total) / rate(n, t_fast.total)),
+        );
+    }
+    Ok(rows)
+}
+
+fn start_loopback_server(model: Arc<QuantModel>, mode: ExecMode) -> Result<Server> {
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        shards: 2,
+        workers_per_shard: 2,
+        ..Default::default()
+    };
+    Server::start(cfg, move |_shard, _worker| {
+        let m = model.clone();
+        Box::new(move || Ok(Engine::golden_mode(m, mode))) as EngineFactory
+    })
+}
+
+/// Serve-loopback suite: closed-loop single-connection classify and
+/// `ClassifyBatch` throughput on prepared replicas, the same closed loop
+/// on scalar-naive replicas (the end-to-end prepared-vs-naive win), and
+/// one open-loop Poisson point for latency percentiles. Replies are
+/// asserted bit-identical across every mode.
+pub fn run_serve_suite(quick: bool) -> Result<Vec<PerfRow>> {
+    let mut rows = Vec::new();
+    let model = Arc::new(demo_tiny_kws());
+    let n = if quick { 256 } else { 1024 };
+    let input_len = model.seq_len * model.in_channels;
+    let mut rng = Rng::new(0x5E54E);
+    let windows: Vec<Vec<u8>> = (0..n)
+        .map(|_| (0..input_len).map(|_| rng.below(16) as u8).collect())
+        .collect();
+
+    // Prepared replicas.
+    let server = start_loopback_server(model.clone(), ExecMode::Fast)?;
+    let addr = server.local_addr().to_string();
+    let mut client = Client::connect(addr.as_str())?;
+    let mut seq_replies = Vec::with_capacity(n);
+    let t_seq = time_per_item(n, |i| {
+        seq_replies.push(client.classify(windows[i].clone()).expect("classify"));
+    });
+    rows.push(latency_row("serve/seq_prepared", "requests_per_sec", n, &t_seq));
+
+    // ClassifyBatch (32 windows per frame) through the same connection.
+    let mut batch_replies = Vec::with_capacity(n);
+    let t0 = Instant::now();
+    for chunk in windows.chunks(32) {
+        for item in client.classify_batch(chunk.to_vec())? {
+            match item {
+                BatchItem::Reply(r) => batch_replies.push(r),
+                BatchItem::Error { code, message } => {
+                    bail!("batch item failed ({code:?}): {message}")
+                }
+            }
+        }
+    }
+    let t_batch = t0.elapsed();
+    if batch_replies != seq_replies {
+        bail!("serve: ClassifyBatch replies diverged from sequential classifies");
+    }
+    rows.push(PerfRow::new("serve/batch32").push("requests_per_sec", rate(n, t_batch)));
+
+    // Open-loop Poisson point (latency under offered load, 5% learn mix).
+    let lg = loadgen::run(&LoadgenConfig {
+        addr: addr.clone(),
+        rps: if quick { 300.0 } else { 500.0 },
+        duration: Duration::from_secs_f64(if quick { 1.5 } else { 3.0 }),
+        learn_frac: 0.05,
+        sessions: 16,
+        shots: 2,
+        connections: 4,
+        seed: 1,
+        ..Default::default()
+    })?;
+    if lg.protocol_errors > 0 {
+        bail!("serve: {} protocol errors under open-loop load", lg.protocol_errors);
+    }
+    rows.push(
+        PerfRow::new("serve/openloop")
+            .push("achieved_rps", lg.achieved_rps())
+            .push("p50_us", lg.latency.percentile_us(50.0))
+            .push("p95_us", lg.latency.percentile_us(95.0))
+            .push("p99_us", lg.latency.percentile_us(99.0))
+            .push("overloaded", lg.overloaded as f64),
+    );
+    drop(client);
+    server.shutdown();
+
+    // Scalar-naive replicas: the same closed loop, bit-identical replies.
+    let server = start_loopback_server(model.clone(), ExecMode::Naive)?;
+    let mut client = Client::connect(server.local_addr().to_string())?;
+    let mut naive_replies = Vec::with_capacity(n);
+    let t_naive = time_per_item(n, |i| {
+        naive_replies.push(client.classify(windows[i].clone()).expect("classify"));
+    });
+    rows.push(latency_row("serve/seq_naive", "requests_per_sec", n, &t_naive));
+    if naive_replies != seq_replies {
+        bail!("serve: naive replicas diverged from prepared replicas");
+    }
+    drop(client);
+    server.shutdown();
+
+    rows.push(
+        PerfRow::new("serve/speedup")
+            .push("prepared_vs_naive", rate(n, t_seq.total) / rate(n, t_naive.total)),
+    );
+    Ok(rows)
+}
+
+/// Default directory for the `BENCH_*.json` trajectory files: the repo
+/// root, resolved **at runtime** (`git rev-parse --show-toplevel`,
+/// falling back to the current directory) — a relocated or containerized
+/// binary must never write into a stale compile-time source path.
+pub fn default_bench_dir() -> std::path::PathBuf {
+    if let Ok(o) = std::process::Command::new("git")
+        .args(["rev-parse", "--show-toplevel"])
+        .output()
+    {
+        if o.status.success() {
+            let s = String::from_utf8_lossy(&o.stdout);
+            let s = s.trim();
+            if !s.is_empty() {
+                return std::path::PathBuf::from(s);
+            }
+        }
+    }
+    std::path::PathBuf::from(".")
+}
+
+fn git_rev() -> String {
+    let out = std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output();
+    match out {
+        Ok(o) if o.status.success() => {
+            let s = String::from_utf8_lossy(&o.stdout);
+            let s: String = s.trim().chars().filter(|c| c.is_ascii_alphanumeric()).collect();
+            if s.is_empty() {
+                "unknown".to_string()
+            } else {
+                s
+            }
+        }
+        _ => "unknown".to_string(),
+    }
+}
+
+/// Append one run to a `BENCH_*.json` trajectory file (creating it with
+/// the standard envelope if absent). Earlier runs are preserved, so the
+/// file accumulates the perf history the ROADMAP's "every perf claim
+/// needs a trajectory" rule asks for.
+pub fn append_bench_json(path: &Path, suite: &str, quick: bool, rows: &[PerfRow]) -> Result<()> {
+    let mut runs: Vec<String> = Vec::new();
+    if path.exists() {
+        // A corrupt trajectory must abort the append, not be silently
+        // replaced — the accumulated history is the point of the file.
+        let v = json::parse_file(path).with_context(|| {
+            format!("existing {} is unreadable — fix or move it before appending", path.display())
+        })?;
+        match v.get("runs") {
+            Some(Value::Arr(old)) => runs.extend(old.iter().map(json::emit)),
+            _ => bail!("existing {} has no `runs` array — refusing to overwrite", path.display()),
+        }
+    }
+    let row_objs: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            let mut s = format!("{{\"name\": {:?}", r.name);
+            for (k, v) in &r.values {
+                s.push_str(&format!(", {:?}: {:.3}", k, v));
+            }
+            s.push('}');
+            s
+        })
+        .collect();
+    let now = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    runs.push(format!(
+        "{{\"unix_time\": {now}, \"git\": \"{}\", \"quick\": {quick}, \"rows\": [{}]}}",
+        git_rev(),
+        row_objs.join(", ")
+    ));
+    let doc = format!(
+        "{{\n  \"suite\": \"{suite}\",\n  \"schema\": 1,\n  \"runs\": [\n    {}\n  ]\n}}\n",
+        runs.join(",\n    ")
+    );
+    std::fs::write(path, doc).with_context(|| format!("writing {}", path.display()))
+}
+
+/// Enforce the committed CI baseline (`ci/bench_baseline.json`) against a
+/// set of freshly measured suites: absolute floors may regress at most
+/// `max_regression_frac`, and every listed speedup row must clear
+/// `min_prepared_vs_naive`. Returns every violation at once.
+pub fn check_baseline(path: &Path, suites: &[(&str, &[PerfRow])]) -> Result<()> {
+    let v = json::parse_file(path).with_context(|| format!("reading {}", path.display()))?;
+    let frac = v.req("max_regression_frac")?.as_f64()?;
+    let min_speedup = v.req("min_prepared_vs_naive")?.as_f64()?;
+    let mut violations = Vec::new();
+    let floors = v.req("floors")?;
+    for &(suite_name, rows) in suites {
+        let Some(suite_floors) = floors.get_nonnull(suite_name) else { continue };
+        let Value::Obj(by_row) = suite_floors else {
+            bail!("floors.{suite_name} must be an object");
+        };
+        for (row_name, metrics) in by_row {
+            let Value::Obj(metrics) = metrics else {
+                bail!("floors.{suite_name}.{row_name} must be an object");
+            };
+            let Some(row) = find_row(rows, row_name) else {
+                violations.push(format!("{suite_name}: row {row_name:?} missing from run"));
+                continue;
+            };
+            for (key, floor) in metrics {
+                let floor = floor.as_f64()?;
+                let allowed = floor * (1.0 - frac);
+                match row.get(key) {
+                    Some(got) if got >= allowed => {}
+                    Some(got) => violations.push(format!(
+                        "{suite_name}/{row_name}: {key} = {got:.1} is below {allowed:.1} \
+                         (baseline {floor:.1} - {:.0}%)",
+                        frac * 100.0
+                    )),
+                    None => violations.push(format!(
+                        "{suite_name}/{row_name}: metric {key:?} missing from run"
+                    )),
+                }
+            }
+        }
+    }
+    if let Some(speedup_rows) = v.get_nonnull("speedup_rows") {
+        for name in speedup_rows.as_arr()? {
+            let name = name.as_str()?;
+            let row = suites
+                .iter()
+                .find_map(|(_, rows)| find_row(rows, name))
+                .ok_or_else(|| anyhow::anyhow!("speedup row {name:?} missing from run"))?;
+            match row.get("prepared_vs_naive") {
+                Some(s) if s >= min_speedup => {}
+                Some(s) => violations.push(format!(
+                    "{name}: prepared_vs_naive = {s:.2}x is below the {min_speedup:.2}x gate"
+                )),
+                None => violations.push(format!("{name}: prepared_vs_naive metric missing")),
+            }
+        }
+    }
+    if !violations.is_empty() {
+        bail!("bench regression gate failed:\n  - {}", violations.join("\n  - "));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_gate_flags_regressions() {
+        let dir = std::env::temp_dir().join(format!("chameleon-baseline-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("baseline.json");
+        std::fs::write(
+            &path,
+            r#"{
+                "schema": 1,
+                "max_regression_frac": 0.35,
+                "min_prepared_vs_naive": 1.5,
+                "floors": {
+                    "hotpath": {"m/prepared": {"windows_per_sec": 1000.0}}
+                },
+                "speedup_rows": ["m/speedup"]
+            }"#,
+        )
+        .unwrap();
+        let good = vec![
+            PerfRow::new("m/prepared").push("windows_per_sec", 900.0),
+            PerfRow::new("m/speedup").push("prepared_vs_naive", 2.0),
+        ];
+        check_baseline(&path, &[("hotpath", good.as_slice())])
+            .expect("within 35% of floor passes");
+        let slow = vec![
+            PerfRow::new("m/prepared").push("windows_per_sec", 500.0),
+            PerfRow::new("m/speedup").push("prepared_vs_naive", 2.0),
+        ];
+        assert!(
+            check_baseline(&path, &[("hotpath", slow.as_slice())]).is_err(),
+            ">35% regression fails"
+        );
+        let unsped = vec![
+            PerfRow::new("m/prepared").push("windows_per_sec", 2000.0),
+            PerfRow::new("m/speedup").push("prepared_vs_naive", 1.2),
+        ];
+        assert!(
+            check_baseline(&path, &[("hotpath", unsped.as_slice())]).is_err(),
+            "speedup gate fails"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bench_json_appends_runs() {
+        let dir = std::env::temp_dir().join(format!("chameleon-bench-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        let rows = vec![PerfRow::new("a/b").push("windows_per_sec", 123.456)];
+        append_bench_json(&path, "hotpath", true, &rows).unwrap();
+        append_bench_json(&path, "hotpath", true, &rows).unwrap();
+        let v = json::parse_file(&path).unwrap();
+        assert_eq!(v.req("suite").unwrap().as_str().unwrap(), "hotpath");
+        let runs = v.req("runs").unwrap().as_arr().unwrap();
+        assert_eq!(runs.len(), 2, "runs accumulate");
+        let row = &runs[1].req("rows").unwrap().as_arr().unwrap()[0];
+        assert_eq!(row.req("name").unwrap().as_str().unwrap(), "a/b");
+        assert!((row.req("windows_per_sec").unwrap().as_f64().unwrap() - 123.456).abs() < 1e-6);
+        // A corrupt trajectory aborts the append instead of overwriting.
+        let corrupt = dir.join("BENCH_corrupt.json");
+        std::fs::write(&corrupt, "not json").unwrap();
+        assert!(append_bench_json(&corrupt, "hotpath", true, &rows).is_err());
+        assert_eq!(std::fs::read_to_string(&corrupt).unwrap(), "not json", "file untouched");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn synthetic_model_is_streamable() {
+        let m = synthetic_stream_model();
+        assert!(m.receptive_field() <= m.seq_len);
+        assert_eq!(m.layers.len(), 6);
+    }
+}

@@ -1,0 +1,276 @@
+//! Property tests pinning the prepared execution plan (`golden::plan`) to
+//! the scalar naive oracle: on random models — kernel sizes, dilations,
+//! channel widths, residual variants (identity and 1x1 re-quantizing
+//! conv), optional heads — and on adversarial saturating-slab extremes,
+//! the plan's `forward` / `forward_many` (fast *and* naive inner loops)
+//! must be bit-identical to `golden::forward_with(.., ExecMode::Naive)`,
+//! which composes `conv_layer_naive` end to end. This extends the old
+//! `fast_equals_naive` layer-level check to whole random models and to
+//! the plan layer the serving stack actually runs.
+
+use std::sync::Arc;
+
+use chameleon::golden::{self, ExecMode, PreparedModel};
+use chameleon::model::{QLayer, QuantModel};
+use chameleon::util::prop;
+use chameleon::util::rng::Rng;
+use chameleon::{prop_assert, prop_assert_eq};
+
+fn rand_codes(rng: &mut Rng, n: usize) -> Vec<i8> {
+    (0..n).map(|_| rng.range(-8, 8) as i8).collect()
+}
+
+fn rand_conv(
+    rng: &mut Rng,
+    k: usize,
+    cin: usize,
+    cout: usize,
+    d: usize,
+    res: Option<i32>,
+) -> QLayer {
+    QLayer {
+        codes: rand_codes(rng, k * cin * cout),
+        codes_shape: vec![k, cin, cout],
+        bias: (0..cout).map(|_| rng.range(-8192, 8192) as i32).collect(),
+        out_shift: rng.range(0, 7) as i32,
+        dilation: d,
+        relu: true,
+        res_shift: res,
+        res_codes: None,
+        res_codes_shape: None,
+        res_bias: None,
+        res_out_shift: None,
+    }
+}
+
+/// Random TCN respecting the block grammar the golden forward expects:
+/// two conv layers per block, residual merge on the second (identity when
+/// the width is unchanged, 1x1 conv otherwise or at random), plus embed
+/// FC and — half the time — a classifier head.
+fn rand_model(rng: &mut Rng) -> QuantModel {
+    let blocks = rng.range(1, 4) as usize;
+    let k = rng.range(1, 5) as usize;
+    let in_ch = rng.range(1, 6) as usize;
+    let mut channels = Vec::new();
+    let mut layers = Vec::new();
+    let mut cin = in_ch;
+    for _ in 0..blocks {
+        let ch = rng.range(1, 8) as usize;
+        let d1 = 1usize << rng.range(0, 4);
+        let d2 = 1usize << rng.range(0, 4);
+        layers.push(rand_conv(rng, k, cin, ch, d1, None));
+        let mut l2 = rand_conv(rng, k, ch, ch, d2, Some(rng.range(-3, 5) as i32));
+        if cin != ch || rng.below(3) == 0 {
+            l2.res_codes = Some(rand_codes(rng, cin * ch));
+            l2.res_codes_shape = Some(vec![1, cin, ch]);
+            l2.res_bias = Some((0..ch).map(|_| rng.range(-512, 512) as i32).collect());
+            l2.res_out_shift = Some(rng.range(0, 5) as i32);
+        }
+        layers.push(l2);
+        channels.push(ch);
+        cin = ch;
+    }
+    let embed_dim = rng.range(1, 9) as usize;
+    let embed = QLayer {
+        codes: rand_codes(rng, cin * embed_dim),
+        codes_shape: vec![cin, embed_dim],
+        bias: (0..embed_dim).map(|_| rng.range(-256, 256) as i32).collect(),
+        out_shift: rng.range(0, 6) as i32,
+        dilation: 1,
+        relu: true,
+        res_shift: None,
+        res_codes: None,
+        res_codes_shape: None,
+        res_bias: None,
+        res_out_shift: None,
+    };
+    let head = if rng.below(2) == 0 {
+        let classes = rng.range(2, 7) as usize;
+        Some(QLayer {
+            codes: rand_codes(rng, embed_dim * classes),
+            codes_shape: vec![embed_dim, classes],
+            bias: (0..classes).map(|_| rng.range(-256, 256) as i32).collect(),
+            out_shift: 0,
+            dilation: 1,
+            relu: false,
+            res_shift: None,
+            res_codes: None,
+            res_codes_shape: None,
+            res_bias: None,
+            res_out_shift: None,
+        })
+    } else {
+        None
+    };
+    let mut m = QuantModel {
+        name: "prop".into(),
+        in_channels: in_ch,
+        seq_len: 0,
+        channels,
+        kernel_size: k,
+        embed_dim,
+        n_classes: head.as_ref().map(|h| h.c_out()),
+        in_shift: 0,
+        embed_shift: 0,
+        layers,
+        embed,
+        head,
+    };
+    // The plan has no receptive-field constraint (only streams do); draw
+    // windows both below and above the receptive field.
+    let rf = m.receptive_field() as i64;
+    m.seq_len = (rf + rng.range(-4, 6)).max(1) as usize;
+    m
+}
+
+/// Check one model on one window: every execution path must agree with
+/// the scalar naive oracle bit-for-bit.
+fn check_window(m: &QuantModel, x: &[u8]) -> Result<(), String> {
+    let oracle = golden::forward_with(m, x, ExecMode::Naive).map_err(|e| e.to_string())?;
+    let fast = golden::forward_with(m, x, ExecMode::Fast).map_err(|e| e.to_string())?;
+    prop_assert_eq!(&fast, &oracle);
+    let plan = PreparedModel::with_mode(m, ExecMode::Fast);
+    let mut scratch = plan.new_scratch();
+    let got = plan.forward(x, &mut scratch).map_err(|e| e.to_string())?;
+    prop_assert_eq!(&got, &oracle);
+    prop_assert!(got.0.iter().all(|&v| v <= 15), "non-u4 embedding");
+    let naive_plan = PreparedModel::with_mode(m, ExecMode::Naive);
+    let got = naive_plan.forward(x, &mut scratch).map_err(|e| e.to_string())?;
+    prop_assert_eq!(&got, &oracle);
+    Ok(())
+}
+
+#[test]
+fn plan_is_bit_identical_to_naive_on_random_models() {
+    prop::check(40, 0x914A_0001, |rng| {
+        let m = rand_model(rng);
+        for _ in 0..2 {
+            let x: Vec<u8> = (0..m.seq_len * m.in_channels)
+                .map(|_| rng.range(0, 16) as u8)
+                .collect();
+            check_window(&m, &x)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn plan_matches_under_saturation_pressure() {
+    // Extreme codes and near-max activations drive the 18-bit accumulator
+    // into its rails inside windows, so the saturation-free fusion must
+    // stand down and the slab-exact loop must reproduce every clamp.
+    prop::check(30, 0x914A_0002, |rng| {
+        let mut m = rand_model(rng);
+        for l in &mut m.layers {
+            for c in &mut l.codes {
+                *c = if rng.below(2) == 0 { 7 } else { -8 };
+            }
+            if let Some(rc) = &mut l.res_codes {
+                for c in rc.iter_mut() {
+                    *c = if rng.below(2) == 0 { 7 } else { -8 };
+                }
+            }
+        }
+        let x: Vec<u8> = (0..m.seq_len * m.in_channels)
+            .map(|_| rng.range(12, 16) as u8)
+            .collect();
+        check_window(&m, &x)
+    });
+}
+
+#[test]
+fn forward_many_is_bit_identical_to_sequential() {
+    // Ragged batch sizes, including a batch that mixes ordinary windows
+    // with an all-max window that saturates slabs on extreme models.
+    prop::check(24, 0x914A_0003, |rng| {
+        let mut m = rand_model(rng);
+        if rng.below(2) == 0 {
+            for l in &mut m.layers {
+                for c in &mut l.codes {
+                    *c = if rng.below(2) == 0 { 7 } else { -8 };
+                }
+            }
+        }
+        let input_len = m.seq_len * m.in_channels;
+        let batch = rng.range(1, 9) as usize;
+        let mut windows: Vec<Vec<u8>> = (0..batch)
+            .map(|_| (0..input_len).map(|_| rng.range(0, 16) as u8).collect())
+            .collect();
+        // One saturating window somewhere in the batch.
+        let hot = rng.below(batch as u64) as usize;
+        windows[hot] = vec![15u8; input_len];
+        let plan = PreparedModel::with_mode(&m, ExecMode::Fast);
+        let mut scratch = plan.new_scratch();
+        let batched = plan.forward_many(&windows, &mut scratch).map_err(|e| e.to_string())?;
+        prop_assert_eq!(batched.len(), windows.len());
+        for (w, got) in windows.iter().zip(&batched) {
+            let oracle = golden::forward_with(&m, w, ExecMode::Naive).map_err(|e| e.to_string())?;
+            prop_assert_eq!(got, &oracle);
+            // A fresh plan + arena must agree with the shared one.
+            let fresh_plan = PreparedModel::with_mode(&m, ExecMode::Fast);
+            let mut fresh = fresh_plan.new_scratch();
+            let alone = fresh_plan.forward(w, &mut fresh).map_err(|e| e.to_string())?;
+            prop_assert_eq!(got, &alone);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn one_scratch_serves_many_models() {
+    // A single arena reused across plans of different geometry (the
+    // worker-replica pattern) must never leak state between models.
+    prop::check(12, 0x914A_0004, |rng| {
+        let a = rand_model(rng);
+        let b = rand_model(rng);
+        let plan_a = PreparedModel::with_mode(&a, ExecMode::Fast);
+        let plan_b = PreparedModel::with_mode(&b, ExecMode::Fast);
+        let mut shared = plan_a.new_scratch();
+        for _ in 0..2 {
+            let xa: Vec<u8> = (0..a.seq_len * a.in_channels)
+                .map(|_| rng.range(0, 16) as u8)
+                .collect();
+            let xb: Vec<u8> = (0..b.seq_len * b.in_channels)
+                .map(|_| rng.range(0, 16) as u8)
+                .collect();
+            let got_a = plan_a.forward(&xa, &mut shared).map_err(|e| e.to_string())?;
+            let got_b = plan_b.forward(&xb, &mut shared).map_err(|e| e.to_string())?;
+            let want_a = golden::forward_with(&a, &xa, ExecMode::Naive).map_err(|e| e.to_string())?;
+            let want_b = golden::forward_with(&b, &xb, ExecMode::Naive).map_err(|e| e.to_string())?;
+            prop_assert_eq!(&got_a, &want_a);
+            prop_assert_eq!(&got_b, &want_b);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn streaming_over_shared_plan_matches_naive_forward() {
+    // End to end: a stream opened on a shared plan must emit windows
+    // bit-identical to the naive oracle whenever the receptive field fits
+    // the window (the streaming precondition).
+    prop::check(20, 0x914A_0005, |rng| {
+        let mut m = rand_model(rng);
+        m.seq_len = m.receptive_field() + rng.range(0, 6) as usize;
+        let m = Arc::new(m);
+        let plan = Arc::new(PreparedModel::with_mode(&m, ExecMode::Fast));
+        let hop = rng.range(1, m.seq_len as i64 + 1) as usize;
+        let n_windows = rng.range(1, 4) as usize;
+        let t_total = m.seq_len + (n_windows - 1) * hop;
+        let stream: Vec<u8> = (0..t_total * m.in_channels)
+            .map(|_| rng.range(0, 16) as u8)
+            .collect();
+        let mut s = plan.open_stream(hop).map_err(|e| e.to_string())?;
+        let outs = s.push(&stream).map_err(|e| e.to_string())?;
+        prop_assert_eq!(outs.len(), n_windows);
+        for (n, out) in outs.iter().enumerate() {
+            let start = n * hop * m.in_channels;
+            let w = &stream[start..start + m.seq_len * m.in_channels];
+            let (emb, logits) =
+                golden::forward_with(&m, w, ExecMode::Naive).map_err(|e| e.to_string())?;
+            prop_assert_eq!(&out.embedding, &emb);
+            prop_assert_eq!(&out.logits, &logits);
+        }
+        Ok(())
+    });
+}

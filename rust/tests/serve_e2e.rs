@@ -682,6 +682,67 @@ fn classify_batch_matches_individual_classifies() {
 }
 
 #[test]
+fn classify_batch_is_bit_identical_across_plan_caching() {
+    // Satellite guarantee of the execution-plan refactor: ClassifyBatch
+    // answers must be bit-identical whether the replicas' cached plans
+    // are cold (first frame after start) or warm (every later frame),
+    // and identical to replicas running the scalar naive inner loop —
+    // i.e. plan caching is a pure perf optimization, never a semantic
+    // one.
+    use chameleon::golden::ExecMode;
+    let model = Arc::new(demo_tiny_kws());
+    let mk_server = |mode: ExecMode| {
+        let m = model.clone();
+        Server::start(
+            ServeConfig {
+                addr: "127.0.0.1:0".to_string(),
+                shards: 2,
+                workers_per_shard: 2,
+                ..Default::default()
+            },
+            move |_s, _w| {
+                let m = m.clone();
+                Box::new(move || Ok(Engine::golden_mode(m, mode))) as EngineFactory
+            },
+        )
+        .expect("server starts")
+    };
+    let mut rng = Rng::new(57);
+    let windows: Vec<Vec<u8>> = (0..11).map(|_| rand_input(&model, &mut rng, 0, 16)).collect();
+    fn unwrap_items(items: Vec<BatchItem>) -> Vec<chameleon::serve::WireReply> {
+        items
+            .into_iter()
+            .map(|it| match it {
+                BatchItem::Reply(r) => r,
+                other => panic!("expected a reply, got {other:?}"),
+            })
+            .collect()
+    }
+    let prepared = mk_server(ExecMode::Fast);
+    let mut client = Client::connect(prepared.local_addr().to_string()).unwrap();
+    // Cold plans: the very first frame each replica serves.
+    let cold = unwrap_items(client.classify_batch(windows.clone()).unwrap());
+    // Warm plans: repeat the identical frame several times.
+    for round in 0..3 {
+        let warm = unwrap_items(client.classify_batch(windows.clone()).unwrap());
+        assert_eq!(warm, cold, "round {round}: warm plans must answer bit-identically");
+    }
+    // Individual classifies agree with the batch items.
+    for (i, w) in windows.iter().enumerate() {
+        let alone = client.classify(w.clone()).unwrap();
+        assert_eq!(alone.predicted, cold[i].predicted, "window {i}");
+        assert_eq!(alone.logits, cold[i].logits, "window {i}");
+    }
+    prepared.shutdown();
+    // Naive replicas: same wire answers, so the plan is semantics-free.
+    let naive = mk_server(ExecMode::Naive);
+    let mut client = Client::connect(naive.local_addr().to_string()).unwrap();
+    let got = unwrap_items(client.classify_batch(windows.clone()).unwrap());
+    assert_eq!(got, cold, "naive replicas must answer bit-identically");
+    naive.shutdown();
+}
+
+#[test]
 fn pipelined_responses_complete_out_of_order() {
     // One shard, two workers on a chaos engine: a slow-token request stalls
     // ~400 ms while a fast one overtakes it on the same connection —
