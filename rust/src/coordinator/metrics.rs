@@ -154,6 +154,9 @@ pub struct Metrics {
     pub worker_panics: AtomicU64,
     pub rejected: AtomicU64,
     pub learn_ways: AtomicU64,
+    /// Continual-learning `AddShots` ops applied (prototype updates on
+    /// already-learned ways).
+    pub add_shots: AtomicU64,
     /// Sessions removed from the store (LRU pressure + explicit evict ops).
     pub evictions: AtomicU64,
     /// Stream chunks accepted (`StreamPush` ops that were processed).
@@ -191,6 +194,7 @@ impl Metrics {
             worker_panics: self.worker_panics.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
             learn_ways: self.learn_ways.load(Ordering::Relaxed),
+            add_shots: self.add_shots.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
             stream_chunks: self.stream_chunks.load(Ordering::Relaxed),
             stream_decisions: self.stream_decisions.load(Ordering::Relaxed),
@@ -213,6 +217,7 @@ pub struct MetricsSnapshot {
     pub worker_panics: u64,
     pub rejected: u64,
     pub learn_ways: u64,
+    pub add_shots: u64,
     pub evictions: u64,
     pub stream_chunks: u64,
     pub stream_decisions: u64,
@@ -234,6 +239,7 @@ impl MetricsSnapshot {
         self.worker_panics += other.worker_panics;
         self.rejected += other.rejected;
         self.learn_ways += other.learn_ways;
+        self.add_shots += other.add_shots;
         self.evictions += other.evictions;
         self.stream_chunks += other.stream_chunks;
         self.stream_decisions += other.stream_decisions;
@@ -248,7 +254,7 @@ impl MetricsSnapshot {
     pub fn report(&self) -> String {
         format!(
             "requests={} completed={} errors={} worker_panics={} rejected={} learned_ways={} \
-             evictions={} stream_chunks={} stream_decisions={} \
+             add_shots={} evictions={} stream_chunks={} stream_decisions={} \
              latency mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us sim_cycles={}",
             self.requests,
             self.completed,
@@ -256,6 +262,7 @@ impl MetricsSnapshot {
             self.worker_panics,
             self.rejected,
             self.learn_ways,
+            self.add_shots,
             self.evictions,
             self.stream_chunks,
             self.stream_decisions,

@@ -15,6 +15,6 @@ pub use engine::{Engine, EngineKind, Forward};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use server::{
     Coordinator, CoordinatorConfig, ManyItem, ReplySink, Request, Response, SessionId,
-    StreamDecision, StreamInfo,
+    SessionInfoData, StreamDecision, StreamInfo,
 };
 pub use streaming::AudioWindower;

@@ -19,7 +19,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::coordinator::engine::Engine;
 use crate::coordinator::metrics::Metrics;
 use crate::golden::streaming::StreamingState;
-use crate::protonet::{PreparedHead, ProtoHead};
+use crate::protonet::{PreparedHead, ProtoError, ProtoHead};
 use crate::sim::learning::learning_cycles;
 
 /// How a worker delivers the outcome of one request: an arbitrary
@@ -73,6 +73,12 @@ pub enum Request {
     ClassifySession { session: SessionId, input: Vec<u8>, reply: ReplySink },
     /// Learn one new way for a session from k support sequences.
     LearnWay { session: SessionId, shots: Vec<Vec<u8>>, reply: ReplySink },
+    /// Fold new support sequences into an *existing* way of a session's
+    /// head (the continual-learning update; bit-identical to having
+    /// learned the way from the concatenated shot set).
+    AddShots { session: SessionId, way: usize, shots: Vec<Vec<u8>>, reply: ReplySink },
+    /// Report a session's learned state + way-budget accounting.
+    SessionInfo { session: SessionId, reply: ReplySink },
     /// Drop a session's learned head (frees its store slot).
     EvictSession { session: SessionId, reply: ReplySink },
     /// Open (or reset) an incremental stream on a session; the window is
@@ -98,6 +104,8 @@ impl Request {
             Request::Classify { reply, .. }
             | Request::ClassifySession { reply, .. }
             | Request::LearnWay { reply, .. }
+            | Request::AddShots { reply, .. }
+            | Request::SessionInfo { reply, .. }
             | Request::EvictSession { reply, .. }
             | Request::StreamOpen { reply, .. }
             | Request::StreamPush { reply, .. }
@@ -130,6 +138,27 @@ pub struct Response {
     /// windows fail independently (a bad window yields an error string,
     /// never a failed request).
     pub many: Option<Vec<std::result::Result<ManyItem, String>>>,
+    /// `SessionInfo` only: learned state + way-budget accounting.
+    pub session_info: Option<SessionInfoData>,
+}
+
+/// A session's continual-learning state as reported by
+/// [`Request::SessionInfo`]. `bytes_per_way` and `way_cap` are deployment
+/// constants (derived from the model's embed dim and the configured
+/// budget), reported even when the session does not exist.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SessionInfoData {
+    pub exists: bool,
+    /// Ways learned so far.
+    pub ways: u64,
+    /// Total support shots absorbed across all ways.
+    pub shots: u64,
+    /// Prototype memory in use: `ways * bytes_per_way`.
+    pub bytes_used: u64,
+    /// Per-way cost in bytes: `ceil(V/2) + 2`.
+    pub bytes_per_way: u32,
+    /// Way cap per session (0 = unbounded).
+    pub way_cap: u64,
 }
 
 /// One successful window of a [`Request::ClassifyMany`] batch.
@@ -170,11 +199,16 @@ pub struct CoordinatorConfig {
     /// least-recently-used one (counted in `Metrics::evictions`), so a
     /// long-running server cannot grow without bound.
     pub max_sessions: usize,
+    /// Per-session prototype-memory budget in bytes (0 = unbounded). The
+    /// way cap is `budget / ProtoHead::bytes_per_way_of(embed_dim)` — the
+    /// paper's ~26 B/way accounting at V = 48; learning past it answers a
+    /// typed `WaysExhausted` application error instead of growing.
+    pub way_budget_bytes: usize,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        CoordinatorConfig { workers: 2, queue_depth: 256, max_sessions: 1024 }
+        CoordinatorConfig { workers: 2, queue_depth: 256, max_sessions: 1024, way_budget_bytes: 0 }
     }
 }
 
@@ -213,8 +247,13 @@ struct SessionEntry {
 }
 
 impl SessionEntry {
-    fn new(dim: usize) -> SessionEntry {
-        SessionEntry { head: ProtoHead::new(dim), prepared: None, stream: None }
+    fn new(dim: usize, way_budget_bytes: usize) -> SessionEntry {
+        let head = if way_budget_bytes == 0 {
+            ProtoHead::new(dim)
+        } else {
+            ProtoHead::with_budget(dim, way_budget_bytes)
+        };
+        SessionEntry { head, prepared: None, stream: None }
     }
 
     /// Classify against the session head via its prepared snapshot,
@@ -235,11 +274,14 @@ struct SessionStore {
     map: HashMap<SessionId, (SessionEntry, u64)>,
     clock: u64,
     cap: usize,
+    /// Per-session prototype budget handed to every new entry's head
+    /// (0 = unbounded).
+    way_budget_bytes: usize,
 }
 
 impl SessionStore {
-    fn new(cap: usize) -> Self {
-        SessionStore { map: HashMap::new(), clock: 0, cap: cap.max(1) }
+    fn new(cap: usize, way_budget_bytes: usize) -> Self {
+        SessionStore { map: HashMap::new(), clock: 0, cap: cap.max(1), way_budget_bytes }
     }
 
     fn tick(&mut self) -> u64 {
@@ -292,10 +334,11 @@ impl SessionStore {
                 evicted = Some(victim);
             }
         }
+        let budget = self.way_budget_bytes;
         let entry = self
             .map
             .entry(id)
-            .or_insert_with(|| (SessionEntry::new(dim), now));
+            .or_insert_with(|| (SessionEntry::new(dim, budget), now));
         entry.1 = now;
         (&mut entry.0, evicted)
     }
@@ -306,6 +349,48 @@ impl SessionStore {
 
     fn ways(&self, id: SessionId) -> usize {
         self.map.get(&id).map_or(0, |(e, _)| e.head.n_ways())
+    }
+
+    /// The way cap a (new or existing) session's head gets under this
+    /// store's budget (`None` = unbounded).
+    fn way_cap_of(&self, dim: usize) -> Option<usize> {
+        if self.way_budget_bytes == 0 {
+            None
+        } else {
+            Some(self.way_budget_bytes / ProtoHead::bytes_per_way_of(dim))
+        }
+    }
+
+    /// Read-only snapshot of a session's continual-learning state. Does
+    /// *not* refresh LRU recency — an observability probe must never keep
+    /// a dead session alive. The deployment constants (`bytes_per_way`,
+    /// `way_cap`) are filled from `dim` / the store budget even when the
+    /// session does not exist.
+    fn info(&self, id: SessionId, dim: usize) -> SessionInfoData {
+        let bytes_per_way = ProtoHead::bytes_per_way_of(dim);
+        let way_cap = if self.way_budget_bytes == 0 {
+            0
+        } else {
+            (self.way_budget_bytes / bytes_per_way) as u64
+        };
+        match self.map.get(&id) {
+            Some((e, _)) => SessionInfoData {
+                exists: true,
+                ways: e.head.n_ways() as u64,
+                shots: e.head.total_shots() as u64,
+                bytes_used: e.head.bytes_used() as u64,
+                bytes_per_way: bytes_per_way as u32,
+                way_cap,
+            },
+            None => SessionInfoData {
+                exists: false,
+                ways: 0,
+                shots: 0,
+                bytes_used: 0,
+                bytes_per_way: bytes_per_way as u32,
+                way_cap,
+            },
+        }
     }
 
     fn len(&self) -> usize {
@@ -397,7 +482,7 @@ impl Coordinator {
             .recv()
             .map_err(|e| anyhow!("no worker came up: {e}"))??;
         let shared = Arc::new(Shared {
-            sessions: Mutex::new(SessionStore::new(cfg.max_sessions)),
+            sessions: Mutex::new(SessionStore::new(cfg.max_sessions, cfg.way_budget_bytes)),
             metrics: Arc::new(Metrics::new()),
             embed_dim,
             seq_len,
@@ -516,6 +601,27 @@ impl Coordinator {
         rrx.recv().map_err(|e| anyhow!("worker gone: {e}"))?
     }
 
+    /// Blocking convenience: fold new shots into an existing way
+    /// (continual learning).
+    pub fn add_shots(
+        &self,
+        session: SessionId,
+        way: usize,
+        shots: Vec<Vec<u8>>,
+    ) -> Result<Response> {
+        let (rtx, rrx) = mpsc::channel();
+        self.submit(Request::AddShots { session, way, shots, reply: rtx.into() })?;
+        rrx.recv().map_err(|e| anyhow!("worker gone: {e}"))?
+    }
+
+    /// Blocking convenience: a session's learned state + way budget.
+    pub fn session_info(&self, session: SessionId) -> Result<SessionInfoData> {
+        let (rtx, rrx) = mpsc::channel();
+        self.submit(Request::SessionInfo { session, reply: rtx.into() })?;
+        let r = rrx.recv().map_err(|e| anyhow!("worker gone: {e}"))??;
+        r.session_info.ok_or_else(|| anyhow!("missing session info in reply"))
+    }
+
     /// Blocking convenience: evict a session. Returns whether it existed.
     pub fn evict_session(&self, session: SessionId) -> Result<bool> {
         let (rtx, rrx) = mpsc::channel();
@@ -604,6 +710,13 @@ fn run_request(engine: &Engine, req: Request, shared: &Shared) -> (ReplySink, Re
         }
         Request::LearnWay { session, shots, reply } => {
             (reply, guarded(shared, || handle_learn(engine, session, &shots, shared)))
+        }
+        Request::AddShots { session, way, shots, reply } => {
+            (reply, guarded(shared, || handle_add_shots(engine, session, way, &shots, shared)))
+        }
+        Request::SessionInfo { session, reply } => {
+            let info = shared.session_store().info(session, shared.embed_dim);
+            (reply, Ok(Response { session_info: Some(info), ..Response::default() }))
         }
         Request::EvictSession { session, reply } => {
             let existed = shared.session_store().remove(session);
@@ -768,6 +881,14 @@ fn handle_learn(
     if shots.is_empty() {
         bail!("learning a way requires at least one shot");
     }
+    // A zero-way budget can never learn anything: fail before any
+    // embedding work — and, crucially, before `get_or_insert` could evict
+    // an innocent LRU victim to make room for an entry that is doomed to
+    // stay empty.
+    if shared.session_store().way_cap_of(shared.embed_dim) == Some(0) {
+        return Err(anyhow::Error::new(ProtoError::WaysExhausted { cap: 0 })
+            .context(format!("learning session {session}")));
+    }
     // Step 1: embed every shot on the engine.
     let mut embs = Vec::with_capacity(shots.len());
     let mut cycles = 0u64;
@@ -785,11 +906,27 @@ fn handle_learn(
     // LRU cap evicts the least-recently-used one.
     let mut sessions = shared.session_store();
     let (entry, lru_evicted) = sessions.get_or_insert(session, shared.embed_dim);
-    entry.head.learn_way(&embs);
-    // The head changed: the decoded snapshot is stale until the next
-    // classify rebuilds it.
-    entry.prepared = None;
-    let learned = entry.head.n_ways() - 1;
+    let learned = match entry.head.learn_way(&embs) {
+        Ok(way) => {
+            // The head changed: the decoded snapshot is stale until the
+            // next classify rebuilds it.
+            entry.prepared = None;
+            way
+        }
+        Err(e) => {
+            // Typed failure (WaysExhausted / shape violation): nothing was
+            // learned. Do not leave an empty session behind when this op
+            // created it — a failed learn must not occupy a store slot.
+            if entry.head.n_ways() == 0 && entry.stream.is_none() {
+                sessions.remove(session);
+            }
+            drop(sessions);
+            if lru_evicted.is_some() {
+                shared.metrics.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+            return Err(anyhow::Error::new(e).context(format!("learning session {session}")));
+        }
+    };
     drop(sessions);
     if lru_evicted.is_some() {
         shared.metrics.evictions.fetch_add(1, Ordering::Relaxed);
@@ -797,6 +934,74 @@ fn handle_learn(
     shared.metrics.learn_ways.fetch_add(1, Ordering::Relaxed);
     Ok(Response {
         learned_way: Some(learned),
+        sim_cycles: Some(cycles),
+        ..Response::default()
+    })
+}
+
+/// Continual-learning update: embed the new shots and fold them into an
+/// *existing* way's running-mean accumulator ([`ProtoHead::add_shots`]).
+/// Bit-identical to having learned the way from the concatenated shot
+/// set; the session's prepared head snapshot is invalidated exactly like
+/// after `learn_way`. The session must already exist — an update cannot
+/// create state (that is `LearnWay`'s job), so an unknown session or way
+/// is a typed application error.
+fn handle_add_shots(
+    engine: &Engine,
+    session: SessionId,
+    way: usize,
+    shots: &[Vec<u8>],
+    shared: &Shared,
+) -> Result<Response> {
+    if shots.is_empty() {
+        return Err(anyhow::Error::new(ProtoError::NoShots)
+            .context(format!("updating way {way} of session {session}")));
+    }
+    // Validate the target before the expensive part: an update to an
+    // unknown session or way must fail *without* paying up to MAX_LIST
+    // engine forwards (or inflating the cycle metrics with work that was
+    // never applied). Re-checked under the lock after embedding — the
+    // session can still be evicted mid-embed, which then fails the same
+    // way.
+    {
+        let mut sessions = shared.session_store();
+        let entry = sessions
+            .touch(session)
+            .ok_or_else(|| anyhow!("unknown session {session} (learn first)"))?;
+        let ways = entry.head.n_ways();
+        if way >= ways {
+            return Err(anyhow::Error::new(ProtoError::UnknownWay { way, ways })
+                .context(format!("updating session {session}")));
+        }
+    }
+    // Step 1: embed every new shot on the engine.
+    let mut embs = Vec::with_capacity(shots.len());
+    let mut cycles = 0u64;
+    for s in shots {
+        let fwd = engine.forward(s)?;
+        if let Some(t) = &fwd.trace {
+            cycles += t.total_cycles();
+        }
+        embs.push(fwd.embedding);
+    }
+    // Steps 2+3 rerun on the refreshed accumulator: same closed-form cost
+    // as learning (k new streams through the array + one extraction).
+    cycles += learning_cycles(shots.len(), shared.embed_dim);
+    shared.metrics.record_cycles(cycles);
+    let mut sessions = shared.session_store();
+    let entry = sessions
+        .touch(session)
+        .ok_or_else(|| anyhow!("unknown session {session} (learn first)"))?;
+    entry
+        .head
+        .add_shots(way, &embs)
+        .map_err(|e| anyhow::Error::new(e).context(format!("updating session {session}")))?;
+    // The prototype moved: the decoded snapshot is stale.
+    entry.prepared = None;
+    drop(sessions);
+    shared.metrics.add_shots.fetch_add(1, Ordering::Relaxed);
+    Ok(Response {
+        learned_way: Some(way),
         sim_cycles: Some(cycles),
         ..Response::default()
     })
@@ -1048,7 +1253,12 @@ mod tests {
         let mf = m.clone();
         let c = Coordinator::start(
             vec![Box::new(move || Ok(Engine::golden(mf))) as EngineFactory],
-            CoordinatorConfig { workers: 1, queue_depth: 16, max_sessions: 3 },
+            CoordinatorConfig {
+                workers: 1,
+                queue_depth: 16,
+                max_sessions: 3,
+                ..Default::default()
+            },
         )
         .unwrap();
         let mut rng = Rng::new(5);
@@ -1298,6 +1508,121 @@ mod tests {
         let r = c.classify_session(11, rand_seq(&m, &mut rng, 13, 16)).unwrap();
         assert_eq!(r.predicted, Some(1));
         assert_eq!(r.logits.as_ref().map(|l| l.len()), Some(2));
+        c.shutdown();
+    }
+
+    #[test]
+    fn add_shots_moves_the_prototype_and_invalidates_the_snapshot() {
+        // Two ways learned from the *same* (high-valued) input cluster,
+        // then way 1's running mean is dragged into the low cluster with
+        // add_shots: a high query that classified as way 1 must flip to
+        // way 0 — through the cached PreparedHead, proving the update
+        // invalidates the snapshot.
+        let (c, m) = mk_coord(1);
+        let mut rng = Rng::new(81);
+        c.learn_way(3, vec![rand_seq(&m, &mut rng, 13, 16)]).unwrap();
+        c.learn_way(3, vec![rand_seq(&m, &mut rng, 13, 16)]).unwrap();
+        // Whichever way a high query lands on, flooding *that* way with
+        // low-cluster shots drags its prototype across the inter-cluster
+        // gap while the other way stays high — so the decision must flip
+        // to the untouched way (robust to how the high embeddings tie).
+        let q = rand_seq(&m, &mut rng, 13, 16);
+        let winner = c.classify_session(3, q.clone()).unwrap().predicted.unwrap();
+        assert!(winner <= 1);
+        let flood: Vec<Vec<u8>> = (0..30).map(|_| rand_seq(&m, &mut rng, 0, 3)).collect();
+        let r = c.add_shots(3, winner, flood).unwrap();
+        assert_eq!(r.learned_way, Some(winner), "reply echoes the updated way");
+        let r = c.classify_session(3, q).unwrap();
+        assert_eq!(r.predicted, Some(1 - winner), "prototype update must flip the decision");
+        let info = c.session_info(3).unwrap();
+        assert!(info.exists);
+        assert_eq!(info.ways, 2);
+        assert_eq!(info.shots, 1 + 1 + 30);
+        assert_eq!(info.bytes_used, 2 * info.bytes_per_way as u64);
+        assert_eq!(c.metrics().snapshot().add_shots, 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn add_shots_requires_existing_session_and_way() {
+        let (c, m) = mk_coord(1);
+        let mut rng = Rng::new(82);
+        let err = c.add_shots(9, 0, vec![rand_seq(&m, &mut rng, 0, 16)]).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown session"), "{err:#}");
+        c.learn_way(9, vec![rand_seq(&m, &mut rng, 0, 16)]).unwrap();
+        let err = c.add_shots(9, 5, vec![rand_seq(&m, &mut rng, 0, 16)]).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown way"), "{err:#}");
+        let err = c.add_shots(9, 0, vec![]).unwrap_err();
+        assert!(format!("{err:#}").contains("at least one shot"), "{err:#}");
+        // None of these failures reached the catch_unwind net.
+        let snap = c.metrics().snapshot();
+        assert_eq!(snap.worker_panics, 0, "typed errors must not trip the panic net");
+        assert_eq!(snap.add_shots, 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn way_budget_exhausts_typed_and_counts_no_panics() {
+        // A 2-way budget: the third learn fails with the typed
+        // WaysExhausted error, the session keeps its 2 ways, and the
+        // failed learn does not occupy a new store slot.
+        let m = SArc::new(crate::model::tests::tiny_model());
+        let budget = 2 * crate::protonet::ProtoHead::bytes_per_way_of(m.embed_dim);
+        let mf = m.clone();
+        let c = Coordinator::start(
+            vec![Box::new(move || Ok(Engine::golden(mf))) as EngineFactory],
+            CoordinatorConfig { way_budget_bytes: budget, ..Default::default() },
+        )
+        .unwrap();
+        let mut rng = Rng::new(83);
+        c.learn_way(1, vec![rand_seq(&m, &mut rng, 0, 16)]).unwrap();
+        c.learn_way(1, vec![rand_seq(&m, &mut rng, 0, 16)]).unwrap();
+        let err = c.learn_way(1, vec![rand_seq(&m, &mut rng, 0, 16)]).unwrap_err();
+        assert!(format!("{err:#}").contains("ways exhausted"), "{err:#}");
+        let info = c.session_info(1).unwrap();
+        assert_eq!(info.ways, 2);
+        assert_eq!(info.way_cap, 2);
+        assert_eq!(info.bytes_used, budget as u64);
+        // Updates to existing ways still work at a full cap.
+        c.add_shots(1, 0, vec![rand_seq(&m, &mut rng, 0, 16)]).unwrap();
+        assert_eq!(c.metrics().snapshot().worker_panics, 0);
+        c.shutdown();
+        // A budget below one way caps at zero: the very first learn fails
+        // typed and leaves no empty session entry behind. max_sessions: 1
+        // so a doomed learn would have to evict to insert — it must not.
+        let mf = m.clone();
+        let c = Coordinator::start(
+            vec![Box::new(move || Ok(Engine::golden(mf))) as EngineFactory],
+            CoordinatorConfig { way_budget_bytes: 1, max_sessions: 1, ..Default::default() },
+        )
+        .unwrap();
+        let err = c.learn_way(2, vec![rand_seq(&m, &mut rng, 0, 16)]).unwrap_err();
+        assert!(format!("{err:#}").contains("ways exhausted"), "{err:#}");
+        assert!(!c.session_info(2).unwrap().exists, "failed learn must not create state");
+        assert_eq!(c.session_count(), 0);
+        // A doomed learn must also never evict an innocent LRU victim to
+        // make room for itself: live (stream) sessions survive it.
+        c.stream_open(3, m.seq_len).unwrap();
+        assert!(c.learn_way(4, vec![rand_seq(&m, &mut rng, 0, 16)]).is_err());
+        assert_eq!(c.session_count(), 1, "the stream session must survive doomed learns");
+        assert_eq!(c.metrics().snapshot().evictions, 0);
+        assert_eq!(c.metrics().snapshot().worker_panics, 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn session_info_reports_deployment_constants_for_absent_sessions() {
+        let (c, m) = mk_coord(1);
+        let info = c.session_info(42).unwrap();
+        assert!(!info.exists);
+        assert_eq!(info.ways, 0);
+        assert_eq!(info.shots, 0);
+        assert_eq!(info.bytes_used, 0);
+        assert_eq!(
+            info.bytes_per_way as usize,
+            crate::protonet::ProtoHead::bytes_per_way_of(m.embed_dim)
+        );
+        assert_eq!(info.way_cap, 0, "unbounded budget reports 0");
         c.shutdown();
     }
 

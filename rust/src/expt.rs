@@ -104,7 +104,7 @@ pub fn fsl_eval(
                 .iter()
                 .map(|&i| cache.embedding(c, i).cloned())
                 .collect::<Result<_>>()?;
-            head.learn_way(&shots);
+            head.learn_way(&shots)?;
             for &i in &ids[k_shot..] {
                 queries.push((way, cache.embedding(c, i)?.clone()));
             }
@@ -154,7 +154,7 @@ pub fn cl_run(
             .iter()
             .map(|&i| cache.embedding(*c, i).cloned())
             .collect::<Result<_>>()?;
-        head.learn_way(&shots);
+        head.learn_way(&shots)?;
         let ways_so_far = w + 1;
         if eval_at.contains(&ways_so_far) {
             let mut correct = 0usize;

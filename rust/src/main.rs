@@ -9,13 +9,20 @@
 //!           --pipeline D keeps D requests in flight per connection and
 //!           --batch N sends N-window ClassifyBatch frames (protocol v3);
 //!           --stream [--chunk C --hop H --pace-hz F] drives incremental
-//!           stream sessions instead of request traffic
+//!           stream sessions instead of request traffic;
+//!           --cl [--ways N --shots K --classify-frac F] drives growing-
+//!           way continual-learning sessions (protocol v4 AddShots)
+//!   cl      [--ways N --shots K]  artifact-free synthetic continual-
+//!           learning trajectory (Fig. 15 shape) over a loopback server:
+//!           incremental AddShots vs all-at-once bit-identity + byte
+//!           accounting asserted while timed; --json appends BENCH_cl.json
 //!   drive   --model NAME         drive the in-process streaming coordinator
-//!   bench   [--json ...]         run the hot-path + serve perf suites;
-//!           --json appends a run to BENCH_hotpath.json / BENCH_serve.json
-//!           at the repo root (--out DIR overrides), --quick shortens the
-//!           suites for CI, --baseline PATH enforces the regression gate
-//!           against a committed ci/bench_baseline.json
+//!   bench   [--json ...]         run the hot-path + serve + CL perf
+//!           suites; --json appends a run to BENCH_hotpath.json /
+//!           BENCH_serve.json / BENCH_cl.json at the repo root (--out DIR
+//!           overrides), --quick shortens the suites for CI, --baseline
+//!           PATH enforces the regression gate against a committed
+//!           ci/bench_baseline.json
 //!   power   [--mode 4|16 ...]    evaluate the calibrated power model
 //!   verify                       cross-check golden/sim/xla vs vectors
 //!
@@ -50,6 +57,7 @@ fn main() {
         "learn" => cmd_learn(&args),
         "serve" => cmd_serve(&args),
         "loadgen" => cmd_loadgen(&args),
+        "cl" => cmd_cl(&args),
         "drive" => cmd_drive(&args),
         "bench" => cmd_bench(&args),
         "power" => cmd_power(&args),
@@ -58,7 +66,7 @@ fn main() {
         other => {
             eprintln!(
                 "unknown command {other:?}; try \
-                 info|infer|learn|serve|loadgen|drive|bench|power|verify|hlo-stats"
+                 info|infer|learn|serve|loadgen|cl|drive|bench|power|verify|hlo-stats"
             );
             std::process::exit(2);
         }
@@ -248,6 +256,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         workers_per_shard: args.get_usize("workers", 2)?,
         queue_depth: args.get_usize("queue-depth", 256)?,
         max_sessions: args.get_usize("max-sessions", 1024)?,
+        way_budget_bytes: args.get_usize("way-budget", 0)?,
         ..Default::default()
     };
     let engine_kind = args.get_or("engine", "golden").to_string();
@@ -265,12 +274,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     })?;
     println!(
         "serving on {} — {} shard(s) x {} worker(s), queue depth {}, \
-         max {} sessions/shard, engine={engine_kind}",
+         max {} sessions/shard, way budget {}, engine={engine_kind}",
         server.local_addr(),
         cfg.shards,
         cfg.workers_per_shard,
         cfg.queue_depth,
         cfg.max_sessions,
+        if cfg.way_budget_bytes == 0 {
+            "unbounded".to_string()
+        } else {
+            format!("{} B/session", cfg.way_budget_bytes)
+        },
     );
     let duration = args.get_f64("duration", 0.0)?;
     let report_every = args.get_f64("report-every", 10.0)?.max(0.5);
@@ -296,6 +310,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
 fn cmd_loadgen(args: &Args) -> Result<()> {
     if args.flag("stream") {
         return cmd_loadgen_stream(args);
+    }
+    if args.flag("cl") {
+        return cmd_loadgen_cl(args);
     }
     let cfg = LoadgenConfig {
         addr: args.get_or("addr", "127.0.0.1:7070").to_string(),
@@ -363,6 +380,67 @@ fn cmd_loadgen_stream(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Continual-learning mode of the load generator: growing-way sessions
+/// mixing protocol-v4 `AddShots` prototype updates with classifies,
+/// reporting per-op latency percentiles.
+fn cmd_loadgen_cl(args: &Args) -> Result<()> {
+    let cfg = chameleon::serve::ClLoadConfig {
+        addr: args.get_or("addr", "127.0.0.1:7070").to_string(),
+        connections: args.get_usize("connections", 4)?,
+        duration: Duration::from_secs_f64(args.get_f64("duration", 10.0)?),
+        ways: args.get_usize("ways", 50)?,
+        shots_per_way: args.get_usize("shots", 10)?,
+        classify_frac: args.get_f64("classify-frac", 0.5)?,
+        seed: args.get_u64("seed", 1)?,
+    };
+    println!(
+        "loadgen --cl -> {}: {} session(s) growing to {} ways x {} shots for {:.1} s \
+         (classify {:.0}%)",
+        cfg.addr,
+        cfg.connections,
+        cfg.ways,
+        cfg.shots_per_way,
+        cfg.duration.as_secs_f64(),
+        100.0 * cfg.classify_frac,
+    );
+    let report = chameleon::serve::loadgen::run_cl(&cfg)?;
+    println!("{}", report.report());
+    if report.protocol_errors > 0 {
+        bail!("{} protocol errors observed", report.protocol_errors);
+    }
+    Ok(())
+}
+
+/// Artifact-free synthetic continual-learning driver: the paper's Fig. 15
+/// trajectory (default 250 ways x 10 shots) on the built-in `tiny` model
+/// over a loopback server — incremental `AddShots` asserted bit-identical
+/// to all-at-once learning and `SessionInfo` byte accounting asserted
+/// exact, while the updates are timed. `--json` appends the run to
+/// `BENCH_cl.json`; `--baseline PATH` enforces the CL regression gate.
+fn cmd_cl(args: &Args) -> Result<()> {
+    use chameleon::util::perfsuite;
+    let quick = args.flag("quick");
+    let ways = args.get_usize("ways", if quick { 60 } else { 250 })?;
+    let shots = args.get_usize("shots", 10)?;
+    println!("cl: synthetic {ways}-way {shots}-shot trajectory over loopback (tiny model)");
+    let rows = perfsuite::run_cl_trajectory(ways, shots)?;
+    perfsuite::print_rows("cl: continual-learning trajectory", &rows);
+    if args.flag("json") || args.get("out").is_some() {
+        let out = args
+            .get("out")
+            .map(PathBuf::from)
+            .unwrap_or_else(perfsuite::default_bench_dir);
+        let path = out.join("BENCH_cl.json");
+        perfsuite::append_bench_json(&path, "cl", quick, &rows)?;
+        println!("appended run to {}", path.display());
+    }
+    if let Some(baseline) = args.get("baseline") {
+        perfsuite::check_baseline(std::path::Path::new(baseline), &[("cl", rows.as_slice())])?;
+        println!("cl regression gate passed ({baseline})");
+    }
+    Ok(())
+}
+
 /// Drive the in-process coordinator directly (the pre-serve harness).
 fn cmd_drive(args: &Args) -> Result<()> {
     let model = Arc::new(load_model(args, "kws_mfcc")?);
@@ -414,6 +492,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
     perfsuite::print_rows("bench: hot path (prepared execution plans)", &hotpath);
     let serve = perfsuite::run_serve_suite(quick)?;
     perfsuite::print_rows("bench: serve loopback", &serve);
+    let cl = perfsuite::run_cl_suite(quick)?;
+    perfsuite::print_rows("bench: continual learning (serve loopback)", &cl);
     if args.flag("json") || args.get("out").is_some() {
         // Default output: the repository root (resolved at runtime),
         // where the BENCH_*.json trajectory files live.
@@ -427,11 +507,18 @@ fn cmd_bench(args: &Args) -> Result<()> {
         let sv = out.join("BENCH_serve.json");
         perfsuite::append_bench_json(&sv, "serve", quick, &serve)?;
         println!("appended run to {}", sv.display());
+        let cj = out.join("BENCH_cl.json");
+        perfsuite::append_bench_json(&cj, "cl", quick, &cl)?;
+        println!("appended run to {}", cj.display());
     }
     if let Some(baseline) = args.get("baseline") {
         perfsuite::check_baseline(
             std::path::Path::new(baseline),
-            &[("hotpath", hotpath.as_slice()), ("serve", serve.as_slice())],
+            &[
+                ("hotpath", hotpath.as_slice()),
+                ("serve", serve.as_slice()),
+                ("cl", cl.as_slice()),
+            ],
         )?;
         println!("bench regression gate passed ({baseline})");
     }

@@ -6,13 +6,69 @@
 //! codes and derive the 14-bit bias purely with shifts. Classification is
 //! a forward pass through the resulting FC layer — argmax(logits) equals
 //! argmin(squared L2 distance to the prototypes).
+//!
+//! # Continual learning
+//!
+//! Each way keeps its [`ProtoAccumulator`] (running sum + shot count)
+//! alive after extraction, so [`ProtoHead::add_shots`] can fold new
+//! support shots into an *existing* prototype by running mean — exactly
+//! the paper's Fig. 15 protocol, where a class revisited later refines
+//! its prototype instead of relearning from scratch. Because the
+//! extracted column is a pure function of `(sum, shots)`, splitting a
+//! shot set across any sequence of `add_shots` calls is bit-identical to
+//! [`ProtoHead::learn_way`] on the concatenated set (property-tested in
+//! `tests/cl_bitexact.rs`).
+//!
+//! Head growth is bounded by an optional **way cap**, usually derived
+//! from a prototype-memory budget via [`ProtoHead::bytes_per_way`] (the
+//! paper's ~26 B/way accounting at V = 48): learning past the cap fails
+//! with the typed [`ProtoError::WaysExhausted`] instead of growing — and
+//! every shape violation (wrong embedding length, unknown way) is a typed
+//! [`ProtoError`] rather than an assert, so a malformed wire shot can
+//! never panic a serving worker.
 
 use crate::golden::{self, PreparedFc};
 use crate::model::QLayer;
 use crate::quant;
 
+/// Typed failures of the prototypical learning core. These surface as
+/// application errors on the serve wire — never as panics (the
+/// coordinator's `catch_unwind` net is a last resort, not a control path).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProtoError {
+    /// A support embedding's length does not match the head dimension.
+    DimMismatch { expected: usize, got: usize },
+    /// The head's way cap (memory budget) is full; no new way fits.
+    WaysExhausted { cap: usize },
+    /// `add_shots` addressed a way that was never learned.
+    UnknownWay { way: usize, ways: usize },
+    /// A learn/update op carried zero shots.
+    NoShots,
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtoError::DimMismatch { expected, got } => {
+                write!(f, "embedding dim mismatch: head expects {expected}, shot has {got}")
+            }
+            ProtoError::WaysExhausted { cap } => {
+                write!(f, "ways exhausted: the head's way budget of {cap} way(s) is full")
+            }
+            ProtoError::UnknownWay { way, ways } => {
+                write!(f, "unknown way {way} (head has {ways} way(s))")
+            }
+            ProtoError::NoShots => write!(f, "learning requires at least one shot"),
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
 /// Accumulated per-class state while learning (the learning controller's
-/// view of one way).
+/// view of one way). Persisted per way inside [`ProtoHead`] so continual
+/// learning can keep updating the running mean long after the first
+/// extraction.
 #[derive(Debug, Clone)]
 pub struct ProtoAccumulator {
     /// Sum of u4 support embeddings (fits i32: 15 * k <= 15 * 2^16).
@@ -25,13 +81,17 @@ impl ProtoAccumulator {
         ProtoAccumulator { sum: vec![0; dim], shots: 0 }
     }
 
-    /// Step 2 of the paper's Fig. 6: add one support embedding.
-    pub fn add_shot(&mut self, emb: &[u8]) {
-        assert_eq!(emb.len(), self.sum.len());
+    /// Step 2 of the paper's Fig. 6: add one support embedding. A
+    /// wrong-length embedding is a typed error, not a panic.
+    pub fn add_shot(&mut self, emb: &[u8]) -> Result<(), ProtoError> {
+        if emb.len() != self.sum.len() {
+            return Err(ProtoError::DimMismatch { expected: self.sum.len(), got: emb.len() });
+        }
         for (s, &e) in self.sum.iter_mut().zip(emb) {
             *s += e as i32;
         }
         self.shots += 1;
+        Ok(())
     }
 
     /// `ceil(log2(k))` pre-shift approximating the class mean on the po2 grid.
@@ -57,6 +117,10 @@ impl ProtoAccumulator {
     /// OPE rescale path with a 4-bit reciprocal constant. The QAT loss
     /// quantizes prototypes on exactly this grid, so training and
     /// deployment match bit-for-bit.
+    ///
+    /// Pure in `(sum, shots)`: re-extracting after more [`Self::add_shot`]
+    /// calls yields exactly the column a fresh accumulator over the full
+    /// shot set would — the invariant continual learning rests on.
     pub fn extract(&self) -> (Vec<i8>, i32) {
         let k = self.shots.max(1) as i32;
         let codes: Vec<i8> = self
@@ -74,39 +138,150 @@ impl ProtoAccumulator {
     }
 }
 
+/// One learned way: the live accumulator plus its current extracted FC
+/// column. The column is re-extracted whenever the accumulator absorbs
+/// new shots.
+#[derive(Debug, Clone)]
+struct ProtoWay {
+    acc: ProtoAccumulator,
+    codes: Vec<i8>,
+    bias: i32,
+}
+
 /// The growing prototypical FC head: one column per learned way.
 /// This is exactly the FC layer the inference datapath already supports —
-/// learning writes into the ordinary weight/bias memories.
+/// learning writes into the ordinary weight/bias memories, and each way's
+/// accumulator stays resident so continual learning can keep refining it.
 #[derive(Debug, Clone, Default)]
 pub struct ProtoHead {
     pub dim: usize,
-    /// Per-way weight columns (`[V]` each) and biases.
-    pub ways: Vec<(Vec<i8>, i32)>,
+    ways: Vec<ProtoWay>,
+    /// Maximum ways this head may hold (`None` = unbounded). Usually
+    /// derived from a byte budget — see [`ProtoHead::with_budget`].
+    way_cap: Option<usize>,
 }
 
 impl ProtoHead {
+    /// Unbounded head (the pre-CL behavior).
     pub fn new(dim: usize) -> Self {
-        ProtoHead { dim, ways: Vec::new() }
+        ProtoHead { dim, ways: Vec::new(), way_cap: None }
+    }
+
+    /// Head bounded to at most `cap` ways.
+    pub fn with_cap(dim: usize, cap: usize) -> Self {
+        ProtoHead { dim, ways: Vec::new(), way_cap: Some(cap) }
+    }
+
+    /// Head bounded by a prototype-memory budget in bytes: the cap is
+    /// `budget_bytes / bytes_per_way` (the paper's ~26 B/way accounting
+    /// at V = 48). A budget smaller than one way yields a cap of zero —
+    /// every learn then fails with [`ProtoError::WaysExhausted`].
+    pub fn with_budget(dim: usize, budget_bytes: usize) -> Self {
+        let cap = budget_bytes / Self::bytes_per_way_of(dim);
+        Self::with_cap(dim, cap)
     }
 
     pub fn n_ways(&self) -> usize {
         self.ways.len()
     }
 
-    /// Learn one new way from its support embeddings (k shots).
-    pub fn learn_way(&mut self, shots: &[Vec<u8>]) {
+    /// The configured way cap (`None` = unbounded).
+    pub fn way_cap(&self) -> Option<usize> {
+        self.way_cap
+    }
+
+    /// Shots absorbed by one way so far (`None` for an unknown way).
+    pub fn shots_of(&self, way: usize) -> Option<usize> {
+        self.ways.get(way).map(|w| w.acc.shots)
+    }
+
+    /// Total shots absorbed across all ways.
+    pub fn total_shots(&self) -> usize {
+        self.ways.iter().map(|w| w.acc.shots).sum()
+    }
+
+    /// One way's current extracted column: (codes `[V]`, bias).
+    pub fn way_codes(&self, way: usize) -> Option<(&[i8], i32)> {
+        self.ways.get(way).map(|w| (w.codes.as_slice(), w.bias))
+    }
+
+    /// Validate a shot set's shape before touching any state, so a failed
+    /// op never leaves a half-updated accumulator behind.
+    fn check_shots(&self, shots: &[Vec<u8>]) -> Result<(), ProtoError> {
+        if shots.is_empty() {
+            return Err(ProtoError::NoShots);
+        }
+        for s in shots {
+            if s.len() != self.dim {
+                return Err(ProtoError::DimMismatch { expected: self.dim, got: s.len() });
+            }
+        }
+        Ok(())
+    }
+
+    /// Learn one new way from its support embeddings (k shots). Returns
+    /// the new way's index; fails typed on an empty or wrong-dim shot set
+    /// and on a full way cap (nothing is mutated on failure).
+    pub fn learn_way(&mut self, shots: &[Vec<u8>]) -> Result<usize, ProtoError> {
+        self.check_shots(shots)?;
         let mut acc = ProtoAccumulator::new(self.dim);
         for s in shots {
-            acc.add_shot(s);
+            acc.add_shot(s)?;
         }
-        self.ways.push(acc.extract());
+        self.push_way(acc)
+    }
+
+    /// Fold new support shots into an *existing* way's running mean (the
+    /// continual-learning update). Returns the way's total shot count
+    /// after the update. Bit-identical to having learned the way from the
+    /// concatenated shot set in one [`ProtoHead::learn_way`] call.
+    pub fn add_shots(&mut self, way: usize, shots: &[Vec<u8>]) -> Result<usize, ProtoError> {
+        if way >= self.ways.len() {
+            return Err(ProtoError::UnknownWay { way, ways: self.ways.len() });
+        }
+        self.check_shots(shots)?;
+        let w = &mut self.ways[way];
+        for s in shots {
+            w.acc.add_shot(s)?;
+        }
+        let (codes, bias) = w.acc.extract();
+        w.codes = codes;
+        w.bias = bias;
+        Ok(w.acc.shots)
+    }
+
+    /// Install one fully accumulated way (the simulator's learning
+    /// controller hands its accumulator over directly). Returns the new
+    /// way's index; checks the dim and the way cap.
+    pub fn push_way(&mut self, acc: ProtoAccumulator) -> Result<usize, ProtoError> {
+        if acc.sum.len() != self.dim {
+            return Err(ProtoError::DimMismatch { expected: self.dim, got: acc.sum.len() });
+        }
+        if let Some(cap) = self.way_cap {
+            if self.ways.len() >= cap {
+                return Err(ProtoError::WaysExhausted { cap });
+            }
+        }
+        let (codes, bias) = acc.extract();
+        self.ways.push(ProtoWay { acc, codes, bias });
+        Ok(self.ways.len() - 1)
     }
 
     /// Memory overhead of one way in bytes: V codes at 4 bits (nibble-
     /// padded to whole bytes, so odd V rounds *up*) + 14-bit bias
     /// (paper: 26 B/way at V = 48... scales as ceil(V/2) + 2).
     pub fn bytes_per_way(&self) -> usize {
-        self.dim.div_ceil(2) + 2
+        Self::bytes_per_way_of(self.dim)
+    }
+
+    /// [`ProtoHead::bytes_per_way`] as a function of the embedding dim.
+    pub fn bytes_per_way_of(dim: usize) -> usize {
+        dim.div_ceil(2) + 2
+    }
+
+    /// Prototype memory currently in use: `n_ways * bytes_per_way`.
+    pub fn bytes_used(&self) -> usize {
+        self.n_ways() * self.bytes_per_way()
     }
 
     /// Convert into a standard [`QLayer`] executable by every engine.
@@ -114,11 +289,11 @@ impl ProtoHead {
         let n = self.n_ways();
         let mut codes = vec![0i8; self.dim * n];
         let mut bias = vec![0i32; n];
-        for (j, (col, b)) in self.ways.iter().enumerate() {
+        for (j, w) in self.ways.iter().enumerate() {
             for i in 0..self.dim {
-                codes[i * n + j] = col[i];
+                codes[i * n + j] = w.codes[i];
             }
-            bias[j] = *b;
+            bias[j] = w.bias;
         }
         QLayer {
             codes,
@@ -151,8 +326,9 @@ impl ProtoHead {
     /// rows laid out way-contiguous with the log2 codes expanded to
     /// integers, so per-query classification never rebuilds the
     /// [`QLayer`] or touches the code tables. Must be rebuilt whenever
-    /// the head changes — after [`ProtoHead::learn_way`] or on session
-    /// eviction (the coordinator's session store owns that invalidation).
+    /// the head changes — after [`ProtoHead::learn_way`] or
+    /// [`ProtoHead::add_shots`], or on session eviction (the
+    /// coordinator's session store owns that invalidation).
     pub fn prepare(&self) -> PreparedHead {
         let l = self.as_qlayer();
         PreparedHead {
@@ -163,7 +339,7 @@ impl ProtoHead {
 
 /// A decoded, immutable snapshot of a [`ProtoHead`] — the cheap learned
 /// classifier of the FSL-HDnn-style split (fixed feature extractor +
-/// per-session head), prepared once per `learn_way` instead of once per
+/// per-session head), prepared once per head update instead of once per
 /// query. Bit-identical to [`ProtoHead::logits`] / [`ProtoHead::classify`]
 /// on the head it was prepared from.
 #[derive(Debug, Clone)]
@@ -211,7 +387,7 @@ mod tests {
     #[test]
     fn extract_bias_is_half_sum_of_squares() {
         let mut acc = ProtoAccumulator::new(4);
-        acc.add_shot(&[4, 8, 0, 2]);
+        acc.add_shot(&[4, 8, 0, 2]).unwrap();
         let (codes, bias) = acc.extract();
         let dec: Vec<i32> = codes.iter().map(|&c| quant::log2_decode(c)).collect();
         assert_eq!(dec, vec![4, 8, 0, 2]);
@@ -232,13 +408,14 @@ mod tests {
             let mut head = ProtoHead::new(dim);
             for _ in 0..n_ways {
                 let shot: Vec<u8> = (0..dim).map(|_| rng.range(0, 16) as u8).collect();
-                head.learn_way(&[shot]);
+                head.learn_way(&[shot]).unwrap();
             }
             let q: Vec<u8> = (0..dim).map(|_| rng.range(0, 16) as u8).collect();
             let pred = head.classify(&q);
             let dist = |j: usize| -> i64 {
+                let (codes, _) = head.way_codes(j).unwrap();
                 q.iter()
-                    .zip(head.ways[j].0.iter())
+                    .zip(codes.iter())
                     .map(|(&x, &c)| {
                         let s = quant::log2_decode(c) as i64;
                         (x as i64 - s) * (x as i64 - s)
@@ -259,10 +436,11 @@ mod tests {
     fn one_shot_prototype_is_the_shot() {
         let mut head = ProtoHead::new(8);
         let shot: Vec<u8> = vec![1, 2, 4, 8, 0, 1, 2, 4]; // all po2 -> exact
-        head.learn_way(&[shot.clone()]);
+        head.learn_way(&[shot.clone()]).unwrap();
         let pred = head.classify(&shot);
         assert_eq!(pred, 0);
-        let dec: Vec<i32> = head.ways[0].0.iter().map(|&c| quant::log2_decode(c)).collect();
+        let (codes, _) = head.way_codes(0).unwrap();
+        let dec: Vec<i32> = codes.iter().map(|&c| quant::log2_decode(c)).collect();
         assert_eq!(dec, shot.iter().map(|&v| v as i32).collect::<Vec<_>>());
     }
 
@@ -270,9 +448,69 @@ mod tests {
     fn multi_shot_averages() {
         let mut head = ProtoHead::new(2);
         // two shots summing to [16, 4]; k=2 -> preshift 1 -> [8, 2]
-        head.learn_way(&[vec![15, 3], vec![1, 1]]);
-        let dec: Vec<i32> = head.ways[0].0.iter().map(|&c| quant::log2_decode(c)).collect();
+        head.learn_way(&[vec![15, 3], vec![1, 1]]).unwrap();
+        let (codes, _) = head.way_codes(0).unwrap();
+        let dec: Vec<i32> = codes.iter().map(|&c| quant::log2_decode(c)).collect();
         assert_eq!(dec, vec![8, 2]);
+    }
+
+    #[test]
+    fn add_shots_matches_learning_all_at_once() {
+        // The continual-learning invariant at unit scale: learning [a]
+        // then adding [b, c] equals learning [a, b, c] — codes, bias and
+        // shot count. (The full property test lives in
+        // tests/cl_bitexact.rs.)
+        let shots = [vec![15u8, 3, 0, 9], vec![1, 1, 14, 2], vec![7, 0, 5, 15]];
+        let mut once = ProtoHead::new(4);
+        once.learn_way(&shots).unwrap();
+        let mut split = ProtoHead::new(4);
+        split.learn_way(&shots[..1]).unwrap();
+        assert_eq!(split.add_shots(0, &shots[1..]).unwrap(), 3);
+        assert_eq!(split.way_codes(0), once.way_codes(0));
+        assert_eq!(split.shots_of(0), Some(3));
+        assert_eq!(split.total_shots(), once.total_shots());
+    }
+
+    #[test]
+    fn typed_errors_not_panics() {
+        let mut head = ProtoHead::with_cap(4, 1);
+        assert_eq!(head.learn_way(&[]), Err(ProtoError::NoShots));
+        let got = head.learn_way(&[vec![1, 2, 3]]);
+        assert_eq!(got, Err(ProtoError::DimMismatch { expected: 4, got: 3 }));
+        head.learn_way(&[vec![1, 2, 3, 4]]).unwrap();
+        let got = head.learn_way(&[vec![1, 2, 3, 4]]);
+        assert_eq!(got, Err(ProtoError::WaysExhausted { cap: 1 }));
+        let got = head.add_shots(1, &[vec![1, 2, 3, 4]]);
+        assert_eq!(got, Err(ProtoError::UnknownWay { way: 1, ways: 1 }));
+        let got = head.add_shots(0, &[vec![1, 2]]);
+        assert_eq!(got, Err(ProtoError::DimMismatch { expected: 4, got: 2 }));
+        // A failed multi-shot op mutates nothing: the second shot's bad
+        // dim is caught before the first is absorbed.
+        let before = head.way_codes(0).map(|(c, b)| (c.to_vec(), b));
+        assert!(head.add_shots(0, &[vec![1, 2, 3, 4], vec![9]]).is_err());
+        assert_eq!(head.shots_of(0), Some(1), "failed op must not absorb shots");
+        assert_eq!(head.way_codes(0).map(|(c, b)| (c.to_vec(), b)), before);
+        // Accumulator-level mismatch is typed too.
+        let mut acc = ProtoAccumulator::new(4);
+        let got = acc.add_shot(&[1, 2]);
+        assert_eq!(got, Err(ProtoError::DimMismatch { expected: 4, got: 2 }));
+    }
+
+    #[test]
+    fn budget_derives_way_cap() {
+        // V = 48 -> 26 B/way: a 260-byte budget holds exactly 10 ways.
+        let head = ProtoHead::with_budget(48, 260);
+        assert_eq!(head.way_cap(), Some(10));
+        // A budget below one way caps at zero: every learn fails typed.
+        let mut tiny = ProtoHead::with_budget(48, 25);
+        assert_eq!(tiny.way_cap(), Some(0));
+        let got = tiny.learn_way(&[vec![0; 48]]);
+        assert_eq!(got, Err(ProtoError::WaysExhausted { cap: 0 }));
+        // bytes_used tracks growth.
+        let mut head = ProtoHead::with_budget(8, 100);
+        assert_eq!(head.bytes_used(), 0);
+        head.learn_way(&[vec![1; 8]]).unwrap();
+        assert_eq!(head.bytes_used(), head.bytes_per_way());
     }
 
     #[test]
@@ -286,7 +524,7 @@ mod tests {
                 let s: Vec<Vec<u8>> = (0..shots)
                     .map(|_| (0..dim).map(|_| rng.range(0, 16) as u8).collect())
                     .collect();
-                head.learn_way(&s);
+                head.learn_way(&s).unwrap();
             }
             let prepared = head.prepare();
             prop_assert_eq!(prepared.n_ways(), head.n_ways());
@@ -307,7 +545,7 @@ mod tests {
         let mut head = ProtoHead::new(dim);
         for _ in 0..5 {
             let shot: Vec<u8> = (0..dim).map(|_| rng.range(0, 16) as u8).collect();
-            head.learn_way(&[shot]);
+            head.learn_way(&[shot]).unwrap();
         }
         let l = head.as_qlayer();
         assert_eq!(l.codes_shape, vec![dim, 5]);

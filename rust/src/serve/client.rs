@@ -34,8 +34,8 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::serve::proto::{
-    self, BatchItem, ErrorCode, HealthWire, MetricsWire, WireDecision, WireReply, WireRequest,
-    WireResponse,
+    self, BatchItem, ErrorCode, HealthWire, MetricsWire, SessionInfoWire, WireDecision, WireReply,
+    WireRequest, WireResponse,
 };
 
 /// Client tuning knobs.
@@ -316,11 +316,12 @@ impl Client {
     ///
     /// Retry discipline: a failure *before* the request hit the wire is
     /// always retried. A failure *after* it may have been sent is only
-    /// retried for idempotent requests — re-sending a `LearnWay` whose
-    /// reply was lost could apply the learning twice, and re-sending a
-    /// `StreamPush` would advance the stream twice, so those surface as
-    /// errors for the caller to decide. With pipelined requests already in
-    /// flight there is no retry at all (a reconnect would lose them).
+    /// retried for idempotent requests — re-sending a `LearnWay` or
+    /// `AddShots` whose reply was lost could apply the learning twice,
+    /// and re-sending a `StreamPush` would advance the stream twice, so
+    /// those surface as errors for the caller to decide. With pipelined
+    /// requests already in flight there is no retry at all (a reconnect
+    /// would lose them).
     pub fn call(&mut self, req: &WireRequest) -> Result<WireResponse> {
         let v = self.version();
         let min = proto::request_min_version(req);
@@ -333,8 +334,12 @@ impl Client {
             let id = self.submit(req)?;
             return self.wait(id);
         }
-        let idempotent =
-            !matches!(req, WireRequest::LearnWay { .. } | WireRequest::StreamPush { .. });
+        let idempotent = !matches!(
+            req,
+            WireRequest::LearnWay { .. }
+                | WireRequest::AddShots { .. }
+                | WireRequest::StreamPush { .. }
+        );
         let mut last_err: Option<anyhow::Error> = None;
         for attempt in 0..=self.cfg.reconnect_attempts {
             if attempt > 0 {
@@ -418,6 +423,25 @@ impl Client {
     /// Learn one new way for a session.
     pub fn learn_way(&mut self, session: u64, shots: Vec<Vec<u8>>) -> Result<WireReply> {
         self.expect_reply(&WireRequest::LearnWay { session, shots })
+    }
+
+    /// Fold new support shots into an already-learned way of a session
+    /// (v4, continual learning). The reply's `learned_way` echoes the
+    /// updated way. Not retried after a transport failure mid-call — a
+    /// lost reply could mean the shots were already absorbed.
+    pub fn add_shots(&mut self, session: u64, way: u64, shots: Vec<Vec<u8>>) -> Result<WireReply> {
+        self.expect_reply(&WireRequest::AddShots { session, way, shots })
+    }
+
+    /// A session's learned state + way-budget accounting (v4).
+    pub fn session_info(&mut self, session: u64) -> Result<SessionInfoWire> {
+        match self.call(&WireRequest::SessionInfo { session })? {
+            WireResponse::SessionInfo(si) => Ok(si),
+            WireResponse::Error { code, message } => {
+                bail!("server error ({code:?}): {message}")
+            }
+            other => bail!("unexpected response {other:?}"),
+        }
     }
 
     /// Evict a session; returns whether it existed.

@@ -27,6 +27,14 @@
 //! free-running; it reports **per-chunk** and **per-decision** latency
 //! separately, since a decision's latency is what an end user of
 //! streaming KWS actually observes.
+//!
+//! CL mode ([`run_cl`]) drives continual learning as a workload: each
+//! connection owns one growing-way session and mixes `LearnWay` (new
+//! ways), `AddShots` (running-mean updates to existing ways, protocol
+//! v4) and `ClassifySession` ops until the session reaches its
+//! ways x shots target, then evicts it and grows again — per-op latency
+//! percentiles are reported separately for learns, updates and
+//! classifies.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -673,6 +681,322 @@ pub fn run_stream(cfg: &StreamLoadConfig) -> Result<StreamReport> {
     })
 }
 
+// ---------------------------------------------------------------------------
+// Continual-learning mode
+// ---------------------------------------------------------------------------
+
+/// Session-id base for CL sessions, disjoint from both request-mode warmed
+/// sessions and stream sessions on the same server.
+const CL_SESSION_BASE: u64 = 1 << 41;
+
+/// Continual-learning load configuration: one growing-way session per
+/// connection.
+#[derive(Debug, Clone)]
+pub struct ClLoadConfig {
+    pub addr: String,
+    /// Concurrent CL sessions (one connection each).
+    pub connections: usize,
+    pub duration: Duration,
+    /// Target ways per session; reaching `ways` x `shots_per_way` evicts
+    /// the session and starts growing a fresh one.
+    pub ways: usize,
+    /// Target shots per way (grown one shot at a time: the first via
+    /// `LearnWay`, the rest via `AddShots`).
+    pub shots_per_way: usize,
+    /// Fraction of ops that are `ClassifySession` queries (the rest are
+    /// learning updates).
+    pub classify_frac: f64,
+    pub seed: u64,
+}
+
+impl Default for ClLoadConfig {
+    fn default() -> Self {
+        ClLoadConfig {
+            addr: "127.0.0.1:7070".to_string(),
+            connections: 4,
+            duration: Duration::from_secs(10),
+            ways: 50,
+            shots_per_way: 10,
+            classify_frac: 0.5,
+            seed: 1,
+        }
+    }
+}
+
+/// Outcome of one continual-learning load run.
+#[derive(Debug, Clone)]
+pub struct ClLoadReport {
+    pub sessions: usize,
+    pub ways_target: usize,
+    pub shots_target: usize,
+    /// `LearnWay` ops that succeeded (new ways opened).
+    pub learns: u64,
+    /// `AddShots` ops that succeeded (prototype updates).
+    pub adds: u64,
+    /// `ClassifySession` ops that succeeded.
+    pub classifies: u64,
+    /// Sessions that reached their ways x shots target and were evicted
+    /// to start a fresh trajectory.
+    pub completed_trajectories: u64,
+    pub overloaded: u64,
+    pub app_errors: u64,
+    /// Transport/framing failures — must be zero against a healthy server.
+    pub protocol_errors: u64,
+    pub wall: Duration,
+    /// Per-op latency, from each op's send (closed loop: a CL update
+    /// depends on the previous op's outcome, so arrivals cannot be
+    /// pre-drawn like the open-loop request mode).
+    pub learn_latency: HistSnapshot,
+    pub add_latency: HistSnapshot,
+    pub classify_latency: HistSnapshot,
+    /// Server-side aggregated metrics fetched after the run.
+    pub server: Option<MetricsWire>,
+}
+
+impl ClLoadReport {
+    /// Learning updates (learn + add) per second.
+    pub fn updates_per_sec(&self) -> f64 {
+        if self.wall.as_secs_f64() <= 0.0 {
+            0.0
+        } else {
+            (self.learns + self.adds) as f64 / self.wall.as_secs_f64()
+        }
+    }
+
+    pub fn report(&self) -> String {
+        let pct = |h: &HistSnapshot| {
+            format!(
+                "p50={:.0}us p95={:.0}us p99={:.0}us mean={:.0}us",
+                h.percentile_us(50.0),
+                h.percentile_us(95.0),
+                h.percentile_us(99.0),
+                h.mean_us(),
+            )
+        };
+        let mut s = format!(
+            "cl: {} session(s) growing to {} ways x {} shots -> \
+             {} learns / {} adds / {} classifies / {} trajectories completed\n\
+             {} overloaded / {} app errors / {} protocol errors in {:.2} s \
+             ({:.1} updates/s)\n\
+             learn latency    {}\nadd latency      {}\nclassify latency {}",
+            self.sessions,
+            self.ways_target,
+            self.shots_target,
+            self.learns,
+            self.adds,
+            self.classifies,
+            self.completed_trajectories,
+            self.overloaded,
+            self.app_errors,
+            self.protocol_errors,
+            self.wall.as_secs_f64(),
+            self.updates_per_sec(),
+            pct(&self.learn_latency),
+            pct(&self.add_latency),
+            pct(&self.classify_latency),
+        );
+        if let Some(m) = &self.server {
+            s.push_str("\nserver: ");
+            s.push_str(&m.report());
+        }
+        s
+    }
+}
+
+struct ClCounters {
+    learns: AtomicU64,
+    adds: AtomicU64,
+    classifies: AtomicU64,
+    completed: AtomicU64,
+    overloaded: AtomicU64,
+    app_errors: AtomicU64,
+    protocol_errors: AtomicU64,
+}
+
+/// Run the continual-learning load generator: each connection grows its
+/// own session one shot at a time — a new way via `LearnWay` when every
+/// existing way is full (or none exists), otherwise `AddShots` into the
+/// first unfilled way — interleaved with `ClassifySession` queries, until
+/// the duration elapses. A session that reaches its full ways x shots
+/// trajectory is evicted and regrown from scratch.
+pub fn run_cl(cfg: &ClLoadConfig) -> Result<ClLoadReport> {
+    if cfg.connections == 0 {
+        bail!("--connections must be at least 1");
+    }
+    if cfg.ways == 0 || cfg.shots_per_way == 0 {
+        bail!("--ways and --shots must be positive");
+    }
+    if !(0.0..=1.0).contains(&cfg.classify_frac) {
+        bail!("--classify-frac must be in [0, 1]");
+    }
+    let mut probe = Client::with_config(
+        &cfg.addr,
+        ClientConfig { timeout: Duration::from_secs(30), ..Default::default() },
+    )
+    .context("connecting to serve endpoint")?;
+    let health = probe.health().context("health probe")?;
+    let input_len = health.input_len as usize;
+
+    let counters = Arc::new(ClCounters {
+        learns: AtomicU64::new(0),
+        adds: AtomicU64::new(0),
+        classifies: AtomicU64::new(0),
+        completed: AtomicU64::new(0),
+        overloaded: AtomicU64::new(0),
+        app_errors: AtomicU64::new(0),
+        protocol_errors: AtomicU64::new(0),
+    });
+    let learn_hist = Arc::new(LatencyHistogram::new());
+    let add_hist = Arc::new(LatencyHistogram::new());
+    let classify_hist = Arc::new(LatencyHistogram::new());
+
+    let start = Instant::now();
+    let deadline = start + cfg.duration;
+    let mut workers = Vec::new();
+    for wid in 0..cfg.connections {
+        let counters = counters.clone();
+        let learn_hist = learn_hist.clone();
+        let add_hist = add_hist.clone();
+        let classify_hist = classify_hist.clone();
+        let addr = cfg.addr.clone();
+        let (seed, ways_target, shots_target, classify_frac) =
+            (cfg.seed, cfg.ways, cfg.shots_per_way, cfg.classify_frac);
+        workers.push(
+            std::thread::Builder::new()
+                .name(format!("clgen-{wid}"))
+                .spawn(move || -> Result<()> {
+                    let mut client = Client::connect(&addr)?;
+                    let session = CL_SESSION_BASE + wid as u64;
+                    // Start from a clean slate even if an earlier run left
+                    // this session behind on the server.
+                    let _ = client.evict_session(session);
+                    let mut rng =
+                        Rng::new(seed ^ (wid as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                    // Client-side view of the growing head, resynced from
+                    // each op's reply.
+                    let mut shots_per_way: Vec<usize> = Vec::new();
+                    while Instant::now() < deadline {
+                        let classify = !shots_per_way.is_empty() && rng.uniform() < classify_frac;
+                        if classify {
+                            let t0 = Instant::now();
+                            let result = client.call(&WireRequest::ClassifySession {
+                                session,
+                                input: rand_input(&mut rng, input_len),
+                            });
+                            classify_hist.record(t0.elapsed());
+                            match Outcome::of(&result) {
+                                Outcome::Ok => {
+                                    counters.classifies.fetch_add(1, Ordering::Relaxed);
+                                }
+                                Outcome::Overloaded => {
+                                    counters.overloaded.fetch_add(1, Ordering::Relaxed);
+                                }
+                                Outcome::AppError => {
+                                    counters.app_errors.fetch_add(1, Ordering::Relaxed);
+                                }
+                                Outcome::ProtocolError => {
+                                    counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                            continue;
+                        }
+                        // Learning update: deepen the first unfilled way,
+                        // else open a new way, else the trajectory is
+                        // complete — evict and regrow.
+                        let unfilled = shots_per_way.iter().position(|&s| s < shots_target);
+                        let (req, is_add, way) = match unfilled {
+                            Some(way) => (
+                                WireRequest::AddShots {
+                                    session,
+                                    way: way as u64,
+                                    shots: vec![rand_input(&mut rng, input_len)],
+                                },
+                                true,
+                                way,
+                            ),
+                            None if shots_per_way.len() < ways_target => (
+                                WireRequest::LearnWay {
+                                    session,
+                                    shots: vec![rand_input(&mut rng, input_len)],
+                                },
+                                false,
+                                shots_per_way.len(),
+                            ),
+                            None => {
+                                counters.completed.fetch_add(1, Ordering::Relaxed);
+                                let _ = client.evict_session(session);
+                                shots_per_way.clear();
+                                continue;
+                            }
+                        };
+                        let t0 = Instant::now();
+                        let result = client.call(&req);
+                        let hist = if is_add { &add_hist } else { &learn_hist };
+                        hist.record(t0.elapsed());
+                        match Outcome::of(&result) {
+                            Outcome::Ok => {
+                                if is_add {
+                                    shots_per_way[way] += 1;
+                                    counters.adds.fetch_add(1, Ordering::Relaxed);
+                                } else {
+                                    shots_per_way.push(1);
+                                    counters.learns.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                            Outcome::Overloaded => {
+                                counters.overloaded.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Outcome::AppError => {
+                                // The session was LRU-evicted under
+                                // cross-talk, or the server's way budget
+                                // is smaller than the --ways target
+                                // (WaysExhausted): evict and regrow from
+                                // scratch instead of re-issuing the same
+                                // doomed op in a hot loop.
+                                counters.app_errors.fetch_add(1, Ordering::Relaxed);
+                                let _ = client.evict_session(session);
+                                shots_per_way.clear();
+                            }
+                            Outcome::ProtocolError => {
+                                counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                    let _ = client.evict_session(session);
+                    Ok(())
+                })
+                .context("spawning cl worker")?,
+        );
+    }
+    for w in workers {
+        match w.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => return Err(e.context("cl worker failed")),
+            Err(_) => bail!("cl worker panicked"),
+        }
+    }
+    let wall = start.elapsed();
+
+    let server = probe.metrics().ok();
+    Ok(ClLoadReport {
+        sessions: cfg.connections,
+        ways_target: cfg.ways,
+        shots_target: cfg.shots_per_way,
+        learns: counters.learns.load(Ordering::Relaxed),
+        adds: counters.adds.load(Ordering::Relaxed),
+        classifies: counters.classifies.load(Ordering::Relaxed),
+        completed_trajectories: counters.completed.load(Ordering::Relaxed),
+        overloaded: counters.overloaded.load(Ordering::Relaxed),
+        app_errors: counters.app_errors.load(Ordering::Relaxed),
+        protocol_errors: counters.protocol_errors.load(Ordering::Relaxed),
+        wall,
+        learn_latency: learn_hist.snapshot(),
+        add_latency: add_hist.snapshot(),
+        classify_latency: classify_hist.snapshot(),
+        server,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -720,6 +1044,47 @@ mod tests {
         assert_eq!(counters.ok.load(Ordering::Relaxed), 1);
         assert_eq!(counters.overloaded.load(Ordering::Relaxed), 1);
         assert_eq!(counters.app_errors.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn cl_config_validation() {
+        let mut cfg = ClLoadConfig { connections: 0, ..Default::default() };
+        assert!(run_cl(&cfg).is_err());
+        cfg.connections = 1;
+        cfg.ways = 0;
+        assert!(run_cl(&cfg).is_err());
+        cfg.ways = 2;
+        cfg.shots_per_way = 0;
+        assert!(run_cl(&cfg).is_err());
+        cfg.shots_per_way = 2;
+        cfg.classify_frac = 1.5;
+        assert!(run_cl(&cfg).is_err());
+    }
+
+    #[test]
+    fn cl_report_formats() {
+        let r = ClLoadReport {
+            sessions: 2,
+            ways_target: 50,
+            shots_target: 10,
+            learns: 100,
+            adds: 900,
+            classifies: 500,
+            completed_trajectories: 1,
+            overloaded: 0,
+            app_errors: 0,
+            protocol_errors: 0,
+            wall: Duration::from_secs(2),
+            learn_latency: HistSnapshot::default(),
+            add_latency: HistSnapshot::default(),
+            classify_latency: HistSnapshot::default(),
+            server: None,
+        };
+        let s = r.report();
+        assert!(s.contains("100 learns"), "{s}");
+        assert!(s.contains("900 adds"), "{s}");
+        assert!(s.contains("add latency"), "{s}");
+        assert!((r.updates_per_sec() - 500.0).abs() < 1e-9);
     }
 
     #[test]

@@ -7,7 +7,8 @@
 //!
 //! * [`proto`]  — length-prefixed, versioned binary wire protocol (v2
 //!   adds the incremental stream ops; v3 adds tagged frames for request
-//!   pipelining and the `ClassifyBatch` op);
+//!   pipelining and the `ClassifyBatch` op; v4 adds the continual-
+//!   learning ops `AddShots`/`SessionInfo` and way-budget accounting);
 //! * [`server`] — thread-per-connection TCP server over N coordinator
 //!   shards, with a reader/dispatcher/writer split per connection so v3
 //!   requests pipeline (responses return in completion order): sessions
@@ -17,10 +18,10 @@
 //!   an explicit `Overloaded` wire error;
 //! * [`client`] — blocking client library with reconnect + timeouts plus
 //!   pipelined `submit`/`wait` primitives;
-//! * [`loadgen`] — open-loop load generators: Poisson request traffic
-//!   (optionally pipelined and/or batched) and paced streaming sessions,
-//!   all reporting p50/p95/p99 latency from the shared fixed-bucket
-//!   histogram.
+//! * [`loadgen`] — load generators: open-loop Poisson request traffic
+//!   (optionally pipelined and/or batched), paced streaming sessions, and
+//!   growing-way continual-learning sessions (`--cl`), all reporting
+//!   p50/p95/p99 latency from the shared fixed-bucket histogram.
 //!
 //! Quickstart (no artifacts needed — uses the built-in demo model):
 //!
@@ -29,6 +30,7 @@
 //! cargo run --release -- loadgen --rps 200 --duration 10 --learn-frac 0.05
 //! cargo run --release -- loadgen --rps 2000 --pipeline 32 --batch 16
 //! cargo run --release -- loadgen --stream --chunk 8 --hop 4 --duration 10
+//! cargo run --release -- loadgen --cl --ways 50 --shots 10 --duration 10
 //! ```
 
 pub mod client;
@@ -37,9 +39,11 @@ pub mod proto;
 pub mod server;
 
 pub use client::{Client, ClientConfig, Outcome};
-pub use loadgen::{LoadReport, LoadgenConfig, StreamLoadConfig, StreamReport};
+pub use loadgen::{
+    ClLoadConfig, ClLoadReport, LoadReport, LoadgenConfig, StreamLoadConfig, StreamReport,
+};
 pub use proto::{
-    BatchItem, ErrorCode, HealthWire, MetricsWire, RequestFrame, ResponseFrame, WireDecision,
-    WireReply, WireRequest, WireResponse,
+    BatchItem, ErrorCode, HealthWire, MetricsWire, RequestFrame, ResponseFrame, SessionInfoWire,
+    WireDecision, WireReply, WireRequest, WireResponse,
 };
 pub use server::{shard_of, ServeConfig, Server};

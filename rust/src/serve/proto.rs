@@ -26,6 +26,8 @@
 //! | `0x08` | v2    | request   | `StreamPush { session: u64, samples: bytes }` |
 //! | `0x09` | v2    | request   | `StreamClose { session: u64 }` |
 //! | `0x0A` | v3    | request   | `ClassifyBatch { inputs: list<bytes> }` |
+//! | `0x0B` | v4    | request   | `AddShots { session: u64, way: u64, shots: list<bytes> }` |
+//! | `0x0C` | v4    | request   | `SessionInfo { session: u64 }` |
 //! | `0x81` | v1    | response  | `Reply { predicted?, logits?, learned_way?, cycles? }` |
 //! | `0x82` | v1    | response  | `Health { shards, sessions, input_len, embed_dim, window (v2), channels (v2) }` |
 //! | `0x83` | v1    | response  | `Metrics { counters..., latency percentiles }` |
@@ -34,6 +36,7 @@
 //! | `0x86` | v2    | response  | `StreamDecisions(list<decision>)` |
 //! | `0x87` | v2    | response  | `StreamClosed { existed: u8, windows: u64 }` |
 //! | `0x88` | v3    | response  | `ReplyBatch(list<item>)` |
+//! | `0x89` | v4    | response  | `SessionInfo { exists, ways, shots, bytes_used, bytes_per_way, way_cap }` |
 //! | `0xFF` | v1    | response  | `Error { code: u8, message: string }` |
 //!
 //! # Versioning
@@ -45,9 +48,21 @@
 //! simply decode as zero; the v3 `request_id` tag is absent and reads as
 //! 0). The server replies **at the requester's version**
 //! ([`encode_response_versioned`]), omitting newer payload fields and the
-//! tag from older frames, so strict v1/v2 clients keep working against a
-//! v3 server. Version-gated opcodes (streams in v2, batch in v3) inside an
-//! older frame are malformed.
+//! tag from older frames, so strict v1/v2/v3 clients keep working against
+//! a v4 server. Version-gated opcodes (streams in v2, batch in v3, the
+//! continual-learning ops in v4) inside an older frame are malformed.
+//!
+//! # Continual learning (v4)
+//!
+//! `AddShots` folds new support shots into an *already learned* way of a
+//! session's prototypical head by running mean — bit-identical to having
+//! learned the way from the concatenated shot set — and is answered with
+//! a `Reply` whose `learned_way` echoes the updated way. `SessionInfo`
+//! reports a session's learned state and its memory accounting (ways,
+//! total shots, `bytes_used = ways * bytes_per_way`, and the server's
+//! way cap; `way_cap = 0` means unbounded). Learn ops against a full way
+//! budget answer a typed `App` error naming `WaysExhausted`. `Metrics`
+//! gains the v4 `add_shots` counter.
 //!
 //! # Pipelining (v3)
 //!
@@ -76,7 +91,7 @@ use anyhow::{bail, Result};
 
 /// Highest protocol version this build speaks; every encoded frame
 /// carries it.
-pub const VERSION: u8 = 3;
+pub const VERSION: u8 = 4;
 
 /// Oldest protocol version still accepted on decode.
 pub const MIN_VERSION: u8 = 1;
@@ -101,6 +116,8 @@ const OP_STREAM_OPEN: u8 = 0x07;
 const OP_STREAM_PUSH: u8 = 0x08;
 const OP_STREAM_CLOSE: u8 = 0x09;
 const OP_CLASSIFY_BATCH: u8 = 0x0A;
+const OP_ADD_SHOTS: u8 = 0x0B;
+const OP_SESSION_INFO: u8 = 0x0C;
 
 // Response opcodes.
 const OP_REPLY: u8 = 0x81;
@@ -111,6 +128,7 @@ const OP_STREAM_OPENED: u8 = 0x85;
 const OP_STREAM_DECISIONS: u8 = 0x86;
 const OP_STREAM_CLOSED: u8 = 0x87;
 const OP_REPLY_BATCH: u8 = 0x88;
+const OP_SESSION_INFO_REPLY: u8 = 0x89;
 const OP_ERROR: u8 = 0xFF;
 
 /// Client -> server messages.
@@ -141,6 +159,12 @@ pub enum WireRequest {
     /// them out across shards and answers with a `ReplyBatch` in input
     /// order.
     ClassifyBatch { inputs: Vec<Vec<u8>> },
+    /// v4: fold new support shots into an already learned way of a
+    /// session's head (continual learning); answered with a `Reply` whose
+    /// `learned_way` echoes the updated way.
+    AddShots { session: u64, way: u64, shots: Vec<Vec<u8>> },
+    /// v4: report a session's learned state and memory accounting.
+    SessionInfo { session: u64 },
 }
 
 /// Server -> client messages.
@@ -159,7 +183,42 @@ pub enum WireResponse {
     StreamClosed { existed: bool, windows: u64 },
     /// v3: one item per `ClassifyBatch` window, in input order.
     ReplyBatch(Vec<BatchItem>),
+    /// v4: a session's learned state + way-budget accounting.
+    SessionInfo(SessionInfoWire),
     Error { code: ErrorCode, message: String },
+}
+
+/// v4 `SessionInfo` payload: the session's continual-learning state and
+/// the way-budget math a client needs for capacity planning
+/// (`bytes_used = ways * bytes_per_way`; `way_cap = 0` means unbounded).
+/// `bytes_per_way` and `way_cap` are deployment constants, reported even
+/// for sessions that do not (yet) exist.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SessionInfoWire {
+    pub exists: bool,
+    /// Ways learned so far.
+    pub ways: u64,
+    /// Total support shots absorbed across all ways.
+    pub shots: u64,
+    /// Prototype memory in use: `ways * bytes_per_way`.
+    pub bytes_used: u64,
+    /// Per-way cost in bytes: `ceil(V/2) + 2` (paper: ~26 B at V = 48).
+    pub bytes_per_way: u32,
+    /// Server-side way cap per session (0 = unbounded).
+    pub way_cap: u64,
+}
+
+impl From<crate::coordinator::server::SessionInfoData> for SessionInfoWire {
+    fn from(s: crate::coordinator::server::SessionInfoData) -> SessionInfoWire {
+        SessionInfoWire {
+            exists: s.exists,
+            ways: s.ways,
+            shots: s.shots,
+            bytes_used: s.bytes_used,
+            bytes_per_way: s.bytes_per_way,
+            way_cap: s.way_cap,
+        }
+    }
 }
 
 /// One `ClassifyBatch` outcome: windows succeed or fail independently, so
@@ -223,6 +282,9 @@ pub struct MetricsWire {
     /// v3: handler panics caught by workers (the shard survived each one);
     /// 0 from a pre-v3 peer.
     pub worker_panics: u64,
+    /// v4: continual-learning `AddShots` ops applied; 0 from a pre-v4
+    /// peer.
+    pub add_shots: u64,
     pub mean_latency_us: f64,
     pub p50_latency_us: f64,
     pub p95_latency_us: f64,
@@ -242,6 +304,7 @@ impl From<&crate::coordinator::metrics::MetricsSnapshot> for MetricsWire {
             stream_chunks: s.stream_chunks,
             stream_decisions: s.stream_decisions,
             worker_panics: s.worker_panics,
+            add_shots: s.add_shots,
             mean_latency_us: s.mean_latency_us,
             p50_latency_us: s.p50_latency_us,
             p95_latency_us: s.p95_latency_us,
@@ -257,7 +320,7 @@ impl MetricsWire {
     pub fn report(&self) -> String {
         format!(
             "requests={} completed={} errors={} worker_panics={} rejected={} learned_ways={} \
-             evictions={} stream_chunks={} stream_decisions={} \
+             add_shots={} evictions={} stream_chunks={} stream_decisions={} \
              latency mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us sim_cycles={}",
             self.requests,
             self.completed,
@@ -265,6 +328,7 @@ impl MetricsWire {
             self.worker_panics,
             self.rejected,
             self.learn_ways,
+            self.add_shots,
             self.evictions,
             self.stream_chunks,
             self.stream_decisions,
@@ -387,16 +451,17 @@ fn head(v: u8, opcode: u8, request_id: u64) -> Vec<u8> {
 }
 
 /// Lowest protocol version that can carry this request (streams: v2,
-/// batch: v3). Clients speaking an older version must refuse such ops
-/// rather than silently up-version the frame — a server treats any v3
-/// frame as pipelined, which would break an in-order client's response
-/// matching.
+/// batch: v3, continual-learning ops: v4). Clients speaking an older
+/// version must refuse such ops rather than silently up-version the
+/// frame — a server treats any v3+ frame as pipelined, which would break
+/// an in-order client's response matching.
 pub fn request_min_version(req: &WireRequest) -> u8 {
     match req {
         WireRequest::StreamOpen { .. }
         | WireRequest::StreamPush { .. }
         | WireRequest::StreamClose { .. } => 2,
         WireRequest::ClassifyBatch { .. } => 3,
+        WireRequest::AddShots { .. } | WireRequest::SessionInfo { .. } => 4,
         _ => 1,
     }
 }
@@ -408,6 +473,7 @@ fn response_min_version(resp: &WireResponse) -> u8 {
         | WireResponse::StreamDecisions(_)
         | WireResponse::StreamClosed { .. } => 2,
         WireResponse::ReplyBatch(_) => 3,
+        WireResponse::SessionInfo(_) => 4,
         _ => 1,
     }
 }
@@ -424,6 +490,8 @@ fn request_opcode(req: &WireRequest) -> u8 {
         WireRequest::StreamPush { .. } => OP_STREAM_PUSH,
         WireRequest::StreamClose { .. } => OP_STREAM_CLOSE,
         WireRequest::ClassifyBatch { .. } => OP_CLASSIFY_BATCH,
+        WireRequest::AddShots { .. } => OP_ADD_SHOTS,
+        WireRequest::SessionInfo { .. } => OP_SESSION_INFO,
     }
 }
 
@@ -437,6 +505,7 @@ fn response_opcode(resp: &WireResponse) -> u8 {
         WireResponse::StreamDecisions(_) => OP_STREAM_DECISIONS,
         WireResponse::StreamClosed { .. } => OP_STREAM_CLOSED,
         WireResponse::ReplyBatch(_) => OP_REPLY_BATCH,
+        WireResponse::SessionInfo(_) => OP_SESSION_INFO_REPLY,
         WireResponse::Error { .. } => OP_ERROR,
     }
 }
@@ -485,6 +554,15 @@ pub fn encode_request_versioned(req: &WireRequest, version: u8, request_id: u64)
                 put_bytes(&mut b, x);
             }
         }
+        WireRequest::AddShots { session, way, shots } => {
+            put_u64(&mut b, *session);
+            put_u64(&mut b, *way);
+            put_u32(&mut b, shots.len() as u32);
+            for s in shots {
+                put_bytes(&mut b, s);
+            }
+        }
+        WireRequest::SessionInfo { session } => put_u64(&mut b, *session),
     }
     prepend_len(&mut b);
     b
@@ -531,6 +609,9 @@ pub fn encode_response_versioned(resp: &WireResponse, version: u8, request_id: u
             if v >= 3 {
                 put_u64(&mut b, m.worker_panics);
             }
+            if v >= 4 {
+                put_u64(&mut b, m.add_shots);
+            }
             for c in [m.mean_latency_us, m.p50_latency_us, m.p95_latency_us, m.p99_latency_us] {
                 put_f64(&mut b, c);
             }
@@ -571,6 +652,14 @@ pub fn encode_response_versioned(resp: &WireResponse, version: u8, request_id: u
                     }
                 }
             }
+        }
+        WireResponse::SessionInfo(si) => {
+            b.push(u8::from(si.exists));
+            put_u64(&mut b, si.ways);
+            put_u64(&mut b, si.shots);
+            put_u64(&mut b, si.bytes_used);
+            put_u32(&mut b, si.bytes_per_way);
+            put_u64(&mut b, si.way_cap);
         }
         WireResponse::Error { code, message } => {
             b.push(code.as_u8());
@@ -714,6 +803,14 @@ fn require_v3(version: u8, op: &str) -> Result<()> {
     Ok(())
 }
 
+/// The continual-learning opcodes only exist from protocol v4 on.
+fn require_v4(version: u8, op: &str) -> Result<()> {
+    if version < 4 {
+        bail!("{op} requires protocol v4 (frame carries v{version})");
+    }
+    Ok(())
+}
+
 /// Decode a request frame body (after the length prefix).
 pub fn decode_request(frame_body: &[u8]) -> Result<RequestFrame> {
     let (version, opcode, request_id, mut c) = header(frame_body)?;
@@ -761,6 +858,26 @@ pub fn decode_request(frame_body: &[u8]) -> Result<RequestFrame> {
             }
             WireRequest::ClassifyBatch { inputs }
         }
+        OP_ADD_SHOTS => {
+            require_v4(version, "AddShots")?;
+            let session = c.u64()?;
+            let way = c.u64()?;
+            // Same hostile-count bound as LearnWay: reject before the
+            // count can drive allocation.
+            let n = c.u32()? as usize;
+            if n > MAX_LIST {
+                bail!("add-shots frame with {n} shots");
+            }
+            let mut shots = Vec::with_capacity(n);
+            for _ in 0..n {
+                shots.push(c.bytes()?);
+            }
+            WireRequest::AddShots { session, way, shots }
+        }
+        OP_SESSION_INFO => {
+            require_v4(version, "SessionInfo")?;
+            WireRequest::SessionInfo { session: c.u64()? }
+        }
         op => bail!("unknown request opcode {op:#04x}"),
     };
     c.finish()?;
@@ -804,6 +921,9 @@ pub fn decode_response(frame_body: &[u8]) -> Result<ResponseFrame> {
             }
             if version >= 3 {
                 m.worker_panics = c.u64()?;
+            }
+            if version >= 4 {
+                m.add_shots = c.u64()?;
             }
             m.mean_latency_us = c.f64()?;
             m.p50_latency_us = c.f64()?;
@@ -867,6 +987,17 @@ pub fn decode_response(frame_body: &[u8]) -> Result<ResponseFrame> {
                 });
             }
             WireResponse::ReplyBatch(items)
+        }
+        OP_SESSION_INFO_REPLY => {
+            require_v4(version, "SessionInfo")?;
+            WireResponse::SessionInfo(SessionInfoWire {
+                exists: c.u8()? != 0,
+                ways: c.u64()?,
+                shots: c.u64()?,
+                bytes_used: c.u64()?,
+                bytes_per_way: c.u32()?,
+                way_cap: c.u64()?,
+            })
         }
         OP_ERROR => WireResponse::Error {
             code: ErrorCode::from_u8(c.u8()?)?,
@@ -1024,6 +1155,14 @@ mod tests {
         rt_request(WireRequest::ClassifyBatch {
             inputs: vec![vec![1, 2, 3], vec![], vec![15; 64]],
         });
+        rt_request(WireRequest::AddShots { session: 7, way: 0, shots: vec![] });
+        rt_request(WireRequest::AddShots {
+            session: u64::MAX,
+            way: 249,
+            shots: vec![vec![1, 2, 3], vec![], vec![15; 100]],
+        });
+        rt_request(WireRequest::SessionInfo { session: 0 });
+        rt_request(WireRequest::SessionInfo { session: u64::MAX });
     }
 
     #[test]
@@ -1054,6 +1193,7 @@ mod tests {
             stream_chunks: 8,
             stream_decisions: 9,
             worker_panics: 10,
+            add_shots: 11,
             mean_latency_us: 1.5,
             p50_latency_us: 2.5,
             p95_latency_us: 100.0,
@@ -1087,6 +1227,15 @@ mod tests {
             BatchItem::Reply(WireReply::default()),
             BatchItem::Error { code: ErrorCode::App, message: String::new() },
         ]));
+        rt_response(WireResponse::SessionInfo(SessionInfoWire::default()));
+        rt_response(WireResponse::SessionInfo(SessionInfoWire {
+            exists: true,
+            ways: 250,
+            shots: 2500,
+            bytes_used: 250 * 26,
+            bytes_per_way: 26,
+            way_cap: u64::MAX,
+        }));
         for code in [ErrorCode::Overloaded, ErrorCode::Malformed, ErrorCode::App] {
             rt_response(WireResponse::Error { code, message: "queue full".into() });
         }
@@ -1119,13 +1268,24 @@ mod tests {
             }
             other => panic!("expected Health, got {other:?}"),
         }
-        // Metrics at v2 keep the stream counters but lose worker_panics.
+        // Metrics at v3 keep the panic counter but lose the v4 add_shots.
         let m = MetricsWire {
             stream_chunks: 7,
             stream_decisions: 9,
             worker_panics: 3,
+            add_shots: 4,
             ..MetricsWire::default()
         };
+        let frame = encode_response_versioned(&WireResponse::Metrics(m.clone()), 3, 0);
+        assert_eq!(frame[4], 3);
+        match decode_response(&frame[4..]).unwrap().resp {
+            WireResponse::Metrics(got) => {
+                assert_eq!(got.worker_panics, 3);
+                assert_eq!(got.add_shots, 0, "v4 field dropped at v3");
+            }
+            other => panic!("expected Metrics, got {other:?}"),
+        }
+        // ... at v2 also lose worker_panics ...
         let frame = encode_response_versioned(&WireResponse::Metrics(m.clone()), 2, 0);
         assert_eq!(frame[4], 2);
         match decode_response(&frame[4..]).unwrap().resp {
@@ -1133,6 +1293,7 @@ mod tests {
                 assert_eq!(got.stream_chunks, 7);
                 assert_eq!(got.stream_decisions, 9);
                 assert_eq!(got.worker_panics, 0, "v3 field dropped at v2");
+                assert_eq!(got.add_shots, 0);
             }
             other => panic!("expected Metrics, got {other:?}"),
         }
@@ -1143,15 +1304,23 @@ mod tests {
                 assert_eq!(got.stream_chunks, 0);
                 assert_eq!(got.stream_decisions, 0);
                 assert_eq!(got.worker_panics, 0);
+                assert_eq!(got.add_shots, 0);
             }
             other => panic!("expected Metrics, got {other:?}"),
         }
-        // Stream responses cannot drop below v2; batch not below v3.
+        // Stream responses cannot drop below v2; batch not below v3;
+        // continual-learning info not below v4.
         let frame =
             encode_response_versioned(&WireResponse::StreamOpened { window: 16, hop: 4 }, 1, 0);
         assert_eq!(frame[4], 2);
         let frame = encode_response_versioned(&WireResponse::ReplyBatch(vec![]), 1, 0);
         assert_eq!(frame[4], 3);
+        let frame = encode_response_versioned(
+            &WireResponse::SessionInfo(SessionInfoWire::default()),
+            1,
+            0,
+        );
+        assert_eq!(frame[4], 4);
         // Out-of-range versions clamp instead of producing junk frames.
         let frame = encode_response_versioned(&WireResponse::Evicted { existed: true }, 9, 0);
         assert_eq!(frame[4], VERSION);
@@ -1218,6 +1387,67 @@ mod tests {
         let mut body = vec![2u8, OP_REPLY_BATCH];
         put_u32(&mut body, 0);
         assert!(decode_response(&body).is_err());
+        // Continual-learning ops inside a v3 frame are malformed (and a
+        // fortiori inside v1/v2 frames, which also lack the tag).
+        let mut body = head(3, OP_ADD_SHOTS, 0);
+        put_u64(&mut body, 1);
+        put_u64(&mut body, 0);
+        put_u32(&mut body, 0);
+        let err = decode_request(&body).unwrap_err();
+        assert!(format!("{err:#}").contains("v4"), "{err:#}");
+        let mut body = head(3, OP_SESSION_INFO, 0);
+        put_u64(&mut body, 1);
+        assert!(decode_request(&body).is_err(), "v3 frame must not carry SessionInfo");
+        let mut body = vec![2u8, OP_SESSION_INFO];
+        put_u64(&mut body, 1);
+        assert!(decode_request(&body).is_err());
+        let mut body = head(3, OP_SESSION_INFO_REPLY, 0);
+        body.push(0);
+        for _ in 0..3 {
+            put_u64(&mut body, 0);
+        }
+        put_u32(&mut body, 0);
+        put_u64(&mut body, 0);
+        assert!(decode_response(&body).is_err(), "v3 frame must not carry a SessionInfo reply");
+    }
+
+    #[test]
+    fn v4_payloads_reject_truncation_and_trailing_bytes() {
+        // Every cut of a well-formed AddShots / SessionInfo frame fails
+        // decode (nothing decodes "by luck" into a shorter message), and
+        // trailing bytes after the payload are malformed too.
+        let frames = [
+            encode_request(&WireRequest::AddShots {
+                session: 5,
+                way: 3,
+                shots: vec![vec![1, 2], vec![3]],
+            }),
+            encode_request(&WireRequest::SessionInfo { session: 5 }),
+        ];
+        for frame in &frames {
+            let blob = &frame[4..];
+            for cut in 2..blob.len() {
+                assert!(decode_request(&blob[..cut]).is_err(), "cut at {cut} must fail");
+            }
+            let mut long = blob.to_vec();
+            long.push(0);
+            assert!(decode_request(&long).is_err(), "trailing byte must fail");
+        }
+        let frame = encode_response(&WireResponse::SessionInfo(SessionInfoWire {
+            exists: true,
+            ways: 3,
+            shots: 30,
+            bytes_used: 18,
+            bytes_per_way: 6,
+            way_cap: 250,
+        }));
+        let blob = &frame[4..];
+        for cut in 2..blob.len() {
+            assert!(decode_response(&blob[..cut]).is_err(), "cut at {cut} must fail");
+        }
+        let mut long = blob.to_vec();
+        long.push(0);
+        assert!(decode_response(&long).is_err());
     }
 
     #[test]
@@ -1287,6 +1517,25 @@ mod tests {
         assert!(decode_request(&body).is_err());
         let mut body = head(VERSION, OP_CLASSIFY_BATCH, 0);
         put_u32(&mut body, u32::MAX);
+        assert!(decode_request(&body).is_err());
+        // AddShots shares LearnWay's hostile-count bound: both the first
+        // count past the limit and a u32::MAX count fail before any
+        // allocation can happen.
+        for hostile in [(MAX_LIST + 1) as u32, u32::MAX] {
+            let mut body = head(VERSION, OP_ADD_SHOTS, 0);
+            put_u64(&mut body, 1);
+            put_u64(&mut body, 0);
+            put_u32(&mut body, hostile);
+            let err = decode_request(&body).unwrap_err();
+            assert!(format!("{err:#}").contains("shots"), "{err:#}");
+        }
+        // A hostile per-shot byte length inside an AddShots list is
+        // bounded by the frame cap too.
+        let mut body = head(VERSION, OP_ADD_SHOTS, 0);
+        put_u64(&mut body, 1);
+        put_u64(&mut body, 0);
+        put_u32(&mut body, 1);
+        put_u32(&mut body, u32::MAX); // shot claims 4 GiB
         assert!(decode_request(&body).is_err());
     }
 }

@@ -56,6 +56,9 @@ pub struct ServeConfig {
     pub queue_depth: usize,
     /// LRU session cap per shard.
     pub max_sessions: usize,
+    /// Per-session prototype-memory budget in bytes (0 = unbounded) — the
+    /// continual-learning way cap, enforced per session on its shard.
+    pub way_budget_bytes: usize,
     /// Per-connection socket read timeout; connections poll the shutdown
     /// flag at this granularity.
     pub read_timeout: Duration,
@@ -69,6 +72,7 @@ impl Default for ServeConfig {
             workers_per_shard: 2,
             queue_depth: 256,
             max_sessions: 1024,
+            way_budget_bytes: 0,
             read_timeout: Duration::from_millis(250),
         }
     }
@@ -122,6 +126,7 @@ impl Server {
                     workers: cfg.workers_per_shard.max(1),
                     queue_depth: cfg.queue_depth,
                     max_sessions: cfg.max_sessions,
+                    way_budget_bytes: cfg.way_budget_bytes,
                 },
             )
             .with_context(|| format!("starting shard {shard}"))?;
@@ -429,6 +434,31 @@ where
                 Request::LearnWay { session, shots, reply },
             );
         }
+        // Continual-learning ops are session-scoped like LearnWay: the
+        // same stable hash keeps a session's accumulators on one shard.
+        WireRequest::AddShots { session, way, shots } => {
+            let reply = ReplySink::call(move |res| out(fold_response(res)));
+            // The wire carries the way as u64; on targets where that
+            // exceeds usize, a plain cast would silently wrap onto an
+            // unrelated (likely existing) way — reject instead.
+            match usize::try_from(way) {
+                Ok(way) => submit_or_reject(
+                    &state.shards[shard_of(session, n)],
+                    Request::AddShots { session, way, shots, reply },
+                ),
+                Err(_) => {
+                    let e = anyhow!("way {way} exceeds this host's addressable range");
+                    reply.deliver(Err(e));
+                }
+            }
+        }
+        WireRequest::SessionInfo { session } => {
+            let reply = ReplySink::call(move |res| out(fold_response(res)));
+            submit_or_reject(
+                &state.shards[shard_of(session, n)],
+                Request::SessionInfo { session, reply },
+            );
+        }
         WireRequest::EvictSession { session } => {
             let reply = ReplySink::call(move |res| out(fold_response(res)));
             submit_or_reject(
@@ -678,6 +708,8 @@ fn fold_response(res: Result<crate::coordinator::Response>) -> WireResponse {
                 )
             } else if let Some((existed, windows)) = resp.stream_closed {
                 WireResponse::StreamClosed { existed, windows }
+            } else if let Some(si) = resp.session_info {
+                WireResponse::SessionInfo(si.into())
             } else {
                 WireResponse::Reply(WireReply {
                     predicted: resp.predicted.map(|p| p as u64),

@@ -56,7 +56,7 @@ impl<'m> LearningController<'m> {
         for shot in shots {
             let r = self.sim.run(shot, &self.schedule)?;
             trace.merge(&r.trace);
-            acc.add_shot(&r.embedding);
+            acc.add_shot(&r.embedding)?;
         }
 
         // Step 2: prototype accumulation — k embeddings of V dims streamed
@@ -80,8 +80,8 @@ impl<'m> LearningController<'m> {
         debug_assert_eq!(step2 + step3, learning_cycles(k, v));
 
         // The extractor writes the new FC column straight from the
-        // accumulated prototype state.
-        self.head.ways.push(acc.extract());
+        // accumulated prototype state (typed failure past the way cap).
+        self.head.push_way(acc)?;
         Ok(trace)
     }
 

@@ -19,7 +19,8 @@ use anyhow::{bail, Context, Result};
 use crate::coordinator::server::EngineFactory;
 use crate::coordinator::Engine;
 use crate::golden::{self, ExecMode, PreparedModel};
-use crate::model::{demo_tiny_kws, QLayer, QuantModel};
+use crate::model::{demo_tiny, demo_tiny_kws, QLayer, QuantModel};
+use crate::protonet::ProtoHead;
 use crate::serve::loadgen::{self, LoadgenConfig};
 use crate::serve::{BatchItem, Client, ServeConfig, Server};
 use crate::util::bench::{fmt_si, Table};
@@ -398,6 +399,163 @@ pub fn run_serve_suite(quick: bool) -> Result<Vec<PerfRow>> {
             .push("prepared_vs_naive", rate(n, t_seq.total) / rate(n, t_naive.total)),
     );
     Ok(rows)
+}
+
+/// Continual-learning suite: the paper's Fig. 15 trajectory shape —
+/// `n_ways` classes learned with `k_shots` shots each — run **over the
+/// wire** against a loopback server on the built-in headless `tiny`
+/// model, artifact-free, with the incremental path cross-checked against
+/// all-at-once learning while it is timed.
+///
+/// Two sessions grow side by side from identical shot streams:
+///
+/// * session A learns each way **incrementally** — one `LearnWay` shot,
+///   then the rest folded in via protocol-v4 `AddShots` calls (the
+///   running-mean update);
+/// * session B learns each way from the full shot set in one `LearnWay`.
+///
+/// At every checkpoint the two sessions must answer **bit-identical**
+/// logits (the add-shots-vs-learn-way invariant, end to end through
+/// engine embedding, prepared-head caching and the wire), and session A's
+/// `SessionInfo` must report exact way/shot/byte accounting
+/// (`bytes_used = ways * bytes_per_way`). The server's way budget is set
+/// to exactly `n_ways` ways, so the run also proves the budget holds: one
+/// extra learn past the trajectory must fail with the typed
+/// `WaysExhausted` application error.
+pub fn run_cl_trajectory(n_ways: usize, k_shots: usize) -> Result<Vec<PerfRow>> {
+    anyhow::ensure!(n_ways >= 1 && k_shots >= 1, "need at least 1 way and 1 shot");
+    let model = Arc::new(demo_tiny());
+    let bytes_per_way = ProtoHead::bytes_per_way_of(model.embed_dim);
+    let budget = n_ways * bytes_per_way;
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        shards: 1,
+        workers_per_shard: 2,
+        way_budget_bytes: budget,
+        ..Default::default()
+    };
+    let m = model.clone();
+    let server = Server::start(cfg, move |_shard, _worker| {
+        let m = m.clone();
+        Box::new(move || Ok(Engine::golden(m))) as EngineFactory
+    })?;
+    let mut client = Client::connect(server.local_addr().to_string())?;
+    let (sess_a, sess_b) = (1u64, 2u64);
+    let input_len = model.seq_len * model.in_channels;
+    let mut rng = Rng::new(0xC1_2500 ^ n_ways as u64);
+    let rand_in = |rng: &mut Rng| -> Vec<u8> {
+        (0..input_len).map(|_| rng.below(16) as u8).collect()
+    };
+
+    let checkpoint_every = (n_ways / 10).max(1);
+    let mut update_us = Vec::new(); // learn + add ops on session A
+    let mut update_total = Duration::ZERO;
+    let mut classify_us = Vec::new();
+    let mut classify_total = Duration::ZERO;
+    for way in 0..n_ways {
+        let shots: Vec<Vec<u8>> = (0..k_shots).map(|_| rand_in(&mut rng)).collect();
+        // Session A: first shot opens the way, the rest stream in via
+        // AddShots, split across up to three calls so multi-shot and
+        // single-shot updates are both exercised.
+        let t = Instant::now();
+        let r = client.learn_way(sess_a, vec![shots[0].clone()])?;
+        let dt = t.elapsed();
+        update_us.push(dt.as_secs_f64() * 1e6);
+        update_total += dt;
+        anyhow::ensure!(r.learned_way == Some(way as u64), "way order must be deterministic");
+        let rest = &shots[1..];
+        for chunk in rest.chunks(rest.len().div_ceil(2).max(1)) {
+            let t = Instant::now();
+            let r = client.add_shots(sess_a, way as u64, chunk.to_vec())?;
+            let dt = t.elapsed();
+            update_us.push(dt.as_secs_f64() * 1e6);
+            update_total += dt;
+            anyhow::ensure!(r.learned_way == Some(way as u64), "add echoes its way");
+        }
+        // Session B: the same shots, learned all at once.
+        client.learn_way(sess_b, shots)?;
+
+        let ways_now = way + 1;
+        if ways_now % checkpoint_every == 0 || ways_now == n_ways {
+            // Byte accounting must be exact at every checkpoint.
+            let info = client.session_info(sess_a)?;
+            anyhow::ensure!(info.exists, "session A exists");
+            anyhow::ensure!(info.ways == ways_now as u64, "ways {} != {ways_now}", info.ways);
+            anyhow::ensure!(
+                info.shots == (ways_now * k_shots) as u64,
+                "shots {} != {}",
+                info.shots,
+                ways_now * k_shots
+            );
+            anyhow::ensure!(info.bytes_per_way == bytes_per_way as u32);
+            anyhow::ensure!(
+                info.bytes_used == (ways_now * bytes_per_way) as u64,
+                "bytes_used {} != ways * bytes_per_way = {}",
+                info.bytes_used,
+                ways_now * bytes_per_way
+            );
+            anyhow::ensure!(info.way_cap == n_ways as u64, "cap derives from the budget");
+            // Incremental vs all-at-once: bit-identical logits per query.
+            for _ in 0..2 {
+                let q = rand_in(&mut rng);
+                let t = Instant::now();
+                let a = client.classify_session(sess_a, q.clone())?;
+                let dt = t.elapsed();
+                classify_us.push(dt.as_secs_f64() * 1e6);
+                classify_total += dt;
+                let b = client.classify_session(sess_b, q)?;
+                if a.logits != b.logits || a.predicted != b.predicted {
+                    bail!(
+                        "way {ways_now}: incremental session diverged from all-at-once \
+                         (a={:?}/{:?} b={:?}/{:?})",
+                        a.predicted,
+                        a.logits,
+                        b.predicted,
+                        b.logits
+                    );
+                }
+            }
+        }
+    }
+    // The way budget is exactly full: one more learn must fail typed.
+    match client.learn_way(sess_a, vec![rand_in(&mut rng)]) {
+        Err(e) if format!("{e:#}").contains("ways exhausted") => {}
+        Err(e) => bail!("expected WaysExhausted past the budget, got: {e:#}"),
+        Ok(_) => bail!("learning past the {n_ways}-way budget must fail"),
+    }
+    let info = client.session_info(sess_a)?;
+    anyhow::ensure!(info.ways == n_ways as u64, "failed learn must not grow the head");
+    drop(client);
+    server.shutdown();
+
+    let n_updates = update_us.len();
+    let n_classifies = classify_us.len();
+    Ok(vec![
+        latency_row(
+            "cl/updates",
+            "updates_per_sec",
+            n_updates,
+            &Timing { total: update_total, samples_us: update_us },
+        ),
+        latency_row(
+            "cl/classify",
+            "classifies_per_sec",
+            n_classifies,
+            &Timing { total: classify_total, samples_us: classify_us },
+        ),
+        PerfRow::new("cl/trajectory")
+            .push("ways", n_ways as f64)
+            .push("shots_per_way", k_shots as f64)
+            .push("bytes_per_way", bytes_per_way as f64)
+            .push("final_bytes", (n_ways * bytes_per_way) as f64),
+    ])
+}
+
+/// The CL suite as run by `chameleon bench` / CI: the Fig. 15 shape —
+/// 250 ways x 10 shots (60 ways under `--quick` so the CI gate stays
+/// fast; the full 250-way run is tier-1-tested in `tests/cl_bitexact.rs`).
+pub fn run_cl_suite(quick: bool) -> Result<Vec<PerfRow>> {
+    run_cl_trajectory(if quick { 60 } else { 250 }, 10)
 }
 
 /// Default directory for the `BENCH_*.json` trajectory files: the repo

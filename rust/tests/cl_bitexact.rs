@@ -1,0 +1,180 @@
+//! Property tests pinning the continual-learning update to the batch
+//! oracle: for random dims, way counts and shot splits, folding shots
+//! into a way across **any** sequence of `ProtoHead::add_shots` calls
+//! must be bit-identical to `ProtoHead::learn_way` on the concatenated
+//! shot set — prototype codes, bias, raw logits and the decoded
+//! `PreparedHead` snapshot — including the 10-shot / u4-saturating
+//! extremes where the running sum sits at the top of the embedding range.
+//! The file also drives the paper's Fig. 15 shape end to end: a 250-way
+//! 10-shot synthetic trajectory over the wire (loopback serve stack on
+//! the built-in `tiny` model, incremental vs all-at-once sessions
+//! asserted bit-identical, `SessionInfo` byte accounting asserted exact)
+//! — the tier-1, artifact-free version of the CL experiment.
+
+use chameleon::protonet::{ProtoError, ProtoHead};
+use chameleon::util::perfsuite;
+use chameleon::util::prop;
+use chameleon::util::rng::Rng;
+use chameleon::{prop_assert, prop_assert_eq};
+
+fn rand_emb(rng: &mut Rng, dim: usize) -> Vec<u8> {
+    (0..dim).map(|_| rng.below(16) as u8).collect()
+}
+
+/// Split `shots[1..]` into a random sequence of non-empty chunks.
+fn rand_chunks(rng: &mut Rng, rest: &[Vec<u8>]) -> Vec<Vec<Vec<u8>>> {
+    let mut chunks = Vec::new();
+    let mut i = 0;
+    while i < rest.len() {
+        let take = 1 + rng.below((rest.len() - i) as u64) as usize;
+        chunks.push(rest[i..i + take].to_vec());
+        i += take;
+    }
+    chunks
+}
+
+#[test]
+fn add_shots_splits_are_bit_identical_to_learn_way() {
+    prop::check(200, 0xC1_B17E, |rng| {
+        let dim = rng.range(1, 40) as usize;
+        let n_ways = rng.range(1, 7) as usize;
+        // Per-way shot sets, drawn up front so both heads see identical
+        // embeddings.
+        let shot_sets: Vec<Vec<Vec<u8>>> = (0..n_ways)
+            .map(|_| {
+                let k = rng.range(1, 12) as usize;
+                (0..k).map(|_| rand_emb(rng, dim)).collect()
+            })
+            .collect();
+        // Oracle: each way learned from its full shot set at once.
+        let mut oracle = ProtoHead::new(dim);
+        for shots in &shot_sets {
+            oracle.learn_way(shots).map_err(|e| e.to_string())?;
+        }
+        // Incremental: each way opened with one shot, the rest folded in
+        // chunk by chunk — with the per-way updates *interleaved* across
+        // ways (the serving pattern: a session keeps refining old ways
+        // while learning new ones).
+        let mut incr = ProtoHead::new(dim);
+        let mut pending = Vec::new();
+        for (w, shots) in shot_sets.iter().enumerate() {
+            let way = incr.learn_way(&shots[..1]).map_err(|e| e.to_string())?;
+            prop_assert_eq!(way, w);
+            pending.push((w, rand_chunks(rng, &shots[1..])));
+        }
+        // Drain the chunk queues in random interleaved order.
+        while pending.iter().any(|(_, q)| !q.is_empty()) {
+            let live: Vec<usize> = pending
+                .iter()
+                .enumerate()
+                .filter(|(_, (_, q))| !q.is_empty())
+                .map(|(i, _)| i)
+                .collect();
+            let pick = live[rng.below(live.len() as u64) as usize];
+            let (way, queue) = &mut pending[pick];
+            let chunk = queue.remove(0);
+            let total = incr.add_shots(*way, &chunk).map_err(|e| e.to_string())?;
+            prop_assert!(total <= shot_sets[*way].len(), "shot count overran");
+        }
+        // Codes, biases and shot counts agree way by way.
+        for w in 0..n_ways {
+            prop_assert_eq!(incr.way_codes(w), oracle.way_codes(w));
+            prop_assert_eq!(incr.shots_of(w), Some(shot_sets[w].len()));
+        }
+        prop_assert_eq!(incr.total_shots(), oracle.total_shots());
+        prop_assert_eq!(incr.bytes_used(), oracle.bytes_used());
+        // Logits agree on random queries — through the plain head and the
+        // decoded PreparedHead snapshot.
+        let prepared_i = incr.prepare();
+        let prepared_o = oracle.prepare();
+        for _ in 0..4 {
+            let q = rand_emb(rng, dim);
+            prop_assert_eq!(incr.logits(&q), oracle.logits(&q));
+            prop_assert_eq!(prepared_i.logits(&q), oracle.logits(&q));
+            prop_assert_eq!(prepared_i.logits(&q), prepared_o.logits(&q));
+            prop_assert_eq!(incr.classify(&q), oracle.classify(&q));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn saturating_extremes_stay_bit_identical() {
+    // 10-shot CL at the top of the u4 range: every embedding dimension at
+    // 15 (and mixtures of 0 and 15) drives the running sum to its
+    // extremes; the split-vs-concat identity must hold exactly there too.
+    prop::check(60, 0x5A7E, |rng| {
+        let dim = rng.range(1, 49) as usize;
+        let k = 10usize;
+        let shots: Vec<Vec<u8>> = (0..k)
+            .map(|_| {
+                let mode = rng.below(3);
+                (0..dim)
+                    .map(|_| match mode {
+                        0 => 15u8,
+                        1 => 0u8,
+                        _ => 15 * rng.below(2) as u8,
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut oracle = ProtoHead::new(dim);
+        oracle.learn_way(&shots).map_err(|e| e.to_string())?;
+        // Every possible prefix split: learn p shots, add the rest one at
+        // a time.
+        for p in 1..k {
+            let mut incr = ProtoHead::new(dim);
+            incr.learn_way(&shots[..p]).map_err(|e| e.to_string())?;
+            for s in &shots[p..] {
+                incr.add_shots(0, std::slice::from_ref(s)).map_err(|e| e.to_string())?;
+            }
+            prop_assert_eq!(incr.way_codes(0), oracle.way_codes(0));
+            let q = rand_emb(rng, dim);
+            prop_assert_eq!(incr.logits(&q), oracle.logits(&q));
+            prop_assert_eq!(incr.prepare().logits(&q), oracle.prepare().logits(&q));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn way_cap_is_exact_under_interleaved_updates() {
+    // A capped head keeps accepting add_shots at a full cap but never
+    // grows past it, and the failure is the typed error (no partial
+    // mutation).
+    let dim = 8;
+    let cap = 5;
+    let mut rng = Rng::new(0xCA9);
+    let mut head = ProtoHead::with_cap(dim, cap);
+    for w in 0..cap {
+        assert_eq!(head.learn_way(&[rand_emb(&mut rng, dim)]), Ok(w));
+    }
+    let got = head.learn_way(&[rand_emb(&mut rng, dim)]);
+    assert_eq!(got, Err(ProtoError::WaysExhausted { cap }));
+    for w in 0..cap {
+        head.add_shots(w, &[rand_emb(&mut rng, dim)]).unwrap();
+    }
+    assert_eq!(head.n_ways(), cap);
+    assert_eq!(head.total_shots(), 2 * cap);
+    assert_eq!(head.bytes_used(), cap * head.bytes_per_way());
+}
+
+/// The acceptance trajectory: the paper's 250-way 10-shot Fig. 15 shape,
+/// artifact-free, over real loopback TCP — incremental `AddShots`
+/// sessions bit-identical to all-at-once learning, `SessionInfo` byte
+/// accounting exact at every checkpoint, and the way budget enforced
+/// typed at the end. (`run_cl_trajectory` asserts all of this
+/// internally and fails the test on any violation.)
+#[test]
+fn synthetic_250_way_10_shot_trajectory_over_the_wire() {
+    let rows = perfsuite::run_cl_trajectory(250, 10).expect("250-way CL trajectory");
+    let traj = perfsuite::find_row(&rows, "cl/trajectory").expect("trajectory row");
+    assert_eq!(traj.get("ways"), Some(250.0));
+    assert_eq!(traj.get("shots_per_way"), Some(10.0));
+    // tiny model: V = 8 -> 6 B/way -> 1500 B for the full head.
+    assert_eq!(traj.get("bytes_per_way"), Some(6.0));
+    assert_eq!(traj.get("final_bytes"), Some(1500.0));
+    let updates = perfsuite::find_row(&rows, "cl/updates").expect("updates row");
+    // 250 ways x (1 learn + 2 add chunks) = 750 update ops timed.
+    assert!(updates.get("updates_per_sec").unwrap_or(0.0) > 0.0);
+}

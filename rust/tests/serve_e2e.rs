@@ -5,10 +5,14 @@
 //! session affinity, eviction, incremental stream sessions
 //! (open -> push -> decisions -> close, mid-stream eviction, malformed
 //! stream ops), protocol-v3 pipelining (out-of-order completion, batch
-//! classify bit-identity, v1/v2 compatibility clients), fault isolation
+//! classify bit-identity, v1/v2 compatibility clients), protocol-v4
+//! continual learning (AddShots decision flips, SessionInfo byte
+//! accounting incl. odd embed dims, typed WaysExhausted, accumulator
+//! state dying with its session, pre-v4 clients refused the CL ops,
+//! malformed shots never tripping the panic net), fault isolation
 //! (panic injection, classify fan-over past a full shard), and short
-//! zero-protocol-error loadgen runs in request, pipelined, batched and
-//! streaming modes.
+//! zero-protocol-error loadgen runs in request, pipelined, batched,
+//! streaming and continual-learning modes.
 
 use std::net::TcpStream;
 use std::sync::Arc;
@@ -907,6 +911,333 @@ fn classify_fans_over_full_shards() {
 }
 
 #[test]
+fn cl_add_shots_flips_decisions_and_accounts_bytes() {
+    // The serving CL loop: learn two ways from the same high-valued input
+    // cluster, then drag way 1's running mean into the low cluster with
+    // AddShots — a high query that classified as way 1 must flip to way 0,
+    // and SessionInfo must report exact way/shot/byte accounting
+    // throughout.
+    let (server, model) = golden_server(2, 2);
+    let mut client = Client::connect(server.local_addr().to_string()).unwrap();
+    let mut rng = Rng::new(91);
+    client.learn_way(40, vec![rand_input(&model, &mut rng, 13, 16)]).unwrap();
+    client.learn_way(40, vec![rand_input(&model, &mut rng, 13, 16)]).unwrap();
+    // Whichever way a high query lands on, flooding *that* way with
+    // low-cluster shots drags its prototype across the inter-cluster gap
+    // while the other way stays high — the decision must flip to the
+    // untouched way (robust to how the two high prototypes tie).
+    let q = rand_input(&model, &mut rng, 13, 16);
+    let winner = client.classify_session(40, q.clone()).unwrap().predicted.unwrap();
+    assert!(winner <= 1);
+    let info = client.session_info(40).unwrap();
+    assert!(info.exists);
+    assert_eq!(info.ways, 2);
+    assert_eq!(info.shots, 2);
+    assert_eq!(info.bytes_used, 2 * info.bytes_per_way as u64);
+    assert_eq!(info.way_cap, 0, "default budget is unbounded");
+    // Fold 30 low-valued shots into the winning way across several
+    // AddShots calls.
+    for _ in 0..3 {
+        let shots: Vec<Vec<u8>> = (0..10).map(|_| rand_input(&model, &mut rng, 0, 3)).collect();
+        let r = client.add_shots(40, winner, shots).unwrap();
+        assert_eq!(r.learned_way, Some(winner), "reply echoes the updated way");
+    }
+    let r = client.classify_session(40, q).unwrap();
+    assert_eq!(r.predicted, Some(1 - winner), "the moved prototype must flip the decision");
+    let info = client.session_info(40).unwrap();
+    assert_eq!(info.ways, 2, "AddShots must never grow the way count");
+    assert_eq!(info.shots, 2 + 30);
+    assert_eq!(info.bytes_used, 2 * info.bytes_per_way as u64);
+    let metrics = client.metrics().unwrap();
+    assert_eq!(metrics.add_shots, 3, "{}", metrics.report());
+    assert_eq!(metrics.worker_panics, 0, "{}", metrics.report());
+    server.shutdown();
+}
+
+#[test]
+fn eviction_drops_accumulators_and_recreated_sessions_start_clean() {
+    let (server, model) = golden_server(2, 1);
+    let mut client = Client::connect(server.local_addr().to_string()).unwrap();
+    let mut rng = Rng::new(92);
+    client.learn_way(41, vec![rand_input(&model, &mut rng, 0, 16)]).unwrap();
+    client.add_shots(41, 0, vec![rand_input(&model, &mut rng, 0, 16)]).unwrap();
+    assert_eq!(client.session_info(41).unwrap().shots, 2);
+    // Eviction drops the head *and* its accumulators.
+    assert!(client.evict_session(41).unwrap());
+    let info = client.session_info(41).unwrap();
+    assert!(!info.exists);
+    assert_eq!(info.ways, 0);
+    assert_eq!(info.shots, 0);
+    assert_eq!(info.bytes_used, 0);
+    assert!(info.bytes_per_way > 0, "deployment constant survives eviction");
+    // Updating an evicted session is a typed App error, not a resurrection.
+    match client
+        .call(&WireRequest::AddShots {
+            session: 41,
+            way: 0,
+            shots: vec![rand_input(&model, &mut rng, 0, 16)],
+        })
+        .unwrap()
+    {
+        WireResponse::Error { code: ErrorCode::App, message } => {
+            assert!(message.contains("session"), "{message}");
+        }
+        other => panic!("expected App error on an evicted session, got {other:?}"),
+    }
+    // A re-created session starts from zero accumulated state.
+    client.learn_way(41, vec![rand_input(&model, &mut rng, 0, 16)]).unwrap();
+    let info = client.session_info(41).unwrap();
+    assert!(info.exists);
+    assert_eq!(info.ways, 1);
+    assert_eq!(info.shots, 1, "stale accumulator state must not survive eviction");
+    server.shutdown();
+}
+
+#[test]
+fn session_info_byte_accounting_matches_odd_embed_dims() {
+    // bytes_per_way = ceil(V/2) + 2 nibble-packs the codes: an odd embed
+    // dim must round *up*. Serve a custom model with V = 7 and assert the
+    // wire accounting end to end.
+    let mut model = demo_tiny();
+    model.name = "tiny_v7".into();
+    model.embed_dim = 7;
+    model.embed.codes = (0..6 * 7).map(|i: i32| ((i * 7 + 6) % 9 - 4) as i8).collect();
+    model.embed.codes_shape = vec![6, 7];
+    model.embed.bias = vec![0; 7];
+    let model = Arc::new(model);
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        shards: 1,
+        workers_per_shard: 1,
+        ..Default::default()
+    };
+    let m = model.clone();
+    let server = Server::start(cfg, move |_s, _w| {
+        let m = m.clone();
+        Box::new(move || Ok(Engine::golden(m))) as EngineFactory
+    })
+    .unwrap();
+    let mut client = Client::connect(server.local_addr().to_string()).unwrap();
+    assert_eq!(client.health().unwrap().embed_dim, 7);
+    let mut rng = Rng::new(93);
+    for _ in 0..3 {
+        client.learn_way(5, vec![rand_input(&model, &mut rng, 0, 16)]).unwrap();
+    }
+    let info = client.session_info(5).unwrap();
+    // V = 7: ceil(7/2) + 2 = 6 bytes/way — a floor would claim 5 and the
+    // last nibble's byte would be unaccounted.
+    assert_eq!(info.bytes_per_way, 6);
+    assert_eq!(info.ways, 3);
+    assert_eq!(info.bytes_used, 18);
+    server.shutdown();
+}
+
+#[test]
+fn ways_exhausted_is_a_typed_app_error() {
+    // A server with a 2-way budget per session: the third learn answers a
+    // typed App error naming the exhaustion — no panic, no connection
+    // loss, and the panic counter stays zero on the wire.
+    let model = Arc::new(demo_tiny_kws());
+    let budget = 2 * chameleon::protonet::ProtoHead::bytes_per_way_of(model.embed_dim);
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        shards: 1,
+        workers_per_shard: 1,
+        way_budget_bytes: budget,
+        ..Default::default()
+    };
+    let m = model.clone();
+    let server = Server::start(cfg, move |_s, _w| {
+        let m = m.clone();
+        Box::new(move || Ok(Engine::golden(m))) as EngineFactory
+    })
+    .unwrap();
+    let mut client = Client::connect(server.local_addr().to_string()).unwrap();
+    let mut rng = Rng::new(94);
+    client.learn_way(6, vec![rand_input(&model, &mut rng, 0, 16)]).unwrap();
+    client.learn_way(6, vec![rand_input(&model, &mut rng, 0, 16)]).unwrap();
+    match client
+        .call(&WireRequest::LearnWay {
+            session: 6,
+            shots: vec![rand_input(&model, &mut rng, 0, 16)],
+        })
+        .unwrap()
+    {
+        WireResponse::Error { code: ErrorCode::App, message } => {
+            assert!(message.contains("ways exhausted"), "{message}");
+        }
+        other => panic!("expected a typed App error past the budget, got {other:?}"),
+    }
+    let info = client.session_info(6).unwrap();
+    assert_eq!(info.ways, 2);
+    assert_eq!(info.way_cap, 2, "cap reported from the byte budget");
+    // Updates to existing ways still work at a full cap, and the
+    // connection survived the error.
+    client.add_shots(6, 0, vec![rand_input(&model, &mut rng, 0, 16)]).unwrap();
+    let metrics = client.metrics().unwrap();
+    assert_eq!(
+        metrics.worker_panics,
+        0,
+        "typed errors must not trip the panic net: {}",
+        metrics.report()
+    );
+    server.shutdown();
+}
+
+#[test]
+fn malformed_learning_shots_never_trip_the_panic_net() {
+    // Regression for the assert-to-Result conversion: wrong-length and
+    // hostile shots through LearnWay/AddShots must come back as App
+    // errors with worker_panics still zero — the PR 3 catch_unwind net is
+    // a last resort, not the error path for malformed wire shots.
+    let (server, model) = golden_server(1, 1);
+    let mut client = Client::connect(server.local_addr().to_string()).unwrap();
+    let mut rng = Rng::new(95);
+    client.learn_way(8, vec![rand_input(&model, &mut rng, 0, 16)]).unwrap();
+    // Empty shot, short shot, mixed lengths, and no shots at all: every
+    // shape must come back typed.
+    let bad_shots = vec![
+        vec![vec![]],
+        vec![vec![1, 2, 3]],
+        vec![rand_input(&model, &mut rng, 0, 16), vec![9; 3]],
+        vec![],
+    ];
+    for shots in bad_shots {
+        for req in [
+            WireRequest::LearnWay { session: 8, shots: shots.clone() },
+            WireRequest::AddShots { session: 8, way: 0, shots: shots.clone() },
+        ] {
+            match client.call(&req).unwrap() {
+                WireResponse::Error { code: ErrorCode::App, .. } => {}
+                other => panic!("expected App error for {req:?}, got {other:?}"),
+            }
+        }
+    }
+    // Unknown way is typed too.
+    match client
+        .call(&WireRequest::AddShots {
+            session: 8,
+            way: 99,
+            shots: vec![rand_input(&model, &mut rng, 0, 16)],
+        })
+        .unwrap()
+    {
+        WireResponse::Error { code: ErrorCode::App, message } => {
+            assert!(message.contains("unknown way"), "{message}");
+        }
+        other => panic!("expected App error for an unknown way, got {other:?}"),
+    }
+    let metrics = client.metrics().unwrap();
+    assert_eq!(
+        metrics.worker_panics, 0,
+        "malformed shots must be typed errors, not panics: {}",
+        metrics.report()
+    );
+    // The single worker still serves.
+    client.add_shots(8, 0, vec![rand_input(&model, &mut rng, 0, 16)]).unwrap();
+    assert_eq!(client.session_info(8).unwrap().shots, 2);
+    server.shutdown();
+}
+
+#[test]
+fn pre_v4_clients_are_refused_cl_ops() {
+    // A v3 client must refuse AddShots/SessionInfo locally (silently
+    // up-versioning would break its response matching), and a raw v3
+    // frame carrying a v4 opcode is malformed on the wire.
+    let (server, model) = golden_server(1, 1);
+    let addr = server.local_addr();
+    let mut rng = Rng::new(96);
+    let mut v3 = Client::with_config(
+        addr.to_string(),
+        chameleon::serve::ClientConfig { version: 3, ..Default::default() },
+    )
+    .unwrap();
+    // v3 still does everything it could before...
+    v3.learn_way(30, vec![rand_input(&model, &mut rng, 0, 16)]).unwrap();
+    assert!(v3.classify_batch(vec![]).is_ok(), "v3 keeps its own ops");
+    // ...but the v4 ops fail fast, client-side.
+    let err = v3.add_shots(30, 0, vec![rand_input(&model, &mut rng, 0, 16)]).unwrap_err();
+    assert!(format!("{err:#}").contains("requires protocol v4"), "{err:#}");
+    let err = v3.session_info(30).unwrap_err();
+    assert!(format!("{err:#}").contains("requires protocol v4"), "{err:#}");
+    // The connection was not disturbed by the refused calls.
+    assert!(v3.health().is_ok());
+    // And metrics at v3 lack the v4 add_shots counter.
+    assert_eq!(v3.metrics().unwrap().add_shots, 0);
+
+    // Raw wire: a v3-tagged frame with the AddShots opcode is malformed.
+    let mut s = TcpStream::connect(addr).unwrap();
+    let mut body = vec![3u8, 0x0B]; // v3, AddShots
+    body.extend_from_slice(&7u64.to_le_bytes()); // request id (v3 tag)
+    body.extend_from_slice(&30u64.to_le_bytes()); // session
+    body.extend_from_slice(&0u64.to_le_bytes()); // way
+    body.extend_from_slice(&0u32.to_le_bytes()); // 0 shots
+    let mut frame = (body.len() as u32).to_le_bytes().to_vec();
+    frame.extend_from_slice(&body);
+    proto::write_frame(&mut s, &frame).unwrap();
+    let blob = proto::read_frame(&mut s).unwrap().expect("error frame expected");
+    match proto::decode_response(&blob).unwrap().resp {
+        WireResponse::Error { code: ErrorCode::Malformed, message } => {
+            assert!(message.contains("v4"), "{message}");
+        }
+        other => panic!("expected Malformed, got {other:?}"),
+    }
+    server.shutdown();
+}
+
+#[test]
+fn cl_loadgen_loopback_has_zero_protocol_errors() {
+    // Growing-way CL sessions over the real stack: every op lands in an
+    // accounted bucket, none of them protocol errors, and the server's
+    // add_shots counter agrees with the client-side tally.
+    let model = Arc::new(demo_tiny());
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        shards: 2,
+        workers_per_shard: 2,
+        ..Default::default()
+    };
+    let m = model.clone();
+    let server = Server::start(cfg, move |_s, _w| {
+        let m = m.clone();
+        Box::new(move || Ok(Engine::golden(m))) as EngineFactory
+    })
+    .unwrap();
+    let report = loadgen::run_cl(&chameleon::serve::ClLoadConfig {
+        addr: server.local_addr().to_string(),
+        connections: 3,
+        duration: Duration::from_millis(900),
+        ways: 4,
+        shots_per_way: 3,
+        classify_frac: 0.3,
+        seed: 13,
+    })
+    .expect("cl loadgen runs");
+    assert_eq!(report.protocol_errors, 0, "{}", report.report());
+    assert_eq!(report.app_errors, 0, "{}", report.report());
+    assert_eq!(report.overloaded, 0, "blocking CL clients cannot overload: {}", report.report());
+    assert!(report.learns > 0, "{}", report.report());
+    assert!(report.adds > 0, "{}", report.report());
+    assert!(report.classifies > 0, "{}", report.report());
+    assert!(
+        report.completed_trajectories > 0,
+        "a 4x3 trajectory must complete within the run: {}",
+        report.report()
+    );
+    assert_eq!(
+        report.learn_latency.count + report.add_latency.count,
+        report.learns + report.adds,
+        "every update op is measured exactly once: {}",
+        report.report()
+    );
+    assert_eq!(report.classify_latency.count, report.classifies, "{}", report.report());
+    let srv = report.server.as_ref().expect("server metrics fetched");
+    assert_eq!(srv.add_shots, report.adds, "{}", srv.report());
+    assert_eq!(srv.worker_panics, 0, "{}", srv.report());
+    server.shutdown();
+}
+
+#[test]
 fn v1_and_v2_clients_still_work() {
     // Strict downgraded clients against the v3 server: v2 keeps the full
     // stream workflow; v1 sees a v1-shaped Health (no stream geometry).
@@ -949,6 +1280,9 @@ fn v1_and_v2_clients_still_work() {
     let m = v1.metrics().unwrap();
     assert_eq!(m.stream_chunks, 0, "v1 metrics lack stream counters");
     assert_eq!(m.worker_panics, 0, "v1 metrics lack the v3 panic counter");
+    assert_eq!(m.add_shots, 0, "v1 metrics lack the v4 add-shots counter");
+    // v1/v2 clients refuse the v4 continual-learning ops locally.
+    assert!(v1.session_info(21).is_err(), "SessionInfo needs v4");
     server.shutdown();
 }
 
