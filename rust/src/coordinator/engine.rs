@@ -16,9 +16,9 @@
 //! replica ([`Engine::plan`] → [`PreparedModel::open_stream`]) share the
 //! same plan.
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -77,13 +77,18 @@ pub struct Engine {
     plan: Arc<PreparedModel>,
     /// Reusable scratch arena for the plan's forwards.
     scratch: RefCell<Scratch>,
+    /// Microseconds spent inside [`Engine::forward`] since the last
+    /// [`Engine::take_busy_us`] — the engine-start → engine-end span the
+    /// worker folds into each reply. A `Cell` because the engine is
+    /// single-owner per worker thread (see the `Sync` note above).
+    busy_us: Cell<u64>,
 }
 
 impl Engine {
     fn with_kind(model: Arc<QuantModel>, kind: EngineKind, mode: ExecMode) -> Engine {
         let plan = Arc::new(PreparedModel::with_mode(&model, mode));
         let scratch = RefCell::new(plan.new_scratch());
-        Engine { model, kind, plan, scratch }
+        Engine { model, kind, plan, scratch, busy_us: Cell::new(0) }
     }
 
     pub fn golden(model: Arc<QuantModel>) -> Engine {
@@ -130,8 +135,28 @@ impl Engine {
         &self.plan
     }
 
-    /// One forward pass over a u4 input sequence.
+    /// One forward pass over a u4 input sequence. Wall time spent here
+    /// accumulates into the engine-busy span (see
+    /// [`Engine::take_busy_us`]); for the paced engine the real-time sleep
+    /// *is* the simulated chip latency, so it counts as busy on purpose.
     pub fn forward(&self, x_q: &[u8]) -> Result<Forward> {
+        let t0 = Instant::now();
+        let res = self.dispatch(x_q);
+        let spent = t0.elapsed().as_micros().min(u64::MAX as u128) as u64;
+        self.busy_us.set(self.busy_us.get().saturating_add(spent));
+        res
+    }
+
+    /// Drain the accumulated engine-busy microseconds (resets to zero).
+    /// The worker loop calls this before and after each request to carve
+    /// the engine span out of the service span. A request that panicked
+    /// mid-forward loses that forward's contribution — acceptable, since
+    /// its reply is an error with no spans anyway.
+    pub fn take_busy_us(&self) -> u64 {
+        self.busy_us.replace(0)
+    }
+
+    fn dispatch(&self, x_q: &[u8]) -> Result<Forward> {
         match &self.kind {
             EngineKind::Golden => self.plan_forward(x_q),
             EngineKind::Sim(mode) => {
@@ -234,5 +259,18 @@ mod tests {
             let want = crate::golden::forward(&m, &w).unwrap();
             assert_eq!((got.embedding, got.logits), want);
         }
+    }
+
+    #[test]
+    fn busy_time_accumulates_and_drains() {
+        let m = Arc::new(crate::model::tests::tiny_model());
+        let e = Engine::chaos(m.clone(), Duration::from_millis(5));
+        assert_eq!(e.take_busy_us(), 0);
+        let mut x: Vec<u8> = vec![0; m.seq_len * m.in_channels];
+        x[0] = CHAOS_SLOW_TOKEN;
+        e.forward(&x).unwrap();
+        let busy = e.take_busy_us();
+        assert!(busy >= 5_000, "slow-token forward counts its stall: {busy}us");
+        assert_eq!(e.take_busy_us(), 0, "draining resets the accumulator");
     }
 }

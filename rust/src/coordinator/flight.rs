@@ -1,0 +1,282 @@
+//! Flight recorder: a fixed-capacity ring of recent *notable* events
+//! (errors, handler panics, session evictions, backpressure rejections,
+//! and slow requests over a configurable threshold).
+//!
+//! The counters in [`super::metrics`] tell you *that* something happened;
+//! the flight recorder tells you *what was happening around it*. When a
+//! `worker_panics` tick shows up on a dashboard, the ring still holds the
+//! panic event itself plus the errors/evictions/slow requests that preceded
+//! and followed it — dumped over the wire by the v5 `Stat` op and the
+//! `chameleon stat` CLI subcommand.
+//!
+//! Concurrency model: slot reservation is a single wait-free atomic
+//! `fetch_add` on the ring cursor, so recorders never contend on a shared
+//! lock and never block each other; each slot then carries its own tiny
+//! mutex guarding the payload write (events carry heap `String` details, so
+//! the payload store itself cannot be a bare atomic). Recording is
+//! therefore lock-free *across* events and only per-slot exclusive — and
+//! since every recorded kind is off the hot path by definition (errors,
+//! panics, evictions, rejections, over-threshold requests), the cost never
+//! shows up in the instrumentation-overhead bench.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::metrics::OpKind;
+
+/// Default ring capacity (events kept per coordinator shard).
+pub const DEFAULT_FLIGHT_CAPACITY: usize = 256;
+
+/// What made an event notable enough to record.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlightKind {
+    /// A request completed with an application error.
+    Error = 0,
+    /// A handler panicked (the worker caught it and kept running).
+    Panic = 1,
+    /// A session was removed from the store (LRU pressure or explicit op).
+    Eviction = 2,
+    /// A request was rejected at admission (queue full / shutdown).
+    Rejection = 3,
+    /// A request completed fine but took longer than the slow threshold.
+    SlowRequest = 4,
+}
+
+impl FlightKind {
+    /// All kinds, in wire-id order.
+    pub const ALL: [FlightKind; 5] = [
+        FlightKind::Error,
+        FlightKind::Panic,
+        FlightKind::Eviction,
+        FlightKind::Rejection,
+        FlightKind::SlowRequest,
+    ];
+
+    /// Stable wire id.
+    pub fn id(self) -> u8 {
+        self as u8
+    }
+
+    /// Inverse of [`FlightKind::id`].
+    pub fn from_id(id: u8) -> Option<FlightKind> {
+        FlightKind::ALL.get(id as usize).copied()
+    }
+
+    /// Stable human-readable name (used by reports and the JSON dump).
+    pub fn name(self) -> &'static str {
+        match self {
+            FlightKind::Error => "error",
+            FlightKind::Panic => "panic",
+            FlightKind::Eviction => "eviction",
+            FlightKind::Rejection => "rejection",
+            FlightKind::SlowRequest => "slow_request",
+        }
+    }
+}
+
+/// One recorded event.
+#[derive(Debug, Clone)]
+pub struct FlightEvent {
+    /// Global sequence number (monotonic per recorder, never reused), so a
+    /// dump shows gaps when the ring wrapped between snapshots.
+    pub seq: u64,
+    /// Microseconds since the recorder was created (its coordinator start).
+    pub at_us: u64,
+    pub kind: FlightKind,
+    /// The op the event is attributed to ([`OpKind::Other`] when the event
+    /// is not tied to a single request, e.g. an LRU eviction).
+    pub op: OpKind,
+    /// Short free-form context: the error text, panic message, session id…
+    pub detail: String,
+}
+
+/// Fixed-capacity ring of recent [`FlightEvent`]s. See module docs for the
+/// concurrency model.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    slots: Vec<Mutex<Option<FlightEvent>>>,
+    cursor: AtomicUsize,
+    dropped: AtomicU64,
+    epoch: Instant,
+    slow_us: u64,
+}
+
+impl FlightRecorder {
+    /// A recorder with `capacity` slots; requests at or over
+    /// `slow_request_us` microseconds of service time are recorded as
+    /// [`FlightKind::SlowRequest`] (0 disables slow-request capture).
+    pub fn new(capacity: usize, slow_request_us: u64) -> Self {
+        FlightRecorder {
+            slots: (0..capacity.max(1)).map(|_| Mutex::new(None)).collect(),
+            cursor: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+            epoch: Instant::now(),
+            slow_us: slow_request_us,
+        }
+    }
+
+    /// The slow-request threshold in microseconds (0 = disabled).
+    pub fn slow_threshold_us(&self) -> u64 {
+        self.slow_us
+    }
+
+    /// Should a request with this service time be recorded as slow?
+    pub fn is_slow(&self, service_us: u64) -> bool {
+        self.slow_us > 0 && service_us >= self.slow_us
+    }
+
+    /// Microseconds since the recorder was created, the timebase of
+    /// [`FlightEvent::at_us`].
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros().min(u64::MAX as u128) as u64
+    }
+
+    /// Record an event. Wait-free slot reservation; truncates `detail` to a
+    /// sane bound so a pathological error string cannot bloat the ring.
+    pub fn record(&self, kind: FlightKind, op: OpKind, detail: impl Into<String>) {
+        let seq = self.cursor.fetch_add(1, Ordering::Relaxed) as u64;
+        let slot = (seq as usize) % self.slots.len();
+        let mut detail: String = detail.into();
+        if detail.len() > 256 {
+            let mut cut = 256;
+            while cut > 0 && !detail.is_char_boundary(cut) {
+                cut -= 1;
+            }
+            detail.truncate(cut);
+            detail.push('…');
+        }
+        let event = FlightEvent { seq, at_us: self.now_us(), kind, op, detail };
+        // Per-slot lock: contention only happens when two recorders land on
+        // the same slot (ring wrapped a full lap mid-write) — vanishingly
+        // rare, and even then the wait is one struct move long.
+        match self.slots[slot].lock() {
+            Ok(mut g) => {
+                if g.is_some() {
+                    self.dropped.fetch_add(1, Ordering::Relaxed);
+                }
+                *g = Some(event);
+            }
+            Err(poisoned) => *poisoned.into_inner() = Some(event),
+        }
+    }
+
+    /// Number of events overwritten before they were ever snapshotted is
+    /// not tracked per-reader; this is the total number of slot overwrites
+    /// (i.e. how much history the ring has discarded since start).
+    pub fn overwritten(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Total events ever recorded (recorded − capacity ≈ overwritten).
+    pub fn recorded(&self) -> u64 {
+        self.cursor.load(Ordering::Relaxed) as u64
+    }
+
+    /// Copy out the current ring contents, oldest first (by sequence
+    /// number). Readers never block recorders for more than one slot move.
+    pub fn snapshot(&self) -> Vec<FlightEvent> {
+        let mut events: Vec<FlightEvent> = self
+            .slots
+            .iter()
+            .filter_map(|s| match s.lock() {
+                Ok(g) => g.clone(),
+                Err(poisoned) => poisoned.into_inner().clone(),
+            })
+            .collect();
+        events.sort_by_key(|e| e.seq);
+        events
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots_in_order() {
+        let fr = FlightRecorder::new(8, 0);
+        fr.record(FlightKind::Error, OpKind::Classify, "first");
+        fr.record(FlightKind::Eviction, OpKind::Other, "second");
+        fr.record(FlightKind::Panic, OpKind::LearnWay, "third");
+        let ev = fr.snapshot();
+        assert_eq!(ev.len(), 3);
+        assert_eq!(ev[0].detail, "first");
+        assert_eq!(ev[2].detail, "third");
+        assert!(ev[0].seq < ev[1].seq && ev[1].seq < ev[2].seq);
+        assert!(ev.windows(2).all(|w| w[0].at_us <= w[1].at_us));
+        assert_eq!(ev[2].kind, FlightKind::Panic);
+        assert_eq!(ev[2].op, OpKind::LearnWay);
+        assert_eq!(fr.recorded(), 3);
+        assert_eq!(fr.overwritten(), 0);
+    }
+
+    #[test]
+    fn ring_wraps_keeping_the_newest() {
+        let fr = FlightRecorder::new(4, 0);
+        for i in 0..10 {
+            fr.record(FlightKind::Error, OpKind::Other, format!("e{i}"));
+        }
+        let ev = fr.snapshot();
+        assert_eq!(ev.len(), 4);
+        let details: Vec<&str> = ev.iter().map(|e| e.detail.as_str()).collect();
+        assert_eq!(details, ["e6", "e7", "e8", "e9"]);
+        assert_eq!(fr.overwritten(), 6);
+        assert_eq!(fr.recorded(), 10);
+    }
+
+    #[test]
+    fn slow_threshold_semantics() {
+        let off = FlightRecorder::new(4, 0);
+        assert!(!off.is_slow(u64::MAX));
+        let on = FlightRecorder::new(4, 1000);
+        assert!(!on.is_slow(999));
+        assert!(on.is_slow(1000));
+        assert!(on.is_slow(5000));
+        assert_eq!(on.slow_threshold_us(), 1000);
+    }
+
+    #[test]
+    fn long_details_are_truncated_on_a_char_boundary() {
+        let fr = FlightRecorder::new(2, 0);
+        let long = "é".repeat(400); // 2 bytes per char — 256 is mid-char
+        fr.record(FlightKind::Error, OpKind::Other, long);
+        let ev = fr.snapshot();
+        assert_eq!(ev.len(), 1);
+        assert!(ev[0].detail.len() <= 260);
+        assert!(ev[0].detail.ends_with('…'));
+    }
+
+    #[test]
+    fn concurrent_recording_is_safe_and_lossless_in_seq() {
+        use std::sync::Arc;
+        let fr = Arc::new(FlightRecorder::new(64, 0));
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let fr = fr.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..500 {
+                    fr.record(FlightKind::Rejection, OpKind::Classify, format!("t{t}:{i}"));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(fr.recorded(), 2000);
+        let ev = fr.snapshot();
+        assert_eq!(ev.len(), 64);
+        // Sequence numbers are unique and the snapshot holds a recent lap.
+        let mut seqs: Vec<u64> = ev.iter().map(|e| e.seq).collect();
+        seqs.dedup();
+        assert_eq!(seqs.len(), 64);
+        assert!(seqs.iter().all(|&s| s < 2000));
+    }
+
+    #[test]
+    fn zero_capacity_is_clamped() {
+        let fr = FlightRecorder::new(0, 0);
+        fr.record(FlightKind::Error, OpKind::Other, "x");
+        assert_eq!(fr.snapshot().len(), 1);
+    }
+}

@@ -1,12 +1,27 @@
-//! Serving metrics: latency histogram, throughput, queue depth, per-class
-//! counts — what the test harness records while driving the chip, and what
-//! the serve layer's `Metrics` wire op reports per shard.
+//! Serving metrics: latency histograms, throughput, queue/in-flight gauges,
+//! per-class counts — what the test harness records while driving the chip,
+//! and what the serve layer's `Metrics` wire op reports per shard.
 //!
-//! Latencies go into a fixed-bucket log-linear histogram (16 linear 1 us
+//! Latencies go into fixed-bucket log-linear histograms (16 linear 1 us
 //! buckets, then 8 sub-buckets per power-of-two octave, HDR-style): every
 //! record is two relaxed atomic adds, snapshots never pause the workers,
 //! and per-shard snapshots merge by simply summing bucket counts — which is
 //! how the serve layer aggregates p50/p95/p99 across shards.
+//!
+//! Since the observability PR the pooled histogram is decomposed **per op**
+//! ([`OpKind`]): every request is recorded into exactly one per-op histogram
+//! *and* the pooled one at the same call site ([`Metrics::record_latency_op`]),
+//! so the per-op bucket counts always sum to the pooled counts — an invariant
+//! the stress tests pin down. Gauges (queue depth, in-flight requests,
+//! session-store occupancy/bytes, writer-backlog high-water mark) ride the
+//! same snapshot/merge path: sums across shards, except the backlog
+//! high-water mark which merges by max.
+//!
+//! Overflow discipline: each recorded sample is clamped to `MAX_US`
+//! (~35.8 minutes) before bucketing, and `sum_us` accumulates with
+//! saturating adds, so neither can wrap on a long-lived server. The `count`
+//! fields cannot overflow by construction: a u64 counter incremented once
+//! per request would need ~5.8e5 years of traffic at 1 M req/s to wrap.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
@@ -44,6 +59,74 @@ pub fn bucket_value_us(i: usize) -> f64 {
     }
 }
 
+/// The request kinds the coordinator decomposes its latency metrics by.
+///
+/// Every `coordinator::Request` maps to exactly one kind; anything recorded
+/// without an explicit kind lands in [`OpKind::Other`], so summing the
+/// per-op histograms always reproduces the pooled histogram exactly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    Classify = 0,
+    ClassifyMany = 1,
+    ClassifySession = 2,
+    LearnWay = 3,
+    AddShots = 4,
+    StreamOpen = 5,
+    StreamPush = 6,
+    StreamClose = 7,
+    SessionInfo = 8,
+    EvictSession = 9,
+    Other = 10,
+}
+
+impl OpKind {
+    /// Number of kinds (the length of every per-op vector).
+    pub const COUNT: usize = 11;
+
+    /// All kinds, in index order.
+    pub const ALL: [OpKind; OpKind::COUNT] = [
+        OpKind::Classify,
+        OpKind::ClassifyMany,
+        OpKind::ClassifySession,
+        OpKind::LearnWay,
+        OpKind::AddShots,
+        OpKind::StreamOpen,
+        OpKind::StreamPush,
+        OpKind::StreamClose,
+        OpKind::SessionInfo,
+        OpKind::EvictSession,
+        OpKind::Other,
+    ];
+
+    /// Stable index into per-op vectors (and the wire encoding of the kind).
+    #[inline]
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Inverse of [`OpKind::index`].
+    pub fn from_index(i: usize) -> Option<OpKind> {
+        OpKind::ALL.get(i).copied()
+    }
+
+    /// Stable human-readable name (used by reports and the JSON dump).
+    pub fn name(self) -> &'static str {
+        match self {
+            OpKind::Classify => "classify",
+            OpKind::ClassifyMany => "classify_many",
+            OpKind::ClassifySession => "classify_session",
+            OpKind::LearnWay => "learn_way",
+            OpKind::AddShots => "add_shots",
+            OpKind::StreamOpen => "stream_open",
+            OpKind::StreamPush => "stream_push",
+            OpKind::StreamClose => "stream_close",
+            OpKind::SessionInfo => "session_info",
+            OpKind::EvictSession => "evict_session",
+            OpKind::Other => "other",
+        }
+    }
+}
+
 /// Thread-safe fixed-bucket latency histogram (see module docs). Shared by
 /// the coordinator metrics and the serve load generator.
 #[derive(Debug)]
@@ -75,7 +158,12 @@ impl LatencyHistogram {
     pub fn record_us(&self, us: u64) {
         self.buckets[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
-        self.sum_us.fetch_add(us.min(MAX_US), Ordering::Relaxed);
+        // Per-sample clamp bounds one add at MAX_US, but a long-running
+        // server can still accumulate past u64::MAX in principle — saturate
+        // instead of wrapping (a pinned mean beats a garbage one).
+        let add = us.min(MAX_US);
+        let saturate = |cur: u64| Some(cur.saturating_add(add));
+        let _ = self.sum_us.fetch_update(Ordering::Relaxed, Ordering::Relaxed, saturate);
     }
 
     pub fn count(&self) -> u64 {
@@ -106,11 +194,19 @@ impl Default for HistSnapshot {
 }
 
 impl HistSnapshot {
-    /// Latency (us) at percentile `p` in [0, 100]; 0.0 when empty.
+    /// Latency (us) at percentile `p`; 0.0 when empty.
+    ///
+    /// Rank convention: nearest-rank on the bucketed distribution — the
+    /// target rank is `ceil(p/100 * count)` clamped to at least 1, so
+    /// `p = 0` returns the minimum occupied bucket and `p = 100` the
+    /// maximum. Out-of-range `p` is clamped into `[0, 100]` rather than
+    /// silently extrapolating (a negative `p` used to underflow to rank 1
+    /// by accident; `p > 100` used to scan off the top).
     pub fn percentile_us(&self, p: f64) -> f64 {
         if self.count == 0 {
             return 0.0;
         }
+        let p = p.clamp(0.0, 100.0);
         let target = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
         let mut cum = 0u64;
         for (i, &c) in self.counts.iter().enumerate() {
@@ -140,10 +236,27 @@ impl HistSnapshot {
         self.count += other.count;
         self.sum_us += other.sum_us;
     }
+
+    /// Bucket-wise difference `self - earlier` — the distribution of only
+    /// the samples recorded between the two snapshots of one histogram
+    /// (the loadgen's periodic in-flight reports). Saturating per bucket,
+    /// so a mismatched pair degrades to zeros instead of wrapping.
+    pub fn delta(&self, earlier: &HistSnapshot) -> HistSnapshot {
+        HistSnapshot {
+            counts: self
+                .counts
+                .iter()
+                .zip(&earlier.counts)
+                .map(|(a, b)| a.saturating_sub(*b))
+                .collect(),
+            count: self.count.saturating_sub(earlier.count),
+            sum_us: self.sum_us.saturating_sub(earlier.sum_us),
+        }
+    }
 }
 
 /// Thread-safe metrics sink shared between workers and the reporter.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Metrics {
     pub requests: AtomicU64,
     pub completed: AtomicU64,
@@ -163,8 +276,36 @@ pub struct Metrics {
     pub stream_chunks: AtomicU64,
     /// Per-window classification decisions emitted by stream pushes.
     pub stream_decisions: AtomicU64,
+    /// Gauge: requests sitting in the bounded queue right now (incremented
+    /// on enqueue, decremented on dequeue).
+    pub queue_depth: AtomicU64,
+    /// Gauge: requests currently being handled by a worker.
+    pub in_flight: AtomicU64,
     latency: LatencyHistogram,
+    per_op: Vec<LatencyHistogram>,
     sim_cycles: AtomicU64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            requests: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            worker_panics: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            learn_ways: AtomicU64::new(0),
+            add_shots: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            stream_chunks: AtomicU64::new(0),
+            stream_decisions: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
+            in_flight: AtomicU64::new(0),
+            latency: LatencyHistogram::new(),
+            per_op: (0..OpKind::COUNT).map(|_| LatencyHistogram::new()).collect(),
+            sim_cycles: AtomicU64::new(0),
+        }
+    }
 }
 
 impl Metrics {
@@ -172,8 +313,20 @@ impl Metrics {
         Metrics::default()
     }
 
+    /// Record a completed request without an op attribution — lands in
+    /// [`OpKind::Other`] so the per-op decomposition stays exhaustive.
     pub fn record_latency(&self, d: Duration) {
+        self.record_latency_op(OpKind::Other, d);
+    }
+
+    /// Record a completed request into the pooled histogram *and* its op's
+    /// histogram, and tick `completed` — the single recording point that
+    /// keeps per-op totals summing exactly to the pooled total.
+    pub fn record_latency_op(&self, op: OpKind, d: Duration) {
         self.latency.record(d);
+        if let Some(h) = self.per_op.get(op.index()) {
+            h.record(d);
+        }
         self.completed.fetch_add(1, Ordering::Relaxed);
     }
 
@@ -187,6 +340,7 @@ impl Metrics {
 
     pub fn snapshot(&self) -> MetricsSnapshot {
         let hist = self.latency.snapshot();
+        let per_op = self.per_op.iter().map(|h| h.snapshot()).collect();
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
@@ -198,12 +352,18 @@ impl Metrics {
             evictions: self.evictions.load(Ordering::Relaxed),
             stream_chunks: self.stream_chunks.load(Ordering::Relaxed),
             stream_decisions: self.stream_decisions.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            in_flight: self.in_flight.load(Ordering::Relaxed),
+            sessions_live: 0,
+            session_bytes: 0,
+            backlog_hwm: 0,
             mean_latency_us: hist.mean_us(),
             p50_latency_us: hist.percentile_us(50.0),
             p95_latency_us: hist.percentile_us(95.0),
             p99_latency_us: hist.percentile_us(99.0),
             sim_cycles: self.total_sim_cycles(),
             latency_hist: hist,
+            per_op,
         }
     }
 }
@@ -221,17 +381,39 @@ pub struct MetricsSnapshot {
     pub evictions: u64,
     pub stream_chunks: u64,
     pub stream_decisions: u64,
+    /// Gauge: queued requests at snapshot time (summed across shards).
+    pub queue_depth: u64,
+    /// Gauge: requests being handled at snapshot time.
+    pub in_flight: u64,
+    /// Gauge: live sessions in the store (filled by `Coordinator::snapshot`).
+    pub sessions_live: u64,
+    /// Gauge: prototype bytes across live sessions (filled by
+    /// `Coordinator::snapshot`).
+    pub session_bytes: u64,
+    /// Gauge: highest per-connection writer backlog observed (filled by the
+    /// serve layer; merges by max, not sum).
+    pub backlog_hwm: u64,
     pub mean_latency_us: f64,
     pub p50_latency_us: f64,
     pub p95_latency_us: f64,
     pub p99_latency_us: f64,
     pub sim_cycles: u64,
     pub latency_hist: HistSnapshot,
+    /// Per-op latency decomposition, indexed by [`OpKind::index`]. The
+    /// bucket counts sum to `latency_hist` exactly (same recording point).
+    pub per_op: Vec<HistSnapshot>,
 }
 
 impl MetricsSnapshot {
+    /// The per-op histogram for `op` (empty snapshot if absent).
+    pub fn op_hist(&self, op: OpKind) -> HistSnapshot {
+        self.per_op.get(op.index()).cloned().unwrap_or_default()
+    }
+
     /// Fold another shard's snapshot into this one; percentiles are
-    /// recomputed over the merged histogram.
+    /// recomputed over the merged histogram. Gauges sum (they are
+    /// per-shard instantaneous values), except `backlog_hwm` which is a
+    /// max across connections and merges by max.
     pub fn merge(&mut self, other: &MetricsSnapshot) {
         self.requests += other.requests;
         self.completed += other.completed;
@@ -243,8 +425,19 @@ impl MetricsSnapshot {
         self.evictions += other.evictions;
         self.stream_chunks += other.stream_chunks;
         self.stream_decisions += other.stream_decisions;
+        self.queue_depth += other.queue_depth;
+        self.in_flight += other.in_flight;
+        self.sessions_live += other.sessions_live;
+        self.session_bytes += other.session_bytes;
+        self.backlog_hwm = self.backlog_hwm.max(other.backlog_hwm);
         self.sim_cycles += other.sim_cycles;
         self.latency_hist.merge(&other.latency_hist);
+        if self.per_op.len() < other.per_op.len() {
+            self.per_op.resize(other.per_op.len(), HistSnapshot::default());
+        }
+        for (a, b) in self.per_op.iter_mut().zip(&other.per_op) {
+            a.merge(b);
+        }
         self.mean_latency_us = self.latency_hist.mean_us();
         self.p50_latency_us = self.latency_hist.percentile_us(50.0);
         self.p95_latency_us = self.latency_hist.percentile_us(95.0);
@@ -252,10 +445,11 @@ impl MetricsSnapshot {
     }
 
     pub fn report(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} completed={} errors={} worker_panics={} rejected={} learned_ways={} \
              add_shots={} evictions={} stream_chunks={} stream_decisions={} \
-             latency mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us sim_cycles={}",
+             latency mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us sim_cycles={} \
+             queued={} in_flight={} sessions={} session_bytes={} backlog_hwm={}",
             self.requests,
             self.completed,
             self.errors,
@@ -271,7 +465,26 @@ impl MetricsSnapshot {
             self.p95_latency_us,
             self.p99_latency_us,
             self.sim_cycles,
-        )
+            self.queue_depth,
+            self.in_flight,
+            self.sessions_live,
+            self.session_bytes,
+            self.backlog_hwm,
+        );
+        for (i, h) in self.per_op.iter().enumerate() {
+            if h.count == 0 {
+                continue;
+            }
+            let name = OpKind::from_index(i).map(|o| o.name()).unwrap_or("unknown");
+            s.push_str(&format!(
+                "\n  {name}: n={} p50={:.1}us p95={:.1}us p99={:.1}us",
+                h.count,
+                h.percentile_us(50.0),
+                h.percentile_us(95.0),
+                h.percentile_us(99.0),
+            ));
+        }
+        s
     }
 }
 
@@ -292,6 +505,40 @@ mod tests {
         assert!(s.p95_latency_us >= 89.0 && s.p95_latency_us <= 101.0, "{}", s.p95_latency_us);
         assert!(s.p99_latency_us >= 93.0 && s.p99_latency_us <= 105.0, "{}", s.p99_latency_us);
         assert!((s.mean_latency_us - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_edge_cases_clamp() {
+        let h = LatencyHistogram::new();
+        for us in [3u64, 3, 7, 500, 9000] {
+            h.record_us(us);
+        }
+        let s = h.snapshot();
+        // p = 0 is the minimum occupied bucket (rank clamps to 1)...
+        assert_eq!(s.percentile_us(0.0), bucket_value_us(bucket_index(3)));
+        // ...and out-of-range p clamps instead of misbehaving.
+        assert_eq!(s.percentile_us(-50.0), s.percentile_us(0.0));
+        assert_eq!(s.percentile_us(250.0), s.percentile_us(100.0));
+        assert_eq!(s.percentile_us(100.0), bucket_value_us(bucket_index(9000)));
+        // NaN clamps too (Rust's f64::clamp sends NaN to the low bound is
+        // not guaranteed — assert only that the result is a finite bucket).
+        assert!(s.percentile_us(f64::NAN).is_finite());
+    }
+
+    #[test]
+    fn sum_us_saturates_instead_of_wrapping() {
+        let h = LatencyHistogram::new();
+        // Drive the private accumulator to the brink (the test module is a
+        // child of the defining module, so it can reach the field), then
+        // record more samples: the CAS loop must pin at u64::MAX, never wrap.
+        h.sum_us.store(u64::MAX - 10, Ordering::Relaxed);
+        for _ in 0..4 {
+            h.record_us(MAX_US + 100); // per-sample clamp still applies
+        }
+        let s = h.snapshot();
+        assert_eq!(s.sum_us, u64::MAX, "accumulator saturates at the top");
+        assert_eq!(s.count, 4);
+        assert!(s.mean_us() > 0.0);
     }
 
     #[test]
@@ -345,6 +592,92 @@ mod tests {
     }
 
     #[test]
+    fn snapshot_delta_isolates_the_window() {
+        let h = LatencyHistogram::new();
+        h.record_us(5);
+        h.record_us(100);
+        let first = h.snapshot();
+        h.record_us(100);
+        h.record_us(100);
+        h.record_us(4000);
+        let d = h.snapshot().delta(&first);
+        assert_eq!(d.count, 3);
+        assert_eq!(d.sum_us, 100 + 100 + 4000);
+        assert_eq!(d.counts[bucket_index(5)], 0, "pre-window samples excluded");
+        assert_eq!(d.counts[bucket_index(100)], 2);
+        assert_eq!(d.counts[bucket_index(4000)], 1);
+        // A mismatched pair saturates to empty rather than wrapping.
+        let z = first.delta(&h.snapshot());
+        assert_eq!(z.count, 0);
+        assert!(z.counts.iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn per_op_histograms_sum_to_pooled() {
+        let m = Metrics::new();
+        m.record_latency_op(OpKind::Classify, Duration::from_micros(10));
+        m.record_latency_op(OpKind::Classify, Duration::from_micros(20));
+        m.record_latency_op(OpKind::LearnWay, Duration::from_micros(900));
+        m.record_latency(Duration::from_micros(77)); // lands in Other
+        let s = m.snapshot();
+        assert_eq!(s.completed, 4);
+        assert_eq!(s.op_hist(OpKind::Classify).count, 2);
+        assert_eq!(s.op_hist(OpKind::LearnWay).count, 1);
+        assert_eq!(s.op_hist(OpKind::Other).count, 1);
+        let mut summed = HistSnapshot::default();
+        for h in &s.per_op {
+            summed.merge(h);
+        }
+        assert_eq!(summed.counts, s.latency_hist.counts, "per-op buckets sum to pooled");
+        assert_eq!(summed.count, s.latency_hist.count);
+        assert_eq!(summed.sum_us, s.latency_hist.sum_us);
+    }
+
+    #[test]
+    fn concurrent_recording_never_loses_counts() {
+        // Multi-threaded stress: N threads record into one Metrics with
+        // rotating op kinds while a reader merges live snapshots. At the
+        // end the per-op totals must equal the pooled total and the summed
+        // count must equal the number of recorded samples exactly.
+        use std::sync::Arc;
+        let m = Arc::new(Metrics::new());
+        let threads = 4;
+        let per_thread = 2000u64;
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per_thread {
+                    let op = OpKind::ALL[(t as usize + i as usize) % OpKind::COUNT];
+                    m.record_latency_op(op, Duration::from_micros(1 + (i % 512)));
+                }
+            }));
+        }
+        // Live merging while writers run: merge must never panic or go
+        // backwards in total count.
+        let mut last = 0u64;
+        for _ in 0..50 {
+            let mut s = m.snapshot();
+            s.merge(&m.snapshot());
+            assert!(s.completed >= last, "merged totals are monotonic");
+            last = s.completed / 2;
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = m.snapshot();
+        let total = threads as u64 * per_thread;
+        assert_eq!(s.completed, total);
+        assert_eq!(s.latency_hist.count, total);
+        let mut summed = HistSnapshot::default();
+        for h in &s.per_op {
+            summed.merge(h);
+        }
+        assert_eq!(summed.count, total, "no sample lost between pooled and per-op");
+        assert_eq!(summed.counts, s.latency_hist.counts);
+    }
+
+    #[test]
     fn snapshot_merge_combines_counters() {
         let m1 = Metrics::new();
         let m2 = Metrics::new();
@@ -359,5 +692,42 @@ mod tests {
         assert_eq!(s.evictions, 1);
         assert!(s.p99_latency_us > 900.0);
         assert!(s.p50_latency_us <= 11.0);
+    }
+
+    #[test]
+    fn snapshot_merge_combines_gauges() {
+        let m1 = Metrics::new();
+        let m2 = Metrics::new();
+        m1.queue_depth.store(3, Ordering::Relaxed);
+        m1.in_flight.store(2, Ordering::Relaxed);
+        m2.queue_depth.store(5, Ordering::Relaxed);
+        let mut a = m1.snapshot();
+        a.sessions_live = 4;
+        a.session_bytes = 104;
+        a.backlog_hwm = 7;
+        let mut b = m2.snapshot();
+        b.sessions_live = 1;
+        b.session_bytes = 26;
+        b.backlog_hwm = 12;
+        a.merge(&b);
+        assert_eq!(a.queue_depth, 8);
+        assert_eq!(a.in_flight, 2);
+        assert_eq!(a.sessions_live, 5);
+        assert_eq!(a.session_bytes, 130);
+        assert_eq!(a.backlog_hwm, 12, "high-water merges by max");
+    }
+
+    #[test]
+    fn op_kind_indexing_is_stable() {
+        for (i, op) in OpKind::ALL.iter().enumerate() {
+            assert_eq!(op.index(), i);
+            assert_eq!(OpKind::from_index(i), Some(*op));
+        }
+        assert_eq!(OpKind::from_index(OpKind::COUNT), None);
+        // Names are unique (they key the JSON dump).
+        let mut names: Vec<_> = OpKind::ALL.iter().map(|o| o.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), OpKind::COUNT);
     }
 }

@@ -7,12 +7,14 @@
 //! latency/throughput metrics, and an audio windower for streaming KWS.
 
 pub mod engine;
+pub mod flight;
 pub mod metrics;
 pub mod server;
 pub mod streaming;
 
 pub use engine::{Engine, EngineKind, Forward};
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use flight::{FlightEvent, FlightKind, FlightRecorder};
+pub use metrics::{HistSnapshot, LatencyHistogram, Metrics, MetricsSnapshot, OpKind};
 pub use server::{
     Coordinator, CoordinatorConfig, ManyItem, ReplySink, Request, Response, SessionId,
     SessionInfoData, StreamDecision, StreamInfo,

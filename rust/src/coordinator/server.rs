@@ -17,7 +17,8 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::engine::Engine;
-use crate::coordinator::metrics::Metrics;
+use crate::coordinator::flight::{FlightEvent, FlightKind, FlightRecorder, DEFAULT_FLIGHT_CAPACITY};
+use crate::coordinator::metrics::{Metrics, OpKind};
 use crate::golden::streaming::StreamingState;
 use crate::protonet::{PreparedHead, ProtoError, ProtoHead};
 use crate::sim::learning::learning_cycles;
@@ -96,6 +97,23 @@ pub enum Request {
 }
 
 impl Request {
+    /// The metrics op this request is accounted under (per-op latency
+    /// histograms, flight-recorder attribution).
+    pub fn op_kind(&self) -> OpKind {
+        match self {
+            Request::Classify { .. } => OpKind::Classify,
+            Request::ClassifySession { .. } => OpKind::ClassifySession,
+            Request::LearnWay { .. } => OpKind::LearnWay,
+            Request::AddShots { .. } => OpKind::AddShots,
+            Request::SessionInfo { .. } => OpKind::SessionInfo,
+            Request::EvictSession { .. } => OpKind::EvictSession,
+            Request::StreamOpen { .. } => OpKind::StreamOpen,
+            Request::StreamPush { .. } => OpKind::StreamPush,
+            Request::StreamClose { .. } => OpKind::StreamClose,
+            Request::ClassifyMany { .. } => OpKind::ClassifyMany,
+        }
+    }
+
     /// Take back the reply sink — used by callers that failed to enqueue
     /// the request (e.g. the serve layer's classify fan-over after every
     /// shard rejected it) and still owe the requester an answer.
@@ -140,6 +158,20 @@ pub struct Response {
     pub many: Option<Vec<std::result::Result<ManyItem, String>>>,
     /// `SessionInfo` only: learned state + way-budget accounting.
     pub session_info: Option<SessionInfoData>,
+    /// Span: microseconds the request waited in the bounded queue
+    /// (enqueue → dequeue). Stamped by the worker on every successful
+    /// reply.
+    pub queue_us: Option<u64>,
+    /// Span: microseconds from dequeue to handler completion.
+    pub service_us: Option<u64>,
+    /// Span: microseconds spent inside the engine's forward path — a
+    /// subset of `service_us` (the rest is session-store work, head math,
+    /// and stream bookkeeping). Not carried on the wire.
+    pub engine_us: Option<u64>,
+    /// Monotonic stamp of handler completion. Never serialized; the serve
+    /// layer derives the reply's `write_us` from it when it hands the
+    /// encoded frame to the connection writer.
+    pub done_at: Option<Instant>,
 }
 
 /// A session's continual-learning state as reported by
@@ -204,11 +236,23 @@ pub struct CoordinatorConfig {
     /// paper's ~26 B/way accounting at V = 48; learning past it answers a
     /// typed `WaysExhausted` application error instead of growing.
     pub way_budget_bytes: usize,
+    /// Service-time threshold (us) beyond which a request is recorded in
+    /// the flight recorder as a `SlowRequest` (0 disables slow capture).
+    pub slow_request_us: u64,
+    /// Flight-recorder ring capacity (recent notable events kept).
+    pub flight_capacity: usize,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        CoordinatorConfig { workers: 2, queue_depth: 256, max_sessions: 1024, way_budget_bytes: 0 }
+        CoordinatorConfig {
+            workers: 2,
+            queue_depth: 256,
+            max_sessions: 1024,
+            way_budget_bytes: 0,
+            slow_request_us: 100_000,
+            flight_capacity: DEFAULT_FLIGHT_CAPACITY,
+        }
     }
 }
 
@@ -396,11 +440,20 @@ impl SessionStore {
     fn len(&self) -> usize {
         self.map.len()
     }
+
+    /// Occupancy gauges: (live sessions, prototype bytes across them).
+    /// O(n) over live entries — called on metrics snapshots, not per
+    /// request.
+    fn occupancy(&self) -> (usize, u64) {
+        let bytes = self.map.values().map(|(e, _)| e.head.bytes_used() as u64).sum();
+        (self.map.len(), bytes)
+    }
 }
 
 struct Shared {
     sessions: Mutex<SessionStore>,
     metrics: Arc<Metrics>,
+    flight: FlightRecorder,
     embed_dim: usize,
     seq_len: usize,
     in_channels: usize,
@@ -420,8 +473,11 @@ impl Shared {
 }
 
 /// The coordinator handle. Dropping it shuts the workers down.
+///
+/// The queue carries `(enqueue stamp, request)` pairs so every reply can
+/// report how long it waited before a worker picked it up (`queue_us`).
 pub struct Coordinator {
-    tx: mpsc::SyncSender<Request>,
+    tx: mpsc::SyncSender<(Instant, Request)>,
     workers: Vec<JoinHandle<()>>,
     shared: Arc<Shared>,
 }
@@ -437,7 +493,7 @@ impl Coordinator {
         if factories.is_empty() {
             bail!("need at least one engine factory");
         }
-        let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_depth);
+        let (tx, rx) = mpsc::sync_channel::<(Instant, Request)>(cfg.queue_depth);
         let rx = Arc::new(Mutex::new(rx));
         let (dim_tx, dim_rx) = mpsc::channel::<Result<(usize, usize, usize)>>();
         let shared_cell: Arc<Mutex<Option<Arc<Shared>>>> = Arc::new(Mutex::new(None));
@@ -484,6 +540,7 @@ impl Coordinator {
         let shared = Arc::new(Shared {
             sessions: Mutex::new(SessionStore::new(cfg.max_sessions, cfg.way_budget_bytes)),
             metrics: Arc::new(Metrics::new()),
+            flight: FlightRecorder::new(cfg.flight_capacity, cfg.slow_request_us),
             embed_dim,
             seq_len,
             in_channels,
@@ -496,9 +553,25 @@ impl Coordinator {
         self.shared.metrics.clone()
     }
 
-    /// Point-in-time metrics snapshot (used by the serve `Metrics` op).
+    /// Point-in-time metrics snapshot (used by the serve `Metrics` op),
+    /// with the session-store occupancy gauges filled in.
     pub fn snapshot(&self) -> crate::coordinator::metrics::MetricsSnapshot {
-        self.shared.metrics.snapshot()
+        let mut snap = self.shared.metrics.snapshot();
+        let (live, bytes) = self.shared.session_store().occupancy();
+        snap.sessions_live = live as u64;
+        snap.session_bytes = bytes;
+        snap
+    }
+
+    /// Copy of this shard's flight-recorder ring, oldest event first.
+    pub fn flight(&self) -> Vec<FlightEvent> {
+        self.shared.flight.snapshot()
+    }
+
+    /// The shard's flight recorder itself (the serve layer's `Stat` op
+    /// needs the recorded/overwritten accounting next to the ring).
+    pub fn flight_recorder(&self) -> &FlightRecorder {
+        &self.shared.flight
     }
 
     /// Embedding dimensionality of the deployed model.
@@ -546,9 +619,9 @@ impl Coordinator {
                 self.record_submission(false);
                 Ok(())
             }
-            Err(e) => {
-                self.record_submission(true);
-                Err(e)
+            Err((e, r)) => {
+                self.record_submission_as(true, r.op_kind());
+                Err((e, r))
             }
         }
     }
@@ -560,18 +633,31 @@ impl Coordinator {
     /// request, on the shard that accepted it (or, if every shard
     /// refused, on the shard whose rejection the client observes).
     pub fn try_enqueue(&self, req: Request) -> std::result::Result<(), (SubmitError, Request)> {
-        self.tx.try_send(req).map_err(|e| match e {
-            mpsc::TrySendError::Full(r) => (SubmitError::Full, r),
-            mpsc::TrySendError::Disconnected(r) => (SubmitError::Closed, r),
-        })
+        match self.tx.try_send((Instant::now(), req)) {
+            Ok(()) => {
+                self.shared.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(mpsc::TrySendError::Full((_, r))) => Err((SubmitError::Full, r)),
+            Err(mpsc::TrySendError::Disconnected((_, r))) => Err((SubmitError::Closed, r)),
+        }
     }
 
     /// Record one logical submission in this shard's metrics (see
-    /// [`Coordinator::try_enqueue`]).
+    /// [`Coordinator::try_enqueue`]). A rejection is also captured in the
+    /// flight recorder, attributed to [`OpKind::Other`] — use
+    /// [`Coordinator::record_submission_as`] when the op is known.
     pub fn record_submission(&self, rejected: bool) {
+        self.record_submission_as(rejected, OpKind::Other);
+    }
+
+    /// [`Coordinator::record_submission`] with an explicit op attribution
+    /// for the rejection flight event.
+    pub fn record_submission_as(&self, rejected: bool, op: OpKind) {
         self.shared.metrics.requests.fetch_add(1, Ordering::Relaxed);
         if rejected {
             self.shared.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            self.shared.flight.record(FlightKind::Rejection, op, "queue full (backpressure)");
         }
     }
 
@@ -674,24 +760,49 @@ impl Coordinator {
     }
 }
 
-fn worker_loop(engine: Engine, rx: Arc<Mutex<mpsc::Receiver<Request>>>, shared: Arc<Shared>) {
+fn worker_loop(
+    engine: Engine,
+    rx: Arc<Mutex<mpsc::Receiver<(Instant, Request)>>>,
+    shared: Arc<Shared>,
+) {
     loop {
         // Hold the lock only while receiving (work-stealing from one queue).
-        let req = match rx.lock().unwrap().recv() {
+        let (enqueued_at, req) = match rx.lock().unwrap().recv() {
             Ok(r) => r,
             Err(_) => return, // queue closed
         };
+        shared.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+        shared.metrics.in_flight.fetch_add(1, Ordering::Relaxed);
         let start = Instant::now();
-        let (reply, res) = run_request(&engine, req, &shared);
+        // `duration_since` saturates to zero, so a clock hiccup can never
+        // panic the worker or produce a bogus huge queue_us.
+        let queue_us = start.duration_since(enqueued_at).as_micros().min(u64::MAX as u128) as u64;
+        let op = req.op_kind();
+        engine.take_busy_us(); // reset the engine-time accumulator
+        let (reply, mut res) = run_request(&engine, req, op, &shared);
+        let service = start.elapsed();
+        let service_us = service.as_micros().min(u64::MAX as u128) as u64;
         // Unified accounting: `errors` is recorded here and only here, so
         // every failing path — classify, session classify, learn, stream —
         // counts exactly once. Metrics land *before* the reply is sent so
         // a caller that snapshots right after recv() observes its own
         // request.
-        if res.is_err() {
+        if let Err(e) = &res {
             shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+            shared.flight.record(FlightKind::Error, op, format!("{e:#}"));
         }
-        shared.metrics.record_latency(start.elapsed());
+        shared.metrics.record_latency_op(op, service);
+        if shared.flight.is_slow(service_us) {
+            let detail = format!("service {service_us}us after {queue_us}us queued");
+            shared.flight.record(FlightKind::SlowRequest, op, detail);
+        }
+        if let Ok(r) = &mut res {
+            r.queue_us = Some(queue_us);
+            r.service_us = Some(service_us);
+            r.engine_us = Some(engine.take_busy_us());
+            r.done_at = Some(Instant::now());
+        }
+        shared.metrics.in_flight.fetch_sub(1, Ordering::Relaxed);
         reply.deliver(res);
     }
 }
@@ -700,20 +811,27 @@ fn worker_loop(engine: Engine, rx: Arc<Mutex<mpsc::Receiver<Request>>>, shared: 
 /// costs one `App` error instead of the worker thread (and with it, a
 /// slice of the shard's capacity — the pre-fix failure mode was a shard
 /// that silently shrank until it hung).
-fn run_request(engine: &Engine, req: Request, shared: &Shared) -> (ReplySink, Result<Response>) {
+fn run_request(
+    engine: &Engine,
+    req: Request,
+    op: OpKind,
+    shared: &Shared,
+) -> (ReplySink, Result<Response>) {
     match req {
         Request::Classify { input, reply } => {
-            (reply, guarded(shared, || handle_classify(engine, &input, shared)))
+            (reply, guarded(shared, op, || handle_classify(engine, &input, shared)))
         }
-        Request::ClassifySession { session, input, reply } => {
-            (reply, guarded(shared, || handle_classify_session(engine, session, &input, shared)))
-        }
+        Request::ClassifySession { session, input, reply } => (
+            reply,
+            guarded(shared, op, || handle_classify_session(engine, session, &input, shared)),
+        ),
         Request::LearnWay { session, shots, reply } => {
-            (reply, guarded(shared, || handle_learn(engine, session, &shots, shared)))
+            (reply, guarded(shared, op, || handle_learn(engine, session, &shots, shared)))
         }
-        Request::AddShots { session, way, shots, reply } => {
-            (reply, guarded(shared, || handle_add_shots(engine, session, way, &shots, shared)))
-        }
+        Request::AddShots { session, way, shots, reply } => (
+            reply,
+            guarded(shared, op, || handle_add_shots(engine, session, way, &shots, shared)),
+        ),
         Request::SessionInfo { session, reply } => {
             let info = shared.session_store().info(session, shared.embed_dim);
             (reply, Ok(Response { session_info: Some(info), ..Response::default() }))
@@ -722,20 +840,21 @@ fn run_request(engine: &Engine, req: Request, shared: &Shared) -> (ReplySink, Re
             let existed = shared.session_store().remove(session);
             if existed {
                 shared.metrics.evictions.fetch_add(1, Ordering::Relaxed);
+                shared.flight.record(FlightKind::Eviction, op, format!("session {session}"));
             }
             (reply, Ok(Response { evicted: Some(existed), ..Response::default() }))
         }
         Request::StreamOpen { session, hop, reply } => {
-            (reply, guarded(shared, || handle_stream_open(engine, session, hop, shared)))
+            (reply, guarded(shared, op, || handle_stream_open(engine, session, hop, shared)))
         }
         Request::StreamPush { session, samples, reply } => {
-            (reply, guarded(shared, || handle_stream_push(session, &samples, shared)))
+            (reply, guarded(shared, op, || handle_stream_push(session, &samples, shared)))
         }
         Request::StreamClose { session, reply } => {
-            (reply, guarded(shared, || handle_stream_close(session, shared)))
+            (reply, guarded(shared, op, || handle_stream_close(session, shared)))
         }
         Request::ClassifyMany { inputs, reply } => {
-            (reply, guarded(shared, || handle_classify_many(engine, &inputs, shared)))
+            (reply, guarded(shared, op, || handle_classify_many(engine, &inputs, shared)))
         }
     }
 }
@@ -745,7 +864,7 @@ fn run_request(engine: &Engine, req: Request, shared: &Shared) -> (ReplySink, Re
 /// stateless across forwards and the session store recovers poisoned
 /// locks ([`Shared::session_store`]), so continuing after an unwind is
 /// sound.
-fn guarded<F>(shared: &Shared, f: F) -> Result<Response>
+fn guarded<F>(shared: &Shared, op: OpKind, f: F) -> Result<Response>
 where
     F: FnOnce() -> Result<Response>,
 {
@@ -754,8 +873,18 @@ where
         Err(payload) => {
             shared.metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
             let msg = panic_message(payload.as_ref());
+            shared.flight.record(FlightKind::Panic, op, msg.clone());
             Err(anyhow!("request handler panicked (worker kept alive): {msg}"))
         }
+    }
+}
+
+/// Tick the eviction counter + flight event for the LRU victim displaced
+/// by a session-creating op, if there was one.
+fn record_lru_eviction(shared: &Shared, op: OpKind, victim: Option<SessionId>) {
+    if let Some(v) = victim {
+        shared.metrics.evictions.fetch_add(1, Ordering::Relaxed);
+        shared.flight.record(FlightKind::Eviction, op, format!("LRU evicted session {v}"));
     }
 }
 
@@ -808,10 +937,9 @@ fn handle_classify_many(engine: &Engine, inputs: &[Vec<u8>], shared: &Shared) ->
             Ok(r) => r,
             Err(payload) => {
                 shared.metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
-                items.push(Err(format!(
-                    "window handler panicked (worker kept alive): {}",
-                    panic_message(payload.as_ref())
-                )));
+                let msg = panic_message(payload.as_ref());
+                shared.flight.record(FlightKind::Panic, OpKind::ClassifyMany, msg.clone());
+                items.push(Err(format!("window handler panicked (worker kept alive): {msg}")));
                 continue;
             }
         };
@@ -921,16 +1049,12 @@ fn handle_learn(
                 sessions.remove(session);
             }
             drop(sessions);
-            if lru_evicted.is_some() {
-                shared.metrics.evictions.fetch_add(1, Ordering::Relaxed);
-            }
+            record_lru_eviction(shared, OpKind::LearnWay, lru_evicted);
             return Err(anyhow::Error::new(e).context(format!("learning session {session}")));
         }
     };
     drop(sessions);
-    if lru_evicted.is_some() {
-        shared.metrics.evictions.fetch_add(1, Ordering::Relaxed);
-    }
+    record_lru_eviction(shared, OpKind::LearnWay, lru_evicted);
     shared.metrics.learn_ways.fetch_add(1, Ordering::Relaxed);
     Ok(Response {
         learned_way: Some(learned),
@@ -1024,9 +1148,7 @@ fn handle_stream_open(
     let (entry, lru_evicted) = sessions.get_or_insert(session, shared.embed_dim);
     entry.stream = Some(Arc::new(Mutex::new(state)));
     drop(sessions);
-    if lru_evicted.is_some() {
-        shared.metrics.evictions.fetch_add(1, Ordering::Relaxed);
-    }
+    record_lru_eviction(shared, OpKind::StreamOpen, lru_evicted);
     Ok(Response { stream: Some(info), ..Response::default() })
 }
 
@@ -1637,6 +1759,141 @@ mod tests {
         assert!(!c.evict_session(9).unwrap(), "double evict reports absent");
         assert!(c.classify_session(9, rand_seq(&m, &mut rng, 0, 16)).is_err());
         assert_eq!(c.metrics().snapshot().evictions, 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn replies_carry_span_decomposition() {
+        let (c, m) = mk_coord(2);
+        let mut rng = Rng::new(91);
+        let learn = c.learn_way(1, vec![rand_seq(&m, &mut rng, 0, 16)]).unwrap();
+        assert!(learn.queue_us.is_some() && learn.service_us.is_some());
+        let t0 = Instant::now();
+        let r = c.classify_session(1, rand_seq(&m, &mut rng, 0, 16)).unwrap();
+        let e2e_us = t0.elapsed().as_micros() as u64;
+        let queue = r.queue_us.expect("queue span stamped");
+        let service = r.service_us.expect("service span stamped");
+        let engine = r.engine_us.expect("engine span stamped");
+        assert!(r.done_at.is_some(), "write-span stamp present");
+        assert!(engine <= service, "engine time within service time: {engine} vs {service}");
+        // The spans nest inside what the caller observed end to end
+        // (+2 us slack for the three independent truncations).
+        assert!(queue + service <= e2e_us + 2, "{queue}+{service} vs {e2e_us}");
+        c.shutdown();
+    }
+
+    #[test]
+    fn per_op_histograms_sum_to_pooled_under_load() {
+        use crate::coordinator::metrics::HistSnapshot;
+        let (c, m) = mk_coord(4);
+        let mut rng = Rng::new(92);
+        c.learn_way(1, vec![rand_seq(&m, &mut rng, 0, 16)]).unwrap();
+        for _ in 0..8 {
+            c.classify_session(1, rand_seq(&m, &mut rng, 0, 16)).unwrap();
+        }
+        c.session_info(1).unwrap();
+        assert!(c.evict_session(1).unwrap());
+        let snap = c.snapshot();
+        let mut summed = HistSnapshot::default();
+        for h in &snap.per_op {
+            summed.merge(h);
+        }
+        assert_eq!(summed.count, snap.latency_hist.count, "per-op sums to pooled");
+        assert_eq!(summed.counts, snap.latency_hist.counts);
+        assert_eq!(snap.op_hist(OpKind::ClassifySession).count, 8);
+        assert_eq!(snap.op_hist(OpKind::LearnWay).count, 1);
+        assert_eq!(snap.op_hist(OpKind::SessionInfo).count, 1);
+        assert_eq!(snap.op_hist(OpKind::EvictSession).count, 1);
+        assert_eq!(snap.op_hist(OpKind::Other).count, 0);
+        assert_eq!(snap.sessions_live, 0, "the only session was evicted");
+        c.shutdown();
+    }
+
+    #[test]
+    fn gauges_quiesce_and_report_session_occupancy() {
+        let (c, m) = mk_coord(2);
+        let mut rng = Rng::new(94);
+        c.learn_way(1, vec![rand_seq(&m, &mut rng, 0, 16)]).unwrap();
+        c.learn_way(2, vec![rand_seq(&m, &mut rng, 0, 16)]).unwrap();
+        let snap = c.snapshot();
+        assert_eq!(snap.queue_depth, 0, "no queued requests after quiesce");
+        assert_eq!(snap.in_flight, 0, "no in-flight requests after quiesce");
+        assert_eq!(snap.sessions_live, 2);
+        let info = c.session_info(1).unwrap();
+        assert_eq!(snap.session_bytes, 2 * info.bytes_used);
+        assert!(snap.session_bytes > 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn flight_recorder_captures_a_panic_with_surrounding_events() {
+        let m = SArc::new(crate::model::tests::tiny_model());
+        let mf = m.clone();
+        let c = Coordinator::start(
+            vec![Box::new(move || {
+                Ok(Engine::chaos(mf, std::time::Duration::from_millis(1)))
+            }) as EngineFactory],
+            CoordinatorConfig {
+                workers: 1,
+                queue_depth: 16,
+                slow_request_us: 1, // flag everything measurable as slow
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut rng = Rng::new(93);
+        // Surrounding events: an app error before the panic, an eviction
+        // after it.
+        assert!(c.classify_session(8, rand_seq(&m, &mut rng, 0, 16)).is_err());
+        c.learn_way(5, vec![rand_seq(&m, &mut rng, 0, 16)]).unwrap();
+        let mut poisoned = rand_seq(&m, &mut rng, 0, 16);
+        poisoned[0] = crate::coordinator::engine::CHAOS_PANIC_TOKEN;
+        assert!(c.classify_session(5, poisoned).is_err());
+        assert!(c.evict_session(5).unwrap());
+        let events = c.flight();
+        let kinds: Vec<FlightKind> = events.iter().map(|e| e.kind).collect();
+        assert!(kinds.contains(&FlightKind::Panic), "{kinds:?}");
+        assert!(kinds.contains(&FlightKind::Error), "{kinds:?}");
+        assert!(kinds.contains(&FlightKind::Eviction), "{kinds:?}");
+        assert!(kinds.contains(&FlightKind::SlowRequest), "{kinds:?}");
+        let p = events.iter().find(|e| e.kind == FlightKind::Panic).unwrap();
+        assert!(p.detail.contains("chaos"), "{}", p.detail);
+        assert_eq!(p.op, OpKind::ClassifySession);
+        // Dumps come out ordered, timebase monotonic.
+        assert!(events.windows(2).all(|w| w[0].seq < w[1].seq));
+        assert!(events.windows(2).all(|w| w[0].at_us <= w[1].at_us));
+        c.shutdown();
+    }
+
+    #[test]
+    fn rejections_land_in_the_flight_recorder() {
+        let m = SArc::new(crate::model::tests::tiny_model());
+        let mf = m.clone();
+        let c = Coordinator::start(
+            vec![Box::new(move || Ok(Engine::sim(mf, ArrayMode::M4x4))) as EngineFactory],
+            CoordinatorConfig { workers: 1, queue_depth: 2, ..Default::default() },
+        )
+        .unwrap();
+        let mut rng = Rng::new(95);
+        let mut rejected = 0u64;
+        let mut receivers = Vec::new();
+        for _ in 0..64 {
+            let (rtx, rrx) = mpsc::channel();
+            match c.try_submit(Request::ClassifySession {
+                session: 0,
+                input: rand_seq(&m, &mut rng, 0, 16),
+                reply: rtx.into(),
+            }) {
+                Ok(()) => receivers.push(rrx),
+                Err(_) => rejected += 1,
+            }
+        }
+        assert!(rejected > 0, "expected backpressure rejections");
+        let events = c.flight();
+        let rej: Vec<_> = events.iter().filter(|e| e.kind == FlightKind::Rejection).collect();
+        assert_eq!(rej.len() as u64, rejected, "one flight event per rejection");
+        assert!(rej.iter().all(|e| e.op == OpKind::ClassifySession));
+        drop(receivers);
         c.shutdown();
     }
 }

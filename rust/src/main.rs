@@ -11,7 +11,13 @@
 //!           --stream [--chunk C --hop H --pace-hz F] drives incremental
 //!           stream sessions instead of request traffic;
 //!           --cl [--ways N --shots K --classify-frac F] drives growing-
-//!           way continual-learning sessions (protocol v4 AddShots)
+//!           way continual-learning sessions (protocol v4 AddShots);
+//!           --report-secs N prints interval throughput + percentiles
+//!           while a request-mode run is in flight
+//!   stat    [--addr H:P | --loopback]  dump a server's observability
+//!           surface (protocol v5): metrics gauges, per-op latency table
+//!           and the flight-recorder event ring; --json emits a
+//!           machine-readable document (the CI artifact path)
 //!   cl      [--ways N --shots K]  artifact-free synthetic continual-
 //!           learning trajectory (Fig. 15 shape) over a loopback server:
 //!           incremental AddShots vs all-at-once bit-identity + byte
@@ -57,6 +63,7 @@ fn main() {
         "learn" => cmd_learn(&args),
         "serve" => cmd_serve(&args),
         "loadgen" => cmd_loadgen(&args),
+        "stat" => cmd_stat(&args),
         "cl" => cmd_cl(&args),
         "drive" => cmd_drive(&args),
         "bench" => cmd_bench(&args),
@@ -66,7 +73,7 @@ fn main() {
         other => {
             eprintln!(
                 "unknown command {other:?}; try \
-                 info|infer|learn|serve|loadgen|cl|drive|bench|power|verify|hlo-stats"
+                 info|infer|learn|serve|loadgen|stat|cl|drive|bench|power|verify|hlo-stats"
             );
             std::process::exit(2);
         }
@@ -257,6 +264,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         queue_depth: args.get_usize("queue-depth", 256)?,
         max_sessions: args.get_usize("max-sessions", 1024)?,
         way_budget_bytes: args.get_usize("way-budget", 0)?,
+        slow_request_us: args.get_u64("slow-request-us", 100_000)?,
+        flight_capacity: args.get_usize("flight-capacity", 256)?,
         ..Default::default()
     };
     let engine_kind = args.get_or("engine", "golden").to_string();
@@ -324,6 +333,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         connections: args.get_usize("connections", 4)?,
         pipeline: args.get_usize("pipeline", 1)?,
         batch: args.get_usize("batch", 0)?,
+        report_secs: args.get_u64("report-secs", 0)?,
         seed: args.get_u64("seed", 1)?,
     };
     println!(
@@ -409,6 +419,130 @@ fn cmd_loadgen_cl(args: &Args) -> Result<()> {
         bail!("{} protocol errors observed", report.protocol_errors);
     }
     Ok(())
+}
+
+/// Dump a serve endpoint's observability surface (protocol v5): the
+/// aggregated metrics — counters, gauges, per-op latency table — plus the
+/// flight-recorder event ring. `--loopback` spins up a built-in demo
+/// server, drives a short traffic burst through it (slow threshold forced
+/// to 1 us so the recorder demonstrably captures events) and dumps that
+/// instead — the CI artifact path. `--json` emits a machine-readable
+/// document on stdout.
+fn cmd_stat(args: &Args) -> Result<()> {
+    use chameleon::serve::{Client, WireRequest};
+    let (metrics, stat) = if args.flag("loopback") {
+        let model = Arc::new(chameleon::model::demo_tiny_kws());
+        let cfg = ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            shards: 2,
+            workers_per_shard: 2,
+            slow_request_us: 1,
+            ..Default::default()
+        };
+        let m = model.clone();
+        let server = Server::start(cfg, move |_shard, _worker| {
+            let m = m.clone();
+            Box::new(move || Ok(Engine::golden(m))) as EngineFactory
+        })?;
+        let mut client = Client::connect(server.local_addr().to_string())?;
+        let input_len = model.seq_len * model.in_channels;
+        let mut rng = Rng::new(7);
+        for _ in 0..32 {
+            let w: Vec<u8> = (0..input_len).map(|_| rng.below(16) as u8).collect();
+            client.classify(w)?;
+        }
+        // One wrong-length window so the dump also shows an error event.
+        let _ = client.call(&WireRequest::Classify { input: vec![1] });
+        let out = (client.metrics()?, client.stat()?);
+        drop(client);
+        server.shutdown();
+        out
+    } else {
+        let addr = args.get_or("addr", "127.0.0.1:7070").to_string();
+        let mut client =
+            Client::connect(addr.as_str()).with_context(|| format!("connecting to {addr}"))?;
+        (client.metrics()?, client.stat()?)
+    };
+    if args.flag("json") {
+        println!("{}", json::emit(&stat_to_json(&metrics, &stat)));
+    } else {
+        println!("{}", metrics.report());
+        println!(
+            "flight: {} recorded, {} overwritten, {} in ring",
+            stat.recorded,
+            stat.overwritten,
+            stat.events.len()
+        );
+        for e in &stat.events {
+            println!(
+                "  #{} +{}us {} {}: {}",
+                e.seq,
+                e.at_us,
+                e.kind_name(),
+                e.op_name(),
+                e.detail
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Build the `stat --json` document from the wire payloads.
+fn stat_to_json(
+    metrics: &chameleon::serve::MetricsWire,
+    stat: &chameleon::serve::StatWire,
+) -> json::Value {
+    use json::Value;
+    use std::collections::HashMap;
+    let num = |v: u64| Value::Num(v as f64);
+    let per_op: Vec<Value> = metrics
+        .per_op
+        .iter()
+        .map(|r| {
+            Value::Obj(HashMap::from([
+                ("op".to_string(), Value::Str(r.op_name())),
+                ("count".to_string(), num(r.count)),
+                ("p50_us".to_string(), Value::Num(r.p50_us)),
+                ("p95_us".to_string(), Value::Num(r.p95_us)),
+                ("p99_us".to_string(), Value::Num(r.p99_us)),
+            ]))
+        })
+        .collect();
+    let events: Vec<Value> = stat
+        .events
+        .iter()
+        .map(|e| {
+            Value::Obj(HashMap::from([
+                ("seq".to_string(), num(e.seq)),
+                ("at_us".to_string(), num(e.at_us)),
+                ("kind".to_string(), Value::Str(e.kind_name())),
+                ("op".to_string(), Value::Str(e.op_name())),
+                ("detail".to_string(), Value::Str(e.detail.clone())),
+            ]))
+        })
+        .collect();
+    let flight = Value::Obj(HashMap::from([
+        ("recorded".to_string(), num(stat.recorded)),
+        ("overwritten".to_string(), num(stat.overwritten)),
+        ("events".to_string(), Value::Arr(events)),
+    ]));
+    Value::Obj(HashMap::from([
+        ("requests".to_string(), num(metrics.requests)),
+        ("completed".to_string(), num(metrics.completed)),
+        ("errors".to_string(), num(metrics.errors)),
+        ("rejected".to_string(), num(metrics.rejected)),
+        ("worker_panics".to_string(), num(metrics.worker_panics)),
+        ("queue_depth".to_string(), num(metrics.queue_depth)),
+        ("in_flight".to_string(), num(metrics.in_flight)),
+        ("sessions_live".to_string(), num(metrics.sessions_live)),
+        ("session_bytes".to_string(), num(metrics.session_bytes)),
+        ("backlog_hwm".to_string(), num(metrics.backlog_hwm)),
+        ("p50_latency_us".to_string(), Value::Num(metrics.p50_latency_us)),
+        ("p95_latency_us".to_string(), Value::Num(metrics.p95_latency_us)),
+        ("p99_latency_us".to_string(), Value::Num(metrics.p99_latency_us)),
+        ("per_op".to_string(), Value::Arr(per_op)),
+        ("flight".to_string(), flight),
+    ]))
 }
 
 /// Artifact-free synthetic continual-learning driver: the paper's Fig. 15

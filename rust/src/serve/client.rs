@@ -34,8 +34,8 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::serve::proto::{
-    self, BatchItem, ErrorCode, HealthWire, MetricsWire, SessionInfoWire, WireDecision, WireReply,
-    WireRequest, WireResponse,
+    self, BatchItem, ErrorCode, HealthWire, MetricsWire, SessionInfoWire, StatWire, WireDecision,
+    WireReply, WireRequest, WireResponse,
 };
 
 /// Client tuning knobs.
@@ -506,6 +506,18 @@ impl Client {
     pub fn metrics(&mut self) -> Result<MetricsWire> {
         match self.call(&WireRequest::Metrics)? {
             WireResponse::Metrics(m) => Ok(m),
+            WireResponse::Error { code, message } => {
+                bail!("server error ({code:?}): {message}")
+            }
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Flight-recorder dump merged across all shards (v5). Fails locally
+    /// with a version error when this client speaks an older protocol.
+    pub fn stat(&mut self) -> Result<StatWire> {
+        match self.call(&WireRequest::Stat)? {
+            WireResponse::Stat(st) => Ok(st),
             WireResponse::Error { code, message } => {
                 bail!("server error ({code:?}): {message}")
             }

@@ -37,7 +37,7 @@
 //! classifies.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -70,6 +70,12 @@ pub struct LoadgenConfig {
     /// session-less windows instead of the session mix (needs a model
     /// with a built-in head).
     pub batch: usize,
+    /// When > 0, print an in-flight progress line to stderr every this
+    /// many seconds: completed throughput plus p50/p95/p99 over the
+    /// *interval* (a [`HistSnapshot::delta`] against the previous tick),
+    /// so a tail that develops mid-run is visible before the final report
+    /// averages it away.
+    pub report_secs: u64,
     pub seed: u64,
 }
 
@@ -85,6 +91,7 @@ impl Default for LoadgenConfig {
             connections: 4,
             pipeline: 1,
             batch: 0,
+            report_secs: 0,
             seed: 1,
         }
     }
@@ -234,6 +241,49 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
 
     // ---- drain the schedule over N connections --------------------------
     let start = Instant::now();
+
+    // Optional in-flight progress reporter: interval percentiles come
+    // from snapshot deltas, so each line describes only its own window.
+    let stop = Arc::new(AtomicBool::new(false));
+    let reporter = if cfg.report_secs > 0 {
+        let counters = counters.clone();
+        let hist = hist.clone();
+        let stop = stop.clone();
+        let period = Duration::from_secs(cfg.report_secs);
+        let total = schedule.len();
+        Some(
+            std::thread::Builder::new()
+                .name("loadgen-report".to_string())
+                .spawn(move || {
+                    let mut prev = hist.snapshot();
+                    let mut last = Instant::now();
+                    while !stop.load(Ordering::Relaxed) {
+                        std::thread::sleep(Duration::from_millis(100));
+                        if last.elapsed() < period {
+                            continue;
+                        }
+                        let snap = hist.snapshot();
+                        let delta = snap.delta(&prev);
+                        let secs = last.elapsed().as_secs_f64().max(1e-9);
+                        let sent = counters.next.load(Ordering::Relaxed).min(total);
+                        eprintln!(
+                            "[loadgen] sent {sent}/{total}  last {secs:.1}s: \
+                             {:.1} done/s p50={:.0}us p95={:.0}us p99={:.0}us",
+                            delta.count as f64 / secs,
+                            delta.percentile_us(50.0),
+                            delta.percentile_us(95.0),
+                            delta.percentile_us(99.0),
+                        );
+                        prev = snap;
+                        last = Instant::now();
+                    }
+                })
+                .context("spawning loadgen reporter")?,
+        )
+    } else {
+        None
+    };
+
     let mut workers = Vec::new();
     for wid in 0..cfg.connections.max(1) {
         let schedule = schedule.clone();
@@ -363,12 +413,28 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
                 .context("spawning loadgen worker")?,
         );
     }
+    // Stop the reporter before surfacing any worker failure, so an error
+    // return never leaks a thread printing into a dead run.
+    let mut worker_err: Option<anyhow::Error> = None;
     for w in workers {
         match w.join() {
             Ok(Ok(())) => {}
-            Ok(Err(e)) => return Err(e.context("loadgen worker failed")),
-            Err(_) => bail!("loadgen worker panicked"),
+            Ok(Err(e)) if worker_err.is_none() => {
+                worker_err = Some(e.context("loadgen worker failed"));
+            }
+            Ok(Err(_)) => {}
+            Err(_) if worker_err.is_none() => {
+                worker_err = Some(anyhow::anyhow!("loadgen worker panicked"));
+            }
+            Err(_) => {}
         }
+    }
+    stop.store(true, Ordering::Relaxed);
+    if let Some(r) = reporter {
+        let _ = r.join();
+    }
+    if let Some(e) = worker_err {
+        return Err(e);
     }
     let wall = start.elapsed();
 

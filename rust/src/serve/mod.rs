@@ -8,7 +8,10 @@
 //! * [`proto`]  — length-prefixed, versioned binary wire protocol (v2
 //!   adds the incremental stream ops; v3 adds tagged frames for request
 //!   pipelining and the `ClassifyBatch` op; v4 adds the continual-
-//!   learning ops `AddShots`/`SessionInfo` and way-budget accounting);
+//!   learning ops `AddShots`/`SessionInfo` and way-budget accounting;
+//!   v5 adds the observability surface: per-reply span decomposition,
+//!   metrics gauges + per-op latency table, and the `Stat`
+//!   flight-recorder dump);
 //! * [`server`] — thread-per-connection TCP server over N coordinator
 //!   shards, with a reader/dispatcher/writer split per connection so v3
 //!   requests pipeline (responses return in completion order): sessions
@@ -43,7 +46,7 @@ pub use loadgen::{
     ClLoadConfig, ClLoadReport, LoadReport, LoadgenConfig, StreamLoadConfig, StreamReport,
 };
 pub use proto::{
-    BatchItem, ErrorCode, HealthWire, MetricsWire, RequestFrame, ResponseFrame, SessionInfoWire,
-    WireDecision, WireReply, WireRequest, WireResponse,
+    BatchItem, ErrorCode, FlightEventWire, HealthWire, MetricsWire, OpMetricsWire, RequestFrame,
+    ResponseFrame, SessionInfoWire, StatWire, WireDecision, WireReply, WireRequest, WireResponse,
 };
 pub use server::{shard_of, ServeConfig, Server};

@@ -28,7 +28,8 @@
 //! | `0x0A` | v3    | request   | `ClassifyBatch { inputs: list<bytes> }` |
 //! | `0x0B` | v4    | request   | `AddShots { session: u64, way: u64, shots: list<bytes> }` |
 //! | `0x0C` | v4    | request   | `SessionInfo { session: u64 }` |
-//! | `0x81` | v1    | response  | `Reply { predicted?, logits?, learned_way?, cycles? }` |
+//! | `0x0D` | v5    | request   | `Stat` (flight-recorder dump) |
+//! | `0x81` | v1    | response  | `Reply { predicted?, logits?, learned_way?, cycles?, spans? (v5) }` |
 //! | `0x82` | v1    | response  | `Health { shards, sessions, input_len, embed_dim, window (v2), channels (v2) }` |
 //! | `0x83` | v1    | response  | `Metrics { counters..., latency percentiles }` |
 //! | `0x84` | v1    | response  | `Evicted { existed: u8 }` |
@@ -37,6 +38,7 @@
 //! | `0x87` | v2    | response  | `StreamClosed { existed: u8, windows: u64 }` |
 //! | `0x88` | v3    | response  | `ReplyBatch(list<item>)` |
 //! | `0x89` | v4    | response  | `SessionInfo { exists, ways, shots, bytes_used, bytes_per_way, way_cap }` |
+//! | `0x8A` | v5    | response  | `Stat { recorded, overwritten, events: list<event> }` |
 //! | `0xFF` | v1    | response  | `Error { code: u8, message: string }` |
 //!
 //! # Versioning
@@ -48,9 +50,10 @@
 //! simply decode as zero; the v3 `request_id` tag is absent and reads as
 //! 0). The server replies **at the requester's version**
 //! ([`encode_response_versioned`]), omitting newer payload fields and the
-//! tag from older frames, so strict v1/v2/v3 clients keep working against
-//! a v4 server. Version-gated opcodes (streams in v2, batch in v3, the
-//! continual-learning ops in v4) inside an older frame are malformed.
+//! tag from older frames, so strict v1..v4 clients keep working against
+//! a v5 server. Version-gated opcodes (streams in v2, batch in v3, the
+//! continual-learning ops in v4, the stat dump in v5) inside an older
+//! frame are malformed.
 //!
 //! # Continual learning (v4)
 //!
@@ -77,6 +80,23 @@
 //! fans them out across shards and answers with one `ReplyBatch` whose
 //! items are in input order, each independently a reply or an error.
 //!
+//! # Observability (v5)
+//!
+//! Every v5 `Reply` (including each `ReplyBatch` item) appends a span
+//! decomposition of the request's life inside the server: `queue_us`
+//! (enqueue → worker pickup), `service_us` (worker pickup → handler done)
+//! and `write_us` (handler done → reply handed to the connection writer),
+//! so a client can split its observed end-to-end latency into queueing,
+//! compute, and reply-path time without any out-of-band tooling.
+//! `Metrics` gains live gauges (queue depth, in-flight requests,
+//! session-store occupancy and prototype bytes, writer-backlog high-water
+//! mark) plus a per-op latency table keyed by stable op ids (see
+//! [`crate::coordinator::OpKind`]). The new `Stat` op dumps the server's
+//! flight recorder — its ring of recent notable events (errors, panics,
+//! evictions, rejections, slow requests) merged across shards — for
+//! post-hoc debugging of exactly the requests that went wrong. Pre-v5
+//! frames carry none of this and decode exactly as v4 shipped.
+//!
 //! A frame whose length prefix exceeds [`MAX_FRAME`] bytes (or is too short
 //! to hold the header), whose version byte is unknown, or whose payload
 //! does not decode exactly, is *malformed*: the server answers with an
@@ -91,7 +111,7 @@ use anyhow::{bail, Result};
 
 /// Highest protocol version this build speaks; every encoded frame
 /// carries it.
-pub const VERSION: u8 = 4;
+pub const VERSION: u8 = 5;
 
 /// Oldest protocol version still accepted on decode.
 pub const MIN_VERSION: u8 = 1;
@@ -118,6 +138,7 @@ const OP_STREAM_CLOSE: u8 = 0x09;
 const OP_CLASSIFY_BATCH: u8 = 0x0A;
 const OP_ADD_SHOTS: u8 = 0x0B;
 const OP_SESSION_INFO: u8 = 0x0C;
+const OP_STAT: u8 = 0x0D;
 
 // Response opcodes.
 const OP_REPLY: u8 = 0x81;
@@ -129,6 +150,7 @@ const OP_STREAM_DECISIONS: u8 = 0x86;
 const OP_STREAM_CLOSED: u8 = 0x87;
 const OP_REPLY_BATCH: u8 = 0x88;
 const OP_SESSION_INFO_REPLY: u8 = 0x89;
+const OP_STAT_REPLY: u8 = 0x8A;
 const OP_ERROR: u8 = 0xFF;
 
 /// Client -> server messages.
@@ -165,6 +187,9 @@ pub enum WireRequest {
     AddShots { session: u64, way: u64, shots: Vec<Vec<u8>> },
     /// v4: report a session's learned state and memory accounting.
     SessionInfo { session: u64 },
+    /// v5: dump the server's flight recorder (recent notable events,
+    /// merged across shards).
+    Stat,
 }
 
 /// Server -> client messages.
@@ -185,7 +210,69 @@ pub enum WireResponse {
     ReplyBatch(Vec<BatchItem>),
     /// v4: a session's learned state + way-budget accounting.
     SessionInfo(SessionInfoWire),
+    /// v5: the flight-recorder dump (recent notable events, oldest first).
+    Stat(StatWire),
     Error { code: ErrorCode, message: String },
+}
+
+/// v5 `Stat` payload: the flight recorder's accounting plus its current
+/// ring contents, oldest first. `recorded - events.len()` events have
+/// been discarded by ring wrap (≈ `overwritten`).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct StatWire {
+    /// Total events ever recorded across all shards.
+    pub recorded: u64,
+    /// Total events discarded by ring wrap across all shards.
+    pub overwritten: u64,
+    pub events: Vec<FlightEventWire>,
+}
+
+/// One flight-recorder event on the wire (see
+/// [`crate::coordinator::FlightEvent`]). `kind` and `op` are the stable
+/// u8 ids of [`crate::coordinator::FlightKind`] /
+/// [`crate::coordinator::OpKind`]; unknown ids from a newer peer are kept
+/// verbatim rather than rejected.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FlightEventWire {
+    /// Per-shard monotonic sequence number.
+    pub seq: u64,
+    /// Microseconds since the owning shard started.
+    pub at_us: u64,
+    pub kind: u8,
+    pub op: u8,
+    /// Short free-form context (error text, panic message, session id…).
+    pub detail: String,
+}
+
+impl From<&crate::coordinator::FlightEvent> for FlightEventWire {
+    fn from(e: &crate::coordinator::FlightEvent) -> FlightEventWire {
+        FlightEventWire {
+            seq: e.seq,
+            at_us: e.at_us,
+            kind: e.kind.id(),
+            op: e.op.index() as u8,
+            detail: e.detail.clone(),
+        }
+    }
+}
+
+impl FlightEventWire {
+    /// Human-readable kind name (falls back to the raw id for ids newer
+    /// than this build).
+    pub fn kind_name(&self) -> String {
+        match crate::coordinator::FlightKind::from_id(self.kind) {
+            Some(k) => k.name().to_string(),
+            None => format!("kind{}", self.kind),
+        }
+    }
+
+    /// Human-readable op name (falls back to the raw id).
+    pub fn op_name(&self) -> String {
+        match crate::coordinator::OpKind::from_index(self.op as usize) {
+            Some(o) => o.name().to_string(),
+            None => format!("op{}", self.op),
+        }
+    }
 }
 
 /// v4 `SessionInfo` payload: the session's continual-learning state and
@@ -247,6 +334,15 @@ pub struct WireReply {
     pub logits: Option<Vec<i32>>,
     pub learned_way: Option<u64>,
     pub sim_cycles: Option<u64>,
+    /// v5: microseconds the request waited in the shard queue before a
+    /// worker picked it up; `None` from a pre-v5 peer.
+    pub queue_us: Option<u64>,
+    /// v5: microseconds the worker spent servicing the request (handler
+    /// start → handler done); `None` from a pre-v5 peer.
+    pub service_us: Option<u64>,
+    /// v5: microseconds between the handler finishing and the reply being
+    /// handed to the connection writer; `None` from a pre-v5 peer.
+    pub write_us: Option<u64>,
 }
 
 /// Health probe payload: enough for a client (or the load generator) to
@@ -289,10 +385,59 @@ pub struct MetricsWire {
     pub p50_latency_us: f64,
     pub p95_latency_us: f64,
     pub p99_latency_us: f64,
+    /// v5: requests sitting in shard queues right now; 0 from a pre-v5
+    /// peer (as are the gauges and the per-op table below).
+    pub queue_depth: u64,
+    /// v5: requests currently inside worker handlers.
+    pub in_flight: u64,
+    /// v5: live sessions across all shards.
+    pub sessions_live: u64,
+    /// v5: prototype bytes held by live sessions.
+    pub session_bytes: u64,
+    /// v5: max writer backlog any connection has reached (frames).
+    pub backlog_hwm: u64,
+    /// v5: per-op latency table, one entry per [`crate::coordinator::OpKind`]
+    /// in stable id order; empty from a pre-v5 peer.
+    pub per_op: Vec<OpMetricsWire>,
+}
+
+/// One per-op row of the v5 `Metrics` payload.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct OpMetricsWire {
+    /// Stable [`crate::coordinator::OpKind`] id.
+    pub op: u8,
+    pub count: u64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+}
+
+impl OpMetricsWire {
+    /// Human-readable op name (falls back to the raw id).
+    pub fn op_name(&self) -> String {
+        match crate::coordinator::OpKind::from_index(self.op as usize) {
+            Some(o) => o.name().to_string(),
+            None => format!("op{}", self.op),
+        }
+    }
 }
 
 impl From<&crate::coordinator::metrics::MetricsSnapshot> for MetricsWire {
     fn from(s: &crate::coordinator::metrics::MetricsSnapshot) -> MetricsWire {
+        use crate::coordinator::OpKind;
+        let per_op = OpKind::ALL
+            .iter()
+            .map(|&op| {
+                let h = s.op_hist(op);
+                OpMetricsWire {
+                    op: op.index() as u8,
+                    count: h.count,
+                    p50_us: h.percentile_us(50.0),
+                    p95_us: h.percentile_us(95.0),
+                    p99_us: h.percentile_us(99.0),
+                }
+            })
+            .collect();
         MetricsWire {
             requests: s.requests,
             completed: s.completed,
@@ -309,6 +454,12 @@ impl From<&crate::coordinator::metrics::MetricsSnapshot> for MetricsWire {
             p50_latency_us: s.p50_latency_us,
             p95_latency_us: s.p95_latency_us,
             p99_latency_us: s.p99_latency_us,
+            queue_depth: s.queue_depth,
+            in_flight: s.in_flight,
+            sessions_live: s.sessions_live,
+            session_bytes: s.session_bytes,
+            backlog_hwm: s.backlog_hwm,
+            per_op,
         }
     }
 }
@@ -318,7 +469,7 @@ impl MetricsWire {
     /// (coordinator/metrics.rs) — same fields, wire side simply lacks the
     /// raw histogram.
     pub fn report(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} completed={} errors={} worker_panics={} rejected={} learned_ways={} \
              add_shots={} evictions={} stream_chunks={} stream_decisions={} \
              latency mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us sim_cycles={}",
@@ -337,7 +488,26 @@ impl MetricsWire {
             self.p95_latency_us,
             self.p99_latency_us,
             self.sim_cycles,
-        )
+        );
+        s.push_str(&format!(
+            " queued={} in_flight={} sessions={} session_bytes={} backlog_hwm={}",
+            self.queue_depth,
+            self.in_flight,
+            self.sessions_live,
+            self.session_bytes,
+            self.backlog_hwm,
+        ));
+        for row in self.per_op.iter().filter(|r| r.count > 0) {
+            s.push_str(&format!(
+                "\n  {}: n={} p50={:.1}us p95={:.1}us p99={:.1}us",
+                row.op_name(),
+                row.count,
+                row.p50_us,
+                row.p95_us,
+                row.p99_us,
+            ));
+        }
+        s
     }
 }
 
@@ -434,11 +604,18 @@ fn put_opt_i32s(out: &mut Vec<u8>, v: &Option<Vec<i32>>) {
     }
 }
 
-fn put_reply(out: &mut Vec<u8>, r: &WireReply) {
+/// A reply payload at protocol version `v`: the span fields only exist on
+/// v5+ frames (shared by `Reply` and each `ReplyBatch` item).
+fn put_reply(out: &mut Vec<u8>, r: &WireReply, v: u8) {
     put_opt_u64(out, r.predicted);
     put_opt_i32s(out, &r.logits);
     put_opt_u64(out, r.learned_way);
     put_opt_u64(out, r.sim_cycles);
+    if v >= 5 {
+        put_opt_u64(out, r.queue_us);
+        put_opt_u64(out, r.service_us);
+        put_opt_u64(out, r.write_us);
+    }
 }
 
 /// Frame header: version, opcode, and the v3 pipelining tag.
@@ -451,7 +628,7 @@ fn head(v: u8, opcode: u8, request_id: u64) -> Vec<u8> {
 }
 
 /// Lowest protocol version that can carry this request (streams: v2,
-/// batch: v3, continual-learning ops: v4). Clients speaking an older
+/// batch: v3, continual-learning ops: v4, stat: v5). Clients speaking an older
 /// version must refuse such ops rather than silently up-version the
 /// frame — a server treats any v3+ frame as pipelined, which would break
 /// an in-order client's response matching.
@@ -462,6 +639,7 @@ pub fn request_min_version(req: &WireRequest) -> u8 {
         | WireRequest::StreamClose { .. } => 2,
         WireRequest::ClassifyBatch { .. } => 3,
         WireRequest::AddShots { .. } | WireRequest::SessionInfo { .. } => 4,
+        WireRequest::Stat => 5,
         _ => 1,
     }
 }
@@ -474,6 +652,7 @@ fn response_min_version(resp: &WireResponse) -> u8 {
         | WireResponse::StreamClosed { .. } => 2,
         WireResponse::ReplyBatch(_) => 3,
         WireResponse::SessionInfo(_) => 4,
+        WireResponse::Stat(_) => 5,
         _ => 1,
     }
 }
@@ -492,6 +671,7 @@ fn request_opcode(req: &WireRequest) -> u8 {
         WireRequest::ClassifyBatch { .. } => OP_CLASSIFY_BATCH,
         WireRequest::AddShots { .. } => OP_ADD_SHOTS,
         WireRequest::SessionInfo { .. } => OP_SESSION_INFO,
+        WireRequest::Stat => OP_STAT,
     }
 }
 
@@ -506,6 +686,7 @@ fn response_opcode(resp: &WireResponse) -> u8 {
         WireResponse::StreamClosed { .. } => OP_STREAM_CLOSED,
         WireResponse::ReplyBatch(_) => OP_REPLY_BATCH,
         WireResponse::SessionInfo(_) => OP_SESSION_INFO_REPLY,
+        WireResponse::Stat(_) => OP_STAT_REPLY,
         WireResponse::Error { .. } => OP_ERROR,
     }
 }
@@ -538,7 +719,7 @@ pub fn encode_request_versioned(req: &WireRequest, version: u8, request_id: u64)
             }
         }
         WireRequest::EvictSession { session } => put_u64(&mut b, *session),
-        WireRequest::Health | WireRequest::Metrics => {}
+        WireRequest::Health | WireRequest::Metrics | WireRequest::Stat => {}
         WireRequest::StreamOpen { session, hop } => {
             put_u64(&mut b, *session);
             put_u32(&mut b, *hop);
@@ -584,7 +765,7 @@ pub fn encode_response_versioned(resp: &WireResponse, version: u8, request_id: u
     let v = version.clamp(MIN_VERSION, VERSION).max(response_min_version(resp));
     let mut b = head(v, response_opcode(resp), request_id);
     match resp {
-        WireResponse::Reply(r) => put_reply(&mut b, r),
+        WireResponse::Reply(r) => put_reply(&mut b, r, v),
         WireResponse::Health(h) => {
             put_u32(&mut b, h.shards);
             put_u64(&mut b, h.live_sessions);
@@ -615,6 +796,22 @@ pub fn encode_response_versioned(resp: &WireResponse, version: u8, request_id: u
             for c in [m.mean_latency_us, m.p50_latency_us, m.p95_latency_us, m.p99_latency_us] {
                 put_f64(&mut b, c);
             }
+            if v >= 5 {
+                for g in [
+                    m.queue_depth, m.in_flight, m.sessions_live,
+                    m.session_bytes, m.backlog_hwm,
+                ] {
+                    put_u64(&mut b, g);
+                }
+                put_u32(&mut b, m.per_op.len() as u32);
+                for row in &m.per_op {
+                    b.push(row.op);
+                    put_u64(&mut b, row.count);
+                    put_f64(&mut b, row.p50_us);
+                    put_f64(&mut b, row.p95_us);
+                    put_f64(&mut b, row.p99_us);
+                }
+            }
         }
         WireResponse::Evicted { existed } => b.push(u8::from(*existed)),
         WireResponse::StreamOpened { window, hop } => {
@@ -643,7 +840,7 @@ pub fn encode_response_versioned(resp: &WireResponse, version: u8, request_id: u
                 match item {
                     BatchItem::Reply(r) => {
                         b.push(0);
-                        put_reply(&mut b, r);
+                        put_reply(&mut b, r, v);
                     }
                     BatchItem::Error { code, message } => {
                         b.push(1);
@@ -660,6 +857,18 @@ pub fn encode_response_versioned(resp: &WireResponse, version: u8, request_id: u
             put_u64(&mut b, si.bytes_used);
             put_u32(&mut b, si.bytes_per_way);
             put_u64(&mut b, si.way_cap);
+        }
+        WireResponse::Stat(st) => {
+            put_u64(&mut b, st.recorded);
+            put_u64(&mut b, st.overwritten);
+            put_u32(&mut b, st.events.len() as u32);
+            for e in &st.events {
+                put_u64(&mut b, e.seq);
+                put_u64(&mut b, e.at_us);
+                b.push(e.kind);
+                b.push(e.op);
+                put_bytes(&mut b, e.detail.as_bytes());
+            }
         }
         WireResponse::Error { code, message } => {
             b.push(code.as_u8());
@@ -748,13 +957,22 @@ impl<'a> Cursor<'a> {
         }
     }
 
-    fn reply(&mut self) -> Result<WireReply> {
-        Ok(WireReply {
+    /// A reply payload at protocol version `v` (the span fields only
+    /// exist on v5+ frames); mirror of `put_reply`.
+    fn reply(&mut self, v: u8) -> Result<WireReply> {
+        let mut r = WireReply {
             predicted: self.opt_u64()?,
             logits: self.opt_i32s()?,
             learned_way: self.opt_u64()?,
             sim_cycles: self.opt_u64()?,
-        })
+            ..WireReply::default()
+        };
+        if v >= 5 {
+            r.queue_us = self.opt_u64()?;
+            r.service_us = self.opt_u64()?;
+            r.write_us = self.opt_u64()?;
+        }
+        Ok(r)
     }
 
     fn finish(&self) -> Result<()> {
@@ -807,6 +1025,14 @@ fn require_v3(version: u8, op: &str) -> Result<()> {
 fn require_v4(version: u8, op: &str) -> Result<()> {
     if version < 4 {
         bail!("{op} requires protocol v4 (frame carries v{version})");
+    }
+    Ok(())
+}
+
+/// The observability opcodes only exist from protocol v5 on.
+fn require_v5(version: u8, op: &str) -> Result<()> {
+    if version < 5 {
+        bail!("{op} requires protocol v5 (frame carries v{version})");
     }
     Ok(())
 }
@@ -878,6 +1104,10 @@ pub fn decode_request(frame_body: &[u8]) -> Result<RequestFrame> {
             require_v4(version, "SessionInfo")?;
             WireRequest::SessionInfo { session: c.u64()? }
         }
+        OP_STAT => {
+            require_v5(version, "Stat")?;
+            WireRequest::Stat
+        }
         op => bail!("unknown request opcode {op:#04x}"),
     };
     c.finish()?;
@@ -888,7 +1118,7 @@ pub fn decode_request(frame_body: &[u8]) -> Result<RequestFrame> {
 pub fn decode_response(frame_body: &[u8]) -> Result<ResponseFrame> {
     let (version, opcode, request_id, mut c) = header(frame_body)?;
     let resp = match opcode {
-        OP_REPLY => WireResponse::Reply(c.reply()?),
+        OP_REPLY => WireResponse::Reply(c.reply(version)?),
         OP_HEALTH_REPLY => {
             let mut h = HealthWire {
                 shards: c.u32()?,
@@ -929,6 +1159,30 @@ pub fn decode_response(frame_body: &[u8]) -> Result<ResponseFrame> {
             m.p50_latency_us = c.f64()?;
             m.p95_latency_us = c.f64()?;
             m.p99_latency_us = c.f64()?;
+            if version >= 5 {
+                m.queue_depth = c.u64()?;
+                m.in_flight = c.u64()?;
+                m.sessions_live = c.u64()?;
+                m.session_bytes = c.u64()?;
+                m.backlog_hwm = c.u64()?;
+                let n = c.u32()? as usize;
+                // One row per op kind; even a future peer with more ops
+                // stays far under this bound.
+                if n > MAX_LIST {
+                    bail!("per-op metrics list of {n} exceeds the {MAX_LIST}-row bound");
+                }
+                let mut per_op = Vec::with_capacity(n);
+                for _ in 0..n {
+                    per_op.push(OpMetricsWire {
+                        op: c.u8()?,
+                        count: c.u64()?,
+                        p50_us: c.f64()?,
+                        p95_us: c.f64()?,
+                        p99_us: c.f64()?,
+                    });
+                }
+                m.per_op = per_op;
+            }
             WireResponse::Metrics(m)
         }
         OP_EVICTED => WireResponse::Evicted { existed: c.u8()? != 0 },
@@ -978,7 +1232,7 @@ pub fn decode_response(frame_body: &[u8]) -> Result<ResponseFrame> {
             let mut items = Vec::with_capacity(n);
             for _ in 0..n {
                 items.push(match c.u8()? {
-                    0 => BatchItem::Reply(c.reply()?),
+                    0 => BatchItem::Reply(c.reply(version)?),
                     1 => BatchItem::Error {
                         code: ErrorCode::from_u8(c.u8()?)?,
                         message: String::from_utf8_lossy(&c.bytes()?).into_owned(),
@@ -998,6 +1252,28 @@ pub fn decode_response(frame_body: &[u8]) -> Result<ResponseFrame> {
                 bytes_per_way: c.u32()?,
                 way_cap: c.u64()?,
             })
+        }
+        OP_STAT_REPLY => {
+            require_v5(version, "Stat")?;
+            let recorded = c.u64()?;
+            let overwritten = c.u64()?;
+            let n = c.u32()? as usize;
+            // Ring capacities are small; reject a hostile count before it
+            // can drive allocation.
+            if n > MAX_LIST {
+                bail!("stat event list of {n} exceeds the {MAX_LIST}-item bound");
+            }
+            let mut events = Vec::with_capacity(n);
+            for _ in 0..n {
+                events.push(FlightEventWire {
+                    seq: c.u64()?,
+                    at_us: c.u64()?,
+                    kind: c.u8()?,
+                    op: c.u8()?,
+                    detail: String::from_utf8_lossy(&c.bytes()?).into_owned(),
+                });
+            }
+            WireResponse::Stat(StatWire { recorded, overwritten, events })
         }
         OP_ERROR => WireResponse::Error {
             code: ErrorCode::from_u8(c.u8()?)?,
@@ -1163,6 +1439,7 @@ mod tests {
         });
         rt_request(WireRequest::SessionInfo { session: 0 });
         rt_request(WireRequest::SessionInfo { session: u64::MAX });
+        rt_request(WireRequest::Stat);
     }
 
     #[test]
@@ -1173,6 +1450,9 @@ mod tests {
             logits: Some(vec![i32::MIN, -1, 0, 1, i32::MAX]),
             learned_way: Some(0),
             sim_cycles: Some(u64::MAX),
+            queue_us: Some(12),
+            service_us: Some(3400),
+            write_us: Some(0),
         }));
         rt_response(WireResponse::Health(HealthWire {
             shards: 4,
@@ -1198,6 +1478,15 @@ mod tests {
             p50_latency_us: 2.5,
             p95_latency_us: 100.0,
             p99_latency_us: 1e6,
+            queue_depth: 12,
+            in_flight: 13,
+            sessions_live: 14,
+            session_bytes: 15,
+            backlog_hwm: 16,
+            per_op: vec![
+                OpMetricsWire { op: 0, count: 17, p50_us: 1.0, p95_us: 2.0, p99_us: 3.0 },
+                OpMetricsWire { op: 10, count: 0, p50_us: 0.0, p95_us: 0.0, p99_us: 0.0 },
+            ],
         }));
         rt_response(WireResponse::Evicted { existed: true });
         rt_response(WireResponse::Evicted { existed: false });
@@ -1222,6 +1511,9 @@ mod tests {
                 logits: Some(vec![-5, 9]),
                 learned_way: None,
                 sim_cycles: None,
+                queue_us: Some(1),
+                service_us: Some(2),
+                write_us: None,
             }),
             BatchItem::Error { code: ErrorCode::Overloaded, message: "shard full".into() },
             BatchItem::Reply(WireReply::default()),
@@ -1240,6 +1532,21 @@ mod tests {
             rt_response(WireResponse::Error { code, message: "queue full".into() });
         }
         rt_response(WireResponse::Error { code: ErrorCode::App, message: String::new() });
+        rt_response(WireResponse::Stat(StatWire::default()));
+        rt_response(WireResponse::Stat(StatWire {
+            recorded: 300,
+            overwritten: 44,
+            events: vec![
+                FlightEventWire {
+                    seq: 256,
+                    at_us: 1_000_000,
+                    kind: 1,
+                    op: 2,
+                    detail: "chaos engine: injected panic".into(),
+                },
+                FlightEventWire { seq: 257, at_us: 1_000_400, kind: 9, op: 99, detail: "".into() },
+            ],
+        }));
     }
 
     #[test]
@@ -1308,8 +1615,54 @@ mod tests {
             }
             other => panic!("expected Metrics, got {other:?}"),
         }
+        // A v4 peer's Reply keeps the base fields but loses the v5 span
+        // decomposition.
+        let r = WireReply {
+            predicted: Some(7),
+            queue_us: Some(10),
+            service_us: Some(20),
+            write_us: Some(30),
+            ..WireReply::default()
+        };
+        let frame = encode_response_versioned(&WireResponse::Reply(r), 4, 0);
+        assert_eq!(frame[4], 4);
+        match decode_response(&frame[4..]).unwrap().resp {
+            WireResponse::Reply(got) => {
+                assert_eq!(got.predicted, Some(7));
+                assert_eq!(got.queue_us, None, "v5 span fields dropped at v4");
+                assert_eq!(got.service_us, None);
+                assert_eq!(got.write_us, None);
+            }
+            other => panic!("expected Reply, got {other:?}"),
+        }
+        // A v4 peer's Metrics loses the v5 gauges and per-op table.
+        let m = MetricsWire {
+            add_shots: 4,
+            queue_depth: 5,
+            in_flight: 6,
+            sessions_live: 7,
+            session_bytes: 8,
+            backlog_hwm: 9,
+            per_op: vec![OpMetricsWire { op: 0, count: 3, ..OpMetricsWire::default() }],
+            ..MetricsWire::default()
+        };
+        let frame = encode_response_versioned(&WireResponse::Metrics(m), 4, 0);
+        assert_eq!(frame[4], 4);
+        match decode_response(&frame[4..]).unwrap().resp {
+            WireResponse::Metrics(got) => {
+                assert_eq!(got.add_shots, 4, "v4 field survives at v4");
+                assert_eq!(got.queue_depth, 0, "v5 gauges dropped at v4");
+                assert_eq!(got.backlog_hwm, 0);
+                assert!(got.per_op.is_empty(), "v5 per-op table dropped at v4");
+            }
+            other => panic!("expected Metrics, got {other:?}"),
+        }
         // Stream responses cannot drop below v2; batch not below v3;
-        // continual-learning info not below v4.
+        // continual-learning info not below v4; the stat dump not below v5.
+        let frame = encode_response_versioned(&WireResponse::Stat(StatWire::default()), 1, 0);
+        assert_eq!(frame[4], 5);
+        let frame = encode_request_versioned(&WireRequest::Stat, 1, 0);
+        assert_eq!(frame[4], 5, "a Stat request cannot be down-versioned");
         let frame =
             encode_response_versioned(&WireResponse::StreamOpened { window: 16, hop: 4 }, 1, 0);
         assert_eq!(frame[4], 2);
@@ -1409,6 +1762,66 @@ mod tests {
         put_u32(&mut body, 0);
         put_u64(&mut body, 0);
         assert!(decode_response(&body).is_err(), "v3 frame must not carry a SessionInfo reply");
+        // Stat ops inside a v4 frame are malformed (and a fortiori inside
+        // older frames).
+        let body = head(4, OP_STAT, 0);
+        let err = decode_request(&body).unwrap_err();
+        assert!(format!("{err:#}").contains("v5"), "{err:#}");
+        let body = vec![2u8, OP_STAT];
+        assert!(decode_request(&body).is_err());
+        let mut body = head(4, OP_STAT_REPLY, 0);
+        put_u64(&mut body, 0);
+        put_u64(&mut body, 0);
+        put_u32(&mut body, 0);
+        let err = decode_response(&body).unwrap_err();
+        assert!(format!("{err:#}").contains("v5"), "{err:#}");
+    }
+
+    #[test]
+    fn v5_payloads_reject_truncation_and_trailing_bytes() {
+        // Every cut of a well-formed v5 frame fails decode, and trailing
+        // bytes after the payload are malformed too — same discipline the
+        // v4 payloads shipped with.
+        let frame = encode_request(&WireRequest::Stat);
+        let blob = &frame[4..];
+        let mut long = blob.to_vec();
+        long.push(0);
+        assert!(decode_request(&long).is_err(), "trailing byte must fail");
+        let responses = [
+            WireResponse::Reply(WireReply {
+                predicted: Some(3),
+                logits: Some(vec![1, -2]),
+                queue_us: Some(10),
+                service_us: Some(20),
+                write_us: Some(30),
+                ..WireReply::default()
+            }),
+            WireResponse::Stat(StatWire {
+                recorded: 5,
+                overwritten: 1,
+                events: vec![FlightEventWire {
+                    seq: 4,
+                    at_us: 99,
+                    kind: 0,
+                    op: 1,
+                    detail: "engine error".into(),
+                }],
+            }),
+            WireResponse::Metrics(MetricsWire {
+                per_op: vec![OpMetricsWire { op: 3, count: 2, ..OpMetricsWire::default() }],
+                ..MetricsWire::default()
+            }),
+        ];
+        for resp in &responses {
+            let frame = encode_response(resp);
+            let blob = &frame[4..];
+            for cut in 2..blob.len() {
+                assert!(decode_response(&blob[..cut]).is_err(), "cut at {cut} must fail");
+            }
+            let mut long = blob.to_vec();
+            long.push(0);
+            assert!(decode_response(&long).is_err(), "trailing byte must fail");
+        }
     }
 
     #[test]
@@ -1537,5 +1950,28 @@ mod tests {
         put_u32(&mut body, 1);
         put_u32(&mut body, u32::MAX); // shot claims 4 GiB
         assert!(decode_request(&body).is_err());
+        // A hostile flight-event count in a Stat reply is rejected before
+        // allocation, as is a hostile per-op row count in a v5 Metrics.
+        for hostile in [(MAX_LIST + 1) as u32, u32::MAX] {
+            let mut body = head(VERSION, OP_STAT_REPLY, 0);
+            put_u64(&mut body, 0);
+            put_u64(&mut body, 0);
+            put_u32(&mut body, hostile);
+            let err = decode_response(&body).unwrap_err();
+            assert!(format!("{err:#}").contains("stat event list"), "{err:#}");
+        }
+        let mut body = head(VERSION, OP_METRICS_REPLY, 0);
+        for _ in 0..11 {
+            put_u64(&mut body, 0); // counters through add_shots
+        }
+        for _ in 0..4 {
+            put_f64(&mut body, 0.0); // latency percentiles
+        }
+        for _ in 0..5 {
+            put_u64(&mut body, 0); // v5 gauges
+        }
+        put_u32(&mut body, u32::MAX); // hostile per-op row count
+        let err = decode_response(&body).unwrap_err();
+        assert!(format!("{err:#}").contains("per-op"), "{err:#}");
     }
 }

@@ -34,13 +34,14 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::coordinator::metrics::MetricsSnapshot;
+use crate::coordinator::flight::DEFAULT_FLIGHT_CAPACITY;
+use crate::coordinator::metrics::{MetricsSnapshot, OpKind};
 use crate::coordinator::server::{
     Coordinator, CoordinatorConfig, EngineFactory, ReplySink, Request, SubmitError,
 };
 use crate::serve::proto::{
-    self, BatchItem, ErrorCode, HealthWire, MetricsWire, WireDecision, WireReply, WireRequest,
-    WireResponse,
+    self, BatchItem, ErrorCode, FlightEventWire, HealthWire, MetricsWire, StatWire, WireDecision,
+    WireReply, WireRequest, WireResponse,
 };
 
 /// Serving configuration.
@@ -62,6 +63,11 @@ pub struct ServeConfig {
     /// Per-connection socket read timeout; connections poll the shutdown
     /// flag at this granularity.
     pub read_timeout: Duration,
+    /// Service-time threshold (µs) past which a request lands in the
+    /// flight recorder as a slow-request event (0 = off).
+    pub slow_request_us: u64,
+    /// Flight-recorder ring capacity per shard.
+    pub flight_capacity: usize,
 }
 
 impl Default for ServeConfig {
@@ -74,6 +80,8 @@ impl Default for ServeConfig {
             max_sessions: 1024,
             way_budget_bytes: 0,
             read_timeout: Duration::from_millis(250),
+            slow_request_us: 100_000,
+            flight_capacity: DEFAULT_FLIGHT_CAPACITY,
         }
     }
 }
@@ -98,6 +106,11 @@ struct ServerState {
     stop: AtomicBool,
     live_conns: AtomicU64,
     read_timeout: Duration,
+    /// Highest writer backlog (queued-not-yet-written frames) any
+    /// connection has reached — behind an `Arc` so every connection's
+    /// [`ConnFlow`] can bump it from worker threads. Surfaces in the v5
+    /// `Metrics` payload as `backlog_hwm`.
+    backlog_hwm: Arc<AtomicU64>,
 }
 
 /// Running server handle. `shutdown()` (or drop) stops the accept loop;
@@ -127,6 +140,8 @@ impl Server {
                     queue_depth: cfg.queue_depth,
                     max_sessions: cfg.max_sessions,
                     way_budget_bytes: cfg.way_budget_bytes,
+                    slow_request_us: cfg.slow_request_us,
+                    flight_capacity: cfg.flight_capacity,
                 },
             )
             .with_context(|| format!("starting shard {shard}"))?;
@@ -142,6 +157,7 @@ impl Server {
             stop: AtomicBool::new(false),
             live_conns: AtomicU64::new(0),
             read_timeout: cfg.read_timeout,
+            backlog_hwm: Arc::new(AtomicU64::new(0)),
         });
         let accept_state = state.clone();
         let accept_thread = std::thread::Builder::new()
@@ -164,9 +180,16 @@ impl Server {
         self.state.live_conns.load(Ordering::Relaxed)
     }
 
-    /// Aggregated metrics across all shards (merged histograms).
+    /// Aggregated metrics across all shards (merged histograms, plus the
+    /// server-level writer-backlog high-water mark).
     pub fn metrics(&self) -> MetricsSnapshot {
-        aggregate(&self.state.shards)
+        aggregate_full(&self.state)
+    }
+
+    /// Merged flight-recorder dump across all shards (the v5 `Stat` op's
+    /// payload, also reachable without a connection).
+    pub fn stat(&self) -> StatWire {
+        stat_dump(&self.state)
     }
 
     /// Stop accepting; existing connections drain at their next timeout.
@@ -199,6 +222,36 @@ fn aggregate(shards: &[Coordinator]) -> MetricsSnapshot {
         snap.merge(&s.snapshot());
     }
     snap
+}
+
+/// Shard-merged snapshot plus the server-level gauges no coordinator can
+/// see (the connection writers' backlog high-water mark).
+fn aggregate_full(state: &ServerState) -> MetricsSnapshot {
+    let mut snap = aggregate(&state.shards);
+    snap.backlog_hwm = snap.backlog_hwm.max(state.backlog_hwm.load(Ordering::Relaxed));
+    snap
+}
+
+/// Merge every shard's flight-recorder ring into one dump: events ordered
+/// by shard-local timestamp (shards start together, so cross-shard order
+/// is approximate but honest), oldest dropped if the merged set would
+/// exceed the wire list bound.
+fn stat_dump(state: &ServerState) -> StatWire {
+    let mut recorded = 0u64;
+    let mut overwritten = 0u64;
+    let mut events: Vec<FlightEventWire> = Vec::new();
+    for shard in &state.shards {
+        let fr = shard.flight_recorder();
+        recorded += fr.recorded();
+        overwritten += fr.overwritten();
+        events.extend(fr.snapshot().iter().map(FlightEventWire::from));
+    }
+    events.sort_by_key(|e| e.at_us);
+    if events.len() > proto::MAX_LIST {
+        let drop = events.len() - proto::MAX_LIST;
+        events.drain(..drop);
+    }
+    StatWire { recorded, overwritten, events }
 }
 
 fn accept_loop(listener: TcpListener, state: Arc<ServerState>) {
@@ -234,12 +287,16 @@ struct ConnFlow {
     outstanding: AtomicUsize,
     /// Set when the writer thread exits (peer gone); unparks the reader.
     writer_gone: AtomicBool,
+    /// The server-wide backlog high-water mark (shared clone of
+    /// `ServerState::backlog_hwm`), bumped on every enqueue.
+    hwm: Arc<AtomicU64>,
 }
 
 /// Enqueue one encoded frame, keeping the backlog count exact even when
 /// the writer is already gone.
 fn queue_frame(wtx: &mpsc::Sender<Vec<u8>>, flow: &ConnFlow, frame: Vec<u8>) {
-    flow.outstanding.fetch_add(1, Ordering::AcqRel);
+    let backlog = flow.outstanding.fetch_add(1, Ordering::AcqRel) + 1;
+    flow.hwm.fetch_max(backlog as u64, Ordering::Relaxed);
     if wtx.send(frame).is_err() {
         flow.outstanding.fetch_sub(1, Ordering::AcqRel);
     }
@@ -257,6 +314,7 @@ fn serve_connection(stream: TcpStream, state: &ServerState) -> Result<()> {
     let flow = Arc::new(ConnFlow {
         outstanding: AtomicUsize::new(0),
         writer_gone: AtomicBool::new(false),
+        hwm: state.backlog_hwm.clone(),
     });
     let writer_stream = stream.try_clone()?;
     let writer_flow = flow.clone();
@@ -409,8 +467,8 @@ fn handle_sync(req: WireRequest, state: &ServerState) -> WireResponse {
 }
 
 /// Route one request. `out` is invoked exactly once with the response —
-/// possibly on this thread (`Health`/`Metrics`, submit failures), possibly
-/// on a worker thread (everything that reaches a shard).
+/// possibly on this thread (`Health`/`Metrics`/`Stat`, submit failures),
+/// possibly on a worker thread (everything that reaches a shard).
 fn dispatch_request<F>(req: WireRequest, state: &ServerState, out: F)
 where
     F: FnOnce(WireResponse) + Send + 'static,
@@ -478,7 +536,10 @@ where
             }));
         }
         WireRequest::Metrics => {
-            out(WireResponse::Metrics(MetricsWire::from(&aggregate(&state.shards))));
+            out(WireResponse::Metrics(MetricsWire::from(&aggregate_full(state))));
+        }
+        WireRequest::Stat => {
+            out(WireResponse::Stat(stat_dump(state)));
         }
         // Stream ops are session-scoped: same stable hash routing, so a
         // stream's state lives on exactly one shard no matter which
@@ -544,7 +605,7 @@ fn submit_classify(state: &ServerState, input: Vec<u8>, reply: ReplySink) {
         }
     }
     // Every shard rejected: true cluster-wide backpressure (or shutdown).
-    state.shards[first].record_submission(true);
+    state.shards[first].record_submission_as(true, OpKind::Classify);
     let e = if any_full { SubmitError::Full } else { SubmitError::Closed };
     req.into_reply().deliver(Err(anyhow::Error::new(e)));
 }
@@ -629,27 +690,37 @@ fn fold_many(res: Result<crate::coordinator::Response>, n: usize) -> Vec<BatchIt
         message: message.to_string(),
     };
     match res {
-        Ok(resp) => match resp.many {
-            Some(items) if items.len() == n => items
-                .into_iter()
-                .map(|item| match item {
-                    Ok(mi) => BatchItem::Reply(WireReply {
-                        predicted: Some(mi.predicted as u64),
-                        logits: Some(mi.logits),
-                        learned_way: None,
-                        sim_cycles: None,
-                    }),
-                    Err(message) => BatchItem::Error { code: ErrorCode::App, message },
-                })
-                .collect(),
-            other => {
-                let msg = format!(
-                    "unexpected ClassifyMany reply shape ({} items for {n} windows)",
-                    other.map_or(0, |v| v.len())
-                );
-                (0..n).map(|_| err_item(ErrorCode::App, &msg)).collect()
+        Ok(resp) => {
+            // One sub-batch shares one queue/service/write decomposition:
+            // its windows ran back to back on a single worker.
+            let queue_us = resp.queue_us;
+            let service_us = resp.service_us;
+            let write_us = resp.done_at.map(micros_since);
+            match resp.many {
+                Some(items) if items.len() == n => items
+                    .into_iter()
+                    .map(|item| match item {
+                        Ok(mi) => BatchItem::Reply(WireReply {
+                            predicted: Some(mi.predicted as u64),
+                            logits: Some(mi.logits),
+                            learned_way: None,
+                            sim_cycles: None,
+                            queue_us,
+                            service_us,
+                            write_us,
+                        }),
+                        Err(message) => BatchItem::Error { code: ErrorCode::App, message },
+                    })
+                    .collect(),
+                other => {
+                    let msg = format!(
+                        "unexpected ClassifyMany reply shape ({} items for {n} windows)",
+                        other.map_or(0, |v| v.len())
+                    );
+                    (0..n).map(|_| err_item(ErrorCode::App, &msg)).collect()
+                }
             }
-        },
+        }
         Err(e) => {
             let (code, message) = match fold_response(Err(e)) {
                 WireResponse::Error { code, message } => (code, message),
@@ -681,9 +752,17 @@ fn submit_many(state: &ServerState, inputs: Vec<Vec<u8>>, reply: ReplySink, firs
             }
         }
     }
-    state.shards[first % n].record_submission(true);
+    state.shards[first % n].record_submission_as(true, OpKind::ClassifyMany);
     let e = if any_full { SubmitError::Full } else { SubmitError::Closed };
     req.into_reply().deliver(Err(anyhow::Error::new(e)));
+}
+
+/// Microseconds elapsed since a worker-side instant — the reply-path
+/// (`write_us`) leg of the v5 span decomposition, measured where the
+/// response is folded for the wire (i.e. as it is handed toward the
+/// connection writer).
+fn micros_since(t: std::time::Instant) -> u64 {
+    t.elapsed().as_micros().min(u64::MAX as u128) as u64
 }
 
 /// Fold a worker's reply (or a submit failure smuggled through the sink)
@@ -716,6 +795,9 @@ fn fold_response(res: Result<crate::coordinator::Response>) -> WireResponse {
                     logits: resp.logits,
                     learned_way: resp.learned_way.map(|w| w as u64),
                     sim_cycles: resp.sim_cycles,
+                    queue_us: resp.queue_us,
+                    service_us: resp.service_us,
+                    write_us: resp.done_at.map(micros_since),
                 })
             }
         }

@@ -10,7 +10,11 @@
 //! accounting incl. odd embed dims, typed WaysExhausted, accumulator
 //! state dying with its session, pre-v4 clients refused the CL ops,
 //! malformed shots never tripping the panic net), fault isolation
-//! (panic injection, classify fan-over past a full shard), and short
+//! (panic injection, classify fan-over past a full shard), protocol-v5
+//! observability (reply span decomposition bounded by the
+//! client-observed round trip, per-op wire metrics summing to the
+//! pooled totals, flight-recorder dumps over `Stat` capturing injected
+//! panics, pre-v5 clients refused the v5 op), and short
 //! zero-protocol-error loadgen runs in request, pipelined, batched,
 //! streaming and continual-learning modes.
 
@@ -593,6 +597,9 @@ fn loadgen_loopback_has_zero_protocol_errors() {
         shots: 2,
         connections: 3,
         seed: 9,
+        // Longer than the run: exercises the reporter thread's spawn /
+        // stop / join lifecycle without printing mid-test.
+        report_secs: 5,
         ..Default::default()
     };
     let report = loadgen::run(&cfg).expect("loadgen runs");
@@ -1313,5 +1320,210 @@ fn pipelined_classify_saturates_multiple_workers() {
     assert_eq!(client.in_flight(), 0);
     // Waiting twice for the same ticket is an error, not a hang.
     assert!(client.wait(ids[0]).is_err());
+    server.shutdown();
+}
+
+#[test]
+fn v5_replies_decompose_the_round_trip() {
+    // Every v5 reply reports where its time went: queued behind the
+    // shard's bounded queue, inside the engine handler, and handed to the
+    // connection writer. Each span is a floor-truncated disjoint
+    // sub-interval of the client-observed round trip, so the
+    // decomposition can never claim more time than the client saw
+    // (+3 us of truncation slack, one per floor).
+    let (server, model) = golden_server(2, 2);
+    let mut client = Client::connect(server.local_addr().to_string()).unwrap();
+    let mut rng = Rng::new(97);
+    for i in 0..8 {
+        let t0 = std::time::Instant::now();
+        let r = client.classify(rand_input(&model, &mut rng, 0, 16)).unwrap();
+        let e2e_us = t0.elapsed().as_micros() as u64;
+        let q = r.queue_us.expect("v5 reply carries queue_us");
+        let s = r.service_us.expect("v5 reply carries service_us");
+        let w = r.write_us.expect("v5 reply carries write_us");
+        assert!(q + s + w <= e2e_us + 3, "request {i}: {q}+{s}+{w} exceeds the {e2e_us}us e2e");
+    }
+    // Session ops decompose the same way.
+    client.learn_way(1, vec![rand_input(&model, &mut rng, 0, 16)]).unwrap();
+    let t0 = std::time::Instant::now();
+    let r = client.classify_session(1, rand_input(&model, &mut rng, 0, 16)).unwrap();
+    let e2e_us = t0.elapsed().as_micros() as u64;
+    let sum = r.queue_us.unwrap() + r.service_us.unwrap() + r.write_us.unwrap();
+    assert!(sum <= e2e_us + 3, "{sum}us exceeds the {e2e_us}us e2e");
+    // Batch items inherit their sub-batch's decomposition.
+    let windows: Vec<Vec<u8>> = (0..3).map(|_| rand_input(&model, &mut rng, 0, 16)).collect();
+    for (i, item) in client.classify_batch(windows).unwrap().iter().enumerate() {
+        match item {
+            BatchItem::Reply(r) => assert!(
+                r.queue_us.is_some() && r.service_us.is_some() && r.write_us.is_some(),
+                "batch item {i} must carry the v5 span fields"
+            ),
+            other => panic!("batch item {i}: expected a reply, got {other:?}"),
+        }
+    }
+    server.shutdown();
+}
+
+#[test]
+fn per_op_wire_metrics_sum_to_the_pooled_totals() {
+    // Drive a known op mix, then check the v5 per-op table end to end:
+    // exact per-op counts, per-op totals summing exactly to the pooled
+    // `completed` counter (the coordinator records both from one point),
+    // monotone percentiles, and quiescent gauges after the run.
+    let (server, model) = golden_server(2, 2);
+    let mut client = Client::connect(server.local_addr().to_string()).unwrap();
+    let mut rng = Rng::new(98);
+    for _ in 0..8 {
+        client.classify(rand_input(&model, &mut rng, 0, 16)).unwrap();
+    }
+    client.learn_way(2, vec![rand_input(&model, &mut rng, 0, 16)]).unwrap();
+    client.classify_session(2, rand_input(&model, &mut rng, 0, 16)).unwrap();
+    client.classify_session(2, rand_input(&model, &mut rng, 0, 16)).unwrap();
+    let windows: Vec<Vec<u8>> = (0..4).map(|_| rand_input(&model, &mut rng, 0, 16)).collect();
+    client.classify_batch(windows).unwrap();
+    client.session_info(2).unwrap();
+    assert!(client.evict_session(2).unwrap());
+
+    let m = client.metrics().unwrap();
+    let count_of = |name: &str| -> u64 {
+        m.per_op.iter().filter(|r| r.op_name() == name).map(|r| r.count).sum()
+    };
+    assert_eq!(count_of("classify"), 8, "{}", m.report());
+    // 4 windows over 2 shards x 2 workers = 4 lanes: the batch fans into
+    // 4 singleton `ClassifyMany` sub-batches, one coordinator request
+    // each.
+    assert_eq!(count_of("classify_many"), 4, "{}", m.report());
+    assert_eq!(count_of("learn_way"), 1, "{}", m.report());
+    assert_eq!(count_of("classify_session"), 2, "{}", m.report());
+    assert_eq!(count_of("session_info"), 1, "{}", m.report());
+    assert_eq!(count_of("evict_session"), 1, "{}", m.report());
+    let summed: u64 = m.per_op.iter().map(|r| r.count).sum();
+    assert_eq!(summed, m.completed, "per-op counts must sum to the pooled total");
+    for row in m.per_op.iter().filter(|r| r.count > 0) {
+        assert!(
+            row.p50_us <= row.p95_us && row.p95_us <= row.p99_us,
+            "{}: percentiles must be monotone (p50={} p95={} p99={})",
+            row.op_name(),
+            row.p50_us,
+            row.p95_us,
+            row.p99_us
+        );
+    }
+    // Gauges settle once the blocking client has its answers.
+    assert_eq!(m.queue_depth, 0, "{}", m.report());
+    assert_eq!(m.in_flight, 0, "{}", m.report());
+    assert_eq!(m.sessions_live, 0, "the only session was evicted: {}", m.report());
+    assert_eq!(m.session_bytes, 0, "{}", m.report());
+    server.shutdown();
+}
+
+#[test]
+fn flight_recorder_captures_injected_panics_over_the_wire() {
+    // A chaos engine on a single-worker shard with a hair-trigger slow
+    // threshold: the flight recorder must surface an injected handler
+    // panic *with its surrounding events* (typed errors, slow requests)
+    // through the wire `Stat` op — the post-incident story, not just a
+    // counter.
+    let model = Arc::new(demo_tiny_kws());
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        shards: 1,
+        workers_per_shard: 1,
+        slow_request_us: 1,
+        ..Default::default()
+    };
+    let m = model.clone();
+    let server = Server::start(cfg, move |_s, _w| {
+        let m = m.clone();
+        Box::new(move || Ok(Engine::chaos(m, Duration::from_millis(5)))) as EngineFactory
+    })
+    .unwrap();
+    let mut client = Client::connect(server.local_addr().to_string()).unwrap();
+    let mut rng = Rng::new(99);
+
+    // Context before the incident...
+    client.classify(rand_input(&model, &mut rng, 0, 16)).unwrap();
+    let mut slow = rand_input(&model, &mut rng, 0, 16);
+    slow[0] = CHAOS_SLOW_TOKEN; // ~5 ms stall: a guaranteed slow-request event
+    client.classify(slow).unwrap();
+    // ...the poisoned request itself...
+    let mut poisoned = rand_input(&model, &mut rng, 0, 16);
+    poisoned[0] = CHAOS_PANIC_TOKEN;
+    match client.call(&WireRequest::Classify { input: poisoned }).unwrap() {
+        WireResponse::Error { code: ErrorCode::App, .. } => {}
+        other => panic!("expected App error for the poisoned request, got {other:?}"),
+    }
+    // ...and a typed application error after it.
+    match client.call(&WireRequest::Classify { input: vec![1, 2, 3] }).unwrap() {
+        WireResponse::Error { code: ErrorCode::App, .. } => {}
+        other => panic!("expected App error for the short input, got {other:?}"),
+    }
+    client.classify(rand_input(&model, &mut rng, 0, 16)).unwrap();
+
+    let stat = client.stat().unwrap();
+    // Guaranteed floor: one panic, two typed errors, one slow request.
+    assert!(stat.recorded >= 4, "{stat:?}");
+    assert_eq!(stat.overwritten, 0, "the default ring holds this run: {stat:?}");
+    assert_eq!(stat.events.len() as u64, stat.recorded, "nothing lost in the dump");
+    let kinds: Vec<String> = stat.events.iter().map(|e| e.kind_name()).collect();
+    let panic_ev = stat
+        .events
+        .iter()
+        .find(|e| e.kind_name() == "panic")
+        .unwrap_or_else(|| panic!("panic event missing from {kinds:?}"));
+    assert!(panic_ev.detail.contains("chaos"), "{}", panic_ev.detail);
+    assert_eq!(panic_ev.op_name(), "classify");
+    assert!(kinds.iter().any(|k| k == "error"), "{kinds:?}");
+    assert!(kinds.iter().any(|k| k == "slow_request"), "{kinds:?}");
+    // The merged dump comes out time-ordered.
+    assert!(stat.events.windows(2).all(|w| w[0].at_us <= w[1].at_us), "{stat:?}");
+    server.shutdown();
+}
+
+#[test]
+fn pre_v5_clients_are_refused_observability_ops() {
+    // A v4 client must refuse `Stat` locally, its replies and metrics
+    // must stay v4-shaped (no spans, no gauges, no per-op table), and a
+    // raw v4 frame carrying the v5 opcode is malformed on the wire.
+    let (server, model) = golden_server(1, 1);
+    let addr = server.local_addr();
+    let mut rng = Rng::new(90);
+    let mut v4 = Client::with_config(
+        addr.to_string(),
+        chameleon::serve::ClientConfig { version: 4, ..Default::default() },
+    )
+    .unwrap();
+    // v4 keeps everything it had, including the v4 CL ops...
+    v4.learn_way(31, vec![rand_input(&model, &mut rng, 0, 16)]).unwrap();
+    v4.add_shots(31, 0, vec![rand_input(&model, &mut rng, 0, 16)]).unwrap();
+    let r = v4.classify(rand_input(&model, &mut rng, 0, 16)).unwrap();
+    // ...but its replies carry no v5 span decomposition...
+    assert_eq!(r.queue_us, None, "v4 replies must not carry v5 spans");
+    assert_eq!(r.service_us, None);
+    assert_eq!(r.write_us, None);
+    // ...and its metrics lack the v5 gauges and per-op table.
+    let m = v4.metrics().unwrap();
+    assert!(m.completed > 0, "{}", m.report());
+    assert!(m.per_op.is_empty(), "v4 metrics have no per-op table");
+    assert_eq!(m.backlog_hwm, 0, "v4 metrics have no v5 gauges");
+    // The v5 op fails fast, client-side; the connection is undisturbed.
+    let err = v4.stat().unwrap_err();
+    assert!(format!("{err:#}").contains("requires protocol v5"), "{err:#}");
+    assert!(v4.health().is_ok());
+
+    // Raw wire: a v4-tagged frame carrying the Stat opcode is malformed.
+    let mut s = TcpStream::connect(addr).unwrap();
+    let mut body = vec![4u8, 0x0D]; // v4, Stat
+    body.extend_from_slice(&7u64.to_le_bytes()); // request id (v3+ tag)
+    let mut frame = (body.len() as u32).to_le_bytes().to_vec();
+    frame.extend_from_slice(&body);
+    proto::write_frame(&mut s, &frame).unwrap();
+    let blob = proto::read_frame(&mut s).unwrap().expect("error frame expected");
+    match proto::decode_response(&blob).unwrap().resp {
+        WireResponse::Error { code: ErrorCode::Malformed, message } => {
+            assert!(message.contains("v5"), "{message}");
+        }
+        other => panic!("expected Malformed, got {other:?}"),
+    }
     server.shutdown();
 }
