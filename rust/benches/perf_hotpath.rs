@@ -12,6 +12,10 @@
 //! and >= 1.5x over the pre-plan fast path on the small serving model,
 //! where per-call decode + allocation dominate (reported for the larger
 //! model too, where the win is the saturation-free fused inner loop).
+//! The suite also measures the SIMD tier and the turbo operating point
+//! (SIMD plans + pooled `forward_many`), asserting turbo >= 2x the
+//! single-thread prepared plan on `tiny_kws` when the host has >= 2
+//! cores to fan across.
 //!
 //! With artifacts present (`make artifacts`), an extra section reports
 //! engine + coordinator throughput on the exported models, as before.
@@ -56,6 +60,28 @@ fn main() -> anyhow::Result<()> {
         "tiny_kws: amortizing decode + scratch must clear 1.5x windows/sec over \
          the pre-plan fast path (got {tiny_vs_fast:.2}x)"
     );
+
+    // Turbo operating point: SIMD plans + pooled batches must clear 2x the
+    // single-thread prepared throughput on the serving model. The win
+    // comes from thread fan-out, so the gate only applies where the host
+    // has threads to fan across (single-core CI runners report, not gate).
+    let turbo_vs_prepared = perfsuite::find_row(&rows, "tiny_kws/speedup")
+        .and_then(|r| r.get("turbo_vs_prepared"))
+        .unwrap_or(0.0);
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!(
+        "tiny_kws: turbo (SIMD + pooled batches) is {turbo_vs_prepared:.2}x the \
+         single-thread prepared plan on {cores} core(s)"
+    );
+    if cores >= 2 {
+        assert!(
+            turbo_vs_prepared >= 2.0,
+            "tiny_kws: turbo-mode forward_many must clear 2x single-thread \
+             prepared windows/sec on a multi-core host (got {turbo_vs_prepared:.2}x)"
+        );
+    } else {
+        println!("SKIP: turbo 2x gate needs >= 2 cores");
+    }
 
     // ---- artifact-backed engine section (graceful skip) -----------------
     let dir = match expt::require_artifacts() {

@@ -36,6 +36,53 @@ pub struct Forward {
     pub trace: Option<Trace>,
 }
 
+/// The paper's dual-mode compute array, surfaced as a serve operating
+/// point (`serve --op-mode {paced,turbo}`): the same replica either
+/// power-matches (sequential forwards on the plan's default inner loop) or
+/// runs flat out (SIMD plans, batches fanned across a small thread pool).
+/// Functional output is bit-identical in both modes — only throughput and
+/// host-resource usage differ.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OpMode {
+    /// Low-power point: one window at a time on the worker's thread.
+    #[default]
+    Paced,
+    /// Max-throughput point: `ClassifyMany` batches fan across a pooled
+    /// [`PreparedModel::forward_many_pooled`] on the replica's plan.
+    Turbo,
+}
+
+impl OpMode {
+    /// Parse a `--op-mode` flag value.
+    pub fn parse(s: &str) -> Result<OpMode> {
+        match s {
+            "paced" => Ok(OpMode::Paced),
+            "turbo" => Ok(OpMode::Turbo),
+            other => anyhow::bail!("unknown op-mode {other:?} (paced|turbo)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpMode::Paced => "paced",
+            OpMode::Turbo => "turbo",
+        }
+    }
+
+    /// Worker-pool width for turbo batch fan-out: the host's parallelism,
+    /// capped small — engine replicas already run one per worker thread,
+    /// so a wide pool per replica would oversubscribe the shard.
+    pub fn batch_pool(&self) -> usize {
+        match self {
+            OpMode::Paced => 1,
+            OpMode::Turbo => std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+                .min(4),
+        }
+    }
+}
+
 /// Magic first input byte that makes a [`EngineKind::Chaos`] engine panic.
 /// Deliberately outside the u4 code range (0..=15), so real traffic can
 /// never trip it by accident.
@@ -82,13 +129,28 @@ pub struct Engine {
     /// worker folds into each reply. A `Cell` because the engine is
     /// single-owner per worker thread (see the `Sync` note above).
     busy_us: Cell<u64>,
+    /// Operating point (see [`OpMode`]); [`OpMode::Paced`] by default.
+    op_mode: OpMode,
 }
 
 impl Engine {
     fn with_kind(model: Arc<QuantModel>, kind: EngineKind, mode: ExecMode) -> Engine {
         let plan = Arc::new(PreparedModel::with_mode(&model, mode));
         let scratch = RefCell::new(plan.new_scratch());
-        Engine { model, kind, plan, scratch, busy_us: Cell::new(0) }
+        Engine { model, kind, plan, scratch, busy_us: Cell::new(0), op_mode: OpMode::default() }
+    }
+
+    /// Switch this replica's operating point (builder-style; the serve
+    /// factory applies `--op-mode` here). Turbo only changes behavior on
+    /// golden-datapath batch requests — sim/xla/paced engines model chip
+    /// timing and keep their sequential semantics in either mode.
+    pub fn with_op_mode(mut self, op_mode: OpMode) -> Engine {
+        self.op_mode = op_mode;
+        self
+    }
+
+    pub fn op_mode(&self) -> OpMode {
+        self.op_mode
     }
 
     pub fn golden(model: Arc<QuantModel>) -> Engine {
@@ -145,6 +207,34 @@ impl Engine {
         let spent = t0.elapsed().as_micros().min(u64::MAX as u128) as u64;
         self.busy_us.set(self.busy_us.get().saturating_add(spent));
         res
+    }
+
+    /// Batched forward for the turbo operating point: `Some(outcomes)` —
+    /// one per window, in order — when this replica runs the golden
+    /// datapath in [`OpMode::Turbo`] and the batch is big enough to fan
+    /// out; `None` tells the caller to keep its sequential per-window
+    /// loop (every other engine kind, paced mode, and 0/1-window
+    /// batches). Windows succeed or fail independently, same contract as
+    /// the sequential batch handler; golden forwards report failures as
+    /// `Err` items and never panic, so callers need no per-window unwind
+    /// guard on this path. Wall time counts toward the engine-busy span.
+    pub fn try_forward_batch(&self, windows: &[Vec<u8>]) -> Option<Vec<Result<Forward>>> {
+        if !matches!(self.kind, EngineKind::Golden)
+            || self.op_mode != OpMode::Turbo
+            || windows.len() < 2
+        {
+            return None;
+        }
+        let t0 = Instant::now();
+        let out = self
+            .plan
+            .forward_many_pooled(windows, self.op_mode.batch_pool())
+            .into_iter()
+            .map(|r| r.map(|(embedding, logits)| Forward { embedding, logits, trace: None }))
+            .collect();
+        let spent = t0.elapsed().as_micros().min(u64::MAX as u128) as u64;
+        self.busy_us.set(self.busy_us.get().saturating_add(spent));
+        Some(out)
     }
 
     /// Drain the accumulated engine-busy microseconds (resets to zero).
@@ -258,6 +348,29 @@ mod tests {
             let got = e.forward(&w).unwrap();
             let want = crate::golden::forward(&m, &w).unwrap();
             assert_eq!((got.embedding, got.logits), want);
+        }
+    }
+
+    #[test]
+    fn turbo_batches_match_sequential_forwards() {
+        let m = Arc::new(crate::model::demo_tiny_kws());
+        let paced = Engine::golden_mode(m.clone(), ExecMode::Fast);
+        let turbo = Engine::golden_mode(m.clone(), ExecMode::Simd).with_op_mode(OpMode::Turbo);
+        assert_eq!(turbo.op_mode(), OpMode::Turbo);
+        let mut rng = Rng::new(11);
+        let windows: Vec<Vec<u8>> = (0..10)
+            .map(|_| (0..m.seq_len * m.in_channels).map(|_| rng.range(0, 16) as u8).collect())
+            .collect();
+        assert!(paced.try_forward_batch(&windows).is_none(), "paced keeps the sequential loop");
+        assert!(turbo.try_forward_batch(&windows[..1]).is_none(), "one window stays sequential");
+        assert!(turbo.try_forward_batch(&[]).is_none(), "empty batch stays sequential");
+        let got = turbo.try_forward_batch(&windows).expect("turbo golden batches fan out");
+        assert_eq!(got.len(), windows.len());
+        for (w, g) in windows.iter().zip(&got) {
+            let want = paced.forward(w).unwrap();
+            let g = g.as_ref().unwrap();
+            assert_eq!(g.embedding, want.embedding);
+            assert_eq!(g.logits, want.logits);
         }
     }
 

@@ -273,6 +273,58 @@ mod tests {
         assert!(seqs.iter().all(|&s| s < 2000));
     }
 
+    /// N writers race far past ring capacity: the recorded/overwritten
+    /// accounting must stay exact (`overwritten == total - capacity`, no
+    /// matter how the writers interleaved — every event past the first
+    /// full lap displaces exactly one predecessor), and every surviving
+    /// event must be the intact tuple one writer produced, never a
+    /// half-written mix of two racers.
+    #[test]
+    fn concurrent_wraparound_accounting_is_exact() {
+        use std::sync::Arc;
+        const CAP: usize = 32;
+        const THREADS: u64 = 8;
+        const PER_THREAD: u64 = 1000;
+        const TOTAL: u64 = THREADS * PER_THREAD;
+        let kinds =
+            [FlightKind::Error, FlightKind::Panic, FlightKind::Eviction, FlightKind::Rejection];
+        let ops = [OpKind::Classify, OpKind::LearnWay, OpKind::Other];
+        let fr = Arc::new(FlightRecorder::new(CAP, 0));
+        let mut handles = Vec::new();
+        for t in 0..THREADS {
+            let fr = fr.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..PER_THREAD {
+                    let tag = t * PER_THREAD + i;
+                    let kind = kinds[(tag % kinds.len() as u64) as usize];
+                    let op = ops[(tag % ops.len() as u64) as usize];
+                    fr.record(kind, op, format!("tag:{tag}"));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(fr.recorded(), TOTAL);
+        assert_eq!(fr.overwritten(), TOTAL - CAP as u64);
+        let ev = fr.snapshot();
+        assert_eq!(ev.len(), CAP);
+        // One event per slot: sequence numbers distinct modulo capacity.
+        let mut slots: Vec<u64> = ev.iter().map(|e| e.seq % CAP as u64).collect();
+        slots.sort_unstable();
+        slots.dedup();
+        assert_eq!(slots.len(), CAP);
+        // No torn writes: kind/op/detail must agree with the tag, i.e. be
+        // exactly the tuple a single `record` call carried.
+        for e in &ev {
+            let tag: u64 =
+                e.detail.strip_prefix("tag:").expect("intact detail").parse().unwrap();
+            assert!(tag < TOTAL);
+            assert_eq!(e.kind, kinds[(tag % kinds.len() as u64) as usize], "seq {}", e.seq);
+            assert_eq!(e.op, ops[(tag % ops.len() as u64) as usize], "seq {}", e.seq);
+        }
+    }
+
     #[test]
     fn zero_capacity_is_clamped() {
         let fr = FlightRecorder::new(0, 0);

@@ -12,7 +12,7 @@ pub mod metrics;
 pub mod server;
 pub mod streaming;
 
-pub use engine::{Engine, EngineKind, Forward};
+pub use engine::{Engine, EngineKind, Forward, OpMode};
 pub use flight::{FlightEvent, FlightKind, FlightRecorder};
 pub use metrics::{HistSnapshot, LatencyHistogram, Metrics, MetricsSnapshot, OpKind};
 pub use server::{

@@ -928,6 +928,31 @@ fn handle_classify(engine: &Engine, input: &[u8], shared: &Shared) -> Result<Res
 /// to keep the same denominator as `requests` — per-window failures are
 /// visible to the client in the reply items, not in the shard counters.
 fn handle_classify_many(engine: &Engine, inputs: &[Vec<u8>], shared: &Shared) -> Result<Response> {
+    // Turbo operating point: golden replicas fan the sub-batch across the
+    // plan's worker pool instead of looping. Windows still fail
+    // independently (the pooled path returns per-window outcomes), and the
+    // golden datapath reports failures as `Err` rather than panicking, so
+    // the per-window unwind guard below is only needed on the sequential
+    // path, where chaos/sim engines can run.
+    if let Some(results) = engine.try_forward_batch(inputs) {
+        let items: Vec<Result<ManyItem, String>> = results
+            .into_iter()
+            .map(|fwd| match fwd {
+                Ok(f) => match f.logits {
+                    Some(logits) => Ok(ManyItem {
+                        predicted: crate::golden::argmax(&logits),
+                        logits,
+                    }),
+                    None => Err("model has no built-in head; use a session".to_string()),
+                },
+                Err(e) => Err(format!("{e:#}")),
+            })
+            .collect();
+        if items.iter().any(|i| i.is_err()) {
+            shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        return Ok(Response { many: Some(items), ..Response::default() });
+    }
     let mut items = Vec::with_capacity(inputs.len());
     let mut cycles = 0u64;
     let mut traced = false;

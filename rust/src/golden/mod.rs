@@ -61,7 +61,7 @@ pub fn conv_layer_with(
     let mut out = vec![0u8; t_len * cout];
     let mut acc = vec![0i32; cout];
     let mut partial = vec![0i32; cout];
-    prepared.conv(x, t_len, residual, &mut out, &mut acc, &mut partial, ExecMode::Fast);
+    prepared.conv(x, t_len, residual, &mut out, &mut acc, &mut partial, mode);
     out
 }
 

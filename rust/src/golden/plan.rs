@@ -34,13 +34,25 @@
 //!
 //! # Execution mode
 //!
-//! [`ExecMode`] selects the inner loop: [`ExecMode::Fast`] (slab-major /
-//! fused) or [`ExecMode::Naive`] (the original scalar per-output loop,
-//! kept for before/after benchmarking). The mode is **explicit** plan
-//! state: benches compare the two by constructing two plans, not by
-//! mutating the environment. `CHAMELEON_GOLDEN=naive` survives only as
-//! the process-start default ([`ExecMode::process_default`]) consulted by
-//! the un-prepared [`super::conv_layer`] wrapper.
+//! [`ExecMode`] selects the inner loop: [`ExecMode::Naive`] (the original
+//! scalar per-output loop, kept for before/after benchmarking),
+//! [`ExecMode::Fast`] (slab-major / fused) or [`ExecMode::Simd`] (the
+//! fused loop with explicit lane-parallel chunking over the
+//! cout-contiguous weight rows, plus a `std::arch` fast path where the
+//! host supports it — see the `simd` module below). The mode is
+//! **explicit** plan state: benches compare modes by constructing
+//! separate plans, not by mutating the environment.
+//! `CHAMELEON_GOLDEN=naive` / `CHAMELEON_GOLDEN=simd` survive only as the
+//! process-start default ([`ExecMode::process_default`]) consulted by the
+//! un-prepared [`super::conv_layer`] wrapper and plan constructors.
+//!
+//! The same invariant that licenses the fusion licenses the SIMD tier:
+//! once no slab clamp can engage, the reduction is a plain integer sum,
+//! and integer addition is associative — lanes may accumulate the cout
+//! axis in any grouping and still land on bit-identical accumulators.
+//! Planes that *can* saturate keep the exact scalar slab loop under every
+//! non-naive mode, so `ExecMode::Simd` is bit-identical by construction
+//! (and property-proven by `tests/simd_bitexact.rs`).
 
 use std::sync::Arc;
 
@@ -59,18 +71,24 @@ pub enum ExecMode {
     Fast,
     /// Original scalar per-`(t, c_out)` reference loop.
     Naive,
+    /// Fused path with explicit lane-parallel accumulation over the cout
+    /// axis (8 x i32 lanes, `std::arch` fast path where available). Falls
+    /// back to the exact slab loop on saturable planes.
+    Simd,
 }
 
 impl ExecMode {
     /// Process-start default: `CHAMELEON_GOLDEN=naive` selects
-    /// [`ExecMode::Naive`], anything else [`ExecMode::Fast`]. Read once —
+    /// [`ExecMode::Naive`], `CHAMELEON_GOLDEN=simd` selects
+    /// [`ExecMode::Simd`], anything else [`ExecMode::Fast`]. Read once —
     /// mutating the variable mid-process has no effect (tests and benches
-    /// that need both modes pass them explicitly instead).
+    /// that need several modes pass them explicitly instead).
     pub fn process_default() -> ExecMode {
         static DEFAULT: std::sync::OnceLock<ExecMode> = std::sync::OnceLock::new();
         *DEFAULT.get_or_init(|| {
             match std::env::var("CHAMELEON_GOLDEN") {
                 Ok(v) if v == "naive" => ExecMode::Naive,
+                Ok(v) if v == "simd" => ExecMode::Simd,
                 _ => ExecMode::Fast,
             }
         })
@@ -167,6 +185,93 @@ fn accumulate_row_fused(taps: &[Option<&[u8]>], cin: usize, decoded: &[i32], acc
     }
 }
 
+/// Lane-parallel accumulation over the cout-contiguous weight rows.
+///
+/// The cout axis is element-wise independent (`acc[co] += a * w[co]`), so
+/// chunking it into fixed-width lanes changes neither the order nor the
+/// grouping of any per-channel sum — the per-channel partial sums are the
+/// exact same sequence of integer additions as [`accumulate_row_fused`].
+/// No product or prefix sum can overflow `i32`: the path is only entered
+/// on saturation-free planes, where every partial sum of `a * w` terms is
+/// bounded in magnitude by `15 * sum |w| <= ACC_MAX`.
+pub(crate) mod simd {
+    /// Lane width of the portable chunked loop (and of the 256-bit
+    /// `std::arch` fast path: 8 x i32).
+    pub const LANES: usize = 8;
+
+    /// `acc[..] += a * w[..]` with explicit [`LANES`]-wide chunking; the
+    /// kernel the SIMD tier is built on.
+    #[inline]
+    pub fn axpy(a: i32, w: &[i32], acc: &mut [i32]) {
+        debug_assert_eq!(w.len(), acc.len());
+        #[cfg(target_arch = "x86_64")]
+        if std::arch::is_x86_feature_detected!("avx2") {
+            // SAFETY: the AVX2 feature was just detected at runtime.
+            unsafe { axpy_avx2(a, w, acc) };
+            return;
+        }
+        axpy_chunked(a, w, acc);
+    }
+
+    /// Portable fallback: fixed-size lane chunks the compiler can keep in
+    /// vector registers, scalar remainder.
+    #[inline]
+    fn axpy_chunked(a: i32, w: &[i32], acc: &mut [i32]) {
+        let mut wi = w.chunks_exact(LANES);
+        let mut oi = acc.chunks_exact_mut(LANES);
+        for (wc, oc) in (&mut wi).zip(&mut oi) {
+            for (o, &wv) in oc.iter_mut().zip(wc) {
+                *o += a * wv;
+            }
+        }
+        for (o, &wv) in oi.into_remainder().iter_mut().zip(wi.remainder()) {
+            *o += a * wv;
+        }
+    }
+
+    /// `std::arch` fast path: broadcast `a`, 8-lane multiply-add per
+    /// iteration. Unaligned loads/stores — the weight planes are plain
+    /// `Vec<i32>` rows at arbitrary cout offsets.
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2")]
+    unsafe fn axpy_avx2(a: i32, w: &[i32], acc: &mut [i32]) {
+        use std::arch::x86_64::*;
+        let va = _mm256_set1_epi32(a);
+        let n = acc.len() - acc.len() % LANES;
+        let mut i = 0;
+        while i < n {
+            let vw = _mm256_loadu_si256(w.as_ptr().add(i) as *const __m256i);
+            let vo = _mm256_loadu_si256(acc.as_ptr().add(i) as *const __m256i);
+            let sum = _mm256_add_epi32(vo, _mm256_mullo_epi32(vw, va));
+            _mm256_storeu_si256(acc.as_mut_ptr().add(i) as *mut __m256i, sum);
+            i += LANES;
+        }
+        for (o, &wv) in acc[n..].iter_mut().zip(&w[n..]) {
+            *o += a * wv;
+        }
+    }
+}
+
+/// Fused accumulation with the lane-parallel inner kernel: identical term
+/// order per output channel as [`accumulate_row_fused`], cout axis chunked
+/// [`simd::LANES`] wide. Only reachable on saturation-free planes (the
+/// mode dispatch in [`Plane::accumulate_row`] keeps saturable planes on
+/// the exact slab loop).
+fn accumulate_row_simd(taps: &[Option<&[u8]>], cin: usize, decoded: &[i32], acc: &mut [i32]) {
+    let cout = acc.len();
+    acc.fill(0);
+    for (tap, row) in taps.iter().enumerate() {
+        let Some(row) = row else { continue };
+        for ci in 0..cin {
+            let a = row[ci] as i32;
+            if a != 0 {
+                let wrow = &decoded[(tap * cin + ci) * cout..(tap * cin + ci + 1) * cout];
+                simd::axpy(a, wrow, acc);
+            }
+        }
+    }
+}
+
 /// One decoded weight plane plus its dispatch flag: the unit every
 /// prepared structure (conv layers, residual 1x1s, FC heads) is built on.
 #[derive(Debug, Clone)]
@@ -183,7 +288,9 @@ impl Plane {
     }
 
     /// Accumulate one output row from its tap rows into `acc[..cout]`,
-    /// dispatching to the fused or slab-exact loop.
+    /// dispatching to the lane-parallel, fused or slab-exact loop. Planes
+    /// that can saturate always take the exact slab loop: its clamp points
+    /// are part of the datapath's semantics and must not be reassociated.
     #[inline]
     pub(crate) fn accumulate_row(
         &self,
@@ -191,11 +298,14 @@ impl Plane {
         cin: usize,
         acc: &mut [i32],
         partial: &mut [i32],
+        mode: ExecMode,
     ) {
-        if self.sat_free {
-            accumulate_row_fused(taps, cin, &self.decoded, acc);
-        } else {
+        if !self.sat_free {
             accumulate_row_slabbed(taps, cin, &self.decoded, acc, partial);
+        } else if mode == ExecMode::Simd {
+            accumulate_row_simd(taps, cin, &self.decoded, acc);
+        } else {
+            accumulate_row_fused(taps, cin, &self.decoded, acc);
         }
     }
 }
@@ -294,8 +404,9 @@ impl PreparedLayer {
         taps: &[Option<&[u8]>],
         acc: &mut [i32],
         partial: &mut [i32],
+        mode: ExecMode,
     ) {
-        self.plane.accumulate_row(taps, self.cin, acc, partial);
+        self.plane.accumulate_row(taps, self.cin, acc, partial, mode);
     }
 
     /// Full dilated causal conv over `t_len` timesteps, writing u4 codes
@@ -332,7 +443,7 @@ impl PreparedLayer {
                     None
                 });
             }
-            self.accumulate_row(&taps, acc, partial);
+            self.accumulate_row(&taps, acc, partial, mode);
             for co in 0..cout {
                 let res = residual.map_or(0, |r| r[t * cout + co] as i32);
                 let (res, rs) = apply_signed_res(res, self.res_shift);
@@ -661,11 +772,63 @@ impl PreparedModel {
         windows: &[Vec<u8>],
         scratch: &mut Scratch,
     ) -> Result<Vec<(Vec<u8>, Option<Vec<i32>>)>> {
+        // An empty batch is a successful no-op, never an error or a panic
+        // (ragged serve sub-batches legitimately shrink to zero).
+        if windows.is_empty() {
+            return Ok(Vec::new());
+        }
         let mut out = Vec::with_capacity(windows.len());
         for w in windows {
             out.push(self.forward(w, scratch)?);
         }
         Ok(out)
+    }
+
+    /// Batched forward fanned across a small worker pool sharing this plan
+    /// (the turbo operating point's batch path): windows are split into
+    /// contiguous chunks, one scoped thread and one fresh [`Scratch`] per
+    /// chunk, results returned in input order. Unlike
+    /// [`PreparedModel::forward_many`], windows succeed or fail
+    /// **independently** — a malformed window yields an error item while
+    /// the rest of the batch still classifies (the per-window isolation the
+    /// serve batch path needs).
+    ///
+    /// Edge cases are deliberate: an empty batch returns an empty vec
+    /// without touching a thread, and a single-window batch (or
+    /// `threads <= 1`) runs on the caller's thread so paced-mode latency
+    /// never pays a spawn/join round trip.
+    pub fn forward_many_pooled(
+        &self,
+        windows: &[Vec<u8>],
+        threads: usize,
+    ) -> Vec<Result<(Vec<u8>, Option<Vec<i32>>)>> {
+        if windows.is_empty() {
+            return Vec::new();
+        }
+        let threads = threads.clamp(1, windows.len());
+        if threads == 1 || windows.len() == 1 {
+            let mut scratch = self.new_scratch();
+            return windows.iter().map(|w| self.forward(w, &mut scratch)).collect();
+        }
+        let per_chunk = windows.len().div_ceil(threads);
+        let mut out = Vec::with_capacity(windows.len());
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = windows
+                .chunks(per_chunk)
+                .map(|chunk| {
+                    scope.spawn(move || {
+                        let mut scratch = self.new_scratch();
+                        chunk.iter().map(|w| self.forward(w, &mut scratch)).collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            for h in handles {
+                // `forward` reports failures as `Err` items; a worker can
+                // only panic on a plan-internal bug, which must propagate.
+                out.extend(h.join().expect("forward worker panicked"));
+            }
+        });
+        out
     }
 
     /// Open an incremental stream borrowing this plan (see
@@ -714,7 +877,7 @@ fn conv_res(
             }
         } else {
             let taps = [Some(row)];
-            r.plane.accumulate_row(&taps, cin, acc, partial);
+            r.plane.accumulate_row(&taps, cin, acc, partial, mode);
             for co in 0..cout {
                 out[t * cout + co] = quant::ope(acc[co], r.bias[co], r.out_shift, true, 0, 0) as u8;
             }
@@ -729,9 +892,10 @@ pub(crate) fn res_row(
     out: &mut Vec<u8>,
     acc: &mut [i32],
     partial: &mut [i32],
+    mode: ExecMode,
 ) {
     let taps = [Some(row)];
-    r.plane.accumulate_row(&taps, r.cin, &mut acc[..r.cout], &mut partial[..r.cout]);
+    r.plane.accumulate_row(&taps, r.cin, &mut acc[..r.cout], &mut partial[..r.cout], mode);
     out.clear();
     for co in 0..r.cout {
         out.push(quant::ope(acc[co], r.bias[co], r.out_shift, true, 0, 0) as u8);
@@ -823,5 +987,73 @@ mod tests {
         let plan = PreparedModel::prepare(&model);
         let mut s = plan.new_scratch();
         assert!(plan.forward(&[1, 2, 3], &mut s).is_err());
+    }
+
+    #[test]
+    fn simd_axpy_matches_scalar_at_every_length() {
+        let mut rng = Rng::new(0x51D1);
+        for len in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 31, 64] {
+            let w: Vec<i32> = (0..len).map(|_| rng.range(-64, 65) as i32).collect();
+            let mut lanes: Vec<i32> = (0..len).map(|_| rng.range(-1000, 1000) as i32).collect();
+            let mut scalar = lanes.clone();
+            let a = rng.range(0, 16) as i32;
+            simd::axpy(a, &w, &mut lanes);
+            for (o, &wv) in scalar.iter_mut().zip(&w) {
+                *o += a * wv;
+            }
+            assert_eq!(lanes, scalar, "len {len}");
+        }
+    }
+
+    #[test]
+    fn simd_plan_matches_fast_and_naive_plans() {
+        for model in [crate::model::demo_tiny(), crate::model::demo_tiny_kws()] {
+            let simd = PreparedModel::with_mode(&model, ExecMode::Simd);
+            let mut s = simd.new_scratch();
+            let mut rng = Rng::new(0x51D2);
+            for _ in 0..10 {
+                let x: Vec<u8> = (0..model.seq_len * model.in_channels)
+                    .map(|_| rng.range(0, 16) as u8)
+                    .collect();
+                let want = golden::forward(&model, &x).unwrap();
+                assert_eq!(simd.forward(&x, &mut s).unwrap(), want, "simd plan vs forward");
+            }
+        }
+    }
+
+    #[test]
+    fn forward_many_empty_and_single_window_edge_cases() {
+        let model = crate::model::demo_tiny_kws();
+        let plan = PreparedModel::with_mode(&model, ExecMode::Simd);
+        let mut s = plan.new_scratch();
+        assert!(plan.forward_many(&[], &mut s).unwrap().is_empty());
+        assert!(plan.forward_many_pooled(&[], 4).is_empty());
+        let mut rng = Rng::new(0x51D3);
+        let w: Vec<u8> = (0..plan.input_len()).map(|_| rng.range(0, 16) as u8).collect();
+        let want = plan.forward(&w, &mut s).unwrap();
+        let got = plan.forward_many_pooled(std::slice::from_ref(&w), 4);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].as_ref().unwrap(), &want);
+    }
+
+    #[test]
+    fn pooled_forward_isolates_bad_windows() {
+        let model = crate::model::demo_tiny_kws();
+        let plan = PreparedModel::with_mode(&model, ExecMode::Simd);
+        let mut rng = Rng::new(0x51D4);
+        let mut windows: Vec<Vec<u8>> = (0..9)
+            .map(|_| (0..plan.input_len()).map(|_| rng.range(0, 16) as u8).collect())
+            .collect();
+        windows[4] = vec![1, 2, 3]; // malformed length
+        let got = plan.forward_many_pooled(&windows, 3);
+        assert_eq!(got.len(), windows.len());
+        let mut s = plan.new_scratch();
+        for (i, (w, r)) in windows.iter().zip(&got).enumerate() {
+            if i == 4 {
+                assert!(r.is_err(), "malformed window yields an error item");
+            } else {
+                assert_eq!(r.as_ref().unwrap(), &plan.forward(w, &mut s).unwrap());
+            }
+        }
     }
 }

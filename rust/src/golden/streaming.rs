@@ -279,7 +279,7 @@ impl StreamingState {
                 match &layer.res {
                     Some(r) => {
                         let (src, out) = (&self.res_src, &mut self.res_out);
-                        res_row(r, src, out, &mut self.acc, &mut self.partial);
+                        res_row(r, src, out, &mut self.acc, &mut self.partial, plan.mode());
                         Some(true)
                     }
                     None => Some(false),
@@ -299,7 +299,8 @@ impl StreamingState {
                     None
                 });
             }
-            layer.accumulate_row(&taps, &mut self.acc[..cout], &mut self.partial[..cout]);
+            let mode = plan.mode();
+            layer.accumulate_row(&taps, &mut self.acc[..cout], &mut self.partial[..cout], mode);
             drop(taps);
             let residual: Option<&[u8]> = match res_is_conv {
                 Some(true) => Some(&self.res_out),

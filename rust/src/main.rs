@@ -4,7 +4,9 @@
 //!   info                         inventory of artifacts + model zoo
 //!   infer   --model NAME [...]   classify eval samples on an engine
 //!   learn   --ways N --shots K   run an on-"chip" FSL episode
-//!   serve   --shards N [...]     sharded TCP serving layer (wire protocol)
+//!   serve   --shards N [...]     sharded TCP serving layer (wire protocol);
+//!           --op-mode {paced,turbo} picks the operating point: paced
+//!           (low-power sequential) or turbo (SIMD plans + pooled batches)
 //!   loadgen --rps R [...]        open-loop Poisson load generator;
 //!           --pipeline D keeps D requests in flight per connection and
 //!           --batch N sends N-window ClassifyBatch frames (protocol v3);
@@ -43,7 +45,8 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use chameleon::coordinator::server::EngineFactory;
-use chameleon::coordinator::{Coordinator, CoordinatorConfig, Engine};
+use chameleon::coordinator::{Coordinator, CoordinatorConfig, Engine, OpMode};
+use chameleon::golden::ExecMode;
 use chameleon::data::EvalPool;
 use chameleon::model::QuantModel;
 use chameleon::runtime::{Runtime, XlaModel};
@@ -226,27 +229,37 @@ fn serve_model(args: &Args, default: &str) -> Result<QuantModel> {
     }
 }
 
-/// Build one engine factory for a serve worker thread.
+/// Build one engine factory for a serve worker thread. `op_mode` is the
+/// server's operating point: turbo golden replicas prepare SIMD plans and
+/// fan `ClassifyBatch` sub-batches across a worker pool; paced replicas
+/// keep the sequential low-power path. Timing engines (sim/paced/xla)
+/// carry the op-mode but keep sequential semantics — their service time
+/// models the chip, not the host.
 fn serve_engine_factory(
     kind: String,
     model: Arc<QuantModel>,
     mode: ArrayMode,
     dir: PathBuf,
     paced_hz: f64,
+    op_mode: OpMode,
 ) -> EngineFactory {
     Box::new(move || -> Result<Engine> {
+        let exec = match op_mode {
+            OpMode::Turbo => ExecMode::Simd,
+            OpMode::Paced => ExecMode::process_default(),
+        };
         match kind.as_str() {
-            "golden" => Ok(Engine::golden(model)),
-            "sim" => Ok(Engine::sim(model, mode)),
-            "paced" => Ok(Engine::paced(
-                model,
-                OperatingPoint { voltage: 0.73, f_hz: paced_hz, mode },
-            )),
+            "golden" => Ok(Engine::golden_mode(model, exec).with_op_mode(op_mode)),
+            "sim" => Ok(Engine::sim(model, mode).with_op_mode(op_mode)),
+            "paced" => {
+                let op = OperatingPoint { voltage: 0.73, f_hz: paced_hz, mode };
+                Ok(Engine::paced(model, op).with_op_mode(op_mode))
+            }
             "xla" => {
                 let rt = Runtime::cpu()?;
                 let xm = XlaModel::load(&rt, &dir, &model)?;
                 std::mem::forget(rt); // keep the client alive for the thread
-                Ok(Engine::xla(model, xm))
+                Ok(Engine::xla(model, xm).with_op_mode(op_mode))
             }
             e => bail!("unknown engine {e:?} (golden|sim|paced|xla)"),
         }
@@ -271,6 +284,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let engine_kind = args.get_or("engine", "golden").to_string();
     let mode = mode_from(args);
     let paced_hz = args.get_f64("paced-hz", 1e6)?;
+    let op_mode = OpMode::parse(args.get_or("op-mode", "paced"))?;
     let dir = artifacts(args);
     let server = Server::start(cfg.clone(), |_shard, _worker| {
         serve_engine_factory(
@@ -279,11 +293,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
             mode,
             dir.clone(),
             paced_hz,
+            op_mode,
         )
     })?;
     println!(
         "serving on {} — {} shard(s) x {} worker(s), queue depth {}, \
-         max {} sessions/shard, way budget {}, engine={engine_kind}",
+         max {} sessions/shard, way budget {}, engine={engine_kind}, \
+         op-mode={}",
         server.local_addr(),
         cfg.shards,
         cfg.workers_per_shard,
@@ -294,6 +310,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         } else {
             format!("{} B/session", cfg.way_budget_bytes)
         },
+        op_mode.name(),
     );
     let duration = args.get_f64("duration", 0.0)?;
     let report_every = args.get_f64("report-every", 10.0)?.max(0.5);
@@ -585,10 +602,18 @@ fn cmd_drive(args: &Args) -> Result<()> {
     let engine_kind = args.get_or("engine", "golden").to_string();
     let mode = mode_from(args);
     let paced_hz = args.get_f64("paced-hz", 1e6)?;
+    let op_mode = OpMode::parse(args.get_or("op-mode", "paced"))?;
     let dir = artifacts(args);
     let factories: Vec<EngineFactory> = (0..workers)
         .map(|_| {
-            serve_engine_factory(engine_kind.clone(), model.clone(), mode, dir.clone(), paced_hz)
+            serve_engine_factory(
+                engine_kind.clone(),
+                model.clone(),
+                mode,
+                dir.clone(),
+                paced_hz,
+                op_mode,
+            )
         })
         .collect();
     let coord = Coordinator::start(

@@ -1384,169 +1384,201 @@ pub fn write_frame<W: Write>(w: &mut W, frame: &[u8]) -> Result<()> {
 mod tests {
     use super::*;
 
-    fn rt_request(req: WireRequest) {
-        // Tag echo: the id survives the v3 round trip.
-        let frame = encode_request_versioned(&req, VERSION, 0xDEAD_BEEF_u64);
-        let mut r = std::io::Cursor::new(frame.clone());
-        let blob = read_frame(&mut r).unwrap().unwrap();
-        assert_eq!(blob.len() + 4, frame.len());
-        let got = decode_request(&blob).unwrap();
-        assert_eq!(got.version, VERSION);
-        assert_eq!(got.request_id, 0xDEAD_BEEF);
-        assert_eq!(got.req, req);
-    }
-
-    fn rt_response(resp: WireResponse) {
-        let frame = encode_response_versioned(&resp, VERSION, 7);
-        let mut r = std::io::Cursor::new(frame);
-        let blob = read_frame(&mut r).unwrap().unwrap();
-        let got = decode_response(&blob).unwrap();
-        assert_eq!(got.request_id, 7);
-        assert_eq!(got.resp, resp);
-    }
-
-    #[test]
-    fn request_roundtrips_exhaustive() {
-        rt_request(WireRequest::Classify { input: vec![] });
-        rt_request(WireRequest::Classify { input: (0..64).map(|i| i % 16).collect() });
-        rt_request(WireRequest::ClassifySession { session: 0, input: vec![15; 3] });
-        rt_request(WireRequest::ClassifySession { session: u64::MAX, input: vec![] });
-        rt_request(WireRequest::LearnWay { session: 7, shots: vec![] });
-        rt_request(WireRequest::LearnWay {
-            session: 42,
-            shots: vec![vec![1, 2, 3], vec![], vec![15; 100]],
-        });
-        rt_request(WireRequest::EvictSession { session: 1 << 63 });
-        rt_request(WireRequest::Health);
-        rt_request(WireRequest::Metrics);
-        rt_request(WireRequest::StreamOpen { session: 3, hop: 1 });
-        rt_request(WireRequest::StreamOpen { session: u64::MAX, hop: u32::MAX });
-        rt_request(WireRequest::StreamPush { session: 9, samples: vec![] });
-        rt_request(WireRequest::StreamPush {
-            session: 9,
-            samples: (0..200).map(|i| i % 16).collect(),
-        });
-        rt_request(WireRequest::StreamClose { session: 0 });
-        rt_request(WireRequest::ClassifyBatch { inputs: vec![] });
-        rt_request(WireRequest::ClassifyBatch {
-            inputs: vec![vec![1, 2, 3], vec![], vec![15; 64]],
-        });
-        rt_request(WireRequest::AddShots { session: 7, way: 0, shots: vec![] });
-        rt_request(WireRequest::AddShots {
-            session: u64::MAX,
-            way: 249,
-            shots: vec![vec![1, 2, 3], vec![], vec![15; 100]],
-        });
-        rt_request(WireRequest::SessionInfo { session: 0 });
-        rt_request(WireRequest::SessionInfo { session: u64::MAX });
-        rt_request(WireRequest::Stat);
-    }
-
-    #[test]
-    fn response_roundtrips_exhaustive() {
-        rt_response(WireResponse::Reply(WireReply::default()));
-        rt_response(WireResponse::Reply(WireReply {
-            predicted: Some(3),
-            logits: Some(vec![i32::MIN, -1, 0, 1, i32::MAX]),
-            learned_way: Some(0),
-            sim_cycles: Some(u64::MAX),
-            queue_us: Some(12),
-            service_us: Some(3400),
-            write_us: Some(0),
-        }));
-        rt_response(WireResponse::Health(HealthWire {
-            shards: 4,
-            live_sessions: 123,
-            input_len: 64,
-            embed_dim: 8,
-            window: 16,
-            channels: 4,
-        }));
-        rt_response(WireResponse::Metrics(MetricsWire {
-            requests: 1,
-            completed: 2,
-            errors: 3,
-            rejected: 4,
-            learn_ways: 5,
-            evictions: 6,
-            sim_cycles: 7,
-            stream_chunks: 8,
-            stream_decisions: 9,
-            worker_panics: 10,
-            add_shots: 11,
-            mean_latency_us: 1.5,
-            p50_latency_us: 2.5,
-            p95_latency_us: 100.0,
-            p99_latency_us: 1e6,
-            queue_depth: 12,
-            in_flight: 13,
-            sessions_live: 14,
-            session_bytes: 15,
-            backlog_hwm: 16,
-            per_op: vec![
-                OpMetricsWire { op: 0, count: 17, p50_us: 1.0, p95_us: 2.0, p99_us: 3.0 },
-                OpMetricsWire { op: 10, count: 0, p50_us: 0.0, p95_us: 0.0, p99_us: 0.0 },
-            ],
-        }));
-        rt_response(WireResponse::Evicted { existed: true });
-        rt_response(WireResponse::Evicted { existed: false });
-        rt_response(WireResponse::StreamOpened { window: 16, hop: 4 });
-        rt_response(WireResponse::StreamDecisions(vec![]));
-        rt_response(WireResponse::StreamDecisions(vec![
-            WireDecision { window: 0, end_t: 15, predicted: 3, logits: vec![1, -2, 3] },
-            WireDecision {
-                window: u64::MAX,
-                end_t: u64::MAX,
-                predicted: 0,
-                logits: vec![i32::MIN, i32::MAX],
+    /// Every request opcode (v1 classify/learn ops through the v5 stat
+    /// dump), each with an empty/minimal and a maximal-field variant —
+    /// the corpus the table-driven tests below drive through round-trip,
+    /// truncation and hostile-count checks.
+    fn request_corpus() -> Vec<WireRequest> {
+        vec![
+            WireRequest::Classify { input: vec![] },
+            WireRequest::Classify { input: (0..64).map(|i| i % 16).collect() },
+            WireRequest::ClassifySession { session: 0, input: vec![15; 3] },
+            WireRequest::ClassifySession { session: u64::MAX, input: vec![] },
+            WireRequest::LearnWay { session: 7, shots: vec![] },
+            WireRequest::LearnWay {
+                session: 42,
+                shots: vec![vec![1, 2, 3], vec![], vec![15; 100]],
             },
-            WireDecision { window: 2, end_t: 23, predicted: 1, logits: vec![] },
-        ]));
-        rt_response(WireResponse::StreamClosed { existed: true, windows: 42 });
-        rt_response(WireResponse::StreamClosed { existed: false, windows: 0 });
-        rt_response(WireResponse::ReplyBatch(vec![]));
-        rt_response(WireResponse::ReplyBatch(vec![
-            BatchItem::Reply(WireReply {
-                predicted: Some(1),
-                logits: Some(vec![-5, 9]),
-                learned_way: None,
-                sim_cycles: None,
-                queue_us: Some(1),
-                service_us: Some(2),
-                write_us: None,
+            WireRequest::EvictSession { session: 1 << 63 },
+            WireRequest::Health,
+            WireRequest::Metrics,
+            WireRequest::StreamOpen { session: 3, hop: 1 },
+            WireRequest::StreamOpen { session: u64::MAX, hop: u32::MAX },
+            WireRequest::StreamPush { session: 9, samples: vec![] },
+            WireRequest::StreamPush { session: 9, samples: (0..200).map(|i| i % 16).collect() },
+            WireRequest::StreamClose { session: 0 },
+            WireRequest::ClassifyBatch { inputs: vec![] },
+            WireRequest::ClassifyBatch { inputs: vec![vec![1, 2, 3], vec![], vec![15; 64]] },
+            WireRequest::AddShots { session: 7, way: 0, shots: vec![] },
+            WireRequest::AddShots {
+                session: u64::MAX,
+                way: 249,
+                shots: vec![vec![1, 2, 3], vec![], vec![15; 100]],
+            },
+            WireRequest::SessionInfo { session: 0 },
+            WireRequest::SessionInfo { session: u64::MAX },
+            WireRequest::Stat,
+        ]
+    }
+
+    /// Every response opcode, same coverage discipline as
+    /// [`request_corpus`].
+    fn response_corpus() -> Vec<WireResponse> {
+        let mut out = vec![
+            WireResponse::Reply(WireReply::default()),
+            WireResponse::Reply(WireReply {
+                predicted: Some(3),
+                logits: Some(vec![i32::MIN, -1, 0, 1, i32::MAX]),
+                learned_way: Some(0),
+                sim_cycles: Some(u64::MAX),
+                queue_us: Some(12),
+                service_us: Some(3400),
+                write_us: Some(0),
             }),
-            BatchItem::Error { code: ErrorCode::Overloaded, message: "shard full".into() },
-            BatchItem::Reply(WireReply::default()),
-            BatchItem::Error { code: ErrorCode::App, message: String::new() },
-        ]));
-        rt_response(WireResponse::SessionInfo(SessionInfoWire::default()));
-        rt_response(WireResponse::SessionInfo(SessionInfoWire {
-            exists: true,
-            ways: 250,
-            shots: 2500,
-            bytes_used: 250 * 26,
-            bytes_per_way: 26,
-            way_cap: u64::MAX,
-        }));
-        for code in [ErrorCode::Overloaded, ErrorCode::Malformed, ErrorCode::App] {
-            rt_response(WireResponse::Error { code, message: "queue full".into() });
-        }
-        rt_response(WireResponse::Error { code: ErrorCode::App, message: String::new() });
-        rt_response(WireResponse::Stat(StatWire::default()));
-        rt_response(WireResponse::Stat(StatWire {
-            recorded: 300,
-            overwritten: 44,
-            events: vec![
-                FlightEventWire {
-                    seq: 256,
-                    at_us: 1_000_000,
-                    kind: 1,
-                    op: 2,
-                    detail: "chaos engine: injected panic".into(),
+            WireResponse::Health(HealthWire {
+                shards: 4,
+                live_sessions: 123,
+                input_len: 64,
+                embed_dim: 8,
+                window: 16,
+                channels: 4,
+            }),
+            WireResponse::Metrics(MetricsWire {
+                requests: 1,
+                completed: 2,
+                errors: 3,
+                rejected: 4,
+                learn_ways: 5,
+                evictions: 6,
+                sim_cycles: 7,
+                stream_chunks: 8,
+                stream_decisions: 9,
+                worker_panics: 10,
+                add_shots: 11,
+                mean_latency_us: 1.5,
+                p50_latency_us: 2.5,
+                p95_latency_us: 100.0,
+                p99_latency_us: 1e6,
+                queue_depth: 12,
+                in_flight: 13,
+                sessions_live: 14,
+                session_bytes: 15,
+                backlog_hwm: 16,
+                per_op: vec![
+                    OpMetricsWire { op: 0, count: 17, p50_us: 1.0, p95_us: 2.0, p99_us: 3.0 },
+                    OpMetricsWire { op: 10, count: 0, p50_us: 0.0, p95_us: 0.0, p99_us: 0.0 },
+                ],
+            }),
+            WireResponse::Evicted { existed: true },
+            WireResponse::Evicted { existed: false },
+            WireResponse::StreamOpened { window: 16, hop: 4 },
+            WireResponse::StreamDecisions(vec![]),
+            WireResponse::StreamDecisions(vec![
+                WireDecision { window: 0, end_t: 15, predicted: 3, logits: vec![1, -2, 3] },
+                WireDecision {
+                    window: u64::MAX,
+                    end_t: u64::MAX,
+                    predicted: 0,
+                    logits: vec![i32::MIN, i32::MAX],
                 },
-                FlightEventWire { seq: 257, at_us: 1_000_400, kind: 9, op: 99, detail: "".into() },
-            ],
-        }));
+                WireDecision { window: 2, end_t: 23, predicted: 1, logits: vec![] },
+            ]),
+            WireResponse::StreamClosed { existed: true, windows: 42 },
+            WireResponse::StreamClosed { existed: false, windows: 0 },
+            WireResponse::ReplyBatch(vec![]),
+            WireResponse::ReplyBatch(vec![
+                BatchItem::Reply(WireReply {
+                    predicted: Some(1),
+                    logits: Some(vec![-5, 9]),
+                    learned_way: None,
+                    sim_cycles: None,
+                    queue_us: Some(1),
+                    service_us: Some(2),
+                    write_us: None,
+                }),
+                BatchItem::Error { code: ErrorCode::Overloaded, message: "shard full".into() },
+                BatchItem::Reply(WireReply::default()),
+                BatchItem::Error { code: ErrorCode::App, message: String::new() },
+            ]),
+            WireResponse::SessionInfo(SessionInfoWire::default()),
+            WireResponse::SessionInfo(SessionInfoWire {
+                exists: true,
+                ways: 250,
+                shots: 2500,
+                bytes_used: 250 * 26,
+                bytes_per_way: 26,
+                way_cap: u64::MAX,
+            }),
+            WireResponse::Error { code: ErrorCode::App, message: String::new() },
+            WireResponse::Stat(StatWire::default()),
+            WireResponse::Stat(StatWire {
+                recorded: 300,
+                overwritten: 44,
+                events: vec![
+                    FlightEventWire {
+                        seq: 256,
+                        at_us: 1_000_000,
+                        kind: 1,
+                        op: 2,
+                        detail: "chaos engine: injected panic".into(),
+                    },
+                    FlightEventWire {
+                        seq: 257,
+                        at_us: 1_000_400,
+                        kind: 9,
+                        op: 99,
+                        detail: "".into(),
+                    },
+                ],
+            }),
+        ];
+        for code in [ErrorCode::Overloaded, ErrorCode::Malformed, ErrorCode::App] {
+            out.push(WireResponse::Error { code, message: "queue full".into() });
+        }
+        out
+    }
+
+    /// Every corpus message at every protocol version v1..=v5: the frame
+    /// reads back through `read_frame`, decodes, echoes the pipelining
+    /// tag exactly when the effective version carries one, round-trips
+    /// with full fidelity at [`VERSION`], and — at *every* version —
+    /// re-encoding the decoded frame reproduces the identical bytes, so
+    /// each (message, version) pair has one canonical representation.
+    #[test]
+    fn corpus_roundtrips_at_every_version() {
+        const TAG: u64 = 0xDEAD_BEEF;
+        for req in request_corpus() {
+            for v in MIN_VERSION..=VERSION {
+                let frame = encode_request_versioned(&req, v, TAG);
+                let mut r = std::io::Cursor::new(frame.clone());
+                let blob = read_frame(&mut r).unwrap().unwrap();
+                assert_eq!(blob.len() + 4, frame.len());
+                let got = decode_request(&blob).unwrap();
+                assert_eq!(got.version, v.max(request_min_version(&req)), "{req:?} at v{v}");
+                let want_tag = if got.version >= 3 { TAG } else { 0 };
+                assert_eq!(got.request_id, want_tag, "{req:?} at v{v}");
+                // Request payloads are version-independent (only gated),
+                // so decode is full-fidelity at every version.
+                assert_eq!(got.req, req, "{req:?} at v{v}");
+                let again = encode_request_versioned(&got.req, got.version, got.request_id);
+                assert_eq!(again, frame, "{req:?} at v{v} must re-encode canonically");
+            }
+        }
+        for resp in response_corpus() {
+            for v in MIN_VERSION..=VERSION {
+                let frame = encode_response_versioned(&resp, v, TAG);
+                let got = decode_response(&frame[4..]).unwrap();
+                let want_tag = if got.version >= 3 { TAG } else { 0 };
+                assert_eq!(got.request_id, want_tag, "{resp:?} at v{v}");
+                if got.version == VERSION {
+                    assert_eq!(got.resp, resp, "full fidelity at v{VERSION}");
+                }
+                // Older versions drop newer payload fields; the canonical
+                // byte check still pins their exact shape.
+                let again = encode_response_versioned(&got.resp, got.version, got.request_id);
+                assert_eq!(again, frame, "{resp:?} at v{v} must re-encode canonically");
+            }
+        }
     }
 
     #[test]
@@ -1777,117 +1809,48 @@ mod tests {
         assert!(format!("{err:#}").contains("v5"), "{err:#}");
     }
 
+    /// Every corpus frame at every version, truncated at *every* byte
+    /// boundary, is malformed: decode returns an error — it never panics
+    /// and never decodes "by luck" into a shorter message. A trailing
+    /// byte after a well-formed payload is malformed too (strict decode),
+    /// as are an out-of-range version byte and an unknown opcode.
     #[test]
-    fn v5_payloads_reject_truncation_and_trailing_bytes() {
-        // Every cut of a well-formed v5 frame fails decode, and trailing
-        // bytes after the payload are malformed too — same discipline the
-        // v4 payloads shipped with.
-        let frame = encode_request(&WireRequest::Stat);
-        let blob = &frame[4..];
-        let mut long = blob.to_vec();
-        long.push(0);
-        assert!(decode_request(&long).is_err(), "trailing byte must fail");
-        let responses = [
-            WireResponse::Reply(WireReply {
-                predicted: Some(3),
-                logits: Some(vec![1, -2]),
-                queue_us: Some(10),
-                service_us: Some(20),
-                write_us: Some(30),
-                ..WireReply::default()
-            }),
-            WireResponse::Stat(StatWire {
-                recorded: 5,
-                overwritten: 1,
-                events: vec![FlightEventWire {
-                    seq: 4,
-                    at_us: 99,
-                    kind: 0,
-                    op: 1,
-                    detail: "engine error".into(),
-                }],
-            }),
-            WireResponse::Metrics(MetricsWire {
-                per_op: vec![OpMetricsWire { op: 3, count: 2, ..OpMetricsWire::default() }],
-                ..MetricsWire::default()
-            }),
-        ];
-        for resp in &responses {
-            let frame = encode_response(resp);
-            let blob = &frame[4..];
-            for cut in 2..blob.len() {
-                assert!(decode_response(&blob[..cut]).is_err(), "cut at {cut} must fail");
+    fn corpus_rejects_truncation_trailing_bytes_and_bad_headers() {
+        let mut blobs: Vec<(String, Vec<u8>, bool)> = Vec::new();
+        for req in request_corpus() {
+            for v in MIN_VERSION..=VERSION {
+                let frame = encode_request_versioned(&req, v, 1);
+                blobs.push((format!("{req:?} v{v}"), frame[4..].to_vec(), true));
             }
-            let mut long = blob.to_vec();
-            long.push(0);
-            assert!(decode_response(&long).is_err(), "trailing byte must fail");
         }
-    }
-
-    #[test]
-    fn v4_payloads_reject_truncation_and_trailing_bytes() {
-        // Every cut of a well-formed AddShots / SessionInfo frame fails
-        // decode (nothing decodes "by luck" into a shorter message), and
-        // trailing bytes after the payload are malformed too.
-        let frames = [
-            encode_request(&WireRequest::AddShots {
-                session: 5,
-                way: 3,
-                shots: vec![vec![1, 2], vec![3]],
-            }),
-            encode_request(&WireRequest::SessionInfo { session: 5 }),
-        ];
-        for frame in &frames {
-            let blob = &frame[4..];
-            for cut in 2..blob.len() {
-                assert!(decode_request(&blob[..cut]).is_err(), "cut at {cut} must fail");
+        for resp in response_corpus() {
+            for v in MIN_VERSION..=VERSION {
+                let frame = encode_response_versioned(&resp, v, 1);
+                blobs.push((format!("{resp:?} v{v}"), frame[4..].to_vec(), false));
             }
-            let mut long = blob.to_vec();
+        }
+        for (what, blob, is_req) in &blobs {
+            let fails = |b: &[u8]| {
+                if *is_req {
+                    decode_request(b).is_err()
+                } else {
+                    decode_response(b).is_err()
+                }
+            };
+            for cut in 0..blob.len() {
+                assert!(fails(&blob[..cut]), "{what}: cut at {cut} must fail");
+            }
+            let mut long = blob.clone();
             long.push(0);
-            assert!(decode_request(&long).is_err(), "trailing byte must fail");
+            assert!(fails(&long), "{what}: trailing byte must fail");
+            let mut bad = blob.clone();
+            bad[0] = VERSION + 1;
+            assert!(fails(&bad), "{what}: future version byte must fail");
+            bad[0] = 0;
+            assert!(fails(&bad), "{what}: version 0 must fail");
         }
-        let frame = encode_response(&WireResponse::SessionInfo(SessionInfoWire {
-            exists: true,
-            ways: 3,
-            shots: 30,
-            bytes_used: 18,
-            bytes_per_way: 6,
-            way_cap: 250,
-        }));
-        let blob = &frame[4..];
-        for cut in 2..blob.len() {
-            assert!(decode_response(&blob[..cut]).is_err(), "cut at {cut} must fail");
-        }
-        let mut long = blob.to_vec();
-        long.push(0);
-        assert!(decode_response(&long).is_err());
-    }
-
-    #[test]
-    fn rejects_bad_version() {
-        let mut frame = encode_request(&WireRequest::Health);
-        frame[4] = 9; // version byte lives right after the length prefix
-        assert!(decode_request(&frame[4..]).is_err());
-    }
-
-    #[test]
-    fn rejects_unknown_opcode_and_trailing_bytes() {
-        assert!(decode_request(&[1, 0x77]).is_err());
-        let mut frame = encode_request(&WireRequest::Health);
-        frame.push(0); // trailing garbage after a well-formed payload
-        assert!(decode_request(&frame[4..]).is_err());
-    }
-
-    #[test]
-    fn rejects_truncated_payload() {
-        let frame = encode_request(&WireRequest::ClassifySession {
-            session: 5,
-            input: vec![1, 2, 3, 4],
-        });
-        let blob = &frame[4..];
-        for cut in 2..blob.len() {
-            assert!(decode_request(&blob[..cut]).is_err(), "cut at {cut} must fail");
-        }
+        assert!(decode_request(&[1, 0x77]).is_err(), "unknown request opcode");
+        assert!(decode_response(&[1, 0x00]).is_err(), "unknown response opcode");
     }
 
     #[test]
@@ -1921,57 +1884,80 @@ mod tests {
         assert!(read_frame(&mut r).unwrap().is_none());
     }
 
+    /// Every list- or bytes-bearing field on the wire, fed a hostile
+    /// count (first value past the bound, and u32::MAX): decode must be
+    /// malformed *before* the count can drive allocation — the decoder
+    /// bounds each count against [`MAX_LIST`] / [`MAX_FRAME`] or caps
+    /// pre-allocation and fails on the truncated payload.
     #[test]
-    fn rejects_oversized_lists() {
-        // A hostile shot / window count is rejected before allocation.
-        let mut body = head(VERSION, OP_LEARN_WAY, 0);
-        put_u64(&mut body, 1);
-        put_u32(&mut body, (MAX_LIST + 1) as u32);
-        assert!(decode_request(&body).is_err());
-        let mut body = head(VERSION, OP_CLASSIFY_BATCH, 0);
-        put_u32(&mut body, u32::MAX);
-        assert!(decode_request(&body).is_err());
-        // AddShots shares LearnWay's hostile-count bound: both the first
-        // count past the limit and a u32::MAX count fail before any
-        // allocation can happen.
-        for hostile in [(MAX_LIST + 1) as u32, u32::MAX] {
+    fn corpus_hostile_counts_are_rejected_before_allocation() {
+        for n in [(MAX_LIST + 1) as u32, u32::MAX] {
+            // LearnWay shot count.
+            let mut body = head(VERSION, OP_LEARN_WAY, 0);
+            put_u64(&mut body, 1);
+            put_u32(&mut body, n);
+            assert!(decode_request(&body).is_err(), "LearnWay x{n}");
+            // ClassifyBatch window count.
+            let mut body = head(VERSION, OP_CLASSIFY_BATCH, 0);
+            put_u32(&mut body, n);
+            assert!(decode_request(&body).is_err(), "ClassifyBatch x{n}");
+            // AddShots shot count (shares LearnWay's bound).
             let mut body = head(VERSION, OP_ADD_SHOTS, 0);
             put_u64(&mut body, 1);
             put_u64(&mut body, 0);
-            put_u32(&mut body, hostile);
+            put_u32(&mut body, n);
             let err = decode_request(&body).unwrap_err();
             assert!(format!("{err:#}").contains("shots"), "{err:#}");
+            // ReplyBatch item count.
+            let mut body = head(VERSION, OP_REPLY_BATCH, 0);
+            put_u32(&mut body, n);
+            assert!(decode_response(&body).is_err(), "ReplyBatch x{n}");
+            // Stat flight-event count.
+            let mut body = head(VERSION, OP_STAT_REPLY, 0);
+            put_u64(&mut body, 0);
+            put_u64(&mut body, 0);
+            put_u32(&mut body, n);
+            let err = decode_response(&body).unwrap_err();
+            assert!(format!("{err:#}").contains("stat event list"), "{err:#}");
+            // v5 Metrics per-op row count.
+            let mut body = head(VERSION, OP_METRICS_REPLY, 0);
+            for _ in 0..11 {
+                put_u64(&mut body, 0); // counters through add_shots
+            }
+            for _ in 0..4 {
+                put_f64(&mut body, 0.0); // latency percentiles
+            }
+            for _ in 0..5 {
+                put_u64(&mut body, 0); // v5 gauges
+            }
+            put_u32(&mut body, n);
+            let err = decode_response(&body).unwrap_err();
+            assert!(format!("{err:#}").contains("per-op"), "{err:#}");
         }
-        // A hostile per-shot byte length inside an AddShots list is
-        // bounded by the frame cap too.
+        // Bytes fields claiming up to 4 GiB are bounded by the frame cap.
+        let mut body = head(VERSION, OP_CLASSIFY, 0);
+        put_u32(&mut body, u32::MAX);
+        assert!(decode_request(&body).is_err(), "Classify input claiming 4 GiB");
         let mut body = head(VERSION, OP_ADD_SHOTS, 0);
         put_u64(&mut body, 1);
         put_u64(&mut body, 0);
         put_u32(&mut body, 1);
-        put_u32(&mut body, u32::MAX); // shot claims 4 GiB
-        assert!(decode_request(&body).is_err());
-        // A hostile flight-event count in a Stat reply is rejected before
-        // allocation, as is a hostile per-op row count in a v5 Metrics.
-        for hostile in [(MAX_LIST + 1) as u32, u32::MAX] {
-            let mut body = head(VERSION, OP_STAT_REPLY, 0);
-            put_u64(&mut body, 0);
-            put_u64(&mut body, 0);
-            put_u32(&mut body, hostile);
-            let err = decode_response(&body).unwrap_err();
-            assert!(format!("{err:#}").contains("stat event list"), "{err:#}");
-        }
-        let mut body = head(VERSION, OP_METRICS_REPLY, 0);
-        for _ in 0..11 {
-            put_u64(&mut body, 0); // counters through add_shots
-        }
-        for _ in 0..4 {
-            put_f64(&mut body, 0.0); // latency percentiles
-        }
-        for _ in 0..5 {
-            put_u64(&mut body, 0); // v5 gauges
-        }
-        put_u32(&mut body, u32::MAX); // hostile per-op row count
-        let err = decode_response(&body).unwrap_err();
-        assert!(format!("{err:#}").contains("per-op"), "{err:#}");
+        put_u32(&mut body, u32::MAX); // the one shot claims 4 GiB
+        assert!(decode_request(&body).is_err(), "AddShots shot claiming 4 GiB");
+        let mut body = head(VERSION, OP_ERROR, 0);
+        body.push(3);
+        put_u32(&mut body, u32::MAX);
+        assert!(decode_response(&body).is_err(), "Error message claiming 4 GiB");
+        // Counts whose decode caps pre-allocation instead of rejecting
+        // outright (logits, stream decisions) still fail on the truncated
+        // payload without ever allocating the claimed size.
+        let mut body = head(VERSION, OP_REPLY, 0);
+        body.push(0); // predicted: None
+        body.push(1); // logits: Some, claiming ~500M entries
+        put_u32(&mut body, u32::MAX / 8);
+        assert!(decode_response(&body).is_err(), "hostile logit count");
+        let mut body = head(VERSION, OP_STREAM_DECISIONS, 0);
+        put_u32(&mut body, u32::MAX);
+        assert!(decode_response(&body).is_err(), "hostile decision count");
     }
 }

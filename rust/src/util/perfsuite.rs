@@ -18,7 +18,7 @@ use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::server::EngineFactory;
-use crate::coordinator::{Engine, Metrics, OpKind};
+use crate::coordinator::{Engine, Metrics, OpKind, OpMode};
 use crate::golden::{self, ExecMode, PreparedModel};
 use crate::model::{demo_tiny, demo_tiny_kws, QLayer, QuantModel};
 use crate::protonet::ProtoHead;
@@ -190,10 +190,11 @@ pub fn synthetic_stream_model() -> QuantModel {
 }
 
 /// Hot-path suite: windows/sec of the scalar naive loop, the un-prepared
-/// fast path (weights decoded per call — the pre-plan baseline) and the
-/// prepared plan (forward, batched forward, incremental stream), on the
-/// serving demo model and a deeper synthetic TCN. All paths are asserted
-/// bit-identical on every window.
+/// fast path (weights decoded per call — the pre-plan baseline), the
+/// prepared plan (forward, batched forward, incremental stream), the SIMD
+/// tier and the turbo operating point (SIMD plan + pooled batches), on
+/// the serving demo model and a deeper synthetic TCN. All paths are
+/// asserted bit-identical on every window.
 pub fn run_hotpath_suite(quick: bool) -> Result<Vec<PerfRow>> {
     let mut rows = Vec::new();
     let workloads: Vec<(&str, QuantModel, usize, usize)> = vec![
@@ -258,6 +259,49 @@ pub fn run_hotpath_suite(quick: bool) -> Result<Vec<PerfRow>> {
                 .push("windows_per_sec", rate(n, t_batch)),
         );
 
+        // SIMD tier, single thread: the same plan geometry prepared with
+        // `ExecMode::Simd` (lane-parallel accumulation over the cout axis).
+        let simd_plan = Arc::new(PreparedModel::with_mode(&model, ExecMode::Simd));
+        let mut simd_scratch = simd_plan.new_scratch();
+        let mut simd_out = Vec::with_capacity(n);
+        let t_simd = time_per_item(n, |i| {
+            simd_out.push(simd_plan.forward(&windows[i], &mut simd_scratch).expect("simd"));
+        });
+        if simd_out != reference {
+            bail!("{name}: SIMD plan diverged from the naive reference");
+        }
+        rows.push(latency_row(&format!("{name}/simd"), "windows_per_sec", n, &t_simd));
+
+        // Turbo operating point: the SIMD plan plus pooled `forward_many`
+        // over 32-window sub-batches (the serve batch path's shape). The
+        // paper's max-throughput mode; bit-identity still asserted.
+        let pool = OpMode::Turbo.batch_pool();
+        let mut turbo_out = Vec::with_capacity(n);
+        let t0 = Instant::now();
+        for chunk in windows.chunks(32) {
+            for r in simd_plan.forward_many_pooled(chunk, pool) {
+                turbo_out.push(r.expect("turbo"));
+            }
+        }
+        let t_turbo = t0.elapsed();
+        if turbo_out != reference {
+            bail!("{name}: turbo batched forward diverged from the naive reference");
+        }
+        rows.push(
+            PerfRow::new(format!("{name}/turbo_batch32"))
+                .push("windows_per_sec", rate(n, t_turbo))
+                .push("pool_threads", pool as f64),
+        );
+
+        // The dual-mode trade-off in one row: paced (sequential prepared
+        // forwards) vs turbo (SIMD + pooled batches) on the same windows.
+        rows.push(
+            PerfRow::new(format!("{name}/op_modes"))
+                .push("paced_windows_per_sec", rate(n, t_prep.total))
+                .push("turbo_windows_per_sec", rate(n, t_turbo))
+                .push("turbo_vs_paced", rate(n, t_turbo) / rate(n, t_prep.total)),
+        );
+
         // Incremental stream on the shared plan: continuous input, one
         // decision per hop; sampled decisions cross-checked against the
         // batch forward.
@@ -292,7 +336,9 @@ pub fn run_hotpath_suite(quick: bool) -> Result<Vec<PerfRow>> {
         rows.push(
             PerfRow::new(format!("{name}/speedup"))
                 .push("prepared_vs_naive", rate(n, t_prep.total) / rate(n, t_naive.total))
-                .push("prepared_vs_fast", rate(n, t_prep.total) / rate(n, t_fast.total)),
+                .push("prepared_vs_fast", rate(n, t_prep.total) / rate(n, t_fast.total))
+                .push("simd_vs_naive", rate(n, t_simd.total) / rate(n, t_naive.total))
+                .push("turbo_vs_prepared", rate(n, t_turbo) / rate(n, t_prep.total)),
         );
     }
     rows.push(obs_overhead_row(quick)?);

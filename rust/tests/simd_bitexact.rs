@@ -1,0 +1,250 @@
+//! Property tests pinning the SIMD execution tier (`ExecMode::Simd`) to
+//! the scalar naive oracle: on random models — kernel sizes, dilations,
+//! channel widths, residual variants, optional heads — and on adversarial
+//! u4/accumulator-saturating extremes, the lane-parallel inner loop must
+//! be bit-identical to `golden::forward_with(.., ExecMode::Naive)`.
+//! Saturation-free planes reassociate the cout axis across lanes (licensed
+//! because no slab clamp can engage, so the reduction is a plain integer
+//! sum); saturable planes must fall back to the exact slab loop — both
+//! cases land on the same bits as the oracle, which is what these tests
+//! pin. The pooled `forward_many` fan-out is held to the same standard on
+//! ragged batches (empty through many windows, mixed with saturating
+//! ones) and must agree with its own sequential path window for window.
+
+use chameleon::golden::{self, ExecMode, PreparedModel};
+use chameleon::model::{QLayer, QuantModel};
+use chameleon::util::prop;
+use chameleon::util::rng::Rng;
+use chameleon::{prop_assert, prop_assert_eq};
+
+fn rand_codes(rng: &mut Rng, n: usize) -> Vec<i8> {
+    (0..n).map(|_| rng.range(-8, 8) as i8).collect()
+}
+
+fn rand_conv(
+    rng: &mut Rng,
+    k: usize,
+    cin: usize,
+    cout: usize,
+    d: usize,
+    res: Option<i32>,
+) -> QLayer {
+    QLayer {
+        codes: rand_codes(rng, k * cin * cout),
+        codes_shape: vec![k, cin, cout],
+        bias: (0..cout).map(|_| rng.range(-8192, 8192) as i32).collect(),
+        out_shift: rng.range(0, 7) as i32,
+        dilation: d,
+        relu: true,
+        res_shift: res,
+        res_codes: None,
+        res_codes_shape: None,
+        res_bias: None,
+        res_out_shift: None,
+    }
+}
+
+/// Random TCN respecting the block grammar the golden forward expects
+/// (same generator family as `plan_bitexact.rs`): two conv layers per
+/// block, residual merge on the second, plus embed FC and — half the
+/// time — a classifier head. Channel widths deliberately straddle the
+/// 8-wide lane count so the chunked loop exercises both full lanes and
+/// ragged tails.
+fn rand_model(rng: &mut Rng) -> QuantModel {
+    let blocks = rng.range(1, 4) as usize;
+    let k = rng.range(1, 5) as usize;
+    let in_ch = rng.range(1, 6) as usize;
+    let mut channels = Vec::new();
+    let mut layers = Vec::new();
+    let mut cin = in_ch;
+    for _ in 0..blocks {
+        let ch = rng.range(1, 12) as usize;
+        let d1 = 1usize << rng.range(0, 4);
+        let d2 = 1usize << rng.range(0, 4);
+        layers.push(rand_conv(rng, k, cin, ch, d1, None));
+        let mut l2 = rand_conv(rng, k, ch, ch, d2, Some(rng.range(-3, 5) as i32));
+        if cin != ch || rng.below(3) == 0 {
+            l2.res_codes = Some(rand_codes(rng, cin * ch));
+            l2.res_codes_shape = Some(vec![1, cin, ch]);
+            l2.res_bias = Some((0..ch).map(|_| rng.range(-512, 512) as i32).collect());
+            l2.res_out_shift = Some(rng.range(0, 5) as i32);
+        }
+        layers.push(l2);
+        channels.push(ch);
+        cin = ch;
+    }
+    let embed_dim = rng.range(1, 12) as usize;
+    let embed = QLayer {
+        codes: rand_codes(rng, cin * embed_dim),
+        codes_shape: vec![cin, embed_dim],
+        bias: (0..embed_dim).map(|_| rng.range(-256, 256) as i32).collect(),
+        out_shift: rng.range(0, 6) as i32,
+        dilation: 1,
+        relu: true,
+        res_shift: None,
+        res_codes: None,
+        res_codes_shape: None,
+        res_bias: None,
+        res_out_shift: None,
+    };
+    let head = if rng.below(2) == 0 {
+        let classes = rng.range(2, 7) as usize;
+        Some(QLayer {
+            codes: rand_codes(rng, embed_dim * classes),
+            codes_shape: vec![embed_dim, classes],
+            bias: (0..classes).map(|_| rng.range(-256, 256) as i32).collect(),
+            out_shift: 0,
+            dilation: 1,
+            relu: false,
+            res_shift: None,
+            res_codes: None,
+            res_codes_shape: None,
+            res_bias: None,
+            res_out_shift: None,
+        })
+    } else {
+        None
+    };
+    let mut m = QuantModel {
+        name: "prop".into(),
+        in_channels: in_ch,
+        seq_len: 0,
+        channels,
+        kernel_size: k,
+        embed_dim,
+        n_classes: head.as_ref().map(|h| h.c_out()),
+        in_shift: 0,
+        embed_shift: 0,
+        layers,
+        embed,
+        head,
+    };
+    let rf = m.receptive_field() as i64;
+    m.seq_len = (rf + rng.range(-4, 6)).max(1) as usize;
+    m
+}
+
+/// One model, one window: the SIMD tier — both through the one-shot
+/// `forward_with` wrapper and through a prepared plan — must agree with
+/// the scalar naive oracle bit for bit.
+fn check_window(m: &QuantModel, x: &[u8]) -> Result<(), String> {
+    let oracle = golden::forward_with(m, x, ExecMode::Naive).map_err(|e| e.to_string())?;
+    let simd = golden::forward_with(m, x, ExecMode::Simd).map_err(|e| e.to_string())?;
+    prop_assert_eq!(&simd, &oracle);
+    let plan = PreparedModel::with_mode(m, ExecMode::Simd);
+    let mut scratch = plan.new_scratch();
+    let got = plan.forward(x, &mut scratch).map_err(|e| e.to_string())?;
+    prop_assert_eq!(&got, &oracle);
+    prop_assert!(got.0.iter().all(|&v| v <= 15), "non-u4 embedding");
+    Ok(())
+}
+
+#[test]
+fn simd_plan_is_bit_identical_to_naive_on_random_models() {
+    prop::check(40, 0x51D0_0001, |rng| {
+        let m = rand_model(rng);
+        for _ in 0..2 {
+            let x: Vec<u8> = (0..m.seq_len * m.in_channels)
+                .map(|_| rng.range(0, 16) as u8)
+                .collect();
+            check_window(&m, &x)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn simd_matches_under_saturation_pressure() {
+    // Extreme codes and near-max activations drive the 18-bit accumulator
+    // into its rails, so the SIMD tier must stand down on those planes
+    // and reproduce every slab clamp through the exact scalar loop.
+    prop::check(30, 0x51D0_0002, |rng| {
+        let mut m = rand_model(rng);
+        for l in &mut m.layers {
+            for c in &mut l.codes {
+                *c = if rng.below(2) == 0 { 7 } else { -8 };
+            }
+            if let Some(rc) = &mut l.res_codes {
+                for c in rc.iter_mut() {
+                    *c = if rng.below(2) == 0 { 7 } else { -8 };
+                }
+            }
+        }
+        let x: Vec<u8> = (0..m.seq_len * m.in_channels)
+            .map(|_| rng.range(12, 16) as u8)
+            .collect();
+        check_window(&m, &x)
+    });
+}
+
+#[test]
+fn pooled_forward_many_is_bit_identical_on_ragged_batches() {
+    // Ragged batch sizes from empty through many windows, across worker
+    // pool widths, on plans that are sometimes saturation-extreme: the
+    // pooled fan-out must return results in input order, window for
+    // window identical to the sequential path and to the naive oracle.
+    prop::check(24, 0x51D0_0003, |rng| {
+        let mut m = rand_model(rng);
+        if rng.below(2) == 0 {
+            for l in &mut m.layers {
+                for c in &mut l.codes {
+                    *c = if rng.below(2) == 0 { 7 } else { -8 };
+                }
+            }
+        }
+        let input_len = m.seq_len * m.in_channels;
+        let batch = rng.range(0, 9) as usize;
+        let mut windows: Vec<Vec<u8>> = (0..batch)
+            .map(|_| (0..input_len).map(|_| rng.range(0, 16) as u8).collect())
+            .collect();
+        if batch > 0 {
+            // One all-max window somewhere in the batch saturates slabs
+            // on the extreme models.
+            let hot = rng.below(batch as u64) as usize;
+            windows[hot] = vec![15u8; input_len];
+        }
+        let plan = PreparedModel::with_mode(&m, ExecMode::Simd);
+        let threads = rng.range(1, 5) as usize;
+        let pooled = plan.forward_many_pooled(&windows, threads);
+        prop_assert_eq!(pooled.len(), windows.len());
+        let mut scratch = plan.new_scratch();
+        let seq = plan.forward_many(&windows, &mut scratch).map_err(|e| e.to_string())?;
+        for ((w, got), alone) in windows.iter().zip(&pooled).zip(&seq) {
+            let got = got.as_ref().map_err(|e| e.to_string())?;
+            let oracle =
+                golden::forward_with(&m, w, ExecMode::Naive).map_err(|e| e.to_string())?;
+            prop_assert_eq!(got, &oracle);
+            prop_assert_eq!(got, alone);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn simd_streaming_matches_naive_forward() {
+    // A stream opened on a SIMD plan must emit windows bit-identical to
+    // the naive oracle whenever the receptive field fits the window.
+    prop::check(20, 0x51D0_0004, |rng| {
+        let mut m = rand_model(rng);
+        m.seq_len = m.receptive_field() + rng.range(0, 6) as usize;
+        let plan = std::sync::Arc::new(PreparedModel::with_mode(&m, ExecMode::Simd));
+        let hop = rng.range(1, m.seq_len as i64 + 1) as usize;
+        let n_windows = rng.range(1, 4) as usize;
+        let t_total = m.seq_len + (n_windows - 1) * hop;
+        let stream: Vec<u8> = (0..t_total * m.in_channels)
+            .map(|_| rng.range(0, 16) as u8)
+            .collect();
+        let mut s = plan.open_stream(hop).map_err(|e| e.to_string())?;
+        let outs = s.push(&stream).map_err(|e| e.to_string())?;
+        prop_assert_eq!(outs.len(), n_windows);
+        for (n, out) in outs.iter().enumerate() {
+            let start = n * hop * m.in_channels;
+            let w = &stream[start..start + m.seq_len * m.in_channels];
+            let (emb, logits) =
+                golden::forward_with(&m, w, ExecMode::Naive).map_err(|e| e.to_string())?;
+            prop_assert_eq!(&out.embedding, &emb);
+            prop_assert_eq!(&out.logits, &logits);
+        }
+        Ok(())
+    });
+}
