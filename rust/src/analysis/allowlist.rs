@@ -1,0 +1,142 @@
+//! The committed allowlist (`ci/analysis_allow.txt`) that governs the
+//! token rules of `chameleon check`.
+//!
+//! Format, one entry per line:
+//!
+//! ```text
+//! budget: N
+//! rule | repo/relative/file.rs | line-snippet | one-line justification
+//! ```
+//!
+//! An entry suppresses a finding when the rule and file match exactly and
+//! the flagged raw source line contains the snippet. The budget is a
+//! ratchet: it must cover the entry count and may only be lowered —
+//! entries that no longer match anything are themselves violations
+//! (*stale entry*), so the list can only shrink as sites get fixed.
+//! Structural rules (proto-conformance, arity-sync) are not
+//! allowlistable: a drifted table is always a bug.
+
+use std::fs;
+use std::path::Path;
+
+use super::Finding;
+
+/// Rules whose findings an entry may suppress.
+const ALLOWLISTABLE: [&str; 4] =
+    ["panic-freedom", "wire-indexing", "unsafe-safety", "lock-hygiene"];
+
+pub struct Entry {
+    pub rule: String,
+    pub file: String,
+    pub snippet: String,
+    pub justification: String,
+    pub line: usize,
+}
+
+pub struct Allowlist {
+    pub rel: String,
+    pub entries: Vec<Entry>,
+    pub budget: usize,
+    /// Parse problems, reported as violations: `(line, message)`.
+    pub malformed: Vec<(usize, String)>,
+}
+
+/// Load the allowlist; a missing file is an empty list (fixture trees).
+pub fn load(path: &Path, rel: &str) -> Allowlist {
+    let mut list = Allowlist {
+        rel: rel.to_string(),
+        entries: Vec::new(),
+        budget: 0,
+        malformed: Vec::new(),
+    };
+    let Ok(text) = fs::read_to_string(path) else {
+        return list;
+    };
+    for (i, line) in text.lines().enumerate() {
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        if let Some(b) = t.strip_prefix("budget:") {
+            match b.trim().parse() {
+                Ok(n) => list.budget = n,
+                Err(_) => list.malformed.push((i + 1, "unparsable budget".to_string())),
+            }
+            continue;
+        }
+        let parts: Vec<&str> = t.splitn(4, '|').map(str::trim).collect();
+        if parts.len() != 4 || parts.iter().any(|p| p.is_empty()) {
+            list.malformed.push((
+                i + 1,
+                "expected `rule | file | snippet | justification` with no empty fields"
+                    .to_string(),
+            ));
+            continue;
+        }
+        if !ALLOWLISTABLE.contains(&parts[0]) {
+            list.malformed
+                .push((i + 1, format!("rule `{}` is not allowlistable", parts[0])));
+            continue;
+        }
+        list.entries.push(Entry {
+            rule: parts[0].to_string(),
+            file: parts[1].to_string(),
+            snippet: parts[2].to_string(),
+            justification: parts[3].to_string(),
+            line: i + 1,
+        });
+    }
+    list
+}
+
+/// Mark findings covered by an entry as allowed, then report the list's
+/// own violations: malformed lines, stale entries, and a blown budget.
+pub fn apply(list: &Allowlist, findings: &mut Vec<Finding>) {
+    let mut used = vec![false; list.entries.len()];
+    for f in findings.iter_mut() {
+        for (k, e) in list.entries.iter().enumerate() {
+            if e.rule == f.rule && e.file == f.file && f.excerpt.contains(&e.snippet) {
+                f.allowed = true;
+                used[k] = true;
+            }
+        }
+    }
+    for (line, msg) in &list.malformed {
+        findings.push(Finding::new(
+            "allowlist",
+            &list.rel,
+            *line,
+            format!("malformed allowlist entry: {msg}"),
+            "",
+        ));
+    }
+    for (k, e) in list.entries.iter().enumerate() {
+        if !used[k] {
+            findings.push(Finding::new(
+                "allowlist",
+                &list.rel,
+                e.line,
+                format!(
+                    "stale allowlist entry ({} | {} | {:?} matches no finding) — \
+                     remove it and lower the budget",
+                    e.rule, e.file, e.snippet
+                ),
+                "",
+            ));
+        }
+    }
+    if list.entries.len() > list.budget {
+        findings.push(Finding::new(
+            "allowlist",
+            &list.rel,
+            1,
+            format!(
+                "{} entries exceed the ratcheted budget of {} (the budget may \
+                 only shrink; fix sites instead of widening it)",
+                list.entries.len(),
+                list.budget
+            ),
+            "",
+        ));
+    }
+}

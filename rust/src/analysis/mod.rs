@@ -1,0 +1,496 @@
+//! `chameleon check` — the repo-native static analysis pass.
+//!
+//! A dependency-free line/token scanner (no `syn`; the crate's
+//! no-new-deps rule) that enforces the invariant families clippy cannot
+//! express, each one load-bearing for the serving stack's bit-exactness
+//! and fault-isolation story (DESIGN.md §Static analysis):
+//!
+//! * **proto-conformance** — every opcode in `serve/proto.rs` appears in
+//!   the doc table, the encode and decode paths, the min-version gate
+//!   (with a `require_vN` guard on gated decode arms) and the round-trip
+//!   corpus, and the DESIGN.md opcode table mirrors it all.
+//! * **panic-freedom** — `unwrap`/`expect`/`panic!`/`unreachable!` are
+//!   denied in non-test `serve/`, `coordinator/` and `golden/` code; the
+//!   worker `catch_unwind` boundary is last-resort, not error handling.
+//! * **wire-indexing** — no direct slice indexing in the wire decode
+//!   path, where the bytes are hostile.
+//! * **unsafe-safety** — every `unsafe` needs an adjacent `// SAFETY:`
+//!   (or `# Safety` doc) comment stating the exact invariant.
+//! * **lock-hygiene** — raw `.lock().unwrap()` is denied in favor of the
+//!   poisoning-aware recovery idiom the worker loop uses.
+//! * **arity-sync** — the `OpKind` table, the wire opcode table and the
+//!   DESIGN.md tables must agree on names, bytes and arity.
+//!
+//! Token-rule findings can be suppressed by `ci/analysis_allow.txt`, a
+//! ratcheted budget of justified exceptions (see [`allowlist`] — stale
+//! entries are themselves violations, so the list only shrinks). The
+//! pass runs as `chameleon check [--json]` and exits nonzero on any
+//! violation; [`check_repo`] runs it against this source tree in CI.
+
+mod allowlist;
+mod rules;
+mod scan;
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::Result;
+
+pub use scan::SourceFile;
+
+/// One rule hit, pinned to `file:line`.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    /// 1-based; structural findings without a better anchor use 1.
+    pub line: usize,
+    pub message: String,
+    /// Trimmed raw source line (what allowlist snippets match against).
+    pub excerpt: String,
+    /// True when an allowlist entry covers this finding.
+    pub allowed: bool,
+}
+
+impl Finding {
+    fn new(rule: &'static str, file: &str, line: usize, message: String, excerpt: &str) -> Finding {
+        Finding {
+            rule,
+            file: file.to_string(),
+            line,
+            message,
+            excerpt: excerpt.trim().to_string(),
+            allowed: false,
+        }
+    }
+}
+
+/// Outcome of one `chameleon check` run.
+pub struct Report {
+    /// Every finding, allowlisted ones included, sorted by file/line.
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+    pub allow_entries: usize,
+    pub allow_budget: usize,
+}
+
+impl Report {
+    /// Findings not covered by the allowlist — what fails the run.
+    pub fn violations(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| !f.allowed)
+    }
+
+    pub fn violation_count(&self) -> usize {
+        self.violations().count()
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.violation_count() == 0
+    }
+
+    /// Human-readable listing: one `file:line [rule] message` per
+    /// violation with its source excerpt, then a summary line.
+    pub fn render_text(&self) -> String {
+        let mut s = String::new();
+        for f in self.violations() {
+            s.push_str(&format!("{}:{} [{}] {}\n", f.file, f.line, f.rule, f.message));
+            if !f.excerpt.is_empty() {
+                s.push_str(&format!("    {}\n", f.excerpt));
+            }
+        }
+        let nv = self.violation_count();
+        let allowed = self.findings.len() - nv;
+        s.push_str(&format!(
+            "chameleon check: {} file(s) scanned, {} violation(s), {} allowlisted \
+             ({} entries, budget {})\n",
+            self.files_scanned, nv, allowed, self.allow_entries, self.allow_budget
+        ));
+        s
+    }
+
+    /// Machine-readable document (the CI artifact), deterministic key
+    /// and finding order.
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "{{\"files_scanned\":{},\"violations\":{},\"allow_entries\":{},\
+             \"allow_budget\":{},\"findings\":[",
+            self.files_scanned,
+            self.violation_count(),
+            self.allow_entries,
+            self.allow_budget
+        ));
+        for (i, f) in self.findings.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "{{\"rule\":\"{}\",\"file\":\"{}\",\"line\":{},\"message\":\"{}\",\
+                 \"excerpt\":\"{}\",\"allowed\":{}}}",
+                json_escape(f.rule),
+                json_escape(&f.file),
+                f.line,
+                json_escape(&f.message),
+                json_escape(&f.excerpt),
+                f.allowed
+            ));
+        }
+        s.push_str("]}");
+        s
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Run every rule over the tree rooted at `root` (the repo root: rules
+/// scan `rust/src/**/*.rs`, the doc cross-checks read `rust/DESIGN.md`,
+/// and the allowlist loads from `ci/analysis_allow.txt` when present).
+pub fn run_check(root: &Path) -> Result<Report> {
+    let files = scan::load_tree(root)?;
+    let design_text = fs::read_to_string(root.join("rust").join("DESIGN.md")).ok();
+    let design: Option<Vec<String>> =
+        design_text.map(|t| t.lines().map(str::to_string).collect());
+    let mut findings = rules::run_all(&files, design.as_deref());
+    let list =
+        allowlist::load(&root.join("ci").join("analysis_allow.txt"), "ci/analysis_allow.txt");
+    allowlist::apply(&list, &mut findings);
+    findings.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok(Report {
+        findings,
+        files_scanned: files.len(),
+        allow_entries: list.entries.len(),
+        allow_budget: list.budget,
+    })
+}
+
+/// [`run_check`] against this repository's own tree — the tier-1 hook
+/// that keeps the tip clean.
+pub fn check_repo() -> Result<Report> {
+    run_check(&crate::repo_root())
+}
+
+#[cfg(test)]
+mod tests {
+    use std::fs;
+    use std::path::PathBuf;
+
+    use super::*;
+
+    fn fixture(name: &str, files: &[(&str, &str)]) -> PathBuf {
+        let root =
+            std::env::temp_dir().join(format!("chameleon-analysis-{}-{name}", std::process::id()));
+        if root.exists() {
+            fs::remove_dir_all(&root).unwrap();
+        }
+        for (rel, body) in files {
+            let p = root.join(rel);
+            fs::create_dir_all(p.parent().unwrap()).unwrap();
+            fs::write(&p, body).unwrap();
+        }
+        root
+    }
+
+    fn check(root: &Path) -> Report {
+        let r = run_check(root).unwrap();
+        fs::remove_dir_all(root).ok();
+        r
+    }
+
+    fn violation_keys(r: &Report) -> Vec<String> {
+        r.violations().map(|f| format!("{}:{} [{}]", f.file, f.line, f.rule)).collect()
+    }
+
+    /// A minimal, fully conformant proto.rs: consts, doc table, encode,
+    /// decode (with a guarded v2 arm), version gates, and corpus.
+    const GOOD_PROTO: &str = r#"//! | op     | since | direction | message |
+//! |--------|-------|-----------|---------|
+//! | `0x01` | v1    | request   | `Classify` |
+//! | `0x07` | v2    | request   | `StreamOpen` |
+//! | `0x81` | v1    | response  | `Reply` |
+//! | `0xFF` | v1    | response  | `Error` |
+
+const OP_CLASSIFY: u8 = 0x01;
+const OP_STREAM_OPEN: u8 = 0x07;
+const OP_REPLY: u8 = 0x81;
+const OP_ERROR: u8 = 0xFF;
+
+pub fn request_min_version(req: &WireRequest) -> u8 {
+    match req {
+        WireRequest::StreamOpen { .. } => 2,
+        _ => 1,
+    }
+}
+
+fn response_min_version(resp: &WireResponse) -> u8 {
+    match resp {
+        _ => 1,
+    }
+}
+
+fn request_opcode(req: &WireRequest) -> u8 {
+    match req {
+        WireRequest::Classify { .. } => OP_CLASSIFY,
+        WireRequest::StreamOpen { .. } => OP_STREAM_OPEN,
+    }
+}
+
+fn response_opcode(resp: &WireResponse) -> u8 {
+    match resp {
+        WireResponse::Reply(_) => OP_REPLY,
+        WireResponse::Error { .. } => OP_ERROR,
+    }
+}
+
+pub fn decode_request(frame_body: &[u8]) -> Result<RequestFrame> {
+    let req = match opcode {
+        OP_CLASSIFY => WireRequest::Classify { input: c.bytes()? },
+        OP_STREAM_OPEN => {
+            require_v2(version, "StreamOpen")?;
+            WireRequest::StreamOpen { session: c.u64()? }
+        }
+        op => bail!("unknown opcode"),
+    };
+    Ok(req)
+}
+
+pub fn decode_response(frame_body: &[u8]) -> Result<ResponseFrame> {
+    let resp = match opcode {
+        OP_REPLY => WireResponse::Reply(c.reply(version)?),
+        OP_ERROR => WireResponse::Error { code: c.u8()? },
+        op => bail!("unknown opcode"),
+    };
+    Ok(resp)
+}
+
+#[cfg(test)]
+mod tests {
+    fn request_corpus() -> Vec<WireRequest> {
+        vec![WireRequest::Classify {}, WireRequest::StreamOpen {}]
+    }
+
+    fn response_corpus() -> Vec<WireResponse> {
+        vec![WireResponse::Reply(r()), WireResponse::Error {}]
+    }
+}
+"#;
+
+    #[test]
+    fn scanner_strips_comments_strings_and_chars() {
+        let lines = scan::strip_lines(
+            "let a = \"x.unwrap()\"; // .expect(\nlet b = 'u'; /* panic!( */ let c = r#\"y\"#;",
+        );
+        assert!(!lines[0].contains(".unwrap()"));
+        assert!(!lines[0].contains(".expect("));
+        assert!(lines[0].contains("let a ="));
+        assert!(!lines[1].contains("panic!("));
+        assert!(lines[1].contains("let b ="));
+        assert!(lines[1].contains("let c ="));
+        assert!(!lines[1].contains('y'));
+    }
+
+    #[test]
+    fn scanner_masks_cfg_test_items() {
+        let sf = SourceFile::from_text(
+            "rust/src/serve/x.rs",
+            "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn live2() {}\n",
+        );
+        assert_eq!(sf.test, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn hot_path_unwrap_is_flagged_with_exact_location() {
+        let root = fixture(
+            "unwrap",
+            &[(
+                "rust/src/serve/h.rs",
+                "pub fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n\n#[cfg(test)]\nmod tests {\n    fn t() {\n        Some(1).unwrap();\n    }\n}\n",
+            )],
+        );
+        let r = check(&root);
+        assert_eq!(violation_keys(&r), vec!["rust/src/serve/h.rs:2 [panic-freedom]"]);
+    }
+
+    #[test]
+    fn unsafe_without_safety_comment_is_flagged() {
+        let bad = "pub fn f() {\n    unsafe { std::hint::unreachable_unchecked() }\n}\n";
+        let root = fixture("unsafe-bad", &[("rust/src/golden/k.rs", bad)]);
+        let r = check(&root);
+        assert_eq!(violation_keys(&r), vec!["rust/src/golden/k.rs:2 [unsafe-safety]"]);
+
+        let good = "pub fn f(ok: bool) {\n    assert!(ok);\n    // SAFETY: asserted just above.\n    unsafe { std::hint::unreachable_unchecked() }\n}\n";
+        let root = fixture("unsafe-good", &[("rust/src/golden/k.rs", good)]);
+        assert!(check(&root).is_clean());
+    }
+
+    #[test]
+    fn raw_lock_unwrap_is_flagged_and_poison_recovery_is_not() {
+        let bad = "pub fn f(m: &std::sync::Mutex<u32>) -> u32 {\n    *m.lock().unwrap()\n}\n";
+        let root = fixture("lock-bad", &[("rust/src/runtime/l.rs", bad)]);
+        let r = check(&root);
+        assert_eq!(violation_keys(&r), vec!["rust/src/runtime/l.rs:2 [lock-hygiene]"]);
+
+        let good = "pub fn f(m: &std::sync::Mutex<u32>) -> u32 {\n    *m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)\n}\n";
+        let root = fixture("lock-good", &[("rust/src/runtime/l.rs", good)]);
+        assert!(check(&root).is_clean());
+    }
+
+    #[test]
+    fn conformant_proto_fixture_is_clean() {
+        let root = fixture("proto-good", &[("rust/src/serve/proto.rs", GOOD_PROTO)]);
+        let r = check(&root);
+        assert!(r.is_clean(), "unexpected: {:?}", violation_keys(&r));
+    }
+
+    #[test]
+    fn dropping_a_version_gate_entry_fails() {
+        let bad = GOOD_PROTO.replace("        WireRequest::StreamOpen { .. } => 2,\n", "");
+        let gate_line =
+            bad.lines().position(|l| l.contains("fn request_min_version")).unwrap() + 1;
+        let root = fixture("proto-gate", &[("rust/src/serve/proto.rs", bad.as_str())]);
+        let r = check(&root);
+        let hit = r
+            .violations()
+            .find(|f| f.rule == "proto-conformance" && f.message.contains("StreamOpen"))
+            .expect("gate drift not caught");
+        assert_eq!(hit.line, gate_line);
+    }
+
+    #[test]
+    fn dropping_a_decode_guard_fails() {
+        let bad = GOOD_PROTO.replace("            require_v2(version, \"StreamOpen\")?;\n", "");
+        let root = fixture("proto-guard", &[("rust/src/serve/proto.rs", bad.as_str())]);
+        let r = check(&root);
+        assert!(r
+            .violations()
+            .any(|f| f.rule == "proto-conformance" && f.message.contains("require_v2")));
+    }
+
+    #[test]
+    fn dropping_a_doc_table_row_fails() {
+        let bad = GOOD_PROTO.replace("//! | `0x07` | v2    | request   | `StreamOpen` |\n", "");
+        let root = fixture("proto-doc", &[("rust/src/serve/proto.rs", bad.as_str())]);
+        let r = check(&root);
+        assert!(r
+            .violations()
+            .any(|f| f.rule == "proto-conformance"
+                && f.message.contains("OP_STREAM_OPEN")
+                && f.message.contains("doc-comment")));
+    }
+
+    #[test]
+    fn wire_indexing_is_flagged_in_decode_path() {
+        let bad = GOOD_PROTO.replace(
+            "    let req = match opcode {",
+            "    let first = frame_body[0];\n    let req = match opcode {",
+        );
+        let line = bad.lines().position(|l| l.contains("frame_body[0]")).unwrap() + 1;
+        let root = fixture("proto-index", &[("rust/src/serve/proto.rs", bad.as_str())]);
+        let r = check(&root);
+        let keys = violation_keys(&r);
+        assert_eq!(keys, vec![format!("rust/src/serve/proto.rs:{line} [wire-indexing]")]);
+    }
+
+    #[test]
+    fn allowlist_suppresses_matched_findings() {
+        let root = fixture(
+            "allow-ok",
+            &[
+                ("rust/src/serve/h.rs", "pub fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n"),
+                (
+                    "ci/analysis_allow.txt",
+                    "budget: 1\npanic-freedom | rust/src/serve/h.rs | x.unwrap() | fixture justification\n",
+                ),
+            ],
+        );
+        let r = check(&root);
+        assert!(r.is_clean(), "unexpected: {:?}", violation_keys(&r));
+        assert_eq!(r.findings.len(), 1);
+        assert!(r.findings[0].allowed);
+    }
+
+    #[test]
+    fn stale_allowlist_entry_is_a_violation() {
+        let root = fixture(
+            "allow-stale",
+            &[
+                ("rust/src/serve/h.rs", "pub fn f() {}\n"),
+                (
+                    "ci/analysis_allow.txt",
+                    "budget: 1\npanic-freedom | rust/src/serve/h.rs | x.unwrap() | gone since the fix\n",
+                ),
+            ],
+        );
+        let r = check(&root);
+        assert_eq!(violation_keys(&r), vec!["ci/analysis_allow.txt:2 [allowlist]"]);
+        assert!(r.violations().next().unwrap().message.contains("stale"));
+    }
+
+    #[test]
+    fn blown_allowlist_budget_is_a_violation() {
+        let root = fixture(
+            "allow-budget",
+            &[
+                ("rust/src/serve/h.rs", "pub fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n"),
+                (
+                    "ci/analysis_allow.txt",
+                    "budget: 0\npanic-freedom | rust/src/serve/h.rs | x.unwrap() | over budget\n",
+                ),
+            ],
+        );
+        let r = check(&root);
+        assert_eq!(violation_keys(&r), vec!["ci/analysis_allow.txt:1 [allowlist]"]);
+    }
+
+    /// Acceptance criterion: blanking *any* line of the real version-gate
+    /// tables (request or response) must make `check` fail.
+    #[test]
+    fn every_real_version_gate_entry_is_load_bearing() {
+        let proto_path = crate::repo_root().join("rust/src/serve/proto.rs");
+        let text = fs::read_to_string(proto_path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        for (gate_fn, prefix) in [
+            ("fn request_min_version", "WireRequest::"),
+            ("fn response_min_version", "WireResponse::"),
+        ] {
+            let start = lines.iter().position(|l| l.contains(gate_fn)).unwrap();
+            let mut mutated_any = false;
+            for i in (start + 1)..lines.len() {
+                if lines[i].trim() == "}" {
+                    break;
+                }
+                if !lines[i].contains(prefix) {
+                    continue;
+                }
+                mutated_any = true;
+                let mut bad: Vec<&str> = lines.clone();
+                bad[i] = "";
+                let root = fixture(
+                    &format!("gate-{i}"),
+                    &[("rust/src/serve/proto.rs", bad.join("\n").as_str())],
+                );
+                let r = check(&root);
+                assert!(
+                    r.violations().any(|f| f.rule == "proto-conformance"),
+                    "blanking gate line {} went undetected: {}",
+                    i + 1,
+                    lines[i]
+                );
+            }
+            assert!(mutated_any, "no gate entries found under {gate_fn}");
+        }
+    }
+}

@@ -1,0 +1,917 @@
+//! The rule families of `chameleon check`.
+//!
+//! Token rules (panic-freedom, wire-indexing, unsafe-safety, lock-hygiene)
+//! scan the stripped per-line code view from `super::scan`; structural
+//! rules (proto-conformance, arity-sync) parse the opcode/OpKind tables
+//! out of `serve/proto.rs`, `coordinator/metrics.rs` and the anchored
+//! markdown tables in `rust/DESIGN.md`, and cross-check them. Structural
+//! rules are not allowlistable: a drifted table is always a bug.
+
+use super::scan::{brace_delta, has_word, index_expr_pos, SourceFile};
+use super::Finding;
+
+/// Directories under `rust/src/` whose non-test code must be panic-free.
+pub const AUDITED_DIRS: [&str; 3] = ["serve", "coordinator", "golden"];
+
+const PANIC_TOKENS: [&str; 6] =
+    [".unwrap()", ".expect(", "panic!(", "unreachable!(", "todo!(", "unimplemented!("];
+
+const LOCK_TOKENS: [&str; 2] = [".lock().unwrap()", ".lock().expect("];
+
+/// Run every rule family over the scanned tree. `design` carries the raw
+/// lines of `rust/DESIGN.md` when present (fixture trees omit it, which
+/// skips the doc cross-checks).
+pub fn run_all(files: &[SourceFile], design: Option<&[String]>) -> Vec<Finding> {
+    let mut out = Vec::new();
+    panic_freedom(files, &mut out);
+    wire_indexing(files, &mut out);
+    unsafe_safety(files, &mut out);
+    lock_hygiene(files, &mut out);
+    proto_conformance(files, design, &mut out);
+    arity_sync(files, design, &mut out);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Token rules
+// ---------------------------------------------------------------------------
+
+fn panic_freedom(files: &[SourceFile], out: &mut Vec<Finding>) {
+    for sf in files {
+        if !AUDITED_DIRS.iter().any(|d| sf.in_dir(d)) {
+            continue;
+        }
+        for (i, code) in sf.code.iter().enumerate() {
+            if sf.test[i] {
+                continue;
+            }
+            for tok in PANIC_TOKENS {
+                if code.contains(tok) {
+                    out.push(Finding::new(
+                        "panic-freedom",
+                        &sf.rel,
+                        i + 1,
+                        format!(
+                            "`{tok}` in audited non-test code (the worker \
+                             catch_unwind boundary is last-resort, not error \
+                             handling)"
+                        ),
+                        &sf.raw[i],
+                    ));
+                }
+            }
+        }
+    }
+}
+
+fn wire_indexing(files: &[SourceFile], out: &mut Vec<Finding>) {
+    for sf in files {
+        if !sf.rel.ends_with("serve/proto.rs") {
+            continue;
+        }
+        for (i, code) in sf.code.iter().enumerate() {
+            if sf.test[i] {
+                continue;
+            }
+            if index_expr_pos(code).is_some() {
+                out.push(Finding::new(
+                    "wire-indexing",
+                    &sf.rel,
+                    i + 1,
+                    "direct slice indexing in the wire decode path (hostile \
+                     bytes must fail with a typed error, not a bounds panic)"
+                        .to_string(),
+                    &sf.raw[i],
+                ));
+            }
+        }
+    }
+}
+
+fn unsafe_safety(files: &[SourceFile], out: &mut Vec<Finding>) {
+    for sf in files {
+        for (i, code) in sf.code.iter().enumerate() {
+            if sf.test[i] || !has_word(code, "unsafe") {
+                continue;
+            }
+            if !has_safety_comment(&sf.raw, i) {
+                out.push(Finding::new(
+                    "unsafe-safety",
+                    &sf.rel,
+                    i + 1,
+                    "`unsafe` without an adjacent `// SAFETY:` (or `# Safety` \
+                     doc) comment stating the exact invariant"
+                        .to_string(),
+                    &sf.raw[i],
+                ));
+            }
+        }
+    }
+}
+
+/// A `SAFETY:` marker counts when it sits on the flagged line itself or in
+/// the contiguous comment block right above it (attributes such as
+/// `#[target_feature(..)]` may sit between the comment and the item).
+fn has_safety_comment(raw: &[String], i: usize) -> bool {
+    if raw[i].contains("SAFETY:") {
+        return true;
+    }
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        let t = raw[j].trim();
+        if t.starts_with("#[") || t.starts_with("#![") {
+            continue;
+        }
+        if t.starts_with("//") {
+            if t.contains("SAFETY:") || t.contains("# Safety") {
+                return true;
+            }
+            continue;
+        }
+        return false;
+    }
+    false
+}
+
+fn lock_hygiene(files: &[SourceFile], out: &mut Vec<Finding>) {
+    for sf in files {
+        for (i, code) in sf.code.iter().enumerate() {
+            if sf.test[i] {
+                continue;
+            }
+            for tok in LOCK_TOKENS {
+                if code.contains(tok) {
+                    out.push(Finding::new(
+                        "lock-hygiene",
+                        &sf.rel,
+                        i + 1,
+                        format!(
+                            "raw `{tok}..` — recover the guard with \
+                             `unwrap_or_else(std::sync::PoisonError::into_inner)` \
+                             or tear the resource down explicitly (stream-poison \
+                             semantics, DESIGN.md \u{a7}Static analysis)"
+                        ),
+                        &sf.raw[i],
+                    ));
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Structural parsing helpers
+// ---------------------------------------------------------------------------
+
+/// Line range (inclusive, 0-based) of the body of `fn <name>(..)`.
+fn fn_lines(sf: &SourceFile, name: &str) -> Option<(usize, usize)> {
+    let needle = format!("fn {name}(");
+    let start = sf.code.iter().position(|l| l.contains(&needle))?;
+    let mut depth = 0i64;
+    let mut opened = false;
+    for (i, l) in sf.code.iter().enumerate().skip(start) {
+        if l.contains('{') {
+            opened = true;
+        }
+        depth += brace_delta(l);
+        if opened && depth <= 0 {
+            return Some((start, i));
+        }
+    }
+    Some((start, sf.code.len().saturating_sub(1)))
+}
+
+fn body_text(sf: &SourceFile, range: (usize, usize)) -> String {
+    sf.code[range.0..=range.1].join("\n")
+}
+
+/// Every identifier appearing right after `prefix` on the line
+/// (`WireRequest::StreamOpen { .. } | WireRequest::StreamPush` yields
+/// both variant names for `prefix = "WireRequest::"`).
+fn idents_after<'a>(line: &'a str, prefix: &str) -> Vec<&'a str> {
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = line[from..].find(prefix) {
+        let start = from + pos + prefix.len();
+        let rest = &line[start..];
+        let end = rest
+            .find(|c: char| !c.is_ascii_alphanumeric() && c != '_')
+            .unwrap_or(rest.len());
+        if end > 0 {
+            out.push(&rest[..end]);
+        }
+        from = start;
+    }
+    out
+}
+
+/// First `OP_*` identifier at or after `from` in the line.
+fn op_token(line: &str, from: usize) -> Option<&str> {
+    let rest = &line[from..];
+    let pos = rest.find("OP_")?;
+    let tail = &rest[pos..];
+    let end =
+        tail.find(|c: char| !c.is_ascii_alphanumeric() && c != '_').unwrap_or(tail.len());
+    Some(&tail[..end])
+}
+
+/// The integer version after `=>` on a match-arm line, if any.
+fn version_after_arrow(line: &str) -> Option<u8> {
+    let pos = line.find("=>")?;
+    let rest = line[pos + 2..].trim();
+    let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits.parse().ok()
+}
+
+struct OpConst {
+    name: String,
+    byte: u8,
+    line: usize,
+}
+
+fn parse_consts(sf: &SourceFile) -> Vec<OpConst> {
+    let mut out = Vec::new();
+    for (i, l) in sf.code.iter().enumerate() {
+        let Some(p) = l.find("const OP_") else { continue };
+        let rest = &l[p + "const ".len()..];
+        let Some(colon) = rest.find(':') else { continue };
+        let name = rest[..colon].trim().to_string();
+        let Some(hex_at) = rest.find("0x") else { continue };
+        let hex: String =
+            rest[hex_at + 2..].chars().take_while(|c| c.is_ascii_hexdigit()).collect();
+        let Ok(byte) = u8::from_str_radix(&hex, 16) else { continue };
+        out.push(OpConst { name, byte, line: i + 1 });
+    }
+    out
+}
+
+struct DocRow {
+    byte: u8,
+    since: u8,
+    dir: String,
+    line: usize,
+}
+
+/// Parse one markdown opcode row: `| 0xNN | vK | request|response | .. |`
+/// (backticks around the first two cells optional). Header and separator
+/// rows fail the parse and are skipped by callers.
+fn parse_opcode_row(row: &str, line: usize) -> Option<DocRow> {
+    let cols: Vec<&str> = row.split('|').map(str::trim).collect();
+    if cols.len() < 5 {
+        return None;
+    }
+    let byte_txt = cols[1].trim_matches('`');
+    let byte = u8::from_str_radix(byte_txt.strip_prefix("0x")?, 16).ok()?;
+    let since: u8 = cols[2].trim_matches('`').strip_prefix('v')?.parse().ok()?;
+    let dir = cols[3].trim_matches('`').to_string();
+    if dir != "request" && dir != "response" {
+        return None;
+    }
+    Some(DocRow { byte, since, dir, line })
+}
+
+/// The `//!`-doc opcode table at the top of `serve/proto.rs`.
+fn parse_doc_table(sf: &SourceFile) -> Vec<DocRow> {
+    let mut out = Vec::new();
+    for (i, l) in sf.raw.iter().enumerate() {
+        let t = l.trim();
+        if !t.starts_with("//!") {
+            continue;
+        }
+        let row = t.trim_start_matches("//!").trim();
+        if !row.starts_with('|') || !row.contains("0x") {
+            continue;
+        }
+        if let Some(r) = parse_opcode_row(row, i + 1) {
+            out.push(r);
+        }
+    }
+    out
+}
+
+/// Variant-to-opcode map from a `request_opcode`-style match fn.
+fn parse_opcode_map(sf: &SourceFile, fn_name: &str, enum_name: &str) -> Vec<(String, String)> {
+    let Some(range) = fn_lines(sf, fn_name) else { return Vec::new() };
+    let prefix = format!("{enum_name}::");
+    let mut out = Vec::new();
+    for l in &sf.code[range.0..=range.1] {
+        let Some(arrow) = l.find("=>") else { continue };
+        let variants = idents_after(&l[..arrow], &prefix);
+        let Some(op) = op_token(l, arrow) else { continue };
+        if let Some(v) = variants.first() {
+            out.push((v.to_string(), op.to_string()));
+        }
+    }
+    out
+}
+
+/// Variant-to-minimum-version map from `request_min_version` / friends,
+/// plus the wildcard default and the fn's 1-based line for findings.
+fn parse_min_versions(
+    sf: &SourceFile,
+    fn_name: &str,
+    enum_name: &str,
+) -> Option<(Vec<(String, u8)>, u8, usize)> {
+    let range = fn_lines(sf, fn_name)?;
+    let prefix = format!("{enum_name}::");
+    let mut pending: Vec<String> = Vec::new();
+    let mut map = Vec::new();
+    let mut default = 1u8;
+    for l in &sf.code[range.0..=range.1] {
+        for v in idents_after(l, &prefix) {
+            pending.push(v.to_string());
+        }
+        if let Some(ver) = version_after_arrow(l) {
+            if l.contains("_ =>") {
+                default = ver;
+            }
+            for name in pending.drain(..) {
+                map.push((name, ver));
+            }
+        }
+    }
+    Some((map, default, range.0 + 1))
+}
+
+/// The text of the decode match arm starting at the line containing
+/// `<op> =>`, up to (not including) the next arm.
+fn decode_arm_text(sf: &SourceFile, range: (usize, usize), op: &str) -> Option<String> {
+    let needle = format!("{op} =>");
+    let start = (range.0..=range.1).find(|&i| sf.code[i].contains(&needle))?;
+    let mut end = range.1;
+    for i in (start + 1)..=range.1 {
+        let l = &sf.code[i];
+        let is_arm = op_token(l, 0).is_some_and(|t| l.contains(&format!("{t} =>")))
+            || l.trim_start().starts_with("_ =>");
+        if is_arm {
+            end = i - 1;
+            break;
+        }
+    }
+    Some(sf.code[start..=end].join("\n"))
+}
+
+// ---------------------------------------------------------------------------
+// Rule: proto-conformance
+// ---------------------------------------------------------------------------
+
+fn proto_conformance(files: &[SourceFile], design: Option<&[String]>, out: &mut Vec<Finding>) {
+    let Some(sf) = files.iter().find(|s| s.rel.ends_with("serve/proto.rs")) else {
+        return;
+    };
+    let rule = "proto-conformance";
+    let consts = parse_consts(sf);
+    let doc = parse_doc_table(sf);
+    if consts.is_empty() {
+        out.push(Finding::new(
+            rule,
+            &sf.rel,
+            1,
+            "no `const OP_*: u8 = 0x..` opcode constants found".to_string(),
+            "",
+        ));
+        return;
+    }
+    if doc.is_empty() {
+        out.push(Finding::new(
+            rule,
+            &sf.rel,
+            1,
+            "no `//! | 0x.. | v.. | request/response | .. |` doc-comment opcode table found"
+                .to_string(),
+            "",
+        ));
+        return;
+    }
+
+    // Opcode bytes must be unique.
+    for (k, c) in consts.iter().enumerate() {
+        if consts[..k].iter().any(|p| p.byte == c.byte) {
+            out.push(Finding::new(
+                rule,
+                &sf.rel,
+                c.line,
+                format!("duplicate opcode byte 0x{:02X} (`{}`)", c.byte, c.name),
+                &sf.raw[c.line - 1],
+            ));
+        }
+    }
+    // Consts <-> doc table, with direction agreement.
+    for c in &consts {
+        match doc.iter().find(|r| r.byte == c.byte) {
+            None => out.push(Finding::new(
+                rule,
+                &sf.rel,
+                c.line,
+                format!(
+                    "opcode `{}` (0x{:02X}) missing from the doc-comment opcode table",
+                    c.name, c.byte
+                ),
+                &sf.raw[c.line - 1],
+            )),
+            Some(r) => {
+                let expect_dir = if c.byte < 0x80 { "request" } else { "response" };
+                if r.dir != expect_dir {
+                    out.push(Finding::new(
+                        rule,
+                        &sf.rel,
+                        r.line,
+                        format!(
+                            "opcode 0x{:02X} is documented as `{}` but its byte says `{}`",
+                            c.byte, r.dir, expect_dir
+                        ),
+                        &sf.raw[r.line - 1],
+                    ));
+                }
+            }
+        }
+    }
+    for r in &doc {
+        if !consts.iter().any(|c| c.byte == r.byte) {
+            out.push(Finding::new(
+                rule,
+                &sf.rel,
+                r.line,
+                format!("doc-table opcode 0x{:02X} has no `OP_*` constant", r.byte),
+                &sf.raw[r.line - 1],
+            ));
+        }
+    }
+
+    // Encode and decode paths must reference every opcode constant.
+    let sides = [
+        ("request", "request_opcode", "decode_request", "WireRequest"),
+        ("response", "response_opcode", "decode_response", "WireResponse"),
+    ];
+    for (side, enc_fn, dec_fn, enum_name) in sides {
+        let want_request = side == "request";
+        let side_consts: Vec<&OpConst> =
+            consts.iter().filter(|c| (c.byte < 0x80) == want_request).collect();
+        let Some(enc_range) = fn_lines(sf, enc_fn) else {
+            out.push(Finding::new(
+                rule,
+                &sf.rel,
+                1,
+                format!("encode path `fn {enc_fn}` not found"),
+                "",
+            ));
+            continue;
+        };
+        let Some(dec_range) = fn_lines(sf, dec_fn) else {
+            out.push(Finding::new(
+                rule,
+                &sf.rel,
+                1,
+                format!("decode path `fn {dec_fn}` not found"),
+                "",
+            ));
+            continue;
+        };
+        let enc_body = body_text(sf, enc_range);
+        for c in &side_consts {
+            if !enc_body.contains(&c.name) {
+                out.push(Finding::new(
+                    rule,
+                    &sf.rel,
+                    enc_range.0 + 1,
+                    format!("opcode `{}` is never encoded (`fn {enc_fn}`)", c.name),
+                    &sf.raw[enc_range.0],
+                ));
+            }
+        }
+        let dec_body = body_text(sf, dec_range);
+        for c in &side_consts {
+            if !dec_body.contains(&c.name) {
+                out.push(Finding::new(
+                    rule,
+                    &sf.rel,
+                    dec_range.0 + 1,
+                    format!("opcode `{}` is never decoded (`fn {dec_fn}`)", c.name),
+                    &sf.raw[dec_range.0],
+                ));
+                continue;
+            }
+            // Version-gated opcodes need a require_vN guard in their arm.
+            let Some(row) = doc.iter().find(|r| r.byte == c.byte) else { continue };
+            if row.since >= 2 {
+                let guard = format!("require_v{}(", row.since);
+                let arm = decode_arm_text(sf, dec_range, &c.name).unwrap_or_default();
+                if !arm.contains(&guard) {
+                    out.push(Finding::new(
+                        rule,
+                        &sf.rel,
+                        dec_range.0 + 1,
+                        format!(
+                            "decode arm of `{}` (v{} opcode) lacks a `{guard}..)` guard",
+                            c.name, row.since
+                        ),
+                        &sf.raw[dec_range.0],
+                    ));
+                }
+            }
+        }
+
+        // Min-version gate: each variant's gate must equal its opcode's
+        // documented `since` version.
+        let variant_ops = parse_opcode_map(sf, enc_fn, enum_name);
+        let gate_fn = if want_request { "request_min_version" } else { "response_min_version" };
+        let Some((gate, gate_default, gate_line)) = parse_min_versions(sf, gate_fn, enum_name)
+        else {
+            out.push(Finding::new(
+                rule,
+                &sf.rel,
+                1,
+                format!("version gate `fn {gate_fn}` not found"),
+                "",
+            ));
+            continue;
+        };
+        for (variant, op_name) in &variant_ops {
+            let Some(c) = consts.iter().find(|c| &c.name == op_name) else { continue };
+            let Some(row) = doc.iter().find(|r| r.byte == c.byte) else { continue };
+            let gated = gate
+                .iter()
+                .find(|(v, _)| v == variant)
+                .map(|(_, ver)| *ver)
+                .unwrap_or(gate_default);
+            if gated != row.since {
+                out.push(Finding::new(
+                    rule,
+                    &sf.rel,
+                    gate_line,
+                    format!(
+                        "`{enum_name}::{variant}` carries `{}` (v{} per the opcode \
+                         table) but `{gate_fn}` yields v{gated} — version-gate \
+                         entry missing or wrong",
+                        c.name, row.since
+                    ),
+                    &sf.raw[gate_line - 1],
+                ));
+            }
+        }
+
+        // Round-trip corpus coverage: every encodable variant must appear.
+        let corpus_fn = if want_request { "request_corpus" } else { "response_corpus" };
+        match fn_lines(sf, corpus_fn) {
+            None => out.push(Finding::new(
+                rule,
+                &sf.rel,
+                1,
+                format!("round-trip corpus `fn {corpus_fn}` not found"),
+                "",
+            )),
+            Some(range) => {
+                let body = body_text(sf, range);
+                for (variant, _) in &variant_ops {
+                    if !body.contains(&format!("::{variant}")) {
+                        out.push(Finding::new(
+                            rule,
+                            &sf.rel,
+                            range.0 + 1,
+                            format!(
+                                "`{enum_name}::{variant}` missing from the \
+                                 round-trip corpus (`fn {corpus_fn}`)"
+                            ),
+                            &sf.raw[range.0],
+                        ));
+                    }
+                }
+            }
+        }
+    }
+
+    // DESIGN.md canonical opcode table must mirror the proto doc table.
+    if let Some(design_lines) = design {
+        check_design_opcode_table(&consts, &doc, design_lines, out);
+    }
+}
+
+fn design_rows(design: &[String], anchor: &str) -> Option<Vec<(String, usize)>> {
+    let start = design.iter().position(|l| l.contains(anchor))?;
+    let mut rows = Vec::new();
+    for (i, l) in design.iter().enumerate().skip(start + 1) {
+        let t = l.trim();
+        if t.starts_with('|') {
+            rows.push((t.to_string(), i + 1));
+        } else if !rows.is_empty() || !t.is_empty() {
+            break;
+        }
+    }
+    Some(rows)
+}
+
+fn check_design_opcode_table(
+    consts: &[OpConst],
+    doc: &[DocRow],
+    design: &[String],
+    out: &mut Vec<Finding>,
+) {
+    let rule = "proto-conformance";
+    let file = "rust/DESIGN.md";
+    let Some(rows) = design_rows(design, "<!-- analysis:opcode-table -->") else {
+        out.push(Finding::new(
+            rule,
+            file,
+            1,
+            "missing `<!-- analysis:opcode-table -->` anchored opcode table".to_string(),
+            "",
+        ));
+        return;
+    };
+    let parsed: Vec<DocRow> =
+        rows.iter().filter_map(|(r, line)| parse_opcode_row(r, *line)).collect();
+    let anchor_line = rows.first().map(|(_, l)| *l).unwrap_or(1);
+    for r in doc {
+        match parsed.iter().find(|d| d.byte == r.byte) {
+            None => out.push(Finding::new(
+                rule,
+                file,
+                anchor_line,
+                format!("opcode 0x{:02X} missing from the DESIGN.md opcode table", r.byte),
+                "",
+            )),
+            Some(d) => {
+                if d.since != r.since || d.dir != r.dir {
+                    out.push(Finding::new(
+                        rule,
+                        file,
+                        d.line,
+                        format!(
+                            "opcode 0x{:02X}: DESIGN.md says v{}/{}, proto.rs says v{}/{}",
+                            r.byte, d.since, d.dir, r.since, r.dir
+                        ),
+                        "",
+                    ));
+                }
+            }
+        }
+    }
+    for d in &parsed {
+        if !consts.iter().any(|c| c.byte == d.byte) {
+            out.push(Finding::new(
+                rule,
+                file,
+                d.line,
+                format!("DESIGN.md documents opcode 0x{:02X}, which proto.rs lacks", d.byte),
+                "",
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule: arity-sync (OpKind table vs wire table vs DESIGN.md)
+// ---------------------------------------------------------------------------
+
+fn arity_sync(files: &[SourceFile], design: Option<&[String]>, out: &mut Vec<Finding>) {
+    let rule = "arity-sync";
+    let Some(sf) = files.iter().find(|s| s.rel.ends_with("coordinator/metrics.rs")) else {
+        return;
+    };
+    // Enum variants with explicit discriminants.
+    let Some(enum_start) = sf.code.iter().position(|l| l.contains("enum OpKind")) else {
+        out.push(Finding::new(
+            rule,
+            &sf.rel,
+            1,
+            "`enum OpKind` not found".to_string(),
+            "",
+        ));
+        return;
+    };
+    let mut variants: Vec<(String, u8, usize)> = Vec::new();
+    let mut depth = 0i64;
+    for (i, l) in sf.code.iter().enumerate().skip(enum_start) {
+        depth += brace_delta(l);
+        let t = l.trim();
+        if let Some(eq) = t.find('=') {
+            let name = t[..eq].trim();
+            let disc: String =
+                t[eq + 1..].trim().chars().take_while(|c| c.is_ascii_digit()).collect();
+            if !name.is_empty()
+                && name.chars().all(|c| c.is_ascii_alphanumeric())
+                && name.starts_with(|c: char| c.is_ascii_uppercase())
+            {
+                if let Ok(d) = disc.parse() {
+                    variants.push((name.to_string(), d, i + 1));
+                }
+            }
+        }
+        if i > enum_start && depth <= 0 {
+            break;
+        }
+    }
+    for (k, (name, disc, line)) in variants.iter().enumerate() {
+        if *disc as usize != k {
+            out.push(Finding::new(
+                rule,
+                &sf.rel,
+                *line,
+                format!(
+                    "OpKind::{name} has discriminant {disc}, expected {k} \
+                     (indices must stay dense for the per-op vectors)"
+                ),
+                &sf.raw[line - 1],
+            ));
+        }
+    }
+    // COUNT constant.
+    match sf
+        .code
+        .iter()
+        .enumerate()
+        .find(|(_, l)| l.contains("const COUNT: usize ="))
+    {
+        None => out.push(Finding::new(
+            rule,
+            &sf.rel,
+            1,
+            "`OpKind::COUNT` not found".to_string(),
+            "",
+        )),
+        Some((i, l)) => {
+            let digits: String = l
+                .chars()
+                .skip(l.find('=').map(|p| p + 1).unwrap_or(0))
+                .skip_while(|c| !c.is_ascii_digit())
+                .take_while(|c| c.is_ascii_digit())
+                .collect();
+            if digits.parse::<usize>().ok() != Some(variants.len()) {
+                out.push(Finding::new(
+                    rule,
+                    &sf.rel,
+                    i + 1,
+                    format!("`OpKind::COUNT` != {} enum variants", variants.len()),
+                    &sf.raw[i],
+                ));
+            }
+        }
+    }
+    // ALL array covers every variant.
+    if let Some(range) = const_all_lines(sf) {
+        let body = body_text(sf, range);
+        for (name, _, _) in &variants {
+            if !body.contains(&format!("OpKind::{name}")) {
+                out.push(Finding::new(
+                    rule,
+                    &sf.rel,
+                    range.0 + 1,
+                    format!("`OpKind::ALL` misses OpKind::{name}"),
+                    &sf.raw[range.0],
+                ));
+            }
+        }
+    } else {
+        out.push(Finding::new(
+            rule,
+            &sf.rel,
+            1,
+            "`OpKind::ALL` not found".to_string(),
+            "",
+        ));
+    }
+    // name() arms: one unique snake name per variant (parsed from raw
+    // lines — the strings are blanked in the code view).
+    let mut names: Vec<String> = Vec::new();
+    if let Some(range) = fn_lines(sf, "name") {
+        for i in range.0..=range.1 {
+            let l = &sf.raw[i];
+            if !l.contains("OpKind::") || !l.contains("=>") {
+                continue;
+            }
+            if let Some(s) = quoted(l) {
+                names.push(s.to_string());
+            }
+        }
+    }
+    if names.len() != variants.len() {
+        out.push(Finding::new(
+            rule,
+            &sf.rel,
+            1,
+            format!(
+                "`OpKind::name` maps {} arms for {} variants",
+                names.len(),
+                variants.len()
+            ),
+            "",
+        ));
+    }
+    for (k, n) in names.iter().enumerate() {
+        if names[..k].contains(n) {
+            out.push(Finding::new(
+                rule,
+                &sf.rel,
+                1,
+                format!("duplicate OpKind name {n:?}"),
+                "",
+            ));
+        }
+    }
+
+    // DESIGN.md op-kind table: every OpKind name exactly once, and every
+    // request opcode attributed to exactly one kind.
+    let Some(design_lines) = design else { return };
+    let Some(rows) = design_rows(design_lines, "<!-- analysis:opkind-table -->") else {
+        out.push(Finding::new(
+            rule,
+            "rust/DESIGN.md",
+            1,
+            "missing `<!-- analysis:opkind-table -->` anchored table".to_string(),
+            "",
+        ));
+        return;
+    };
+    let mut seen_names: Vec<String> = Vec::new();
+    let mut seen_bytes: Vec<(u8, usize)> = Vec::new();
+    for (row, line) in &rows {
+        let cols: Vec<&str> = row.split('|').map(str::trim).collect();
+        if cols.len() < 3 || cols[1].starts_with('-') || !cols[1].contains('`') {
+            continue;
+        }
+        seen_names.push(cols[1].trim_matches('`').to_string());
+        let mut rest = cols[2];
+        while let Some(p) = rest.find("0x") {
+            let hex: String =
+                rest[p + 2..].chars().take_while(|c| c.is_ascii_hexdigit()).collect();
+            if let Ok(b) = u8::from_str_radix(&hex, 16) {
+                seen_bytes.push((b, *line));
+            }
+            rest = &rest[p + 2..];
+        }
+    }
+    let anchor_line = rows.first().map(|(_, l)| *l).unwrap_or(1);
+    for n in &names {
+        if !seen_names.contains(n) {
+            out.push(Finding::new(
+                rule,
+                "rust/DESIGN.md",
+                anchor_line,
+                format!("op kind `{n}` missing from the DESIGN.md op-kind table"),
+                "",
+            ));
+        }
+    }
+    for n in &seen_names {
+        if !names.contains(n) {
+            out.push(Finding::new(
+                rule,
+                "rust/DESIGN.md",
+                anchor_line,
+                format!("DESIGN.md lists op kind `{n}`, which OpKind lacks"),
+                "",
+            ));
+        }
+    }
+    // Cross-check against the wire request opcodes.
+    if let Some(proto) = files.iter().find(|s| s.rel.ends_with("serve/proto.rs")) {
+        let consts = parse_consts(proto);
+        let requests: Vec<&OpConst> = consts.iter().filter(|c| c.byte < 0x80).collect();
+        for (b, line) in &seen_bytes {
+            if !requests.iter().any(|c| c.byte == *b) {
+                out.push(Finding::new(
+                    rule,
+                    "rust/DESIGN.md",
+                    *line,
+                    format!("op-kind table cites 0x{b:02X}, not a request opcode"),
+                    "",
+                ));
+            }
+        }
+        for c in &requests {
+            let hits = seen_bytes.iter().filter(|(b, _)| *b == c.byte).count();
+            if hits != 1 {
+                out.push(Finding::new(
+                    rule,
+                    "rust/DESIGN.md",
+                    anchor_line,
+                    format!(
+                        "request opcode `{}` (0x{:02X}) appears {hits} times in the \
+                         op-kind table (want exactly 1)",
+                        c.name, c.byte
+                    ),
+                    "",
+                ));
+            }
+        }
+    }
+}
+
+fn const_all_lines(sf: &SourceFile) -> Option<(usize, usize)> {
+    let start = sf.code.iter().position(|l| l.contains("const ALL:"))?;
+    for (i, l) in sf.code.iter().enumerate().skip(start) {
+        if l.contains("];") || l.trim() == "]" {
+            return Some((start, i));
+        }
+    }
+    Some((start, sf.code.len().saturating_sub(1)))
+}
+
+/// First double-quoted string on a raw line.
+fn quoted(raw: &str) -> Option<&str> {
+    let a = raw.find('"')?;
+    let rest = &raw[a + 1..];
+    let b = rest.find('"')?;
+    Some(&rest[..b])
+}

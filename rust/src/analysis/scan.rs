@@ -1,0 +1,337 @@
+//! Source model for the `chameleon check` pass.
+//!
+//! Loads every `rust/src/**/*.rs` file under the repo root and
+//! precomputes, per line, a comment/string-stripped *code* view plus a
+//! `#[cfg(test)]` mask, so the rule families in `super::rules` can scan
+//! tokens without a real parser (the crate's no-new-deps rule bars
+//! `syn`). The stripper preserves line structure and column positions:
+//! every blanked character becomes a space, so brace counting and
+//! `file:line` reporting stay exact.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// One scanned source file.
+pub struct SourceFile {
+    /// Repo-relative path with forward slashes (`rust/src/serve/proto.rs`).
+    pub rel: String,
+    /// Raw lines, exactly as on disk (allowlist snippets match these).
+    pub raw: Vec<String>,
+    /// Lines with comments and string/char-literal bodies blanked out —
+    /// the view every token rule scans.
+    pub code: Vec<String>,
+    /// `test[i]` is true when line `i` sits inside a `#[cfg(test)]` item.
+    pub test: Vec<bool>,
+}
+
+impl SourceFile {
+    pub fn from_text(rel: &str, text: &str) -> SourceFile {
+        let raw: Vec<String> = text.lines().map(str::to_string).collect();
+        let mut code = strip_lines(text);
+        // `lines()` drops the empty line after a trailing newline;
+        // `strip_lines` (a plain `split('\n')`) keeps it.
+        if code.len() == raw.len() + 1 && code.last().is_some_and(|l| l.is_empty()) {
+            code.pop();
+        }
+        debug_assert_eq!(raw.len(), code.len());
+        let test = test_mask(&code);
+        SourceFile { rel: rel.to_string(), raw, code, test }
+    }
+
+    /// True when the file lives under `rust/src/<dir>/`.
+    pub fn in_dir(&self, dir: &str) -> bool {
+        let prefix = format!("rust/src/{dir}/");
+        self.rel.starts_with(&prefix)
+    }
+}
+
+/// Load every `.rs` file under `<root>/rust/src`, sorted by path for
+/// deterministic findings. A missing tree yields an empty list (fixture
+/// roots exercise single rule families).
+pub fn load_tree(root: &Path) -> Result<Vec<SourceFile>> {
+    let src = root.join("rust").join("src");
+    if !src.is_dir() {
+        return Ok(Vec::new());
+    }
+    let mut paths = Vec::new();
+    collect_rs(&src, &mut paths)?;
+    paths.sort();
+    let mut files = Vec::with_capacity(paths.len());
+    for p in &paths {
+        let text = fs::read_to_string(p).with_context(|| format!("reading {}", p.display()))?;
+        files.push(SourceFile::from_text(&rel_path(root, p), &text));
+    }
+    Ok(files)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let entries = fs::read_dir(dir).with_context(|| format!("listing {}", dir.display()))?;
+    for e in entries {
+        let p = e?.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn rel_path(root: &Path, p: &Path) -> String {
+    let r = p.strip_prefix(root).unwrap_or(p);
+    let parts: Vec<String> =
+        r.components().map(|c| c.as_os_str().to_string_lossy().into_owned()).collect();
+    parts.join("/")
+}
+
+/// Blank comments and string/char-literal bodies, preserving newlines and
+/// replacing every stripped character with a space. Handles nested
+/// `/* */`, raw strings with `#` fences, escapes, and the char-literal vs
+/// lifetime ambiguity.
+pub fn strip_lines(text: &str) -> Vec<String> {
+    let ch: Vec<char> = text.chars().collect();
+    let mut out = String::with_capacity(text.len());
+    let blank = |c: char| if c == '\n' { '\n' } else { ' ' };
+    let mut i = 0;
+    while i < ch.len() {
+        let c = ch[i];
+        // Line comment.
+        if c == '/' && ch.get(i + 1) == Some(&'/') {
+            while i < ch.len() && ch[i] != '\n' {
+                out.push(' ');
+                i += 1;
+            }
+            continue;
+        }
+        // Block comment (nested).
+        if c == '/' && ch.get(i + 1) == Some(&'*') {
+            let mut depth = 0usize;
+            while i < ch.len() {
+                if ch[i] == '/' && ch.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else if ch[i] == '*' && ch.get(i + 1) == Some(&'/') {
+                    depth = depth.saturating_sub(1);
+                    out.push_str("  ");
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    out.push(blank(ch[i]));
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw string: r"..." / r#"..."# / br#"..."# (not part of an ident).
+        if (c == 'r' || c == 'b') && !prev_is_ident(&ch, i) {
+            if let Some((fence, body_start)) = raw_string_open(&ch, i) {
+                // Blank the opener.
+                for _ in i..body_start {
+                    out.push(' ');
+                }
+                i = body_start;
+                while i < ch.len() {
+                    if ch[i] == '"' && fence_closes(&ch, i, fence) {
+                        for _ in 0..=fence {
+                            out.push(' ');
+                        }
+                        i += 1 + fence;
+                        break;
+                    }
+                    out.push(blank(ch[i]));
+                    i += 1;
+                }
+                continue;
+            }
+        }
+        // Plain string literal.
+        if c == '"' {
+            out.push('"');
+            i += 1;
+            while i < ch.len() {
+                if ch[i] == '\\' && i + 1 < ch.len() {
+                    out.push(' ');
+                    out.push(blank(ch[i + 1]));
+                    i += 2;
+                } else if ch[i] == '"' {
+                    out.push('"');
+                    i += 1;
+                    break;
+                } else {
+                    out.push(blank(ch[i]));
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            if ch.get(i + 1) == Some(&'\\') {
+                // Escaped char literal: blank through the closing quote.
+                out.push(' ');
+                i += 1;
+                while i < ch.len() && ch[i] != '\'' {
+                    out.push(blank(ch[i]));
+                    i += 1;
+                }
+                if i < ch.len() {
+                    out.push(' ');
+                    i += 1;
+                }
+            } else if ch.get(i + 2) == Some(&'\'') && ch.get(i + 1).is_some() {
+                out.push_str("   ");
+                i += 3;
+            } else {
+                // A lifetime: keep going, nothing to blank.
+                out.push('\'');
+                i += 1;
+            }
+            continue;
+        }
+        out.push(c);
+        i += 1;
+    }
+    out.split('\n').map(str::to_string).collect()
+}
+
+fn prev_is_ident(ch: &[char], i: usize) -> bool {
+    i > 0 && (ch[i - 1].is_ascii_alphanumeric() || ch[i - 1] == '_')
+}
+
+/// If `ch[i]` opens a raw string (`r`, `br` + `#`* + `"`), return the
+/// fence size (number of `#`) and the index just past the opening quote.
+fn raw_string_open(ch: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if ch[j] == 'b' {
+        if ch.get(j + 1) != Some(&'r') {
+            return None;
+        }
+        j += 1;
+    }
+    if ch.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut fence = 0;
+    while ch.get(j) == Some(&'#') {
+        fence += 1;
+        j += 1;
+    }
+    if ch.get(j) == Some(&'"') {
+        Some((fence, j + 1))
+    } else {
+        None
+    }
+}
+
+fn fence_closes(ch: &[char], i: usize, fence: usize) -> bool {
+    (1..=fence).all(|k| ch.get(i + k) == Some(&'#'))
+}
+
+/// Net `{`/`}` delta of a stripped code line.
+pub fn brace_delta(code_line: &str) -> i64 {
+    let mut d = 0i64;
+    for b in code_line.bytes() {
+        if b == b'{' {
+            d += 1;
+        } else if b == b'}' {
+            d -= 1;
+        }
+    }
+    d
+}
+
+/// Mark every line belonging to a `#[cfg(test)]` item: the attribute
+/// line itself, any further attributes, and the whole braced item that
+/// follows (tracked by brace depth on the stripped view).
+fn test_mask(code: &[String]) -> Vec<bool> {
+    let mut mask = vec![false; code.len()];
+    let mut pending = false;
+    let mut in_test = false;
+    let mut depth = 0i64;
+    for (i, line) in code.iter().enumerate() {
+        if in_test {
+            mask[i] = true;
+            depth += brace_delta(line);
+            if depth <= 0 {
+                in_test = false;
+            }
+            continue;
+        }
+        let t = line.trim();
+        if t.contains("#[cfg(test)]") {
+            mask[i] = true;
+            if line.contains('{') {
+                in_test = true;
+                depth = brace_delta(line);
+                if depth <= 0 {
+                    in_test = false;
+                }
+            } else {
+                pending = true;
+            }
+            continue;
+        }
+        if pending {
+            if line.contains('{') {
+                mask[i] = true;
+                in_test = true;
+                pending = false;
+                depth = brace_delta(line);
+                if depth <= 0 {
+                    in_test = false;
+                }
+                continue;
+            }
+            if !t.is_empty() && !t.starts_with("#[") {
+                // An un-braced item (`mod tests;`): nothing more to mask.
+                pending = false;
+            }
+        }
+    }
+    mask
+}
+
+/// True when `line` contains `word` delimited by non-identifier chars.
+pub fn has_word(line: &str, word: &str) -> bool {
+    let bytes = line.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = line[from..].find(word) {
+        let start = from + pos;
+        let end = start + word.len();
+        let left_ok = start == 0 || !is_ident_byte(bytes[start - 1]);
+        let right_ok = end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if left_ok && right_ok {
+            return true;
+        }
+        from = start + 1;
+    }
+    false
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Column of the first direct index expression (`ident[`, `)[`, `][`) in
+/// a stripped code line, if any — the pattern the wire-indexing rule
+/// denies in the decode path. Array *types* (`[u8; 4]`), slices (`&[u8]`)
+/// and macro bangs (`vec![`) don't match: their `[` is not preceded by an
+/// identifier or closing bracket.
+pub fn index_expr_pos(code_line: &str) -> Option<usize> {
+    let b = code_line.as_bytes();
+    for i in 1..b.len() {
+        if b[i] == b'[' {
+            let p = b[i - 1];
+            if is_ident_byte(p) || p == b')' || p == b']' {
+                return Some(i);
+            }
+        }
+    }
+    None
+}

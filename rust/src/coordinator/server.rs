@@ -303,10 +303,8 @@ impl SessionEntry {
     /// Classify against the session head via its prepared snapshot,
     /// (re)building the snapshot if learning invalidated it.
     fn head_logits(&mut self, emb: &[u8]) -> Vec<i32> {
-        if self.prepared.is_none() {
-            self.prepared = Some(self.head.prepare());
-        }
-        self.prepared.as_ref().expect("just prepared").logits(emb)
+        let head = &self.head;
+        self.prepared.get_or_insert_with(|| head.prepare()).logits(emb)
     }
 }
 
@@ -522,7 +520,11 @@ impl Coordinator {
                         };
                         // Wait until the shared state is published.
                         let shared = loop {
-                            if let Some(s) = shared_cell.lock().unwrap().clone() {
+                            let published = shared_cell
+                                .lock()
+                                .unwrap_or_else(std::sync::PoisonError::into_inner)
+                                .clone();
+                            if let Some(s) = published {
                                 break s;
                             }
                             std::thread::yield_now();
@@ -545,7 +547,8 @@ impl Coordinator {
             seq_len,
             in_channels,
         });
-        *shared_cell.lock().unwrap() = Some(shared.clone());
+        *shared_cell.lock().unwrap_or_else(std::sync::PoisonError::into_inner) =
+            Some(shared.clone());
         Ok(Coordinator { tx, workers, shared })
     }
 
@@ -767,7 +770,9 @@ fn worker_loop(
 ) {
     loop {
         // Hold the lock only while receiving (work-stealing from one queue).
-        let (enqueued_at, req) = match rx.lock().unwrap().recv() {
+        let received =
+            rx.lock().unwrap_or_else(std::sync::PoisonError::into_inner).recv();
+        let (enqueued_at, req) = match received {
             Ok(r) => r,
             Err(_) => return, // queue closed
         };

@@ -176,7 +176,7 @@ pub fn embed(model: &QuantModel, x_q: &[u8]) -> Result<Acts> {
 pub fn layer_sums(model: &QuantModel, x_q: &[u8]) -> Result<Vec<i64>> {
     let mut sums = Some(Vec::new());
     embed_traced(model, x_q, &mut sums, ExecMode::process_default())?;
-    Ok(sums.unwrap())
+    Ok(sums.unwrap_or_default())
 }
 
 fn embed_traced(
@@ -206,11 +206,15 @@ fn embed_traced(
         // Residual path: identity, or the 1x1 conv re-quantized to u4.
         let res: Acts = match (&l2.res_codes, &l2.res_codes_shape) {
             (Some(rc), Some(shape)) => {
+                let (Some(bias), Some(out_shift)) = (l2.res_bias.clone(), l2.res_out_shift)
+                else {
+                    bail!("layer {}: res_codes without res_bias/res_out_shift", 2 * b + 1);
+                };
                 let rl = QLayer {
                     codes: rc.clone(),
                     codes_shape: shape.clone(),
-                    bias: l2.res_bias.clone().unwrap(),
-                    out_shift: l2.res_out_shift.unwrap(),
+                    bias,
+                    out_shift,
                     dilation: 1,
                     relu: true,
                     res_shift: None,

@@ -232,6 +232,18 @@ pub(crate) mod simd {
     /// `std::arch` fast path: broadcast `a`, 8-lane multiply-add per
     /// iteration. Unaligned loads/stores — the weight planes are plain
     /// `Vec<i32>` rows at arbitrary cout offsets.
+    ///
+    /// # Safety
+    ///
+    /// The caller must guarantee AVX2 is available on the running CPU
+    /// (the [`axpy`] dispatcher feature-detects at runtime) and that
+    /// `w.len() == acc.len()`. Every 256-bit access then touches indices
+    /// `i..i + LANES` with `i + LANES <= len` only — `loadu`/`storeu`
+    /// impose no alignment beyond the slices being valid — and the scalar
+    /// tail covers `len % LANES`. Lane-parallel arithmetic is exact (no
+    /// wrap) because this path is only dispatched on saturation-free
+    /// planes, where every partial sum obeys `15 * sum |w| <= ACC_MAX`
+    /// ([`Plane::accumulate_row`]).
     #[cfg(target_arch = "x86_64")]
     #[target_feature(enable = "avx2")]
     unsafe fn axpy_avx2(a: i32, w: &[i32], acc: &mut [i32]) {

@@ -38,6 +38,7 @@
 //! v3 and §Fault isolation for the framing, sharding, backpressure,
 //! pipelining and bit-exactness contracts.
 
+pub mod analysis;
 pub mod baselines;
 pub mod coordinator;
 pub mod data;
@@ -51,7 +52,7 @@ pub mod serve;
 pub mod sim;
 pub mod util;
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 /// Locate the artifacts directory: `$CHAMELEON_ARTIFACTS` or `./artifacts`
 /// relative to the workspace root.
@@ -62,4 +63,12 @@ pub fn artifacts_dir() -> PathBuf {
     let mut d = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
     d.push("artifacts");
     d
+}
+
+/// The repository root (the parent of this crate's manifest directory) —
+/// where `chameleon check` finds `rust/src`, `rust/DESIGN.md` and
+/// `ci/analysis_allow.txt`.
+pub fn repo_root() -> PathBuf {
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    manifest.parent().map(Path::to_path_buf).unwrap_or(manifest)
 }

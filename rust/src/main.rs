@@ -33,6 +33,11 @@
 //!           ci/bench_baseline.json
 //!   power   [--mode 4|16 ...]    evaluate the calibrated power model
 //!   verify                       cross-check golden/sim/xla vs vectors
+//!   check   [--json]             repo-native static analysis pass:
+//!           protocol conformance, panic-freedom/unsafe/lock audits and
+//!           table cross-checks over `rust/src/**` (DESIGN.md §Static
+//!           analysis); exits nonzero on violations; --root DIR overrides
+//!           the tree to scan
 //!
 //! `serve`, `loadgen` and `bench` default to built-in demo/synthetic
 //! models, so the full network stack and the perf suites run without
@@ -72,11 +77,12 @@ fn main() {
         "bench" => cmd_bench(&args),
         "power" => cmd_power(&args),
         "verify" => cmd_verify(&args),
+        "check" => cmd_check(&args),
         "hlo-stats" => cmd_hlo_stats(&args),
         other => {
             eprintln!(
                 "unknown command {other:?}; try \
-                 info|infer|learn|serve|loadgen|stat|cl|drive|bench|power|verify|hlo-stats"
+                 info|infer|learn|serve|loadgen|stat|cl|drive|bench|power|verify|check|hlo-stats"
             );
             std::process::exit(2);
         }
@@ -733,6 +739,23 @@ fn cmd_hlo_stats(args: &Args) -> Result<()> {
             t.rowv(vec![op, n.to_string()]);
         }
         t.print();
+    }
+    Ok(())
+}
+
+/// `chameleon check` — the repo-native static analysis pass (DESIGN.md
+/// §Static analysis). Exits nonzero on any violation.
+fn cmd_check(args: &Args) -> Result<()> {
+    let root = args.get("root").map(PathBuf::from).unwrap_or_else(chameleon::repo_root);
+    let report = chameleon::analysis::run_check(&root)
+        .with_context(|| format!("scanning {}", root.display()))?;
+    if args.flag("json") {
+        println!("{}", report.to_json());
+    } else {
+        print!("{}", report.render_text());
+    }
+    if !report.is_clean() {
+        bail!("chameleon check: {} violation(s)", report.violation_count());
     }
     Ok(())
 }

@@ -40,7 +40,9 @@ impl Runtime {
 
     /// Load + compile an HLO text file (cached by path).
     pub fn load(&self, path: &Path) -> Result<std::sync::Arc<Executable>> {
-        if let Some(hit) = self.cache.lock().unwrap().get(path) {
+        if let Some(hit) =
+            self.cache.lock().unwrap_or_else(std::sync::PoisonError::into_inner).get(path)
+        {
             return Ok(hit.clone());
         }
         let proto = xla::HloModuleProto::from_text_file(path)
@@ -51,7 +53,10 @@ impl Runtime {
             .compile(&comp)
             .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
         let exe = std::sync::Arc::new(Executable { exe, path: path.to_path_buf() });
-        self.cache.lock().unwrap().insert(path.to_path_buf(), exe.clone());
+        self.cache
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .insert(path.to_path_buf(), exe.clone());
         Ok(exe)
     }
 }

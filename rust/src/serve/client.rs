@@ -131,7 +131,10 @@ impl Client {
             let read = BufReader::new(s.try_clone()?);
             self.conn = Some(Conn { write: s, read });
         }
-        Ok(self.conn.as_mut().unwrap())
+        match &mut self.conn {
+            Some(c) => Ok(c),
+            None => bail!("connection to {} vanished mid-setup", self.addr),
+        }
     }
 
     /// Drop the connection and every still-pending request (their
@@ -372,8 +375,7 @@ impl Client {
         let id = self.next_id;
         self.next_id += 1;
         let frame = proto::encode_request_versioned(req, v, id);
-        self.ensure_connected().map_err(CallError::NotSent)?;
-        let conn = self.conn.as_mut().unwrap();
+        let conn = self.ensure_connected().map_err(CallError::NotSent)?;
         proto::write_frame(&mut conn.write, &frame).map_err(CallError::Sent)?;
         let blob = proto::read_frame(&mut conn.read)
             .map_err(CallError::Sent)?

@@ -895,32 +895,42 @@ struct Cursor<'a> {
 
 impl<'a> Cursor<'a> {
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.i + n > self.b.len() {
+        let Some(s) = self.i.checked_add(n).and_then(|end| self.b.get(self.i..end)) else {
             bail!("truncated frame: wanted {n} bytes at offset {}", self.i);
-        }
-        let s = &self.b[self.i..self.i + n];
+        };
         self.i += n;
         Ok(s)
     }
 
     fn u8(&mut self) -> Result<u8> {
-        Ok(self.take(1)?[0])
+        match self.take(1)? {
+            [b] => Ok(*b),
+            _ => bail!("truncated frame: wanted 1 byte at offset {}", self.i),
+        }
     }
 
     fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        let mut a = [0u8; 4];
+        a.copy_from_slice(self.take(4)?);
+        Ok(u32::from_le_bytes(a))
     }
 
     fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        let mut a = [0u8; 8];
+        a.copy_from_slice(self.take(8)?);
+        Ok(u64::from_le_bytes(a))
     }
 
     fn f64(&mut self) -> Result<f64> {
-        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        let mut a = [0u8; 8];
+        a.copy_from_slice(self.take(8)?);
+        Ok(f64::from_le_bytes(a))
     }
 
     fn i32(&mut self) -> Result<i32> {
-        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        let mut a = [0u8; 4];
+        a.copy_from_slice(self.take(4)?);
+        Ok(i32::from_le_bytes(a))
     }
 
     fn bytes(&mut self) -> Result<Vec<u8>> {
@@ -998,10 +1008,14 @@ fn header(frame_body: &[u8]) -> Result<(u8, u8, u64, Cursor<'_>)> {
 /// header is intact, else 0. Lets the server tag an error reply even when
 /// the payload itself failed to decode.
 pub fn peek_request_id(frame_body: &[u8]) -> u64 {
-    if frame_body.len() >= 10 && frame_body[0] >= 3 {
-        u64::from_le_bytes(frame_body[2..10].try_into().unwrap())
-    } else {
-        0
+    let v3_plus = frame_body.first().is_some_and(|&v| v >= 3);
+    match frame_body.get(2..10) {
+        Some(tag) if v3_plus => {
+            let mut a = [0u8; 8];
+            a.copy_from_slice(tag);
+            u64::from_le_bytes(a)
+        }
+        _ => 0,
     }
 }
 
@@ -1309,7 +1323,10 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>> {
     let mut got = 0;
     let mut stalls = 0u32;
     while got < 4 {
-        match r.read(&mut len_buf[got..]) {
+        let Some(dst) = len_buf.get_mut(got..) else {
+            bail!("frame length cursor out of range");
+        };
+        match r.read(dst) {
             Ok(0) => {
                 if got == 0 {
                     return Ok(None); // clean EOF between frames
@@ -1348,7 +1365,10 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>> {
     let mut got = 0;
     let mut stalls = 0u32;
     while got < len {
-        match r.read(&mut buf[got..]) {
+        let Some(dst) = buf.get_mut(got..) else {
+            bail!("frame body cursor out of range at {got}/{len} bytes");
+        };
+        match r.read(dst) {
             Ok(0) => bail!("EOF inside frame body at {got}/{len} bytes"),
             Ok(n) => {
                 got += n;

@@ -35,7 +35,7 @@ use std::time::Duration;
 use anyhow::{anyhow, Context, Result};
 
 use crate::coordinator::flight::DEFAULT_FLIGHT_CAPACITY;
-use crate::coordinator::metrics::{MetricsSnapshot, OpKind};
+use crate::coordinator::metrics::{Metrics, MetricsSnapshot, OpKind};
 use crate::coordinator::server::{
     Coordinator, CoordinatorConfig, EngineFactory, ReplySink, Request, SubmitError,
 };
@@ -217,7 +217,12 @@ impl Drop for Server {
 
 fn aggregate(shards: &[Coordinator]) -> MetricsSnapshot {
     let mut it = shards.iter();
-    let mut snap = it.next().expect("at least one shard").snapshot();
+    let Some(first) = it.next() else {
+        // Config validation rejects shards == 0; an empty slice here can
+        // only mean a fresh (all-zero) surface.
+        return Metrics::new().snapshot();
+    };
+    let mut snap = first.snapshot();
     for s in it {
         snap.merge(&s.snapshot());
     }
@@ -671,7 +676,18 @@ where
             if acc.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
                 let items: Vec<BatchItem> = {
                     let mut slots = acc.slots.lock().unwrap_or_else(|p| p.into_inner());
-                    slots.iter_mut().map(|s| s.take().expect("slot filled")).collect()
+                    slots
+                        .iter_mut()
+                        .map(|s| {
+                            // Every slot is filled once `remaining` hits
+                            // zero; a hole means a dropped sub-batch and
+                            // becomes a per-item error, not a panic.
+                            s.take().unwrap_or_else(|| BatchItem::Error {
+                                code: ErrorCode::App,
+                                message: "batch slot never filled".to_string(),
+                            })
+                        })
+                        .collect()
                 };
                 if let Some(out) = acc.out.lock().unwrap_or_else(|p| p.into_inner()).take() {
                     out(WireResponse::ReplyBatch(items));

@@ -1,0 +1,23 @@
+//! Tier-1 gate: the repository tip must pass its own static analysis
+//! pass (`chameleon check`, DESIGN.md §Static analysis). A failure here
+//! means either a new violation (fix the site or — for token rules, with
+//! a justification — extend `ci/analysis_allow.txt`) or a fixed site
+//! whose allowlist entry went stale (remove it and lower the budget).
+
+use chameleon::analysis;
+
+#[test]
+fn repo_tree_passes_chameleon_check() {
+    let report = analysis::check_repo().expect("scanning the repo tree");
+    assert!(report.files_scanned > 0, "no source files found — bad repo root?");
+    let violations: Vec<String> = report
+        .violations()
+        .map(|f| format!("{}:{} [{}] {}\n    {}", f.file, f.line, f.rule, f.message, f.excerpt))
+        .collect();
+    assert!(
+        violations.is_empty(),
+        "chameleon check found {} violation(s):\n{}",
+        violations.len(),
+        violations.join("\n")
+    );
+}
