@@ -21,7 +21,7 @@ fn main() -> anyhow::Result<()> {
     let model = Arc::new(demo_tiny_kws());
     println!("model: {}", model.describe());
 
-    let cfg = ServeConfig { addr: "127.0.0.1:0".to_string(), ..Default::default() };
+    let cfg = ServeConfig::builder().addr("127.0.0.1:0").build()?;
     let m = model.clone();
     let server = Server::start(cfg, move |_shard, _worker| {
         let m = m.clone();

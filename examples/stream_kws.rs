@@ -35,12 +35,7 @@ fn main() -> anyhow::Result<()> {
 
     let m = model.clone();
     let server = Server::start(
-        ServeConfig {
-            addr: "127.0.0.1:0".to_string(),
-            shards: 2,
-            workers_per_shard: 2,
-            ..Default::default()
-        },
+        ServeConfig::builder().addr("127.0.0.1:0").shards(2).workers_per_shard(2).build()?,
         move |_shard, _worker| {
             let m = m.clone();
             Box::new(move || Ok(Engine::golden(m))) as EngineFactory

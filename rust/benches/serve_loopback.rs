@@ -44,12 +44,7 @@ fn main() -> anyhow::Result<()> {
     let model = Arc::new(demo_tiny_kws());
     println!("model: {}", model.describe());
 
-    let cfg = ServeConfig {
-        addr: "127.0.0.1:0".to_string(),
-        shards: 2,
-        workers_per_shard: 2,
-        ..Default::default()
-    };
+    let cfg = ServeConfig::builder().addr("127.0.0.1:0").shards(2).workers_per_shard(2).build()?;
     let m = model.clone();
     let server = Server::start(cfg, move |_s, _w| {
         let m = m.clone();

@@ -18,6 +18,10 @@
 //!   (or `# Safety` doc) comment stating the exact invariant.
 //! * **lock-hygiene** — raw `.lock().unwrap()` is denied in favor of the
 //!   poisoning-aware recovery idiom the worker loop uses.
+//! * **blocking-in-reactor** — `serve/reactor.rs` runs one event loop per
+//!   shard, so any call that can park the thread (`thread::sleep`,
+//!   blocking channel `recv`, socket timeouts, `write_all`) stalls every
+//!   connection the loop owns; the reactor must stay readiness-driven.
 //! * **arity-sync** — the `OpKind` table, the wire opcode table and the
 //!   DESIGN.md tables must agree on names, bytes and arity.
 //!
@@ -345,6 +349,24 @@ mod tests {
 
         let good = "pub fn f(m: &std::sync::Mutex<u32>) -> u32 {\n    *m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)\n}\n";
         let root = fixture("lock-good", &[("rust/src/runtime/l.rs", good)]);
+        assert!(check(&root).is_clean());
+    }
+
+    #[test]
+    fn blocking_calls_in_reactor_are_flagged_and_scoped_to_it() {
+        let bad = "fn spin(s: &std::net::TcpStream) {\n    std::thread::sleep(d);\n    s.set_read_timeout(Some(d)).ok();\n}\n\n#[cfg(test)]\nmod tests {\n    fn t() {\n        std::thread::sleep(d);\n    }\n}\n";
+        let root = fixture("reactor-bad", &[("rust/src/serve/reactor.rs", bad)]);
+        let r = check(&root);
+        assert_eq!(
+            violation_keys(&r),
+            vec![
+                "rust/src/serve/reactor.rs:2 [blocking-in-reactor]",
+                "rust/src/serve/reactor.rs:3 [blocking-in-reactor]",
+            ]
+        );
+
+        // Scoped to the reactor: the threads backend blocks by design.
+        let root = fixture("reactor-scope", &[("rust/src/serve/server.rs", bad)]);
         assert!(check(&root).is_clean());
     }
 

@@ -1,7 +1,8 @@
 //! The rule families of `chameleon check`.
 //!
-//! Token rules (panic-freedom, wire-indexing, unsafe-safety, lock-hygiene)
-//! scan the stripped per-line code view from `super::scan`; structural
+//! Token rules (panic-freedom, wire-indexing, unsafe-safety, lock-hygiene,
+//! blocking-in-reactor) scan the stripped per-line code view from
+//! `super::scan`; structural
 //! rules (proto-conformance, arity-sync) parse the opcode/OpKind tables
 //! out of `serve/proto.rs`, `coordinator/metrics.rs` and the anchored
 //! markdown tables in `rust/DESIGN.md`, and cross-check them. Structural
@@ -18,6 +19,23 @@ const PANIC_TOKENS: [&str; 6] =
 
 const LOCK_TOKENS: [&str; 2] = [".lock().unwrap()", ".lock().expect("];
 
+/// Calls that park the calling thread — fatal inside an event loop, where
+/// one blocked thread stalls every connection it owns. `std::net` blocking
+/// entry points, socket timeout knobs (they imply blocking reads), channel
+/// receives, blanket `write_all`, and raw sleeps.
+const REACTOR_BLOCKING_TOKENS: [&str; 10] = [
+    "thread::sleep",
+    ".lock().unwrap()",
+    ".lock().expect(",
+    "TcpStream::connect(",
+    ".set_read_timeout(",
+    ".set_write_timeout(",
+    "set_nonblocking(false)",
+    ".recv()",
+    ".recv_timeout(",
+    ".write_all(",
+];
+
 /// Run every rule family over the scanned tree. `design` carries the raw
 /// lines of `rust/DESIGN.md` when present (fixture trees omit it, which
 /// skips the doc cross-checks).
@@ -27,6 +45,7 @@ pub fn run_all(files: &[SourceFile], design: Option<&[String]>) -> Vec<Finding> 
     wire_indexing(files, &mut out);
     unsafe_safety(files, &mut out);
     lock_hygiene(files, &mut out);
+    blocking_in_reactor(files, &mut out);
     proto_conformance(files, design, &mut out);
     arity_sync(files, design, &mut out);
     out
@@ -151,6 +170,35 @@ fn lock_hygiene(files: &[SourceFile], out: &mut Vec<Finding>) {
                              `unwrap_or_else(std::sync::PoisonError::into_inner)` \
                              or tear the resource down explicitly (stream-poison \
                              semantics, DESIGN.md \u{a7}Static analysis)"
+                        ),
+                        &sf.raw[i],
+                    ));
+                }
+            }
+        }
+    }
+}
+
+fn blocking_in_reactor(files: &[SourceFile], out: &mut Vec<Finding>) {
+    for sf in files {
+        if !sf.rel.ends_with("serve/reactor.rs") {
+            continue;
+        }
+        for (i, code) in sf.code.iter().enumerate() {
+            if sf.test[i] {
+                continue;
+            }
+            for tok in REACTOR_BLOCKING_TOKENS {
+                if code.contains(tok) {
+                    out.push(Finding::new(
+                        "blocking-in-reactor",
+                        &sf.rel,
+                        i + 1,
+                        format!(
+                            "`{tok}` inside the event loop — reactor code must \
+                             never park its thread; one blocked loop stalls \
+                             every connection it owns (readiness + mailbox \
+                             wakes only, DESIGN.md \u{a7}Serve core)"
                         ),
                         &sf.raw[i],
                     ));

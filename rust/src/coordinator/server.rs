@@ -28,6 +28,13 @@ use crate::sim::learning::learning_cycles;
 /// the serve layer's pipelined connections encode + enqueue the wire frame
 /// directly on their writer — no per-request waiter thread.
 ///
+/// Delivery contract for sink implementors: the callback runs on the
+/// worker thread that finished the request, so it must never block — the
+/// serve layer's backends honor this by handing the encoded frame to a
+/// bounded channel (threads backend) or posting it to the owning event
+/// loop's mailbox + eventfd wake (reactor backend), never by writing a
+/// socket in line.
+///
 /// Delivery is guaranteed: if the sink is dropped without being called
 /// (worker died, queue torn down at shutdown with requests still inside),
 /// it fires with an error so no caller ever hangs on a lost reply.
@@ -221,6 +228,12 @@ pub struct StreamDecision {
 }
 
 /// Coordinator configuration.
+///
+/// In the serving stack this is an internal detail: build a
+/// `serve::ServeConfig` with its builder and the server derives one
+/// `CoordinatorConfig` per shard from it
+/// (`ServeConfig::coordinator_config`). Constructing it directly remains
+/// supported for embedding a single coordinator without the TCP layer.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
     pub workers: usize,

@@ -6,7 +6,9 @@
 //!   learn   --ways N --shots K   run an on-"chip" FSL episode
 //!   serve   --shards N [...]     sharded TCP serving layer (wire protocol);
 //!           --op-mode {paced,turbo} picks the operating point: paced
-//!           (low-power sequential) or turbo (SIMD plans + pooled batches)
+//!           (low-power sequential) or turbo (SIMD plans + pooled batches);
+//!           --backend {reactor,threads} forces the transport backend
+//!           (default: the epoll reactor where supported, else threads)
 //!   loadgen --rps R [...]        open-loop Poisson load generator;
 //!           --pipeline D keeps D requests in flight per connection and
 //!           --batch N sends N-window ClassifyBatch frames (protocol v3);
@@ -14,6 +16,9 @@
 //!           stream sessions instead of request traffic;
 //!           --cl [--ways N --shots K --classify-frac F] drives growing-
 //!           way continual-learning sessions (protocol v4 AddShots);
+//!           --fanout [--connections N --per-conn K --waves W] holds N
+//!           connections open concurrently with K requests pipelined on
+//!           all of them at once (the reactor's connection-scaling shape);
 //!           --report-secs N prints interval throughput + percentiles
 //!           while a request-mode run is in flight
 //!   stat    [--addr H:P | --loopback]  dump a server's observability
@@ -50,12 +55,12 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use chameleon::coordinator::server::EngineFactory;
-use chameleon::coordinator::{Coordinator, CoordinatorConfig, Engine, OpMode};
+use chameleon::coordinator::{Coordinator, Engine, OpMode};
 use chameleon::golden::ExecMode;
 use chameleon::data::EvalPool;
 use chameleon::model::QuantModel;
 use chameleon::runtime::{Runtime, XlaModel};
-use chameleon::serve::{LoadgenConfig, ServeConfig, Server, StreamLoadConfig};
+use chameleon::serve::{Backend, LoadgenConfig, ServeConfig, Server, StreamLoadConfig};
 use chameleon::sim::{self, ArrayMode, LearningController, OperatingPoint};
 use chameleon::util::args::Args;
 use chameleon::util::bench::{fmt_dur, fmt_power, Table};
@@ -276,21 +281,28 @@ fn serve_engine_factory(
 fn cmd_serve(args: &Args) -> Result<()> {
     let model = Arc::new(serve_model(args, "tiny_kws")?);
     println!("{}", model.describe());
-    let cfg = ServeConfig {
-        addr: args.get_or("addr", "127.0.0.1:7070").to_string(),
-        shards: args.get_usize("shards", 2)?,
-        workers_per_shard: args.get_usize("workers", 2)?,
-        queue_depth: args.get_usize("queue-depth", 256)?,
-        max_sessions: args.get_usize("max-sessions", 1024)?,
-        way_budget_bytes: args.get_usize("way-budget", 0)?,
-        slow_request_us: args.get_u64("slow-request-us", 100_000)?,
-        flight_capacity: args.get_usize("flight-capacity", 256)?,
-        ..Default::default()
-    };
+    let op_mode = OpMode::parse(args.get_or("op-mode", "paced"))?;
+    let mut builder = ServeConfig::builder()
+        .addr(args.get_or("addr", "127.0.0.1:7070"))
+        .shards(args.get_usize("shards", 2)?)
+        .workers_per_shard(args.get_usize("workers", 2)?)
+        .queue_depth(args.get_usize("queue-depth", 256)?)
+        .max_sessions(args.get_usize("max-sessions", 1024)?)
+        .way_budget(args.get_usize("way-budget", 0)?)
+        .slow_request_us(args.get_u64("slow-request-us", 100_000)?)
+        .flight_capacity(args.get_usize("flight-capacity", 256)?)
+        .op_mode(op_mode);
+    if let Some(b) = args.get("backend") {
+        builder = builder.backend(match b {
+            "reactor" => Backend::Reactor,
+            "threads" => Backend::Threads,
+            other => bail!("unknown --backend {other:?} (reactor|threads)"),
+        });
+    }
+    let cfg = builder.build()?;
     let engine_kind = args.get_or("engine", "golden").to_string();
     let mode = mode_from(args);
     let paced_hz = args.get_f64("paced-hz", 1e6)?;
-    let op_mode = OpMode::parse(args.get_or("op-mode", "paced"))?;
     let dir = artifacts(args);
     let server = Server::start(cfg.clone(), |_shard, _worker| {
         serve_engine_factory(
@@ -305,7 +317,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!(
         "serving on {} — {} shard(s) x {} worker(s), queue depth {}, \
          max {} sessions/shard, way budget {}, engine={engine_kind}, \
-         op-mode={}",
+         op-mode={}, backend={}",
         server.local_addr(),
         cfg.shards,
         cfg.workers_per_shard,
@@ -317,6 +329,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             format!("{} B/session", cfg.way_budget_bytes)
         },
         op_mode.name(),
+        server.backend().name(),
     );
     let duration = args.get_f64("duration", 0.0)?;
     let report_every = args.get_f64("report-every", 10.0)?.max(0.5);
@@ -345,6 +358,9 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     }
     if args.flag("cl") {
         return cmd_loadgen_cl(args);
+    }
+    if args.flag("fanout") {
+        return cmd_loadgen_fanout(args);
     }
     let cfg = LoadgenConfig {
         addr: args.get_or("addr", "127.0.0.1:7070").to_string(),
@@ -444,6 +460,29 @@ fn cmd_loadgen_cl(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Fan-out mode of the load generator: hold `--connections` sockets open
+/// concurrently with a few requests pipelined on every one of them at
+/// once — the connection-scaling shape the reactor backend exists for.
+fn cmd_loadgen_fanout(args: &Args) -> Result<()> {
+    let cfg = chameleon::serve::FanoutConfig {
+        addr: args.get_or("addr", "127.0.0.1:7070").to_string(),
+        connections: args.get_usize("connections", 1024)?,
+        per_conn: args.get_usize("per-conn", 2)?,
+        waves: args.get_usize("waves", 2)?,
+        seed: args.get_u64("seed", 1)?,
+    };
+    println!(
+        "loadgen --fanout -> {}: {} connection(s) x {} in flight x {} wave(s)",
+        cfg.addr, cfg.connections, cfg.per_conn, cfg.waves,
+    );
+    let report = chameleon::serve::loadgen::run_fanout(&cfg)?;
+    println!("{}", report.report());
+    if report.protocol_errors > 0 {
+        bail!("{} protocol errors observed", report.protocol_errors);
+    }
+    Ok(())
+}
+
 /// Dump a serve endpoint's observability surface (protocol v5): the
 /// aggregated metrics — counters, gauges, per-op latency table — plus the
 /// flight-recorder event ring. `--loopback` spins up a built-in demo
@@ -455,13 +494,12 @@ fn cmd_stat(args: &Args) -> Result<()> {
     use chameleon::serve::{Client, WireRequest};
     let (metrics, stat) = if args.flag("loopback") {
         let model = Arc::new(chameleon::model::demo_tiny_kws());
-        let cfg = ServeConfig {
-            addr: "127.0.0.1:0".to_string(),
-            shards: 2,
-            workers_per_shard: 2,
-            slow_request_us: 1,
-            ..Default::default()
-        };
+        let cfg = ServeConfig::builder()
+            .addr("127.0.0.1:0")
+            .shards(2)
+            .workers_per_shard(2)
+            .slow_request_us(1)
+            .build()?;
         let m = model.clone();
         let server = Server::start(cfg, move |_shard, _worker| {
             let m = m.clone();
@@ -622,10 +660,14 @@ fn cmd_drive(args: &Args) -> Result<()> {
             )
         })
         .collect();
-    let coord = Coordinator::start(
-        factories,
-        CoordinatorConfig { workers, queue_depth: 128, ..Default::default() },
-    )?;
+    // Coordinator knobs are derived from the unified serve builder even
+    // in this pre-serve harness, so there is exactly one config surface.
+    let cfg = ServeConfig::builder()
+        .workers_per_shard(workers)
+        .queue_depth(args.get_usize("queue-depth", 128)?)
+        .op_mode(op_mode)
+        .build()?;
+    let coord = Coordinator::start(factories, cfg.coordinator_config())?;
     let mut rng = Rng::new(7);
     let t0 = Instant::now();
     let mut correct = 0;

@@ -1,17 +1,21 @@
 //! Blocking client for the serve wire protocol, with reconnect + timeout
 //! handling and protocol-v3 request pipelining.
 //!
-//! Two layers of API:
+//! One submission surface, two layers of convenience:
 //!
-//! * [`Client::submit`] / [`Client::wait`] — the pipelined primitives: a
-//!   submit writes one tagged frame and returns immediately with its
-//!   ticket; any number may be in flight on the one connection, and
-//!   `wait` collects responses in *any* order (the server tags each
-//!   response with its request id). This is how a single connection
-//!   saturates every shard of the server.
-//! * [`Client::call`] and the typed helpers — the blocking convenience
-//!   layer (submit + wait for one request), with the original reconnect /
-//!   retry discipline when nothing else is in flight.
+//! * [`Client::send`] / [`Ticket::wait`] — the core: every operation is a
+//!   typed [`Request`] value; `send` writes one tagged frame and returns
+//!   immediately with its [`Ticket`]; any number may be in flight on the
+//!   one connection, and a wait collects responses in *any* order (the
+//!   server tags each response with its request id). This is how a single
+//!   connection saturates every shard of the server. Version gating,
+//!   pipelining, and retry-safety all live here (and in [`Client::call`])
+//!   — nowhere else.
+//! * [`Client::call`] and the typed helpers (`classify`, `learn_way`, …)
+//!   — the blocking convenience layer (send + wait for one request), with
+//!   the original reconnect / retry discipline when nothing else is in
+//!   flight. Each helper is a thin wrapper that builds a [`Request`] and
+//!   folds server errors into `anyhow` errors.
 //!
 //! Transport and framing failures are `Err` (after the configured
 //! reconnect attempts), while server-sent `Error` frames come back as
@@ -37,6 +41,43 @@ use crate::serve::proto::{
     self, BatchItem, ErrorCode, HealthWire, MetricsWire, SessionInfoWire, StatWire, WireDecision,
     WireReply, WireRequest, WireResponse,
 };
+
+/// The single typed request surface: every client entry point builds one
+/// of these and hands it to [`Client::send`] / [`Client::call`]. This is
+/// the wire-level request enum re-exported under its API name.
+pub use crate::serve::proto::WireRequest as Request;
+
+/// Handle to one pipelined in-flight request, returned by
+/// [`Client::send`]. Collect it with [`Ticket::wait`] (or the deadline-
+/// bounded [`Ticket::wait_until`]) in any order relative to other
+/// tickets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Ticket {
+    id: u64,
+}
+
+impl Ticket {
+    /// The wire-level request id this ticket tracks.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block until this request's response arrives; responses for other
+    /// tickets that arrive first are buffered for their own waits.
+    pub fn wait(self, client: &mut Client) -> Result<WireResponse> {
+        client.wait(self.id)
+    }
+
+    /// Deadline-bounded [`Ticket::wait`]: `Ok(None)` means the response
+    /// has not arrived yet and the ticket is still in flight.
+    pub fn wait_until(
+        self,
+        client: &mut Client,
+        deadline: Instant,
+    ) -> Result<Option<WireResponse>> {
+        client.wait_until(self.id, deadline)
+    }
+}
 
 /// Client tuning knobs.
 #[derive(Debug, Clone)]
@@ -146,15 +187,16 @@ impl Client {
         self.pending.clear();
     }
 
-    /// Pipelined submit: write one tagged request frame and return its
-    /// ticket without waiting. Any number of submits may be outstanding;
-    /// collect them with [`Client::wait`] in any order.
+    /// Pipelined send: write one tagged request frame and return its
+    /// [`Ticket`] without waiting. Any number of sends may be
+    /// outstanding; collect them with [`Ticket::wait`] (or
+    /// [`Client::wait`]) in any order.
     ///
     /// Unlike [`Client::call`], a transport failure here is not retried:
     /// with other requests possibly in flight, a transparent reconnect
     /// would silently lose them — the error surfaces and poisons the
     /// connection (every outstanding `wait` then fails fast).
-    pub fn submit(&mut self, req: &WireRequest) -> Result<u64> {
+    pub fn send(&mut self, req: &Request) -> Result<Ticket> {
         let v = self.version();
         let min = proto::request_min_version(req);
         if min > v {
@@ -173,7 +215,7 @@ impl Client {
         match wrote {
             Ok(()) => {
                 self.pending.push_back(id);
-                Ok(id)
+                Ok(Ticket { id })
             }
             Err(e) => {
                 self.poison();
@@ -184,6 +226,13 @@ impl Client {
                 })
             }
         }
+    }
+
+    /// [`Client::send`] returning the raw request id instead of a
+    /// [`Ticket`] — kept for callers that track ids in bulk (the load
+    /// generator's in-flight window).
+    pub fn submit(&mut self, req: &Request) -> Result<u64> {
+        self.send(req).map(|t| t.id())
     }
 
     /// Collect the response for one submitted ticket, in any order.
@@ -390,41 +439,56 @@ impl Client {
         Ok(rf.resp)
     }
 
-    fn expect_reply(&mut self, req: &WireRequest) -> Result<WireReply> {
+    /// Blocking call with the response narrowed to one expected variant:
+    /// server `Error` frames fold into `anyhow` errors (exactly as the
+    /// typed helpers always have), any other unexpected variant is handed
+    /// back to `pick` and reported verbatim. Every typed helper below is
+    /// a one-line wrapper over this.
+    fn demand<T>(
+        &mut self,
+        req: &Request,
+        pick: fn(WireResponse) -> std::result::Result<T, WireResponse>,
+    ) -> Result<T> {
         match self.call(req)? {
-            WireResponse::Reply(r) => Ok(r),
             WireResponse::Error { code, message } => {
                 bail!("server error ({code:?}): {message}")
             }
-            other => bail!("unexpected response {other:?}"),
+            other => match pick(other) {
+                Ok(v) => Ok(v),
+                Err(other) => bail!("unexpected response {other:?}"),
+            },
         }
+    }
+
+    fn expect_reply(&mut self, req: &Request) -> Result<WireReply> {
+        self.demand(req, |r| match r {
+            WireResponse::Reply(rep) => Ok(rep),
+            other => Err(other),
+        })
     }
 
     /// Classify with the model's built-in head.
     pub fn classify(&mut self, input: Vec<u8>) -> Result<WireReply> {
-        self.expect_reply(&WireRequest::Classify { input })
+        self.expect_reply(&Request::Classify { input })
     }
 
     /// Classify a batch of session-less windows in one frame (v3); items
     /// come back in input order, each independently a reply or an error.
     pub fn classify_batch(&mut self, inputs: Vec<Vec<u8>>) -> Result<Vec<BatchItem>> {
-        match self.call(&WireRequest::ClassifyBatch { inputs })? {
+        self.demand(&Request::ClassifyBatch { inputs }, |r| match r {
             WireResponse::ReplyBatch(items) => Ok(items),
-            WireResponse::Error { code, message } => {
-                bail!("server error ({code:?}): {message}")
-            }
-            other => bail!("unexpected response {other:?}"),
-        }
+            other => Err(other),
+        })
     }
 
     /// Classify against a session's learned head.
     pub fn classify_session(&mut self, session: u64, input: Vec<u8>) -> Result<WireReply> {
-        self.expect_reply(&WireRequest::ClassifySession { session, input })
+        self.expect_reply(&Request::ClassifySession { session, input })
     }
 
     /// Learn one new way for a session.
     pub fn learn_way(&mut self, session: u64, shots: Vec<Vec<u8>>) -> Result<WireReply> {
-        self.expect_reply(&WireRequest::LearnWay { session, shots })
+        self.expect_reply(&Request::LearnWay { session, shots })
     }
 
     /// Fold new support shots into an already-learned way of a session
@@ -432,99 +496,75 @@ impl Client {
     /// updated way. Not retried after a transport failure mid-call — a
     /// lost reply could mean the shots were already absorbed.
     pub fn add_shots(&mut self, session: u64, way: u64, shots: Vec<Vec<u8>>) -> Result<WireReply> {
-        self.expect_reply(&WireRequest::AddShots { session, way, shots })
+        self.expect_reply(&Request::AddShots { session, way, shots })
     }
 
     /// A session's learned state + way-budget accounting (v4).
     pub fn session_info(&mut self, session: u64) -> Result<SessionInfoWire> {
-        match self.call(&WireRequest::SessionInfo { session })? {
+        self.demand(&Request::SessionInfo { session }, |r| match r {
             WireResponse::SessionInfo(si) => Ok(si),
-            WireResponse::Error { code, message } => {
-                bail!("server error ({code:?}): {message}")
-            }
-            other => bail!("unexpected response {other:?}"),
-        }
+            other => Err(other),
+        })
     }
 
     /// Evict a session; returns whether it existed.
     pub fn evict_session(&mut self, session: u64) -> Result<bool> {
-        match self.call(&WireRequest::EvictSession { session })? {
+        self.demand(&Request::EvictSession { session }, |r| match r {
             WireResponse::Evicted { existed } => Ok(existed),
-            WireResponse::Error { code, message } => {
-                bail!("server error ({code:?}): {message}")
-            }
-            other => bail!("unexpected response {other:?}"),
-        }
+            other => Err(other),
+        })
     }
 
     /// Open (or reset) an incremental stream on a session; returns the
     /// accepted `(window, hop)` geometry in timesteps.
     pub fn stream_open(&mut self, session: u64, hop: u32) -> Result<(u32, u32)> {
-        match self.call(&WireRequest::StreamOpen { session, hop })? {
+        self.demand(&Request::StreamOpen { session, hop }, |r| match r {
             WireResponse::StreamOpened { window, hop } => Ok((window, hop)),
-            WireResponse::Error { code, message } => {
-                bail!("server error ({code:?}): {message}")
-            }
-            other => bail!("unexpected response {other:?}"),
-        }
+            other => Err(other),
+        })
     }
 
     /// Push a chunk of u4 samples into a session's open stream; returns a
     /// decision for every window the chunk completed (often empty).
     pub fn stream_push(&mut self, session: u64, samples: Vec<u8>) -> Result<Vec<WireDecision>> {
-        match self.call(&WireRequest::StreamPush { session, samples })? {
+        self.demand(&Request::StreamPush { session, samples }, |r| match r {
             WireResponse::StreamDecisions(ds) => Ok(ds),
-            WireResponse::Error { code, message } => {
-                bail!("server error ({code:?}): {message}")
-            }
-            other => bail!("unexpected response {other:?}"),
-        }
+            other => Err(other),
+        })
     }
 
     /// Close a session's stream; returns whether one existed and how many
     /// windows it emitted.
     pub fn stream_close(&mut self, session: u64) -> Result<(bool, u64)> {
-        match self.call(&WireRequest::StreamClose { session })? {
+        self.demand(&Request::StreamClose { session }, |r| match r {
             WireResponse::StreamClosed { existed, windows } => Ok((existed, windows)),
-            WireResponse::Error { code, message } => {
-                bail!("server error ({code:?}): {message}")
-            }
-            other => bail!("unexpected response {other:?}"),
-        }
+            other => Err(other),
+        })
     }
 
     /// Liveness + model geometry probe.
     pub fn health(&mut self) -> Result<HealthWire> {
-        match self.call(&WireRequest::Health)? {
+        self.demand(&Request::Health, |r| match r {
             WireResponse::Health(h) => Ok(h),
-            WireResponse::Error { code, message } => {
-                bail!("server error ({code:?}): {message}")
-            }
-            other => bail!("unexpected response {other:?}"),
-        }
+            other => Err(other),
+        })
     }
 
     /// Aggregated serving metrics across all shards.
     pub fn metrics(&mut self) -> Result<MetricsWire> {
-        match self.call(&WireRequest::Metrics)? {
+        self.demand(&Request::Metrics, |r| match r {
             WireResponse::Metrics(m) => Ok(m),
-            WireResponse::Error { code, message } => {
-                bail!("server error ({code:?}): {message}")
-            }
-            other => bail!("unexpected response {other:?}"),
-        }
+            other => Err(other),
+        })
     }
 
     /// Flight-recorder dump merged across all shards (v5). Fails locally
     /// with a version error when this client speaks an older protocol.
     pub fn stat(&mut self) -> Result<StatWire> {
-        match self.call(&WireRequest::Stat)? {
+        self.demand(&Request::Stat, |r| match r {
             WireResponse::Stat(st) => Ok(st),
-            WireResponse::Error { code, message } => {
-                bail!("server error ({code:?}): {message}")
-            }
-            other => bail!("unexpected response {other:?}"),
-        }
+            other => Err(other),
+        })
     }
 }
 

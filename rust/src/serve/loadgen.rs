@@ -35,6 +35,13 @@
 //! ways x shots target, then evicts it and grows again — per-op latency
 //! percentiles are reported separately for learns, updates and
 //! classifies.
+//!
+//! Fan-out mode ([`run_fanout`]) is the fleet shape instead of the
+//! throughput shape: hold very many connections open simultaneously
+//! (thousands — the reactor backend's reason to exist), pipeline a few
+//! requests on every one of them at once, and measure the turnaround.
+//! One driver thread multiplexes all connections, so the measurement
+//! stays honest on small hosts.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -1063,6 +1070,185 @@ pub fn run_cl(cfg: &ClLoadConfig) -> Result<ClLoadReport> {
     })
 }
 
+// ---------------------------------------------------------------------------
+// High-fanout mode
+// ---------------------------------------------------------------------------
+
+/// High-fanout load configuration: many concurrent pipelined connections,
+/// few requests each.
+#[derive(Debug, Clone)]
+pub struct FanoutConfig {
+    pub addr: String,
+    /// Concurrent connections, all held open for the whole run.
+    pub connections: usize,
+    /// Requests pipelined on every connection per wave.
+    pub per_conn: usize,
+    /// Submit-everywhere-then-drain waves over the open connections.
+    pub waves: usize,
+    pub seed: u64,
+}
+
+impl Default for FanoutConfig {
+    fn default() -> Self {
+        FanoutConfig {
+            addr: "127.0.0.1:7070".to_string(),
+            connections: 1024,
+            per_conn: 2,
+            waves: 2,
+            seed: 1,
+        }
+    }
+}
+
+/// Outcome of one fan-out run.
+#[derive(Debug, Clone)]
+pub struct FanoutReport {
+    pub connections: usize,
+    pub per_conn: usize,
+    pub waves: usize,
+    pub sent: u64,
+    pub ok: u64,
+    pub overloaded: u64,
+    pub app_errors: u64,
+    /// Transport/framing failures — must be zero against a healthy server.
+    pub protocol_errors: u64,
+    pub wall: Duration,
+    /// Per-request latency from each request's submit.
+    pub latency: HistSnapshot,
+    /// Server-side aggregated metrics fetched after the run.
+    pub server: Option<MetricsWire>,
+}
+
+impl FanoutReport {
+    /// Completed responses (ok, shed, or app-failed — all full round
+    /// trips) per second. Shed responses count: under deliberate
+    /// overcommit the turnaround rate is the scaling signal, not the
+    /// admission rate.
+    pub fn responses_per_sec(&self) -> f64 {
+        let done = self.ok + self.overloaded + self.app_errors;
+        if self.wall.as_secs_f64() <= 0.0 {
+            0.0
+        } else {
+            done as f64 / self.wall.as_secs_f64()
+        }
+    }
+
+    pub fn p99_us(&self) -> f64 {
+        self.latency.percentile_us(99.0)
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "fanout: {} connection(s) x {} in flight x {} wave(s) -> \
+             {} ok / {} overloaded / {} app errors / {} protocol errors in {:.2} s\n\
+             turnaround {:.1} resp/s  latency p50={:.0}us p95={:.0}us p99={:.0}us mean={:.0}us",
+            self.connections,
+            self.per_conn,
+            self.waves,
+            self.ok,
+            self.overloaded,
+            self.app_errors,
+            self.protocol_errors,
+            self.wall.as_secs_f64(),
+            self.responses_per_sec(),
+            self.latency.percentile_us(50.0),
+            self.latency.percentile_us(95.0),
+            self.p99_us(),
+            self.latency.mean_us(),
+        );
+        if let Some(m) = &self.server {
+            s.push_str("\nserver: ");
+            s.push_str(&m.report());
+        }
+        s
+    }
+}
+
+/// Run the fan-out load generator: open `connections` sockets, then in
+/// each wave submit `per_conn` pipelined classifications on *every*
+/// connection before draining any — so the server holds the full
+/// connection count with traffic in flight on all of them at once.
+pub fn run_fanout(cfg: &FanoutConfig) -> Result<FanoutReport> {
+    if cfg.connections == 0 {
+        bail!("--connections must be at least 1");
+    }
+    if cfg.per_conn == 0 {
+        bail!("--per-conn must be at least 1");
+    }
+    if cfg.waves == 0 {
+        bail!("--waves must be at least 1");
+    }
+    // Thousands of sockets need headroom over the usual 1024 soft cap.
+    #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+    let _ = crate::serve::sys::raise_nofile_limit();
+
+    let mut probe = Client::with_config(
+        &cfg.addr,
+        ClientConfig { timeout: Duration::from_secs(30), ..Default::default() },
+    )
+    .context("connecting to serve endpoint")?;
+    let health = probe.health().context("health probe")?;
+    let input_len = health.input_len as usize;
+    let mut rng = Rng::new(cfg.seed);
+
+    let mut clients = Vec::with_capacity(cfg.connections);
+    for i in 0..cfg.connections {
+        let c = Client::connect(&cfg.addr)
+            .with_context(|| format!("opening fanout connection {i} of {}", cfg.connections))?;
+        clients.push(c);
+    }
+
+    let counters = Counters {
+        next: AtomicUsize::new(0),
+        ok: AtomicU64::new(0),
+        overloaded: AtomicU64::new(0),
+        app_errors: AtomicU64::new(0),
+        protocol_errors: AtomicU64::new(0),
+    };
+    let hist = LatencyHistogram::new();
+    let start = Instant::now();
+    for _ in 0..cfg.waves {
+        let mut tickets: Vec<Vec<(u64, Instant)>> = Vec::with_capacity(clients.len());
+        for client in clients.iter_mut() {
+            let mut batch = Vec::with_capacity(cfg.per_conn);
+            for _ in 0..cfg.per_conn {
+                let req = WireRequest::Classify { input: rand_input(&mut rng, input_len) };
+                match client.send(&req) {
+                    Ok(t) => batch.push((t.id(), Instant::now())),
+                    Err(_) => {
+                        counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            tickets.push(batch);
+        }
+        // Every connection now has its full window in flight; drain.
+        for (client, batch) in clients.iter_mut().zip(tickets) {
+            for (id, t0) in batch {
+                let result = client.wait(id);
+                hist.record(t0.elapsed());
+                record_result(&result, &counters);
+            }
+        }
+    }
+    let wall = start.elapsed();
+
+    let server = probe.metrics().ok();
+    Ok(FanoutReport {
+        connections: cfg.connections,
+        per_conn: cfg.per_conn,
+        waves: cfg.waves,
+        sent: (cfg.connections * cfg.per_conn * cfg.waves) as u64,
+        ok: counters.ok.load(Ordering::Relaxed),
+        overloaded: counters.overloaded.load(Ordering::Relaxed),
+        app_errors: counters.app_errors.load(Ordering::Relaxed),
+        protocol_errors: counters.protocol_errors.load(Ordering::Relaxed),
+        wall,
+        latency: hist.snapshot(),
+        server,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1083,6 +1269,39 @@ mod tests {
         cfg.pipeline = 1;
         cfg.batch = crate::serve::proto::MAX_LIST + 1;
         assert!(run(&cfg).is_err(), "oversized --batch must fail fast");
+    }
+
+    #[test]
+    fn fanout_config_validation() {
+        let mut cfg = FanoutConfig { connections: 0, ..Default::default() };
+        assert!(run_fanout(&cfg).is_err());
+        cfg.connections = 1;
+        cfg.per_conn = 0;
+        assert!(run_fanout(&cfg).is_err());
+        cfg.per_conn = 1;
+        cfg.waves = 0;
+        assert!(run_fanout(&cfg).is_err());
+    }
+
+    #[test]
+    fn fanout_report_formats() {
+        let r = FanoutReport {
+            connections: 1000,
+            per_conn: 2,
+            waves: 2,
+            sent: 4000,
+            ok: 3900,
+            overloaded: 100,
+            app_errors: 0,
+            protocol_errors: 0,
+            wall: Duration::from_secs(2),
+            latency: HistSnapshot::default(),
+            server: None,
+        };
+        let s = r.report();
+        assert!(s.contains("1000 connection(s)"), "{s}");
+        assert!(s.contains("0 protocol errors"), "{s}");
+        assert!((r.responses_per_sec() - 2000.0).abs() < 1e-9, "shed responses still count");
     }
 
     #[test]

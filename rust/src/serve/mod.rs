@@ -12,13 +12,17 @@
 //!   v5 adds the observability surface: per-reply span decomposition,
 //!   metrics gauges + per-op latency table, and the `Stat`
 //!   flight-recorder dump);
-//! * [`server`] — thread-per-connection TCP server over N coordinator
-//!   shards, with a reader/dispatcher/writer split per connection so v3
-//!   requests pipeline (responses return in completion order): sessions
-//!   (and their open streams) route by stable `SessionId` hash,
-//!   session-less classification fans out round-robin — trying every
-//!   shard before surfacing backpressure — and queue overflow surfaces as
-//!   an explicit `Overloaded` wire error;
+//! * [`server`] — TCP server over N coordinator shards with two
+//!   transport backends behind one API: an epoll [`reactor`] (default on
+//!   Linux) where N event loops own every connection nonblockingly, and
+//!   a thread-per-connection fallback with a reader/dispatcher/writer
+//!   split. Both pipeline v3 requests (responses return in completion
+//!   order): sessions (and their open streams) route by stable
+//!   `SessionId` hash, session-less classification fans out round-robin
+//!   — trying every shard before surfacing backpressure — and queue
+//!   overflow surfaces as an explicit `Overloaded` wire error.
+//!   Configuration is one builder: `ServeConfig::builder()` validates
+//!   into a [`ServeConfig`]; `CoordinatorConfig` is derived from it;
 //! * [`client`] — blocking client library with reconnect + timeouts plus
 //!   pipelined `submit`/`wait` primitives;
 //! * [`loadgen`] — load generators: open-loop Poisson request traffic
@@ -39,14 +43,22 @@
 pub mod client;
 pub mod loadgen;
 pub mod proto;
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub mod reactor;
 pub mod server;
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub mod sys;
 
-pub use client::{Client, ClientConfig, Outcome};
+pub use client::{Client, ClientConfig, Outcome, Request, Ticket};
 pub use loadgen::{
-    ClLoadConfig, ClLoadReport, LoadReport, LoadgenConfig, StreamLoadConfig, StreamReport,
+    ClLoadConfig, ClLoadReport, FanoutConfig, FanoutReport, LoadReport, LoadgenConfig,
+    StreamLoadConfig, StreamReport,
 };
 pub use proto::{
     BatchItem, ErrorCode, FlightEventWire, HealthWire, MetricsWire, OpMetricsWire, RequestFrame,
     ResponseFrame, SessionInfoWire, StatWire, WireDecision, WireReply, WireRequest, WireResponse,
 };
-pub use server::{shard_of, ServeConfig, Server};
+pub use server::{
+    shard_of, shard_of_nz, Backend, ConfigError, ServeConfig, ServeConfigBuilder, Server,
+    MAX_CONN_BACKLOG,
+};

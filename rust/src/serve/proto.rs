@@ -1309,6 +1309,36 @@ pub fn decode_response(frame_body: &[u8]) -> Result<ResponseFrame> {
 /// instead of pinning its connection thread forever.
 pub const MAX_STALL_RETRIES: u32 = 40;
 
+/// Validate a decoded length prefix — shared by the blocking
+/// [`read_frame`] path and the reactor's incremental [`frame_in`] framer,
+/// so both reject hostile prefixes with identical wording.
+pub fn check_frame_len(len: usize) -> Result<()> {
+    if len < 2 {
+        bail!("frame body of {len} bytes is too short for the header");
+    }
+    if len > MAX_FRAME {
+        bail!("frame body of {len} bytes exceeds MAX_FRAME ({MAX_FRAME})");
+    }
+    Ok(())
+}
+
+/// Zero-copy incremental framing: if `buf` starts with one complete frame
+/// (length prefix + body), return the body as a subslice of `buf` —
+/// callers then consume `4 + body.len()` bytes. `Ok(None)` means the
+/// frame is still arriving (fewer than 4 bytes, or a valid prefix whose
+/// body is incomplete); `Err` means a hostile or corrupt length prefix,
+/// after which the stream can no longer be trusted.
+pub fn frame_in(buf: &[u8]) -> Result<Option<&[u8]>> {
+    let Some(prefix) = buf.get(..4) else {
+        return Ok(None);
+    };
+    let mut len_buf = [0u8; 4];
+    len_buf.copy_from_slice(prefix);
+    let len = u32::from_le_bytes(len_buf) as usize;
+    check_frame_len(len)?;
+    Ok(buf.get(4..4 + len))
+}
+
 /// Read one frame body. `Ok(None)` on clean EOF at a frame boundary;
 /// `Err` on truncation mid-frame or a malformed length prefix.
 ///
@@ -1355,12 +1385,7 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>> {
         }
     }
     let len = u32::from_le_bytes(len_buf) as usize;
-    if len < 2 {
-        bail!("frame body of {len} bytes is too short for the header");
-    }
-    if len > MAX_FRAME {
-        bail!("frame body of {len} bytes exceeds MAX_FRAME ({MAX_FRAME})");
-    }
+    check_frame_len(len)?;
     let mut buf = vec![0u8; len];
     let mut got = 0;
     let mut stalls = 0u32;
@@ -1403,6 +1428,35 @@ pub fn write_frame<W: Write>(w: &mut W, frame: &[u8]) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn frame_in_matches_read_frame_semantics() {
+        let frame = encode_request_versioned(&WireRequest::Health, VERSION, 7);
+        // Whole frame available: the body subslice is what read_frame
+        // would have produced from the same bytes.
+        let body = frame_in(&frame).unwrap().expect("complete frame");
+        let via_reader = read_frame(&mut &frame[..]).unwrap().expect("complete frame");
+        assert_eq!(body, &via_reader[..]);
+        assert_eq!(4 + body.len(), frame.len());
+        // Every strict prefix is "still arriving".
+        for cut in 0..frame.len() {
+            assert!(frame_in(&frame[..cut]).unwrap().is_none(), "cut at {cut}");
+        }
+        // Trailing bytes of the next frame are left alone.
+        let mut two = frame.clone();
+        two.extend_from_slice(&frame);
+        assert_eq!(frame_in(&two).unwrap().expect("first frame"), body);
+        // Hostile prefixes fail exactly like the blocking reader.
+        let hostile = [(1u32, "too short"), (u32::MAX, "exceeds MAX_FRAME")];
+        for (len, needle) in hostile {
+            let mut bad = len.to_le_bytes().to_vec();
+            bad.extend_from_slice(&[0u8; 8]);
+            let e = frame_in(&bad).unwrap_err().to_string();
+            assert!(e.contains(needle), "{e}");
+            let r = read_frame(&mut &bad[..]).unwrap_err().to_string();
+            assert_eq!(e, r, "frame_in and read_frame must agree on {len}");
+        }
+    }
 
     /// Every request opcode (v1 classify/learn ops through the v5 stat
     /// dump), each with an empty/minimal and a maximal-field variant —

@@ -1,0 +1,629 @@
+//! Epoll reactor serve backend: N event loops own every connection
+//! nonblockingly (DESIGN.md §Serve core).
+//!
+//! Event flow:
+//!
+//! * Loop 0 owns the (nonblocking) listener. Accepted sockets are dealt
+//!   round-robin: either registered locally or posted to a peer loop's
+//!   [`Mailbox`] followed by an eventfd wake.
+//! * Each loop multiplexes its connections with one epoll instance.
+//!   Readable sockets are drained into a per-connection read buffer and
+//!   frames are decoded zero-copy out of it (`proto::frame_in`), then
+//!   dispatched through the same `dispatch_request` routing the thread
+//!   backend uses.
+//! * Worker completions never touch a socket: the [`ReplySink`] closure
+//!   encodes the response and posts it to the owning loop's mailbox,
+//!   then writes the loop's eventfd — both nonblocking, so a coordinator
+//!   worker is never parked behind a slow peer.
+//! * The loop drains its mailbox every iteration, appends completed
+//!   frames to the connection's bounded write queue, and flushes with
+//!   `write_vectored`. `EPOLLOUT` is armed only while a partial write is
+//!   pending.
+//!
+//! Backpressure: a connection with [`MAX_CONN_BACKLOG`] responses
+//! outstanding (queued frames plus dispatched-but-uncompleted requests)
+//! drops out of the read-interest set — the server stops reading, the
+//! peer's sends stall on TCP flow control, and server memory stays
+//! bounded — exactly the thread backend's parked-reader semantics,
+//! expressed as readiness instead of a sleeping thread.
+//!
+//! Protocol semantics (versions, strict pre-v3 ordering, malformed-frame
+//! handling, EOF draining) mirror the thread backend bit for bit; the
+//! serve_e2e suites run against both.
+//!
+//! This module is reactor code: the `blocking-in-reactor` analysis rule
+//! (`chameleon check`) denies parking calls (`thread::sleep`, blocking
+//! channel reads, socket timeouts, `.lock().unwrap()`) inside it.
+
+use std::collections::{HashMap, VecDeque};
+use std::fs::File;
+use std::io::{ErrorKind, IoSlice, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::os::fd::AsRawFd;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex, PoisonError};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::serve::proto::{self, ErrorCode, WireResponse};
+use crate::serve::server::{dispatch_request, ServerState, MAX_CONN_BACKLOG};
+use crate::serve::sys::{
+    Epoll, EpollEvent, EPOLLERR, EPOLLHUP, EPOLLIN, EPOLLOUT, EPOLLRDHUP,
+};
+
+/// Epoll token of the loop's wake eventfd.
+const WAKE_TOKEN: u64 = 0;
+/// Epoll token of the listener (loop 0 only).
+const LISTENER_TOKEN: u64 = 1;
+/// First connection token; counters never wrap in practice (u64).
+const FIRST_CONN_TOKEN: u64 = 2;
+/// Socket read granularity.
+const READ_CHUNK: usize = 16 * 1024;
+/// Compact the read buffer once this many consumed bytes accumulate.
+const COMPACT_AT: usize = 64 * 1024;
+/// Events drained per `epoll_pwait`.
+const EVENTS_PER_WAIT: usize = 256;
+/// Wait backstop so a hypothetically lost wake degrades to latency, not
+/// a hang; the stop flag is also re-checked at this cadence.
+const WAIT_TIMEOUT_MS: i32 = 250;
+/// Frames coalesced into one `write_vectored` call.
+const WRITE_BATCH: usize = 32;
+/// Byte budget one readiness pass may ingest before yielding back to the
+/// event loop, so a peer that writes faster than we parse cannot balloon
+/// the read buffer inside a single pass; epoll is level-triggered, so
+/// whatever remains in the socket re-surfaces on the next wait.
+const READ_PASS_BUDGET: usize = 256 * 1024;
+
+/// One unit of cross-thread work posted to an event loop.
+enum Delivery {
+    /// Encoded response for a pipelined (v3+) request.
+    Frame { token: u64, frame: Vec<u8> },
+    /// Encoded response for a pre-v3 request — also lifts the strict
+    /// one-at-a-time parse hold its connection is under.
+    SyncFrame { token: u64, frame: Vec<u8> },
+    /// A freshly accepted connection assigned to this loop.
+    Conn(TcpStream),
+}
+
+/// A loop's inbox: completions and new connections land here from worker
+/// threads (and from loop 0's accept path), each post followed by an
+/// eventfd wake. Both operations are nonblocking.
+struct Mailbox {
+    q: Mutex<Vec<Delivery>>,
+    wake: File,
+}
+
+impl Mailbox {
+    fn post(&self, d: Delivery) {
+        self.q.lock().unwrap_or_else(PoisonError::into_inner).push(d);
+        // One 8-byte write bumps the eventfd counter. The only failure
+        // mode is counter saturation, which already guarantees a pending
+        // wake — ignoring the result is safe either way.
+        let _ = (&self.wake).write(&1u64.to_ne_bytes());
+    }
+
+    fn take_all(&self) -> Vec<Delivery> {
+        std::mem::take(&mut *self.q.lock().unwrap_or_else(PoisonError::into_inner))
+    }
+}
+
+/// Per-connection state owned by exactly one event loop.
+struct Conn {
+    stream: TcpStream,
+    /// Read buffer; bytes before `rpos` are consumed frames.
+    rbuf: Vec<u8>,
+    rpos: usize,
+    /// Encoded frames queued behind the socket (bounded by
+    /// [`MAX_CONN_BACKLOG`]); `woff` is the partial-write offset into the
+    /// front frame.
+    wq: VecDeque<Vec<u8>>,
+    woff: usize,
+    /// Requests dispatched to workers whose completions have not come
+    /// back through the mailbox yet.
+    inflight: usize,
+    /// A pre-v3 request is being resolved: parsing (and reading) holds
+    /// until its completion restores strict request/response order.
+    sync_hold: bool,
+    /// Peer sent EOF (or the read side died): no more frames, but queued
+    /// and in-flight responses still drain before the socket closes.
+    read_closed: bool,
+    /// A protocol violation was answered: flush what is queued, then
+    /// drop the connection without reading further.
+    close_after_flush: bool,
+    /// Interest mask currently registered with epoll.
+    interest: u32,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            rbuf: Vec::new(),
+            rpos: 0,
+            wq: VecDeque::new(),
+            woff: 0,
+            inflight: 0,
+            sync_hold: false,
+            read_closed: false,
+            close_after_flush: false,
+            interest: EPOLLIN | EPOLLRDHUP,
+        }
+    }
+
+    /// May this connection consume more input right now? The backlog
+    /// gate counts in-flight requests too: every one of them will come
+    /// back as a queued frame, so `wq.len() + inflight` is the true
+    /// number of responses this peer owes us room for.
+    fn reading(&self) -> bool {
+        !self.read_closed
+            && !self.close_after_flush
+            && !self.sync_hold
+            && self.wq.len() + self.inflight < MAX_CONN_BACKLOG
+    }
+
+    /// Everything owed to the peer has been delivered (or can never be):
+    /// time to close.
+    fn finished(&self) -> bool {
+        (self.read_closed || self.close_after_flush) && self.wq.is_empty() && self.inflight == 0
+    }
+}
+
+/// Outcome of one parse step over the read buffer.
+enum Parsed {
+    /// Not enough buffered bytes for the next frame.
+    Incomplete,
+    /// Hostile or corrupt length prefix.
+    BadLength(anyhow::Error),
+    /// One complete frame body was consumed.
+    Frame {
+        consumed: usize,
+        peer_version: u8,
+        request_id: u64,
+        decoded: Result<proto::RequestFrame>,
+    },
+}
+
+struct EventLoop {
+    index: usize,
+    epoll: Epoll,
+    state: Arc<ServerState>,
+    mailbox: Arc<Mailbox>,
+    /// Every loop's mailbox (index-aligned); loop 0 uses this to deal
+    /// accepted connections round-robin.
+    peers: Vec<Arc<Mailbox>>,
+    /// Loop 0 only: the shared listener.
+    listener: Option<TcpListener>,
+    rr: usize,
+    conns: HashMap<u64, Conn>,
+    next_token: u64,
+}
+
+impl EventLoop {
+    fn run(mut self) {
+        let mut events = vec![EpollEvent::zeroed(); EVENTS_PER_WAIT];
+        loop {
+            let n = self.epoll.wait(&mut events, WAIT_TIMEOUT_MS).unwrap_or(0);
+            if self.state.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            for ev in events.iter().take(n).copied() {
+                match ev.data {
+                    WAKE_TOKEN => self.drain_wake(),
+                    LISTENER_TOKEN => self.accept_ready(),
+                    token => self.conn_ready(token, ev.events),
+                }
+            }
+            self.drain_mailbox();
+        }
+        // Teardown: close every owned connection and keep the live gauge
+        // honest. Pending mailbox deliveries (streams, frames) drop with
+        // the loop.
+        let n = self.conns.len() as u64;
+        if n > 0 {
+            self.state.live_conns.fetch_sub(n, Ordering::Relaxed);
+        }
+        for (_, conn) in self.conns.drain() {
+            let _ = conn.stream.shutdown(Shutdown::Both);
+        }
+    }
+
+    /// Reset the wake eventfd counter (the payload is in the mailbox).
+    fn drain_wake(&mut self) {
+        let mut buf = [0u8; 8];
+        let _ = (&self.mailbox.wake).read(&mut buf);
+    }
+
+    /// Loop 0: accept until the listener would block, dealing sockets
+    /// round-robin across all loops.
+    fn accept_ready(&mut self) {
+        loop {
+            let accepted = match &self.listener {
+                Some(l) => l.accept(),
+                None => return,
+            };
+            match accepted {
+                Ok((stream, _)) => {
+                    let target = self.rr % self.peers.len();
+                    self.rr = self.rr.wrapping_add(1);
+                    if target == self.index {
+                        self.adopt(stream);
+                    } else {
+                        self.peers[target].post(Delivery::Conn(stream));
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                // Transient accept failures (e.g. fd exhaustion): epoll is
+                // level-triggered, so pending connections re-surface on
+                // the next wait.
+                Err(_) => return,
+            }
+        }
+    }
+
+    /// Take ownership of a new connection: nonblocking, nodelay,
+    /// registered for reads under a fresh token.
+    fn adopt(&mut self, stream: TcpStream) {
+        if stream.set_nonblocking(true).is_err() {
+            return; // peer already gone
+        }
+        stream.set_nodelay(true).ok();
+        let conn = Conn::new(stream);
+        let token = self.next_token;
+        self.next_token += 1;
+        if self.epoll.add(conn.stream.as_raw_fd(), conn.interest, token).is_err() {
+            return; // dropping the stream closes it
+        }
+        self.state.live_conns.fetch_add(1, Ordering::Relaxed);
+        self.conns.insert(token, conn);
+    }
+
+    /// Readiness on a connection socket. The connection is checked out of
+    /// the map while driven, so completion posts for it made on this
+    /// thread (inline `Health`/`Metrics`/`Stat` dispatch) stay queued in
+    /// the mailbox until it is checked back in.
+    fn conn_ready(&mut self, token: u64, ready: u32) {
+        let Some(mut conn) = self.conns.remove(&token) else {
+            return; // already closed; stale event
+        };
+        let alive = ready & EPOLLERR == 0 && self.drive(token, &mut conn, ready);
+        self.checkin(token, conn, alive);
+    }
+
+    /// Re-register (or close) a checked-out connection.
+    fn checkin(&mut self, token: u64, mut conn: Conn, alive: bool) {
+        if alive {
+            self.update_interest(token, &mut conn);
+            self.conns.insert(token, conn);
+        } else {
+            let _ = self.epoll.del(conn.stream.as_raw_fd());
+            let _ = conn.stream.shutdown(Shutdown::Both);
+            self.state.live_conns.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+
+    /// One full service pass: ingest readable bytes, parse + dispatch
+    /// frames, flush writable frames. Returns false once the connection
+    /// should be dropped.
+    fn drive(&mut self, token: u64, conn: &mut Conn, ready: u32) -> bool {
+        if ready & (EPOLLIN | EPOLLRDHUP | EPOLLHUP) != 0 {
+            fill_read_buffer(conn);
+        }
+        self.process_buffer(token, conn);
+        if flush_writes(conn).is_err() {
+            return false;
+        }
+        // Flushing may have released the backlog gate: parse what is
+        // already buffered rather than waiting for new readiness.
+        self.process_buffer(token, conn);
+        if flush_writes(conn).is_err() {
+            return false;
+        }
+        !conn.finished()
+    }
+
+    /// Decode and dispatch every complete frame the connection may
+    /// currently consume.
+    fn process_buffer(&mut self, token: u64, conn: &mut Conn) {
+        while conn.reading() {
+            let parsed = {
+                let avail = &conn.rbuf[conn.rpos..];
+                match proto::frame_in(avail) {
+                    Ok(None) => Parsed::Incomplete,
+                    Err(e) => Parsed::BadLength(e),
+                    Ok(Some(body)) => Parsed::Frame {
+                        consumed: 4 + body.len(),
+                        // Reply at the requester's protocol version
+                        // (first body byte) with its tag echoed, so every
+                        // peer receives frames it can decode.
+                        peer_version: body.first().copied().unwrap_or(proto::VERSION),
+                        request_id: proto::peek_request_id(body),
+                        decoded: proto::decode_request(body),
+                    },
+                }
+            };
+            match parsed {
+                Parsed::Incomplete => break,
+                Parsed::BadLength(e) => {
+                    // Hostile or corrupt length prefix: tell the client,
+                    // stop trusting the stream.
+                    let resp = WireResponse::Error {
+                        code: ErrorCode::Malformed,
+                        message: format!("{e:#}"),
+                    };
+                    enqueue_frame(&self.state, conn, proto::encode_response(&resp));
+                    conn.close_after_flush = true;
+                    break;
+                }
+                Parsed::Frame { consumed, peer_version, request_id, decoded } => {
+                    conn.rpos += consumed;
+                    match decoded {
+                        Ok(frame) if frame.version >= 3 => {
+                            // v3: pipelined. Dispatch and keep parsing;
+                            // the completion lands via the mailbox.
+                            conn.inflight += 1;
+                            let out = completion(
+                                self.mailbox.clone(),
+                                token,
+                                frame.version,
+                                frame.request_id,
+                                false,
+                            );
+                            dispatch_request(frame.req, &self.state, out);
+                        }
+                        Ok(frame) => {
+                            // v1/v2 peers expect strict in-order
+                            // request/response: hold further parsing
+                            // until this one's completion arrives.
+                            conn.inflight += 1;
+                            conn.sync_hold = true;
+                            let out =
+                                completion(self.mailbox.clone(), token, frame.version, 0, true);
+                            dispatch_request(frame.req, &self.state, out);
+                        }
+                        Err(e) => {
+                            // Malformed payload: answer then close — the
+                            // framing can no longer be trusted.
+                            let resp = WireResponse::Error {
+                                code: ErrorCode::Malformed,
+                                message: format!("{e:#}"),
+                            };
+                            let encoded =
+                                proto::encode_response_versioned(&resp, peer_version, request_id);
+                            enqueue_frame(&self.state, conn, encoded);
+                            conn.close_after_flush = true;
+                        }
+                    }
+                }
+            }
+        }
+        // Reclaim consumed bytes without shifting on every frame.
+        if conn.rpos == conn.rbuf.len() {
+            conn.rbuf.clear();
+            conn.rpos = 0;
+        } else if conn.rpos >= COMPACT_AT {
+            conn.rbuf.drain(..conn.rpos);
+            conn.rpos = 0;
+        }
+    }
+
+    /// Apply queued deliveries. Runs every loop iteration; keeps taking
+    /// until the mailbox is empty because applying one delivery can post
+    /// another (inline `Health`/`Metrics`/`Stat` completions from a
+    /// resumed parse).
+    fn drain_mailbox(&mut self) {
+        loop {
+            let batch = self.mailbox.take_all();
+            if batch.is_empty() {
+                return;
+            }
+            for d in batch {
+                match d {
+                    Delivery::Conn(stream) => self.adopt(stream),
+                    Delivery::Frame { token, frame } => self.deliver(token, frame, false),
+                    Delivery::SyncFrame { token, frame } => self.deliver(token, frame, true),
+                }
+            }
+        }
+    }
+
+    /// Hand one completed response frame to its connection: queue it,
+    /// flush opportunistically, and (for pre-v3 completions) resume the
+    /// held parse. Completions for already-closed connections drop here.
+    fn deliver(&mut self, token: u64, frame: Vec<u8>, sync: bool) {
+        let Some(mut conn) = self.conns.remove(&token) else {
+            return;
+        };
+        conn.inflight = conn.inflight.saturating_sub(1);
+        if sync {
+            conn.sync_hold = false;
+        }
+        enqueue_frame(&self.state, &mut conn, frame);
+        let mut alive = flush_writes(&mut conn).is_ok();
+        if alive {
+            // A lifted sync hold (or freed backlog) may unblock frames
+            // that are already buffered.
+            self.process_buffer(token, &mut conn);
+            alive = flush_writes(&mut conn).is_ok() && !conn.finished();
+        }
+        self.checkin(token, conn, alive);
+    }
+
+    /// Sync the registered epoll interest with what the connection can
+    /// currently make progress on.
+    fn update_interest(&mut self, token: u64, conn: &mut Conn) {
+        let mut want = 0u32;
+        if conn.reading() {
+            want |= EPOLLIN | EPOLLRDHUP;
+        }
+        if !conn.wq.is_empty() {
+            want |= EPOLLOUT;
+        }
+        if want != conn.interest
+            && self.epoll.modify(conn.stream.as_raw_fd(), want, token).is_ok()
+        {
+            conn.interest = want;
+        }
+    }
+}
+
+/// Build the completion callback for one request: encode at the peer's
+/// version with its tag and post to the owning loop's mailbox. Runs on
+/// whatever thread finishes the request; never blocks it.
+fn completion(
+    mailbox: Arc<Mailbox>,
+    token: u64,
+    version: u8,
+    request_id: u64,
+    sync: bool,
+) -> impl FnOnce(WireResponse) + Send + 'static {
+    move |resp: WireResponse| {
+        let frame = proto::encode_response_versioned(&resp, version, request_id);
+        let d = if sync {
+            Delivery::SyncFrame { token, frame }
+        } else {
+            Delivery::Frame { token, frame }
+        };
+        mailbox.post(d);
+    }
+}
+
+/// Queue one encoded frame on the connection and bump the server-wide
+/// backlog high-water mark (the v5 `backlog_hwm` gauge).
+fn enqueue_frame(state: &ServerState, conn: &mut Conn, frame: Vec<u8>) {
+    conn.wq.push_back(frame);
+    state.backlog_hwm.fetch_max(conn.wq.len() as u64, Ordering::Relaxed);
+}
+
+/// Slurp what the socket currently holds into the read buffer, stopping
+/// at the backlog gate or the per-pass byte budget. EOF and fatal errors
+/// mark the read side closed; queued responses still drain.
+fn fill_read_buffer(conn: &mut Conn) {
+    let mut budget = READ_PASS_BUDGET;
+    while conn.reading() && budget > 0 {
+        let len = conn.rbuf.len();
+        conn.rbuf.resize(len + READ_CHUNK.min(budget), 0);
+        match conn.stream.read(&mut conn.rbuf[len..]) {
+            Ok(0) => {
+                conn.rbuf.truncate(len);
+                conn.read_closed = true;
+                return;
+            }
+            Ok(n) => {
+                conn.rbuf.truncate(len + n);
+                budget -= n;
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                conn.rbuf.truncate(len);
+                return;
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => conn.rbuf.truncate(len),
+            Err(_) => {
+                // Peer vanished mid-stream: same as EOF for our purposes.
+                conn.rbuf.truncate(len);
+                conn.read_closed = true;
+                return;
+            }
+        }
+    }
+}
+
+/// Drain the write queue with vectored writes until it empties or the
+/// socket would block. `Err` means the peer is gone.
+fn flush_writes(conn: &mut Conn) -> std::io::Result<()> {
+    while !conn.wq.is_empty() {
+        let mut slices: Vec<IoSlice<'_>> = Vec::with_capacity(conn.wq.len().min(WRITE_BATCH));
+        for (i, frame) in conn.wq.iter().take(WRITE_BATCH).enumerate() {
+            let part = if i == 0 { &frame[conn.woff..] } else { &frame[..] };
+            slices.push(IoSlice::new(part));
+        }
+        match conn.stream.write_vectored(&slices) {
+            Ok(0) => return Err(std::io::Error::from(ErrorKind::WriteZero)),
+            Ok(mut n) => {
+                // Advance the queue past the bytes the kernel took.
+                while n > 0 {
+                    let Some(front) = conn.wq.front() else { break };
+                    let remaining = front.len() - conn.woff;
+                    if n >= remaining {
+                        n -= remaining;
+                        conn.wq.pop_front();
+                        conn.woff = 0;
+                    } else {
+                        conn.woff += n;
+                        break;
+                    }
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(()),
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+/// Handle to the running event loops; owned by `Server`.
+pub(crate) struct Reactor {
+    mailboxes: Vec<Arc<Mailbox>>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl Reactor {
+    /// Spin up `nloops` event loops (loop 0 adopts the listener). The
+    /// server state's `stop` flag plus [`Reactor::shutdown`] tears them
+    /// down.
+    pub(crate) fn start(
+        listener: TcpListener,
+        state: Arc<ServerState>,
+        nloops: usize,
+    ) -> Result<Reactor> {
+        listener.set_nonblocking(true).context("setting listener nonblocking")?;
+        let n = nloops.max(1);
+        let mut mailboxes = Vec::with_capacity(n);
+        for _ in 0..n {
+            let wake = crate::serve::sys::eventfd().context("creating wake eventfd")?;
+            mailboxes.push(Arc::new(Mailbox { q: Mutex::new(Vec::new()), wake }));
+        }
+        let mut listener = Some(listener);
+        let mut threads = Vec::with_capacity(n);
+        for (i, mailbox) in mailboxes.iter().enumerate() {
+            let epoll = Epoll::new().context("creating epoll instance")?;
+            epoll
+                .add(mailbox.wake.as_raw_fd(), EPOLLIN, WAKE_TOKEN)
+                .context("registering wake eventfd")?;
+            let own_listener = if i == 0 { listener.take() } else { None };
+            if let Some(l) = &own_listener {
+                epoll.add(l.as_raw_fd(), EPOLLIN, LISTENER_TOKEN).context("registering listener")?;
+            }
+            let ev = EventLoop {
+                index: i,
+                epoll,
+                state: state.clone(),
+                mailbox: mailbox.clone(),
+                peers: mailboxes.clone(),
+                listener: own_listener,
+                rr: 0,
+                conns: HashMap::new(),
+                next_token: FIRST_CONN_TOKEN,
+            };
+            let t = std::thread::Builder::new()
+                .name(format!("chameleon-reactor-{i}"))
+                .spawn(move || ev.run())
+                .map_err(|e| anyhow!("spawning reactor loop {i}: {e}"))?;
+            threads.push(t);
+        }
+        Ok(Reactor { mailboxes, threads })
+    }
+
+    /// Wake every loop (the caller has already set the stop flag) and
+    /// join them; loops close their connections on the way out.
+    pub(crate) fn shutdown(&mut self) {
+        for mb in &self.mailboxes {
+            let _ = (&mb.wake).write(&1u64.to_ne_bytes());
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}

@@ -1,15 +1,26 @@
-//! Thread-per-connection TCP server fronting N sharded [`Coordinator`]s,
-//! with per-connection request pipelining (protocol v3).
+//! TCP server fronting N sharded [`Coordinator`]s, with per-connection
+//! request pipelining (protocol v3) and two interchangeable transport
+//! [`Backend`]s behind one [`ServeConfig`] (DESIGN.md §Serve core):
 //!
-//! Connection anatomy: the connection thread is the **reader** — it
-//! decodes frames and dispatches them; a dedicated **writer** thread owns
-//! the write side behind an mpsc channel. A v3 request is submitted to its
-//! shard with a [`ReplySink`] that encodes the response (tagged with the
-//! request's id) and enqueues it on the writer *from the worker thread
-//! that finished it* — so one connection can keep many requests in flight
-//! and responses return in completion order, possibly out of order.
-//! Pre-v3 frames are resolved one at a time in arrival order, preserving
-//! the strict request/response discipline those clients expect.
+//! * [`Backend::Reactor`] (default on Linux x86_64/aarch64) — a small
+//!   set of epoll event loops owning every connection nonblockingly;
+//!   see `serve::reactor` for the event flow.
+//! * [`Backend::Threads`] (portable fallback, `CHAMELEON_SERVE_BACKEND=
+//!   threads` to force) — the original thread-per-connection model,
+//!   implemented in this module.
+//!
+//! Thread-backend connection anatomy: the connection thread is the
+//! **reader** — it decodes frames and dispatches them; a dedicated
+//! **writer** thread owns the write side behind an mpsc channel. A v3
+//! request is submitted to its shard with a [`ReplySink`] that encodes
+//! the response (tagged with the request's id) and enqueues it on the
+//! writer *from the worker thread that finished it* — so one connection
+//! can keep many requests in flight and responses return in completion
+//! order, possibly out of order. Pre-v3 frames are resolved one at a
+//! time in arrival order, preserving the strict request/response
+//! discipline those clients expect. Both backends share the dispatch,
+//! routing, metrics and backpressure semantics below — the serve_e2e
+//! suites are the oracle that keeps them bit-for-bit interchangeable.
 //!
 //! Sharding: session-scoped requests (`ClassifySession`, `LearnWay`,
 //! `EvictSession`, stream ops) route by a stable hash of the `SessionId`
@@ -25,8 +36,10 @@
 //! the remaining shards (a single full shard is not cluster overload);
 //! only when every shard rejects does the client see `Overloaded`.
 
+use std::fmt;
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::num::NonZeroUsize;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
@@ -39,12 +52,80 @@ use crate::coordinator::metrics::{Metrics, MetricsSnapshot, OpKind};
 use crate::coordinator::server::{
     Coordinator, CoordinatorConfig, EngineFactory, ReplySink, Request, SubmitError,
 };
+use crate::coordinator::OpMode;
 use crate::serve::proto::{
     self, BatchItem, ErrorCode, FlightEventWire, HealthWire, MetricsWire, StatWire, WireDecision,
     WireReply, WireRequest, WireResponse,
 };
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+use crate::serve::reactor;
 
-/// Serving configuration.
+/// Transport backend behind the serve layer's TCP listener.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Epoll readiness loops (Linux x86_64/aarch64 only): a small set of
+    /// event loops own every connection nonblockingly — thousands of
+    /// low-duty-cycle connections per node. See `serve::reactor`.
+    Reactor,
+    /// Thread-per-connection fallback (reader + writer thread per
+    /// socket). Portable everywhere; identical wire semantics.
+    Threads,
+}
+
+impl Backend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Reactor => "reactor",
+            Backend::Threads => "threads",
+        }
+    }
+
+    /// Whether the epoll reactor exists on this build target.
+    pub const fn reactor_supported() -> bool {
+        cfg!(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))
+    }
+}
+
+/// Typed validation failure from [`ServeConfigBuilder::build`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConfigError {
+    /// `shards == 0`: there would be no coordinator to route to.
+    ZeroShards,
+    /// `workers_per_shard == 0`: a shard with no engine replicas.
+    ZeroWorkers,
+    /// `queue_depth == 0`: every submission would be rejected.
+    ZeroQueueDepth,
+    /// `max_sessions == 0`: no session could ever be admitted.
+    ZeroSessions,
+    /// `flight_capacity == 0`: the flight-recorder ring needs a slot.
+    ZeroFlightCapacity,
+    /// Empty bind address.
+    EmptyAddr,
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            ConfigError::ZeroShards => "shards must be >= 1",
+            ConfigError::ZeroWorkers => "workers_per_shard must be >= 1",
+            ConfigError::ZeroQueueDepth => "queue_depth must be >= 1",
+            ConfigError::ZeroSessions => "max_sessions must be >= 1",
+            ConfigError::ZeroFlightCapacity => "flight_capacity must be >= 1",
+            ConfigError::EmptyAddr => "bind address must not be empty",
+        })
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// Serving configuration — the one config surface for the serve layer.
+///
+/// Prefer [`ServeConfig::builder`], which validates into a typed
+/// [`ConfigError`]; the fields stay public (with `..Default::default()`
+/// struct literals still supported) for embedders that know what they
+/// are doing. The per-shard [`CoordinatorConfig`] is derived from this
+/// via [`ServeConfig::coordinator_config`] — it is an internal detail of
+/// the serve layer, not a second configuration surface.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     /// Bind address; use port 0 for an ephemeral port (tests).
@@ -60,14 +141,24 @@ pub struct ServeConfig {
     /// Per-session prototype-memory budget in bytes (0 = unbounded) — the
     /// continual-learning way cap, enforced per session on its shard.
     pub way_budget_bytes: usize,
-    /// Per-connection socket read timeout; connections poll the shutdown
-    /// flag at this granularity.
+    /// Per-connection socket read timeout (thread backend only; the
+    /// reactor is readiness-driven and needs no timeout). Thread-backend
+    /// connections poll the shutdown flag at this granularity.
     pub read_timeout: Duration,
     /// Service-time threshold (µs) past which a request lands in the
     /// flight recorder as a slow-request event (0 = off).
     pub slow_request_us: u64,
     /// Flight-recorder ring capacity per shard.
     pub flight_capacity: usize,
+    /// Operating point the engine replicas should run at (the paper's
+    /// dual-mode array as serve configuration). Consumed by the engine
+    /// factories the embedder builds — [`Server::start`] itself is
+    /// operating-point agnostic.
+    pub op_mode: OpMode,
+    /// Transport backend. `None` resolves at [`Server::start`]: the
+    /// `CHAMELEON_SERVE_BACKEND` env var (`reactor` / `threads`) if set,
+    /// else the reactor where supported and threads elsewhere.
+    pub backend: Option<Backend>,
 }
 
 impl Default for ServeConfig {
@@ -82,43 +173,224 @@ impl Default for ServeConfig {
             read_timeout: Duration::from_millis(250),
             slow_request_us: 100_000,
             flight_capacity: DEFAULT_FLIGHT_CAPACITY,
+            op_mode: OpMode::Paced,
+            backend: None,
         }
     }
 }
 
-/// Stable shard assignment for a session id (SplitMix64 finalizer — the
-/// same mix every client/server version computes, so the mapping is part
-/// of the protocol contract rather than process state).
-pub fn shard_of(session: u64, shards: usize) -> usize {
+impl ServeConfig {
+    /// Start building a validated config from the defaults.
+    pub fn builder() -> ServeConfigBuilder {
+        ServeConfigBuilder { cfg: ServeConfig::default() }
+    }
+
+    /// The per-shard coordinator tuning derived from this config.
+    /// Everything under `serve` builds its [`Coordinator`]s from here;
+    /// only embedders driving a bare coordinator (no TCP front) should
+    /// construct a [`CoordinatorConfig`] by hand.
+    pub fn coordinator_config(&self) -> CoordinatorConfig {
+        CoordinatorConfig {
+            workers: self.workers_per_shard.max(1),
+            queue_depth: self.queue_depth.max(1),
+            max_sessions: self.max_sessions.max(1),
+            way_budget_bytes: self.way_budget_bytes,
+            slow_request_us: self.slow_request_us,
+            flight_capacity: self.flight_capacity.max(1),
+        }
+    }
+
+    /// Resolve the transport backend this config will serve with:
+    /// explicit [`ServeConfig::backend`] wins, then the
+    /// `CHAMELEON_SERVE_BACKEND` env var, then the platform default. A
+    /// reactor request on a target without epoll degrades to threads
+    /// instead of failing — the two backends are semantically
+    /// interchangeable.
+    pub fn resolved_backend(&self) -> Backend {
+        let requested = self.backend.or_else(|| {
+            match std::env::var("CHAMELEON_SERVE_BACKEND").ok().as_deref() {
+                Some("reactor") => Some(Backend::Reactor),
+                Some("threads") => Some(Backend::Threads),
+                _ => None,
+            }
+        });
+        match requested {
+            Some(Backend::Threads) => Backend::Threads,
+            Some(Backend::Reactor) | None => {
+                if Backend::reactor_supported() {
+                    Backend::Reactor
+                } else {
+                    Backend::Threads
+                }
+            }
+        }
+    }
+}
+
+/// Builder for [`ServeConfig`] (`ServeConfig::builder()`): the validated
+/// construction path, collapsing what used to be spread over `ServeConfig`
+/// struct literals, `CoordinatorConfig` and CLI flags.
+#[derive(Debug, Clone)]
+pub struct ServeConfigBuilder {
+    cfg: ServeConfig,
+}
+
+impl ServeConfigBuilder {
+    /// Bind address (port 0 for ephemeral).
+    pub fn addr(mut self, addr: impl Into<String>) -> Self {
+        self.cfg.addr = addr.into();
+        self
+    }
+
+    /// Number of coordinator shards (also the reactor's event-loop count).
+    pub fn shards(mut self, n: usize) -> Self {
+        self.cfg.shards = n;
+        self
+    }
+
+    /// Engine worker threads per shard.
+    pub fn workers_per_shard(mut self, n: usize) -> Self {
+        self.cfg.workers_per_shard = n;
+        self
+    }
+
+    /// Bounded queue depth per shard.
+    pub fn queue_depth(mut self, n: usize) -> Self {
+        self.cfg.queue_depth = n;
+        self
+    }
+
+    /// LRU session cap per shard.
+    pub fn max_sessions(mut self, n: usize) -> Self {
+        self.cfg.max_sessions = n;
+        self
+    }
+
+    /// Per-session prototype-memory budget in bytes (0 = unbounded).
+    pub fn way_budget(mut self, bytes: usize) -> Self {
+        self.cfg.way_budget_bytes = bytes;
+        self
+    }
+
+    /// Thread-backend socket read timeout / shutdown poll granularity.
+    pub fn read_timeout(mut self, t: Duration) -> Self {
+        self.cfg.read_timeout = t;
+        self
+    }
+
+    /// Slow-request flight-recorder threshold in µs (0 = off).
+    pub fn slow_request_us(mut self, us: u64) -> Self {
+        self.cfg.slow_request_us = us;
+        self
+    }
+
+    /// Flight-recorder ring capacity per shard.
+    pub fn flight_capacity(mut self, n: usize) -> Self {
+        self.cfg.flight_capacity = n;
+        self
+    }
+
+    /// Operating point for the engine replicas (paced or turbo).
+    pub fn op_mode(mut self, m: OpMode) -> Self {
+        self.cfg.op_mode = m;
+        self
+    }
+
+    /// Pin the transport backend (default: auto-resolve; see
+    /// [`ServeConfig::resolved_backend`]).
+    pub fn backend(mut self, b: Backend) -> Self {
+        self.cfg.backend = Some(b);
+        self
+    }
+
+    /// Validate and produce the config.
+    pub fn build(self) -> std::result::Result<ServeConfig, ConfigError> {
+        let c = &self.cfg;
+        if c.addr.is_empty() {
+            return Err(ConfigError::EmptyAddr);
+        }
+        if c.shards == 0 {
+            return Err(ConfigError::ZeroShards);
+        }
+        if c.workers_per_shard == 0 {
+            return Err(ConfigError::ZeroWorkers);
+        }
+        if c.queue_depth == 0 {
+            return Err(ConfigError::ZeroQueueDepth);
+        }
+        if c.max_sessions == 0 {
+            return Err(ConfigError::ZeroSessions);
+        }
+        if c.flight_capacity == 0 {
+            return Err(ConfigError::ZeroFlightCapacity);
+        }
+        Ok(self.cfg)
+    }
+}
+
+/// Stable shard assignment for a session id, checked form (SplitMix64
+/// finalizer — the same mix every client/server version computes, so the
+/// mapping is part of the protocol contract rather than process state).
+/// The shard count is a [`NonZeroUsize`]: the `shards == 0` modulo
+/// failure is unrepresentable by type instead of guarded at runtime.
+pub fn shard_of_nz(session: u64, shards: NonZeroUsize) -> usize {
     let mut z = session.wrapping_add(0x9E37_79B9_7F4A_7C15);
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
     z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
     z ^= z >> 31;
-    (z % shards.max(1) as u64) as usize
+    (z % shards.get() as u64) as usize
 }
 
-struct ServerState {
+/// Untyped compatibility wrapper over [`shard_of_nz`]. A `shards` of
+/// zero — a caller bug the old signature silently folded into `% 1` — is
+/// mapped to shard 0; server-internal routing goes through the checked
+/// form and never takes that branch.
+pub fn shard_of(session: u64, shards: usize) -> usize {
+    NonZeroUsize::new(shards).map_or(0, |n| shard_of_nz(session, n))
+}
+
+pub(crate) struct ServerState {
     shards: Vec<Coordinator>,
     /// Worker replicas per shard — sizes `ClassifyBatch` sub-batching so
     /// a batch can occupy every replica, not one per shard.
     workers_per_shard: usize,
+    /// Checked shard count (`== shards.len()`): session routing goes
+    /// through the typed [`shard_of_nz`] with no runtime guard.
+    nshards: NonZeroUsize,
     rr: AtomicUsize,
-    stop: AtomicBool,
-    live_conns: AtomicU64,
+    pub(crate) stop: AtomicBool,
+    pub(crate) live_conns: AtomicU64,
     read_timeout: Duration,
     /// Highest writer backlog (queued-not-yet-written frames) any
     /// connection has reached — behind an `Arc` so every connection's
-    /// [`ConnFlow`] can bump it from worker threads. Surfaces in the v5
-    /// `Metrics` payload as `backlog_hwm`.
-    backlog_hwm: Arc<AtomicU64>,
+    /// [`ConnFlow`] can bump it from worker threads (the reactor bumps it
+    /// from its event loops). Surfaces in the v5 `Metrics` payload as
+    /// `backlog_hwm`.
+    pub(crate) backlog_hwm: Arc<AtomicU64>,
 }
 
-/// Running server handle. `shutdown()` (or drop) stops the accept loop;
+impl ServerState {
+    /// The coordinator shard owning `session` — the one place session ids
+    /// meet the shard count, via the checked [`shard_of_nz`].
+    fn shard_for(&self, session: u64) -> &Coordinator {
+        &self.shards[shard_of_nz(session, self.nshards)]
+    }
+}
+
+/// The running transport: who owns the listener and the connections.
+enum Transport {
+    Threads { accept: JoinHandle<()> },
+    #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+    Reactor(reactor::Reactor),
+}
+
+/// Running server handle. `shutdown()` (or drop) stops the transport;
 /// coordinator workers wind down once the last connection drains.
 pub struct Server {
     state: Arc<ServerState>,
     addr: SocketAddr,
-    accept_thread: Option<JoinHandle<()>>,
+    backend: Backend,
+    transport: Option<Transport>,
 }
 
 impl Server {
@@ -133,43 +405,51 @@ impl Server {
             let factories: Vec<EngineFactory> = (0..cfg.workers_per_shard.max(1))
                 .map(|worker| engines(shard, worker))
                 .collect();
-            let coord = Coordinator::start(
-                factories,
-                CoordinatorConfig {
-                    workers: cfg.workers_per_shard.max(1),
-                    queue_depth: cfg.queue_depth,
-                    max_sessions: cfg.max_sessions,
-                    way_budget_bytes: cfg.way_budget_bytes,
-                    slow_request_us: cfg.slow_request_us,
-                    flight_capacity: cfg.flight_capacity,
-                },
-            )
-            .with_context(|| format!("starting shard {shard}"))?;
+            let coord = Coordinator::start(factories, cfg.coordinator_config())
+                .with_context(|| format!("starting shard {shard}"))?;
             shards.push(coord);
         }
         let listener = TcpListener::bind(&cfg.addr)
             .with_context(|| format!("binding {}", cfg.addr))?;
         let addr = listener.local_addr()?;
+        let nshards = NonZeroUsize::new(shards.len())
+            .ok_or_else(|| anyhow!("config produced zero shards"))?;
         let state = Arc::new(ServerState {
             shards,
             workers_per_shard: cfg.workers_per_shard.max(1),
+            nshards,
             rr: AtomicUsize::new(0),
             stop: AtomicBool::new(false),
             live_conns: AtomicU64::new(0),
             read_timeout: cfg.read_timeout,
             backlog_hwm: Arc::new(AtomicU64::new(0)),
         });
-        let accept_state = state.clone();
-        let accept_thread = std::thread::Builder::new()
-            .name("chameleon-accept".to_string())
-            .spawn(move || accept_loop(listener, accept_state))
-            .map_err(|e| anyhow!("spawning accept loop: {e}"))?;
-        Ok(Server { state, addr, accept_thread: Some(accept_thread) })
+        let backend = cfg.resolved_backend();
+        let transport = match backend {
+            Backend::Threads => Transport::Threads { accept: spawn_accept(listener, &state)? },
+            #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+            Backend::Reactor => Transport::Reactor(reactor::Reactor::start(
+                listener,
+                state.clone(),
+                cfg.shards.max(1),
+            )?),
+            // resolved_backend() never yields Reactor on targets without
+            // epoll; keep the arm total anyway so the match is platform
+            // independent.
+            #[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+            Backend::Reactor => Transport::Threads { accept: spawn_accept(listener, &state)? },
+        };
+        Ok(Server { state, addr, backend, transport: Some(transport) })
     }
 
     /// The bound address (resolves port 0).
     pub fn local_addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// The transport backend this server resolved to (reactor or threads).
+    pub fn backend(&self) -> Backend {
+        self.backend
     }
 
     pub fn shard_count(&self) -> usize {
@@ -192,27 +472,43 @@ impl Server {
         stat_dump(&self.state)
     }
 
-    /// Stop accepting; existing connections drain at their next timeout.
+    /// Stop the transport. Thread backend: stops accepting, existing
+    /// connections drain at their next timeout. Reactor: wakes every
+    /// event loop, which closes its connections and exits.
     pub fn shutdown(mut self) {
-        self.stop_accept();
+        self.stop_transport();
     }
 
-    fn stop_accept(&mut self) {
+    fn stop_transport(&mut self) {
         self.state.stop.store(true, Ordering::SeqCst);
-        // Wake the blocking accept with a throwaway connection.
-        let _ = TcpStream::connect(self.addr);
-        if let Some(t) = self.accept_thread.take() {
-            let _ = t.join();
+        match self.transport.take() {
+            Some(Transport::Threads { accept }) => {
+                // Wake the blocking accept with a throwaway connection.
+                let _ = TcpStream::connect(self.addr);
+                let _ = accept.join();
+            }
+            #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+            Some(Transport::Reactor(mut r)) => r.shutdown(),
+            None => {}
         }
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        if self.accept_thread.is_some() {
-            self.stop_accept();
+        if self.transport.is_some() {
+            self.stop_transport();
         }
     }
+}
+
+/// Spawn the thread-backend accept loop.
+fn spawn_accept(listener: TcpListener, state: &Arc<ServerState>) -> Result<JoinHandle<()>> {
+    let accept_state = state.clone();
+    std::thread::Builder::new()
+        .name("chameleon-accept".to_string())
+        .spawn(move || accept_loop(listener, accept_state))
+        .map_err(|e| anyhow!("spawning accept loop: {e}"))
 }
 
 fn aggregate(shards: &[Coordinator]) -> MetricsSnapshot {
@@ -283,8 +579,10 @@ fn accept_loop(listener: TcpListener, state: Arc<ServerState>) {
 /// the reader stops accepting new requests. Restores the TCP backpressure
 /// the pre-pipelining inline-write design had: a peer that floods
 /// requests without reading its responses parks the reader at this bound
-/// instead of growing the response queue without limit.
-const MAX_CONN_BACKLOG: usize = 1024;
+/// (thread backend) or drops out of the read-interest set (reactor)
+/// instead of growing the response queue without limit. Public so tests
+/// and capacity planning can reference the exact bound.
+pub const MAX_CONN_BACKLOG: usize = 1024;
 
 /// Shared reader/writer accounting for one connection's response queue.
 struct ConnFlow {
@@ -473,8 +771,10 @@ fn handle_sync(req: WireRequest, state: &ServerState) -> WireResponse {
 
 /// Route one request. `out` is invoked exactly once with the response —
 /// possibly on this thread (`Health`/`Metrics`/`Stat`, submit failures),
-/// possibly on a worker thread (everything that reaches a shard).
-fn dispatch_request<F>(req: WireRequest, state: &ServerState, out: F)
+/// possibly on a worker thread (everything that reaches a shard). Both
+/// transport backends funnel through here, so routing, fan-over and
+/// metrics semantics cannot drift between them.
+pub(crate) fn dispatch_request<F>(req: WireRequest, state: &ServerState, out: F)
 where
     F: FnOnce(WireResponse) + Send + 'static,
 {
@@ -485,17 +785,13 @@ where
         }
         WireRequest::ClassifySession { session, input } => {
             let reply = ReplySink::call(move |res| out(fold_response(res)));
-            submit_or_reject(
-                &state.shards[shard_of(session, n)],
-                Request::ClassifySession { session, input, reply },
-            );
+            let shard = state.shard_for(session);
+            submit_or_reject(shard, Request::ClassifySession { session, input, reply });
         }
         WireRequest::LearnWay { session, shots } => {
             let reply = ReplySink::call(move |res| out(fold_response(res)));
-            submit_or_reject(
-                &state.shards[shard_of(session, n)],
-                Request::LearnWay { session, shots, reply },
-            );
+            let shard = state.shard_for(session);
+            submit_or_reject(shard, Request::LearnWay { session, shots, reply });
         }
         // Continual-learning ops are session-scoped like LearnWay: the
         // same stable hash keeps a session's accumulators on one shard.
@@ -505,10 +801,10 @@ where
             // exceeds usize, a plain cast would silently wrap onto an
             // unrelated (likely existing) way — reject instead.
             match usize::try_from(way) {
-                Ok(way) => submit_or_reject(
-                    &state.shards[shard_of(session, n)],
-                    Request::AddShots { session, way, shots, reply },
-                ),
+                Ok(way) => {
+                    let shard = state.shard_for(session);
+                    submit_or_reject(shard, Request::AddShots { session, way, shots, reply });
+                }
                 Err(_) => {
                     let e = anyhow!("way {way} exceeds this host's addressable range");
                     reply.deliver(Err(e));
@@ -517,17 +813,11 @@ where
         }
         WireRequest::SessionInfo { session } => {
             let reply = ReplySink::call(move |res| out(fold_response(res)));
-            submit_or_reject(
-                &state.shards[shard_of(session, n)],
-                Request::SessionInfo { session, reply },
-            );
+            submit_or_reject(state.shard_for(session), Request::SessionInfo { session, reply });
         }
         WireRequest::EvictSession { session } => {
             let reply = ReplySink::call(move |res| out(fold_response(res)));
-            submit_or_reject(
-                &state.shards[shard_of(session, n)],
-                Request::EvictSession { session, reply },
-            );
+            submit_or_reject(state.shard_for(session), Request::EvictSession { session, reply });
         }
         WireRequest::Health => {
             let sessions: u64 = state.shards.iter().map(|c| c.session_count() as u64).sum();
@@ -551,24 +841,17 @@ where
         // connection pushes into it.
         WireRequest::StreamOpen { session, hop } => {
             let reply = ReplySink::call(move |res| out(fold_response(res)));
-            submit_or_reject(
-                &state.shards[shard_of(session, n)],
-                Request::StreamOpen { session, hop: hop as usize, reply },
-            );
+            let shard = state.shard_for(session);
+            submit_or_reject(shard, Request::StreamOpen { session, hop: hop as usize, reply });
         }
         WireRequest::StreamPush { session, samples } => {
             let reply = ReplySink::call(move |res| out(fold_response(res)));
-            submit_or_reject(
-                &state.shards[shard_of(session, n)],
-                Request::StreamPush { session, samples, reply },
-            );
+            let shard = state.shard_for(session);
+            submit_or_reject(shard, Request::StreamPush { session, samples, reply });
         }
         WireRequest::StreamClose { session } => {
             let reply = ReplySink::call(move |res| out(fold_response(res)));
-            submit_or_reject(
-                &state.shards[shard_of(session, n)],
-                Request::StreamClose { session, reply },
-            );
+            submit_or_reject(state.shard_for(session), Request::StreamClose { session, reply });
         }
         WireRequest::ClassifyBatch { inputs } => dispatch_batch(state, inputs, out),
     }
@@ -834,6 +1117,73 @@ fn fold_response(res: Result<crate::coordinator::Response>) -> WireResponse {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn builder_validates_and_derives_coordinator_config() {
+        let cfg = ServeConfig::builder()
+            .addr("127.0.0.1:0")
+            .shards(3)
+            .workers_per_shard(2)
+            .queue_depth(64)
+            .max_sessions(10)
+            .way_budget(1024)
+            .read_timeout(Duration::from_millis(50))
+            .slow_request_us(5)
+            .flight_capacity(32)
+            .op_mode(OpMode::Turbo)
+            .backend(Backend::Threads)
+            .build()
+            .expect("valid config");
+        assert_eq!(cfg.shards, 3);
+        assert_eq!(cfg.op_mode, OpMode::Turbo);
+        assert_eq!(cfg.backend, Some(Backend::Threads));
+        assert_eq!(cfg.resolved_backend(), Backend::Threads);
+        let cc = cfg.coordinator_config();
+        assert_eq!(cc.workers, 2);
+        assert_eq!(cc.queue_depth, 64);
+        assert_eq!(cc.max_sessions, 10);
+        assert_eq!(cc.way_budget_bytes, 1024);
+        assert_eq!(cc.slow_request_us, 5);
+        assert_eq!(cc.flight_capacity, 32);
+
+        let cases = [
+            (ServeConfig::builder().shards(0).build(), ConfigError::ZeroShards),
+            (ServeConfig::builder().workers_per_shard(0).build(), ConfigError::ZeroWorkers),
+            (ServeConfig::builder().queue_depth(0).build(), ConfigError::ZeroQueueDepth),
+            (ServeConfig::builder().max_sessions(0).build(), ConfigError::ZeroSessions),
+            (ServeConfig::builder().flight_capacity(0).build(), ConfigError::ZeroFlightCapacity),
+            (ServeConfig::builder().addr("").build(), ConfigError::EmptyAddr),
+        ];
+        for (got, want) in cases {
+            assert_eq!(got.expect_err("must be rejected"), want);
+        }
+        // The typed errors carry human-readable wording.
+        assert!(ConfigError::ZeroShards.to_string().contains("shards"));
+    }
+
+    #[test]
+    fn zero_shard_count_maps_to_shard_zero_instead_of_panicking() {
+        assert_eq!(shard_of(42, 0), 0);
+        let nz = NonZeroUsize::new(4).expect("nonzero");
+        for s in 0..64u64 {
+            assert_eq!(shard_of(s, 4), shard_of_nz(s, nz));
+        }
+    }
+
+    #[test]
+    fn explicit_backend_survives_resolution() {
+        // Forcing threads always sticks; forcing the reactor resolves to
+        // the reactor exactly where the build target supports it.
+        let threads = ServeConfig { backend: Some(Backend::Threads), ..Default::default() };
+        assert_eq!(threads.resolved_backend(), Backend::Threads);
+        let reactor = ServeConfig { backend: Some(Backend::Reactor), ..Default::default() };
+        let resolved = reactor.resolved_backend();
+        if Backend::reactor_supported() {
+            assert_eq!(resolved, Backend::Reactor);
+        } else {
+            assert_eq!(resolved, Backend::Threads);
+        }
+    }
 
     #[test]
     fn shard_assignment_is_stable_and_spread() {

@@ -1,0 +1,343 @@
+//! Raw Linux syscall shim for the epoll reactor — no `libc` crate (the
+//! repo's no-new-deps rule), no FFI: the handful of syscalls the reactor
+//! needs (`epoll_create1`, `epoll_ctl`, `epoll_pwait`, `eventfd2`, plus
+//! two quality-of-life calls for tests and the high-fanout load
+//! generator) are issued with inline assembly and wrapped in `std::os::fd`
+//! ownership types.
+//!
+//! Gated in `serve/mod.rs` to `target_os = "linux"` on x86_64/aarch64 —
+//! the two ABIs whose syscall numbers are encoded below. Everywhere else
+//! the serve layer falls back to the thread-per-connection backend and
+//! this module does not exist.
+//!
+//! Error convention: the kernel returns `-errno` in the result register;
+//! [`check`] folds that into `std::io::Error`, so callers see the same
+//! error surface `std::net` produces.
+
+use std::fs::File;
+use std::io;
+use std::os::fd::{AsRawFd, FromRawFd, OwnedFd, RawFd};
+
+/// Per-arch syscall numbers (from the kernel's `unistd` tables; these are
+/// ABI constants, stable forever on a given arch).
+#[cfg(target_arch = "x86_64")]
+mod nr {
+    pub const EPOLL_CREATE1: usize = 291;
+    pub const EPOLL_CTL: usize = 233;
+    pub const EPOLL_PWAIT: usize = 281;
+    pub const EVENTFD2: usize = 290;
+    pub const PRLIMIT64: usize = 302;
+    pub const SETSOCKOPT: usize = 54;
+}
+#[cfg(target_arch = "aarch64")]
+mod nr {
+    pub const EPOLL_CREATE1: usize = 20;
+    pub const EPOLL_CTL: usize = 21;
+    pub const EPOLL_PWAIT: usize = 22;
+    pub const EVENTFD2: usize = 19;
+    pub const PRLIMIT64: usize = 261;
+    pub const SETSOCKOPT: usize = 208;
+}
+
+/// One raw syscall with up to six arguments.
+///
+/// # Safety
+///
+/// The caller must uphold the kernel ABI for syscall `n`: every pointer
+/// argument must be valid (and sized as the kernel expects) for the whole
+/// call, and the argument count/meaning must match the syscall.
+#[cfg(target_arch = "x86_64")]
+unsafe fn syscall6(n: usize, a1: usize, a2: usize, a3: usize, a4: usize, a5: usize, a6: usize) -> isize {
+    let ret: isize;
+    // SAFETY: the contract is delegated to the caller (see the function's
+    // `# Safety` section); the asm itself only clobbers what the x86_64
+    // syscall ABI clobbers (rcx, r11) and lets the compiler assume memory
+    // may be read/written, which covers kernel writes into pointer args.
+    unsafe {
+        core::arch::asm!(
+            "syscall",
+            inlateout("rax") n as isize => ret,
+            in("rdi") a1,
+            in("rsi") a2,
+            in("rdx") a3,
+            in("r10") a4,
+            in("r8") a5,
+            in("r9") a6,
+            out("rcx") _,
+            out("r11") _,
+            options(nostack),
+        );
+    }
+    ret
+}
+
+/// One raw syscall with up to six arguments.
+///
+/// # Safety
+///
+/// Same contract as the x86_64 variant: pointer arguments must be valid
+/// for the whole call and match what syscall `n` expects.
+#[cfg(target_arch = "aarch64")]
+unsafe fn syscall6(n: usize, a1: usize, a2: usize, a3: usize, a4: usize, a5: usize, a6: usize) -> isize {
+    let ret: isize;
+    // SAFETY: contract delegated to the caller; the aarch64 syscall ABI
+    // clobbers only x0 (the return register), and the default asm memory
+    // model covers kernel writes into pointer arguments.
+    unsafe {
+        core::arch::asm!(
+            "svc 0",
+            in("x8") n,
+            inlateout("x0") a1 as isize => ret,
+            in("x1") a2,
+            in("x2") a3,
+            in("x3") a4,
+            in("x4") a5,
+            in("x5") a6,
+            options(nostack),
+        );
+    }
+    ret
+}
+
+/// Fold a raw syscall return into `io::Result`: negative values are
+/// `-errno` (the kernel reserves `-4095..=-1` for errors).
+fn check(ret: isize) -> io::Result<usize> {
+    if ret < 0 {
+        Err(io::Error::from_raw_os_error(-ret as i32))
+    } else {
+        Ok(ret as usize)
+    }
+}
+
+// Readiness bits (uapi `epoll_event.events`).
+pub const EPOLLIN: u32 = 0x001;
+pub const EPOLLOUT: u32 = 0x004;
+pub const EPOLLERR: u32 = 0x008;
+pub const EPOLLHUP: u32 = 0x010;
+/// Peer closed its write half — lets the loop learn about half-closes
+/// without a read() round trip.
+pub const EPOLLRDHUP: u32 = 0x2000;
+
+const EPOLL_CTL_ADD: usize = 1;
+const EPOLL_CTL_DEL: usize = 2;
+const EPOLL_CTL_MOD: usize = 3;
+const EPOLL_CLOEXEC: usize = 0o2000000;
+const EFD_CLOEXEC: usize = 0o2000000;
+const EFD_NONBLOCK: usize = 0o4000;
+
+/// The kernel's `struct epoll_event`. Packed on x86_64 only — that arch's
+/// uapi declares it `__attribute__((packed))` (12 bytes); everywhere else
+/// it has natural alignment (16 bytes). Getting this wrong corrupts every
+/// event after the first, so the layout is mirrored per arch.
+#[derive(Debug, Clone, Copy)]
+#[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+#[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+pub struct EpollEvent {
+    pub events: u32,
+    pub data: u64,
+}
+
+impl EpollEvent {
+    pub fn zeroed() -> EpollEvent {
+        EpollEvent { events: 0, data: 0 }
+    }
+}
+
+/// An owned epoll instance. Registration keys (`data`) are caller-chosen
+/// u64 tokens, echoed back verbatim in [`Epoll::wait`] events.
+pub struct Epoll {
+    fd: OwnedFd,
+}
+
+impl Epoll {
+    pub fn new() -> io::Result<Epoll> {
+        // SAFETY: epoll_create1 takes one flag argument and no pointers.
+        let fd = check(unsafe { syscall6(nr::EPOLL_CREATE1, EPOLL_CLOEXEC, 0, 0, 0, 0, 0) })?;
+        // SAFETY: the fd was just returned by the kernel and is owned by
+        // nobody else; OwnedFd takes over closing it.
+        Ok(Epoll { fd: unsafe { OwnedFd::from_raw_fd(fd as RawFd) } })
+    }
+
+    fn ctl(&self, op: usize, fd: RawFd, events: u32, data: u64) -> io::Result<()> {
+        let mut ev = EpollEvent { events, data };
+        let evp = if op == EPOLL_CTL_DEL { 0 } else { std::ptr::addr_of_mut!(ev) as usize };
+        // SAFETY: `ev` lives across the call (or is not read at all for
+        // DEL, where the kernel ignores the pointer); `fd` validity is the
+        // kernel's to check — a stale fd comes back as EBADF, not UB.
+        check(unsafe {
+            syscall6(nr::EPOLL_CTL, self.fd.as_raw_fd() as usize, op, fd as usize, evp, 0, 0)
+        })?;
+        Ok(())
+    }
+
+    /// Register `fd` with the given interest mask and token.
+    pub fn add(&self, fd: RawFd, events: u32, data: u64) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_ADD, fd, events, data)
+    }
+
+    /// Replace `fd`'s interest mask (the token may change too).
+    pub fn modify(&self, fd: RawFd, events: u32, data: u64) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_MOD, fd, events, data)
+    }
+
+    /// Deregister `fd`.
+    pub fn del(&self, fd: RawFd) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_DEL, fd, 0, 0)
+    }
+
+    /// Wait for readiness, filling `events` from the front; returns how
+    /// many fired. A negative `timeout_ms` blocks indefinitely. EINTR is
+    /// folded into `Ok(0)` — the reactor treats both as "re-check state".
+    pub fn wait(&self, events: &mut [EpollEvent], timeout_ms: i32) -> io::Result<usize> {
+        if events.is_empty() {
+            return Ok(0);
+        }
+        // SAFETY: `events` is a live, exclusively borrowed buffer whose
+        // length bounds maxevents, so the kernel writes only within it;
+        // the null sigmask (arg 5) makes the sigsetsize (arg 6) ignored.
+        let ret = unsafe {
+            syscall6(
+                nr::EPOLL_PWAIT,
+                self.fd.as_raw_fd() as usize,
+                events.as_mut_ptr() as usize,
+                events.len(),
+                timeout_ms as usize,
+                0,
+                0,
+            )
+        };
+        match check(ret) {
+            Ok(n) => Ok(n),
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => Ok(0),
+            Err(e) => Err(e),
+        }
+    }
+}
+
+/// A nonblocking eventfd wrapped in a `File`: written (any 8-byte value)
+/// to wake an event loop, read to drain the counter. Nonblocking on both
+/// sides, so neither a worker posting a completion nor the loop draining
+/// it can ever park.
+pub fn eventfd() -> io::Result<File> {
+    // SAFETY: eventfd2 takes an initial counter and flags; no pointers.
+    let fd = check(unsafe { syscall6(nr::EVENTFD2, 0, EFD_CLOEXEC | EFD_NONBLOCK, 0, 0, 0, 0) })?;
+    // SAFETY: freshly created fd, owned by nobody else; File takes over
+    // closing it and gives us safe Read/Write.
+    Ok(unsafe { File::from_raw_fd(fd as RawFd) })
+}
+
+#[repr(C)]
+struct Rlimit64 {
+    cur: u64,
+    max: u64,
+}
+
+const RLIMIT_NOFILE: usize = 7;
+
+/// Raise this process's soft open-file limit to its hard limit (the
+/// high-fanout paths hold thousands of sockets; stock soft limits are
+/// often 1024). Best effort: returns the resulting soft limit.
+pub fn raise_nofile_limit() -> io::Result<u64> {
+    let mut old = Rlimit64 { cur: 0, max: 0 };
+    // SAFETY: a null new-limit pointer makes prlimit64 a pure read; `old`
+    // outlives the call and is sized as the kernel expects (two u64s).
+    check(unsafe {
+        syscall6(nr::PRLIMIT64, 0, RLIMIT_NOFILE, 0, std::ptr::addr_of_mut!(old) as usize, 0, 0)
+    })?;
+    if old.cur >= old.max {
+        return Ok(old.cur);
+    }
+    let new = Rlimit64 { cur: old.max, max: old.max };
+    // SAFETY: `new` outlives the call; the null old-limit pointer tells
+    // the kernel not to write anything back.
+    check(unsafe {
+        syscall6(nr::PRLIMIT64, 0, RLIMIT_NOFILE, std::ptr::addr_of!(new) as usize, 0, 0, 0)
+    })?;
+    Ok(new.cur)
+}
+
+const SOL_SOCKET: usize = 1;
+const SO_RCVBUF: usize = 8;
+
+/// Clamp a socket's kernel receive buffer (used by the slow-reader test
+/// to make the writer-backlog bound reachable with a deterministic amount
+/// of traffic, independent of the host's tcp autotuning defaults).
+pub fn set_recv_buf(fd: RawFd, bytes: u32) -> io::Result<()> {
+    let val: u32 = bytes;
+    // SAFETY: `val` outlives the call and optlen (arg 5) matches its
+    // size; SO_RCVBUF only reads the option value.
+    check(unsafe {
+        syscall6(
+            nr::SETSOCKOPT,
+            fd as usize,
+            SOL_SOCKET,
+            SO_RCVBUF,
+            std::ptr::addr_of!(val) as usize,
+            std::mem::size_of::<u32>(),
+            0,
+        )
+    })?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use std::io::{Read, Write};
+
+    use super::*;
+
+    #[test]
+    fn eventfd_wakes_epoll_and_drains() {
+        let ep = Epoll::new().unwrap();
+        let mut efd = eventfd().unwrap();
+        ep.add(efd.as_raw_fd(), EPOLLIN, 42).unwrap();
+
+        // Nothing pending: a zero-timeout wait returns no events.
+        let mut evs = vec![EpollEvent::zeroed(); 8];
+        assert_eq!(ep.wait(&mut evs, 0).unwrap(), 0);
+
+        // A write makes it readable, with our token echoed back.
+        (&efd).write_all(&1u64.to_ne_bytes()).unwrap();
+        let n = ep.wait(&mut evs, 1000).unwrap();
+        assert_eq!(n, 1);
+        let ev = evs[0];
+        assert_eq!(ev.data, 42);
+        assert_ne!(ev.events & EPOLLIN, 0);
+
+        // Draining resets it; a second drain would block, so the
+        // nonblocking read errors with WouldBlock instead.
+        let mut buf = [0u8; 8];
+        efd.read_exact(&mut buf).unwrap();
+        assert_eq!(u64::from_ne_bytes(buf), 1);
+        assert_eq!(ep.wait(&mut evs, 0).unwrap(), 0);
+        let err = efd.read(&mut buf).map(|_| ()).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::WouldBlock);
+    }
+
+    #[test]
+    fn interest_can_be_modified_and_deleted() {
+        let ep = Epoll::new().unwrap();
+        let efd = eventfd().unwrap();
+        ep.add(efd.as_raw_fd(), EPOLLIN, 7).unwrap();
+        (&efd).write_all(&1u64.to_ne_bytes()).unwrap();
+
+        // Interest masked off: no event even though the fd is readable.
+        ep.modify(efd.as_raw_fd(), 0, 7).unwrap();
+        let mut evs = vec![EpollEvent::zeroed(); 4];
+        assert_eq!(ep.wait(&mut evs, 0).unwrap(), 0);
+
+        // Re-armed: the event comes back.
+        ep.modify(efd.as_raw_fd(), EPOLLIN, 9).unwrap();
+        assert_eq!(ep.wait(&mut evs, 1000).unwrap(), 1);
+        assert_eq!(evs[0].data, 9);
+
+        ep.del(efd.as_raw_fd()).unwrap();
+        assert_eq!(ep.wait(&mut evs, 0).unwrap(), 0);
+    }
+
+    #[test]
+    fn nofile_limit_is_raisable() {
+        let cur = raise_nofile_limit().unwrap();
+        assert!(cur >= 256, "soft NOFILE limit suspiciously low: {cur}");
+    }
+}

@@ -22,7 +22,7 @@ use crate::coordinator::{Engine, Metrics, OpKind, OpMode};
 use crate::golden::{self, ExecMode, PreparedModel};
 use crate::model::{demo_tiny, demo_tiny_kws, QLayer, QuantModel};
 use crate::protonet::ProtoHead;
-use crate::serve::loadgen::{self, LoadgenConfig};
+use crate::serve::loadgen::{self, FanoutConfig, LoadgenConfig};
 use crate::serve::{BatchItem, Client, ServeConfig, Server};
 use crate::util::bench::{fmt_si, Table};
 use crate::util::json::{self, Value};
@@ -415,12 +415,8 @@ fn obs_overhead_row(quick: bool) -> Result<PerfRow> {
 }
 
 fn start_loopback_server(model: Arc<QuantModel>, mode: ExecMode) -> Result<Server> {
-    let cfg = ServeConfig {
-        addr: "127.0.0.1:0".to_string(),
-        shards: 2,
-        workers_per_shard: 2,
-        ..Default::default()
-    };
+    let cfg =
+        ServeConfig::builder().addr("127.0.0.1:0").shards(2).workers_per_shard(2).build()?;
     Server::start(cfg, move |_shard, _worker| {
         let m = model.clone();
         Box::new(move || Ok(Engine::golden_mode(m, mode))) as EngineFactory
@@ -494,6 +490,26 @@ pub fn run_serve_suite(quick: bool) -> Result<Vec<PerfRow>> {
             .push("p99_us", lg.latency.percentile_us(99.0))
             .push("overloaded", lg.overloaded as f64),
     );
+    // Connection-scaling point: many concurrent pipelined connections
+    // with a couple of requests in flight on every one of them at once —
+    // the fleet shape the reactor backend exists for. Shed responses
+    // count toward the turnaround rate (deliberate overcommit).
+    let fo = loadgen::run_fanout(&FanoutConfig {
+        addr: addr.clone(),
+        connections: if quick { 256 } else { 1024 },
+        per_conn: 2,
+        waves: 2,
+        seed: 1,
+    })?;
+    if fo.protocol_errors > 0 {
+        bail!("serve: {} protocol errors under fan-out load", fo.protocol_errors);
+    }
+    rows.push(
+        PerfRow::new("serve/fanout")
+            .push("requests_per_sec", fo.responses_per_sec())
+            .push("connections", fo.connections as f64)
+            .push("p99_us", fo.p99_us()),
+    );
     drop(client);
     server.shutdown();
 
@@ -544,13 +560,12 @@ pub fn run_cl_trajectory(n_ways: usize, k_shots: usize) -> Result<Vec<PerfRow>> 
     let model = Arc::new(demo_tiny());
     let bytes_per_way = ProtoHead::bytes_per_way_of(model.embed_dim);
     let budget = n_ways * bytes_per_way;
-    let cfg = ServeConfig {
-        addr: "127.0.0.1:0".to_string(),
-        shards: 1,
-        workers_per_shard: 2,
-        way_budget_bytes: budget,
-        ..Default::default()
-    };
+    let cfg = ServeConfig::builder()
+        .addr("127.0.0.1:0")
+        .shards(1)
+        .workers_per_shard(2)
+        .way_budget(budget)
+        .build()?;
     let m = model.clone();
     let server = Server::start(cfg, move |_shard, _worker| {
         let m = m.clone();

@@ -1,0 +1,179 @@
+//! Reactor-backend scale tests: the fan-out shapes the thread-per-
+//! connection backend cannot serve. A thousand concurrent pipelined
+//! loopback connections must complete with zero protocol errors, zero
+//! worker panics and bounded memory, and a peer that stops reading must
+//! hit the per-connection backlog bound ([`MAX_CONN_BACKLOG`]) and stop
+//! being read from — without stalling fresh connections.
+//!
+//! Linux-only by construction: the reactor itself is gated on the epoll
+//! `sys` shim; elsewhere the serve stack falls back to threads and these
+//! shapes are out of scope.
+
+#![cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::os::fd::AsRawFd;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use chameleon::coordinator::server::EngineFactory;
+use chameleon::coordinator::Engine;
+use chameleon::model::{demo_tiny_kws, QuantModel};
+use chameleon::serve::loadgen::{self, FanoutConfig};
+use chameleon::serve::proto::{self, WireRequest};
+use chameleon::serve::{sys, Backend, Client, ServeConfig, Server, MAX_CONN_BACKLOG};
+
+fn reactor_server(shards: usize, workers: usize, queue_depth: usize) -> (Server, Arc<QuantModel>) {
+    let model = Arc::new(demo_tiny_kws());
+    let cfg = ServeConfig::builder()
+        .addr("127.0.0.1:0")
+        .shards(shards)
+        .workers_per_shard(workers)
+        .queue_depth(queue_depth)
+        .backend(Backend::Reactor)
+        .build()
+        .expect("valid serve config");
+    let m = model.clone();
+    let server = Server::start(cfg, move |_shard, _worker| {
+        let m = m.clone();
+        Box::new(move || Ok(Engine::golden(m))) as EngineFactory
+    })
+    .expect("server starts");
+    (server, model)
+}
+
+fn vm_rss_kb() -> Option<u64> {
+    let text = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = text.lines().find(|l| l.starts_with("VmRSS:"))?;
+    line.split_whitespace().nth(1)?.parse().ok()
+}
+
+/// Poll `probe` until it returns true or the deadline passes.
+fn wait_for(deadline: Duration, mut probe: impl FnMut() -> bool) -> bool {
+    let end = Instant::now() + deadline;
+    while Instant::now() < end {
+        if probe() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    probe()
+}
+
+/// The acceptance shape: >=1000 concurrent connections, each with a
+/// pipelined window in flight, through one reactor server — all
+/// responses correct, no worker panics, memory bounded.
+#[test]
+fn thousand_concurrent_pipelined_connections() {
+    const CONNS: usize = 1000;
+    let limit = sys::raise_nofile_limit().unwrap_or(0);
+    if limit < (2 * CONNS + 128) as u64 {
+        eprintln!("serve_scale: skipping — nofile limit {limit} cannot hold {CONNS} socket pairs");
+        return;
+    }
+
+    // queue_depth is sized so the full fan-out (2000 in flight) admits
+    // without shedding: the test measures scale, not overload policy.
+    let (server, _model) = reactor_server(2, 2, 4096);
+    assert_eq!(server.backend(), Backend::Reactor, "test must exercise the reactor");
+    let cfg = FanoutConfig {
+        addr: server.local_addr().to_string(),
+        connections: CONNS,
+        per_conn: 2,
+        waves: 2,
+        seed: 7,
+    };
+    let driver = std::thread::spawn(move || loadgen::run_fanout(&cfg));
+
+    // The loadgen holds every connection open across both waves; the
+    // live gauge must actually reach the full fan-out (plus its probe).
+    let mut peak = 0u64;
+    while !driver.is_finished() {
+        peak = peak.max(server.live_connections());
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let report = driver.join().expect("driver thread").expect("fanout run");
+
+    assert!(peak >= CONNS as u64, "live-connection gauge peaked at {peak}, wanted >= {CONNS}");
+    assert_eq!(report.protocol_errors, 0, "{}", report.report());
+    assert_eq!(report.ok, report.sent, "every request must complete ok: {}", report.report());
+    let p99 = report.p99_us();
+    assert!(p99.is_finite() && p99 > 0.0, "p99 must be measured, got {p99}");
+
+    let m = server.metrics();
+    assert_eq!(m.worker_panics, 0, "{}", m.report());
+    assert!(m.requests >= report.sent, "server saw {} of {} requests", m.requests, report.sent);
+
+    if let Some(rss) = vm_rss_kb() {
+        assert!(rss < 2 * 1024 * 1024, "RSS {rss} kB after 1000-conn fan-out — not bounded");
+    }
+
+    // Dropped clients must release their connections promptly.
+    let idle = wait_for(Duration::from_secs(10), || server.live_connections() == 0);
+    assert!(idle, "{} connections still live after loadgen exit", server.live_connections());
+    server.shutdown();
+}
+
+/// A peer that floods pipelined requests and never reads its responses
+/// must be throttled at the backlog bound: the write queue stops at
+/// [`MAX_CONN_BACKLOG`], the server stops reading from it (requests stop
+/// growing), and other clients stay fully served.
+#[test]
+fn slow_reader_is_bounded_and_stops_being_read() {
+    let (server, _model) = reactor_server(1, 1, 64);
+    let addr = server.local_addr().to_string();
+
+    // Classify (not Health) floods so every consumed frame lands in the
+    // coordinator's `requests` counter — the freeze assertion below
+    // watches that counter to prove the server stopped reading.
+    let mut probe = Client::connect(&addr).expect("probe connect");
+    let input_len = probe.health().expect("probe health").input_len as usize;
+    drop(probe);
+
+    let mut flood = TcpStream::connect(&addr).expect("flood connect");
+    // Clamp this side's receive buffer to the kernel minimum so the
+    // server's responses jam quickly instead of vanishing into loopback
+    // buffering, then write pipelined requests without ever reading a
+    // byte back.
+    sys::set_recv_buf(flood.as_raw_fd(), 1).expect("clamping SO_RCVBUF");
+    flood.set_write_timeout(Some(Duration::from_millis(250))).expect("write timeout");
+    let req = WireRequest::Classify { input: vec![7u8; input_len] };
+    let mut sent = 0u64;
+    while sent < 2_000_000 {
+        let frame = proto::encode_request_versioned(&req, proto::VERSION, sent);
+        if flood.write_all(&frame).is_err() {
+            break; // the server stopped reading and every buffer is full
+        }
+        sent += 1;
+    }
+    assert!(sent > MAX_CONN_BACKLOG as u64, "flood stalled after only {sent} requests");
+
+    // The backlog high-water mark must reach the bound — and never pass
+    // it: the read gate guarantees queued + in-flight <= the bound.
+    let bound = MAX_CONN_BACKLOG as u64;
+    let hit = wait_for(Duration::from_secs(30), || server.metrics().backlog_hwm >= bound);
+    let hwm = server.metrics().backlog_hwm;
+    assert!(hit, "backlog high-water mark only reached {hwm}, wanted {bound}");
+    assert!(hwm <= bound, "backlog bound violated: hwm {hwm} > {bound}");
+
+    // With the gate closed the server must not consume further input:
+    // the requests counter freezes while the flooder is jammed.
+    std::thread::sleep(Duration::from_millis(500));
+    let before = server.metrics().requests;
+    std::thread::sleep(Duration::from_millis(300));
+    let after = server.metrics().requests;
+    assert_eq!(after, before, "server kept reading a peer that will not drain");
+
+    // One jammed peer must not degrade the listener or other clients.
+    let mut fresh = Client::connect(&addr).expect("fresh client connects past jammed peer");
+    let health = fresh.health().expect("fresh client served");
+    assert_eq!(health.shards, 1);
+
+    // Hanging up releases the connection and everything queued for it.
+    drop(flood);
+    let released = wait_for(Duration::from_secs(10), || server.live_connections() <= 1);
+    assert!(released, "flood connection not released: {} still live", server.live_connections());
+    drop(fresh);
+    server.shutdown();
+}
