@@ -1106,6 +1106,9 @@ pub struct FanoutReport {
     pub connections: usize,
     pub per_conn: usize,
     pub waves: usize,
+    /// Requests actually submitted (successful `send` calls) — failed
+    /// sends count only as `protocol_errors`, so `ok + overloaded +
+    /// app_errors` can be compared against this even on a lossy run.
     pub sent: u64,
     pub ok: u64,
     pub overloaded: u64,
@@ -1207,6 +1210,7 @@ pub fn run_fanout(cfg: &FanoutConfig) -> Result<FanoutReport> {
     };
     let hist = LatencyHistogram::new();
     let start = Instant::now();
+    let mut sent: u64 = 0;
     for _ in 0..cfg.waves {
         let mut tickets: Vec<Vec<(u64, Instant)>> = Vec::with_capacity(clients.len());
         for client in clients.iter_mut() {
@@ -1220,6 +1224,7 @@ pub fn run_fanout(cfg: &FanoutConfig) -> Result<FanoutReport> {
                     }
                 }
             }
+            sent += batch.len() as u64;
             tickets.push(batch);
         }
         // Every connection now has its full window in flight; drain.
@@ -1238,7 +1243,7 @@ pub fn run_fanout(cfg: &FanoutConfig) -> Result<FanoutReport> {
         connections: cfg.connections,
         per_conn: cfg.per_conn,
         waves: cfg.waves,
-        sent: (cfg.connections * cfg.per_conn * cfg.waves) as u64,
+        sent,
         ok: counters.ok.load(Ordering::Relaxed),
         overloaded: counters.overloaded.load(Ordering::Relaxed),
         app_errors: counters.app_errors.load(Ordering::Relaxed),

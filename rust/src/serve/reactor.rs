@@ -74,6 +74,13 @@ const WRITE_BATCH: usize = 32;
 /// the read buffer inside a single pass; epoll is level-triggered, so
 /// whatever remains in the socket re-surfaces on the next wait.
 const READ_PASS_BUDGET: usize = 256 * 1024;
+/// Consecutive `epoll_pwait` failures before a loop gives up: a wedged
+/// epoll fd (EBADF/ENOMEM) returns immediately, so without a cap the loop
+/// would burn a core retrying forever.
+const MAX_WAIT_ERRORS: u32 = 1024;
+/// Busy loop passes before a paused listener is re-armed (an idle wait
+/// tick re-arms sooner); see [`EventLoop::accept_ready`].
+const ACCEPT_RESUME_PASSES: u32 = 8;
 
 /// One unit of cross-thread work posted to an event loop.
 enum Delivery {
@@ -197,13 +204,45 @@ struct EventLoop {
     rr: usize,
     conns: HashMap<u64, Conn>,
     next_token: u64,
+    /// The listener was deregistered after a non-transient accept failure
+    /// (e.g. EMFILE); re-armed after a breather so the level-triggered
+    /// readiness cannot hot-spin the loop.
+    accepts_paused: bool,
+    /// Loop passes elapsed since the listener was paused.
+    paused_passes: u32,
 }
 
 impl EventLoop {
     fn run(mut self) {
         let mut events = vec![EpollEvent::zeroed(); EVENTS_PER_WAIT];
+        let mut wait_errors: u32 = 0;
         loop {
-            let n = self.epoll.wait(&mut events, WAIT_TIMEOUT_MS).unwrap_or(0);
+            let n = match self.epoll.wait(&mut events, WAIT_TIMEOUT_MS) {
+                Ok(n) => {
+                    wait_errors = 0;
+                    n
+                }
+                Err(e) => {
+                    // A persistent wait failure returns immediately, so
+                    // swallowing it silently would be an unlogged hot
+                    // spin. Log the first one, and give the loop up
+                    // entirely if the epoll fd is wedged — teardown below
+                    // closes its connections instead of burning a core.
+                    wait_errors += 1;
+                    if wait_errors == 1 {
+                        eprintln!("chameleon-reactor-{}: epoll wait failed: {e}", self.index);
+                    }
+                    if wait_errors >= MAX_WAIT_ERRORS {
+                        eprintln!(
+                            "chameleon-reactor-{}: epoll wait failing persistently ({e}); \
+                             abandoning event loop",
+                            self.index
+                        );
+                        break;
+                    }
+                    0
+                }
+            };
             if self.state.stop.load(Ordering::SeqCst) {
                 break;
             }
@@ -214,6 +253,7 @@ impl EventLoop {
                     token => self.conn_ready(token, ev.events),
                 }
             }
+            self.maybe_resume_accepts(n);
             self.drain_mailbox();
         }
         // Teardown: close every owned connection and keep the live gauge
@@ -254,11 +294,47 @@ impl EventLoop {
                 }
                 Err(e) if e.kind() == ErrorKind::WouldBlock => return,
                 Err(e) if e.kind() == ErrorKind::Interrupted => continue,
-                // Transient accept failures (e.g. fd exhaustion): epoll is
-                // level-triggered, so pending connections re-surface on
-                // the next wait.
-                Err(_) => return,
+                Err(e) => {
+                    // Non-transient accept failure (e.g. EMFILE): the
+                    // level-triggered listener stays readable, so simply
+                    // returning would re-wake the loop immediately in a
+                    // hot spin. Deregister it; maybe_resume_accepts
+                    // re-arms it after a breather, by which time fds may
+                    // have been released. Pending connections survive in
+                    // the kernel accept queue meanwhile.
+                    eprintln!(
+                        "chameleon-reactor-{}: accept failed ({e}); pausing listener",
+                        self.index
+                    );
+                    if let Some(l) = &self.listener {
+                        let _ = self.epoll.del(l.as_raw_fd());
+                    }
+                    self.accepts_paused = true;
+                    self.paused_passes = 0;
+                    return;
+                }
             }
+        }
+    }
+
+    /// Re-arm a listener paused by an accept failure once the loop has
+    /// taken a breather: an idle wait tick (up to [`WAIT_TIMEOUT_MS`] of
+    /// backoff) or [`ACCEPT_RESUME_PASSES`] busy passes, whichever comes
+    /// first — bounded delay without parking the thread.
+    fn maybe_resume_accepts(&mut self, nevents: usize) {
+        if !self.accepts_paused {
+            return;
+        }
+        self.paused_passes += 1;
+        if nevents > 0 && self.paused_passes < ACCEPT_RESUME_PASSES {
+            return;
+        }
+        match &self.listener {
+            Some(l) if self.epoll.add(l.as_raw_fd(), EPOLLIN, LISTENER_TOKEN).is_ok() => {
+                self.accepts_paused = false;
+            }
+            Some(_) => self.paused_passes = 0, // retry next pass
+            None => self.accepts_paused = false,
         }
     }
 
@@ -585,33 +661,15 @@ impl Reactor {
             let wake = crate::serve::sys::eventfd().context("creating wake eventfd")?;
             mailboxes.push(Arc::new(Mailbox { q: Mutex::new(Vec::new()), wake }));
         }
-        let mut listener = Some(listener);
         let mut threads = Vec::with_capacity(n);
-        for (i, mailbox) in mailboxes.iter().enumerate() {
-            let epoll = Epoll::new().context("creating epoll instance")?;
-            epoll
-                .add(mailbox.wake.as_raw_fd(), EPOLLIN, WAKE_TOKEN)
-                .context("registering wake eventfd")?;
-            let own_listener = if i == 0 { listener.take() } else { None };
-            if let Some(l) = &own_listener {
-                epoll.add(l.as_raw_fd(), EPOLLIN, LISTENER_TOKEN).context("registering listener")?;
-            }
-            let ev = EventLoop {
-                index: i,
-                epoll,
-                state: state.clone(),
-                mailbox: mailbox.clone(),
-                peers: mailboxes.clone(),
-                listener: own_listener,
-                rr: 0,
-                conns: HashMap::new(),
-                next_token: FIRST_CONN_TOKEN,
-            };
-            let t = std::thread::Builder::new()
-                .name(format!("chameleon-reactor-{i}"))
-                .spawn(move || ev.run())
-                .map_err(|e| anyhow!("spawning reactor loop {i}: {e}"))?;
-            threads.push(t);
+        if let Err(e) = spawn_loops(listener, &state, &mailboxes, &mut threads) {
+            // Partial failure must not leak the loops that did start:
+            // they hold the listener and ServerState alive and would keep
+            // accepting connections on a server the caller believes never
+            // came up. Stop, wake, and join them before failing.
+            state.stop.store(true, Ordering::SeqCst);
+            Reactor { mailboxes, threads }.shutdown();
+            return Err(e);
         }
         Ok(Reactor { mailboxes, threads })
     }
@@ -626,4 +684,46 @@ impl Reactor {
             let _ = t.join();
         }
     }
+}
+
+/// Build and spawn the event loops (loop 0 adopts the listener), pushing
+/// each started thread into `threads` as it goes so [`Reactor::start`]
+/// can tear down exactly the loops that are already running if a later
+/// one fails.
+fn spawn_loops(
+    listener: TcpListener,
+    state: &Arc<ServerState>,
+    mailboxes: &[Arc<Mailbox>],
+    threads: &mut Vec<JoinHandle<()>>,
+) -> Result<()> {
+    let mut listener = Some(listener);
+    for (i, mailbox) in mailboxes.iter().enumerate() {
+        let epoll = Epoll::new().context("creating epoll instance")?;
+        epoll
+            .add(mailbox.wake.as_raw_fd(), EPOLLIN, WAKE_TOKEN)
+            .context("registering wake eventfd")?;
+        let own_listener = if i == 0 { listener.take() } else { None };
+        if let Some(l) = &own_listener {
+            epoll.add(l.as_raw_fd(), EPOLLIN, LISTENER_TOKEN).context("registering listener")?;
+        }
+        let ev = EventLoop {
+            index: i,
+            epoll,
+            state: state.clone(),
+            mailbox: mailbox.clone(),
+            peers: mailboxes.to_vec(),
+            listener: own_listener,
+            rr: 0,
+            conns: HashMap::new(),
+            next_token: FIRST_CONN_TOKEN,
+            accepts_paused: false,
+            paused_passes: 0,
+        };
+        let t = std::thread::Builder::new()
+            .name(format!("chameleon-reactor-{i}"))
+            .spawn(move || ev.run())
+            .map_err(|e| anyhow!("spawning reactor loop {i}: {e}"))?;
+        threads.push(t);
+    }
+    Ok(())
 }

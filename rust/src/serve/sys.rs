@@ -300,9 +300,13 @@ mod tests {
         (&efd).write_all(&1u64.to_ne_bytes()).unwrap();
         let n = ep.wait(&mut evs, 1000).unwrap();
         assert_eq!(n, 1);
-        let ev = evs[0];
-        assert_eq!(ev.data, 42);
-        assert_ne!(ev.events & EPOLLIN, 0);
+        // Copy packed fields into locals before asserting: assert_eq!
+        // takes references, and referencing a field of the (x86_64-packed)
+        // EpollEvent is a compile error (E0793); by-value reads are fine.
+        let data = evs[0].data;
+        let events = evs[0].events;
+        assert_eq!(data, 42);
+        assert_ne!(events & EPOLLIN, 0);
 
         // Draining resets it; a second drain would block, so the
         // nonblocking read errors with WouldBlock instead.
@@ -329,7 +333,8 @@ mod tests {
         // Re-armed: the event comes back.
         ep.modify(efd.as_raw_fd(), EPOLLIN, 9).unwrap();
         assert_eq!(ep.wait(&mut evs, 1000).unwrap(), 1);
-        assert_eq!(evs[0].data, 9);
+        let data = evs[0].data;
+        assert_eq!(data, 9);
 
         ep.del(efd.as_raw_fd()).unwrap();
         assert_eq!(ep.wait(&mut evs, 0).unwrap(), 0);
