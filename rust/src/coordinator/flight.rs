@@ -105,13 +105,27 @@ pub struct FlightRecorder {
 impl FlightRecorder {
     /// A recorder with `capacity` slots; requests at or over
     /// `slow_request_us` microseconds of service time are recorded as
-    /// [`FlightKind::SlowRequest`] (0 disables slow-request capture).
+    /// [`FlightKind::SlowRequest`] (0 disables slow-request capture). The
+    /// timebase epoch is this call — use [`FlightRecorder::with_epoch`]
+    /// whenever events from several recorders will ever be merged.
     pub fn new(capacity: usize, slow_request_us: u64) -> Self {
+        Self::with_epoch(capacity, slow_request_us, Instant::now())
+    }
+
+    /// Like [`FlightRecorder::new`], but with an explicit timebase epoch.
+    ///
+    /// Every recorder whose events may be merged into one time-ordered
+    /// dump (the serve layer's per-shard recorders under the `Stat` op)
+    /// **must** share one process-wide epoch: with per-recorder epochs,
+    /// `at_us` values from different shards are measured from
+    /// incomparable zero points, so events from a shard constructed later
+    /// sort systematically earlier than older shards' events.
+    pub fn with_epoch(capacity: usize, slow_request_us: u64, epoch: Instant) -> Self {
         FlightRecorder {
             slots: (0..capacity.max(1)).map(|_| Mutex::new(None)).collect(),
             cursor: AtomicUsize::new(0),
             dropped: AtomicU64::new(0),
-            epoch: Instant::now(),
+            epoch,
             slow_us: slow_request_us,
         }
     }
@@ -323,6 +337,39 @@ mod tests {
             assert_eq!(e.kind, kinds[(tag % kinds.len() as u64) as usize], "seq {}", e.seq);
             assert_eq!(e.op, ops[(tag % ops.len() as u64) as usize], "seq {}", e.seq);
         }
+    }
+
+    /// Regression (pre-fix: each recorder stamped `epoch: Instant::now()`
+    /// at construction): two recorders constructed at staggered times must
+    /// produce merge-comparable `at_us` stamps. An event recorded on the
+    /// *older* recorder and then one on the *younger* recorder happen in
+    /// that true order — a merged dump sorted by `at_us` must preserve it.
+    /// With per-recorder epochs the younger recorder's event reads ~0 us
+    /// and sorts first, inverting history.
+    #[test]
+    fn staggered_recorders_share_a_merge_comparable_timebase() {
+        let epoch = Instant::now();
+        let older = FlightRecorder::with_epoch(8, 0, epoch);
+        // Stagger the second recorder's construction well past the merge
+        // inversion window.
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        let younger = FlightRecorder::with_epoch(8, 0, epoch);
+        older.record(FlightKind::Error, OpKind::Classify, "first-in-time");
+        younger.record(FlightKind::Eviction, OpKind::Other, "second-in-time");
+        // Merge exactly like the serve layer's Stat dump: concatenate the
+        // shard snapshots and sort by the shared timebase.
+        let mut merged: Vec<FlightEvent> =
+            older.snapshot().into_iter().chain(younger.snapshot()).collect();
+        merged.sort_by_key(|e| e.at_us);
+        let order: Vec<&str> = merged.iter().map(|e| e.detail.as_str()).collect();
+        assert_eq!(order, ["first-in-time", "second-in-time"], "merged order = true order");
+        // The shared epoch also keeps both stamps on one monotonic axis:
+        // the younger recorder's event cannot predate the older one's.
+        assert!(merged[1].at_us >= merged[0].at_us);
+        assert!(
+            merged[0].at_us >= 10_000,
+            "older recorder's event is stamped after the stagger, not at its own zero"
+        );
     }
 
     #[test]

@@ -77,11 +77,13 @@ pub enum OpKind {
     SessionInfo = 8,
     EvictSession = 9,
     Other = 10,
+    SessionExport = 11,
+    SessionImport = 12,
 }
 
 impl OpKind {
     /// Number of kinds (the length of every per-op vector).
-    pub const COUNT: usize = 11;
+    pub const COUNT: usize = 13;
 
     /// All kinds, in index order.
     pub const ALL: [OpKind; OpKind::COUNT] = [
@@ -96,6 +98,8 @@ impl OpKind {
         OpKind::SessionInfo,
         OpKind::EvictSession,
         OpKind::Other,
+        OpKind::SessionExport,
+        OpKind::SessionImport,
     ];
 
     /// Stable index into per-op vectors (and the wire encoding of the kind).
@@ -123,6 +127,8 @@ impl OpKind {
             OpKind::SessionInfo => "session_info",
             OpKind::EvictSession => "evict_session",
             OpKind::Other => "other",
+            OpKind::SessionExport => "session_export",
+            OpKind::SessionImport => "session_import",
         }
     }
 }

@@ -10,6 +10,7 @@ pub mod engine;
 pub mod flight;
 pub mod metrics;
 pub mod server;
+pub mod snapshot;
 pub mod streaming;
 
 pub use engine::{Engine, EngineKind, Forward, OpMode};
@@ -19,4 +20,5 @@ pub use server::{
     Coordinator, CoordinatorConfig, ManyItem, ReplySink, Request, Response, SessionId,
     SessionInfoData, StreamDecision, StreamInfo,
 };
+pub use snapshot::{SessionSnapshot, SnapshotFile, WaySnapshot};
 pub use streaming::AudioWindower;

@@ -19,6 +19,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::coordinator::engine::Engine;
 use crate::coordinator::flight::{FlightEvent, FlightKind, FlightRecorder, DEFAULT_FLIGHT_CAPACITY};
 use crate::coordinator::metrics::{Metrics, OpKind};
+use crate::coordinator::snapshot::SessionSnapshot;
 use crate::golden::streaming::StreamingState;
 use crate::protonet::{PreparedHead, ProtoError, ProtoHead};
 use crate::sim::learning::learning_cycles;
@@ -101,6 +102,16 @@ pub enum Request {
     /// proto v3 `ClassifyBatch`). Windows succeed or fail independently
     /// (`Response::many`).
     ClassifyMany { inputs: Vec<Vec<u8>>, reply: ReplySink },
+    /// Export a session's learner state as a versioned snapshot blob
+    /// (`coordinator::snapshot`). A pure read: it does not refresh the
+    /// session's LRU recency and never mutates the head.
+    SessionExport { session: SessionId, reply: ReplySink },
+    /// Replace (or create) a session's learner state from a snapshot blob
+    /// — the receiving end of live migration. The imported head is
+    /// re-bounded by *this* deployment's way budget, any cached prepared
+    /// head is invalidated, and creating the session counts against the
+    /// LRU cap like a learn.
+    SessionImport { session: SessionId, blob: Vec<u8>, reply: ReplySink },
 }
 
 impl Request {
@@ -118,6 +129,8 @@ impl Request {
             Request::StreamPush { .. } => OpKind::StreamPush,
             Request::StreamClose { .. } => OpKind::StreamClose,
             Request::ClassifyMany { .. } => OpKind::ClassifyMany,
+            Request::SessionExport { .. } => OpKind::SessionExport,
+            Request::SessionImport { .. } => OpKind::SessionImport,
         }
     }
 
@@ -135,7 +148,9 @@ impl Request {
             | Request::StreamOpen { reply, .. }
             | Request::StreamPush { reply, .. }
             | Request::StreamClose { reply, .. }
-            | Request::ClassifyMany { reply, .. } => reply,
+            | Request::ClassifyMany { reply, .. }
+            | Request::SessionExport { reply, .. }
+            | Request::SessionImport { reply, .. } => reply,
         }
     }
 }
@@ -163,8 +178,13 @@ pub struct Response {
     /// windows fail independently (a bad window yields an error string,
     /// never a failed request).
     pub many: Option<Vec<std::result::Result<ManyItem, String>>>,
-    /// `SessionInfo` only: learned state + way-budget accounting.
+    /// `SessionInfo` only: learned state + way-budget accounting. Also
+    /// stamped on `SessionImport` replies, reporting the restored
+    /// session's state under the *importer's* budget.
     pub session_info: Option<SessionInfoData>,
+    /// `SessionExport` only: the session's encoded snapshot blob
+    /// ([`crate::coordinator::snapshot::SessionSnapshot`]).
+    pub session_export: Option<Vec<u8>>,
     /// Span: microseconds the request waited in the bounded queue
     /// (enqueue → dequeue). Stamped by the worker on every successful
     /// reply.
@@ -247,7 +267,10 @@ pub struct CoordinatorConfig {
     /// Per-session prototype-memory budget in bytes (0 = unbounded). The
     /// way cap is `budget / ProtoHead::bytes_per_way_of(embed_dim)` — the
     /// paper's ~26 B/way accounting at V = 48; learning past it answers a
-    /// typed `WaysExhausted` application error instead of growing.
+    /// typed `WaysExhausted` application error instead of growing. A
+    /// nonzero budget smaller than one way's cost is a config error:
+    /// [`Coordinator::start`] rejects it with a typed `BudgetTooSmall`
+    /// instead of running a deployment where every learn is doomed.
     pub way_budget_bytes: usize,
     /// Service-time threshold (us) beyond which a request is recorded in
     /// the flight recorder as a `SlowRequest` (0 disables slow capture).
@@ -304,11 +327,10 @@ struct SessionEntry {
 }
 
 impl SessionEntry {
-    fn new(dim: usize, way_budget_bytes: usize) -> SessionEntry {
-        let head = if way_budget_bytes == 0 {
-            ProtoHead::new(dim)
-        } else {
-            ProtoHead::with_budget(dim, way_budget_bytes)
+    fn new(dim: usize, way_cap: Option<usize>) -> SessionEntry {
+        let head = match way_cap {
+            None => ProtoHead::new(dim),
+            Some(cap) => ProtoHead::with_cap(dim, cap),
         };
         SessionEntry { head, prepared: None, stream: None }
     }
@@ -329,14 +351,16 @@ struct SessionStore {
     map: HashMap<SessionId, (SessionEntry, u64)>,
     clock: u64,
     cap: usize,
-    /// Per-session prototype budget handed to every new entry's head
-    /// (0 = unbounded).
-    way_budget_bytes: usize,
+    /// Per-session way cap handed to every new entry's head, derived once
+    /// at startup from the configured prototype budget (`None` =
+    /// unbounded). [`Coordinator::start`] rejects a budget too small for
+    /// even the cap arithmetic, so the derivation can never fail here.
+    way_cap: Option<usize>,
 }
 
 impl SessionStore {
-    fn new(cap: usize, way_budget_bytes: usize) -> Self {
-        SessionStore { map: HashMap::new(), clock: 0, cap: cap.max(1), way_budget_bytes }
+    fn new(cap: usize, way_cap: Option<usize>) -> Self {
+        SessionStore { map: HashMap::new(), clock: 0, cap: cap.max(1), way_cap }
     }
 
     fn tick(&mut self) -> u64 {
@@ -389,13 +413,19 @@ impl SessionStore {
                 evicted = Some(victim);
             }
         }
-        let budget = self.way_budget_bytes;
+        let way_cap = self.way_cap;
         let entry = self
             .map
             .entry(id)
-            .or_insert_with(|| (SessionEntry::new(dim, budget), now));
+            .or_insert_with(|| (SessionEntry::new(dim, way_cap), now));
         entry.1 = now;
         (&mut entry.0, evicted)
+    }
+
+    /// Look up a session *without* refreshing recency — the export /
+    /// observability path, which must never keep a dead session alive.
+    fn peek(&self, id: SessionId) -> Option<&SessionEntry> {
+        self.map.get(&id).map(|(e, _)| e)
     }
 
     fn remove(&mut self, id: SessionId) -> bool {
@@ -406,28 +436,20 @@ impl SessionStore {
         self.map.get(&id).map_or(0, |(e, _)| e.head.n_ways())
     }
 
-    /// The way cap a (new or existing) session's head gets under this
-    /// store's budget (`None` = unbounded).
-    fn way_cap_of(&self, dim: usize) -> Option<usize> {
-        if self.way_budget_bytes == 0 {
-            None
-        } else {
-            Some(self.way_budget_bytes / ProtoHead::bytes_per_way_of(dim))
-        }
+    /// The way cap every (new or existing) session's head runs under
+    /// (`None` = unbounded).
+    fn way_cap(&self) -> Option<usize> {
+        self.way_cap
     }
 
     /// Read-only snapshot of a session's continual-learning state. Does
     /// *not* refresh LRU recency — an observability probe must never keep
     /// a dead session alive. The deployment constants (`bytes_per_way`,
-    /// `way_cap`) are filled from `dim` / the store budget even when the
+    /// `way_cap`) are filled from `dim` / the store cap even when the
     /// session does not exist.
     fn info(&self, id: SessionId, dim: usize) -> SessionInfoData {
         let bytes_per_way = ProtoHead::bytes_per_way_of(dim);
-        let way_cap = if self.way_budget_bytes == 0 {
-            0
-        } else {
-            (self.way_budget_bytes / bytes_per_way) as u64
-        };
+        let way_cap = self.way_cap.map_or(0, |c| c as u64);
         match self.map.get(&id) {
             Some((e, _)) => SessionInfoData {
                 exists: true,
@@ -501,6 +523,20 @@ pub type EngineFactory = Box<dyn FnOnce() -> Result<Engine> + Send>;
 impl Coordinator {
     /// Spawn worker threads, each constructing + owning one engine replica.
     pub fn start(factories: Vec<EngineFactory>, cfg: CoordinatorConfig) -> Result<Coordinator> {
+        Coordinator::start_with_epoch(factories, cfg, Instant::now())
+    }
+
+    /// Like [`Coordinator::start`], but with an explicit flight-recorder
+    /// timebase epoch. Shards whose flight events are ever merged into one
+    /// time-ordered dump (the serve layer's `Stat` op) **must** share one
+    /// process-wide epoch — with per-shard epochs, `at_us` stamps from
+    /// different shards are measured from incomparable zero points (see
+    /// [`FlightRecorder::with_epoch`]).
+    pub fn start_with_epoch(
+        factories: Vec<EngineFactory>,
+        cfg: CoordinatorConfig,
+        epoch: Instant,
+    ) -> Result<Coordinator> {
         if factories.is_empty() {
             bail!("need at least one engine factory");
         }
@@ -552,10 +588,41 @@ impl Coordinator {
         let (embed_dim, seq_len, in_channels) = dim_rx
             .recv()
             .map_err(|e| anyhow!("no worker came up: {e}"))??;
+        // Derive the per-session way cap from the configured prototype
+        // budget now that the embed dim is known. A nonzero budget below
+        // one way's cost is rejected here, at startup, instead of running
+        // a deployment where every learn is doomed to `WaysExhausted`.
+        let way_cap = match ProtoHead::with_budget(embed_dim, cfg.way_budget_bytes) {
+            Ok(h) => h.way_cap(),
+            Err(e) => {
+                // Unblock the already-spawned workers before failing:
+                // publish a throwaway shared state so their startup spin
+                // ends, close the queue, and join them — a rejected config
+                // must not leak spinning threads.
+                let throwaway = Arc::new(Shared {
+                    sessions: Mutex::new(SessionStore::new(1, None)),
+                    metrics: Arc::new(Metrics::new()),
+                    flight: FlightRecorder::with_epoch(1, 0, epoch),
+                    embed_dim,
+                    seq_len,
+                    in_channels,
+                });
+                *shared_cell.lock().unwrap_or_else(std::sync::PoisonError::into_inner) =
+                    Some(throwaway);
+                drop(tx);
+                for w in workers {
+                    let _ = w.join();
+                }
+                return Err(anyhow::Error::new(e).context(format!(
+                    "coordinator config: way_budget_bytes = {} at embed dim {embed_dim}",
+                    cfg.way_budget_bytes
+                )));
+            }
+        };
         let shared = Arc::new(Shared {
-            sessions: Mutex::new(SessionStore::new(cfg.max_sessions, cfg.way_budget_bytes)),
+            sessions: Mutex::new(SessionStore::new(cfg.max_sessions, way_cap)),
             metrics: Arc::new(Metrics::new()),
-            flight: FlightRecorder::new(cfg.flight_capacity, cfg.slow_request_us),
+            flight: FlightRecorder::with_epoch(cfg.flight_capacity, cfg.slow_request_us, epoch),
             embed_dim,
             seq_len,
             in_channels,
@@ -762,6 +829,51 @@ impl Coordinator {
         Ok(r.stream_closed.unwrap_or((false, 0)))
     }
 
+    /// Blocking convenience: export a session's learner state as a
+    /// snapshot blob.
+    pub fn session_export(&self, session: SessionId) -> Result<Vec<u8>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.submit(Request::SessionExport { session, reply: rtx.into() })?;
+        let r = rrx.recv().map_err(|e| anyhow!("worker gone: {e}"))??;
+        r.session_export.ok_or_else(|| anyhow!("missing snapshot blob in reply"))
+    }
+
+    /// Blocking convenience: restore a session's learner state from a
+    /// snapshot blob, reporting the imported state under this
+    /// deployment's budget.
+    pub fn session_import(&self, session: SessionId, blob: Vec<u8>) -> Result<SessionInfoData> {
+        let (rtx, rrx) = mpsc::channel();
+        self.submit(Request::SessionImport { session, blob, reply: rtx.into() })?;
+        let r = rrx.recv().map_err(|e| anyhow!("worker gone: {e}"))??;
+        r.session_info.ok_or_else(|| anyhow!("missing session info in reply"))
+    }
+
+    /// Ids of every live session, sorted — the serve `Stat` op reports
+    /// them so an operator (or `chameleon snapshot`) can enumerate what to
+    /// export. A pure read: no LRU refresh.
+    pub fn session_ids(&self) -> Vec<SessionId> {
+        let mut ids: Vec<SessionId> =
+            self.shared.session_store().map.keys().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Export every live session as `(id, snapshot blob)` pairs sorted by
+    /// id — the coordinator half of `chameleon snapshot`. A pure read
+    /// under one store lock (a consistent point-in-time capture for this
+    /// shard); no LRU refresh.
+    pub fn export_all(&self) -> Vec<(SessionId, Vec<u8>)> {
+        let sessions = self.shared.session_store();
+        let mut out: Vec<(SessionId, Vec<u8>)> = sessions
+            .map
+            .iter()
+            .map(|(id, (e, _))| (*id, SessionSnapshot::from_head(&e.head).encode()))
+            .collect();
+        drop(sessions);
+        out.sort_unstable_by_key(|&(id, _)| id);
+        out
+    }
+
     /// Number of ways a session has learned so far.
     pub fn session_ways(&self, session: SessionId) -> usize {
         self.shared.session_store().ways(session)
@@ -873,6 +985,12 @@ fn run_request(
         }
         Request::ClassifyMany { inputs, reply } => {
             (reply, guarded(shared, op, || handle_classify_many(engine, &inputs, shared)))
+        }
+        Request::SessionExport { session, reply } => {
+            (reply, guarded(shared, op, || handle_session_export(session, shared)))
+        }
+        Request::SessionImport { session, blob, reply } => {
+            (reply, guarded(shared, op, || handle_session_import(session, &blob, shared)))
         }
     }
 }
@@ -1056,7 +1174,7 @@ fn handle_learn(
     // embedding work — and, crucially, before `get_or_insert` could evict
     // an innocent LRU victim to make room for an entry that is doomed to
     // stay empty.
-    if shared.session_store().way_cap_of(shared.embed_dim) == Some(0) {
+    if shared.session_store().way_cap() == Some(0) {
         return Err(anyhow::Error::new(ProtoError::WaysExhausted { cap: 0 })
             .context(format!("learning session {session}")));
     }
@@ -1270,6 +1388,57 @@ fn handle_stream_push(session: SessionId, samples: &[u8], shared: &Shared) -> Re
         .stream_decisions
         .fetch_add(decisions.len() as u64, Ordering::Relaxed);
     Ok(Response { decisions: Some(decisions), ..Response::default() })
+}
+
+/// Export a session's learner state as a versioned snapshot blob. A pure
+/// read: it does not refresh the session's LRU recency (a migration probe
+/// must never keep a dead session alive) and never mutates the head.
+fn handle_session_export(session: SessionId, shared: &Shared) -> Result<Response> {
+    let sessions = shared.session_store();
+    let entry = sessions
+        .peek(session)
+        .ok_or_else(|| anyhow!("unknown session {session} (nothing to export)"))?;
+    let blob = SessionSnapshot::from_head(&entry.head).encode();
+    drop(sessions);
+    Ok(Response { session_export: Some(blob), ..Response::default() })
+}
+
+/// Restore (or overwrite) a session's learner state from a snapshot blob
+/// — the receiving end of live migration and `chameleon restore`.
+///
+/// The expensive and fallible parts — decoding the hardened blob and
+/// re-extracting every prototype column — run *outside* the store lock,
+/// so a hostile or mismatched blob costs live sessions nothing. The
+/// restored head is re-bounded by this deployment's own way cap (more
+/// ways than the importer's budget is a typed `WaysExhausted` before any
+/// state changes), the cached prepared head is invalidated (the head was
+/// replaced wholesale), an open stream on the target session survives,
+/// and creating the session counts against the LRU cap like a learn.
+fn handle_session_import(session: SessionId, blob: &[u8], shared: &Shared) -> Result<Response> {
+    let snap = SessionSnapshot::decode(blob)
+        .map_err(|e| e.context(format!("importing session {session}")))?;
+    if snap.dim != shared.embed_dim {
+        bail!(
+            "importing session {session}: snapshot dim {} does not match the deployed \
+             model's embed dim {}",
+            snap.dim,
+            shared.embed_dim
+        );
+    }
+    // The cap is immutable after startup, so reading it ahead of the
+    // insert lock cannot race with a config change.
+    let way_cap = shared.session_store().way_cap();
+    let head = snap
+        .to_head(way_cap)
+        .map_err(|e| anyhow::Error::new(e).context(format!("importing session {session}")))?;
+    let mut sessions = shared.session_store();
+    let (entry, lru_evicted) = sessions.get_or_insert(session, shared.embed_dim);
+    entry.head = head;
+    entry.prepared = None;
+    let info = sessions.info(session, shared.embed_dim);
+    drop(sessions);
+    record_lru_eviction(shared, OpKind::SessionImport, lru_evicted);
+    Ok(Response { session_info: Some(info), ..Response::default() })
 }
 
 /// Close a session's stream; the learned head (if any) survives.
@@ -1752,26 +1921,188 @@ mod tests {
         c.add_shots(1, 0, vec![rand_seq(&m, &mut rng, 0, 16)]).unwrap();
         assert_eq!(c.metrics().snapshot().worker_panics, 0);
         c.shutdown();
-        // A budget below one way caps at zero: the very first learn fails
-        // typed and leaves no empty session entry behind. max_sessions: 1
-        // so a doomed learn would have to evict to insert — it must not.
+    }
+
+    #[test]
+    fn sub_way_budget_is_rejected_at_startup() {
+        // Regression (pre-fix: a nonzero budget below one way's cost
+        // silently produced a cap-zero head, so every learn in the
+        // deployment was doomed to `WaysExhausted` at runtime): the
+        // boundary is now explicit. One byte under a way fails startup
+        // with the typed `BudgetTooSmall`, exactly one way's cost is a
+        // working 1-way deployment, and 0 stays unbounded.
+        let m = SArc::new(crate::model::tests::tiny_model());
+        let bpw = crate::protonet::ProtoHead::bytes_per_way_of(m.embed_dim);
+        for bad in [1, bpw - 1] {
+            let mf = m.clone();
+            let err = Coordinator::start(
+                vec![Box::new(move || Ok(Engine::golden(mf))) as EngineFactory],
+                CoordinatorConfig { way_budget_bytes: bad, ..Default::default() },
+            )
+            .map(|c| c.shutdown())
+            .unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("budget"), "budget {bad}: {msg}");
+            assert!(msg.contains("way_budget_bytes"), "budget {bad}: {msg}");
+        }
+        let mut rng = Rng::new(84);
+        for (budget, want_cap) in [(bpw, 1u64), (bpw + 1, 1), (0, 0)] {
+            let mf = m.clone();
+            let c = Coordinator::start(
+                vec![Box::new(move || Ok(Engine::golden(mf))) as EngineFactory],
+                CoordinatorConfig { way_budget_bytes: budget, ..Default::default() },
+            )
+            .unwrap();
+            c.learn_way(1, vec![rand_seq(&m, &mut rng, 0, 16)]).unwrap();
+            assert_eq!(c.session_info(1).unwrap().way_cap, want_cap, "budget {budget}");
+            c.shutdown();
+        }
+    }
+
+    #[test]
+    fn session_export_import_migrates_bit_identically() {
+        // Export from one coordinator, import into a *fresh* one: the
+        // restored session must classify bit-identically and keep
+        // learning bit-identically (same add_shots on both sides stays
+        // converged) — the live-migration contract at coordinator level.
+        let (a, m) = mk_coord(2);
+        let mut rng = Rng::new(0xA5);
+        let lo: Vec<Vec<u8>> = (0..3).map(|_| rand_seq(&m, &mut rng, 0, 3)).collect();
+        let hi: Vec<Vec<u8>> = (0..3).map(|_| rand_seq(&m, &mut rng, 13, 16)).collect();
+        a.learn_way(7, lo).unwrap();
+        a.learn_way(7, hi).unwrap();
+        let blob = a.session_export(7).unwrap();
+        let (b, _) = mk_coord(2);
+        let info = b.session_import(7, blob.clone()).unwrap();
+        assert!(info.exists);
+        assert_eq!(info.ways, 2);
+        assert_eq!(info.shots, 6);
+        assert_eq!(info.bytes_used, a.session_info(7).unwrap().bytes_used);
+        for lo_hi in [(0u8, 3u8), (13, 16), (0, 16)] {
+            let q = rand_seq(&m, &mut rng, lo_hi.0, lo_hi.1);
+            let ra = a.classify_session(7, q.clone()).unwrap();
+            let rb = b.classify_session(7, q).unwrap();
+            assert_eq!(ra.predicted, rb.predicted);
+            assert_eq!(ra.logits, rb.logits);
+        }
+        let extra: Vec<Vec<u8>> = (0..4).map(|_| rand_seq(&m, &mut rng, 5, 11)).collect();
+        a.add_shots(7, 0, extra.clone()).unwrap();
+        b.add_shots(7, 0, extra).unwrap();
+        let q = rand_seq(&m, &mut rng, 0, 16);
+        assert_eq!(
+            a.classify_session(7, q.clone()).unwrap().logits,
+            b.classify_session(7, q).unwrap().logits,
+            "post-migration learning stays converged"
+        );
+        // The export is canonical: re-exporting the import reproduces it
+        // only after the add_shots diverge is rewound — so compare a
+        // fresh export of an untouched import instead.
+        let (c2, _) = mk_coord(1);
+        c2.session_import(3, blob.clone()).unwrap();
+        assert_eq!(c2.session_export(3).unwrap(), blob, "export∘import is identity");
+        assert_eq!(c2.metrics().snapshot().errors, 0);
+        a.shutdown();
+        b.shutdown();
+        c2.shutdown();
+    }
+
+    #[test]
+    fn session_import_overwrites_and_invalidates_prepared_head() {
+        // Classify first so the session's PreparedHead cache is hot, then
+        // import a *different* head over it: the next classify must
+        // answer from the imported head, not the stale snapshot.
+        let (c, m) = mk_coord(1);
+        let mut rng = Rng::new(0xA6);
+        let hi: Vec<Vec<u8>> = (0..3).map(|_| rand_seq(&m, &mut rng, 13, 16)).collect();
+        c.learn_way(5, hi).unwrap();
+        let q = rand_seq(&m, &mut rng, 13, 16);
+        assert_eq!(c.classify_session(5, q.clone()).unwrap().predicted, Some(0));
+        // A 2-way donor whose way 0 sits in the *low* cluster.
+        let (donor, _) = mk_coord(1);
+        let lo: Vec<Vec<u8>> = (0..3).map(|_| rand_seq(&m, &mut rng, 0, 3)).collect();
+        let hi2: Vec<Vec<u8>> = (0..3).map(|_| rand_seq(&m, &mut rng, 13, 16)).collect();
+        donor.learn_way(1, lo).unwrap();
+        donor.learn_way(1, hi2).unwrap();
+        let blob = donor.session_export(1).unwrap();
+        let info = c.session_import(5, blob).unwrap();
+        assert_eq!(info.ways, 2, "import replaces the head wholesale");
+        let r = c.classify_session(5, q).unwrap();
+        assert_eq!(r.predicted, Some(1), "high query lands on the imported high way");
+        assert_eq!(r.logits.map(|l| l.len()), Some(2), "stale 1-way snapshot was dropped");
+        donor.shutdown();
+        c.shutdown();
+    }
+
+    #[test]
+    fn session_export_is_a_pure_read() {
+        // Export must not refresh LRU recency: with a 2-session cap,
+        // exporting the LRU session and then creating a third must still
+        // evict the exported one (a refresh would sacrifice session 2).
+        let m = SArc::new(crate::model::tests::tiny_model());
         let mf = m.clone();
         let c = Coordinator::start(
             vec![Box::new(move || Ok(Engine::golden(mf))) as EngineFactory],
-            CoordinatorConfig { way_budget_bytes: 1, max_sessions: 1, ..Default::default() },
+            CoordinatorConfig { max_sessions: 2, ..Default::default() },
         )
         .unwrap();
-        let err = c.learn_way(2, vec![rand_seq(&m, &mut rng, 0, 16)]).unwrap_err();
+        let mut rng = Rng::new(0xA7);
+        c.learn_way(1, vec![rand_seq(&m, &mut rng, 0, 16)]).unwrap();
+        c.learn_way(2, vec![rand_seq(&m, &mut rng, 0, 16)]).unwrap();
+        c.session_export(1).unwrap();
+        c.learn_way(3, vec![rand_seq(&m, &mut rng, 0, 16)]).unwrap();
+        assert_eq!(c.session_ways(1), 0, "exported LRU session is still the victim");
+        assert_eq!(c.session_ways(2), 1);
+        // Unknown sessions export typed errors; the sorted id listing and
+        // bulk export agree with the store.
+        assert!(c.session_export(99).unwrap_err().to_string().contains("unknown session"));
+        assert_eq!(c.session_ids(), vec![2, 3]);
+        let all = c.export_all();
+        assert_eq!(all.len(), 2);
+        assert_eq!(all[0].0, 2);
+        assert_eq!(all[1].0, 3);
+        assert_eq!(all[0].1, c.session_export(2).unwrap());
+        c.shutdown();
+    }
+
+    #[test]
+    fn session_import_respects_the_importers_budget() {
+        // A 3-way donor head must not fit a 2-way-budget importer: the
+        // import fails typed *before* any state changes (no session is
+        // created), and a fitting import lands with the importer's cap.
+        let (donor, m) = mk_coord(1);
+        let mut rng = Rng::new(0xA8);
+        for _ in 0..3 {
+            donor.learn_way(4, vec![rand_seq(&m, &mut rng, 0, 16)]).unwrap();
+        }
+        let blob = donor.session_export(4).unwrap();
+        let budget = 2 * crate::protonet::ProtoHead::bytes_per_way_of(m.embed_dim);
+        let mf = m.clone();
+        let c = Coordinator::start(
+            vec![Box::new(move || Ok(Engine::golden(mf))) as EngineFactory],
+            CoordinatorConfig { way_budget_bytes: budget, ..Default::default() },
+        )
+        .unwrap();
+        let err = c.session_import(9, blob).unwrap_err();
         assert!(format!("{err:#}").contains("ways exhausted"), "{err:#}");
-        assert!(!c.session_info(2).unwrap().exists, "failed learn must not create state");
+        assert!(!c.session_info(9).unwrap().exists, "failed import must not create state");
+        // Garbage blobs fail typed too, before touching the store.
+        let err = c.session_import(9, vec![1, 2, 3]).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated"), "{err:#}");
         assert_eq!(c.session_count(), 0);
-        // A doomed learn must also never evict an innocent LRU victim to
-        // make room for itself: live (stream) sessions survive it.
-        c.stream_open(3, m.seq_len).unwrap();
-        assert!(c.learn_way(4, vec![rand_seq(&m, &mut rng, 0, 16)]).is_err());
-        assert_eq!(c.session_count(), 1, "the stream session must survive doomed learns");
-        assert_eq!(c.metrics().snapshot().evictions, 0);
+        // A 2-way donor fits exactly; the restored session reports the
+        // *importer's* cap, not the donor's unbounded one.
+        let (donor2, _) = mk_coord(1);
+        donor2.learn_way(4, vec![rand_seq(&m, &mut rng, 0, 16)]).unwrap();
+        donor2.learn_way(4, vec![rand_seq(&m, &mut rng, 0, 16)]).unwrap();
+        let info = c.session_import(9, donor2.session_export(4).unwrap()).unwrap();
+        assert_eq!(info.ways, 2);
+        assert_eq!(info.way_cap, 2);
+        // The imported head enforces that cap on further learning.
+        let err = c.learn_way(9, vec![rand_seq(&m, &mut rng, 0, 16)]).unwrap_err();
+        assert!(format!("{err:#}").contains("ways exhausted"), "{err:#}");
         assert_eq!(c.metrics().snapshot().worker_panics, 0);
+        donor.shutdown();
+        donor2.shutdown();
         c.shutdown();
     }
 

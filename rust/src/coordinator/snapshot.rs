@@ -1,0 +1,509 @@
+//! Durable session snapshots: the learner state of a [`ProtoHead`] as a
+//! versioned, length-prefixed binary blob.
+//!
+//! A prototype column is a pure function of its accumulator's
+//! `(sum, shots)` pair (protonet.rs), so the complete learner state of a
+//! session is just those pairs plus the head geometry — serializing them
+//! and re-running [`ProtoHead::push_way`] on restore reproduces every
+//! code and bias bit-for-bit. That makes snapshots the unit of both
+//! durability (`chameleon snapshot`/`restore`) and live migration (the
+//! v6 `SessionExport`/`SessionImport` wire ops).
+//!
+//! # Blob layout (all integers little-endian)
+//!
+//! ```text
+//! session := magic:"CHSN" | version:u8 | dim:u32 | cap:opt<u64>
+//!            | n_ways:u32 | way[n_ways]
+//! way     := shots:u64 | sum:i32[dim]
+//! opt<T>  := 0:u8 | 1:u8 T
+//!
+//! file    := magic:"CHSF" | version:u8 | n:u32 | entry[n]
+//! entry   := session_id:u64 | len:u32 | session[len]
+//! ```
+//!
+//! Decoding is hardened like `serve/proto.rs`: every count is bounded
+//! *before* it can drive allocation, truncation at any byte is a typed
+//! error, trailing bytes are rejected, and the accumulator invariant
+//! (`0 <= sum[i] <= 15 * shots`, sums of u4 embeddings) is enforced so a
+//! hostile blob cannot push arithmetic past `i32` on extract. Encoding is
+//! canonical: decode-then-encode reproduces the identical bytes (file
+//! entries are strictly increasing by session id).
+//!
+//! # Versioning
+//!
+//! The blob carries [`SNAPSHOT_VERSION`]; a decoder accepts exactly the
+//! versions it knows (currently 1). The per-way *budget* accounting is
+//! the paper's `bytes_per_way = ceil(V/2) + 2` (~26 B at V = 48) — the
+//! blob itself spends more (it keeps the running sums, not the packed
+//! codes) because it preserves the *learner*, not just the classifier.
+
+use anyhow::{bail, Result};
+
+use crate::protonet::{ProtoAccumulator, ProtoError, ProtoHead};
+
+/// Current snapshot blob format version.
+pub const SNAPSHOT_VERSION: u8 = 1;
+
+/// Per-session blob magic ("CHameleon SessioN").
+pub const SESSION_MAGIC: [u8; 4] = *b"CHSN";
+
+/// Store-file magic ("CHameleon Snapshot File").
+pub const FILE_MAGIC: [u8; 4] = *b"CHSF";
+
+/// Upper bound on one decoded session blob or store file — mirrors the
+/// wire's `MAX_FRAME` so a snapshot always fits a v6 frame.
+pub const MAX_SNAPSHOT: usize = 16 << 20;
+
+/// Upper bound on a snapshot's embedding dimension; real heads are two
+/// orders of magnitude smaller, so anything above this is hostile.
+pub const MAX_DIM: usize = 1 << 16;
+
+/// Upper bound on one way's shot count: keeps `15 * shots` (the largest
+/// honest accumulator sum) inside `i32`, so restore-side extraction can
+/// never overflow.
+pub const MAX_SHOTS: u64 = (i32::MAX / 15) as u64;
+
+/// One way's learner state: the running `(sum, shots)` pair the extracted
+/// FC column is a pure function of.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WaySnapshot {
+    /// Support shots absorbed so far (>= 1 for any learned way).
+    pub shots: u64,
+    /// Sum of u4 support embeddings, one entry per embedding dim.
+    pub sums: Vec<i32>,
+}
+
+/// A session's complete learner state, decoupled from any live server.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SessionSnapshot {
+    /// Embedding dimension (the paper's V).
+    pub dim: usize,
+    /// The exporting head's way cap (`None` = unbounded). Informational:
+    /// an importer applies its *own* budget-derived cap.
+    pub way_cap: Option<u64>,
+    /// Per-way accumulators in way order.
+    pub ways: Vec<WaySnapshot>,
+}
+
+impl SessionSnapshot {
+    /// Capture a head's learner state.
+    pub fn from_head(head: &ProtoHead) -> SessionSnapshot {
+        SessionSnapshot {
+            dim: head.dim,
+            way_cap: head.way_cap().map(|c| c as u64),
+            ways: head
+                .accumulators()
+                .map(|acc| WaySnapshot { shots: acc.shots as u64, sums: acc.sum.clone() })
+                .collect(),
+        }
+    }
+
+    /// Rebuild a live head, bounded by the *importer's* cap (`None` =
+    /// unbounded). Re-extracts every column from its accumulator, so the
+    /// restored head is bit-identical to the exported one; more ways than
+    /// the cap is a typed [`ProtoError::WaysExhausted`] before any later
+    /// way is lost silently.
+    pub fn to_head(&self, cap: Option<usize>) -> Result<ProtoHead, ProtoError> {
+        let mut head = match cap {
+            Some(c) => ProtoHead::with_cap(self.dim, c),
+            None => ProtoHead::new(self.dim),
+        };
+        for w in &self.ways {
+            // push_way re-checks the dim, so a hand-built snapshot with a
+            // mismatched sum length fails typed instead of panicking.
+            let acc = ProtoAccumulator { sum: w.sums.clone(), shots: w.shots as usize };
+            head.push_way(acc)?;
+        }
+        Ok(head)
+    }
+
+    /// Prototype-memory accounting of the restored session:
+    /// `ways * bytes_per_way` with the paper's `ceil(V/2) + 2` per-way
+    /// cost — the number the serve layer's way budget is charged in.
+    pub fn bytes_used(&self) -> usize {
+        self.ways.len() * ProtoHead::bytes_per_way_of(self.dim)
+    }
+
+    /// Encode as a versioned blob (canonical: one byte representation per
+    /// snapshot).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::with_capacity(14 + self.ways.len() * (8 + 4 * self.dim));
+        b.extend_from_slice(&SESSION_MAGIC);
+        b.push(SNAPSHOT_VERSION);
+        put_u32(&mut b, self.dim as u32);
+        match self.way_cap {
+            None => b.push(0),
+            Some(c) => {
+                b.push(1);
+                put_u64(&mut b, c);
+            }
+        }
+        put_u32(&mut b, self.ways.len() as u32);
+        for w in &self.ways {
+            put_u64(&mut b, w.shots);
+            for &s in &w.sums {
+                b.extend_from_slice(&s.to_le_bytes());
+            }
+        }
+        b
+    }
+
+    /// Decode a blob, rejecting truncation, trailing bytes, hostile
+    /// counts (before they drive allocation) and accumulator sums outside
+    /// the honest u4 range.
+    pub fn decode(blob: &[u8]) -> Result<SessionSnapshot> {
+        if blob.len() > MAX_SNAPSHOT {
+            bail!("session snapshot of {} bytes exceeds bound ({MAX_SNAPSHOT})", blob.len());
+        }
+        let mut c = Cursor { b: blob, i: 0 };
+        if c.take(4)? != SESSION_MAGIC {
+            bail!("bad session snapshot magic (want \"CHSN\")");
+        }
+        let version = c.u8()?;
+        if version != SNAPSHOT_VERSION {
+            bail!("unsupported session snapshot version {version} (speaking {SNAPSHOT_VERSION})");
+        }
+        let dim = c.u32()? as usize;
+        if dim == 0 || dim > MAX_DIM {
+            bail!("session snapshot dim {dim} out of range (1..={MAX_DIM})");
+        }
+        let way_cap = match c.u8()? {
+            0 => None,
+            1 => Some(c.u64()?),
+            t => bail!("bad way-cap option tag {t}"),
+        };
+        let n = c.u32()? as usize;
+        // Each way is 8 + 4*dim bytes; bound the claimed count against
+        // the blob cap before allocating anything.
+        let way_bytes = 8 + 4 * dim;
+        if n.saturating_mul(way_bytes) > MAX_SNAPSHOT {
+            bail!("session snapshot claims {n} ways of {way_bytes} bytes, exceeding bound");
+        }
+        let mut ways = Vec::with_capacity(n);
+        for _ in 0..n {
+            let shots = c.u64()?;
+            if shots == 0 || shots > MAX_SHOTS {
+                bail!("snapshot way with {shots} shots out of range (1..={MAX_SHOTS})");
+            }
+            let mut sums = Vec::with_capacity(dim);
+            for _ in 0..dim {
+                let s = c.i32()?;
+                // Sums of u4 embeddings: 0 <= sum <= 15 * shots. Anything
+                // else is hostile and could distort or overflow extract.
+                if s < 0 || (s as i64) > 15 * shots as i64 {
+                    bail!("snapshot sum {s} outside the honest range 0..={}", 15 * shots as i64);
+                }
+                sums.push(s);
+            }
+            ways.push(WaySnapshot { shots, sums });
+        }
+        c.finish()?;
+        Ok(SessionSnapshot { dim, way_cap, ways })
+    }
+}
+
+/// A whole coordinator's live sessions as one durable file.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SnapshotFile {
+    /// `(session_id, session blob)` pairs; [`SnapshotFile::encode`]
+    /// writes them sorted by id.
+    pub sessions: Vec<(u64, Vec<u8>)>,
+}
+
+impl SnapshotFile {
+    /// Encode the store file (canonical: entries sorted by session id).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut sessions: Vec<&(u64, Vec<u8>)> = self.sessions.iter().collect();
+        sessions.sort_unstable_by_key(|(id, _)| *id);
+        let mut b = Vec::new();
+        b.extend_from_slice(&FILE_MAGIC);
+        b.push(SNAPSHOT_VERSION);
+        put_u32(&mut b, sessions.len() as u32);
+        for (id, blob) in sessions {
+            put_u64(&mut b, *id);
+            put_u32(&mut b, blob.len() as u32);
+            b.extend_from_slice(blob);
+        }
+        b
+    }
+
+    /// Decode a store file. Entries must be strictly increasing by id
+    /// (the canonical order), each blob individually bounded; the blobs
+    /// themselves are *not* decoded here — restore does that per session
+    /// so one corrupt session fails typed without sinking the rest of the
+    /// diagnosis.
+    pub fn decode(bytes: &[u8]) -> Result<SnapshotFile> {
+        let mut c = Cursor { b: bytes, i: 0 };
+        if c.take(4)? != FILE_MAGIC {
+            bail!("bad snapshot file magic (want \"CHSF\")");
+        }
+        let version = c.u8()?;
+        if version != SNAPSHOT_VERSION {
+            bail!("unsupported snapshot file version {version} (speaking {SNAPSHOT_VERSION})");
+        }
+        let n = c.u32()? as usize;
+        // Each entry is at least 12 bytes of header; bound the count
+        // before it can drive allocation.
+        if n.saturating_mul(12) > bytes.len() {
+            bail!("snapshot file claims {n} sessions, exceeding its own size");
+        }
+        let mut sessions = Vec::with_capacity(n);
+        let mut last: Option<u64> = None;
+        for _ in 0..n {
+            let id = c.u64()?;
+            if last.is_some_and(|l| l >= id) {
+                bail!("snapshot file session ids not strictly increasing at {id}");
+            }
+            last = Some(id);
+            let len = c.u32()? as usize;
+            if len > MAX_SNAPSHOT {
+                bail!("snapshot file entry of {len} bytes exceeds bound ({MAX_SNAPSHOT})");
+            }
+            sessions.push((id, c.take(len)?.to_vec()));
+        }
+        c.finish()?;
+        Ok(SnapshotFile { sessions })
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Bounds-checked reader (same discipline as the wire cursor in
+/// `serve/proto.rs`): no raw indexing, typed truncation errors, strict
+/// trailing-byte rejection.
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let Some(s) = self.i.checked_add(n).and_then(|end| self.b.get(self.i..end)) else {
+            bail!("truncated snapshot: wanted {n} bytes at offset {}", self.i);
+        };
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        match self.take(1)? {
+            [b] => Ok(*b),
+            _ => bail!("truncated snapshot: wanted 1 byte at offset {}", self.i),
+        }
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let mut a = [0u8; 4];
+        a.copy_from_slice(self.take(4)?);
+        Ok(u32::from_le_bytes(a))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let mut a = [0u8; 8];
+        a.copy_from_slice(self.take(8)?);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    fn i32(&mut self) -> Result<i32> {
+        let mut a = [0u8; 4];
+        a.copy_from_slice(self.take(4)?);
+        Ok(i32::from_le_bytes(a))
+    }
+
+    fn finish(&self) -> Result<()> {
+        if self.i != self.b.len() {
+            bail!("{} trailing bytes after snapshot payload", self.b.len() - self.i);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::{prop_assert, prop_assert_eq};
+
+    /// Build a random learned head: odd dims included, shot values
+    /// saturating the u4 range, way cap present or absent.
+    fn random_head(rng: &mut crate::util::rng::Rng) -> ProtoHead {
+        let dim = rng.range(1, 49) as usize;
+        let n_ways = rng.range(1, 12) as usize;
+        let mut head = if rng.range(0, 2) == 0 {
+            ProtoHead::new(dim)
+        } else {
+            ProtoHead::with_cap(dim, n_ways + rng.range(0, 4) as usize)
+        };
+        for _ in 0..n_ways {
+            let k = rng.range(1, 11) as usize;
+            let shots: Vec<Vec<u8>> = (0..k)
+                .map(|_| {
+                    (0..dim)
+                        .map(|_| if rng.range(0, 4) == 0 { 15 } else { rng.range(0, 16) as u8 })
+                        .collect()
+                })
+                .collect();
+            head.learn_way(&shots).unwrap();
+        }
+        head
+    }
+
+    #[test]
+    fn roundtrip_restores_bit_identical_heads() {
+        prop::check(200, 0x5EED_5A9A, |rng| {
+            let head = random_head(rng);
+            let snap = SessionSnapshot::from_head(&head);
+            prop_assert_eq!(snap.bytes_used(), head.bytes_used());
+            let blob = snap.encode();
+            let got = SessionSnapshot::decode(&blob).map_err(|e| e.to_string())?;
+            prop_assert_eq!(&got, &snap);
+            // Canonical: re-encoding the decoded snapshot is byte-identical.
+            prop_assert_eq!(got.encode(), blob);
+            // The restored head answers bit-identically to the original.
+            let restored = got.to_head(head.way_cap()).map_err(|e| e.to_string())?;
+            prop_assert_eq!(restored.n_ways(), head.n_ways());
+            prop_assert_eq!(restored.total_shots(), head.total_shots());
+            prop_assert_eq!(restored.way_cap(), head.way_cap());
+            for _ in 0..4 {
+                let q: Vec<u8> = (0..head.dim).map(|_| rng.range(0, 16) as u8).collect();
+                prop_assert_eq!(restored.logits(&q), head.logits(&q));
+                prop_assert_eq!(restored.classify(&q), head.classify(&q));
+            }
+            // And keeps learning bit-identically: same add_shots on both
+            // sides stays converged.
+            let mut a = head.clone();
+            let mut b = restored.clone();
+            let extra: Vec<Vec<u8>> =
+                (0..3).map(|_| (0..a.dim).map(|_| rng.range(0, 16) as u8).collect()).collect();
+            prop_assert_eq!(
+                a.add_shots(0, &extra).map_err(|e| e.to_string())?,
+                b.add_shots(0, &extra).map_err(|e| e.to_string())?
+            );
+            let q: Vec<u8> = (0..a.dim).map(|_| rng.range(0, 16) as u8).collect();
+            prop_assert_eq!(a.logits(&q), b.logits(&q));
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn truncation_at_every_byte_is_rejected() {
+        prop::check(40, 0x7A11_0C8E, |rng| {
+            let head = random_head(rng);
+            let blob = SessionSnapshot::from_head(&head).encode();
+            for cut in 0..blob.len() {
+                prop_assert!(
+                    SessionSnapshot::decode(&blob[..cut]).is_err(),
+                    "cut at {cut}/{} must fail",
+                    blob.len()
+                );
+            }
+            let mut long = blob.clone();
+            long.push(0);
+            prop_assert!(SessionSnapshot::decode(&long).is_err(), "trailing byte must fail");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn hostile_blobs_are_rejected_before_allocation() {
+        let mut head = ProtoHead::new(4);
+        head.learn_way(&[vec![1, 2, 3, 4]]).unwrap();
+        let good = SessionSnapshot::from_head(&head).encode();
+        let corrupt = |at: usize, val: &[u8]| {
+            let mut b = good.clone();
+            b.splice(at..at + val.len(), val.iter().copied());
+            b
+        };
+        // Bad magic.
+        let e = SessionSnapshot::decode(&corrupt(0, b"XXXX")).unwrap_err().to_string();
+        assert!(e.contains("magic"), "{e}");
+        // Unknown version.
+        let e = SessionSnapshot::decode(&corrupt(4, &[9])).unwrap_err().to_string();
+        assert!(e.contains("version 9"), "{e}");
+        // Hostile dim (drives the per-way sum allocation).
+        let e =
+            SessionSnapshot::decode(&corrupt(5, &u32::MAX.to_le_bytes())).unwrap_err().to_string();
+        assert!(e.contains("dim"), "{e}");
+        let e = SessionSnapshot::decode(&corrupt(5, &0u32.to_le_bytes())).unwrap_err().to_string();
+        assert!(e.contains("dim"), "{e}");
+        // Bad option tag.
+        let e = SessionSnapshot::decode(&corrupt(9, &[7])).unwrap_err().to_string();
+        assert!(e.contains("option tag"), "{e}");
+        // Hostile way count (bounded before allocation; offset 10 is the
+        // count given the cap tag is 0/absent).
+        let e = SessionSnapshot::decode(&corrupt(10, &u32::MAX.to_le_bytes()))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("ways"), "{e}");
+        // Zero or overflowing shot count.
+        let e = SessionSnapshot::decode(&corrupt(14, &0u64.to_le_bytes())).unwrap_err().to_string();
+        assert!(e.contains("shots"), "{e}");
+        let e = SessionSnapshot::decode(&corrupt(14, &u64::MAX.to_le_bytes()))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("shots"), "{e}");
+        // A sum outside 0..=15*shots (here shots = 1).
+        let e = SessionSnapshot::decode(&corrupt(22, &16i32.to_le_bytes())).unwrap_err().to_string();
+        assert!(e.contains("honest range"), "{e}");
+        let e = SessionSnapshot::decode(&corrupt(22, &(-1i32).to_le_bytes()))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("honest range"), "{e}");
+        // The uncorrupted blob still decodes (the offsets above are live).
+        assert!(SessionSnapshot::decode(&good).is_ok());
+    }
+
+    #[test]
+    fn import_past_the_receivers_cap_fails_typed() {
+        let mut head = ProtoHead::new(2);
+        for _ in 0..3 {
+            head.learn_way(&[vec![1, 2]]).unwrap();
+        }
+        let snap = SessionSnapshot::from_head(&head);
+        let err = snap.to_head(Some(2)).unwrap_err();
+        assert_eq!(err, ProtoError::WaysExhausted { cap: 2 });
+        // At exactly the cap it fits.
+        assert_eq!(snap.to_head(Some(3)).unwrap().n_ways(), 3);
+    }
+
+    #[test]
+    fn snapshot_file_roundtrips_and_rejects_disorder() {
+        let mut head = ProtoHead::new(3);
+        head.learn_way(&[vec![1, 2, 3]]).unwrap();
+        let blob = SessionSnapshot::from_head(&head).encode();
+        // Entries intentionally unsorted: encode canonicalizes.
+        let file = SnapshotFile {
+            sessions: vec![(9, blob.clone()), (2, blob.clone()), (5, vec![])],
+        };
+        let bytes = file.encode();
+        let got = SnapshotFile::decode(&bytes).unwrap();
+        let ids: Vec<u64> = got.sessions.iter().map(|(id, _)| *id).collect();
+        assert_eq!(ids, vec![2, 5, 9], "decode sees the canonical order");
+        assert_eq!(got.encode(), bytes, "canonical re-encode is byte-identical");
+        for cut in 0..bytes.len() {
+            assert!(SnapshotFile::decode(&bytes[..cut]).is_err(), "cut at {cut} must fail");
+        }
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(SnapshotFile::decode(&long).is_err(), "trailing byte must fail");
+        // Duplicate / decreasing ids are rejected (canonical order only).
+        let dup = SnapshotFile { sessions: vec![(3, vec![]), (3, vec![])] };
+        let e = SnapshotFile::decode(&dup.encode()).unwrap_err().to_string();
+        assert!(e.contains("strictly increasing"), "{e}");
+        // A hostile session count is bounded by the file's own size.
+        let mut hostile = FILE_MAGIC.to_vec();
+        hostile.push(SNAPSHOT_VERSION);
+        hostile.extend_from_slice(&u32::MAX.to_le_bytes());
+        let e = SnapshotFile::decode(&hostile).unwrap_err().to_string();
+        assert!(e.contains("exceeding its own size"), "{e}");
+        // An empty store is a valid file.
+        let empty = SnapshotFile::default();
+        assert_eq!(SnapshotFile::decode(&empty.encode()).unwrap(), empty);
+    }
+}

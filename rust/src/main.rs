@@ -25,6 +25,13 @@
 //!           surface (protocol v5): metrics gauges, per-op latency table
 //!           and the flight-recorder event ring; --json emits a
 //!           machine-readable document (the CI artifact path)
+//!   snapshot [--addr H:P | --loopback] [--out FILE]  walk a server's
+//!           live sessions (protocol v6 `Stat` id list) and export each
+//!           one into a durable snapshot file; --loopback seeds a demo
+//!           server with a few CL sessions first (the CI artifact path)
+//!   restore [--addr H:P | --loopback] [--file FILE]  import every
+//!           session from a snapshot file into a server (protocol v6),
+//!           checking byte accounting as each one lands
 //!   cl      [--ways N --shots K]  artifact-free synthetic continual-
 //!           learning trajectory (Fig. 15 shape) over a loopback server:
 //!           incremental AddShots vs all-at-once bit-identity + byte
@@ -77,6 +84,8 @@ fn main() {
         "serve" => cmd_serve(&args),
         "loadgen" => cmd_loadgen(&args),
         "stat" => cmd_stat(&args),
+        "snapshot" => cmd_snapshot(&args),
+        "restore" => cmd_restore(&args),
         "cl" => cmd_cl(&args),
         "drive" => cmd_drive(&args),
         "bench" => cmd_bench(&args),
@@ -87,7 +96,8 @@ fn main() {
         other => {
             eprintln!(
                 "unknown command {other:?}; try \
-                 info|infer|learn|serve|loadgen|stat|cl|drive|bench|power|verify|check|hlo-stats"
+                 info|infer|learn|serve|loadgen|stat|snapshot|restore|cl|drive|bench|power|\
+                 verify|check|hlo-stats"
             );
             std::process::exit(2);
         }
@@ -544,6 +554,120 @@ fn cmd_stat(args: &Args) -> Result<()> {
                 e.detail
             );
         }
+    }
+    Ok(())
+}
+
+/// Connect `snapshot`/`restore` to their target: `--addr H:P` for a live
+/// server, or `--loopback` for a built-in demo-`tiny` server owned by the
+/// command (the CI artifact path). With `seed`, the loopback server is
+/// first grown a few continual-learning sessions so a snapshot has state
+/// worth capturing.
+fn durability_endpoint(
+    args: &Args,
+    seed: bool,
+) -> Result<(chameleon::serve::Client, Option<Server>)> {
+    use chameleon::serve::Client;
+    if args.flag("loopback") {
+        let model = Arc::new(chameleon::model::demo_tiny());
+        let cfg = ServeConfig::builder()
+            .addr("127.0.0.1:0")
+            .shards(2)
+            .workers_per_shard(2)
+            .build()?;
+        let m = model.clone();
+        let server = Server::start(cfg, move |_shard, _worker| {
+            let m = m.clone();
+            Box::new(move || Ok(Engine::golden(m))) as EngineFactory
+        })?;
+        let mut client = Client::connect(server.local_addr().to_string())?;
+        if seed {
+            let input_len = model.seq_len * model.in_channels;
+            let mut rng = Rng::new(args.get_u64("seed", 1)?);
+            for session in 1..=3u64 {
+                for _way in 0..4 {
+                    let shots: Vec<Vec<u8>> = (0..2)
+                        .map(|_| (0..input_len).map(|_| rng.below(16) as u8).collect())
+                        .collect();
+                    client.learn_way(session, shots)?;
+                }
+            }
+        }
+        Ok((client, Some(server)))
+    } else {
+        let addr = args.get_or("addr", "127.0.0.1:7070").to_string();
+        let client =
+            Client::connect(addr.as_str()).with_context(|| format!("connecting to {addr}"))?;
+        Ok((client, None))
+    }
+}
+
+/// Export every live session of a server into one durable snapshot file
+/// (protocol v6): the `Stat` dump's session-id list is the work list, and
+/// each id is exported as one opaque, canonical blob. The export path is
+/// a pure read — walking the sessions does not disturb LRU recency.
+fn cmd_snapshot(args: &Args) -> Result<()> {
+    use chameleon::coordinator::SnapshotFile;
+    let out = PathBuf::from(args.get_or("out", "chameleon.snapshot"));
+    let (mut client, server) = durability_endpoint(args, true)?;
+    let ids = client.stat()?.sessions;
+    let mut sessions = Vec::with_capacity(ids.len());
+    for &id in &ids {
+        let blob =
+            client.session_export(id).with_context(|| format!("exporting session {id}"))?;
+        sessions.push((id, blob));
+    }
+    let file = SnapshotFile { sessions };
+    let bytes = file.encode();
+    std::fs::write(&out, &bytes).with_context(|| format!("writing {}", out.display()))?;
+    println!(
+        "snapshot: {} session(s), {} B -> {}",
+        file.sessions.len(),
+        bytes.len(),
+        out.display()
+    );
+    drop(client);
+    if let Some(server) = server {
+        server.shutdown();
+    }
+    Ok(())
+}
+
+/// Import every session from a snapshot file into a server (protocol v6).
+/// Each import replaces that session id wholesale and is re-bounded by
+/// the *target* server's way budget; byte accounting is checked as each
+/// session lands.
+fn cmd_restore(args: &Args) -> Result<()> {
+    use chameleon::coordinator::SnapshotFile;
+    let path = PathBuf::from(args.get_or("file", "chameleon.snapshot"));
+    let bytes = std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+    let file =
+        SnapshotFile::decode(&bytes).with_context(|| format!("decoding {}", path.display()))?;
+    let (mut client, server) = durability_endpoint(args, false)?;
+    let (mut ways, mut shots) = (0u64, 0u64);
+    for (id, blob) in &file.sessions {
+        let info = client
+            .session_import(*id, blob.clone())
+            .with_context(|| format!("importing session {id}"))?;
+        anyhow::ensure!(
+            info.exists && info.bytes_used == info.ways * u64::from(info.bytes_per_way),
+            "restored session {id}: inconsistent byte accounting \
+             ({} ways, {} B used, {} B/way)",
+            info.ways,
+            info.bytes_used,
+            info.bytes_per_way,
+        );
+        ways += info.ways;
+        shots += info.shots;
+    }
+    println!(
+        "restore: {} session(s) from {} ({ways} ways, {shots} shots)",
+        file.sessions.len(),
+        path.display()
+    );
+    drop(client);
+    if let Some(server) = server {
+        server.shutdown();
     }
     Ok(())
 }

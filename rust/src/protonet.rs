@@ -44,6 +44,10 @@ pub enum ProtoError {
     UnknownWay { way: usize, ways: usize },
     /// A learn/update op carried zero shots.
     NoShots,
+    /// A nonzero byte budget smaller than one way: the head could never
+    /// learn anything. Rejected up front instead of minting a mute dead
+    /// head with a cap of zero (`0` itself still means *unbounded*).
+    BudgetTooSmall { budget: usize, bytes_per_way: usize },
 }
 
 impl std::fmt::Display for ProtoError {
@@ -59,6 +63,13 @@ impl std::fmt::Display for ProtoError {
                 write!(f, "unknown way {way} (head has {ways} way(s))")
             }
             ProtoError::NoShots => write!(f, "learning requires at least one shot"),
+            ProtoError::BudgetTooSmall { budget, bytes_per_way } => {
+                write!(
+                    f,
+                    "way budget of {budget} byte(s) is smaller than one way \
+                     ({bytes_per_way} B); use 0 for unbounded"
+                )
+            }
         }
     }
 }
@@ -174,11 +185,19 @@ impl ProtoHead {
 
     /// Head bounded by a prototype-memory budget in bytes: the cap is
     /// `budget_bytes / bytes_per_way` (the paper's ~26 B/way accounting
-    /// at V = 48). A budget smaller than one way yields a cap of zero —
-    /// every learn then fails with [`ProtoError::WaysExhausted`].
-    pub fn with_budget(dim: usize, budget_bytes: usize) -> Self {
-        let cap = budget_bytes / Self::bytes_per_way_of(dim);
-        Self::with_cap(dim, cap)
+    /// at V = 48). The boundary is explicit: `0` means **unbounded**
+    /// (matching serve's `--way-budget 0`), and a nonzero budget smaller
+    /// than one way is a typed [`ProtoError::BudgetTooSmall`] rejection —
+    /// never a silent cap-zero head that can't learn.
+    pub fn with_budget(dim: usize, budget_bytes: usize) -> Result<Self, ProtoError> {
+        if budget_bytes == 0 {
+            return Ok(Self::new(dim));
+        }
+        let bytes_per_way = Self::bytes_per_way_of(dim);
+        if budget_bytes < bytes_per_way {
+            return Err(ProtoError::BudgetTooSmall { budget: budget_bytes, bytes_per_way });
+        }
+        Ok(Self::with_cap(dim, budget_bytes / bytes_per_way))
     }
 
     pub fn n_ways(&self) -> usize {
@@ -203,6 +222,18 @@ impl ProtoHead {
     /// One way's current extracted column: (codes `[V]`, bias).
     pub fn way_codes(&self, way: usize) -> Option<(&[i8], i32)> {
         self.ways.get(way).map(|w| (w.codes.as_slice(), w.bias))
+    }
+
+    /// One way's live accumulator — the `(sum, shots)` pair the extracted
+    /// column is a pure function of, and therefore the complete learner
+    /// state a session snapshot needs (`coordinator::snapshot`).
+    pub fn way_accumulator(&self, way: usize) -> Option<&ProtoAccumulator> {
+        self.ways.get(way).map(|w| &w.acc)
+    }
+
+    /// All way accumulators in way order (the session-snapshot walk).
+    pub fn accumulators(&self) -> impl Iterator<Item = &ProtoAccumulator> + '_ {
+        self.ways.iter().map(|w| &w.acc)
     }
 
     /// Validate a shot set's shape before touching any state, so a failed
@@ -499,18 +530,36 @@ mod tests {
     #[test]
     fn budget_derives_way_cap() {
         // V = 48 -> 26 B/way: a 260-byte budget holds exactly 10 ways.
-        let head = ProtoHead::with_budget(48, 260);
+        let head = ProtoHead::with_budget(48, 260).unwrap();
         assert_eq!(head.way_cap(), Some(10));
-        // A budget below one way caps at zero: every learn fails typed.
-        let mut tiny = ProtoHead::with_budget(48, 25);
-        assert_eq!(tiny.way_cap(), Some(0));
-        let got = tiny.learn_way(&[vec![0; 48]]);
-        assert_eq!(got, Err(ProtoError::WaysExhausted { cap: 0 }));
         // bytes_used tracks growth.
-        let mut head = ProtoHead::with_budget(8, 100);
+        let mut head = ProtoHead::with_budget(8, 100).unwrap();
         assert_eq!(head.bytes_used(), 0);
         head.learn_way(&[vec![1; 8]]).unwrap();
         assert_eq!(head.bytes_used(), head.bytes_per_way());
+    }
+
+    #[test]
+    fn budget_boundary_is_explicit() {
+        // V = 48 -> 26 B/way. The three boundary points around one way:
+        let bpw = ProtoHead::bytes_per_way_of(48);
+        assert_eq!(bpw, 26);
+        // bytes_per_way - 1: typed rejection, never a mute cap-zero head.
+        let got = ProtoHead::with_budget(48, bpw - 1).map(|h| h.way_cap());
+        assert_eq!(got, Err(ProtoError::BudgetTooSmall { budget: 25, bytes_per_way: 26 }));
+        // bytes_per_way exactly: one way fits.
+        let mut one = ProtoHead::with_budget(48, bpw).unwrap();
+        assert_eq!(one.way_cap(), Some(1));
+        one.learn_way(&[vec![0; 48]]).unwrap();
+        assert_eq!(one.learn_way(&[vec![0; 48]]), Err(ProtoError::WaysExhausted { cap: 1 }));
+        // bytes_per_way + 1: still one way (the spare byte buys nothing).
+        let head = ProtoHead::with_budget(48, bpw + 1).unwrap();
+        assert_eq!(head.way_cap(), Some(1));
+        // 0 stays unbounded, matching serve's `--way-budget 0`.
+        assert_eq!(ProtoHead::with_budget(48, 0).unwrap().way_cap(), None);
+        // The rejection renders with the remedy in the message.
+        let err = ProtoHead::with_budget(48, 1).unwrap_err();
+        assert!(err.to_string().contains("use 0 for unbounded"), "{err}");
     }
 
     #[test]

@@ -370,10 +370,12 @@ impl Client {
     /// always retried. A failure *after* it may have been sent is only
     /// retried for idempotent requests — re-sending a `LearnWay` or
     /// `AddShots` whose reply was lost could apply the learning twice,
-    /// and re-sending a `StreamPush` would advance the stream twice, so
-    /// those surface as errors for the caller to decide. With pipelined
-    /// requests already in flight there is no retry at all (a reconnect
-    /// would lose them).
+    /// re-sending a `StreamPush` would advance the stream twice, and
+    /// re-sending a `SessionImport` could clobber writes that landed on
+    /// the restored session between the two deliveries, so those surface
+    /// as errors for the caller to decide. With pipelined requests
+    /// already in flight there is no retry at all (a reconnect would
+    /// lose them).
     pub fn call(&mut self, req: &WireRequest) -> Result<WireResponse> {
         let v = self.version();
         let min = proto::request_min_version(req);
@@ -391,6 +393,7 @@ impl Client {
             WireRequest::LearnWay { .. }
                 | WireRequest::AddShots { .. }
                 | WireRequest::StreamPush { .. }
+                | WireRequest::SessionImport { .. }
         );
         let mut last_err: Option<anyhow::Error> = None;
         for attempt in 0..=self.cfg.reconnect_attempts {
@@ -538,6 +541,30 @@ impl Client {
     pub fn stream_close(&mut self, session: u64) -> Result<(bool, u64)> {
         self.demand(&Request::StreamClose { session }, |r| match r {
             WireResponse::StreamClosed { existed, windows } => Ok((existed, windows)),
+            other => Err(other),
+        })
+    }
+
+    /// Export a session's full learner state as an opaque snapshot blob
+    /// (v6, durability). A pure read: the session's LRU recency is left
+    /// untouched, so walking every session for a snapshot does not evict
+    /// anything. Fails locally with a version error on older protocols.
+    pub fn session_export(&mut self, session: u64) -> Result<Vec<u8>> {
+        self.demand(&Request::SessionExport { session }, |r| match r {
+            WireResponse::SessionExported { blob } => Ok(blob),
+            other => Err(other),
+        })
+    }
+
+    /// Replace (or create) a session's learner state from a snapshot blob
+    /// previously produced by [`Client::session_export`] (v6). The reply
+    /// is the imported session's info — accounting as re-bounded by
+    /// *this* server's way budget. Not retried after a transport failure
+    /// mid-call: a re-sent import could clobber writes that landed on the
+    /// restored session in between.
+    pub fn session_import(&mut self, session: u64, blob: Vec<u8>) -> Result<SessionInfoWire> {
+        self.demand(&Request::SessionImport { session, blob }, |r| match r {
+            WireResponse::SessionInfo(si) => Ok(si),
             other => Err(other),
         })
     }

@@ -11,7 +11,10 @@
 //!   learning ops `AddShots`/`SessionInfo` and way-budget accounting;
 //!   v5 adds the observability surface: per-reply span decomposition,
 //!   metrics gauges + per-op latency table, and the `Stat`
-//!   flight-recorder dump);
+//!   flight-recorder dump; v6 adds the durability ops
+//!   `SessionExport`/`SessionImport` — opaque snapshot blobs that move a
+//!   session's full learner state between servers bit-exactly — and the
+//!   live-session id list in `Stat`);
 //! * [`server`] — TCP server over N coordinator shards with two
 //!   transport backends behind one API: an epoll [`reactor`] (default on
 //!   Linux) where N event loops own every connection nonblockingly, and

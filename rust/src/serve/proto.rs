@@ -29,6 +29,8 @@
 //! | `0x0B` | v4    | request   | `AddShots { session: u64, way: u64, shots: list<bytes> }` |
 //! | `0x0C` | v4    | request   | `SessionInfo { session: u64 }` |
 //! | `0x0D` | v5    | request   | `Stat` (flight-recorder dump) |
+//! | `0x0E` | v6    | request   | `SessionExport { session: u64 }` |
+//! | `0x0F` | v6    | request   | `SessionImport { session: u64, blob: bytes }` |
 //! | `0x81` | v1    | response  | `Reply { predicted?, logits?, learned_way?, cycles?, spans? (v5) }` |
 //! | `0x82` | v1    | response  | `Health { shards, sessions, input_len, embed_dim, window (v2), channels (v2) }` |
 //! | `0x83` | v1    | response  | `Metrics { counters..., latency percentiles }` |
@@ -38,7 +40,8 @@
 //! | `0x87` | v2    | response  | `StreamClosed { existed: u8, windows: u64 }` |
 //! | `0x88` | v3    | response  | `ReplyBatch(list<item>)` |
 //! | `0x89` | v4    | response  | `SessionInfo { exists, ways, shots, bytes_used, bytes_per_way, way_cap }` |
-//! | `0x8A` | v5    | response  | `Stat { recorded, overwritten, events: list<event> }` |
+//! | `0x8A` | v5    | response  | `Stat { recorded, overwritten, events: list<event>, sessions (v6) }` |
+//! | `0x8B` | v6    | response  | `SessionExported { blob: bytes }` |
 //! | `0xFF` | v1    | response  | `Error { code: u8, message: string }` |
 //!
 //! # Versioning
@@ -51,9 +54,9 @@
 //! 0). The server replies **at the requester's version**
 //! ([`encode_response_versioned`]), omitting newer payload fields and the
 //! tag from older frames, so strict v1..v4 clients keep working against
-//! a v5 server. Version-gated opcodes (streams in v2, batch in v3, the
-//! continual-learning ops in v4, the stat dump in v5) inside an older
-//! frame are malformed.
+//! a v6 server. Version-gated opcodes (streams in v2, batch in v3, the
+//! continual-learning ops in v4, the stat dump in v5, the durability ops
+//! in v6) inside an older frame are malformed.
 //!
 //! # Continual learning (v4)
 //!
@@ -97,6 +100,26 @@
 //! post-hoc debugging of exactly the requests that went wrong. Pre-v5
 //! frames carry none of this and decode exactly as v4 shipped.
 //!
+//! # Durability (v6)
+//!
+//! `SessionExport` asks the server for a session's full learner state as
+//! one opaque, versioned snapshot blob (see
+//! [`crate::coordinator::snapshot`] for the blob's own layout — the wire
+//! treats it as bytes) and is answered with `SessionExported`. The export
+//! is a pure read: it does not touch the session's LRU position.
+//! `SessionImport` replaces (or creates) a session's learner state from
+//! such a blob on a server whose model geometry matches, invalidating any
+//! prepared head and re-running the receiver's own way-budget accounting;
+//! it is answered with the restored session's `SessionInfo`, so the
+//! importer can verify way/shot counts without a second round trip.
+//! Importing is **not idempotent** from the client's point of view (a
+//! retried import races any concurrent learning on the same session), so
+//! the client treats it like `AddShots`: a transport failure after the
+//! request may have been sent surfaces an error instead of a silent
+//! retry. `Stat` additionally reports the live session ids across all
+//! shards, so a snapshot driver can enumerate what to export. Pre-v6
+//! frames carry none of this and decode exactly as v5 shipped.
+//!
 //! A frame whose length prefix exceeds [`MAX_FRAME`] bytes (or is too short
 //! to hold the header), whose version byte is unknown, or whose payload
 //! does not decode exactly, is *malformed*: the server answers with an
@@ -111,7 +134,7 @@ use anyhow::{bail, Result};
 
 /// Highest protocol version this build speaks; every encoded frame
 /// carries it.
-pub const VERSION: u8 = 5;
+pub const VERSION: u8 = 6;
 
 /// Oldest protocol version still accepted on decode.
 pub const MIN_VERSION: u8 = 1;
@@ -139,6 +162,8 @@ const OP_CLASSIFY_BATCH: u8 = 0x0A;
 const OP_ADD_SHOTS: u8 = 0x0B;
 const OP_SESSION_INFO: u8 = 0x0C;
 const OP_STAT: u8 = 0x0D;
+const OP_SESSION_EXPORT: u8 = 0x0E;
+const OP_SESSION_IMPORT: u8 = 0x0F;
 
 // Response opcodes.
 const OP_REPLY: u8 = 0x81;
@@ -151,6 +176,7 @@ const OP_STREAM_CLOSED: u8 = 0x87;
 const OP_REPLY_BATCH: u8 = 0x88;
 const OP_SESSION_INFO_REPLY: u8 = 0x89;
 const OP_STAT_REPLY: u8 = 0x8A;
+const OP_SESSION_EXPORTED: u8 = 0x8B;
 const OP_ERROR: u8 = 0xFF;
 
 /// Client -> server messages.
@@ -190,6 +216,13 @@ pub enum WireRequest {
     /// v5: dump the server's flight recorder (recent notable events,
     /// merged across shards).
     Stat,
+    /// v6: export a session's full learner state as an opaque snapshot
+    /// blob (answered with `SessionExported`); a pure read that does not
+    /// touch the session's LRU position.
+    SessionExport { session: u64 },
+    /// v6: replace (or create) a session's learner state from a snapshot
+    /// blob; answered with the restored session's `SessionInfo`.
+    SessionImport { session: u64, blob: Vec<u8> },
 }
 
 /// Server -> client messages.
@@ -212,6 +245,8 @@ pub enum WireResponse {
     SessionInfo(SessionInfoWire),
     /// v5: the flight-recorder dump (recent notable events, oldest first).
     Stat(StatWire),
+    /// v6: a session's learner state as an opaque snapshot blob.
+    SessionExported { blob: Vec<u8> },
     Error { code: ErrorCode, message: String },
 }
 
@@ -225,6 +260,9 @@ pub struct StatWire {
     /// Total events discarded by ring wrap across all shards.
     pub overwritten: u64,
     pub events: Vec<FlightEventWire>,
+    /// v6: live session ids across all shards (sorted), so a snapshot
+    /// driver can enumerate what to export; empty from a pre-v6 peer.
+    pub sessions: Vec<u64>,
 }
 
 /// One flight-recorder event on the wire (see
@@ -628,10 +666,10 @@ fn head(v: u8, opcode: u8, request_id: u64) -> Vec<u8> {
 }
 
 /// Lowest protocol version that can carry this request (streams: v2,
-/// batch: v3, continual-learning ops: v4, stat: v5). Clients speaking an older
-/// version must refuse such ops rather than silently up-version the
-/// frame — a server treats any v3+ frame as pipelined, which would break
-/// an in-order client's response matching.
+/// batch: v3, continual-learning ops: v4, stat: v5, durability ops: v6).
+/// Clients speaking an older version must refuse such ops rather than
+/// silently up-version the frame — a server treats any v3+ frame as
+/// pipelined, which would break an in-order client's response matching.
 pub fn request_min_version(req: &WireRequest) -> u8 {
     match req {
         WireRequest::StreamOpen { .. }
@@ -640,6 +678,7 @@ pub fn request_min_version(req: &WireRequest) -> u8 {
         WireRequest::ClassifyBatch { .. } => 3,
         WireRequest::AddShots { .. } | WireRequest::SessionInfo { .. } => 4,
         WireRequest::Stat => 5,
+        WireRequest::SessionExport { .. } | WireRequest::SessionImport { .. } => 6,
         _ => 1,
     }
 }
@@ -653,6 +692,7 @@ fn response_min_version(resp: &WireResponse) -> u8 {
         WireResponse::ReplyBatch(_) => 3,
         WireResponse::SessionInfo(_) => 4,
         WireResponse::Stat(_) => 5,
+        WireResponse::SessionExported { .. } => 6,
         _ => 1,
     }
 }
@@ -672,6 +712,8 @@ fn request_opcode(req: &WireRequest) -> u8 {
         WireRequest::AddShots { .. } => OP_ADD_SHOTS,
         WireRequest::SessionInfo { .. } => OP_SESSION_INFO,
         WireRequest::Stat => OP_STAT,
+        WireRequest::SessionExport { .. } => OP_SESSION_EXPORT,
+        WireRequest::SessionImport { .. } => OP_SESSION_IMPORT,
     }
 }
 
@@ -687,6 +729,7 @@ fn response_opcode(resp: &WireResponse) -> u8 {
         WireResponse::ReplyBatch(_) => OP_REPLY_BATCH,
         WireResponse::SessionInfo(_) => OP_SESSION_INFO_REPLY,
         WireResponse::Stat(_) => OP_STAT_REPLY,
+        WireResponse::SessionExported { .. } => OP_SESSION_EXPORTED,
         WireResponse::Error { .. } => OP_ERROR,
     }
 }
@@ -744,6 +787,11 @@ pub fn encode_request_versioned(req: &WireRequest, version: u8, request_id: u64)
             }
         }
         WireRequest::SessionInfo { session } => put_u64(&mut b, *session),
+        WireRequest::SessionExport { session } => put_u64(&mut b, *session),
+        WireRequest::SessionImport { session, blob } => {
+            put_u64(&mut b, *session);
+            put_bytes(&mut b, blob);
+        }
     }
     prepend_len(&mut b);
     b
@@ -869,7 +917,14 @@ pub fn encode_response_versioned(resp: &WireResponse, version: u8, request_id: u
                 b.push(e.op);
                 put_bytes(&mut b, e.detail.as_bytes());
             }
+            if v >= 6 {
+                put_u32(&mut b, st.sessions.len() as u32);
+                for id in &st.sessions {
+                    put_u64(&mut b, *id);
+                }
+            }
         }
+        WireResponse::SessionExported { blob } => put_bytes(&mut b, blob),
         WireResponse::Error { code, message } => {
             b.push(code.as_u8());
             put_bytes(&mut b, message.as_bytes());
@@ -1051,6 +1106,14 @@ fn require_v5(version: u8, op: &str) -> Result<()> {
     Ok(())
 }
 
+/// The durability opcodes only exist from protocol v6 on.
+fn require_v6(version: u8, op: &str) -> Result<()> {
+    if version < 6 {
+        bail!("{op} requires protocol v6 (frame carries v{version})");
+    }
+    Ok(())
+}
+
 /// Decode a request frame body (after the length prefix).
 pub fn decode_request(frame_body: &[u8]) -> Result<RequestFrame> {
     let (version, opcode, request_id, mut c) = header(frame_body)?;
@@ -1121,6 +1184,14 @@ pub fn decode_request(frame_body: &[u8]) -> Result<RequestFrame> {
         OP_STAT => {
             require_v5(version, "Stat")?;
             WireRequest::Stat
+        }
+        OP_SESSION_EXPORT => {
+            require_v6(version, "SessionExport")?;
+            WireRequest::SessionExport { session: c.u64()? }
+        }
+        OP_SESSION_IMPORT => {
+            require_v6(version, "SessionImport")?;
+            WireRequest::SessionImport { session: c.u64()?, blob: c.bytes()? }
         }
         op => bail!("unknown request opcode {op:#04x}"),
     };
@@ -1287,7 +1358,25 @@ pub fn decode_response(frame_body: &[u8]) -> Result<ResponseFrame> {
                     detail: String::from_utf8_lossy(&c.bytes()?).into_owned(),
                 });
             }
-            WireResponse::Stat(StatWire { recorded, overwritten, events })
+            let mut sessions = Vec::new();
+            if version >= 6 {
+                let ns = c.u32()? as usize;
+                // Each id is 8 bytes; bound before allocating (capacity
+                // additionally capped — a hostile count must fail on the
+                // truncated payload, not on a huge pre-allocation).
+                if ns.saturating_mul(8) > MAX_FRAME {
+                    bail!("session id list of {ns} exceeds frame bound");
+                }
+                sessions = Vec::with_capacity(ns.min(MAX_LIST));
+                for _ in 0..ns {
+                    sessions.push(c.u64()?);
+                }
+            }
+            WireResponse::Stat(StatWire { recorded, overwritten, events, sessions })
+        }
+        OP_SESSION_EXPORTED => {
+            require_v6(version, "SessionExported")?;
+            WireResponse::SessionExported { blob: c.bytes()? }
         }
         OP_ERROR => WireResponse::Error {
             code: ErrorCode::from_u8(c.u8()?)?,
@@ -1492,6 +1581,13 @@ mod tests {
             WireRequest::SessionInfo { session: 0 },
             WireRequest::SessionInfo { session: u64::MAX },
             WireRequest::Stat,
+            WireRequest::SessionExport { session: 0 },
+            WireRequest::SessionExport { session: u64::MAX },
+            WireRequest::SessionImport { session: 7, blob: vec![] },
+            WireRequest::SessionImport {
+                session: u64::MAX,
+                blob: (0..255u8).collect(),
+            },
         ]
     }
 
@@ -1604,7 +1700,10 @@ mod tests {
                         detail: "".into(),
                     },
                 ],
+                sessions: vec![0, 7, u64::MAX],
             }),
+            WireResponse::SessionExported { blob: vec![] },
+            WireResponse::SessionExported { blob: (0..255u8).rev().collect() },
         ];
         for code in [ErrorCode::Overloaded, ErrorCode::Malformed, ErrorCode::App] {
             out.push(WireResponse::Error { code, message: "queue full".into() });
@@ -1763,8 +1862,25 @@ mod tests {
             }
             other => panic!("expected Metrics, got {other:?}"),
         }
+        // A v5 peer's Stat keeps the events but loses the v6 session ids.
+        let st = StatWire {
+            recorded: 3,
+            overwritten: 0,
+            events: vec![],
+            sessions: vec![7, 9],
+        };
+        let frame = encode_response_versioned(&WireResponse::Stat(st), 5, 0);
+        assert_eq!(frame[4], 5);
+        match decode_response(&frame[4..]).unwrap().resp {
+            WireResponse::Stat(got) => {
+                assert_eq!(got.recorded, 3);
+                assert!(got.sessions.is_empty(), "v6 session ids dropped at v5");
+            }
+            other => panic!("expected Stat, got {other:?}"),
+        }
         // Stream responses cannot drop below v2; batch not below v3;
-        // continual-learning info not below v4; the stat dump not below v5.
+        // continual-learning info not below v4; the stat dump not below v5;
+        // the session-snapshot blob not below v6.
         let frame = encode_response_versioned(&WireResponse::Stat(StatWire::default()), 1, 0);
         assert_eq!(frame[4], 5);
         let frame = encode_request_versioned(&WireRequest::Stat, 1, 0);
@@ -1780,6 +1896,11 @@ mod tests {
             0,
         );
         assert_eq!(frame[4], 4);
+        let frame =
+            encode_response_versioned(&WireResponse::SessionExported { blob: vec![1] }, 1, 0);
+        assert_eq!(frame[4], 6);
+        let frame = encode_request_versioned(&WireRequest::SessionExport { session: 1 }, 1, 0);
+        assert_eq!(frame[4], 6, "a SessionExport request cannot be down-versioned");
         // Out-of-range versions clamp instead of producing junk frames.
         let frame = encode_response_versioned(&WireResponse::Evicted { existed: true }, 9, 0);
         assert_eq!(frame[4], VERSION);
@@ -1881,6 +2002,25 @@ mod tests {
         put_u32(&mut body, 0);
         let err = decode_response(&body).unwrap_err();
         assert!(format!("{err:#}").contains("v5"), "{err:#}");
+        // Durability ops inside a v5 frame are malformed (and a fortiori
+        // inside older frames).
+        let mut body = head(5, OP_SESSION_EXPORT, 0);
+        put_u64(&mut body, 1);
+        let err = decode_request(&body).unwrap_err();
+        assert!(format!("{err:#}").contains("v6"), "{err:#}");
+        let mut body = head(5, OP_SESSION_IMPORT, 0);
+        put_u64(&mut body, 1);
+        put_u32(&mut body, 0);
+        let err = decode_request(&body).unwrap_err();
+        assert!(format!("{err:#}").contains("v6"), "{err:#}");
+        let mut body = vec![2u8, OP_SESSION_IMPORT];
+        put_u64(&mut body, 1);
+        put_u32(&mut body, 0);
+        assert!(decode_request(&body).is_err());
+        let mut body = head(5, OP_SESSION_EXPORTED, 0);
+        put_u32(&mut body, 0);
+        let err = decode_response(&body).unwrap_err();
+        assert!(format!("{err:#}").contains("v6"), "{err:#}");
     }
 
     /// Every corpus frame at every version, truncated at *every* byte
@@ -1993,6 +2133,14 @@ mod tests {
             put_u32(&mut body, n);
             let err = decode_response(&body).unwrap_err();
             assert!(format!("{err:#}").contains("stat event list"), "{err:#}");
+            // v6 Stat session-id count (bounded against the frame cap;
+            // smaller hostile counts fail on the truncated payload).
+            let mut body = head(VERSION, OP_STAT_REPLY, 0);
+            put_u64(&mut body, 0);
+            put_u64(&mut body, 0);
+            put_u32(&mut body, 0); // no events
+            put_u32(&mut body, n);
+            assert!(decode_response(&body).is_err(), "Stat session ids x{n}");
             // v5 Metrics per-op row count.
             let mut body = head(VERSION, OP_METRICS_REPLY, 0);
             for _ in 0..11 {
@@ -2022,6 +2170,13 @@ mod tests {
         body.push(3);
         put_u32(&mut body, u32::MAX);
         assert!(decode_response(&body).is_err(), "Error message claiming 4 GiB");
+        let mut body = head(VERSION, OP_SESSION_IMPORT, 0);
+        put_u64(&mut body, 1);
+        put_u32(&mut body, u32::MAX);
+        assert!(decode_request(&body).is_err(), "SessionImport blob claiming 4 GiB");
+        let mut body = head(VERSION, OP_SESSION_EXPORTED, 0);
+        put_u32(&mut body, u32::MAX);
+        assert!(decode_response(&body).is_err(), "SessionExported blob claiming 4 GiB");
         // Counts whose decode caps pre-allocation instead of rejecting
         // outright (logits, stream decisions) still fail on the truncated
         // payload without ever allocating the claimed size.

@@ -401,11 +401,15 @@ impl Server {
         F: FnMut(usize, usize) -> EngineFactory,
     {
         let mut shards = Vec::with_capacity(cfg.shards.max(1));
+        // One process-wide flight-recorder epoch shared by every shard:
+        // the `Stat` op merges the per-shard rings by timestamp, which is
+        // only meaningful when all shards measure from the same zero.
+        let epoch = std::time::Instant::now();
         for shard in 0..cfg.shards.max(1) {
             let factories: Vec<EngineFactory> = (0..cfg.workers_per_shard.max(1))
                 .map(|worker| engines(shard, worker))
                 .collect();
-            let coord = Coordinator::start(factories, cfg.coordinator_config())
+            let coord = Coordinator::start_with_epoch(factories, cfg.coordinator_config(), epoch)
                 .with_context(|| format!("starting shard {shard}"))?;
             shards.push(coord);
         }
@@ -534,25 +538,30 @@ fn aggregate_full(state: &ServerState) -> MetricsSnapshot {
 }
 
 /// Merge every shard's flight-recorder ring into one dump: events ordered
-/// by shard-local timestamp (shards start together, so cross-shard order
-/// is approximate but honest), oldest dropped if the merged set would
-/// exceed the wire list bound.
+/// by the shards' shared timebase (every shard's recorder is built on one
+/// process-wide epoch, so cross-shard `at_us` stamps are comparable),
+/// oldest dropped if the merged set would exceed the wire list bound.
+/// Since v6 the dump also enumerates every live session id across all
+/// shards, sorted — the work-list `chameleon snapshot` exports from.
 fn stat_dump(state: &ServerState) -> StatWire {
     let mut recorded = 0u64;
     let mut overwritten = 0u64;
     let mut events: Vec<FlightEventWire> = Vec::new();
+    let mut sessions: Vec<u64> = Vec::new();
     for shard in &state.shards {
         let fr = shard.flight_recorder();
         recorded += fr.recorded();
         overwritten += fr.overwritten();
         events.extend(fr.snapshot().iter().map(FlightEventWire::from));
+        sessions.extend(shard.session_ids());
     }
     events.sort_by_key(|e| e.at_us);
     if events.len() > proto::MAX_LIST {
         let drop = events.len() - proto::MAX_LIST;
         events.drain(..drop);
     }
-    StatWire { recorded, overwritten, events }
+    sessions.sort_unstable();
+    StatWire { recorded, overwritten, events, sessions }
 }
 
 fn accept_loop(listener: TcpListener, state: Arc<ServerState>) {
@@ -854,6 +863,20 @@ where
             submit_or_reject(state.shard_for(session), Request::StreamClose { session, reply });
         }
         WireRequest::ClassifyBatch { inputs } => dispatch_batch(state, inputs, out),
+        // Durability ops (v6) are session-scoped: the same stable hash
+        // routes an export and a later import of the same id to the same
+        // shard, so migration round-trips observe one consistent store.
+        WireRequest::SessionExport { session } => {
+            let reply = ReplySink::call(move |res| out(fold_response(res)));
+            submit_or_reject(state.shard_for(session), Request::SessionExport { session, reply });
+        }
+        WireRequest::SessionImport { session, blob } => {
+            let reply = ReplySink::call(move |res| out(fold_response(res)));
+            submit_or_reject(
+                state.shard_for(session),
+                Request::SessionImport { session, blob, reply },
+            );
+        }
     }
 }
 
@@ -1086,6 +1109,8 @@ fn fold_response(res: Result<crate::coordinator::Response>) -> WireResponse {
                 )
             } else if let Some((existed, windows)) = resp.stream_closed {
                 WireResponse::StreamClosed { existed, windows }
+            } else if let Some(blob) = resp.session_export {
+                WireResponse::SessionExported { blob }
             } else if let Some(si) = resp.session_info {
                 WireResponse::SessionInfo(si.into())
             } else {

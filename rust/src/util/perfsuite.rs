@@ -18,7 +18,7 @@ use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::server::EngineFactory;
-use crate::coordinator::{Engine, Metrics, OpKind, OpMode};
+use crate::coordinator::{Engine, Metrics, OpKind, OpMode, SessionSnapshot};
 use crate::golden::{self, ExecMode, PreparedModel};
 use crate::model::{demo_tiny, demo_tiny_kws, QLayer, QuantModel};
 use crate::protonet::ProtoHead;
@@ -688,6 +688,150 @@ pub fn run_cl_trajectory(n_ways: usize, k_shots: usize) -> Result<Vec<PerfRow>> 
 /// fast; the full 250-way run is tier-1-tested in `tests/cl_bitexact.rs`).
 pub fn run_cl_suite(quick: bool) -> Result<Vec<PerfRow>> {
     run_cl_trajectory(if quick { 60 } else { 250 }, 10)
+}
+
+/// Live-migration driver: grow an `n_ways` x `k_shots` session on server
+/// A, move it to a separately-started server B through the protocol-v6
+/// `SessionExport`/`SessionImport` ops, and prove the move is invisible:
+///
+/// * the exported blob round-trips through [`SessionSnapshot::decode`]
+///   with exact way/shot structure, and B's `SessionInfo` accounting
+///   after import matches A's byte for byte (including the way cap,
+///   re-derived from B's own budget);
+/// * classification is **bit-identical** across A and B on random probes;
+/// * continual learning keeps working after the move: the same `AddShots`
+///   folded into both sides leaves them bit-identical again, and a fresh
+///   export from each side yields the same canonical blob;
+/// * B's way budget still binds — it was sized exactly, so one more learn
+///   on the migrated session must fail with the typed `WaysExhausted`.
+///
+/// This is the serving-side story for the paper's few-shot/continual
+/// setting: learned state is a small, portable artifact (`ceil(V/2) + 2`
+/// bytes per way of accumulator state), not something welded to one
+/// process.
+pub fn run_migration_trajectory(n_ways: usize, k_shots: usize) -> Result<Vec<PerfRow>> {
+    anyhow::ensure!(n_ways >= 1 && k_shots >= 1, "need at least 1 way and 1 shot");
+    let model = Arc::new(demo_tiny());
+    let bytes_per_way = ProtoHead::bytes_per_way_of(model.embed_dim);
+    let budget = n_ways * bytes_per_way;
+    let mk_server = |model: Arc<QuantModel>| -> Result<Server> {
+        let cfg = ServeConfig::builder()
+            .addr("127.0.0.1:0")
+            .shards(1)
+            .workers_per_shard(2)
+            .way_budget(budget)
+            .build()?;
+        Server::start(cfg, move |_shard, _worker| {
+            let m = model.clone();
+            Box::new(move || Ok(Engine::golden(m))) as EngineFactory
+        })
+    };
+    let server_a = mk_server(model.clone())?;
+    let server_b = mk_server(model.clone())?;
+    let mut a = Client::connect(server_a.local_addr().to_string())?;
+    let mut b = Client::connect(server_b.local_addr().to_string())?;
+
+    let sess = 42u64;
+    let input_len = model.seq_len * model.in_channels;
+    let mut rng = Rng::new(0x319_0000 ^ n_ways as u64);
+    let rand_in = |rng: &mut Rng| -> Vec<u8> {
+        (0..input_len).map(|_| rng.below(16) as u8).collect()
+    };
+
+    // Grow the donor session on A only.
+    for way in 0..n_ways {
+        let shots: Vec<Vec<u8>> = (0..k_shots).map(|_| rand_in(&mut rng)).collect();
+        let r = a.learn_way(sess, shots)?;
+        anyhow::ensure!(r.learned_way == Some(way as u64), "way order must be deterministic");
+    }
+
+    // Move it: export from A, import into B, both timed.
+    let t = Instant::now();
+    let blob = a.session_export(sess)?;
+    let export_us = t.elapsed().as_secs_f64() * 1e6;
+    let snap = SessionSnapshot::decode(&blob).context("exported blob must decode locally")?;
+    anyhow::ensure!(snap.ways.len() == n_ways, "blob carries every way");
+    anyhow::ensure!(
+        snap.ways.iter().all(|w| w.shots == k_shots as u64),
+        "blob carries every shot count"
+    );
+    let t = Instant::now();
+    let info_b = b.session_import(sess, blob.clone())?;
+    let import_us = t.elapsed().as_secs_f64() * 1e6;
+    let info_a = a.session_info(sess)?;
+    anyhow::ensure!(info_b.exists, "imported session exists on B");
+    for (name, got, want) in [
+        ("ways", info_b.ways, info_a.ways),
+        ("shots", info_b.shots, info_a.shots),
+        ("bytes_used", info_b.bytes_used, info_a.bytes_used),
+        ("way_cap", info_b.way_cap, info_a.way_cap),
+        ("bytes_per_way", u64::from(info_b.bytes_per_way), u64::from(info_a.bytes_per_way)),
+    ] {
+        anyhow::ensure!(got == want, "migrated {name} diverged: B has {got}, A has {want}");
+    }
+    anyhow::ensure!(
+        info_b.bytes_used == (n_ways * bytes_per_way) as u64,
+        "imported accounting must be exact"
+    );
+
+    // The move must be invisible to classification: bit-identical logits.
+    let mut probe = |a: &mut Client, b: &mut Client, rng: &mut Rng, stage: &str| -> Result<()> {
+        for _ in 0..4 {
+            let q = rand_in(rng);
+            let ra = a.classify_session(sess, q.clone())?;
+            let rb = b.classify_session(sess, q)?;
+            if ra.logits != rb.logits || ra.predicted != rb.predicted {
+                bail!(
+                    "{stage}: migrated session diverged from donor \
+                     (a={:?}/{:?} b={:?}/{:?})",
+                    ra.predicted,
+                    ra.logits,
+                    rb.predicted,
+                    rb.logits
+                );
+            }
+        }
+        Ok(())
+    };
+    probe(&mut a, &mut b, &mut rng, "post-import")?;
+
+    // Continual learning continues on the migrated copy: identical
+    // AddShots on both sides keep them bit-identical, and each side's
+    // fresh export is the same canonical blob.
+    for way in [0, n_ways as u64 / 2, n_ways as u64 - 1] {
+        let extra: Vec<Vec<u8>> = (0..2).map(|_| rand_in(&mut rng)).collect();
+        let ra = a.add_shots(sess, way, extra.clone())?;
+        let rb = b.add_shots(sess, way, extra)?;
+        anyhow::ensure!(
+            ra.learned_way == Some(way) && rb.learned_way == Some(way),
+            "add_shots echoes its way on both sides"
+        );
+    }
+    probe(&mut a, &mut b, &mut rng, "post-migration add_shots")?;
+    let blob_a = a.session_export(sess)?;
+    let blob_b = b.session_export(sess)?;
+    anyhow::ensure!(blob_a == blob_b, "post-CL exports must agree byte for byte");
+
+    // B's budget was sized exactly; the migrated session fills it, so one
+    // more way must fail typed — the importer's budget binds, not the
+    // donor's.
+    match b.learn_way(sess, vec![rand_in(&mut rng)]) {
+        Err(e) if format!("{e:#}").contains("ways exhausted") => {}
+        Err(e) => bail!("expected WaysExhausted past the migrated budget, got: {e:#}"),
+        Ok(_) => bail!("learning past the migrated {n_ways}-way budget must fail"),
+    }
+
+    drop(a);
+    drop(b);
+    server_a.shutdown();
+    server_b.shutdown();
+    Ok(vec![PerfRow::new("migration/trajectory")
+        .push("ways", n_ways as f64)
+        .push("shots_per_way", k_shots as f64)
+        .push("export_bytes", blob.len() as f64)
+        .push("bytes_per_way", bytes_per_way as f64)
+        .push("export_us", export_us)
+        .push("import_us", import_us)])
 }
 
 /// Default directory for the `BENCH_*.json` trajectory files: the repo

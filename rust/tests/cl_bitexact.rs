@@ -178,3 +178,20 @@ fn synthetic_250_way_10_shot_trajectory_over_the_wire() {
     // 250 ways x (1 learn + 2 add chunks) = 750 update ops timed.
     assert!(updates.get("updates_per_sec").unwrap_or(0.0) > 0.0);
 }
+
+/// The acceptance migration: a 250-way 10-shot session exported from one
+/// live loopback server and imported into a second, with classification
+/// and continued `AddShots` learning asserted bit-identical across the
+/// move, accounting exact, and the importer's way budget still binding.
+/// (`run_migration_trajectory` asserts all of this internally.)
+#[test]
+fn synthetic_250_way_session_migrates_bit_identically() {
+    let rows = perfsuite::run_migration_trajectory(250, 10).expect("250-way migration");
+    let traj = perfsuite::find_row(&rows, "migration/trajectory").expect("migration row");
+    assert_eq!(traj.get("ways"), Some(250.0));
+    assert_eq!(traj.get("shots_per_way"), Some(10.0));
+    assert_eq!(traj.get("bytes_per_way"), Some(6.0));
+    // The blob is small: a 250-way head moves in a handful of KiB.
+    let export_bytes = traj.get("export_bytes").expect("export_bytes metric");
+    assert!(export_bytes > 0.0 && export_bytes < 16384.0, "blob was {export_bytes} B");
+}

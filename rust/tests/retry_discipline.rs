@@ -1,0 +1,184 @@
+//! Regression tests for the client's retry discipline around the
+//! lost-reply window: a transport failure *after* a request may have
+//! reached the server must only be retried for idempotent ops.
+//!
+//! The fault is injected with a frame-aware TCP proxy between the client
+//! and a real loopback server: on the chosen opcode the proxy forwards
+//! the request upstream and fully reads the server's reply (so the
+//! server **has** applied the op), then drops the client connection
+//! without relaying it — exactly the window where a blind retry would
+//! apply the op twice. Before `SessionImport` joined the non-idempotent
+//! set in `Client::call`, the import test failed: the client silently
+//! reconnected and re-sent the import (a second application that could
+//! clobber writes landed in between), instead of surfacing the typed
+//! "non-idempotent" error.
+
+use std::io::BufReader;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use chameleon::coordinator::server::EngineFactory;
+use chameleon::coordinator::Engine;
+use chameleon::model::demo_tiny;
+use chameleon::serve::proto::{self, WireRequest};
+use chameleon::serve::{Client, ClientConfig, ServeConfig, Server};
+
+fn start_server() -> Server {
+    let model = Arc::new(demo_tiny());
+    let cfg = ServeConfig::builder()
+        .addr("127.0.0.1:0")
+        .shards(1)
+        .workers_per_shard(2)
+        .build()
+        .expect("serve config");
+    Server::start(cfg, move |_shard, _worker| {
+        let m = model.clone();
+        Box::new(move || Ok(Engine::golden(m))) as EngineFactory
+    })
+    .expect("start loopback server")
+}
+
+/// The wire opcode a request encodes to, read back out of the encoder
+/// (frame layout: 4-byte length prefix, version, opcode, ...) — the
+/// proxy keys on this without reaching into protocol internals.
+fn opcode_of(req: &WireRequest) -> u8 {
+    proto::encode_request_versioned(req, proto::VERSION, 0)[5]
+}
+
+/// Re-frame one body (length prefix + body) onto a socket.
+fn forward(w: &mut TcpStream, body: &[u8]) -> anyhow::Result<()> {
+    let mut frame = (body.len() as u32).to_le_bytes().to_vec();
+    frame.extend_from_slice(body);
+    proto::write_frame(w, &frame)
+}
+
+/// Frame-aware proxy: relays request/reply pairs faithfully, except that
+/// while `drops` is nonzero, a request with opcode `drop_op` has its
+/// reply read from the upstream but *not* relayed — both connections are
+/// dropped instead. Every accepted client connection bumps `accepts`,
+/// which is how the tests observe whether the client retried (a retry
+/// reconnects from scratch).
+fn spawn_proxy(
+    upstream: String,
+    drop_op: u8,
+    drops: Arc<AtomicUsize>,
+    accepts: Arc<AtomicUsize>,
+) -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind proxy");
+    let addr = listener.local_addr().expect("proxy addr").to_string();
+    thread::spawn(move || {
+        for conn in listener.incoming() {
+            let Ok(client) = conn else { return };
+            accepts.fetch_add(1, Ordering::SeqCst);
+            let Ok(server) = TcpStream::connect(&upstream) else { return };
+            let mut client_r = BufReader::new(client.try_clone().expect("clone client side"));
+            let mut client_w = client;
+            let mut server_r = BufReader::new(server.try_clone().expect("clone server side"));
+            let mut server_w = server;
+            loop {
+                let Ok(Some(req)) = proto::read_frame(&mut client_r) else { break };
+                let op = req.get(1).copied().unwrap_or(0);
+                if forward(&mut server_w, &req).is_err() {
+                    break;
+                }
+                // Always collect the reply first: by the time the client
+                // sees its connection die, the server has applied the op.
+                let Ok(Some(reply)) = proto::read_frame(&mut server_r) else { break };
+                let dropping = op == drop_op
+                    && drops
+                        .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| n.checked_sub(1))
+                        .is_ok();
+                if dropping {
+                    break; // both connections close; the reply is lost
+                }
+                if forward(&mut client_w, &reply).is_err() {
+                    break;
+                }
+            }
+        }
+    });
+    addr
+}
+
+fn retrying_client(addr: String) -> Client {
+    let cfg = ClientConfig {
+        reconnect_attempts: 2,
+        reconnect_backoff: Duration::from_millis(5),
+        ..ClientConfig::default()
+    };
+    Client::with_config(addr, cfg).expect("connect through proxy")
+}
+
+fn shot(input_len: usize, seed: usize) -> Vec<u8> {
+    (0..input_len).map(|i| ((i * 7 + seed * 3) % 16) as u8).collect()
+}
+
+#[test]
+fn session_import_is_not_retried_after_a_lost_reply() {
+    let server = start_server();
+    let addr = server.local_addr().to_string();
+    let model = demo_tiny();
+    let input_len = model.seq_len * model.in_channels;
+
+    // Donor state learned directly on the real server, exported once.
+    let mut direct = Client::connect(addr.clone()).expect("connect direct");
+    direct.learn_way(1, vec![shot(input_len, 0)]).expect("learn donor way 0");
+    direct.learn_way(1, vec![shot(input_len, 1)]).expect("learn donor way 1");
+    let blob = direct.session_export(1).expect("export donor");
+
+    let drop_op = opcode_of(&WireRequest::SessionImport { session: 0, blob: Vec::new() });
+    let drops = Arc::new(AtomicUsize::new(1));
+    let accepts = Arc::new(AtomicUsize::new(0));
+    let proxy = spawn_proxy(addr, drop_op, drops.clone(), accepts.clone());
+    let mut through = retrying_client(proxy);
+
+    let err = through.session_import(9, blob).expect_err("a lost import reply must surface");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("non-idempotent"), "error must name the discipline: {msg}");
+    assert!(msg.contains("not retrying"), "error must say it refused to retry: {msg}");
+
+    // No retry happened: a retry reconnects from scratch, which the proxy
+    // would have seen as a second accepted connection.
+    assert_eq!(drops.load(Ordering::SeqCst), 0, "the fault was actually injected");
+    assert_eq!(
+        accepts.load(Ordering::SeqCst),
+        1,
+        "a retry would have reconnected to the proxy"
+    );
+
+    // ... and the server applied the import exactly once, before the
+    // reply was lost — the caller now decides, with full knowledge.
+    let info = direct.session_info(9).expect("session info");
+    assert!(info.exists, "the in-flight import was applied");
+    assert_eq!(info.ways, 2);
+    server.shutdown();
+}
+
+#[test]
+fn idempotent_ops_still_retry_through_the_same_fault() {
+    let server = start_server();
+    let addr = server.local_addr().to_string();
+    let model = demo_tiny();
+    let input_len = model.seq_len * model.in_channels;
+
+    let mut direct = Client::connect(addr.clone()).expect("connect direct");
+    direct.learn_way(3, vec![shot(input_len, 2)]).expect("learn a way");
+
+    let drop_op = opcode_of(&WireRequest::SessionInfo { session: 0 });
+    let drops = Arc::new(AtomicUsize::new(1));
+    let accepts = Arc::new(AtomicUsize::new(0));
+    let proxy = spawn_proxy(addr, drop_op, drops.clone(), accepts.clone());
+    let mut through = retrying_client(proxy);
+
+    // Same fault, read-only op: the client reconnects and retries, and
+    // the caller never notices.
+    let info = through.session_info(3).expect("idempotent op must survive one lost reply");
+    assert!(info.exists);
+    assert_eq!(info.ways, 1);
+    assert_eq!(drops.load(Ordering::SeqCst), 0, "the fault was actually injected");
+    assert_eq!(accepts.load(Ordering::SeqCst), 2, "exactly one reconnect-and-retry");
+    server.shutdown();
+}
